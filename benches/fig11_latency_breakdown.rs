@@ -1,0 +1,40 @@
+//! Fig. 11 — end-to-end decode latency breakdown per method.
+//!
+//! Paper: idle = 61% (InfiniGen, I/O), 57% (HGCA, CPU), 6% (Scout);
+//! the §3.3 anchor (attention ~300us vs ~900us full layer at the 4k
+//! budget) is printed alongside.
+
+use scoutattention::config::Method;
+use scoutattention::metrics::Phase;
+use scoutattention::sim::pipeline::{MethodSim, SynthWorkload};
+use scoutattention::sim::timing::DeviceModel;
+
+fn main() {
+    let m = DeviceModel::default();
+    // §3.3 anchor
+    let kv = m.kv_layer_bytes(4096) * 40.0;
+    let attn = m.gpu_attn_us(kv);
+    println!(
+        "anchor (batch 40, 4k budget): attention {:.0} us, full layer {:.0} us ({:.1}x window)\n",
+        attn, attn + m.layer_other_us, (attn + m.layer_other_us) / attn
+    );
+    println!("Fig 11 — latency breakdown (% of end-to-end decode time)");
+    println!("{:<15} {:>10} {:>14} {:>8}", "method", "attention", "other-compute", "idle");
+    let w = SynthWorkload::paper_default(32768, 40);
+    for meth in [Method::FullKv, Method::Infinigen, Method::Hgca, Method::Scout] {
+        let mut sim = MethodSim::new(meth, m.clone());
+        if meth != Method::Scout {
+            sim.periodic_recall = false;
+        }
+        let r = sim.run(&w);
+        let t = r.breakdown.total_us();
+        println!(
+            "{:<15} {:>9.1}% {:>13.1}% {:>7.1}%",
+            meth.label(),
+            r.breakdown.get(Phase::GpuAttention) / t * 100.0,
+            (r.breakdown.get(Phase::GpuOther) + r.breakdown.get(Phase::Scheduler)) / t * 100.0,
+            r.idle_fraction() * 100.0,
+        );
+    }
+    println!("\npaper idle: InfiniGen 61%, HGCA 57%, Scout 6%");
+}

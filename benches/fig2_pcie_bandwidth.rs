@@ -1,0 +1,23 @@
+//! Fig. 2 — effective GPU<->CPU I/O bandwidth vs transfer granularity.
+//!
+//! Regenerates the paper's curve from the calibrated device model and
+//! checks its two anchors: ~0.8 GB/s at 4 KB (per-token KV messages) and
+//! ~15 GB/s at 128 KB (32-token pages).
+
+use scoutattention::sim::timing::DeviceModel;
+
+fn main() {
+    let m = DeviceModel::default();
+    println!("Fig 2 — PCIe effective bandwidth vs message size");
+    println!("{:>12} {:>14}", "msg size", "eff. GB/s");
+    for kb in [1, 4, 16, 32, 64, 128, 256, 1024, 4096, 16384] {
+        let bytes = kb as f64 * 1024.0;
+        let bw = m.pcie_effective_bw(bytes) * 1e6 / 1e9;
+        println!("{:>9} KB {:>14.2}", kb, bw);
+    }
+    let bw4k = m.pcie_effective_bw(4096.0) * 1e6 / 1e9;
+    let bw128k = m.pcie_effective_bw(131072.0) * 1e6 / 1e9;
+    println!("\nanchors: 4KB -> {bw4k:.2} GB/s (paper ~0.8), 128KB -> {bw128k:.2} GB/s (paper ~15)");
+    println!("HBM for comparison: {:.1} TB/s", m.hbm_bw * 1e6 / 1e12);
+    assert!((0.5..1.2).contains(&bw4k) && (10.0..18.0).contains(&bw128k));
+}

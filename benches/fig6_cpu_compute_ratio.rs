@@ -1,0 +1,53 @@
+//! Fig. 6 — CPU compute ratio across decode steps, measured on the real
+//! artifact stack (numerics plane): 6a without periodic recall (drift
+//! accumulates), 6b with profiled per-layer intervals at beta = 12%.
+//! Requires `make artifacts` (test-tiny preset).
+
+use scoutattention::config::{Method, RecallPolicy, RunConfig};
+use scoutattention::coordinator::RecallController;
+use scoutattention::harness::{self, Stack};
+use scoutattention::workload::{LengthMix, WorkloadGen};
+
+fn main() -> scoutattention::Result<()> {
+    let cfg = RunConfig::for_preset("test-tiny");
+    let stack = Stack::load(&cfg)?;
+    let spec = stack.gpu.spec.clone();
+    let steps = 48usize;
+    let prompt = spec.max_seq - steps - 2;
+    let mk = |seed| {
+        WorkloadGen::new(seed, spec.vocab, LengthMix::Fixed(prompt), steps).take(2)
+    };
+
+    // 6a: no recall
+    let mut cfg_a = cfg.clone();
+    cfg_a.scout.recall = RecallPolicy::Disabled;
+    let stack_a = Stack { cfg: cfg_a, rt: stack.rt.clone(), gpu: stack.gpu.clone(), native: stack.native.clone() };
+    let run_a = harness::run_method(&stack_a, Method::Scout, mk(1), 10_000, None)?;
+
+    // profile intervals and run 6b
+    let series = run_a.cpu_ratio_series(spec.n_layers);
+    let rc = RecallController::new(&cfg.scout, spec.n_layers, Some(&series));
+    let run_b = harness::run_method(&stack, Method::Scout, mk(1), 10_000, Some(&series))?;
+
+    println!("Fig 6 — CPU compute ratio per decode step (test-tiny, 2 seqs)");
+    println!("{:>5} {:>14} {:>14}", "step", "6a no-recall", "6b periodic");
+    for i in (0..run_a.stats.len().min(run_b.stats.len())).step_by(4) {
+        println!(
+            "{i:>5} {:>13.1}% {:>13.1}%",
+            run_a.stats[i].cpu_ratio() * 100.0,
+            run_b.stats[i].cpu_ratio() * 100.0
+        );
+    }
+    println!(
+        "\nmean ratio: {:.1}% -> {:.1}%  (paper: drifts upward -> 8.2%)",
+        run_a.mean_cpu_ratio() * 100.0,
+        run_b.mean_cpu_ratio() * 100.0
+    );
+    println!(
+        "profiled intervals {:?} (mean {:.1}; paper mean 8.7)",
+        rc.intervals,
+        rc.mean_interval()
+    );
+    assert!(run_b.mean_cpu_ratio() <= run_a.mean_cpu_ratio() + 1e-9);
+    Ok(())
+}

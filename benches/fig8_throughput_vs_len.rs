@@ -1,0 +1,43 @@
+//! Fig. 8 — decode throughput vs input length (8k/16k/32k/64k, batch 40).
+//!
+//! Shape checks from the paper: ScoutAttention wins everywhere; FullKV
+//! degrades sharply with length (memory-capacity waves) and is *faster*
+//! than both offloading baselines at 8k; Scout reaches ~5.1x FullKV and
+//! ~2.1x the best offloading method at 64k.
+
+use scoutattention::config::Method;
+use scoutattention::sim::pipeline::{MethodSim, SynthWorkload};
+use scoutattention::sim::timing::DeviceModel;
+
+fn run(m: Method, seq_len: usize) -> f64 {
+    let mut sim = MethodSim::new(m, DeviceModel::default());
+    if m != Method::Scout {
+        sim.periodic_recall = false;
+    }
+    sim.run(&SynthWorkload::paper_default(seq_len, 40)).throughput_tps()
+}
+
+fn main() {
+    println!("Fig 8 — decode throughput (tok/s) vs input length, batch 40");
+    println!("{:<9} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "len", "FullKV", "InfiniGen", "HGCA", "Scout", "x Full", "x best");
+    for len in [8192, 16384, 32768, 65536] {
+        let f = run(Method::FullKv, len);
+        let i = run(Method::Infinigen, len);
+        let h = run(Method::Hgca, len);
+        let s = run(Method::Scout, len);
+        let best_off = i.max(h);
+        println!(
+            "{:<9} {f:>10.1} {i:>10.1} {h:>10.1} {s:>10.1} {:>7.2}x {:>7.2}x",
+            format!("{}k", len / 1024), s / f, s / best_off
+        );
+        assert!(s > f && s > i && s > h, "scout must win at {len}");
+        if len == 8192 {
+            assert!(f > i && f > h, "paper: baselines below FullKV at 8k");
+        }
+        if len == 65536 {
+            assert!(s / f > 3.0, "scout vs FullKV at 64k: {:.2}x (paper 5.1x)", s / f);
+            assert!(s / best_off > 1.4, "scout vs best offloading: {:.2}x (paper 2.1x)", s / best_off);
+        }
+    }
+}

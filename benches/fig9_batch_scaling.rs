@@ -1,0 +1,38 @@
+//! Fig. 9 — throughput scaling with batch size at 32k context.
+//!
+//! Paper: InfiniGen/HGCA scale sublinearly (1.21x / 1.31x from bs16->32,
+//! pinned by I/O and CPU compute); ScoutAttention scales 1.78x (16->32)
+//! and 1.48x (32->64).
+
+use scoutattention::config::Method;
+use scoutattention::sim::pipeline::{MethodSim, SynthWorkload};
+use scoutattention::sim::timing::DeviceModel;
+
+fn run(m: Method, batch: usize) -> f64 {
+    let mut sim = MethodSim::new(m, DeviceModel::default());
+    if m != Method::Scout {
+        sim.periodic_recall = false;
+    }
+    sim.run(&SynthWorkload::paper_default(32768, batch)).throughput_tps()
+}
+
+fn main() {
+    println!("Fig 9 — decode throughput (tok/s) vs batch size, 32k context");
+    println!("{:<12} {:>9} {:>9} {:>9} {:>11} {:>11}", "method", "bs16", "bs32", "bs64", "16->32", "32->64");
+    for m in [Method::FullKv, Method::Infinigen, Method::Hgca, Method::Scout] {
+        let t16 = run(m, 16);
+        let t32 = run(m, 32);
+        let t64 = run(m, 64);
+        println!(
+            "{:<12} {t16:>9.1} {t32:>9.1} {t64:>9.1} {:>10.2}x {:>10.2}x",
+            m.label(), t32 / t16, t64 / t32
+        );
+    }
+    let (s1632, s3264) = (run(Method::Scout, 32) / run(Method::Scout, 16),
+                          run(Method::Scout, 64) / run(Method::Scout, 32));
+    let i1632 = run(Method::Infinigen, 32) / run(Method::Infinigen, 16);
+    let h1632 = run(Method::Hgca, 32) / run(Method::Hgca, 16);
+    println!("\npaper: Scout 1.78x/1.48x, HGCA 1.31x, InfiniGen 1.21x (16->32)");
+    assert!(s1632 > i1632 && s1632 > h1632, "scout must scale best");
+    assert!(s3264 < s1632 + 0.35, "scaling should taper");
+}

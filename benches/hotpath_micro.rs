@@ -1,0 +1,96 @@
+//! Hot-path microbenchmarks (perf §L3): the coordinator-side operations
+//! that sit on the decode critical path, measured in isolation with the
+//! in-tree bench harness. Run after `make artifacts`.
+
+use scoutattention::config::RunConfig;
+use scoutattention::engines::Partial;
+use scoutattention::harness::Stack;
+use scoutattention::kvcache::SeqKvCache;
+use scoutattention::sparse::{score_blocks_native, select_topk};
+use scoutattention::tensor::Tensor;
+use scoutattention::util::bench::bench;
+use scoutattention::util::Rng64;
+
+fn main() -> scoutattention::Result<()> {
+    let cfg = RunConfig::for_preset("test-tiny");
+    let stack = Stack::load(&cfg)?;
+    let spec = stack.gpu.spec.clone();
+    stack.rt.warmup()?;
+
+    // populated cache
+    let mut cache = SeqKvCache::new(&spec);
+    let mut rng = Rng64::new(1);
+    let w = spec.n_kv_heads * spec.head_dim;
+    for _ in 0..spec.max_seq - 8 {
+        for l in 0..spec.n_layers {
+            let k: Vec<f32> = (0..w).map(|_| rng.f32() - 0.5).collect();
+            let v: Vec<f32> = (0..w).map(|_| rng.f32() - 0.5).collect();
+            cache.append_layer(l, &k, &v);
+        }
+        cache.advance();
+    }
+    let hq = spec.n_q_heads;
+    let d = spec.head_dim;
+    let q: Vec<f32> = (0..hq * d).map(|_| rng.f32() - 0.5).collect();
+    let full = cache.full_blocks();
+
+    let mut results = Vec::new();
+    results.push(bench("score_blocks_native (per seq/layer)", 20, 2000, || {
+        std::hint::black_box(score_blocks_native(
+            &q, &cache.digests, 0, full, hq, spec.n_kv_heads, d,
+        ));
+    }));
+    let scores = score_blocks_native(&q, &cache.digests, 0, full, hq, spec.n_kv_heads, d);
+    results.push(bench("select_topk", 20, 5000, || {
+        std::hint::black_box(select_topk(&scores, spec.k_blocks, &[0, full - 1]));
+    }));
+    let kb = spec.k_blocks;
+    let bs = spec.block_size;
+    let blk_w = bs * w;
+    let blocks: Vec<usize> = (0..kb.min(full)).collect();
+    let mut kbuf = vec![0.0f32; kb * blk_w];
+    let mut vbuf = vec![0.0f32; kb * blk_w];
+    let mut mbuf = vec![0.0f32; kb * bs];
+    results.push(bench("gather_blocks (per seq/layer)", 20, 2000, || {
+        cache.gather_blocks(0, &blocks, kb, &mut kbuf, &mut vbuf, &mut mbuf);
+    }));
+    results.push(bench("cpu attend_blocks x4 (worker job)", 10, 500, || {
+        std::hint::black_box(stack.native.attend_blocks(&q, &cache, 0, &blocks[..4.min(blocks.len())]));
+    }));
+    let mut pa = Partial::empty(hq, d);
+    pa.update_token(0, 0.3, &vec![1.0; d]);
+    let mut pb = Partial::empty(hq, d);
+    pb.update_token(0, -0.1, &vec![0.5; d]);
+    results.push(bench("partial merge (per seq/layer)", 100, 20000, || {
+        let mut x = pa.clone();
+        x.merge(&pb);
+        std::hint::black_box(x);
+    }));
+
+    // XLA calls (the "GPU")
+    let b = spec.batch;
+    let qx = Tensor::zeros(&[b, hq, d]);
+    let kx = Tensor::zeros(&[b, kb, bs, spec.n_kv_heads, d]);
+    let vx = Tensor::zeros(&[b, kb, bs, spec.n_kv_heads, d]);
+    let mx = Tensor::full(&[b, kb, bs], 1.0);
+    results.push(bench("xla sparse_attn (batch tile)", 5, 200, || {
+        std::hint::black_box(stack.gpu.sparse_attn(&qx, &kx, &vx, &mx).unwrap());
+    }));
+    let x = Tensor::zeros(&[b, spec.d_model]);
+    let pos: Vec<i32> = vec![64; b];
+    results.push(bench("xla pre_attn (batch tile)", 5, 200, || {
+        std::hint::black_box(stack.gpu.pre_attn(&x, 0, &pos).unwrap());
+    }));
+    results.push(bench("xla qpred (batch tile)", 5, 200, || {
+        std::hint::black_box(stack.gpu.qpred(&x, 1, &pos).unwrap());
+    }));
+    results.push(bench("xla lm_head (batch tile)", 5, 200, || {
+        std::hint::black_box(stack.gpu.lm_head(&x).unwrap());
+    }));
+
+    println!("\nhot-path microbenchmarks ({}):", spec.name);
+    for r in &results {
+        println!("  {}", r.report());
+    }
+    Ok(())
+}

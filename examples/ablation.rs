@@ -1,0 +1,80 @@
+//! Ablation example (Fig. 12 companion): run ScoutAttention with the
+//! paper's two optimizations toggled — PC (layer-ahead pre-computation)
+//! and PR (asynchronous periodic recall) — on both planes:
+//!
+//! - numerics plane: real decode on the test-tiny artifacts, reporting
+//!   CPU ratio and token agreement with the oracle per arm;
+//! - timing plane: paper-scale (32k ctx, batch 40) simulated throughput
+//!   per arm, the actual Fig. 12 bars.
+//!
+//!     cargo run --release --example ablation
+
+use scoutattention::config::{Method, RecallPolicy, RunConfig};
+use scoutattention::harness::{self, Stack};
+use scoutattention::sim::pipeline::{MethodSim, SynthWorkload};
+use scoutattention::workload::{LengthMix, WorkloadGen};
+
+fn main() -> scoutattention::Result<()> {
+    let cfg = RunConfig::for_preset("test-tiny");
+    let stack = Stack::load(&cfg)?;
+    let spec = stack.gpu.spec.clone();
+    let mut gen = WorkloadGen::new(3, spec.vocab, LengthMix::Fixed(spec.block_size * 10), 24);
+    let reqs = gen.take(3);
+
+    let oracle = harness::run_method(&stack, Method::FullKv, reqs.clone(), 10_000, None)?;
+
+    println!("== numerics plane (test-tiny artifacts) ==");
+    println!("{:<22} {:>10} {:>12} {:>10}", "arm", "cpu-ratio", "recall-blk", "agree%");
+    let arms: [(&str, bool, RecallPolicy); 3] = [
+        ("scout (-PC -PR)", false, RecallPolicy::Disabled),
+        ("scout (+PC -PR)", true, RecallPolicy::Disabled),
+        ("scout (+PC +PR)", true, RecallPolicy::Fixed { interval: 4 }),
+    ];
+    for (name, layer_ahead, recall) in arms {
+        let mut c = stack.cfg.clone();
+        c.scout.layer_ahead = layer_ahead;
+        c.scout.recall = recall;
+        let arm_stack = Stack {
+            cfg: c,
+            rt: stack.rt.clone(),
+            gpu: stack.gpu.clone(),
+            native: stack.native.clone(),
+        };
+        let run = harness::run_method(&arm_stack, Method::Scout, reqs.clone(), 10_000, None)?;
+        let recall_blocks: usize = run.stats.iter().map(|s| s.recall_blocks()).sum();
+        println!(
+            "{:<22} {:>9.1}% {:>12} {:>9.1}%",
+            name,
+            run.mean_cpu_ratio() * 100.0,
+            recall_blocks,
+            harness::token_agreement(&run, &oracle) * 100.0
+        );
+    }
+
+    println!("\n== timing plane (32k ctx, batch 40 — Fig. 12) ==");
+    println!("{:<22} {:>12} {:>9} {:>9}", "arm", "tok/s", "speedup", "idle%");
+    let w = SynthWorkload::paper_default(32768, 40);
+    let mut base_tps = 0.0;
+    for (name, pc, pr) in [
+        ("scout (-PC -PR)", false, false),
+        ("scout (+PC -PR)", true, false),
+        ("scout (+PC +PR)", true, true),
+    ] {
+        let mut sim = MethodSim::new(Method::Scout, cfg.device.clone());
+        sim.layer_ahead = pc;
+        sim.periodic_recall = pr;
+        let r = sim.run(&w);
+        if base_tps == 0.0 {
+            base_tps = r.throughput_tps();
+        }
+        println!(
+            "{:<22} {:>12.1} {:>8.2}x {:>8.1}%",
+            name,
+            r.throughput_tps(),
+            r.throughput_tps() / base_tps,
+            r.idle_fraction() * 100.0
+        );
+    }
+    println!("(paper Fig. 12: +PC 1.39x, +PC+PR a further 1.20x)");
+    Ok(())
+}

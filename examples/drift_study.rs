@@ -1,0 +1,15 @@
+//! Drift study (Fig. 6 companion): measure the CPU compute ratio across
+//! decode steps on the real artifact stack, without periodic recall (6a)
+//! and with profiled per-layer intervals (6b), and print the derived
+//! intervals (the paper reports mean 8.7 at beta = 12%).
+//!
+//!     cargo run --release --example drift_study [steps]
+
+use scoutattention::config::RunConfig;
+
+fn main() -> scoutattention::Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+    let cfg = RunConfig::for_preset("test-tiny");
+    scoutattention::studies::fig6_drift(&cfg, steps, &mut std::io::stdout())?;
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: load an artifact preset, admit a few requests, decode with
+//! the ScoutAttention scheduler, and print the generated tokens.
+//!
+//!     make artifacts            # once (python AOT step)
+//!     cargo run --release --example quickstart [preset]
+//!
+//! Uses the fast `test-tiny` preset by default so the whole example runs
+//! in seconds; pass `serve-20m` for the ~29M-parameter model.
+
+use scoutattention::config::RunConfig;
+use scoutattention::harness::{self, Stack};
+use scoutattention::workload::{LengthMix, WorkloadGen};
+
+fn main() -> scoutattention::Result<()> {
+    let preset = std::env::args().nth(1).unwrap_or_else(|| "test-tiny".into());
+    let cfg = RunConfig::for_preset(&preset);
+    let stack = Stack::load(&cfg)?;
+    let spec = stack.gpu.spec.clone();
+    println!(
+        "loaded {}: {} layers, d={}, {} params, S={}, block={}, budget={} blocks",
+        spec.name,
+        spec.n_layers,
+        spec.d_model,
+        spec.param_count(),
+        spec.max_seq,
+        spec.block_size,
+        spec.k_blocks,
+    );
+
+    // Four requests with prompts long enough that the sparse budget matters.
+    let prompt_len = (spec.max_seq / 2).max(spec.block_size * (spec.k_blocks + 2));
+    let prompt_len = prompt_len.min(spec.max_seq - 20);
+    let mut gen = WorkloadGen::new(cfg.seed, spec.vocab, LengthMix::Fixed(prompt_len), 12);
+    let reqs = gen.take(4);
+
+    let run = harness::run_method(&stack, cfg.method, reqs, 10_000, None)?;
+    for out in &run.outputs {
+        println!("request {} -> {:?}", out.id, out.generated);
+    }
+    println!(
+        "decoded {} tokens in {:.2}s ({:.1} tok/s wall), mean CPU ratio {:.1}%",
+        run.outputs.iter().map(|o| o.generated.len()).sum::<usize>(),
+        run.wall_us as f64 / 1e6,
+        run.wall_throughput_tps(),
+        run.mean_cpu_ratio() * 100.0,
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! End-to-end serving driver (EXPERIMENTS.md §E2E): load the ~29M-param
+//! `serve-20m` model, prefill a batch of long-context requests through
+//! the AOT prefill artifact, decode a few hundred steps per request
+//! through the full router -> batcher -> ScoutScheduler -> engines stack,
+//! and report latency/throughput plus accuracy vs the FullKV oracle on
+//! the same stream.
+//!
+//!     cargo run --release --example serve_longcontext [--quick]
+
+use scoutattention::config::{Method, RunConfig};
+use scoutattention::harness::{self, Stack};
+use scoutattention::metrics::Histogram;
+use scoutattention::workload::{LengthMix, WorkloadGen};
+
+fn main() -> scoutattention::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let preset = if quick { "test-tiny" } else { "serve-20m" };
+    let cfg = RunConfig::for_preset(preset);
+    let stack = Stack::load(&cfg)?;
+    let spec = stack.gpu.spec.clone();
+    let (n_req, new_tokens) = if quick { (4, 16) } else { (4, 128) };
+    let prompt_len = spec.max_seq - new_tokens - 2;
+
+    println!("== ScoutAttention end-to-end serving run ==");
+    println!(
+        "model {}: {:.1}M params, {} layers, ctx {}, budget {} tokens, batch tile {}",
+        spec.name,
+        spec.param_count() as f64 / 1e6,
+        spec.n_layers,
+        spec.max_seq,
+        spec.k_blocks * spec.block_size,
+        spec.batch,
+    );
+    println!("workload: {n_req} requests x {prompt_len}-token prompts x {new_tokens} new tokens");
+
+    let mk_reqs = |seed: u64| {
+        let mut gen =
+            WorkloadGen::new(seed, spec.vocab, LengthMix::Fixed(prompt_len), new_tokens);
+        gen.take(n_req)
+    };
+
+    // --- Scout run (the system under test) ---
+    let t0 = std::time::Instant::now();
+    let scout = harness::run_method(&stack, Method::Scout, mk_reqs(cfg.seed), 100_000, None)?;
+    let scout_wall = t0.elapsed();
+
+    let mut step_hist = Histogram::new();
+    for s in &scout.stats {
+        step_hist.record(s.wall_us as f64 / 1000.0); // ms
+    }
+    let toks: usize = scout.outputs.iter().map(|o| o.generated.len()).sum();
+    println!("\n-- scout (numerics plane, 1-core CPU testbed) --");
+    println!("decode steps          : {}", scout.stats.len());
+    println!("tokens generated      : {toks}");
+    println!("wall time             : {:.1}s (incl. prefill)", scout_wall.as_secs_f64());
+    println!("decode throughput     : {:.2} tok/s wall", scout.wall_throughput_tps());
+    println!(
+        "step latency ms       : mean {:.1}  p50 {:.1}  p95 {:.1}",
+        step_hist.mean(),
+        step_hist.quantile(0.5),
+        step_hist.quantile(0.95)
+    );
+    println!("mean CPU compute ratio: {:.1}%", scout.mean_cpu_ratio() * 100.0);
+    let recall: usize = scout.stats.iter().map(|s| s.recall_blocks()).sum();
+    println!(
+        "recall volume         : {recall} blocks ({} KiB)",
+        recall * spec.kv_block_bytes() / 1024
+    );
+
+    // --- FullKV oracle on the identical stream ---
+    let oracle = harness::run_method(&stack, Method::FullKv, mk_reqs(cfg.seed), 100_000, None)?;
+    let agree = harness::token_agreement(&scout, &oracle);
+    println!("\n-- accuracy vs FullKV oracle (identical prompts/seeds) --");
+    println!(
+        "token agreement       : {:.1}%  (paper: accuracy within ~2.1%)",
+        agree * 100.0
+    );
+    println!("oracle wall           : {:.1}s", oracle.wall_us as f64 / 1e6);
+
+    // --- artifact-call profile (perf §L3) ---
+    println!("\n-- top artifact calls by cumulative time --");
+    for (name, n, dt) in stack.rt.counters.snapshot().into_iter().take(6) {
+        println!("  {name:<18} x{n:<7} {:>9.1} ms", dt.as_secs_f64() * 1e3);
+    }
+    Ok(())
+}

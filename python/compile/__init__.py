@@ -1,0 +1,6 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX model + AOT lowering.
+
+Nothing in this package is imported at serving time; `make artifacts`
+runs `python -m compile.aot` once and the rust coordinator is
+self-contained afterwards.
+"""

@@ -1,0 +1,210 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text artifacts + manifest for rust (L3).
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--preset serve-20m ...]
+
+Emits, per preset:
+    artifacts/<preset>/<entry>.hlo.txt
+    artifacts/<preset>/manifest.json     (config + I/O specs per entry)
+
+Python runs ONCE at build time; the rust binary is self-contained after.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="float32"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def entry_points(cfg: M.ModelConfig):
+    """Return {name: (fn, [input ShapeDtypeStructs], [input names])}."""
+    B, d, V, S = cfg.batch, cfg.d_model, cfg.vocab, cfg.max_seq
+    Hq, Hkv, D = cfg.n_q_heads, cfg.n_kv_heads, cfg.head_dim
+    nb, bs, kb, L, dff = (
+        cfg.n_blocks, cfg.block_size, cfg.k_blocks, cfg.n_layers, cfg.d_ff,
+    )
+    HqD, HkvD = Hq * D, Hkv * D
+
+    i32 = "int32"
+    partial_in = [
+        ("acc_a", _spec((B, Hq, D))), ("m_a", _spec((B, Hq))),
+        ("l_a", _spec((B, Hq))),
+        ("acc_b", _spec((B, Hq, D))), ("m_b", _spec((B, Hq))),
+        ("l_b", _spec((B, Hq))),
+    ]
+    stacked = [
+        ("ln1", _spec((L, d))), ("wq", _spec((L, d, HqD))),
+        ("wk", _spec((L, d, HkvD))), ("wv", _spec((L, d, HkvD))),
+        ("wo", _spec((L, HqD, d))), ("ln2", _spec((L, d))),
+        ("w1", _spec((L, d, dff))), ("w2", _spec((L, dff, d))),
+    ]
+
+    eps = {
+        "layer_pre_attn": (
+            M.layer_pre_attn(cfg),
+            [("x", _spec((B, d))), ("ln1", _spec((d,))),
+             ("wq", _spec((d, HqD))), ("wk", _spec((d, HkvD))),
+             ("wv", _spec((d, HkvD))), ("pos", _spec((B,), i32))],
+        ),
+        "qpred": (
+            M.qpred(cfg),
+            [("x", _spec((B, d))), ("ln1_next", _spec((d,))),
+             ("wq_next", _spec((d, HqD))), ("pos", _spec((B,), i32))],
+        ),
+        "digest_build": (
+            M.digest_build(cfg),
+            [("k_blocks", _spec((B, nb, bs, Hkv, D)))],
+        ),
+        "block_scores": (
+            M.block_scores_fn(cfg),
+            [("q", _spec((B, Hq, D))), ("kmin", _spec((B, nb, Hkv, D))),
+             ("kmax", _spec((B, nb, Hkv, D)))],
+        ),
+        "sparse_attn": (
+            M.sparse_attn_fn(cfg),
+            [("q", _spec((B, Hq, D))), ("k_sel", _spec((B, kb, bs, Hkv, D))),
+             ("v_sel", _spec((B, kb, bs, Hkv, D))),
+             ("token_mask", _spec((B, kb, bs)))],
+        ),
+        "tail_attn": (
+            M.sparse_attn_fn(cfg, kb=1),
+            [("q", _spec((B, Hq, D))), ("k_sel", _spec((B, 1, bs, Hkv, D))),
+             ("v_sel", _spec((B, 1, bs, Hkv, D))),
+             ("token_mask", _spec((B, 1, bs)))],
+        ),
+        "merge": (M.merge_fn(cfg), partial_in),
+        "layer_post_attn": (
+            M.layer_post_attn(cfg),
+            [("x", _spec((B, d))), ("acc", _spec((B, Hq, D))),
+             ("l", _spec((B, Hq))),
+             ("wo", _spec((HqD, d))), ("ln2", _spec((d,))),
+             ("w1", _spec((d, dff))), ("w2", _spec((dff, d)))],
+        ),
+        "lm_head": (
+            M.lm_head(cfg),
+            [("x", _spec((B, d))), ("ln_f", _spec((d,))),
+             ("embed", _spec((V, d)))],
+        ),
+        "decode_full": (
+            M.decode_full(cfg),
+            [("x", _spec((B, d)))] + stacked
+            + [("ln_f", _spec((d,))), ("embed", _spec((V, d))),
+               ("kcache", _spec((L, B, S, Hkv, D))),
+               ("vcache", _spec((L, B, S, Hkv, D))),
+               ("pos", _spec((B,), i32))],
+        ),
+        "prefill": (
+            M.prefill(cfg),
+            [("x_seq", _spec((S, d)))] + stacked
+            + [("ln_f", _spec((d,))), ("embed", _spec((V, d))),
+               ("length", _spec((), i32))],
+        ),
+    }
+    return eps
+
+
+def lower_preset(cfg: M.ModelConfig, out_dir: pathlib.Path) -> dict:
+    pdir = out_dir / cfg.name
+    pdir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {
+        "preset": cfg.name,
+        "config": dataclasses.asdict(cfg),
+        "entries": {},
+    }
+    for name, (fn, inputs) in entry_points(cfg).items():
+        in_names = [n for n, _ in inputs]
+        in_specs = [s for _, s in inputs]
+        out_shape = jax.eval_shape(fn, *in_specs)
+        flat_out, _ = jax.tree_util.tree_flatten(out_shape)
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (pdir / fname).write_text(text)
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+                for n, s in inputs
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": str(o.dtype)}
+                for o in flat_out
+            ],
+        }
+        print(f"  [{cfg.name}] {name}: {len(text)} chars, "
+              f"{len(inputs)} in / {len(flat_out)} out")
+    (pdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def hlo_report(cfg: M.ModelConfig) -> None:
+    """§Perf L2: print HLO cost-analysis style op counts per entry."""
+    for name, (fn, inputs) in entry_points(cfg).items():
+        in_specs = [s for _, s in inputs]
+        text = to_hlo_text(jax.jit(fn).lower(*in_specs))
+        ops: dict[str, int] = {}
+        for line in text.splitlines():
+            line = line.strip()
+            if "=" in line and not line.startswith(("HloModule", "ENTRY", "%", "}")):
+                rhs = line.split("=", 1)[1].strip()
+                op = rhs.split(" ", 2)[1].split("(")[0] if " " in rhs else rhs
+                ops[op] = ops.get(op, 0) + 1
+        fused = ops.get("fusion", 0)
+        total = sum(ops.values())
+        top = sorted(ops.items(), key=lambda kv: -kv[1])[:6]
+        print(f"[{cfg.name}] {name}: {total} ops, fusions={fused}, top={top}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--preset", action="append", default=None,
+        help="preset name(s); default: all",
+    )
+    ap.add_argument("--report", action="store_true", help="HLO op report only")
+    args = ap.parse_args()
+
+    names = args.preset or list(M.PRESETS)
+    out_dir = pathlib.Path(args.out_dir)
+    for n in names:
+        cfg = M.PRESETS[n]
+        if args.report:
+            hlo_report(cfg)
+        else:
+            lower_preset(cfg, out_dir)
+    if not args.report:
+        index = {"presets": names}
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / "index.json").write_text(json.dumps(index, indent=2))
+        print(f"wrote {out_dir}/index.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""L1 Pallas kernels for ScoutAttention (build-time only, interpret=True on CPU).
+
+Kernels:
+  digest.digest            Quest channel-wise min/max block digests
+  block_topk.block_scores  Quest block importance scores (selection is L3's job)
+  sparse_attn.sparse_attn  block-gathered flash-attention partial (acc, m, l)
+  merge.merge_partials     log-sum-exp merge of two partials (Alg. 1 line 12)
+  ref                      pure-jnp oracle for all of the above
+"""
+
+from . import ref  # noqa: F401
+from .block_topk import block_scores  # noqa: F401
+from .digest import digest  # noqa: F401
+from .merge import merge_partials  # noqa: F401
+from .sparse_attn import sparse_attn  # noqa: F401

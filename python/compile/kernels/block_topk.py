@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: Quest block importance scoring.
+
+Computes, for every KV block, the Quest upper bound on the attention
+logit any token in the block could achieve against the (possibly
+*predicted*, §3.3) query:
+
+    score(b, j) = sum_h sum_d max(q[h,d] * kmin[j,kv(h),d],
+                                  q[h,d] * kmax[j,kv(h),d])
+
+The top-k selection itself is the coordinator's job (L3 owns residency
+policy); this kernel only produces the dense score vector.  That split
+mirrors the paper's implementation, where the FlashInfer-based top-k
+kernel feeds the scheduler that decides which blocks the CPU must cover.
+
+VMEM/BlockSpec notes: grid = (B,); one program scores *all* nb blocks of
+one sequence so the digest tile [nb, Hkv, D] streams through VMEM once.
+Default config (nb=128, Hkv=2, D=64): 128*2*64*4 = 64 KiB per digest
+operand, 2 KiB for q — trivially VMEM-resident; the reduction is a
+VPU-friendly broadcast-multiply-max tree with no MXU work.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scores_kernel(q_ref, kmin_ref, kmax_ref, out_ref, *, g: int):
+    q = q_ref[0]  # [Hq, D]
+    kmin = kmin_ref[0]  # [nb, Hkv, D]
+    kmax = kmax_ref[0]
+    Hq, D = q.shape
+    nb, Hkv, _ = kmin.shape
+    qg = q.reshape(Hkv, g, D)
+    # [nb, Hkv, g, D]
+    lo = qg[None, :, :, :] * kmin[:, :, None, :]
+    hi = qg[None, :, :, :] * kmax[:, :, None, :]
+    per = jnp.maximum(lo, hi)
+    out_ref[0] = per.sum(axis=(1, 2, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_scores(
+    q: jnp.ndarray,
+    kmin: jnp.ndarray,
+    kmax: jnp.ndarray,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Quest block scores.
+
+    q: [B, Hq, D]; kmin/kmax: [B, nb, Hkv, D] -> [B, nb] float32.
+    """
+    B, Hq, D = q.shape
+    _, nb, Hkv, _ = kmin.shape
+    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    g = Hq // Hkv
+    kernel = functools.partial(_scores_kernel, g=g)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, nb, Hkv, D), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, nb, Hkv, D), lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nb), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nb), jnp.float32),
+        interpret=interpret,
+    )(q, kmin, kmax)

@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: Quest block digest construction (channel-wise min/max).
+
+The digest is the GPU-resident summary of an offloaded KV block: for each
+(kv-head, channel) pair we keep the min and max of K over the block's
+tokens (Quest, ICML'24).  ScoutAttention keeps *only* these digests plus a
+small resident set on the GPU; everything else lives in DRAM (§3.2).
+
+VMEM/BlockSpec notes (DESIGN.md §Perf / Hardware-Adaptation):
+  grid = (B, nb); each program reads one [bs, Hkv, D] K block from HBM
+  into VMEM and reduces it to two [Hkv, D] tiles.  For the default config
+  (bs=32, Hkv=2, D=64) the working set is 32*2*64*4 B = 16 KiB in, 1 KiB
+  out — far under the ~16 MiB VMEM budget, so the kernel is purely
+  bandwidth-bound and the natural tile is the whole block (no inner
+  tiling needed).  On a real TPU this reduction maps onto the VPU; the
+  MXU is not involved.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _digest_kernel(k_ref, kmin_ref, kmax_ref):
+    blk = k_ref[0, 0]  # [bs, Hkv, D]
+    kmin_ref[0, 0] = blk.min(axis=0)
+    kmax_ref[0, 0] = blk.max(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def digest(k_blocks: jnp.ndarray, interpret: bool = True):
+    """Compute Quest digests.
+
+    k_blocks: [B, nb, bs, Hkv, D] -> (kmin, kmax): [B, nb, Hkv, D]
+    """
+    B, nb, bs, Hkv, D = k_blocks.shape
+    out_shape = jax.ShapeDtypeStruct((B, nb, Hkv, D), k_blocks.dtype)
+    kmin, kmax = pl.pallas_call(
+        _digest_kernel,
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, Hkv, D), lambda b, j: (b, j, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Hkv, D), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, 1, Hkv, D), lambda b, j: (b, j, 0, 0)),
+        ],
+        out_shape=[out_shape, out_shape],
+        interpret=interpret,
+    )(k_blocks)
+    return kmin, kmax

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: FlashAttention log-sum-exp merge of two partials.
+
+This is the "Merge" step of Algorithm 1 line 12: the GPU-side partial
+A_gpu (computed this layer) is combined with the CPU-side partial A_cpu
+(pre-computed during the *previous* layer from the predicted query) into
+the layer's final attention state.  Merging is associative, so the tail
+partial and the recall-corrected partial fold in with the same kernel.
+
+VMEM notes: purely elementwise over [Hq, D] tiles (2 KiB at defaults);
+grid = (B,).  Negligible cost — it exists as a kernel so the merge lowers
+into the same HLO module as the attention it follows and XLA can fuse it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_kernel(
+    acc_a_ref, m_a_ref, l_a_ref, acc_b_ref, m_b_ref, l_b_ref,
+    acc_ref, m_ref, l_ref,
+):
+    m_a, m_b = m_a_ref[0], m_b_ref[0]
+    m = jnp.maximum(m_a, m_b)
+    wa = jnp.exp(m_a - m)
+    wb = jnp.exp(m_b - m)
+    acc_ref[0] = acc_a_ref[0] * wa[:, None] + acc_b_ref[0] * wb[:, None]
+    l_ref[0] = l_a_ref[0] * wa + l_b_ref[0] * wb
+    m_ref[0] = m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_partials(
+    acc_a, m_a, l_a, acc_b, m_b, l_b, interpret: bool = True
+):
+    """Merge two attention partials (see ref.py for the contract).
+
+    acc_*: [B, Hq, D]; m_*/l_*: [B, Hq].  Returns (acc, m, l).
+    """
+    B, Hq, D = acc_a.shape
+    vec = pl.BlockSpec((1, Hq), lambda b: (b, 0))
+    mat = pl.BlockSpec((1, Hq, D), lambda b: (b, 0, 0))
+    acc, m, l = pl.pallas_call(
+        _merge_kernel,
+        grid=(B,),
+        in_specs=[mat, vec, vec, mat, vec, vec],
+        out_specs=[mat, vec, vec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(acc_a, m_a, l_a, acc_b, m_b, l_b)
+    return acc, m, l

@@ -1,0 +1,139 @@
+"""Pure-jnp reference oracle for every L1 Pallas kernel.
+
+This module is the single source of numerical truth for the ScoutAttention
+compute plane.  Each public function mirrors one Pallas kernel in this
+package, written in the most direct jnp style possible (no tiling, no
+online softmax) so that correctness bugs in the kernels cannot hide.
+
+Shape conventions (decode step, single token per sequence):
+  B      batch
+  Hq     query heads
+  Hkv    KV heads (GQA: Hq % Hkv == 0)
+  D      head dim
+  nb     number of KV blocks
+  kb     number of *selected* blocks handed to sparse attention
+  bs     block size (tokens per block)
+
+A *partial* attention result is the triple (acc, m, l):
+  acc [.., Hq, D]  sum_j exp(s_j - m) * v_j      (unnormalized output)
+  m   [.., Hq]     running max of scores
+  l   [.., Hq]     sum_j exp(s_j - m)            (softmax denominator)
+The final output of attention is acc / l.  Partials merge associatively
+(see `merge_partials_ref`), which is the FlashAttention log-sum-exp merge
+the paper uses to combine GPU-side and CPU-side attention (§3.2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def digest_ref(k_blocks: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quest channel-wise min/max digests.
+
+    k_blocks: [B, nb, bs, Hkv, D] -> (kmin, kmax): [B, nb, Hkv, D]
+    """
+    return k_blocks.min(axis=2), k_blocks.max(axis=2)
+
+
+def block_scores_ref(
+    q: jnp.ndarray, kmin: jnp.ndarray, kmax: jnp.ndarray
+) -> jnp.ndarray:
+    """Quest block importance scores, summed over query heads.
+
+    q: [B, Hq, D]; kmin/kmax: [B, nb, Hkv, D] -> scores [B, nb]
+
+    Per query head h the Quest upper bound on q.k for any token in the
+    block is sum_d max(q_d * kmin_d, q_d * kmax_d); sequence-level block
+    scores aggregate (sum) over heads, which is the granularity at which
+    ScoutAttention manages block residency (one resident set per
+    sequence, shared across heads).
+    """
+    B, Hq, D = q.shape
+    _, nb, Hkv, _ = kmin.shape
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, D)
+    # [B, nb, Hkv, g, D]
+    lo = qg[:, None, :, :, :] * kmin[:, :, :, None, :]
+    hi = qg[:, None, :, :, :] * kmax[:, :, :, None, :]
+    per_head = jnp.maximum(lo, hi).sum(axis=-1)  # [B, nb, Hkv, g]
+    return per_head.sum(axis=(2, 3))
+
+
+def sparse_attn_ref(
+    q: jnp.ndarray,
+    k_sel: jnp.ndarray,
+    v_sel: jnp.ndarray,
+    token_mask: jnp.ndarray,
+    scale: float | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Attention partial over gathered KV blocks.
+
+    q: [B, Hq, D]; k_sel/v_sel: [B, kb, bs, Hkv, D];
+    token_mask: [B, kb, bs] (1.0 = valid).
+    Returns partial (acc [B,Hq,D], m [B,Hq], l [B,Hq]).
+    """
+    B, Hq, D = q.shape
+    _, kb, bs, Hkv, _ = k_sel.shape
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+    k = k_sel.reshape(B, kb * bs, Hkv, D)
+    v = v_sel.reshape(B, kb * bs, Hkv, D)
+    mask = token_mask.reshape(B, kb * bs)
+    # expand kv heads to query heads
+    k = jnp.repeat(k, g, axis=2)  # [B, T, Hq, D]
+    v = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bhd,bthd->bht", q, k) * scale  # [B, Hq, T]
+    s = jnp.where(mask[:, None, :] > 0, s, NEG_INF)
+    m = s.max(axis=-1)  # [B, Hq]
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[:, None, :] > 0, p, 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bht,bthd->bhd", p, v)
+    return acc, m, l
+
+
+def merge_partials_ref(
+    a: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    b: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """FlashAttention log-sum-exp merge of two partials (associative)."""
+    acc_a, m_a, l_a = a
+    acc_b, m_b, l_b = b
+    m = jnp.maximum(m_a, m_b)
+    wa = jnp.exp(m_a - m)
+    wb = jnp.exp(m_b - m)
+    acc = acc_a * wa[..., None] + acc_b * wb[..., None]
+    l = l_a * wa + l_b * wb
+    return acc, m, l
+
+
+def finalize_ref(acc: jnp.ndarray, l: jnp.ndarray) -> jnp.ndarray:
+    """Normalize a partial into the attention output: acc / l."""
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def full_attn_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    length_mask: jnp.ndarray,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Dense decode attention oracle.
+
+    q: [B, Hq, D]; k/v: [B, S, Hkv, D]; length_mask: [B, S].
+    Returns normalized output [B, Hq, D].
+    """
+    B, S, Hkv, D = k.shape
+    acc, m, l = sparse_attn_ref(
+        q,
+        k.reshape(B, 1, S, Hkv, D),
+        v.reshape(B, 1, S, Hkv, D),
+        length_mask.reshape(B, 1, S),
+        scale=scale,
+    )
+    return finalize_ref(acc, l)

@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: block-gathered flash attention partial.
+
+The compute hot-spot of ScoutAttention's GPU side: decode attention over
+the *selected* KV blocks only, with an online-softmax accumulator, and —
+crucially — emitting the raw partial (acc, m, l) instead of a normalized
+output, so the coordinator can merge it with the CPU-side partial that
+was pre-computed one layer ahead (§3.2/§3.3).
+
+The same kernel instantiated with kb=1 serves the "tail" partial (the
+newest, still-filling block that always stays on the GPU).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+kernel assigns KV pages to threadblocks and merges per-warp partials in
+shared memory.  On TPU-shaped Pallas the equivalent schedule is a grid
+over (batch, selected-block) with the accumulator carried in the *output*
+VMEM tile across the inner grid dimension (Pallas guarantees sequential
+revisiting on the last grid axis), and BlockSpec index_maps expressing
+the HBM->VMEM gather.  Per step the working set is one [bs, Hkv, D] K
+tile + V tile (16 KiB each at defaults) plus the [Hq, D] accumulator —
+double-bufferable well inside VMEM; scores use the MXU via q @ k^T in
+bf16 on real hardware (f32 here for the CPU interpret path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _sparse_attn_kernel(
+    q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref, *, g: int, scale: float
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[0] = jnp.zeros_like(acc_ref[0])
+        m_ref[0] = jnp.full_like(m_ref[0], NEG_INF)
+        l_ref[0] = jnp.zeros_like(l_ref[0])
+
+    q = q_ref[0]  # [Hq, D]
+    k = k_ref[0, 0]  # [bs, Hkv, D]
+    v = v_ref[0, 0]  # [bs, Hkv, D]
+    tok = mask_ref[0, 0]  # [bs]
+
+    Hq, D = q.shape
+    bs, Hkv, _ = k.shape
+    qg = q.reshape(Hkv, g, D)
+    # scores: [Hkv, g, bs]
+    s = jnp.einsum("hgd,thd->hgt", qg, k) * scale
+    s = s.reshape(Hq, bs)
+    s = jnp.where(tok[None, :] > 0, s, NEG_INF)
+
+    m_prev = m_ref[0]  # [Hq]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(tok[None, :] > 0, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+
+    pv = jnp.einsum("hgt,thd->hgd", p.reshape(Hkv, g, bs), v).reshape(Hq, D)
+    acc_ref[0] = acc_ref[0] * alpha[:, None] + pv
+    l_ref[0] = l_ref[0] * alpha + p.sum(axis=-1)
+    m_ref[0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "scale"))
+def sparse_attn(
+    q: jnp.ndarray,
+    k_sel: jnp.ndarray,
+    v_sel: jnp.ndarray,
+    token_mask: jnp.ndarray,
+    scale: float | None = None,
+    interpret: bool = True,
+):
+    """Block-sparse decode attention partial.
+
+    q: [B, Hq, D]; k_sel/v_sel: [B, kb, bs, Hkv, D];
+    token_mask: [B, kb, bs] (1.0 = attend, 0.0 = padding).
+    Returns (acc [B,Hq,D], m [B,Hq], l [B,Hq]) — see ref.py for the
+    partial contract.  Fully-masked inputs yield m = -1e30, l = 0.
+    """
+    B, Hq, D = q.shape
+    _, kb, bs, Hkv, _ = k_sel.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+    kernel = functools.partial(_sparse_attn_kernel, g=g, scale=scale)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, kb),
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, 1, bs, Hkv, D), lambda b, j: (b, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, bs, Hkv, D), lambda b, j: (b, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, bs), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, Hq), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, Hq), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_sel, v_sel, token_mask)
+    return acc, m, l

@@ -1,0 +1,352 @@
+"""L2: JAX model — GQA transformer decode/prefill graphs calling the L1 kernels.
+
+This is the build-time compute-graph layer of the three-layer stack.  Every
+public function here is a pure, shape-static JAX function; `aot.py` lowers
+each one to an HLO-text artifact that the rust coordinator (L3) loads via
+PJRT and drives per layer, per decode step.  Weights are *runtime inputs*
+(generated and owned by rust), so one artifact set serves any seed.
+
+Decomposition mirrors the ScoutAttention schedule (Fig. 5 / Alg. 1):
+
+  layer_pre_attn   x -> (q, k_new, v_new)           QKV projection + RoPE
+  qpred            x, W_Q^{i+1} -> Q_pred^{i+1}     layer-ahead predicted query
+  digest_build     K blocks -> (kmin, kmax)         Quest digests   [L1 kernel]
+  block_scores_fn  q, digests -> scores             block selection [L1 kernel]
+  sparse_attn_fn   q, gathered blocks -> partial    GPU-side attn   [L1 kernel]
+  merge_fn         partial x2 -> partial            LSE merge       [L1 kernel]
+  layer_post_attn  x, partial -> x'                 out-proj + MLP + residuals
+  lm_head          x -> logits
+  decode_full      fused full-attention decode step (FullKV baseline / oracle)
+  prefill          fused causal prefill for one sequence (B=1)
+
+Architecture: pre-RMSNorm, rotate-half RoPE, GQA attention, SiLU-gateless
+MLP (two matmuls with SiLU), tied embedding / LM head.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import block_scores, digest, merge_partials, sparse_attn
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape configuration for one artifact set ("preset")."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_q_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    max_seq: int  # S: KV cache capacity (tokens)
+    block_size: int  # bs
+    k_blocks: int  # kb: sparse budget in blocks (budget_tokens / bs)
+    batch: int  # B: decode batch tile
+    rope_theta: float = 10000.0
+
+    @property
+    def n_blocks(self) -> int:  # nb
+        assert self.max_seq % self.block_size == 0
+        return self.max_seq // self.block_size
+
+    @property
+    def group(self) -> int:
+        assert self.n_q_heads % self.n_kv_heads == 0
+        return self.n_q_heads // self.n_kv_heads
+
+    @property
+    def scale(self) -> float:
+        return 1.0 / (self.head_dim**0.5)
+
+
+PRESETS: dict[str, ModelConfig] = {
+    # Fast shapes for rust integration tests — artifacts build in seconds.
+    "test-tiny": ModelConfig(
+        name="test-tiny", n_layers=2, d_model=128, n_q_heads=4, n_kv_heads=2,
+        head_dim=32, d_ff=256, vocab=256, max_seq=256, block_size=16,
+        k_blocks=4, batch=2,
+    ),
+    # E2E serving example: ~29M params.
+    "serve-20m": ModelConfig(
+        name="serve-20m", n_layers=8, d_model=512, n_q_heads=8, n_kv_heads=2,
+        head_dim=64, d_ff=2048, vocab=8192, max_seq=2048, block_size=32,
+        k_blocks=32, batch=8,
+    ),
+    # Accuracy evaluation at 4k context, budget 1024 tokens (kb=32).
+    "eval-4k": ModelConfig(
+        name="eval-4k", n_layers=8, d_model=256, n_q_heads=8, n_kv_heads=2,
+        head_dim=32, d_ff=1024, vocab=4096, max_seq=4096, block_size=32,
+        k_blocks=32, batch=4,
+    ),
+    # Accuracy evaluation at 4k context, budget 2048 tokens (kb=64).
+    "eval-4k-b2048": ModelConfig(
+        name="eval-4k-b2048", n_layers=8, d_model=256, n_q_heads=8,
+        n_kv_heads=2, head_dim=32, d_ff=1024, vocab=4096, max_seq=4096,
+        block_size=32, k_blocks=64, batch=4,
+    ),
+}
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = (x * x).mean(axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate-half RoPE.  x: [..., H, D]; pos broadcastable to x[..., 0, 0]."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None, None].astype(jnp.float32) * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.nn.sigmoid(x)
+
+
+# --------------------------------------------------------------------------
+# granular decode-step pieces (the ScoutAttention per-layer schedule)
+# --------------------------------------------------------------------------
+
+
+def layer_pre_attn(cfg: ModelConfig):
+    """x [B,d], ln1 [d], wq [d,Hq*D], wk [d,Hkv*D], wv [d,Hkv*D], pos [B]
+    -> q [B,Hq,D] (roped), k_new [B,Hkv,D] (roped), v_new [B,Hkv,D]."""
+
+    def fn(x, ln1, wq, wk, wv, pos):
+        B = x.shape[0]
+        h = rmsnorm(x, ln1)
+        q = (h @ wq).reshape(B, cfg.n_q_heads, cfg.head_dim)
+        k = (h @ wk).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ wv).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        return q, k, v
+
+    return fn
+
+
+def qpred(cfg: ModelConfig):
+    """Layer-ahead predicted query (Alg. 1 line 4): apply layer i+1's ln/W_Q
+    to layer i's *input*.  x [B,d], ln1_next [d], wq_next [d,Hq*D], pos [B]
+    -> q_pred [B,Hq,D] (roped)."""
+
+    def fn(x, ln1_next, wq_next, pos):
+        B = x.shape[0]
+        h = rmsnorm(x, ln1_next)
+        q = (h @ wq_next).reshape(B, cfg.n_q_heads, cfg.head_dim)
+        return rope(q, pos, cfg.rope_theta)
+
+    return fn
+
+
+def digest_build(cfg: ModelConfig):
+    """k_blocks [B,nb,bs,Hkv,D] -> (kmin, kmax) [B,nb,Hkv,D] (L1 kernel)."""
+
+    def fn(k_blocks):
+        return digest(k_blocks)
+
+    return fn
+
+
+def block_scores_fn(cfg: ModelConfig):
+    """q [B,Hq,D], kmin/kmax [B,nb,Hkv,D] -> scores [B,nb] (L1 kernel)."""
+
+    def fn(q, kmin, kmax):
+        return block_scores(q, kmin, kmax)
+
+    return fn
+
+
+def sparse_attn_fn(cfg: ModelConfig, kb: int | None = None):
+    """q [B,Hq,D], k/v [B,kb,bs,Hkv,D], mask [B,kb,bs] -> (acc,m,l)."""
+
+    def fn(q, k_sel, v_sel, token_mask):
+        return sparse_attn(q, k_sel, v_sel, token_mask, scale=cfg.scale)
+
+    return fn
+
+
+def merge_fn(cfg: ModelConfig):
+    def fn(acc_a, m_a, l_a, acc_b, m_b, l_b):
+        return merge_partials(acc_a, m_a, l_a, acc_b, m_b, l_b)
+
+    return fn
+
+
+def layer_post_attn(cfg: ModelConfig):
+    """Finalize attention and run the rest of the layer.
+
+    x [B,d], (acc,l) of the merged partial (m is not needed to finalize —
+    and an unused operand would be DCE'd out of the lowered HLO, breaking
+    the manifest arity), wo [Hq*D,d], ln2 [d], w1 [d,dff], w2 [dff,d]
+    -> x_next [B,d].
+    """
+
+    def fn(x, acc, l, wo, ln2, w1, w2):
+        B = x.shape[0]
+        out = kref.finalize_ref(acc, l)  # [B,Hq,D]
+        x = x + out.reshape(B, cfg.n_q_heads * cfg.head_dim) @ wo
+        h = rmsnorm(x, ln2)
+        x = x + silu(h @ w1) @ w2
+        return x
+
+    return fn
+
+
+def lm_head(cfg: ModelConfig):
+    """x [B,d], ln_f [d], embed [V,d] -> logits [B,V] (tied head)."""
+
+    def fn(x, ln_f, embed):
+        return rmsnorm(x, ln_f) @ embed.T
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# fused graphs (FullKV oracle + prefill)
+# --------------------------------------------------------------------------
+
+
+def _stacked_weight_specs(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    L, d, dff = cfg.n_layers, cfg.d_model, cfg.d_ff
+    HqD = cfg.n_q_heads * cfg.head_dim
+    HkvD = cfg.n_kv_heads * cfg.head_dim
+    return {
+        "ln1": (L, d),
+        "wq": (L, d, HqD),
+        "wk": (L, d, HkvD),
+        "wv": (L, d, HkvD),
+        "wo": (L, HqD, d),
+        "ln2": (L, d),
+        "w1": (L, d, dff),
+        "w2": (L, dff, d),
+    }
+
+
+def decode_full(cfg: ModelConfig):
+    """Fused full-attention decode step (the FullKV baseline & accuracy oracle).
+
+    Inputs: x [B,d] (embedded token), stacked per-layer weights, ln_f [d],
+    embed [V,d], kcache/vcache [L,B,S,Hkv,D], pos [B] (current cache length;
+    the new token sits at position `pos`).
+    Outputs: logits [B,V], k_new/v_new [L,B,Hkv,D] (for rust to append).
+    """
+
+    S = cfg.max_seq
+
+    def fn(x, ln1, wq, wk, wv, wo, ln2, w1, w2, ln_f, embed, kcache, vcache, pos):
+        B = x.shape[0]
+        length_mask = (jnp.arange(S)[None, :] < pos[:, None]).astype(jnp.float32)
+
+        def layer(x, w):
+            (ln1_l, wq_l, wk_l, wv_l, wo_l, ln2_l, w1_l, w2_l, kc, vc) = w
+            h = rmsnorm(x, ln1_l)
+            q = rope(
+                (h @ wq_l).reshape(B, cfg.n_q_heads, cfg.head_dim),
+                pos, cfg.rope_theta,
+            )
+            k_new = rope(
+                (h @ wk_l).reshape(B, cfg.n_kv_heads, cfg.head_dim),
+                pos, cfg.rope_theta,
+            )
+            v_new = (h @ wv_l).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+            # cache partial + self partial, LSE-merged (same math as the
+            # sparse path, so FullKV and Scout agree exactly on dense sets)
+            p_cache = kref.sparse_attn_ref(
+                q,
+                kc.reshape(B, 1, S, cfg.n_kv_heads, cfg.head_dim),
+                vc.reshape(B, 1, S, cfg.n_kv_heads, cfg.head_dim),
+                length_mask.reshape(B, 1, S),
+                scale=cfg.scale,
+            )
+            p_self = kref.sparse_attn_ref(
+                q,
+                k_new.reshape(B, 1, 1, cfg.n_kv_heads, cfg.head_dim),
+                v_new.reshape(B, 1, 1, cfg.n_kv_heads, cfg.head_dim),
+                jnp.ones((B, 1, 1), jnp.float32),
+                scale=cfg.scale,
+            )
+            acc, m, l = kref.merge_partials_ref(p_cache, p_self)
+            out = kref.finalize_ref(acc, l)
+            x = x + out.reshape(B, cfg.n_q_heads * cfg.head_dim) @ wo_l
+            hh = rmsnorm(x, ln2_l)
+            x = x + silu(hh @ w1_l) @ w2_l
+            return x, (k_new, v_new)
+
+        x, (k_news, v_news) = jax.lax.scan(
+            layer, x, (ln1, wq, wk, wv, wo, ln2, w1, w2, kcache, vcache)
+        )
+        logits = rmsnorm(x, ln_f) @ embed.T
+        return logits, k_news, v_news
+
+    return fn
+
+
+def prefill(cfg: ModelConfig):
+    """Fused causal prefill for ONE sequence (B=1), padded to S = max_seq.
+
+    Inputs: x_seq [S,d] (embedded tokens, padded), stacked weights, ln_f,
+    embed, length (i32 scalar).
+    Outputs: kcache/vcache [L,S,Hkv,D] (roped K), h_last [d] (hidden at
+    position length-1, for the first decode step), logits_last [V].
+    """
+
+    S = cfg.max_seq
+
+    def fn(x_seq, ln1, wq, wk, wv, wo, ln2, w1, w2, ln_f, embed, length):
+        posv = jnp.arange(S, dtype=jnp.int32)
+        valid = (posv < length).astype(jnp.float32)
+        # causal & length mask: [S, S]
+        causal = (posv[None, :] <= posv[:, None]).astype(jnp.float32)
+        amask = causal * valid[None, :]
+
+        def layer(x, w):
+            (ln1_l, wq_l, wk_l, wv_l, wo_l, ln2_l, w1_l, w2_l) = w
+            h = rmsnorm(x, ln1_l)
+            q = rope(
+                (h @ wq_l).reshape(S, cfg.n_q_heads, cfg.head_dim),
+                posv, cfg.rope_theta,
+            )
+            k = rope(
+                (h @ wk_l).reshape(S, cfg.n_kv_heads, cfg.head_dim),
+                posv, cfg.rope_theta,
+            )
+            v = (h @ wv_l).reshape(S, cfg.n_kv_heads, cfg.head_dim)
+            kq = jnp.repeat(k, cfg.group, axis=1)  # [S,Hq,D]
+            vq = jnp.repeat(v, cfg.group, axis=1)
+            s = jnp.einsum("qhd,thd->hqt", q, kq) * cfg.scale
+            s = jnp.where(amask[None, :, :] > 0, s, kref.NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            p = jnp.where(amask[None, :, :] > 0, p, 0.0)
+            out = jnp.einsum("hqt,thd->qhd", p, vq)
+            x = x + out.reshape(S, cfg.n_q_heads * cfg.head_dim) @ wo_l
+            hh = rmsnorm(x, ln2_l)
+            x = x + silu(hh @ w1_l) @ w2_l
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(
+            layer, x_seq, (ln1, wq, wk, wv, wo, ln2, w1, w2)
+        )
+        h_last = x[jnp.maximum(length - 1, 0)]
+        logits_last = rmsnorm(h_last, ln_f) @ embed.T
+        return ks, vs, h_last, logits_last
+
+    return fn

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Allow `pytest python/tests` from the repo root as well as `cd python`.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from hypothesis import settings
+
+# jax tracing/compilation dominates; wall-clock deadlines only cause flakes.
+settings.register_profile("jax", deadline=None, max_examples=25)
+settings.load_profile("jax")

@@ -1,0 +1,65 @@
+"""L1 block-score kernel vs oracle + the Quest upper-bound property."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import block_scores, digest, ref
+
+
+@given(
+    b=st.integers(1, 3),
+    nb=st.integers(1, 8),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([2, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scores_match_ref(b, nb, hkv, g, d, seed):
+    hq = hkv * g
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (b, hq, d))
+    kmin = jax.random.normal(k2, (b, nb, hkv, d))
+    kmax = kmin + jnp.abs(jax.random.normal(k3, (b, nb, hkv, d)))
+    s = block_scores(q, kmin, kmax)
+    rs = ref.block_scores_ref(q, kmin, kmax)
+    np.testing.assert_allclose(s, rs, rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_score_upper_bounds_true_logits(seed):
+    """Per head, sum_d max(q*kmin, q*kmax) >= q.k for every real k in the
+    block — the property that makes Quest selection sound.  Our
+    sequence-level score sums over heads, so it upper-bounds the
+    head-summed logit of every token in the block."""
+    b, nb, bs, hkv, g, d = 2, 4, 8, 2, 2, 16
+    hq = hkv * g
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    kblocks = jax.random.normal(k1, (b, nb, bs, hkv, d))
+    q = jax.random.normal(k2, (b, hq, d))
+    kmin, kmax = digest(kblocks)
+    scores = np.asarray(block_scores(q, kmin, kmax))  # [b, nb]
+
+    kb = np.asarray(kblocks)
+    # head-summed logit for every token: [b, nb, bs]
+    logits = np.zeros((b, nb, bs))
+    for bi in range(b):
+        for n in range(nb):
+            for t in range(bs):
+                tot = 0.0
+                for h in range(hq):
+                    tot += float(np.dot(np.asarray(q)[bi, h], kb[bi, n, t, h // g]))
+                logits[bi, n, t] = tot
+    assert (scores[:, :, None] >= logits - 1e-3).all()
+
+
+def test_scores_monotone_in_budget_direction():
+    """Widening [kmin, kmax] can only increase the score."""
+    b, nb, hkv, d = 1, 3, 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, 4, d))
+    kmin = jax.random.normal(jax.random.PRNGKey(1), (b, nb, hkv, d))
+    kmax = kmin + 0.5
+    s1 = np.asarray(block_scores(q, kmin, kmax))
+    s2 = np.asarray(block_scores(q, kmin - 1.0, kmax + 1.0))
+    assert (s2 >= s1 - 1e-5).all()

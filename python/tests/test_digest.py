@@ -1,0 +1,58 @@
+"""L1 digest kernel vs pure-jnp oracle (hypothesis shape/dtype sweep)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import digest, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, dtype=jnp.float32) * 3.0
+    return x.astype(dtype)
+
+
+@given(
+    b=st.integers(1, 3),
+    nb=st.integers(1, 6),
+    bs=st.sampled_from([1, 2, 4, 8]),
+    hkv=st.sampled_from([1, 2]),
+    d=st.sampled_from([2, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_digest_matches_ref(b, nb, bs, hkv, d, seed):
+    k = _rand(jax.random.PRNGKey(seed), (b, nb, bs, hkv, d), jnp.float32)
+    kmin, kmax = digest(k)
+    rmin, rmax = ref.digest_ref(k)
+    np.testing.assert_allclose(kmin, rmin, rtol=1e-6)
+    np.testing.assert_allclose(kmax, rmax, rtol=1e-6)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_digest_dtypes(seed, dtype):
+    k = _rand(jax.random.PRNGKey(seed), (2, 3, 4, 2, 8), dtype)
+    kmin, kmax = digest(k)
+    rmin, rmax = ref.digest_ref(k)
+    assert kmin.dtype == dtype and kmax.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(kmin), np.asarray(rmin))
+    np.testing.assert_array_equal(np.asarray(kmax), np.asarray(rmax))
+
+
+def test_digest_bounds_contain_block():
+    """min/max digests must bound every token in the block (the Quest
+    invariant that makes the score an upper bound)."""
+    k = jax.random.normal(jax.random.PRNGKey(7), (2, 4, 8, 2, 16))
+    kmin, kmax = digest(k)
+    assert bool((k >= kmin[:, :, None]).all())
+    assert bool((k <= kmax[:, :, None]).all())
+
+
+def test_digest_singleton_block_is_identity():
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 1, 2, 4))
+    kmin, kmax = digest(k)
+    np.testing.assert_allclose(kmin, k[:, :, 0], rtol=1e-7)
+    np.testing.assert_allclose(kmax, k[:, :, 0], rtol=1e-7)

@@ -1,0 +1,75 @@
+"""L1 merge kernel: contract, associativity, commutativity, identity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import merge_partials, ref, sparse_attn
+
+
+def _partial(seed, b=2, hq=4, d=8):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    acc = jax.random.normal(ks[0], (b, hq, d))
+    m = jax.random.normal(ks[1], (b, hq)) * 2.0
+    l = jnp.abs(jax.random.normal(ks[2], (b, hq))) + 0.1
+    return acc, m, l
+
+
+@given(s1=st.integers(0, 1000), s2=st.integers(1001, 2000))
+def test_merge_matches_ref(s1, s2):
+    a, b_ = _partial(s1), _partial(s2)
+    got = merge_partials(*a, *b_)
+    want = ref.merge_partials_ref(a, b_)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+
+@given(s1=st.integers(0, 500), s2=st.integers(501, 1000), s3=st.integers(1001, 1500))
+def test_merge_associative(s1, s2, s3):
+    a, b_, c = _partial(s1), _partial(s2), _partial(s3)
+    ab_c = merge_partials(*merge_partials(*a, *b_), *c)
+    a_bc = merge_partials(*a, *merge_partials(*b_, *c))
+    for x, y in zip(ab_c, a_bc):
+        np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-5)
+
+
+@given(s1=st.integers(0, 500), s2=st.integers(501, 1000))
+def test_merge_commutative(s1, s2):
+    a, b_ = _partial(s1), _partial(s2)
+    ab = merge_partials(*a, *b_)
+    ba = merge_partials(*b_, *a)
+    for x, y in zip(ab, ba):
+        np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6)
+
+
+def test_merge_identity():
+    """The empty partial (acc=0, m=-inf-like, l=0) is the merge identity —
+    exactly what the coordinator uses when the CPU had no blocks to cover."""
+    a = _partial(11)
+    empty = (
+        jnp.zeros_like(a[0]),
+        jnp.full_like(a[1], -1e30),
+        jnp.zeros_like(a[2]),
+    )
+    got = merge_partials(*a, *empty)
+    for g, w in zip(got, a):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+
+def test_merge_reconstructs_dense_attention():
+    """End-to-end partial contract: dense = finalize(merge(left, right))."""
+    b, hq, hkv, bs, d = 2, 4, 2, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    k = jax.random.normal(ks[1], (b, 4, bs, hkv, d))
+    v = jax.random.normal(ks[2], (b, 4, bs, hkv, d))
+    ones = jnp.ones((b, 4, bs))
+    left = sparse_attn(q, k[:, :1], v[:, :1], ones[:, :1])
+    right = sparse_attn(q, k[:, 1:], v[:, 1:], ones[:, 1:])
+    acc, m, l = merge_partials(*left, *right)
+    dense = ref.full_attn_ref(
+        q, k.reshape(b, 4 * bs, hkv, d), v.reshape(b, 4 * bs, hkv, d),
+        jnp.ones((b, 4 * bs)),
+    )
+    np.testing.assert_allclose(ref.finalize_ref(acc, l), dense, rtol=1e-4, atol=1e-5)

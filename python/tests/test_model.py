@@ -1,0 +1,223 @@
+"""L2 model tests: the granular artifact decomposition must compose to the
+fused FullKV oracle, and prefill must be consistent with decode.
+
+These are the tests that guarantee the rust coordinator — which drives the
+granular executables layer by layer — computes the same numbers as the
+fused `decode_full` graph it is benchmarked against.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.PRESETS["test-tiny"]
+
+
+def init_weights(cfg: M.ModelConfig, seed: int = 0):
+    ks = iter(jax.random.split(jax.random.PRNGKey(seed), 64))
+    HqD, HkvD = cfg.n_q_heads * cfg.head_dim, cfg.n_kv_heads * cfg.head_dim
+
+    def mat(shape, scale):
+        return jax.random.normal(next(ks), shape) * scale
+
+    L, d, dff = cfg.n_layers, cfg.d_model, cfg.d_ff
+    s = 0.2 / d**0.5
+    return {
+        "ln1": jnp.ones((L, d)),
+        "wq": mat((L, d, HqD), s),
+        "wk": mat((L, d, HkvD), s),
+        "wv": mat((L, d, HkvD), s),
+        "wo": mat((L, HqD, d), s),
+        "ln2": jnp.ones((L, d)),
+        "w1": mat((L, d, dff), s),
+        "w2": mat((L, dff, d), s),
+        "ln_f": jnp.ones((d,)),
+        "embed": mat((cfg.vocab, d), 1.0),
+    }
+
+
+def granular_decode_step(cfg, w, x, kcache, vcache, pos):
+    """Drive the per-layer entry points exactly as the rust scheduler does
+    (dense selection: every block resident on the 'GPU')."""
+    B = x.shape[0]
+    nb, bs = cfg.n_blocks, cfg.block_size
+    pre = M.layer_pre_attn(cfg)
+    post = M.layer_post_attn(cfg)
+    sp = M.sparse_attn_fn(cfg)
+    tail = M.sparse_attn_fn(cfg, kb=1)
+    mrg = M.merge_fn(cfg)
+    head = M.lm_head(cfg)
+
+    token_mask = (
+        jnp.arange(cfg.max_seq)[None, :] < pos[:, None]
+    ).astype(jnp.float32).reshape(B, nb, bs)
+
+    k_news, v_news = [], []
+    for i in range(cfg.n_layers):
+        q, k_new, v_new = pre(x, w["ln1"][i], w["wq"][i], w["wk"][i], w["wv"][i], pos)
+        kblk = kcache[i].reshape(B, nb, bs, cfg.n_kv_heads, cfg.head_dim)
+        vblk = vcache[i].reshape(B, nb, bs, cfg.n_kv_heads, cfg.head_dim)
+        p_gpu = sp(q, kblk, vblk, token_mask)
+        p_self = tail(
+            q,
+            k_new.reshape(B, 1, 1, cfg.n_kv_heads, cfg.head_dim).repeat(bs, 2),
+            v_new.reshape(B, 1, 1, cfg.n_kv_heads, cfg.head_dim).repeat(bs, 2),
+            jnp.concatenate(
+                [jnp.ones((B, 1, 1)), jnp.zeros((B, 1, bs - 1))], axis=2
+            ),
+        )
+        acc, m, l = mrg(*p_gpu, *p_self)
+        del m  # finalize needs only (acc, l)
+        x = post(x, acc, l, w["wo"][i], w["ln2"][i], w["w1"][i], w["w2"][i])
+        k_news.append(k_new)
+        v_news.append(v_new)
+    logits = head(x, w["ln_f"], w["embed"])
+    return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = CFG
+    w = init_weights(cfg)
+    B, S = cfg.batch, cfg.max_seq
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    kcache = jax.random.normal(
+        ks[0], (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim)
+    ) * 0.5
+    vcache = jax.random.normal(
+        ks[1], (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim)
+    ) * 0.5
+    x = jax.random.normal(ks[2], (B, cfg.d_model))
+    # pos multiple of block_size so the cache is whole blocks (the tail is
+    # exercised via the self-token partial)
+    pos = jnp.array([cfg.block_size * 4] * B, dtype=jnp.int32)
+    return cfg, w, x, kcache, vcache, pos
+
+
+def test_granular_composition_equals_fused_oracle(setup):
+    cfg, w, x, kcache, vcache, pos = setup
+    fused = M.decode_full(cfg)
+    logits_f, kn_f, vn_f = fused(
+        x, w["ln1"], w["wq"], w["wk"], w["wv"], w["wo"], w["ln2"], w["w1"],
+        w["w2"], w["ln_f"], w["embed"], kcache, vcache, pos,
+    )
+    logits_g, kn_g, vn_g = granular_decode_step(cfg, w, x, kcache, vcache, pos)
+    np.testing.assert_allclose(logits_g, logits_f, rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(kn_g, kn_f, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(vn_g, vn_f, rtol=1e-4, atol=1e-5)
+
+
+def test_qpred_equals_pre_attn_q(setup):
+    """Q_pred with layer i's own weights on layer i's own input must equal
+    the real Q — the degenerate sanity case of Alg. 1 line 4."""
+    cfg, w, x, *_ = setup
+    pos = jnp.array([5] * cfg.batch, dtype=jnp.int32)
+    q, _, _ = M.layer_pre_attn(cfg)(
+        x, w["ln1"][0], w["wq"][0], w["wk"][0], w["wv"][0], pos
+    )
+    qp = M.qpred(cfg)(x, w["ln1"][0], w["wq"][0], pos)
+    np.testing.assert_allclose(qp, q, rtol=1e-5, atol=1e-6)
+
+
+def test_prefill_decode_consistency():
+    """prefill(t_0..t_n) then decode(t_{n+1}) must equal prefill(t_0..t_{n+1})
+    in both the produced K/V and the hidden state."""
+    cfg = CFG
+    w = init_weights(cfg, seed=3)
+    S = cfg.max_seq
+    n = 17
+    toks = jax.random.randint(jax.random.PRNGKey(5), (n + 1,), 0, cfg.vocab)
+    x_seq = w["embed"][toks]
+    pad = jnp.zeros((S - n - 1, cfg.d_model))
+    stacked = [w[k] for k in ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2")]
+
+    pf = M.prefill(cfg)
+    # prefill n tokens
+    k_n, v_n, h_n, _ = pf(
+        jnp.concatenate([x_seq[:n], jnp.zeros((S - n, cfg.d_model))]),
+        *stacked, w["ln_f"], w["embed"], jnp.int32(n),
+    )
+    # prefill n+1 tokens
+    k_n1, v_n1, h_n1, _ = pf(
+        jnp.concatenate([x_seq, pad]), *stacked, w["ln_f"], w["embed"],
+        jnp.int32(n + 1),
+    )
+    # decode token n against the n-token cache
+    B = cfg.batch
+    dec = M.decode_full(cfg)
+    xb = jnp.broadcast_to(x_seq[n], (B, cfg.d_model))
+    kc = jnp.broadcast_to(k_n[:, None], (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim))
+    vc = jnp.broadcast_to(v_n[:, None], (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim))
+    pos = jnp.array([n] * B, dtype=jnp.int32)
+    logits, k_new, v_new = dec(
+        xb, *stacked, w["ln_f"], w["embed"], kc, vc, pos
+    )
+    np.testing.assert_allclose(k_new[:, 0], k_n1[:, n], rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(v_new[:, 0], v_n1[:, n], rtol=2e-3, atol=2e-4)
+    # same final-position logits
+    logits_pf = M.lm_head(cfg)(h_n1[None, :], w["ln_f"], w["embed"])[0]
+    np.testing.assert_allclose(logits[0], logits_pf, rtol=5e-3, atol=5e-4)
+
+
+def test_rope_preserves_norm_and_relativity():
+    cfg = CFG
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, cfg.n_q_heads, cfg.head_dim))
+    p0 = jnp.array([0, 1, 7], dtype=jnp.int32)
+    y = M.rope(x, p0, cfg.rope_theta)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-5
+    )
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, cfg.head_dim))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, cfg.head_dim))
+    def dot(m, n):
+        qm = M.rope(q, jnp.array([m], dtype=jnp.int32), cfg.rope_theta)
+        kn = M.rope(k, jnp.array([n], dtype=jnp.int32), cfg.rope_theta)
+        return float((qm * kn).sum())
+    np.testing.assert_allclose(dot(5, 3), dot(12, 10), rtol=1e-4)
+    np.testing.assert_allclose(dot(9, 9), dot(0, 0), rtol=1e-4)
+
+
+def test_residual_stream_similarity_hypothesis():
+    """The paper's Table-1 premise: consecutive layer inputs are highly
+    similar (residual stream dominates).  Verify on the tiny model that
+    cos(X^i, X^{i+1}) is high, which is what makes Q_pred work."""
+    cfg = CFG
+    w = init_weights(cfg, seed=9)
+    S = cfg.max_seq
+    toks = jax.random.randint(jax.random.PRNGKey(4), (32,), 0, cfg.vocab)
+    x = w["embed"][toks]
+    sims = []
+    xs = [x]
+    for i in range(cfg.n_layers):
+        h = M.rmsnorm(x, w["ln1"][i])
+        # attention-free proxy of the residual update is enough here: use
+        # the true layer but with causal attention
+        q = M.rope((h @ w["wq"][i]).reshape(32, cfg.n_q_heads, cfg.head_dim),
+                   jnp.arange(32), cfg.rope_theta)
+        k = M.rope((h @ w["wk"][i]).reshape(32, cfg.n_kv_heads, cfg.head_dim),
+                   jnp.arange(32), cfg.rope_theta)
+        v = (h @ w["wv"][i]).reshape(32, cfg.n_kv_heads, cfg.head_dim)
+        kq = jnp.repeat(k, cfg.group, axis=1)
+        vq = jnp.repeat(v, cfg.group, axis=1)
+        s = jnp.einsum("qhd,thd->hqt", q, kq) * cfg.scale
+        mask = jnp.tril(jnp.ones((32, 32)))
+        s = jnp.where(mask[None] > 0, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("hqt,thd->qhd", p, vq).reshape(32, -1)
+        x = x + out @ w["wo"][i]
+        hh = M.rmsnorm(x, w["ln2"][i])
+        x = x + M.silu(hh @ w["w1"][i]) @ w["w2"][i]
+        xs.append(x)
+    for a, b in zip(xs[1:-1], xs[2:]):
+        ca = (a * b).sum(-1) / (
+            jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1)
+        )
+        sims.append(float(ca.mean()))
+    assert min(sims) > 0.85, sims

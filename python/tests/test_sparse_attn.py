@@ -1,0 +1,113 @@
+"""L1 block-sparse flash attention kernel vs oracle.
+
+Covers: hypothesis shape sweep, token masking, fully-masked blocks,
+single-block degenerate case, scale override, and equivalence of
+(sparse over all blocks) with dense attention.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref, sparse_attn
+
+
+def _mk(seed, b, kb, bs, hkv, g, d, mask_p=0.2):
+    hq = hkv * g
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    k = jax.random.normal(ks[1], (b, kb, bs, hkv, d))
+    v = jax.random.normal(ks[2], (b, kb, bs, hkv, d))
+    mask = (jax.random.uniform(ks[3], (b, kb, bs)) > mask_p).astype(jnp.float32)
+    return q, k, v, mask
+
+
+@given(
+    b=st.integers(1, 3),
+    kb=st.integers(1, 5),
+    bs=st.sampled_from([1, 2, 8]),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_attn_matches_ref(b, kb, bs, hkv, g, d, seed):
+    q, k, v, mask = _mk(seed, b, kb, bs, hkv, g, d)
+    acc, m, l = sparse_attn(q, k, v, mask)
+    racc, rm, rl = ref.sparse_attn_ref(q, k, v, mask)
+    np.testing.assert_allclose(acc, racc, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(l, rl, rtol=1e-4, atol=1e-6)
+    # m may differ where rows are fully masked (both represent -inf); only
+    # compare where l > 0.
+    live = np.asarray(rl) > 0
+    np.testing.assert_allclose(
+        np.asarray(m)[live], np.asarray(rm)[live], rtol=1e-4, atol=1e-5
+    )
+
+
+def test_fully_masked_yields_empty_partial():
+    q, k, v, _ = _mk(0, 2, 3, 4, 2, 2, 8)
+    mask = jnp.zeros((2, 3, 4))
+    acc, m, l = sparse_attn(q, k, v, mask)
+    np.testing.assert_allclose(acc, 0.0, atol=1e-30)
+    np.testing.assert_allclose(l, 0.0, atol=1e-30)
+    assert bool((m <= -1e29).all())
+
+
+def test_sparse_equals_dense_when_all_selected():
+    """Sparse attention over every block == dense attention (exactness of
+    the block decomposition, paper §3.2 'merged ... using FlashAttention')."""
+    b, kb, bs, hkv, g, d = 2, 4, 8, 2, 4, 16
+    q, k, v, _ = _mk(42, b, kb, bs, hkv, g, d)
+    mask = jnp.ones((b, kb, bs))
+    acc, m, l = sparse_attn(q, k, v, mask)
+    out = ref.finalize_ref(acc, l)
+    dense = ref.full_attn_ref(
+        q,
+        k.reshape(b, kb * bs, hkv, d),
+        v.reshape(b, kb * bs, hkv, d),
+        jnp.ones((b, kb * bs)),
+    )
+    np.testing.assert_allclose(out, dense, rtol=1e-4, atol=1e-5)
+
+
+def test_block_permutation_invariance():
+    """Attention is a set operation over tokens: permuting the selected
+    blocks must not change the finalized output (required for the
+    GPU/CPU partition to be order-free)."""
+    b, kb, bs, hkv, g, d = 1, 4, 4, 2, 2, 8
+    q, k, v, mask = _mk(7, b, kb, bs, hkv, g, d, mask_p=0.0)
+    perm = jnp.array([2, 0, 3, 1])
+    acc1, m1, l1 = sparse_attn(q, k, v, mask)
+    acc2, m2, l2 = sparse_attn(q, k[:, perm], v[:, perm], mask[:, perm])
+    np.testing.assert_allclose(
+        ref.finalize_ref(acc1, l1), ref.finalize_ref(acc2, l2),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_scale_override():
+    q, k, v, mask = _mk(3, 1, 2, 4, 1, 2, 8, mask_p=0.0)
+    acc, m, l = sparse_attn(q, k, v, mask, scale=0.25)
+    racc, rm, rl = ref.sparse_attn_ref(q, k, v, mask, scale=0.25)
+    np.testing.assert_allclose(acc, racc, rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gpu_cpu_partition_equals_whole(seed):
+    """The ScoutAttention core identity: partition selected blocks into a
+    'GPU' subset and a 'CPU' subset, attend each separately, LSE-merge —
+    must equal attention over the union (§3.2)."""
+    b, kb, bs, hkv, g, d = 2, 6, 4, 2, 2, 8
+    q, k, v, mask = _mk(seed, b, kb, bs, hkv, g, d)
+    split = 2
+    pg = sparse_attn(q, k[:, :split], v[:, :split], mask[:, :split])
+    pc = sparse_attn(q, k[:, split:], v[:, split:], mask[:, split:])
+    merged = ref.merge_partials_ref(pg, pc)
+    whole = sparse_attn(q, k, v, mask)
+    np.testing.assert_allclose(
+        ref.finalize_ref(merged[0], merged[2]),
+        ref.finalize_ref(whole[0], whole[2]),
+        rtol=1e-4, atol=1e-5,
+    )

@@ -1,0 +1,111 @@
+//! FullKV baseline: fused dense decode step (also the accuracy oracle).
+
+use std::sync::Arc;
+
+use crate::coordinator::{admission, gather, Batch, DecodeScheduler, StepStats};
+use crate::engines::{GpuEngine, NativeEngine};
+use crate::tensor::Tensor;
+
+pub struct FullKvScheduler {
+    pub gpu: Arc<GpuEngine>,
+    pub native: Arc<NativeEngine>,
+}
+
+impl FullKvScheduler {
+    pub fn new(gpu: Arc<GpuEngine>, native: Arc<NativeEngine>) -> Self {
+        Self { gpu, native }
+    }
+
+    fn step_chunk(
+        &mut self,
+        seqs: &mut [crate::coordinator::SeqState],
+        stats: &mut StepStats,
+    ) -> crate::Result<()> {
+        let spec = self.gpu.spec.clone();
+        let (b, s_max, l) = (spec.batch, spec.max_seq, spec.n_layers);
+        let w = spec.n_kv_heads * spec.head_dim;
+        let n = seqs.len();
+
+        let toks: Vec<u32> =
+            (0..b).map(|s| if s < n { seqs[s].last_tok } else { 0 }).collect();
+        let mut x = self.gpu.embed_tokens(&toks);
+        for s in n..b {
+            x.rows_mut(s, 1).fill(0.0);
+        }
+        let pos: Vec<i32> = (0..b).map(|s| if s < n { seqs[s].pos() } else { 0 }).collect();
+
+        // Assemble the dense cache operands [L, B, S, Hkv, D].
+        let mut kc = Tensor::zeros(&[l, b, s_max, spec.n_kv_heads, spec.head_dim]);
+        let mut vc = Tensor::zeros(&[l, b, s_max, spec.n_kv_heads, spec.head_dim]);
+        let seq_w = s_max * w;
+        for (s, seq) in seqs.iter().enumerate() {
+            let cache = seq.cache.read().unwrap();
+            let len = cache.len();
+            for layer in 0..l {
+                // contiguous [len, Hkv, D] prefix of the layer
+                if len > 0 {
+                    let off = (layer * b + s) * seq_w;
+                    kc.data_mut()[off..off + len * w]
+                        .copy_from_slice(cache.k_rows(layer, 0, len));
+                    vc.data_mut()[off..off + len * w]
+                        .copy_from_slice(cache.v_rows(layer, 0, len));
+                }
+                stats.layers[layer].dense_tokens += len + 1;
+            }
+        }
+
+        let (logits, kn, vn) = self.gpu.decode_full(&x, &kc, &vc, &pos)?;
+        // kn/vn: [L, B, Hkv, D] -> per-layer tensors
+        let mut k_news = Vec::with_capacity(l);
+        let mut v_news = Vec::with_capacity(l);
+        for layer in 0..l {
+            k_news.push(Tensor::from_vec(
+                &[b, spec.n_kv_heads, spec.head_dim],
+                kn.rows(layer, 1).to_vec(),
+            ));
+            v_news.push(Tensor::from_vec(
+                &[b, spec.n_kv_heads, spec.head_dim],
+                vn.rows(layer, 1).to_vec(),
+            ));
+        }
+        gather::sample_and_append(&mut seqs[..n], &logits, &k_news, &v_news, w);
+        Ok(())
+    }
+}
+
+impl DecodeScheduler for FullKvScheduler {
+    fn admit(&mut self, batch: &mut Batch, req: &crate::coordinator::RequestSpec) -> crate::Result<()> {
+        // Dense attention ignores residency, but shares the admission
+        // path so every method decodes from identical prefill state.
+        let spec = self.gpu.spec.clone();
+        admission::prefill_request(
+            &self.gpu,
+            &self.native,
+            batch,
+            req,
+            true,
+            1,
+            vec![usize::MAX; spec.n_layers],
+        )
+    }
+
+    fn step(&mut self, batch: &mut Batch) -> crate::Result<StepStats> {
+        let t0 = std::time::Instant::now();
+        let spec = self.gpu.spec.clone();
+        let mut stats = StepStats::new(spec.n_layers, batch.live(), false);
+        let tile = spec.batch;
+        let total = batch.seqs.len();
+        let mut start = 0;
+        while start < total {
+            let end = (start + tile).min(total);
+            self.step_chunk(&mut batch.seqs[start..end], &mut stats)?;
+            start = end;
+        }
+        stats.wall_us = t0.elapsed().as_micros() as u64;
+        Ok(stats)
+    }
+
+    fn name(&self) -> &'static str {
+        "FullKV"
+    }
+}

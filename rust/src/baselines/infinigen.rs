@@ -1,0 +1,145 @@
+//! InfiniGen-style recall-based offloading.
+//!
+//! Selection uses the predicted query one layer ahead (InfiniGen's own
+//! speculation mechanism, which ScoutAttention §3.3 credits); the
+//! speculated blocks are *fetched to the GPU* and all attention runs
+//! there. Numerically this is predicted-query top-k attention on the GPU;
+//! in the timing plane every selected-but-not-resident block is a
+//! synchronous PCIe transfer with only a one-layer window to hide in —
+//! the source of the 61% idle time in Figs. 3/11.
+
+use std::sync::Arc;
+
+use crate::coordinator::{admission, gather, Batch, DecodeScheduler, SeqState, StepStats};
+use crate::engines::{GpuEngine, NativeEngine};
+use crate::sparse::{score_blocks_native, select_topk};
+use crate::tensor::Tensor;
+
+pub struct InfinigenScheduler {
+    pub gpu: Arc<GpuEngine>,
+    pub native: Arc<NativeEngine>,
+    /// Keep the sink block pinned like the other methods (fair config).
+    pub pin_sink: bool,
+    pub pin_recent: usize,
+}
+
+impl InfinigenScheduler {
+    pub fn new(gpu: Arc<GpuEngine>, native: Arc<NativeEngine>) -> Self {
+        Self { gpu, native, pin_sink: true, pin_recent: 1 }
+    }
+
+    pub fn prefill_request(
+        &mut self,
+        batch: &mut Batch,
+        req: &crate::coordinator::RequestSpec,
+    ) -> crate::Result<()> {
+        let spec = self.gpu.spec.clone();
+        admission::prefill_request(
+            &self.gpu,
+            &self.native,
+            batch,
+            req,
+            self.pin_sink,
+            self.pin_recent,
+            vec![usize::MAX; spec.n_layers], // no periodic recall
+        )
+    }
+
+    /// Select for `layer` with query rows `q` (`[B, Hq*D]`); the selected
+    /// set is fetched (sync transfers for misses) and becomes resident.
+    fn select_and_fetch(
+        &self,
+        seqs: &mut [SeqState],
+        q: &Tensor,
+        layer: usize,
+        stats: &mut StepStats,
+    ) {
+        let spec = &self.gpu.spec;
+        let (hq, hkv, d) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
+        for (s, seq) in seqs.iter_mut().enumerate() {
+            let cache = seq.cache.read().unwrap();
+            let full = cache.full_blocks();
+            let qrow = &q.rows(s, 1)[..hq * d];
+            let scores = score_blocks_native(qrow, &cache.digests, layer, full, hq, hkv, d);
+            drop(cache);
+            let pins = admission::pins(self.pin_sink, self.pin_recent, full);
+            let sel = select_topk(&scores, spec.k_blocks, &pins);
+            // blocks not already on the GPU must cross PCIe *now* (the
+            // prefetch window is the previous layer only)
+            let (_, misses) = seq.resident[layer].partition(&sel.blocks);
+            stats.layers[layer].sync_transfer_blocks += misses.len();
+            stats.layers[layer].gpu_blocks += sel.blocks.len();
+            stats.layers[layer].selected_blocks += sel.blocks.len();
+            seq.resident[layer].refresh(&sel.blocks);
+            seq.selected[layer] = sel.blocks;
+            seq.scores_mut(layer).clone_from(&scores);
+        }
+    }
+
+    fn step_chunk(&mut self, seqs: &mut [SeqState], stats: &mut StepStats) -> crate::Result<()> {
+        let spec = self.gpu.spec.clone();
+        let (b, l) = (spec.batch, spec.n_layers);
+        let n = seqs.len();
+        let toks: Vec<u32> =
+            (0..b).map(|s| if s < n { seqs[s].last_tok } else { 0 }).collect();
+        let mut x = self.gpu.embed_tokens(&toks);
+        for s in n..b {
+            x.rows_mut(s, 1).fill(0.0);
+        }
+        let pos: Vec<i32> = (0..b).map(|s| if s < n { seqs[s].pos() } else { 0 }).collect();
+
+        // layer-0 prefetch at step start (exact query).
+        let q0 = self.gpu.qpred(&x, 0, &pos)?;
+        self.select_and_fetch(seqs, &q0, 0, stats);
+
+        let mut k_news = Vec::with_capacity(l);
+        let mut v_news = Vec::with_capacity(l);
+        for i in 0..l {
+            // speculate layer i+1's important blocks from layer i's input
+            if i + 1 < l {
+                let qp = self.gpu.qpred(&x, i + 1, &pos)?;
+                self.select_and_fetch(seqs, &qp, i + 1, stats);
+            }
+            let (q, k_new, v_new) = self.gpu.pre_attn(&x, i, &pos)?;
+            let (ks, vs, ms) =
+                gather::gather_block_lists(&self.gpu, seqs, i, |_, seq| seq.selected[i].clone());
+            let p_gpu = self.gpu.sparse_attn(&q, &ks, &vs, &ms)?;
+            let (kt, vt, mt) = gather::gather_tail(&self.gpu, seqs, i, &k_new, &v_new);
+            let p_tail = self.gpu.tail_attn(&q, &kt, &vt, &mt)?;
+            let merged = self.gpu.merge(&p_gpu, &p_tail)?;
+            x = self.gpu.post_attn(&x, &merged, i)?;
+            k_news.push(k_new);
+            v_news.push(v_new);
+        }
+        let logits = self.gpu.lm_head(&x)?;
+        let w = spec.n_kv_heads * spec.head_dim;
+        gather::sample_and_append(&mut seqs[..n], &logits, &k_news, &v_news, w);
+        Ok(())
+    }
+}
+
+impl DecodeScheduler for InfinigenScheduler {
+    fn admit(&mut self, batch: &mut Batch, req: &crate::coordinator::RequestSpec) -> crate::Result<()> {
+        self.prefill_request(batch, req)
+    }
+
+    fn step(&mut self, batch: &mut Batch) -> crate::Result<StepStats> {
+        let t0 = std::time::Instant::now();
+        let spec = self.gpu.spec.clone();
+        let mut stats = StepStats::new(spec.n_layers, batch.live(), true);
+        let tile = spec.batch;
+        let total = batch.seqs.len();
+        let mut start = 0;
+        while start < total {
+            let end = (start + tile).min(total);
+            self.step_chunk(&mut batch.seqs[start..end], &mut stats)?;
+            start = end;
+        }
+        stats.wall_us = t0.elapsed().as_micros() as u64;
+        Ok(stats)
+    }
+
+    fn name(&self) -> &'static str {
+        "InfiniGen"
+    }
+}

@@ -1,0 +1,23 @@
+//! Baseline schedulers from the paper's evaluation (§4.1), implemented on
+//! the same engines, cache, and stats plumbing as ScoutAttention so every
+//! comparison is apples-to-apples:
+//!
+//! - [`FullKvScheduler`]  — vanilla dense attention, whole cache "on GPU"
+//!   (the fused `decode_full` artifact).
+//! - [`InfinigenScheduler`] — recall-based offloading: speculated top-k
+//!   blocks are prefetched to the GPU one layer ahead (predicted query)
+//!   and *all* attention runs on the GPU; every non-resident selected
+//!   block costs a synchronous PCIe transfer that the timing plane prices
+//!   against the one-layer window.
+//! - [`HgcaScheduler`]    — co-attention: a recent sliding window stays
+//!   on the GPU, the CPU computes sparse attention over the offloaded
+//!   rest with the *real* query in parallel with the same layer — so the
+//!   GPU waits for the slower CPU every layer (the 57% idle of Fig. 3).
+
+mod fullkv;
+mod hgca;
+mod infinigen;
+
+pub use fullkv::FullKvScheduler;
+pub use hgca::HgcaScheduler;
+pub use infinigen::InfinigenScheduler;

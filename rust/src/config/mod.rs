@@ -1,0 +1,213 @@
+//! Configuration system: JSON files + programmatic presets + validation.
+//!
+//! A `RunConfig` fully determines a run: which artifact preset backs the
+//! numerics plane, the ScoutAttention policy knobs (§3), the timing-plane
+//! device model, and server/workload parameters. `scout --config run.json`
+//! loads one; every example and bench builds one programmatically.
+//! (The offline build environment has no serde/toml — config files are
+//! JSON via the in-tree parser, `util::json`.)
+
+mod scout;
+mod validate;
+
+pub use scout::{RecallPolicy, ScoutConfig};
+
+use crate::sim::timing::DeviceModel;
+use crate::util::Json;
+
+/// Scheduling method under test (the paper's four systems).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Vanilla dense attention, whole KV cache on the GPU.
+    FullKv,
+    /// Recall-based KV offloading with one-layer-ahead prefetch (InfiniGen).
+    Infinigen,
+    /// Co-attention: CPU computes all offloaded tokens in parallel (HGCA).
+    Hgca,
+    /// This paper.
+    Scout,
+}
+
+impl Method {
+    pub const ALL: [Method; 4] = [Method::FullKv, Method::Infinigen, Method::Hgca, Method::Scout];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::FullKv => "FullKV",
+            Method::Infinigen => "InfiniGen",
+            Method::Hgca => "HGCA",
+            Method::Scout => "ScoutAttention",
+        }
+    }
+}
+
+impl std::str::FromStr for Method {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "fullkv" | "full" => Ok(Method::FullKv),
+            "infinigen" => Ok(Method::Infinigen),
+            "hgca" => Ok(Method::Hgca),
+            "scout" | "scoutattention" => Ok(Method::Scout),
+            other => anyhow::bail!("unknown method {other:?}"),
+        }
+    }
+}
+
+/// Server / request-loop parameters.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// TCP listen address for `scout serve`.
+    pub listen: String,
+    /// Max requests admitted into one continuous batch.
+    pub max_batch: usize,
+    /// Queue capacity before admission pushes back.
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { listen: "127.0.0.1:7411".into(), max_batch: 64, queue_depth: 256 }
+    }
+}
+
+impl ServerConfig {
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        let mut c = Self::default();
+        if let Some(v) = j.get("listen") {
+            c.listen = v.as_str().unwrap_or(&c.listen).to_string();
+        }
+        if let Some(v) = j.get("max_batch") {
+            c.max_batch = v.as_usize().unwrap_or(c.max_batch);
+        }
+        if let Some(v) = j.get("queue_depth") {
+            c.queue_depth = v.as_usize().unwrap_or(c.queue_depth);
+        }
+        Ok(c)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("listen", Json::str(self.listen.clone())),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+        ])
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Artifact preset name (subdirectory of `artifacts_dir`).
+    pub preset: String,
+    /// Where `make artifacts` put the HLO text + manifests.
+    pub artifacts_dir: String,
+    /// Scheduling method (defaults to Scout).
+    pub method: Method,
+    /// RNG seed for weights + workloads.
+    pub seed: u64,
+    pub scout: ScoutConfig,
+    pub device: DeviceModel,
+    pub server: ServerConfig,
+}
+
+impl RunConfig {
+    /// Programmatic default against a preset.
+    pub fn for_preset(preset: &str) -> Self {
+        Self {
+            preset: preset.to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            method: Method::Scout,
+            seed: 0xC0FFEE,
+            scout: ScoutConfig::default(),
+            device: DeviceModel::default(),
+            server: ServerConfig::default(),
+        }
+    }
+
+    /// Load from a JSON file.
+    pub fn from_json_file(path: &str) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {path}: {e}"))?;
+        let cfg = Self::from_json(&Json::parse(&text)?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let mut c = Self::for_preset(&j.req_str("preset")?);
+        if let Some(v) = j.get("artifacts_dir") {
+            c.artifacts_dir = v.as_str().unwrap_or("artifacts").to_string();
+        }
+        if let Some(v) = j.get("method") {
+            c.method = v.as_str().unwrap_or("scout").parse()?;
+        }
+        if let Some(v) = j.get("seed") {
+            c.seed = v.as_u64().unwrap_or(c.seed);
+        }
+        if let Some(v) = j.get("scout") {
+            c.scout = ScoutConfig::from_json(v)?;
+        }
+        if let Some(v) = j.get("device") {
+            c.device = DeviceModel::from_json(v)?;
+        }
+        if let Some(v) = j.get("server") {
+            c.server = ServerConfig::from_json(v)?;
+        }
+        Ok(c)
+    }
+
+    /// Serialize (for `scout dump-config`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("preset", Json::str(self.preset.clone())),
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+            ("method", Json::str(self.method.label().to_lowercase())),
+            ("seed", Json::num(self.seed as f64)),
+            ("scout", self.scout.to_json()),
+            ("device", self.device.to_json()),
+            ("server", self.server.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!("scout".parse::<Method>().unwrap(), Method::Scout);
+        assert_eq!("FullKV".parse::<Method>().unwrap(), Method::FullKv);
+        assert!("bogus".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = RunConfig::for_preset("test-tiny");
+        cfg.scout.beta = 0.2;
+        cfg.device.n_layers = 12;
+        let text = cfg.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.preset, "test-tiny");
+        assert_eq!(back.method, Method::Scout);
+        assert!((back.scout.beta - 0.2).abs() < 1e-12);
+        assert_eq!(back.device.n_layers, 12);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg = RunConfig::from_json(&Json::parse("{\"preset\":\"p\"}").unwrap()).unwrap();
+        assert_eq!(cfg.method, Method::Scout);
+        assert!(cfg.scout.pin_sink);
+        assert_eq!(cfg.artifacts_dir, "artifacts");
+    }
+
+    #[test]
+    fn method_label_parse_roundtrip() {
+        for m in Method::ALL {
+            let parsed: Method = m.label().parse().unwrap();
+            assert_eq!(parsed, m);
+        }
+    }
+}

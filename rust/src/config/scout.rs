@@ -1,0 +1,154 @@
+//! ScoutAttention policy knobs (§3 of the paper).
+
+use crate::util::Json;
+
+/// How the asynchronous periodic recall (§3.4) chooses its intervals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RecallPolicy {
+    /// No recall (the "-PR" ablation arm in Fig. 12).
+    Disabled,
+    /// Fixed interval (decode steps) for every layer.
+    Fixed { interval: usize },
+    /// Per-layer intervals from offline profiling against the CPU-ratio
+    /// threshold beta (the paper's default; §3.4, Fig. 6b).
+    Profiled { max_interval: usize },
+}
+
+impl Default for RecallPolicy {
+    fn default() -> Self {
+        RecallPolicy::Profiled { max_interval: 32 }
+    }
+}
+
+impl RecallPolicy {
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        match j.req_str("mode")?.as_str() {
+            "disabled" => Ok(RecallPolicy::Disabled),
+            "fixed" => Ok(RecallPolicy::Fixed { interval: j.req_usize("interval")? }),
+            "profiled" => Ok(RecallPolicy::Profiled {
+                max_interval: j.get("max_interval").and_then(|v| v.as_usize()).unwrap_or(32),
+            }),
+            other => anyhow::bail!("unknown recall mode {other:?}"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            RecallPolicy::Disabled => Json::obj(vec![("mode", Json::str("disabled"))]),
+            RecallPolicy::Fixed { interval } => Json::obj(vec![
+                ("mode", Json::str("fixed")),
+                ("interval", Json::num(*interval as f64)),
+            ]),
+            RecallPolicy::Profiled { max_interval } => Json::obj(vec![
+                ("mode", Json::str("profiled")),
+                ("max_interval", Json::num(*max_interval as f64)),
+            ]),
+        }
+    }
+}
+
+/// All ScoutAttention scheduling knobs.
+#[derive(Debug, Clone)]
+pub struct ScoutConfig {
+    /// CPU-compute-ratio threshold beta used to derive per-layer recall
+    /// intervals (paper default 12%).
+    pub beta: f64,
+    /// Layer-ahead CPU pre-computation (Alg. 1). Disabling it degrades to
+    /// HGCA-style same-layer parallelism (the "-PC" ablation arm).
+    pub layer_ahead: bool,
+    /// Use the *predicted* query (W_Q^{i+1} X^i) for CPU-side selection
+    /// and attention. When false, the CPU waits for the real query
+    /// (ablation / accuracy oracle) — which also forbids layer-ahead.
+    pub predicted_query: bool,
+    /// Always keep block 0 resident (attention-sink pinning).
+    pub pin_sink: bool,
+    /// Always keep the newest `pin_recent` full blocks resident.
+    pub pin_recent: usize,
+    pub recall: RecallPolicy,
+    /// CPU worker threads (thread groups in the paper's IPEX worker).
+    pub cpu_threads: usize,
+}
+
+impl Default for ScoutConfig {
+    fn default() -> Self {
+        Self {
+            beta: 0.12,
+            layer_ahead: true,
+            predicted_query: true,
+            pin_sink: true,
+            pin_recent: 1,
+            recall: RecallPolicy::default(),
+            cpu_threads: 4,
+        }
+    }
+}
+
+impl ScoutConfig {
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let mut c = Self::default();
+        if let Some(v) = j.get("beta") {
+            c.beta = v.as_f64().unwrap_or(c.beta);
+        }
+        if let Some(v) = j.get("layer_ahead") {
+            c.layer_ahead = v.as_bool().unwrap_or(c.layer_ahead);
+        }
+        if let Some(v) = j.get("predicted_query") {
+            c.predicted_query = v.as_bool().unwrap_or(c.predicted_query);
+        }
+        if let Some(v) = j.get("pin_sink") {
+            c.pin_sink = v.as_bool().unwrap_or(c.pin_sink);
+        }
+        if let Some(v) = j.get("pin_recent") {
+            c.pin_recent = v.as_usize().unwrap_or(c.pin_recent);
+        }
+        if let Some(v) = j.get("recall") {
+            c.recall = RecallPolicy::from_json(v)?;
+        }
+        if let Some(v) = j.get("cpu_threads") {
+            c.cpu_threads = v.as_usize().unwrap_or(c.cpu_threads);
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("beta", Json::num(self.beta)),
+            ("layer_ahead", Json::Bool(self.layer_ahead)),
+            ("predicted_query", Json::Bool(self.predicted_query)),
+            ("pin_sink", Json::Bool(self.pin_sink)),
+            ("pin_recent", Json::num(self.pin_recent as f64)),
+            ("recall", self.recall.to_json()),
+            ("cpu_threads", Json::num(self.cpu_threads as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recall_policy_json() {
+        let p = RecallPolicy::from_json(
+            &Json::parse("{\"mode\":\"fixed\",\"interval\":8}").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(p, RecallPolicy::Fixed { interval: 8 });
+        let d = RecallPolicy::from_json(&Json::parse("{\"mode\":\"disabled\"}").unwrap()).unwrap();
+        assert_eq!(d, RecallPolicy::Disabled);
+        for p in [
+            RecallPolicy::Disabled,
+            RecallPolicy::Fixed { interval: 3 },
+            RecallPolicy::Profiled { max_interval: 16 },
+        ] {
+            assert_eq!(RecallPolicy::from_json(&p.to_json()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ScoutConfig::default();
+        assert!((c.beta - 0.12).abs() < 1e-12);
+        assert!(c.layer_ahead && c.predicted_query);
+    }
+}

@@ -1,0 +1,47 @@
+//! Cross-field configuration validation.
+
+use super::RunConfig;
+
+impl RunConfig {
+    /// Check invariants that span sections; called on every TOML load and
+    /// by the CLI before a run starts.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.preset.is_empty(), "preset must be set");
+        anyhow::ensure!(
+            self.scout.beta > 0.0 && self.scout.beta < 1.0,
+            "beta must be in (0,1), got {}",
+            self.scout.beta
+        );
+        anyhow::ensure!(self.scout.cpu_threads >= 1, "cpu_threads >= 1");
+        if let super::RecallPolicy::Fixed { interval } = self.scout.recall {
+            anyhow::ensure!(interval >= 1, "recall interval >= 1");
+        }
+        anyhow::ensure!(self.server.max_batch >= 1, "max_batch >= 1");
+        self.device.validate()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{RecallPolicy, RunConfig};
+
+    #[test]
+    fn default_config_validates() {
+        RunConfig::for_preset("x").validate().unwrap();
+    }
+
+    #[test]
+    fn bad_beta_rejected() {
+        let mut c = RunConfig::for_preset("x");
+        c.scout.beta = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn zero_recall_interval_rejected() {
+        let mut c = RunConfig::for_preset("x");
+        c.scout.recall = RecallPolicy::Fixed { interval: 0 };
+        assert!(c.validate().is_err());
+    }
+}

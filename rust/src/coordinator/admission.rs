@@ -1,0 +1,97 @@
+//! Admission path: prefill an accepted request and initialize its decode
+//! state. Shared by Scout and every baseline (the paper evaluates decode
+//! instances of a PD-disaggregated deployment; prefill runs once on
+//! admission, standing in for the disaggregated prefill cluster's KV
+//! handoff).
+
+use crate::engines::{GpuEngine, NativeEngine};
+use crate::sparse::{score_blocks_native, select_topk};
+use crate::tensor::Tensor;
+
+use super::batch::{Batch, SeqState};
+use super::request::RequestSpec;
+
+/// Pinned blocks policy (sink + recent), shared across schedulers.
+pub fn pins(pin_sink: bool, pin_recent: usize, full_blocks: usize) -> Vec<usize> {
+    let mut pins = Vec::new();
+    if pin_sink && full_blocks > 0 {
+        pins.push(0);
+    }
+    for r in 0..pin_recent {
+        if full_blocks > r {
+            let b = full_blocks - 1 - r;
+            if !pins.contains(&b) {
+                pins.push(b);
+            }
+        }
+    }
+    pins
+}
+
+/// Prefill `req` through the fused prefill artifact, load the KV cache,
+/// initialize per-layer resident sets from digest scores against the
+/// last hidden state (the blocks "identified after the prefill phase"),
+/// and activate the sequence.
+pub fn prefill_request(
+    gpu: &GpuEngine,
+    native: &NativeEngine,
+    batch: &mut Batch,
+    req: &RequestSpec,
+    pin_sink: bool,
+    pin_recent: usize,
+    recall_countdowns: Vec<usize>,
+) -> crate::Result<()> {
+    let spec = gpu.spec.clone();
+    let s_max = spec.max_seq;
+    anyhow::ensure!(!req.prompt.is_empty(), "empty prompt (request {})", req.id);
+    let n = req.prompt.len().min(s_max - 1);
+    let mut seq = SeqState::new(&spec, req, batch.budget_blocks);
+    seq.recall_in = recall_countdowns;
+
+    let mut x_seq = Tensor::zeros(&[s_max, spec.d_model]);
+    for (t, &tok) in req.prompt.iter().take(n).enumerate() {
+        x_seq.rows_mut(t, 1).copy_from_slice(gpu.weights.embed_token(tok));
+    }
+    let (k, v, h_last, _logits) = gpu.prefill(&x_seq, n)?;
+
+    {
+        let mut cache = seq.cache.write().unwrap();
+        for layer in 0..spec.n_layers {
+            cache.load_prefill_layer(layer, k.rows(layer, 1), v.rows(layer, 1), n);
+        }
+        cache.finish_prefill(n);
+    }
+
+    let cache_arc = seq.cache.clone();
+    let cache = cache_arc.read().unwrap();
+    let full = cache.full_blocks();
+    let (hq, hkv, d) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
+    for layer in 0..spec.n_layers {
+        let q = native.qpred(h_last.data(), layer, (n as i64) - 1);
+        let scores = score_blocks_native(&q, &cache.digests, layer, full, hq, hkv, d);
+        let ranked = select_topk(
+            &scores,
+            seq.resident[layer].capacity(),
+            &pins(pin_sink, pin_recent, full),
+        );
+        seq.resident[layer].refresh(&ranked.blocks);
+        seq.scores_mut(layer).clone_from(&scores);
+    }
+    drop(cache);
+    batch.activate(seq);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pins_policy() {
+        assert_eq!(pins(true, 1, 5), vec![0, 4]);
+        assert_eq!(pins(true, 2, 5), vec![0, 4, 3]);
+        assert_eq!(pins(false, 1, 1), vec![0]); // recent == block 0
+        assert_eq!(pins(true, 1, 0), Vec::<usize>::new());
+        assert_eq!(pins(true, 3, 2), vec![0, 1]);
+    }
+}

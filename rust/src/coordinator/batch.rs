@@ -1,0 +1,188 @@
+//! Continuous batching over the artifact batch tile.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use std::sync::RwLock;
+
+use crate::kvcache::{ResidentSet, SeqKvCache};
+use crate::model::ModelSpec;
+
+use super::request::{RequestOutput, RequestSpec};
+
+/// Per-sequence decode state.
+pub struct SeqState {
+    pub id: u64,
+    /// Shared so the CPU worker pool can read complete blocks while the
+    /// leader thread drives the GPU engine (complete blocks are immutable;
+    /// appends only touch the tail).
+    pub cache: Arc<RwLock<SeqKvCache>>,
+    /// GPU resident set per layer (established after prefill, refreshed
+    /// by periodic recall only).
+    pub resident: Vec<ResidentSet>,
+    /// Selected top-k per layer for the CURRENT step (filled one layer
+    /// ahead by the scout pipeline; consumed by GPU attention).
+    pub selected: Vec<Vec<usize>>,
+    /// Latest digest scores per layer (for recall re-ranking; refreshed
+    /// at every selection).
+    scores: Vec<Vec<f32>>,
+    /// Steps until the next recall, per layer (§3.4 countdowns).
+    pub recall_in: Vec<usize>,
+    /// Current hidden-input token (last generated or last prompt token).
+    pub last_tok: u32,
+    pub generated: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub t_start: std::time::Instant,
+}
+
+impl SeqState {
+    pub fn new(spec: &ModelSpec, req: &RequestSpec, budget_blocks: usize) -> Self {
+        let nb = spec.n_blocks();
+        Self {
+            id: req.id,
+            cache: Arc::new(RwLock::new(SeqKvCache::new(spec))),
+            resident: (0..spec.n_layers).map(|_| ResidentSet::new(nb, budget_blocks)).collect(),
+            selected: vec![Vec::new(); spec.n_layers],
+            scores: vec![Vec::new(); spec.n_layers],
+            recall_in: vec![usize::MAX; spec.n_layers],
+            last_tok: *req.prompt.last().unwrap_or(&0),
+            generated: Vec::new(),
+            max_new_tokens: req.max_new_tokens,
+            t_start: std::time::Instant::now(),
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.max_new_tokens
+            || self.cache.read().unwrap().len() >= self.cache.read().unwrap().spec().max_seq
+    }
+
+    pub fn pos(&self) -> i32 {
+        self.cache.read().unwrap().len() as i32
+    }
+
+    /// Latest digest scores for a layer (empty before first selection).
+    pub fn scores(&self, layer: usize) -> &[f32] {
+        &self.scores[layer]
+    }
+
+    pub fn scores_mut(&mut self, layer: usize) -> &mut Vec<f32> {
+        &mut self.scores[layer]
+    }
+
+    pub fn finish(&self) -> RequestOutput {
+        RequestOutput {
+            id: self.id,
+            generated: self.generated.clone(),
+            steps: self.generated.len(),
+            decode_wall_us: self.t_start.elapsed().as_micros() as u64,
+        }
+    }
+}
+
+/// A continuous batch: live sequences + waiting queue.
+///
+/// The schedulers operate on `seqs` in tiles of the artifact batch size;
+/// `admit`/`reap` implement continuous batching (finished sequences leave,
+/// queued requests join between steps — the paper evaluates decode
+/// instances of a PD-disaggregated deployment, so prefill happens on
+/// admission).
+pub struct Batch {
+    pub spec: ModelSpec,
+    pub budget_blocks: usize,
+    pub max_live: usize,
+    pub seqs: Vec<SeqState>,
+    pub queue: VecDeque<RequestSpec>,
+    pub finished: Vec<RequestOutput>,
+}
+
+impl Batch {
+    pub fn new(spec: ModelSpec, budget_blocks: usize, max_live: usize) -> Self {
+        Self { spec, budget_blocks, max_live, seqs: Vec::new(), queue: VecDeque::new(), finished: Vec::new() }
+    }
+
+    pub fn enqueue(&mut self, req: RequestSpec) {
+        self.queue.push_back(req);
+    }
+
+    /// Requests that can be admitted right now (up to `max_live`).
+    /// Returns the admitted specs — the caller must prefill them and then
+    /// push the resulting `SeqState` via `activate`.
+    pub fn admissible(&mut self) -> Vec<RequestSpec> {
+        let mut out = Vec::new();
+        while self.seqs.len() + out.len() < self.max_live {
+            match self.queue.pop_front() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+
+    pub fn activate(&mut self, seq: SeqState) {
+        assert!(self.seqs.len() < self.max_live);
+        self.seqs.push(seq);
+    }
+
+    /// Remove finished sequences, recording their outputs.
+    pub fn reap(&mut self) {
+        let mut i = 0;
+        while i < self.seqs.len() {
+            if self.seqs[i].done() {
+                let s = self.seqs.swap_remove(i);
+                self.finished.push(s.finish());
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    pub fn live(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.seqs.is_empty() && self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::PROXY_MODELS;
+
+    fn spec() -> ModelSpec {
+        let mut s = PROXY_MODELS[0].1();
+        s.n_layers = 2;
+        s.max_seq = 64;
+        s.block_size = 8;
+        s
+    }
+
+    #[test]
+    fn admission_respects_capacity() {
+        let mut b = Batch::new(spec(), 4, 2);
+        for i in 0..5 {
+            b.enqueue(RequestSpec::new(i, vec![1, 2], 4));
+        }
+        let adm = b.admissible();
+        assert_eq!(adm.len(), 2);
+        for r in &adm {
+            b.activate(SeqState::new(&b.spec.clone(), r, 4));
+        }
+        assert!(b.admissible().is_empty());
+        assert_eq!(b.queue.len(), 3);
+    }
+
+    #[test]
+    fn reap_collects_finished() {
+        let mut b = Batch::new(spec(), 4, 4);
+        let r = RequestSpec::new(1, vec![1], 0); // 0 new tokens -> done
+        let s = SeqState::new(&b.spec.clone(), &r, 4);
+        b.activate(s);
+        b.reap();
+        assert_eq!(b.live(), 0);
+        assert_eq!(b.finished.len(), 1);
+        assert_eq!(b.finished[0].id, 1);
+    }
+}

@@ -1,0 +1,179 @@
+//! Asynchronous CPU attention worker pool.
+//!
+//! The paper's CPU side (§3.2/§4): an IPEX-based worker whose threads are
+//! partitioned into groups, one group per sequence. Here each worker
+//! thread runs the native engine's near-data block attention over the
+//! DRAM pool. Jobs are issued one layer ahead of the GPU (Alg. 1 line 7
+//! `spawn CPUATTN`) and collected when the GPU reaches that layer —
+//! the pool is the mechanism that makes the pre-computation *async*.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::engines::{NativeEngine, Partial};
+use crate::kvcache::SeqKvCache;
+
+/// Key identifying a pre-computation job: (sequence slot, layer).
+pub type JobKey = (usize, usize);
+
+struct Job {
+    key: JobKey,
+    /// Predicted (or real, if `predicted_query=false`) query `[Hq*D]`.
+    q: Vec<f32>,
+    cache: Arc<RwLock<SeqKvCache>>,
+    blocks: Vec<usize>,
+}
+
+/// Completed job.
+pub struct JobResult {
+    pub key: JobKey,
+    pub partial: Partial,
+    pub blocks: usize,
+}
+
+/// Fixed pool of worker threads doing block attention.
+///
+/// std::mpsc receivers are single-consumer, so the job queue is shared
+/// behind a mutex (the in-tree stand-in for a crossbeam MPMC channel).
+pub struct CpuWorkerPool {
+    tx: SyncSender<Job>,
+    rx_done: Receiver<JobResult>,
+    outstanding: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl CpuWorkerPool {
+    pub fn new(engine: Arc<NativeEngine>, threads: usize) -> Self {
+        let (tx, rx) = sync_channel::<Job>(1024);
+        let rx = Arc::new(Mutex::new(rx));
+        let (tx_done, rx_done) = sync_channel::<JobResult>(1024);
+        let mut handles = Vec::new();
+        for _ in 0..threads.max(1) {
+            let rx = rx.clone();
+            let tx_done = tx_done.clone();
+            let engine = engine.clone();
+            handles.push(std::thread::spawn(move || {
+                loop {
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(j) => j,
+                        Err(_) => return,
+                    };
+                    let cache = job.cache.read().unwrap();
+                    let partial = engine.attend_blocks(&job.q, &cache, job.key.1, &job.blocks);
+                    drop(cache);
+                    let _ = tx_done.send(JobResult {
+                        key: job.key,
+                        partial,
+                        blocks: job.blocks.len(),
+                    });
+                }
+            }));
+        }
+        Self { tx, rx_done, outstanding: 0, handles }
+    }
+
+    /// Enqueue one pre-computation job (Alg. 1 line 7).
+    pub fn spawn(
+        &mut self,
+        key: JobKey,
+        q: Vec<f32>,
+        cache: Arc<RwLock<SeqKvCache>>,
+        blocks: Vec<usize>,
+    ) {
+        if blocks.is_empty() {
+            return; // merge identity — nothing to do
+        }
+        self.outstanding += 1;
+        self.tx
+            .send(Job { key, q, cache, blocks })
+            .expect("cpu worker pool hung up");
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    /// Collect all results for the given layer, blocking until every
+    /// outstanding job of that layer has arrived. Results for other
+    /// layers are buffered by the caller via the returned Vec (jobs are
+    /// only ever spawned one layer ahead, so out-of-order keys indicate a
+    /// scheduler bug and panic).
+    pub fn collect_layer(&mut self, layer: usize, expected: usize) -> Vec<JobResult> {
+        let mut out = Vec::with_capacity(expected);
+        while out.len() < expected {
+            let r = self.rx_done.recv().expect("cpu worker pool hung up");
+            assert_eq!(r.key.1, layer, "out-of-order CPU result (layer {} while collecting {layer})", r.key.1);
+            self.outstanding -= 1;
+            out.push(r);
+        }
+        out
+    }
+}
+
+impl Drop for CpuWorkerPool {
+    fn drop(&mut self) {
+        // Close the job channel so workers exit, then join.
+        let (tx, _rx) = sync_channel::<Job>(1);
+        let old = std::mem::replace(&mut self.tx, tx);
+        drop(old);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::PROXY_MODELS;
+
+    #[test]
+    fn pool_computes_same_as_inline() {
+        let mut spec = PROXY_MODELS[0].1();
+        spec.n_layers = 2;
+        spec.d_model = 64;
+        spec.n_q_heads = 4;
+        spec.n_kv_heads = 2;
+        spec.head_dim = 16;
+        spec.d_ff = 64;
+        spec.vocab = 32;
+        spec.max_seq = 64;
+        spec.block_size = 8;
+        let engine = Arc::new(NativeEngine::from_seed(&spec, 3));
+        let cache = Arc::new(RwLock::new(SeqKvCache::new(&spec)));
+        {
+            let mut c = cache.write().unwrap();
+            let w = spec.n_kv_heads * spec.head_dim;
+            for t in 0..32 {
+                for l in 0..spec.n_layers {
+                    let k: Vec<f32> = (0..w).map(|i| ((t + l + i) as f32).sin()).collect();
+                    let v: Vec<f32> = (0..w).map(|i| ((t * 2 + l + i) as f32).cos()).collect();
+                    c.append_layer(l, &k, &v);
+                }
+                c.advance();
+            }
+        }
+        let q: Vec<f32> = (0..spec.n_q_heads * spec.head_dim).map(|i| (i as f32 * 0.2).sin()).collect();
+        let mut pool = CpuWorkerPool::new(engine.clone(), 2);
+        pool.spawn((0, 1), q.clone(), cache.clone(), vec![0, 2]);
+        pool.spawn((1, 1), q.clone(), cache.clone(), vec![1, 3]);
+        let mut results = pool.collect_layer(1, 2);
+        results.sort_by_key(|r| r.key.0);
+        let inline0 = engine.attend_blocks(&q, &cache.read().unwrap(), 1, &[0, 2]);
+        let inline1 = engine.attend_blocks(&q, &cache.read().unwrap(), 1, &[1, 3]);
+        assert_eq!(results[0].partial.finalize(), inline0.finalize());
+        assert_eq!(results[1].partial.finalize(), inline1.finalize());
+    }
+
+    #[test]
+    fn empty_block_list_is_not_spawned() {
+        let spec = PROXY_MODELS[0].1();
+        let engine = Arc::new(NativeEngine::from_seed(&spec, 1));
+        let cache = Arc::new(RwLock::new(SeqKvCache::new(&spec)));
+        let mut pool = CpuWorkerPool::new(engine, 1);
+        pool.spawn((0, 0), vec![], cache, vec![]);
+        assert_eq!(pool.outstanding(), 0);
+        let r = pool.collect_layer(0, 0);
+        assert!(r.is_empty());
+    }
+}

@@ -1,0 +1,87 @@
+//! Shared gather/assembly helpers used by Scout and the baseline
+//! schedulers: materializing selected blocks and the tail window into the
+//! artifact operand layout.
+
+use crate::engines::GpuEngine;
+use crate::tensor::Tensor;
+
+use super::batch::SeqState;
+
+/// Gather each sequence's block list (`lists[s]`, up to `kb` entries)
+/// into `sparse_attn` operands `[B, kb, bs, Hkv, D]` + mask `[B, kb, bs]`.
+pub fn gather_block_lists(
+    gpu: &GpuEngine,
+    seqs: &[SeqState],
+    layer: usize,
+    lists: impl Fn(usize, &SeqState) -> Vec<usize>,
+) -> (Tensor, Tensor, Tensor) {
+    let spec = &gpu.spec;
+    let (b, kb, bs) = (spec.batch, spec.k_blocks, spec.block_size);
+    let w = spec.n_kv_heads * spec.head_dim;
+    let blk_w = bs * w;
+    let mut k = Tensor::zeros(&[b, kb, bs, spec.n_kv_heads, spec.head_dim]);
+    let mut v = Tensor::zeros(&[b, kb, bs, spec.n_kv_heads, spec.head_dim]);
+    let mut m = Tensor::zeros(&[b, kb, bs]);
+    for (s, seq) in seqs.iter().enumerate() {
+        let blocks = lists(s, seq);
+        let cache = seq.cache.read().unwrap();
+        cache.gather_blocks(
+            layer,
+            &blocks,
+            kb,
+            &mut k.data_mut()[s * kb * blk_w..(s + 1) * kb * blk_w],
+            &mut v.data_mut()[s * kb * blk_w..(s + 1) * kb * blk_w],
+            &mut m.data_mut()[s * kb * bs..(s + 1) * kb * bs],
+        );
+    }
+    (k, v, m)
+}
+
+/// Gather tail window + current token into `tail_attn` operands.
+pub fn gather_tail(
+    gpu: &GpuEngine,
+    seqs: &[SeqState],
+    layer: usize,
+    k_new: &Tensor,
+    v_new: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let spec = &gpu.spec;
+    let (b, bs) = (spec.batch, spec.block_size);
+    let w = spec.n_kv_heads * spec.head_dim;
+    let mut k = Tensor::zeros(&[b, 1, bs, spec.n_kv_heads, spec.head_dim]);
+    let mut v = Tensor::zeros(&[b, 1, bs, spec.n_kv_heads, spec.head_dim]);
+    let mut m = Tensor::zeros(&[b, 1, bs]);
+    for (s, seq) in seqs.iter().enumerate() {
+        let cache = seq.cache.read().unwrap();
+        let ks = &mut k.data_mut()[s * bs * w..(s + 1) * bs * w];
+        let vs = &mut v.data_mut()[s * bs * w..(s + 1) * bs * w];
+        let ms = &mut m.data_mut()[s * bs..(s + 1) * bs];
+        cache.gather_tail(layer, ks, vs, ms);
+        let t = cache.tail_len();
+        ks[t * w..(t + 1) * w].copy_from_slice(&k_new.rows(s, 1)[..w]);
+        vs[t * w..(t + 1) * w].copy_from_slice(&v_new.rows(s, 1)[..w]);
+        ms[t] = 1.0;
+    }
+    (k, v, m)
+}
+
+/// Greedy-sample + append the step's K/V into every live sequence.
+pub fn sample_and_append(
+    seqs: &mut [SeqState],
+    logits: &Tensor,
+    k_news: &[Tensor],
+    v_news: &[Tensor],
+    kv_width: usize,
+) {
+    for (s, seq) in seqs.iter_mut().enumerate() {
+        let tok = super::scout::argmax(logits.rows(s, 1)) as u32;
+        let mut cache = seq.cache.write().unwrap();
+        for (i, (kn, vn)) in k_news.iter().zip(v_news).enumerate() {
+            cache.append_layer(i, &kn.rows(s, 1)[..kv_width], &vn.rows(s, 1)[..kv_width]);
+        }
+        cache.advance();
+        drop(cache);
+        seq.generated.push(tok);
+        seq.last_tok = tok;
+    }
+}

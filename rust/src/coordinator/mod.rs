@@ -1,0 +1,46 @@
+//! The ScoutAttention coordinator — the paper's system contribution.
+//!
+//! Structure (one module per §3 mechanism):
+//! - [`request`]  — request/response types and per-sequence decode state
+//! - [`batch`]    — continuous batcher over the artifact batch tile
+//! - [`cpu_worker`] — the asynchronous CPU attention worker pool
+//!   (thread-group model of §4, one group per sequence)
+//! - [`recall`]   — asynchronous periodic KV recall: per-layer interval
+//!   profiling against beta + countdowns (§3.4)
+//! - [`scout`]    — the per-step, per-layer schedule of Algorithm 1:
+//!   predicted-query selection one layer ahead, GPU/CPU partition,
+//!   LSE merge, recall bookkeeping
+//! - [`stats`]    — per-step schedule records consumed by the timing
+//!   plane (`sim`) and the analytics benches
+//!
+//! Baseline schedulers (FullKV / InfiniGen / HGCA) share the same state
+//! and stats types and live in [`crate::baselines`].
+
+pub mod admission;
+pub mod batch;
+pub mod cpu_worker;
+pub mod gather;
+pub mod recall;
+pub mod request;
+pub mod scout;
+pub mod stats;
+
+pub use batch::{Batch, SeqState};
+pub use cpu_worker::CpuWorkerPool;
+pub use recall::RecallController;
+pub use request::{RequestOutput, RequestSpec};
+pub use scout::ScoutScheduler;
+pub use stats::{LayerStats, StepStats};
+
+/// A decode scheduler: admits requests and advances a batch by one token.
+pub trait DecodeScheduler {
+    /// Run one decode step over every live sequence in the batch,
+    /// appending one generated token per sequence.
+    fn step(&mut self, batch: &mut Batch) -> crate::Result<StepStats>;
+
+    /// Prefill + activate one admitted request (PD-disaggregation stand-in).
+    fn admit(&mut self, batch: &mut Batch, req: &RequestSpec) -> crate::Result<()>;
+
+    /// Human-readable method name (for reports).
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,125 @@
+//! Asynchronous periodic KV cache recall (§3.4).
+//!
+//! Two halves:
+//! 1. **Offline interval profiling** — run a no-recall pass, record the
+//!    per-layer CPU-compute-ratio series, and derive per-layer intervals
+//!    as "max steps that keep the ratio below beta" (paper default 12%).
+//! 2. **Online controller** — per-(sequence, layer) countdowns; when one
+//!    expires, re-rank blocks by current digest scores and refresh the
+//!    resident set. The refresh I/O is *asynchronous*: blocks are not
+//!    needed until the same layer of the NEXT decode step, so the PCIe
+//!    window is a whole step (>20 ms in the paper's testbed). The
+//!    numerics plane applies the refresh immediately (the data is the
+//!    same); the timing plane prices the transfer into the off-critical
+//!    path window and only stalls if it would not fit.
+
+use crate::config::{RecallPolicy, ScoutConfig};
+use crate::sparse::locality::CpuRatioSeries;
+
+/// Per-layer recall intervals (in decode steps).
+#[derive(Debug, Clone)]
+pub struct RecallController {
+    pub intervals: Vec<usize>,
+}
+
+impl RecallController {
+    /// Build from config; `profile` supplies the measured no-recall CPU
+    /// ratio series when the policy is `Profiled`.
+    pub fn new(
+        cfg: &ScoutConfig,
+        n_layers: usize,
+        profile: Option<&CpuRatioSeries>,
+    ) -> Self {
+        let intervals = match (&cfg.recall, profile) {
+            (RecallPolicy::Disabled, _) => vec![usize::MAX; n_layers],
+            (RecallPolicy::Fixed { interval }, _) => vec![*interval; n_layers],
+            (RecallPolicy::Profiled { max_interval }, Some(p)) => {
+                let iv = p.intervals(cfg.beta, *max_interval);
+                assert_eq!(iv.len(), n_layers, "profile layer count mismatch");
+                iv
+            }
+            // No profile available yet (e.g. first run): fall back to a
+            // conservative fixed interval; the serve loop re-profiles.
+            (RecallPolicy::Profiled { max_interval }, None) => {
+                vec![(*max_interval).min(8).max(1); n_layers]
+            }
+        };
+        Self { intervals }
+    }
+
+    /// Mean interval across layers (the paper reports 8.7).
+    pub fn mean_interval(&self) -> f64 {
+        let finite: Vec<f64> = self
+            .intervals
+            .iter()
+            .filter(|&&i| i != usize::MAX)
+            .map(|&i| i as f64)
+            .collect();
+        if finite.is_empty() {
+            f64::INFINITY
+        } else {
+            finite.iter().sum::<f64>() / finite.len() as f64
+        }
+    }
+
+    pub fn disabled(&self) -> bool {
+        self.intervals.iter().all(|&i| i == usize::MAX)
+    }
+
+    /// Initialize a fresh sequence's countdowns.
+    pub fn init_countdowns(&self) -> Vec<usize> {
+        self.intervals.clone()
+    }
+
+    /// Tick one layer's countdown; returns true when a recall fires (and
+    /// resets the countdown).
+    pub fn tick(&self, countdowns: &mut [usize], layer: usize) -> bool {
+        if self.intervals[layer] == usize::MAX {
+            return false;
+        }
+        if countdowns[layer] <= 1 {
+            countdowns[layer] = self.intervals[layer];
+            true
+        } else {
+            countdowns[layer] -= 1;
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScoutConfig;
+
+    #[test]
+    fn fixed_policy_ticks() {
+        let mut cfg = ScoutConfig::default();
+        cfg.recall = RecallPolicy::Fixed { interval: 3 };
+        let rc = RecallController::new(&cfg, 2, None);
+        let mut cd = rc.init_countdowns();
+        let fires: Vec<bool> = (0..7).map(|_| rc.tick(&mut cd, 0)).collect();
+        assert_eq!(fires, vec![false, false, true, false, false, true, false]);
+    }
+
+    #[test]
+    fn disabled_never_fires() {
+        let mut cfg = ScoutConfig::default();
+        cfg.recall = RecallPolicy::Disabled;
+        let rc = RecallController::new(&cfg, 3, None);
+        assert!(rc.disabled());
+        let mut cd = rc.init_countdowns();
+        assert!(!(0..100).any(|_| rc.tick(&mut cd, 1)));
+    }
+
+    #[test]
+    fn profiled_intervals_from_series() {
+        let cfg = ScoutConfig::default(); // beta = 0.12, Profiled{32}
+        let profile = CpuRatioSeries {
+            series: vec![vec![0.05, 0.1, 0.13, 0.2], vec![0.01; 50]],
+        };
+        let rc = RecallController::new(&cfg, 2, Some(&profile));
+        assert_eq!(rc.intervals, vec![2, 32]);
+        assert!((rc.mean_interval() - 17.0).abs() < 1e-9);
+    }
+}

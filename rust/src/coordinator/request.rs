@@ -1,0 +1,46 @@
+//! Request/response types.
+
+
+/// An inference request as admitted by the router.
+#[derive(Debug, Clone)]
+pub struct RequestSpec {
+    pub id: u64,
+    /// Prompt token ids (already tokenized — tokenization is out of scope
+    /// for the synthetic-weights reproduction).
+    pub prompt: Vec<u32>,
+    /// Tokens to generate.
+    pub max_new_tokens: usize,
+    /// Arrival time in microseconds since run start (workload-generator
+    /// clock; used by the server queue and the timing plane).
+    pub arrival_us: u64,
+}
+
+impl RequestSpec {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Self { id, prompt, max_new_tokens, arrival_us: 0 }
+    }
+}
+
+/// Completed request.
+#[derive(Debug, Clone)]
+pub struct RequestOutput {
+    pub id: u64,
+    pub generated: Vec<u32>,
+    /// Decode steps spent (== generated.len() unless evicted).
+    pub steps: usize,
+    /// Wall-clock decode time, us (numerics plane).
+    pub decode_wall_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructor_defaults() {
+        let r = RequestSpec::new(7, vec![1, 2, 3], 16);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.arrival_us, 0);
+        assert_eq!(r.max_new_tokens, 16);
+    }
+}

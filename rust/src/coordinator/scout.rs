@@ -1,0 +1,262 @@
+//! The ScoutAttention scheduler — Algorithm 1 + §3.2 + §3.4, end to end.
+//!
+//! Per decode step, per chunk of the batch tile:
+//!
+//! ```text
+//! spawn CPU jobs for layer 0            (query exact: x IS layer 0's input)
+//! for layer i in 0..L:
+//!     if i+1 < L and layer_ahead:
+//!         Q_pred^{i+1} = qpred(x, i+1)              # Alg. 1 line 4
+//!         select top-k blocks for i+1 (digest scores)        # line 5
+//!         partition vs resident set -> B_cpu^{i+1}           # line 6
+//!         spawn CPUATTN(B_cpu^{i+1})                         # line 7
+//!     (q, k_new, v_new) = pre_attn(x, i)                     # line 9
+//!     A_gpu = sparse_attn(q, resident ∩ selected) + tail     # line 10
+//!     A_cpu = collect layer-i results (spawned at i-1)       # line 11
+//!     A = merge(A_gpu, A_cpu)                                # line 12
+//!     x = post_attn(x, A, i)
+//!     periodic-recall tick: refresh resident set (async I/O) # §3.4
+//! logits = lm_head(x); greedy sample; append K/V
+//! ```
+//!
+//! The scheduler runs the *numerics plane*; every scheduling decision is
+//! recorded in [`StepStats`] for the timing plane to price.
+
+use std::sync::Arc;
+
+use crate::config::ScoutConfig;
+use crate::engines::gpu::BatchPartial;
+use crate::engines::{GpuEngine, NativeEngine};
+use crate::sparse::{score_blocks_native, select_topk};
+use crate::tensor::Tensor;
+
+use super::batch::{Batch, SeqState};
+use super::cpu_worker::CpuWorkerPool;
+use super::recall::RecallController;
+use super::stats::StepStats;
+use super::DecodeScheduler;
+
+pub struct ScoutScheduler {
+    pub gpu: Arc<GpuEngine>,
+    pub native: Arc<NativeEngine>,
+    pub cfg: ScoutConfig,
+    pub recall: RecallController,
+    pool: CpuWorkerPool,
+}
+
+impl ScoutScheduler {
+    pub fn new(
+        gpu: Arc<GpuEngine>,
+        native: Arc<NativeEngine>,
+        cfg: ScoutConfig,
+        recall: RecallController,
+    ) -> Self {
+        let pool = CpuWorkerPool::new(native.clone(), cfg.cpu_threads);
+        Self { gpu, native, cfg, recall, pool }
+    }
+
+    /// Whether CPU pre-computation runs one layer ahead. Requires the
+    /// predicted query: a real-query CPU pass (`predicted_query=false`)
+    /// can only start once the layer's own QKV exists, i.e. same-layer —
+    /// exactly the dependency the paper breaks with Q_pred.
+    fn pipelined(&self) -> bool {
+        self.cfg.layer_ahead && self.cfg.predicted_query
+    }
+
+    /// Pinned blocks for a sequence: attention sink + most recent
+    /// complete blocks.
+    fn pins(&self, full_blocks: usize) -> Vec<usize> {
+        super::admission::pins(self.cfg.pin_sink, self.cfg.pin_recent, full_blocks)
+    }
+
+    /// Score + select + partition + spawn CPU work for `layer`, using
+    /// query rows from `q` (`[B, Hq*D]` layout). Returns per-seq
+    /// (gpu_blocks, cpu_blocks) and stores selection/scores on the seq.
+    #[allow(clippy::too_many_arguments)]
+    fn select_and_spawn(
+        &mut self,
+        seqs: &mut [SeqState],
+        q: &Tensor,
+        layer: usize,
+        stats: &mut StepStats,
+    ) -> usize {
+        let spec = &self.gpu.spec;
+        let (hq, hkv, d) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
+        let mut spawned = 0;
+        for (s, seq) in seqs.iter_mut().enumerate() {
+            let cache = seq.cache.read().unwrap();
+            let full = cache.full_blocks();
+            let qrow = &q.rows(s, 1)[..hq * d];
+            let scores =
+                score_blocks_native(qrow, &cache.digests, layer, full, hq, hkv, d);
+            drop(cache);
+            let sel = select_topk(&scores, spec.k_blocks, &self.pins(full));
+            let (gpu_blocks, cpu_blocks) = seq.resident[layer].partition(&sel.blocks);
+            stats.layers[layer].gpu_blocks += gpu_blocks.len();
+            stats.layers[layer].cpu_blocks += cpu_blocks.len();
+            stats.layers[layer].selected_blocks += sel.blocks.len();
+            seq.selected[layer] = gpu_blocks;
+            seq.scores_mut(layer).clone_from(&sel.scores);
+            if !cpu_blocks.is_empty() {
+                self.pool.spawn((s, layer), qrow.to_vec(), seq.cache.clone(), cpu_blocks);
+                spawned += 1;
+            }
+        }
+        spawned
+    }
+
+    /// One decode step over a chunk of at most `spec.batch` sequences.
+    fn step_chunk(&mut self, seqs: &mut [SeqState], stats: &mut StepStats) -> crate::Result<()> {
+        let spec = self.gpu.spec.clone();
+        let (b_tile, l_layers) = (spec.batch, spec.n_layers);
+        let n = seqs.len();
+        assert!(n <= b_tile && n > 0);
+
+        // Embedded inputs + positions (padded rows: tok 0, pos 0).
+        let toks: Vec<u32> = (0..b_tile)
+            .map(|s| if s < n { seqs[s].last_tok } else { 0 })
+            .collect();
+        let mut x = self.gpu.embed_tokens(&toks);
+        // zero pad rows so their activations stay benign
+        for s in n..b_tile {
+            x.rows_mut(s, 1).fill(0.0);
+        }
+        let pos: Vec<i32> = (0..b_tile).map(|s| if s < n { seqs[s].pos() } else { 0 }).collect();
+
+        // Layer-0 CPU work: x is layer 0's input, so qpred(x, 0) IS the
+        // real query — the step's pipeline starts with exact selection.
+        let pipelined = self.pipelined();
+        let mut expected: Vec<usize> = vec![0; l_layers];
+        if pipelined {
+            let q0 = self.gpu.qpred(&x, 0, &pos)?;
+            expected[0] = self.select_and_spawn(seqs, &q0, 0, stats);
+        }
+
+        let mut k_news: Vec<Tensor> = Vec::with_capacity(l_layers);
+        let mut v_news: Vec<Tensor> = Vec::with_capacity(l_layers);
+
+        for i in 0..l_layers {
+            // Alg. 1 lines 3-7: trigger next layer's CPU pre-computation
+            // from the *predicted* query (residual-stream similarity,
+            // Table 1).
+            if pipelined && i + 1 < l_layers {
+                let qp = self.gpu.qpred(&x, i + 1, &pos)?;
+                expected[i + 1] = self.select_and_spawn(seqs, &qp, i + 1, stats);
+            }
+
+            // line 9: real QKV for this layer.
+            let (q, k_new, v_new) = self.gpu.pre_attn(&x, i, &pos)?;
+
+            if !pipelined {
+                // Ablation arms: -PC (no layer-ahead) and/or real-query
+                // CPU attention. Both require the real query, which only
+                // exists *now* — selection/spawn happens at the same
+                // layer and is collected immediately below (no overlap;
+                // the timing plane prices the stall).
+                let q2 = q.clone().reshape(&[b_tile, spec.n_q_heads * spec.head_dim]);
+                expected[i] = self.select_and_spawn(seqs, &q2, i, stats);
+            }
+
+            // line 10: GPU-side attention over resident∩selected + tail.
+            let (ks, vs, ms) =
+                super::gather::gather_block_lists(&self.gpu, seqs, i, |_, seq| {
+                    seq.selected[i].clone()
+                });
+            let p_gpu = self.gpu.sparse_attn(&q, &ks, &vs, &ms)?;
+            let (kt, vt, mt) = super::gather::gather_tail(&self.gpu, seqs, i, &k_new, &v_new);
+            let p_tail = self.gpu.tail_attn(&q, &kt, &vt, &mt)?;
+            let mut merged = self.gpu.merge(&p_gpu, &p_tail)?;
+
+            // lines 11-12: fold in the CPU partial pre-computed one layer
+            // ahead (or just now in the -PC arm).
+            if expected[i] > 0 {
+                let results = self.pool.collect_layer(i, expected[i]);
+                let mut cpu_bp =
+                    BatchPartial::empty(b_tile, spec.n_q_heads, spec.head_dim);
+                for r in results {
+                    cpu_bp.set_row(r.key.0, &r.partial);
+                }
+                merged = self.gpu.merge(&merged, &cpu_bp)?;
+            }
+
+            x = self.gpu.post_attn(&x, &merged, i)?;
+            k_news.push(k_new);
+            v_news.push(v_new);
+
+            // §3.4: asynchronous periodic recall (refresh resident sets).
+            for seq in seqs.iter_mut() {
+                if self.recall.tick(&mut seq.recall_in, i) {
+                    let full = seq.cache.read().unwrap().full_blocks();
+                    let scores = seq.scores(i).to_vec();
+                    if scores.is_empty() {
+                        continue;
+                    }
+                    let cap = seq.resident[i].capacity();
+                    let ranked = select_topk(&scores, cap, &self.pins(full));
+                    let added = seq.resident[i].refresh(&ranked.blocks);
+                    stats.layers[i].recall_blocks += added.len();
+                }
+            }
+        }
+
+        // Sample + append.
+        let logits = self.gpu.lm_head(&x)?;
+        let w = spec.n_kv_heads * spec.head_dim;
+        super::gather::sample_and_append(&mut seqs[..n], &logits, &k_news, &v_news, w);
+        Ok(())
+    }
+
+    /// Prefill + activate one admitted request (shared admission path,
+    /// with this scheduler's pin policy and recall countdowns).
+    pub fn prefill_request(
+        &mut self,
+        batch: &mut Batch,
+        req: &super::request::RequestSpec,
+    ) -> crate::Result<()> {
+        super::admission::prefill_request(
+            &self.gpu,
+            &self.native,
+            batch,
+            req,
+            self.cfg.pin_sink,
+            self.cfg.pin_recent,
+            self.recall.init_countdowns(),
+        )
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl DecodeScheduler for ScoutScheduler {
+    fn admit(&mut self, batch: &mut Batch, req: &super::request::RequestSpec) -> crate::Result<()> {
+        self.prefill_request(batch, req)
+    }
+
+    fn step(&mut self, batch: &mut Batch) -> crate::Result<StepStats> {
+        let t0 = std::time::Instant::now();
+        let spec = self.gpu.spec.clone();
+        let mut stats = StepStats::new(spec.n_layers, batch.live(), self.pipelined());
+        let tile = spec.batch;
+        let total = batch.seqs.len();
+        let mut start = 0;
+        while start < total {
+            let end = (start + tile).min(total);
+            self.step_chunk(&mut batch.seqs[start..end], &mut stats)?;
+            start = end;
+        }
+        stats.wall_us = t0.elapsed().as_micros() as u64;
+        Ok(stats)
+    }
+
+    fn name(&self) -> &'static str {
+        "ScoutAttention"
+    }
+}

@@ -1,0 +1,84 @@
+//! Per-step schedule records — the interface between the numerics plane
+//! and the timing plane.
+//!
+//! Every scheduler (Scout and baselines) emits one [`StepStats`] per
+//! decode step describing *what work it scheduled where*: blocks attended
+//! on GPU vs CPU per layer, recall transfers issued, and whether CPU work
+//! was overlapped (layer-ahead) or serial. The simulator prices these
+//! records under the paper's device model to produce Figs. 3, 8–12.
+
+
+/// One layer of one decode step, summed over the batch.
+#[derive(Debug, Clone, Default)]
+pub struct LayerStats {
+    /// Blocks attended on the GPU (resident ∩ selected), incl. tail as
+    /// fractional tokens.
+    pub gpu_blocks: usize,
+    /// Blocks attended by the CPU worker (selected \ resident).
+    pub cpu_blocks: usize,
+    /// Blocks recalled GPU-ward by the periodic refresh at this layer.
+    pub recall_blocks: usize,
+    /// Blocks transferred on the critical path (InfiniGen-style prefetch;
+    /// 0 for Scout where recall is asynchronous).
+    pub sync_transfer_blocks: usize,
+    /// Tokens of dense attention on the GPU (FullKV path; 0 otherwise).
+    pub dense_tokens: usize,
+    /// Blocks whose digests the GPU scans for top-k selection (Quest
+    /// digest cache read; grows with context length).
+    pub digest_blocks: usize,
+    /// Total budget (selected set size) for ratio computations.
+    pub selected_blocks: usize,
+}
+
+/// One decode step, summed over the batch.
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    pub layers: Vec<LayerStats>,
+    /// Sequences that took part in this step.
+    pub live_seqs: usize,
+    /// Whether CPU work was issued one layer ahead (Scout) or in parallel
+    /// with the same layer (HGCA) — prices the overlap window.
+    pub layer_ahead: bool,
+    /// Numerics-plane wall time of the step, us (profiling only; the
+    /// paper figures use the timing plane).
+    pub wall_us: u64,
+}
+
+impl StepStats {
+    pub fn new(n_layers: usize, live_seqs: usize, layer_ahead: bool) -> Self {
+        Self {
+            layers: vec![LayerStats::default(); n_layers],
+            live_seqs,
+            layer_ahead,
+            wall_us: 0,
+        }
+    }
+
+    /// Mean CPU compute ratio across layers (Fig. 6's metric).
+    pub fn cpu_ratio(&self) -> f64 {
+        let (mut c, mut s) = (0usize, 0usize);
+        for l in &self.layers {
+            c += l.cpu_blocks;
+            s += l.selected_blocks;
+        }
+        if s == 0 { 0.0 } else { c as f64 / s as f64 }
+    }
+
+    /// Total recall volume in blocks.
+    pub fn recall_blocks(&self) -> usize {
+        self.layers.iter().map(|l| l.recall_blocks).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_ratio_aggregates_layers() {
+        let mut s = StepStats::new(2, 1, true);
+        s.layers[0] = LayerStats { cpu_blocks: 2, selected_blocks: 8, ..Default::default() };
+        s.layers[1] = LayerStats { cpu_blocks: 6, selected_blocks: 8, ..Default::default() };
+        assert!((s.cpu_ratio() - 0.5).abs() < 1e-9);
+    }
+}

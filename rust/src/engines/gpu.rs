@@ -1,0 +1,309 @@
+//! GPU engine: batched execution of the AOT XLA artifacts.
+//!
+//! Stands in for the paper's GPU. One method per artifact entry; weight
+//! operands are converted to XLA literals once at construction (they are
+//! the same every call), activation operands per call. The batch tile
+//! `B` is fixed by the artifact set; the coordinator pads partial
+//! batches.
+
+use std::sync::Arc;
+
+use xla::Literal;
+
+use crate::model::{ModelSpec, Weights};
+use crate::runtime::{literal_to_tensor, tensor_to_literal, vec_i32_literal, Runtime};
+use crate::tensor::Tensor;
+
+/// Batched attention partial: acc `[B,Hq,D]`, m `[B,Hq]`, l `[B,Hq]`.
+#[derive(Debug, Clone)]
+pub struct BatchPartial {
+    pub acc: Tensor,
+    pub m: Tensor,
+    pub l: Tensor,
+}
+
+impl BatchPartial {
+    /// Merge-identity partial for a batch tile.
+    pub fn empty(b: usize, hq: usize, d: usize) -> Self {
+        Self {
+            acc: Tensor::zeros(&[b, hq, d]),
+            m: Tensor::full(&[b, hq], -1e30),
+            l: Tensor::zeros(&[b, hq]),
+        }
+    }
+
+    /// Overwrite one sequence's row from a per-sequence partial.
+    pub fn set_row(&mut self, row: usize, p: &crate::engines::Partial) {
+        let hd = p.hq * p.d;
+        self.acc.rows_mut(row, 1)[..hd].copy_from_slice(&p.acc);
+        self.m.rows_mut(row, 1)[..p.hq].copy_from_slice(&p.m);
+        self.l.rows_mut(row, 1)[..p.hq].copy_from_slice(&p.l);
+    }
+}
+
+/// Per-layer weight literals (cached operand set).
+struct LayerLits {
+    ln1: Literal,
+    wq: Literal,
+    wk: Literal,
+    wv: Literal,
+    wo: Literal,
+    ln2: Literal,
+    w1: Literal,
+    w2: Literal,
+}
+
+pub struct GpuEngine {
+    pub rt: Arc<Runtime>,
+    pub spec: ModelSpec,
+    pub weights: Weights,
+    layers: Vec<LayerLits>,
+    stacked: Vec<Literal>, // [ln1, wq, wk, wv, wo, ln2, w1, w2] stacked [L,...]
+    ln_f: Literal,
+    embed: Literal,
+}
+
+impl GpuEngine {
+    pub fn new(rt: Arc<Runtime>, weights: Weights) -> crate::Result<Self> {
+        let spec = rt.manifest.config.clone();
+        let (l, d, dff) = (spec.n_layers, spec.d_model, spec.d_ff);
+        let hq_d = spec.n_q_heads * spec.head_dim;
+        let hkv_d = spec.n_kv_heads * spec.head_dim;
+        let lit = |data: &[f32], shape: &[usize]| -> crate::Result<Literal> {
+            tensor_to_literal(&Tensor::from_vec(shape, data.to_vec()))
+        };
+        let mut layers = Vec::with_capacity(l);
+        for i in 0..l {
+            layers.push(LayerLits {
+                ln1: lit(weights.layer_ln1(i), &[d])?,
+                wq: lit(weights.layer_wq(i), &[d, hq_d])?,
+                wk: lit(weights.layer_wk(i), &[d, hkv_d])?,
+                wv: lit(weights.layer_wv(i), &[d, hkv_d])?,
+                wo: lit(weights.layer_wo(i), &[hq_d, d])?,
+                ln2: lit(weights.layer_ln2(i), &[d])?,
+                w1: lit(weights.layer_w1(i), &[d, dff])?,
+                w2: lit(weights.layer_w2(i), &[dff, d])?,
+            });
+        }
+        let stacked = vec![
+            tensor_to_literal(&weights.ln1)?,
+            tensor_to_literal(&weights.wq)?,
+            tensor_to_literal(&weights.wk)?,
+            tensor_to_literal(&weights.wv)?,
+            tensor_to_literal(&weights.wo)?,
+            tensor_to_literal(&weights.ln2)?,
+            tensor_to_literal(&weights.w1)?,
+            tensor_to_literal(&weights.w2)?,
+        ];
+        let ln_f = tensor_to_literal(&weights.ln_f)?;
+        let embed = tensor_to_literal(&weights.embed)?;
+        Ok(Self { rt, spec, weights, layers, stacked, ln_f, embed })
+    }
+
+    fn pos_lit(&self, pos: &[i32]) -> crate::Result<Literal> {
+        vec_i32_literal(&[pos.len()], pos)
+    }
+
+    /// QKV + RoPE for the batch tile at one layer.
+    pub fn pre_attn(
+        &self,
+        x: &Tensor,
+        layer: usize,
+        pos: &[i32],
+    ) -> crate::Result<(Tensor, Tensor, Tensor)> {
+        let w = &self.layers[layer];
+        let xl = tensor_to_literal(x)?;
+        let pl = self.pos_lit(pos)?;
+        let outs = self
+            .rt
+            .execute("layer_pre_attn", &[&xl, &w.ln1, &w.wq, &w.wk, &w.wv, &pl])?;
+        Ok((
+            literal_to_tensor(&outs[0])?,
+            literal_to_tensor(&outs[1])?,
+            literal_to_tensor(&outs[2])?,
+        ))
+    }
+
+    /// Predicted query for layer `layer_next` from the current input.
+    pub fn qpred(&self, x: &Tensor, layer_next: usize, pos: &[i32]) -> crate::Result<Tensor> {
+        let w = &self.layers[layer_next];
+        let xl = tensor_to_literal(x)?;
+        let pl = self.pos_lit(pos)?;
+        let outs = self.rt.execute("qpred", &[&xl, &w.ln1, &w.wq, &pl])?;
+        literal_to_tensor(&outs[0])
+    }
+
+    /// Block-sparse attention partial over gathered blocks.
+    pub fn sparse_attn(
+        &self,
+        q: &Tensor,
+        k_sel: &Tensor,
+        v_sel: &Tensor,
+        mask: &Tensor,
+    ) -> crate::Result<BatchPartial> {
+        let (ql, kl, vl, ml) = (
+            tensor_to_literal(q)?,
+            tensor_to_literal(k_sel)?,
+            tensor_to_literal(v_sel)?,
+            tensor_to_literal(mask)?,
+        );
+        let outs = self.rt.execute("sparse_attn", &[&ql, &kl, &vl, &ml])?;
+        Ok(BatchPartial {
+            acc: literal_to_tensor(&outs[0])?,
+            m: literal_to_tensor(&outs[1])?,
+            l: literal_to_tensor(&outs[2])?,
+        })
+    }
+
+    /// Tail partial (kb = 1 instantiation of the same kernel).
+    pub fn tail_attn(
+        &self,
+        q: &Tensor,
+        k_tail: &Tensor,
+        v_tail: &Tensor,
+        mask: &Tensor,
+    ) -> crate::Result<BatchPartial> {
+        let (ql, kl, vl, ml) = (
+            tensor_to_literal(q)?,
+            tensor_to_literal(k_tail)?,
+            tensor_to_literal(v_tail)?,
+            tensor_to_literal(mask)?,
+        );
+        let outs = self.rt.execute("tail_attn", &[&ql, &kl, &vl, &ml])?;
+        Ok(BatchPartial {
+            acc: literal_to_tensor(&outs[0])?,
+            m: literal_to_tensor(&outs[1])?,
+            l: literal_to_tensor(&outs[2])?,
+        })
+    }
+
+    /// LSE merge of two batched partials (L1 merge kernel).
+    pub fn merge(&self, a: &BatchPartial, b: &BatchPartial) -> crate::Result<BatchPartial> {
+        let ops = (
+            tensor_to_literal(&a.acc)?,
+            tensor_to_literal(&a.m)?,
+            tensor_to_literal(&a.l)?,
+            tensor_to_literal(&b.acc)?,
+            tensor_to_literal(&b.m)?,
+            tensor_to_literal(&b.l)?,
+        );
+        let outs = self.rt.execute(
+            "merge",
+            &[&ops.0, &ops.1, &ops.2, &ops.3, &ops.4, &ops.5],
+        )?;
+        Ok(BatchPartial {
+            acc: literal_to_tensor(&outs[0])?,
+            m: literal_to_tensor(&outs[1])?,
+            l: literal_to_tensor(&outs[2])?,
+        })
+    }
+
+    /// Attention finalize + out-proj + MLP for one layer.
+    pub fn post_attn(
+        &self,
+        x: &Tensor,
+        p: &BatchPartial,
+        layer: usize,
+    ) -> crate::Result<Tensor> {
+        let w = &self.layers[layer];
+        let (xl, accl, ll) = (
+            tensor_to_literal(x)?,
+            tensor_to_literal(&p.acc)?,
+            tensor_to_literal(&p.l)?,
+        );
+        let outs = self.rt.execute(
+            "layer_post_attn",
+            &[&xl, &accl, &ll, &w.wo, &w.ln2, &w.w1, &w.w2],
+        )?;
+        literal_to_tensor(&outs[0])
+    }
+
+    /// Final norm + tied LM head: logits `[B, V]`.
+    pub fn lm_head(&self, x: &Tensor) -> crate::Result<Tensor> {
+        let xl = tensor_to_literal(x)?;
+        let outs = self.rt.execute("lm_head", &[&xl, &self.ln_f, &self.embed])?;
+        literal_to_tensor(&outs[0])
+    }
+
+    /// Quest digests for gathered blocks `[B, nb, bs, Hkv, D]`.
+    pub fn digest_build(&self, k_blocks: &Tensor) -> crate::Result<(Tensor, Tensor)> {
+        let kl = tensor_to_literal(k_blocks)?;
+        let outs = self.rt.execute("digest_build", &[&kl])?;
+        Ok((literal_to_tensor(&outs[0])?, literal_to_tensor(&outs[1])?))
+    }
+
+    /// Quest block scores `[B, nb]`.
+    pub fn block_scores(
+        &self,
+        q: &Tensor,
+        kmin: &Tensor,
+        kmax: &Tensor,
+    ) -> crate::Result<Tensor> {
+        let (ql, lol, hil) =
+            (tensor_to_literal(q)?, tensor_to_literal(kmin)?, tensor_to_literal(kmax)?);
+        let outs = self.rt.execute("block_scores", &[&ql, &lol, &hil])?;
+        literal_to_tensor(&outs[0])
+    }
+
+    /// Fused FullKV decode step (baseline/oracle):
+    /// returns (logits `[B,V]`, k_new `[L,B,Hkv,D]`, v_new `[L,B,Hkv,D]`).
+    pub fn decode_full(
+        &self,
+        x: &Tensor,
+        kcache: &Tensor,
+        vcache: &Tensor,
+        pos: &[i32],
+    ) -> crate::Result<(Tensor, Tensor, Tensor)> {
+        let xl = tensor_to_literal(x)?;
+        let kl = tensor_to_literal(kcache)?;
+        let vl = tensor_to_literal(vcache)?;
+        let pl = self.pos_lit(pos)?;
+        let mut inputs: Vec<&Literal> = vec![&xl];
+        inputs.extend(self.stacked.iter());
+        inputs.push(&self.ln_f);
+        inputs.push(&self.embed);
+        inputs.push(&kl);
+        inputs.push(&vl);
+        inputs.push(&pl);
+        let outs = self.rt.execute("decode_full", &inputs)?;
+        Ok((
+            literal_to_tensor(&outs[0])?,
+            literal_to_tensor(&outs[1])?,
+            literal_to_tensor(&outs[2])?,
+        ))
+    }
+
+    /// Fused causal prefill for one sequence (padded to S):
+    /// returns (k `[L,S,Hkv,D]`, v `[L,S,Hkv,D]`, h_last `[d]`, logits `[V]`).
+    pub fn prefill(
+        &self,
+        x_seq: &Tensor,
+        length: usize,
+    ) -> crate::Result<(Tensor, Tensor, Tensor, Tensor)> {
+        let xl = tensor_to_literal(x_seq)?;
+        let ll = vec_i32_literal(&[], &[length as i32])?;
+        let mut inputs: Vec<&Literal> = vec![&xl];
+        inputs.extend(self.stacked.iter());
+        inputs.push(&self.ln_f);
+        inputs.push(&self.embed);
+        inputs.push(&ll);
+        let outs = self.rt.execute("prefill", &inputs)?;
+        Ok((
+            literal_to_tensor(&outs[0])?,
+            literal_to_tensor(&outs[1])?,
+            literal_to_tensor(&outs[2])?,
+            literal_to_tensor(&outs[3])?,
+        ))
+    }
+
+    /// Embed a batch of token ids into `[B, d]` (host-side row gather —
+    /// embedding lookup is not an artifact, it is a memcpy).
+    pub fn embed_tokens(&self, toks: &[u32]) -> Tensor {
+        let d = self.spec.d_model;
+        let mut x = Tensor::zeros(&[toks.len(), d]);
+        for (i, &t) in toks.iter().enumerate() {
+            x.rows_mut(i, 1).copy_from_slice(self.weights.embed_token(t));
+        }
+        x
+    }
+}

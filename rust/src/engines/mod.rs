@@ -1,0 +1,21 @@
+//! Compute engines.
+//!
+//! - [`partial`] — the (acc, m, l) attention-partial contract shared by
+//!   every engine (identical to `python/compile/kernels/ref.py`).
+//! - [`native`] — pure-rust f32 engine. Plays two roles: (a) the paper's
+//!   *CPU/IPEX attention worker* computing offloaded blocks near the
+//!   data, and (b) a shape-flexible oracle for the Table-1 / Fig-6
+//!   structural studies over the proxy model zoo.
+//! - [`gpu`] — the *GPU* stand-in: drives the AOT XLA executables through
+//!   the PJRT runtime, one call per artifact entry.
+//!
+//! Cross-engine parity (native vs XLA on identical inputs) is enforced by
+//! `rust/tests/parity.rs`.
+
+pub mod gpu;
+pub mod native;
+pub mod partial;
+
+pub use gpu::GpuEngine;
+pub use native::NativeEngine;
+pub use partial::Partial;

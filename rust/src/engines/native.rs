@@ -1,0 +1,402 @@
+//! Native f32 engine: the CPU attention worker + shape-flexible oracle.
+//!
+//! The block-attention path (`attend_blocks`) is the paper's CPU-side
+//! near-data computation (§3.2): it reads KV slabs straight out of the
+//! DRAM pool with no gather/copy, which is exactly why co-attention beats
+//! recall over PCIe. Everything else (full decode step, prefill) exists
+//! so the proxy-model studies (Table 1, Fig. 6) can run shapes the AOT
+//! artifacts were not lowered for, and to cross-check the XLA plane.
+
+use crate::engines::partial::Partial;
+use crate::kvcache::SeqKvCache;
+use crate::model::{ModelSpec, Weights};
+
+/// Pure-rust engine bound to one spec + weights.
+pub struct NativeEngine {
+    pub spec: ModelSpec,
+    pub weights: Weights,
+}
+
+/// x [m] @ w [m, n] -> out [n], accumulating in f32.
+pub fn matvec(x: &[f32], w: &[f32], n: usize, out: &mut [f32]) {
+    let m = x.len();
+    debug_assert_eq!(w.len(), m * n);
+    debug_assert_eq!(out.len(), n);
+    out.fill(0.0);
+    // row-major w: out[j] += x[i] * w[i*n + j]; iterate i-outer so the
+    // inner loop is a contiguous axpy that LLVM auto-vectorizes.
+    for i in 0..m {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * n..(i + 1) * n];
+        for (o, &wij) in out.iter_mut().zip(row) {
+            *o += xi * wij;
+        }
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    let ms = dot(x, x) / n as f32;
+    let r = 1.0 / (ms + 1e-6).sqrt();
+    for i in 0..n {
+        out[i] = x[i] * r * w[i];
+    }
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Rotate-half RoPE applied in place to `[H, D]` at position `pos`
+/// (bit-identical formulation to `model.py::rope`).
+pub fn rope_inplace(x: &mut [f32], h: usize, d: usize, pos: i64, theta: f64) {
+    let half = d / 2;
+    for head in 0..h {
+        let row = &mut x[head * d..(head + 1) * d];
+        for i in 0..half {
+            let freq = theta.powf(-(i as f64) / half as f64);
+            let ang = pos as f64 * freq;
+            let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
+            let (x1, x2) = (row[i], row[i + half]);
+            row[i] = x1 * cos - x2 * sin;
+            row[i + half] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+impl NativeEngine {
+    pub fn new(spec: ModelSpec, weights: Weights) -> Self {
+        Self { spec, weights }
+    }
+
+    pub fn from_seed(spec: &ModelSpec, seed: u64) -> Self {
+        Self::new(spec.clone(), Weights::generate(spec, seed, 1.0))
+    }
+
+    fn hq_d(&self) -> usize {
+        self.spec.n_q_heads * self.spec.head_dim
+    }
+
+    fn hkv_d(&self) -> usize {
+        self.spec.n_kv_heads * self.spec.head_dim
+    }
+
+    /// QKV projection + RoPE for one sequence at one layer.
+    /// Returns (q `[Hq*D]`, k_new `[Hkv*D]`, v_new `[Hkv*D]`).
+    pub fn pre_attn(&self, x: &[f32], layer: usize, pos: i64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let d = self.spec.d_model;
+        let mut h = vec![0.0; d];
+        rmsnorm(x, self.weights.layer_ln1(layer), &mut h);
+        let mut q = vec![0.0; self.hq_d()];
+        let mut k = vec![0.0; self.hkv_d()];
+        let mut v = vec![0.0; self.hkv_d()];
+        matvec(&h, self.weights.layer_wq(layer), self.hq_d(), &mut q);
+        matvec(&h, self.weights.layer_wk(layer), self.hkv_d(), &mut k);
+        matvec(&h, self.weights.layer_wv(layer), self.hkv_d(), &mut v);
+        rope_inplace(&mut q, self.spec.n_q_heads, self.spec.head_dim, pos, self.spec.rope_theta);
+        rope_inplace(&mut k, self.spec.n_kv_heads, self.spec.head_dim, pos, self.spec.rope_theta);
+        (q, k, v)
+    }
+
+    /// Layer-ahead predicted query (Alg. 1 line 4): layer `layer_next`'s
+    /// ln/W_Q applied to the *current* layer's input.
+    pub fn qpred(&self, x: &[f32], layer_next: usize, pos: i64) -> Vec<f32> {
+        let d = self.spec.d_model;
+        let mut h = vec![0.0; d];
+        rmsnorm(x, self.weights.layer_ln1(layer_next), &mut h);
+        let mut q = vec![0.0; self.hq_d()];
+        matvec(&h, self.weights.layer_wq(layer_next), self.hq_d(), &mut q);
+        rope_inplace(&mut q, self.spec.n_q_heads, self.spec.head_dim, pos, self.spec.rope_theta);
+        q
+    }
+
+    /// Attention partial over a KV slab `[tokens, Hkv, D]` (contiguous,
+    /// zero-copy from the cache). The CPU worker hot path.
+    pub fn attend_slab(&self, q: &[f32], k_slab: &[f32], v_slab: &[f32], tokens: usize) -> Partial {
+        let (hq, hkv, dd) = (self.spec.n_q_heads, self.spec.n_kv_heads, self.spec.head_dim);
+        let g = hq / hkv;
+        let scale = self.spec.scale();
+        let w = hkv * dd;
+        let mut p = Partial::empty(hq, dd);
+        for t in 0..tokens {
+            let krow = &k_slab[t * w..(t + 1) * w];
+            let vrow = &v_slab[t * w..(t + 1) * w];
+            for h in 0..hq {
+                let kvh = h / g;
+                let s = dot(&q[h * dd..(h + 1) * dd], &krow[kvh * dd..(kvh + 1) * dd]) * scale;
+                p.update_token(h, s, &vrow[kvh * dd..(kvh + 1) * dd]);
+            }
+        }
+        p
+    }
+
+    /// CPU-side attention over a set of complete blocks (near-data, §3.2).
+    pub fn attend_blocks(
+        &self,
+        q: &[f32],
+        cache: &SeqKvCache,
+        layer: usize,
+        blocks: &[usize],
+    ) -> Partial {
+        let bs = self.spec.block_size;
+        let mut p = Partial::empty(self.spec.n_q_heads, self.spec.head_dim);
+        for &b in blocks {
+            let part = self.attend_slab(q, cache.block_k(layer, b), cache.block_v(layer, b), bs);
+            p.merge(&part);
+        }
+        p
+    }
+
+    /// Tail partial: the still-filling block plus the current token's own
+    /// k/v (which is not yet in the cache).
+    pub fn attend_tail(
+        &self,
+        q: &[f32],
+        cache: &SeqKvCache,
+        layer: usize,
+        k_new: &[f32],
+        v_new: &[f32],
+    ) -> Partial {
+        let tail = cache.tail_len();
+        let mut p = if tail > 0 {
+            let k = cache.block_k(layer, cache.full_blocks());
+            let v = cache.block_v(layer, cache.full_blocks());
+            self.attend_slab(q, k, v, tail)
+        } else {
+            Partial::empty(self.spec.n_q_heads, self.spec.head_dim)
+        };
+        let selfp = self.attend_slab(q, k_new, v_new, 1);
+        p.merge(&selfp);
+        p
+    }
+
+    /// Output projection + MLP + residuals.
+    pub fn post_attn(&self, x: &mut [f32], partial: &Partial, layer: usize) {
+        let d = self.spec.d_model;
+        let out = partial.finalize(); // [Hq*D]
+        let mut proj = vec![0.0; d];
+        matvec(&out, self.weights.layer_wo(layer), d, &mut proj);
+        for i in 0..d {
+            x[i] += proj[i];
+        }
+        let mut h = vec![0.0; d];
+        rmsnorm(x, self.weights.layer_ln2(layer), &mut h);
+        let mut mid = vec![0.0; self.spec.d_ff];
+        matvec(&h, self.weights.layer_w1(layer), self.spec.d_ff, &mut mid);
+        for v in mid.iter_mut() {
+            *v = silu(*v);
+        }
+        let mut back = vec![0.0; d];
+        matvec(&mid, self.weights.layer_w2(layer), d, &mut back);
+        for i in 0..d {
+            x[i] += back[i];
+        }
+    }
+
+    /// Final norm + tied LM head.
+    pub fn lm_head(&self, x: &[f32]) -> Vec<f32> {
+        let d = self.spec.d_model;
+        let v = self.spec.vocab;
+        let mut h = vec![0.0; d];
+        rmsnorm(x, self.weights.ln_f.data(), &mut h);
+        // logits[t] = h . embed[t]
+        let mut logits = vec![0.0; v];
+        let emb = self.weights.embed.data();
+        for (t, lo) in logits.iter_mut().enumerate() {
+            *lo = dot(&h, &emb[t * d..(t + 1) * d]);
+        }
+        logits
+    }
+
+    /// Full-attention decode step for one sequence (native FullKV oracle).
+    /// Appends nothing; returns (logits, k_new per layer, v_new per layer).
+    pub fn decode_step_full(
+        &self,
+        x0: &[f32],
+        cache: &SeqKvCache,
+        pos: i64,
+    ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut x = x0.to_vec();
+        let mut kn = Vec::with_capacity(self.spec.n_layers);
+        let mut vn = Vec::with_capacity(self.spec.n_layers);
+        let bs = self.spec.block_size;
+        for layer in 0..self.spec.n_layers {
+            let (q, k_new, v_new) = self.pre_attn(&x, layer, pos);
+            // full blocks + tail + self
+            let mut p = Partial::empty(self.spec.n_q_heads, self.spec.head_dim);
+            for b in 0..cache.full_blocks() {
+                p.merge(&self.attend_slab(&q, cache.block_k(layer, b), cache.block_v(layer, b), bs));
+            }
+            p.merge(&self.attend_tail(&q, cache, layer, &k_new, &v_new));
+            self.post_attn(&mut x, &p, layer);
+            kn.push(k_new);
+            vn.push(v_new);
+        }
+        (self.lm_head(&x), kn, vn)
+    }
+
+    /// Causal prefill of `tokens` for one sequence; fills `cache` and
+    /// returns the last hidden state. O(S^2) — study/test use only.
+    pub fn prefill(&self, tokens: &[u32], cache: &mut SeqKvCache) -> Vec<f32> {
+        let n = tokens.len();
+        assert!(n <= self.spec.max_seq);
+        // running hidden states [n, d]
+        let mut xs: Vec<Vec<f32>> = tokens
+            .iter()
+            .map(|&t| self.weights.embed_token(t).to_vec())
+            .collect();
+        for layer in 0..self.spec.n_layers {
+            // project all positions first (they attend within the layer)
+            let mut qs = Vec::with_capacity(n);
+            let mut ks = Vec::with_capacity(n);
+            let mut vs = Vec::with_capacity(n);
+            for (t, x) in xs.iter().enumerate() {
+                let (q, k, v) = self.pre_attn(x, layer, t as i64);
+                qs.push(q);
+                ks.push(k);
+                vs.push(v);
+            }
+            for t in 0..n {
+                // causal attention over [0, t]
+                let mut p = Partial::empty(self.spec.n_q_heads, self.spec.head_dim);
+                for u in 0..=t {
+                    p.merge(&self.attend_slab(&qs[t], &ks[u], &vs[u], 1));
+                }
+                self.post_attn(&mut xs[t], &p, layer);
+            }
+            let w = self.hkv_d();
+            let mut kflat = vec![0.0; n * w];
+            let mut vflat = vec![0.0; n * w];
+            for t in 0..n {
+                kflat[t * w..(t + 1) * w].copy_from_slice(&ks[t]);
+                vflat[t * w..(t + 1) * w].copy_from_slice(&vs[t]);
+            }
+            cache.load_prefill_layer(layer, &kflat, &vflat, n);
+        }
+        cache.finish_prefill(n);
+        xs.pop().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::PROXY_MODELS;
+
+    fn tiny() -> (ModelSpec, NativeEngine) {
+        let mut spec = PROXY_MODELS[0].1();
+        spec.n_layers = 2;
+        spec.d_model = 64;
+        spec.n_q_heads = 4;
+        spec.n_kv_heads = 2;
+        spec.head_dim = 16;
+        spec.d_ff = 128;
+        spec.vocab = 64;
+        spec.max_seq = 64;
+        spec.block_size = 8;
+        spec.k_blocks = 4;
+        let e = NativeEngine::from_seed(&spec, 42);
+        (spec, e)
+    }
+
+    #[test]
+    fn matvec_correct() {
+        // [2x3] * [2] -> [3]
+        let w = [1., 2., 3., 4., 5., 6.];
+        let x = [10.0, 1.0];
+        let mut out = vec![0.0; 3];
+        matvec(&x, &w, 3, &mut out);
+        assert_eq!(out, vec![14., 25., 36.]);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut x: Vec<f32> = (0..32).map(|i| (i as f32).sin()).collect();
+        let before: f32 = dot(&x, &x);
+        rope_inplace(&mut x, 2, 16, 1234, 10000.0);
+        let after: f32 = dot(&x, &x);
+        assert!((before - after).abs() / before < 1e-5);
+    }
+
+    #[test]
+    fn attend_blocks_equals_attend_slab_union() {
+        let (spec, e) = tiny();
+        let mut cache = SeqKvCache::new(&spec);
+        let w = spec.n_kv_heads * spec.head_dim;
+        for t in 0..24 {
+            for l in 0..spec.n_layers {
+                let k: Vec<f32> = (0..w).map(|i| ((t * 31 + l * 7 + i) as f32).sin()).collect();
+                let v: Vec<f32> = (0..w).map(|i| ((t * 13 + l * 3 + i) as f32).cos()).collect();
+                cache.append_layer(l, &k, &v);
+            }
+            cache.advance();
+        }
+        let q: Vec<f32> = (0..spec.n_q_heads * spec.head_dim).map(|i| (i as f32 * 0.1).sin()).collect();
+        let p_blocks = e.attend_blocks(&q, &cache, 1, &[0, 1, 2]);
+        // union slab: 24 contiguous tokens of layer 1
+        let kall: Vec<f32> = (0..3).flat_map(|b| cache.block_k(1, b).to_vec()).collect();
+        let vall: Vec<f32> = (0..3).flat_map(|b| cache.block_v(1, b).to_vec()).collect();
+        let p_union = e.attend_slab(&q, &kall, &vall, 24);
+        for (a, b) in p_blocks.finalize().iter().zip(p_union.finalize()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn decode_step_runs_and_is_deterministic() {
+        let (spec, e) = tiny();
+        let mut cache = SeqKvCache::new(&spec);
+        let toks: Vec<u32> = (0..20).map(|i| (i * 3 % spec.vocab) as u32).collect();
+        let h = e.prefill(&toks, &mut cache);
+        assert_eq!(cache.len(), 20);
+        let (lg1, kn1, _) = e.decode_step_full(&h, &cache, 20);
+        let (lg2, kn2, _) = e.decode_step_full(&h, &cache, 20);
+        assert_eq!(lg1, lg2);
+        assert_eq!(kn1, kn2);
+        assert_eq!(lg1.len(), spec.vocab);
+        assert!(lg1.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn qpred_matches_pre_attn_for_same_layer() {
+        let (spec, e) = tiny();
+        let x: Vec<f32> = (0..spec.d_model).map(|i| (i as f32 * 0.3).cos()).collect();
+        let (q, _, _) = e.pre_attn(&x, 1, 5);
+        let qp = e.qpred(&x, 1, 5);
+        assert_eq!(q, qp);
+    }
+
+    #[test]
+    fn prefill_then_decode_consistent_with_longer_prefill() {
+        let (spec, e) = tiny();
+        let toks: Vec<u32> = (0..21).map(|i| (i * 5 % spec.vocab) as u32).collect();
+        // prefill 20, decode token 20
+        let mut c1 = SeqKvCache::new(&spec);
+        let _ = e.prefill(&toks[..20], &mut c1);
+        let x = e.weights.embed_token(toks[20]).to_vec();
+        let (_, kn, vn) = e.decode_step_full(&x, &c1, 20);
+        // prefill 21 directly
+        let mut c2 = SeqKvCache::new(&spec);
+        let _ = e.prefill(&toks, &mut c2);
+        for l in 0..spec.n_layers {
+            let w = spec.n_kv_heads * spec.head_dim;
+            let k21 = &c2.block_k(l, 2)[4 * w..5 * w]; // token 20 = block 2 offset 4
+            for (a, b) in kn[l].iter().zip(k21) {
+                assert!((a - b).abs() < 1e-4, "layer {l}: {a} vs {b}");
+            }
+            let v21 = &c2.block_v(l, 2)[4 * w..5 * w];
+            for (a, b) in vn[l].iter().zip(v21) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+}

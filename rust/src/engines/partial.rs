@@ -1,0 +1,145 @@
+//! The attention-partial contract: unnormalized (acc, m, l) triples that
+//! merge associatively via the FlashAttention log-sum-exp rule.
+
+/// Attention partial for ONE sequence: `acc [Hq*D]`, `m [Hq]`, `l [Hq]`.
+///
+/// `finalize()[h] = acc[h] / l[h]`; the empty partial (acc=0, m=-1e30,
+/// l=0) is the merge identity — the coordinator uses it whenever the CPU
+/// side had no blocks to cover.
+#[derive(Debug, Clone)]
+pub struct Partial {
+    pub hq: usize,
+    pub d: usize,
+    pub acc: Vec<f32>,
+    pub m: Vec<f32>,
+    pub l: Vec<f32>,
+}
+
+pub const NEG_INF: f32 = -1e30;
+
+impl Partial {
+    pub fn empty(hq: usize, d: usize) -> Self {
+        Self { hq, d, acc: vec![0.0; hq * d], m: vec![NEG_INF; hq], l: vec![0.0; hq] }
+    }
+
+    /// Online-softmax update with one scored token (score `s` for head
+    /// `h`, value row `v [D]`).
+    #[inline]
+    pub fn update_token(&mut self, h: usize, s: f32, v: &[f32]) {
+        debug_assert_eq!(v.len(), self.d);
+        let m_new = self.m[h].max(s);
+        let alpha = (self.m[h] - m_new).exp();
+        let p = (s - m_new).exp();
+        let acc = &mut self.acc[h * self.d..(h + 1) * self.d];
+        for (a, &vi) in acc.iter_mut().zip(v) {
+            *a = *a * alpha + p * vi;
+        }
+        self.l[h] = self.l[h] * alpha + p;
+        self.m[h] = m_new;
+    }
+
+    /// LSE-merge another partial into this one (associative, commutative).
+    pub fn merge(&mut self, other: &Partial) {
+        debug_assert_eq!((self.hq, self.d), (other.hq, other.d));
+        for h in 0..self.hq {
+            let m_new = self.m[h].max(other.m[h]);
+            let wa = (self.m[h] - m_new).exp();
+            let wb = (other.m[h] - m_new).exp();
+            let (a0, a1) = (h * self.d, (h + 1) * self.d);
+            for (a, &b) in self.acc[a0..a1].iter_mut().zip(&other.acc[a0..a1]) {
+                *a = *a * wa + b * wb;
+            }
+            self.l[h] = self.l[h] * wa + other.l[h] * wb;
+            self.m[h] = m_new;
+        }
+    }
+
+    /// Normalize into the attention output `[Hq*D]`.
+    pub fn finalize(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.hq * self.d];
+        for h in 0..self.hq {
+            let l = self.l[h].max(1e-30);
+            for i in 0..self.d {
+                out[h * self.d + i] = self.acc[h * self.d + i] / l;
+            }
+        }
+        out
+    }
+
+    /// True if no token ever contributed.
+    pub fn is_emptyish(&self) -> bool {
+        self.l.iter().all(|&x| x == 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn softmax_attn(scores: &[f32], vals: &[Vec<f32>]) -> Vec<f32> {
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let ps: Vec<f32> = scores.iter().map(|s| (s - m).exp()).collect();
+        let z: f32 = ps.iter().sum();
+        let d = vals[0].len();
+        let mut out = vec![0.0; d];
+        for (p, v) in ps.iter().zip(vals) {
+            for i in 0..d {
+                out[i] += p * v[i] / z;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn online_update_matches_softmax() {
+        let scores = [0.5, -1.2, 2.0, 0.1];
+        let vals: Vec<Vec<f32>> = (0..4).map(|t| vec![t as f32, 1.0 - t as f32]).collect();
+        let mut p = Partial::empty(1, 2);
+        for (s, v) in scores.iter().zip(&vals) {
+            p.update_token(0, *s, v);
+        }
+        let got = p.finalize();
+        let want = softmax_attn(&scores, &vals);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5, "{got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_joint() {
+        let scores = [0.5, -1.2, 2.0, 0.1, 1.5];
+        let vals: Vec<Vec<f32>> = (0..5).map(|t| vec![(t * t) as f32, -(t as f32)]).collect();
+        let mut joint = Partial::empty(1, 2);
+        for (s, v) in scores.iter().zip(&vals) {
+            joint.update_token(0, *s, v);
+        }
+        let mut a = Partial::empty(1, 2);
+        let mut b = Partial::empty(1, 2);
+        for (i, (s, v)) in scores.iter().zip(&vals).enumerate() {
+            if i < 2 {
+                a.update_token(0, *s, v);
+            } else {
+                b.update_token(0, *s, v);
+            }
+        }
+        a.merge(&b);
+        for (x, y) in a.finalize().iter().zip(joint.finalize()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn empty_is_identity() {
+        let mut p = Partial::empty(2, 3);
+        p.update_token(0, 1.0, &[1.0, 2.0, 3.0]);
+        p.update_token(1, -1.0, &[0.5, 0.5, 0.5]);
+        let snapshot = p.clone();
+        p.merge(&Partial::empty(2, 3));
+        assert_eq!(p.finalize(), snapshot.finalize());
+        let mut e = Partial::empty(2, 3);
+        e.merge(&snapshot);
+        for (x, y) in e.finalize().iter().zip(snapshot.finalize()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

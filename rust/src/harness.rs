@@ -1,0 +1,187 @@
+//! Run harness: glue shared by the CLI, examples, and benches.
+//!
+//! Builds the full stack (runtime -> engines -> scheduler) from a
+//! [`RunConfig`], drives offline serving runs, and computes the
+//! cross-method comparison metrics (token agreement vs the FullKV
+//! oracle, measured CPU-ratio series for recall profiling).
+
+use std::sync::Arc;
+
+use crate::baselines::{FullKvScheduler, HgcaScheduler, InfinigenScheduler};
+use crate::config::{Method, RunConfig};
+use crate::coordinator::{
+    Batch, DecodeScheduler, RecallController, RequestSpec, ScoutScheduler, StepStats,
+};
+use crate::engines::{GpuEngine, NativeEngine};
+use crate::model::Weights;
+use crate::runtime::Runtime;
+use crate::sparse::locality::CpuRatioSeries;
+
+/// The loaded stack for one preset.
+pub struct Stack {
+    pub cfg: RunConfig,
+    pub rt: Arc<Runtime>,
+    pub gpu: Arc<GpuEngine>,
+    pub native: Arc<NativeEngine>,
+}
+
+impl Stack {
+    /// Load artifacts, generate seeded weights, build both engines.
+    pub fn load(cfg: &RunConfig) -> crate::Result<Self> {
+        cfg.validate()?;
+        let rt = Arc::new(Runtime::load(&cfg.artifacts_dir, &cfg.preset)?);
+        let spec = rt.manifest.config.clone();
+        let weights = Weights::generate(&spec, cfg.seed, 1.0);
+        let gpu = Arc::new(GpuEngine::new(rt.clone(), weights.clone())?);
+        let native = Arc::new(NativeEngine::new(spec, weights));
+        Ok(Self { cfg: cfg.clone(), rt, gpu, native })
+    }
+
+    /// Build a scheduler for `method` (with this config's scout knobs and
+    /// an optional recall profile for the Profiled policy).
+    pub fn scheduler(
+        &self,
+        method: Method,
+        profile: Option<&CpuRatioSeries>,
+    ) -> Box<dyn DecodeScheduler> {
+        match method {
+            Method::FullKv => Box::new(FullKvScheduler::new(self.gpu.clone(), self.native.clone())),
+            Method::Infinigen => {
+                Box::new(InfinigenScheduler::new(self.gpu.clone(), self.native.clone()))
+            }
+            Method::Hgca => Box::new(HgcaScheduler::new(self.gpu.clone(), self.native.clone())),
+            Method::Scout => {
+                let recall = RecallController::new(
+                    &self.cfg.scout,
+                    self.gpu.spec.n_layers,
+                    profile,
+                );
+                Box::new(ScoutScheduler::new(
+                    self.gpu.clone(),
+                    self.native.clone(),
+                    self.cfg.scout.clone(),
+                    recall,
+                ))
+            }
+        }
+    }
+
+    /// Fresh batch sized to this config.
+    pub fn batch(&self) -> Batch {
+        Batch::new(
+            self.gpu.spec.clone(),
+            self.gpu.spec.k_blocks,
+            self.cfg.server.max_batch,
+        )
+    }
+}
+
+/// Result of one offline serving run.
+pub struct ServingRun {
+    pub method: Method,
+    pub outputs: Vec<crate::coordinator::RequestOutput>,
+    pub stats: Vec<StepStats>,
+    pub wall_us: u64,
+}
+
+impl ServingRun {
+    /// Numerics-plane decode throughput (tokens/s of wall clock).
+    pub fn wall_throughput_tps(&self) -> f64 {
+        let toks: usize = self.outputs.iter().map(|o| o.generated.len()).sum();
+        if self.wall_us == 0 { 0.0 } else { toks as f64 / self.wall_us as f64 * 1e6 }
+    }
+
+    /// Mean measured CPU compute ratio (Fig. 6 metric).
+    pub fn mean_cpu_ratio(&self) -> f64 {
+        if self.stats.is_empty() {
+            return 0.0;
+        }
+        self.stats.iter().map(|s| s.cpu_ratio()).sum::<f64>() / self.stats.len() as f64
+    }
+
+    /// Per-layer CPU-ratio series (input to recall profiling).
+    pub fn cpu_ratio_series(&self, n_layers: usize) -> CpuRatioSeries {
+        let mut series = vec![Vec::new(); n_layers];
+        for st in &self.stats {
+            for (l, ls) in st.layers.iter().enumerate() {
+                let r = if ls.selected_blocks == 0 {
+                    0.0
+                } else {
+                    ls.cpu_blocks as f64 / ls.selected_blocks as f64
+                };
+                series[l].push(r);
+            }
+        }
+        CpuRatioSeries { series }
+    }
+}
+
+/// Drive `scheduler` until every request finished or `max_steps` hit.
+pub fn run_serving(
+    scheduler: &mut dyn DecodeScheduler,
+    batch: &mut Batch,
+    requests: Vec<RequestSpec>,
+    max_steps: usize,
+) -> crate::Result<ServingRun> {
+    let t0 = std::time::Instant::now();
+    for r in requests {
+        batch.enqueue(r);
+    }
+    let mut stats = Vec::new();
+    let mut steps = 0;
+    while !batch.idle() && steps < max_steps {
+        for req in batch.admissible() {
+            scheduler.admit(batch, &req)?;
+        }
+        if batch.live() == 0 {
+            break;
+        }
+        stats.push(scheduler.step(batch)?);
+        batch.reap();
+        steps += 1;
+    }
+    // Anything still live at the step cap is finalized as-is.
+    while let Some(s) = batch.seqs.pop() {
+        batch.finished.push(s.finish());
+    }
+    let mut outputs = std::mem::take(&mut batch.finished);
+    outputs.sort_by_key(|o| o.id);
+    Ok(ServingRun {
+        method: Method::Scout, // caller overwrites
+        outputs,
+        stats,
+        wall_us: t0.elapsed().as_micros() as u64,
+    })
+}
+
+/// Convenience: build scheduler + batch, run requests, tag the method.
+pub fn run_method(
+    stack: &Stack,
+    method: Method,
+    requests: Vec<RequestSpec>,
+    max_steps: usize,
+    profile: Option<&CpuRatioSeries>,
+) -> crate::Result<ServingRun> {
+    let mut sched = stack.scheduler(method, profile);
+    let mut batch = stack.batch();
+    let mut run = run_serving(sched.as_mut(), &mut batch, requests, max_steps)?;
+    run.method = method;
+    Ok(run)
+}
+
+/// Fraction of generated tokens identical to the oracle's, position by
+/// position (the Fig. 7 "accuracy vs FullKV" proxy at token level).
+pub fn token_agreement(a: &ServingRun, b: &ServingRun) -> f64 {
+    let mut same = 0usize;
+    let mut total = 0usize;
+    for (oa, ob) in a.outputs.iter().zip(&b.outputs) {
+        debug_assert_eq!(oa.id, ob.id);
+        for (x, y) in oa.generated.iter().zip(&ob.generated) {
+            total += 1;
+            if x == y {
+                same += 1;
+            }
+        }
+    }
+    if total == 0 { 0.0 } else { same as f64 / total as f64 }
+}

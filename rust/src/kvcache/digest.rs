@@ -1,0 +1,108 @@
+//! GPU-resident Quest digest store (kmin/kmax per block per layer).
+
+use crate::model::ModelSpec;
+use crate::tensor::Tensor;
+
+/// Channel-wise min/max digests for every (layer, block).
+///
+/// Kept dense at `[nb, Hkv, D]` per layer so the whole store can be handed
+/// to the `block_scores` artifact without reshaping. In the paper this is
+/// the only per-token-derived state that always stays on the GPU.
+pub struct DigestStore {
+    n_layers: usize,
+    nb: usize,
+    w: usize, // Hkv * D
+    kmin: Vec<Tensor>, // per layer [nb, Hkv*D] (flattened head dims)
+    kmax: Vec<Tensor>,
+}
+
+impl DigestStore {
+    pub fn new(spec: &ModelSpec) -> Self {
+        let nb = spec.n_blocks();
+        let w = spec.n_kv_heads * spec.head_dim;
+        Self {
+            n_layers: spec.n_layers,
+            nb,
+            w,
+            kmin: (0..spec.n_layers).map(|_| Tensor::full(&[nb, w], f32::INFINITY)).collect(),
+            kmax: (0..spec.n_layers).map(|_| Tensor::full(&[nb, w], f32::NEG_INFINITY)).collect(),
+        }
+    }
+
+    /// Digest memory footprint in bytes (Fig. 10: smaller block size ->
+    /// more blocks -> bigger digest cache -> smaller max batch).
+    pub fn bytes(&self) -> usize {
+        2 * self.n_layers * self.nb * self.w * 4
+    }
+
+    /// Recompute one block's digest from its K slab `[bs, Hkv*D]`.
+    pub fn rebuild_block(&mut self, layer: usize, block: usize, k_slab: &[f32]) {
+        debug_assert_eq!(k_slab.len() % self.w, 0);
+        let bs = k_slab.len() / self.w;
+        let lo = self.kmin[layer].rows_mut(block, 1);
+        lo.fill(f32::INFINITY);
+        for t in 0..bs {
+            for i in 0..self.w {
+                let x = k_slab[t * self.w + i];
+                if x < lo[i] {
+                    lo[i] = x;
+                }
+            }
+        }
+        let hi = self.kmax[layer].rows_mut(block, 1);
+        hi.fill(f32::NEG_INFINITY);
+        for t in 0..bs {
+            for i in 0..self.w {
+                let x = k_slab[t * self.w + i];
+                if x > hi[i] {
+                    hi[i] = x;
+                }
+            }
+        }
+    }
+
+    /// (kmin, kmax) slabs of one block, each `[Hkv*D]`.
+    pub fn block(&self, layer: usize, block: usize) -> (&[f32], &[f32]) {
+        (self.kmin[layer].rows(block, 1), self.kmax[layer].rows(block, 1))
+    }
+
+    /// Dense per-layer digest tensors `[nb, Hkv*D]` (artifact operands).
+    pub fn layer(&self, layer: usize) -> (&Tensor, &Tensor) {
+        (&self.kmin[layer], &self.kmax[layer])
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.nb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::PROXY_MODELS;
+
+    #[test]
+    fn rebuild_computes_min_max() {
+        let mut spec = PROXY_MODELS[0].1();
+        spec.max_seq = 64;
+        spec.block_size = 4;
+        spec.n_kv_heads = 1;
+        spec.head_dim = 2;
+        let mut d = DigestStore::new(&spec);
+        // 4 tokens x 2 channels
+        let slab = [1.0, -5.0, 3.0, 2.0, -1.0, 0.0, 2.0, 7.0];
+        d.rebuild_block(0, 3, &slab);
+        let (lo, hi) = d.block(0, 3);
+        assert_eq!(lo, &[-1.0, -5.0]);
+        assert_eq!(hi, &[3.0, 7.0]);
+    }
+
+    #[test]
+    fn footprint_scales_inverse_with_block_size() {
+        let mut s32 = PROXY_MODELS[0].1();
+        s32.block_size = 32;
+        let mut s16 = s32.clone();
+        s16.block_size = 16;
+        assert_eq!(DigestStore::new(&s16).bytes(), 2 * DigestStore::new(&s32).bytes());
+    }
+}

@@ -1,0 +1,23 @@
+//! Block-grained KV cache split across a GPU pool and a DRAM pool.
+//!
+//! The paper's memory model (§3.2): the full KV cache lives in DRAM; the
+//! GPU holds (a) per-block Quest digests for every block and (b) a
+//! budget-bounded *resident set* of important blocks per (sequence,
+//! layer), plus the still-filling tail block. In this reproduction the
+//! backing store is host memory either way (there is no device), so
+//! residency is a *policy object* ([`ResidentSet`]) — exactly the part of
+//! the system the coordinator and the timing plane care about — while
+//! [`SeqKvCache`] provides the storage, digest maintenance, and the
+//! gather operation that materializes resident blocks for the GPU engine.
+
+mod digest;
+mod resident;
+mod seq;
+
+pub use digest::DigestStore;
+pub use resident::ResidentSet;
+pub use seq::SeqKvCache;
+
+/// Index of a KV block within one sequence's cache (position-major:
+/// block `b` covers tokens `[b*bs, (b+1)*bs)`).
+pub type BlockId = usize;

@@ -1,0 +1,113 @@
+//! GPU residency policy: which complete blocks sit in the GPU pool.
+//!
+//! Paper semantics (§3.2/§3.4): the resident set is established after
+//! prefill (top-budget blocks by digest score), optionally pins the
+//! attention-sink block and the most recent blocks, and is refreshed only
+//! by the asynchronous periodic recall — *not* every step (that is what
+//! keeps recall I/O off the critical path).
+
+use super::BlockId;
+
+/// Budget-bounded set of GPU-resident complete blocks for one
+/// (sequence, layer).
+#[derive(Debug, Clone)]
+pub struct ResidentSet {
+    capacity: usize,
+    resident: Vec<bool>,
+    count: usize,
+}
+
+impl ResidentSet {
+    pub fn new(n_blocks: usize, capacity: usize) -> Self {
+        Self { capacity, resident: vec![false; n_blocks], count: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.resident.get(b).copied().unwrap_or(false)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.resident.iter().enumerate().filter(|(_, &r)| r).map(|(i, _)| i)
+    }
+
+    /// Replace the resident set with (up to capacity) blocks, highest
+    /// priority first. Returns the blocks that were newly added — i.e.
+    /// the recall I/O the GPU pool must fetch over PCIe.
+    pub fn refresh(&mut self, ranked: &[BlockId]) -> Vec<BlockId> {
+        let take: Vec<BlockId> = ranked.iter().copied().take(self.capacity).collect();
+        let mut added = Vec::new();
+        let mut next = vec![false; self.resident.len()];
+        for &b in &take {
+            debug_assert!(b < self.resident.len(), "block {b} out of range");
+            next[b] = true;
+            if !self.resident[b] {
+                added.push(b);
+            }
+        }
+        self.resident = next;
+        self.count = take.len();
+        added
+    }
+
+    /// Split a selected top-k set into (gpu_resident, cpu_side) — the
+    /// partition at the heart of §3.2's collaborative attention.
+    pub fn partition(&self, selected: &[BlockId]) -> (Vec<BlockId>, Vec<BlockId>) {
+        let mut gpu = Vec::with_capacity(selected.len());
+        let mut cpu = Vec::new();
+        for &b in selected {
+            if self.contains(b) {
+                gpu.push(b);
+            } else {
+                cpu.push(b);
+            }
+        }
+        (gpu, cpu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refresh_reports_recall_io() {
+        let mut r = ResidentSet::new(16, 4);
+        let added = r.refresh(&[1, 2, 3, 4]);
+        assert_eq!(added, vec![1, 2, 3, 4]);
+        // overlap: only 5 is new, 9 beyond capacity
+        let added = r.refresh(&[2, 3, 5, 1, 9]);
+        assert_eq!(added, vec![5]);
+        assert_eq!(r.len(), 4);
+        assert!(!r.contains(4));
+        assert!(r.contains(5));
+    }
+
+    #[test]
+    fn partition_splits_by_residency() {
+        let mut r = ResidentSet::new(8, 3);
+        r.refresh(&[0, 2, 4]);
+        let (gpu, cpu) = r.partition(&[0, 1, 2, 3]);
+        assert_eq!(gpu, vec![0, 2]);
+        assert_eq!(cpu, vec![1, 3]);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut r = ResidentSet::new(8, 2);
+        r.refresh(&[0, 1, 2, 3]);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.iter().collect::<Vec<_>>(), vec![0, 1]);
+    }
+}

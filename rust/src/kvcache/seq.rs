@@ -1,0 +1,314 @@
+//! Per-sequence KV storage (the DRAM pool) + tail handling.
+
+use crate::model::ModelSpec;
+use crate::tensor::Tensor;
+
+use super::digest::DigestStore;
+
+/// One sequence's KV cache across all layers.
+///
+/// Layout per layer: K and V as `[S_max, Hkv, D]` row-major tensors, so a
+/// block is a contiguous `[bs, Hkv, D]` slab — the unit of gather (GPU
+/// engine), CPU attention, and simulated PCIe transfer.
+pub struct SeqKvCache {
+    spec: ModelSpec,
+    /// Valid tokens (same for every layer).
+    len: usize,
+    k: Vec<Tensor>, // per layer [S, Hkv, D]
+    v: Vec<Tensor>,
+    pub digests: DigestStore,
+}
+
+impl SeqKvCache {
+    pub fn new(spec: &ModelSpec) -> Self {
+        let per = [spec.max_seq, spec.n_kv_heads, spec.head_dim];
+        Self {
+            spec: spec.clone(),
+            len: 0,
+            k: (0..spec.n_layers).map(|_| Tensor::zeros(&per)).collect(),
+            v: (0..spec.n_layers).map(|_| Tensor::zeros(&per)).collect(),
+            digests: DigestStore::new(spec),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Number of *complete* blocks (the tail block, if partial, is not
+    /// counted — it always stays GPU-side).
+    pub fn full_blocks(&self) -> usize {
+        self.len / self.spec.block_size
+    }
+
+    /// Tokens in the partial tail block.
+    pub fn tail_len(&self) -> usize {
+        self.len % self.spec.block_size
+    }
+
+    /// Row width of one token's K (or V) in floats.
+    fn tok_w(&self) -> usize {
+        self.spec.n_kv_heads * self.spec.head_dim
+    }
+
+    /// Bulk-load prefill K/V for one layer (roped K, as produced by the
+    /// `prefill` artifact: `[S, Hkv, D]` with only `new_len` rows valid).
+    pub fn load_prefill_layer(&mut self, layer: usize, k: &[f32], v: &[f32], new_len: usize) {
+        let w = self.tok_w();
+        assert!(new_len <= self.spec.max_seq);
+        assert!(k.len() >= new_len * w && v.len() >= new_len * w);
+        self.k[layer].rows_mut(0, new_len).copy_from_slice(&k[..new_len * w]);
+        self.v[layer].rows_mut(0, new_len).copy_from_slice(&v[..new_len * w]);
+    }
+
+    /// Finish a prefill load: set length and (re)build all digests.
+    pub fn finish_prefill(&mut self, new_len: usize) {
+        self.len = new_len;
+        for layer in 0..self.spec.n_layers {
+            for b in 0..self.full_blocks() {
+                let k = self.block_k(layer, b).to_vec();
+                self.digests.rebuild_block(layer, b, &k);
+            }
+        }
+    }
+
+    /// Append one token's K/V for one layer at the current length.
+    /// Call for every layer, then [`advance`] once.
+    pub fn append_layer(&mut self, layer: usize, k_new: &[f32], v_new: &[f32]) {
+        let w = self.tok_w();
+        assert_eq!(k_new.len(), w, "k_new width");
+        assert_eq!(v_new.len(), w, "v_new width");
+        assert!(self.len < self.spec.max_seq, "KV cache overflow");
+        self.k[layer].rows_mut(self.len, 1).copy_from_slice(k_new);
+        self.v[layer].rows_mut(self.len, 1).copy_from_slice(v_new);
+    }
+
+    /// Advance the token count after all layers appended; finalizes the
+    /// digest of any block that just completed.
+    pub fn advance(&mut self) {
+        self.len += 1;
+        if self.len % self.spec.block_size == 0 {
+            let b = self.len / self.spec.block_size - 1;
+            for layer in 0..self.spec.n_layers {
+                let k = self.block_k(layer, b).to_vec();
+                self.digests.rebuild_block(layer, b, &k);
+            }
+        }
+    }
+
+    /// Contiguous K rows `[tokens, Hkv, D]` starting at token `start`
+    /// (dense-cache assembly for the FullKV oracle).
+    pub fn k_rows(&self, layer: usize, start: usize, tokens: usize) -> &[f32] {
+        self.k[layer].rows(start, tokens)
+    }
+
+    pub fn v_rows(&self, layer: usize, start: usize, tokens: usize) -> &[f32] {
+        self.v[layer].rows(start, tokens)
+    }
+
+    /// Contiguous K slab of one complete-or-partial block: `[bs, Hkv, D]`.
+    pub fn block_k(&self, layer: usize, block: usize) -> &[f32] {
+        let bs = self.spec.block_size;
+        self.k[layer].rows(block * bs, bs)
+    }
+
+    pub fn block_v(&self, layer: usize, block: usize) -> &[f32] {
+        let bs = self.spec.block_size;
+        self.v[layer].rows(block * bs, bs)
+    }
+
+    /// Overwrite one complete block's K/V (workload construction — e.g.
+    /// planting retrieval needles) and rebuild its digest.
+    pub fn overwrite_block(&mut self, layer: usize, block: usize, k: &[f32], v: &[f32]) {
+        let bs = self.spec.block_size;
+        let w = self.tok_w();
+        assert!(block < self.full_blocks(), "can only overwrite complete blocks");
+        assert_eq!(k.len(), bs * w);
+        assert_eq!(v.len(), bs * w);
+        self.k[layer].rows_mut(block * bs, bs).copy_from_slice(k);
+        self.v[layer].rows_mut(block * bs, bs).copy_from_slice(v);
+        self.digests.rebuild_block(layer, block, k);
+    }
+
+    /// Gather `blocks` into contiguous `[kb_slots, bs, Hkv, D]` K/V
+    /// buffers plus a `[kb_slots, bs]` token mask (1 = valid). Unused
+    /// slots are masked out. This is exactly what the `sparse_attn`
+    /// artifact consumes for one sequence of the batch tile.
+    pub fn gather_blocks(
+        &self,
+        layer: usize,
+        blocks: &[usize],
+        kb_slots: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        mask_out: &mut [f32],
+    ) {
+        let bs = self.spec.block_size;
+        let blk_w = bs * self.tok_w();
+        assert!(blocks.len() <= kb_slots, "{} blocks > {kb_slots} slots", blocks.len());
+        assert_eq!(k_out.len(), kb_slots * blk_w);
+        assert_eq!(mask_out.len(), kb_slots * bs);
+        mask_out.fill(0.0);
+        k_out.fill(0.0);
+        v_out.fill(0.0);
+        for (slot, &b) in blocks.iter().enumerate() {
+            debug_assert!(b < self.full_blocks(), "block {b} not complete");
+            k_out[slot * blk_w..(slot + 1) * blk_w].copy_from_slice(self.block_k(layer, b));
+            v_out[slot * blk_w..(slot + 1) * blk_w].copy_from_slice(self.block_v(layer, b));
+            mask_out[slot * bs..(slot + 1) * bs].fill(1.0);
+        }
+    }
+
+    /// Gather the tail (partial block + the not-yet-appended current
+    /// token handled separately by the engines): `[1, bs, Hkv, D]` + mask.
+    pub fn gather_tail(
+        &self,
+        layer: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        mask_out: &mut [f32],
+    ) {
+        let bs = self.spec.block_size;
+        let w = self.tok_w();
+        assert_eq!(k_out.len(), bs * w);
+        assert_eq!(mask_out.len(), bs);
+        k_out.fill(0.0);
+        v_out.fill(0.0);
+        mask_out.fill(0.0);
+        let tail = self.tail_len();
+        if tail == 0 {
+            return;
+        }
+        let start = self.full_blocks() * bs;
+        k_out[..tail * w].copy_from_slice(self.k[layer].rows(start, tail));
+        v_out[..tail * w].copy_from_slice(self.v[layer].rows(start, tail));
+        mask_out[..tail].fill(1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::PROXY_MODELS;
+
+    fn tiny_spec() -> ModelSpec {
+        let mut s = PROXY_MODELS[0].1();
+        s.n_layers = 2;
+        s.max_seq = 64;
+        s.block_size = 8;
+        s.n_kv_heads = 2;
+        s.head_dim = 4;
+        s
+    }
+
+    fn fill_tokens(c: &mut SeqKvCache, n: usize) {
+        let w = c.spec.n_kv_heads * c.spec.head_dim;
+        for t in 0..n {
+            for l in 0..c.spec.n_layers {
+                let k: Vec<f32> = (0..w).map(|i| (t * 100 + l * 10 + i) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                c.append_layer(l, &k, &v);
+            }
+            c.advance();
+        }
+    }
+
+    #[test]
+    fn append_and_blocks() {
+        let spec = tiny_spec();
+        let mut c = SeqKvCache::new(&spec);
+        fill_tokens(&mut c, 20);
+        assert_eq!(c.len(), 20);
+        assert_eq!(c.full_blocks(), 2);
+        assert_eq!(c.tail_len(), 4);
+        // block 1 of layer 1 starts at token 8
+        let blk = c.block_k(1, 1);
+        assert_eq!(blk[0], (8 * 100 + 10) as f32);
+    }
+
+    #[test]
+    fn digests_finalized_on_block_completion() {
+        let spec = tiny_spec();
+        let mut c = SeqKvCache::new(&spec);
+        fill_tokens(&mut c, 8);
+        let (kmin, kmax) = c.digests.block(0, 0);
+        // K values grow with token id, so max = last token's values
+        let w = spec.n_kv_heads * spec.head_dim;
+        assert_eq!(kmax[w - 1], (7 * 100 + w - 1) as f32);
+        assert_eq!(kmin[0], 0.0);
+    }
+
+    #[test]
+    fn gather_masks_unused_slots() {
+        let spec = tiny_spec();
+        let mut c = SeqKvCache::new(&spec);
+        fill_tokens(&mut c, 24);
+        let w = spec.n_kv_heads * spec.head_dim;
+        let bs = spec.block_size;
+        let mut k = vec![9.0; 4 * bs * w];
+        let mut v = vec![9.0; 4 * bs * w];
+        let mut m = vec![9.0; 4 * bs];
+        c.gather_blocks(0, &[2, 0], 4, &mut k, &mut v, &mut m);
+        assert_eq!(&m[..bs], &vec![1.0; bs][..]);
+        assert_eq!(&m[2 * bs..], &vec![0.0; 2 * bs][..]);
+        // slot 0 = block 2 (starts at token 16)
+        assert_eq!(k[0], (16 * 100) as f32);
+        // slot 1 = block 0
+        assert_eq!(k[bs * w], 0.0);
+        // unused slots zeroed
+        assert_eq!(k[2 * bs * w], 0.0);
+    }
+
+    #[test]
+    fn tail_gather() {
+        let spec = tiny_spec();
+        let mut c = SeqKvCache::new(&spec);
+        fill_tokens(&mut c, 11);
+        let w = spec.n_kv_heads * spec.head_dim;
+        let bs = spec.block_size;
+        let mut k = vec![0.0; bs * w];
+        let mut v = vec![0.0; bs * w];
+        let mut m = vec![0.0; bs];
+        c.gather_tail(0, &mut k, &mut v, &mut m);
+        assert_eq!(m.iter().sum::<f32>(), 3.0);
+        assert_eq!(k[0], (8 * 100) as f32); // token 8 = first tail token
+    }
+
+    #[test]
+    fn prefill_load_matches_append() {
+        let spec = tiny_spec();
+        let w = spec.n_kv_heads * spec.head_dim;
+        let n = 17;
+        let mut a = SeqKvCache::new(&spec);
+        fill_tokens(&mut a, n);
+        let mut b = SeqKvCache::new(&spec);
+        for l in 0..spec.n_layers {
+            let mut k = vec![0.0; spec.max_seq * w];
+            let mut v = vec![0.0; spec.max_seq * w];
+            for t in 0..n {
+                for i in 0..w {
+                    k[t * w + i] = (t * 100 + l * 10 + i) as f32;
+                    v[t * w + i] = -k[t * w + i];
+                }
+            }
+            b.load_prefill_layer(l, &k, &v, n);
+        }
+        b.finish_prefill(n);
+        assert_eq!(a.len(), b.len());
+        for l in 0..spec.n_layers {
+            assert_eq!(a.block_k(l, 1), b.block_k(l, 1));
+            let (amin, amax) = a.digests.block(l, 0);
+            let (bmin, bmax) = b.digests.block(l, 0);
+            assert_eq!(amin, bmin);
+            assert_eq!(amax, bmax);
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! # ScoutAttention
+//!
+//! A three-layer (rust + JAX + Pallas, AOT via XLA/PJRT) reproduction of
+//! *"ScoutAttention: Efficient KV Cache Offloading via Layer-Ahead CPU
+//! Pre-computation for LLM Inference"*.
+//!
+//! Layering (see `DESIGN.md`):
+//! - **L1/L2** live in `python/compile/`: Pallas kernels (Quest digests,
+//!   block scoring, block-sparse flash attention, LSE merge) wrapped in a
+//!   GQA transformer, AOT-lowered once to HLO-text artifacts.
+//! - **L3** is this crate: the serving coordinator. It owns the request
+//!   path end-to-end — routing, continuous batching, the block-grained KV
+//!   cache split across a GPU pool and a DRAM pool, the layer-ahead
+//!   CPU pre-computation pipeline (Algorithm 1), asynchronous periodic
+//!   recall (§3.4), and the baseline schedulers (FullKV / InfiniGen /
+//!   HGCA) used by the paper's evaluation.
+//!
+//! Two planes:
+//! - the **numerics plane** executes real attention via PJRT-loaded XLA
+//!   executables (standing in for the GPU) plus a native-rust block
+//!   attention worker (standing in for the CPU/IPEX side);
+//! - the **timing plane** (`sim`) replays coordinator schedules under the
+//!   paper's published device ratios (PCIe curve, HBM bw, 20x GPU/CPU
+//!   gap) to regenerate the evaluation figures.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod engines;
+pub mod harness;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod sparse;
+pub mod studies;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+pub use config::RunConfig;
+pub use tensor::Tensor;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,183 @@
+//! `scout` — the ScoutAttention leader binary.
+//!
+//! Subcommands:
+//!   serve        run the JSON-lines TCP server (python-free request path)
+//!   run          offline serving run, prints throughput + schedule stats
+//!   sim          timing-plane simulation of the paper's figures
+//!   trace        ASCII Gantt of each method's pipeline (Fig. 1)
+//!   tab1         query-predictability study across the proxy model zoo
+//!   drift        CPU-compute-ratio drift + recall profiling (Fig. 6)
+//!   warmup       compile all artifacts for a preset
+//!   dump-config  print the effective JSON config
+//!
+//! Global flags: --config FILE.json, --preset NAME, --artifacts-dir DIR,
+//! --method fullkv|infinigen|hgca|scout. (Hand-rolled parsing — the
+//! offline crate universe has no clap.)
+
+use scoutattention::config::{Method, RunConfig};
+use scoutattention::harness::{self, Stack};
+use scoutattention::sim::pipeline::{MethodSim, SynthWorkload};
+use scoutattention::sim::{trace, timing::DeviceModel};
+use scoutattention::workload::{LengthMix, WorkloadGen};
+
+const USAGE: &str = "usage: scout [--config F] [--preset P] [--artifacts-dir D] [--method M] <cmd>
+  serve
+  run   [--requests N] [--prompt-len N] [--new-tokens N]
+  sim   [--seq-len N] [--batch N] [--steps N]
+  trace
+  tab1
+  drift [--steps N]
+  warmup
+  dump-config";
+
+/// Minimal flag parser: --key value pairs + one positional subcommand.
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> anyhow::Result<Self> {
+        let mut cmd = None;
+        let mut flags = std::collections::HashMap::new();
+        let mut it = std::env::args().skip(1);
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value\n{USAGE}"))?;
+                flags.insert(key.to_string(), v);
+            } else if cmd.is_none() {
+                cmd = Some(a);
+            } else {
+                anyhow::bail!("unexpected argument {a:?}\n{USAGE}");
+            }
+        }
+        Ok(Self { cmd: cmd.ok_or_else(|| anyhow::anyhow!(USAGE))?, flags })
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+}
+
+fn load_config(args: &Args) -> scoutattention::Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(p) => RunConfig::from_json_file(p)?,
+        None => RunConfig::for_preset(args.get("preset").unwrap_or("serve-20m")),
+    };
+    if args.get("config").is_none() {
+        cfg.artifacts_dir = args.get("artifacts-dir").unwrap_or("artifacts").to_string();
+    }
+    if let Some(m) = args.get("method") {
+        cfg.method = m.parse()?;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse()?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn main() -> scoutattention::Result<()> {
+    let args = Args::parse()?;
+    let cfg = load_config(&args)?;
+    match args.cmd.as_str() {
+        "serve" => scoutattention::server::serve(cfg)?,
+        "run" => {
+            let requests = args.get_usize("requests", 8)?;
+            let new_tokens = args.get_usize("new-tokens", 32)?;
+            let stack = Stack::load(&cfg)?;
+            let spec = stack.gpu.spec.clone();
+            let prompt_len = args
+                .get_usize("prompt-len", 256)?
+                .min(spec.max_seq - new_tokens - 1);
+            let mut gen =
+                WorkloadGen::new(cfg.seed, spec.vocab, LengthMix::Fixed(prompt_len), new_tokens);
+            let reqs = gen.take(requests);
+            let run = harness::run_method(&stack, cfg.method, reqs, 10_000, None)?;
+            println!("method           : {}", cfg.method.label());
+            println!("requests         : {}", run.outputs.len());
+            println!(
+                "tokens generated : {}",
+                run.outputs.iter().map(|o| o.generated.len()).sum::<usize>()
+            );
+            println!("wall time        : {:.2} s", run.wall_us as f64 / 1e6);
+            println!("wall throughput  : {:.1} tok/s", run.wall_throughput_tps());
+            println!("mean CPU ratio   : {:.3}", run.mean_cpu_ratio());
+            let recall: usize = run.stats.iter().map(|s| s.recall_blocks()).sum();
+            println!("recall volume    : {recall} blocks");
+            println!("-- slowest artifact calls --");
+            for (name, n, dt) in stack.rt.counters.snapshot().into_iter().take(5) {
+                println!("  {name:<18} x{n:<6} {:.1} ms total", dt.as_secs_f64() * 1e3);
+            }
+        }
+        "sim" => {
+            let seq_len = args.get_usize("seq-len", 32768)?;
+            let batch = args.get_usize("batch", 40)?;
+            let steps = args.get_usize("steps", 128)?;
+            let mut w = SynthWorkload::paper_default(seq_len, batch);
+            w.steps = steps;
+            println!(
+                "timing-plane simulation: {seq_len}-token context, batch {batch}, {steps} steps"
+            );
+            println!("{:<15} {:>12} {:>8} {:>10}", "method", "tok/s", "idle%", "step(ms)");
+            for m in Method::ALL {
+                let mut sim = MethodSim::new(m, cfg.device.clone());
+                if m != Method::Scout {
+                    sim.periodic_recall = false;
+                }
+                let r = sim.run(&w);
+                println!(
+                    "{:<15} {:>12.1} {:>7.1}% {:>10.2}",
+                    r.method,
+                    r.throughput_tps(),
+                    r.idle_fraction() * 100.0,
+                    r.total_us / r.steps as f64 / 1000.0
+                );
+            }
+        }
+        "trace" => {
+            let m: DeviceModel = cfg.device.clone();
+            // paper anchors: attn 300us/layer at the 4k budget, CPU share
+            // ~12% of the budget, InfiniGen recalls ~30% of budget/layer
+            let kv = m.kv_layer_bytes(4096) * 40.0;
+            let t_attn = m.gpu_attn_us(kv);
+            let t_cpu = m.cpu_attn_us(kv * 0.12, 1.0);
+            let t_cpu_hgca = m.cpu_attn_us(kv * 0.75, 1.0);
+            let t_io = 0.3 * 64.0 * m.pcie_msg_overhead_us + kv * 0.3 / m.pcie_line_bw;
+            for method in Method::ALL {
+                let tc = if method == Method::Hgca { t_cpu_hgca } else { t_cpu };
+                let e = trace::build_step(method, &m, t_attn, tc, t_io, 8);
+                println!("== {} ==", method.label());
+                println!("{}", trace::render_gantt(&e, 72));
+            }
+        }
+        "tab1" => {
+            scoutattention::studies::tab1_query_similarity(cfg.seed, &mut std::io::stdout())?;
+        }
+        "drift" => {
+            let steps = args.get_usize("steps", 48)?;
+            scoutattention::studies::fig6_drift(&cfg, steps, &mut std::io::stdout())?;
+        }
+        "warmup" => {
+            let stack = Stack::load(&cfg)?;
+            stack.rt.warmup()?;
+            println!(
+                "compiled {} artifacts for {}",
+                stack.rt.manifest.entries.len(),
+                cfg.preset
+            );
+        }
+        "dump-config" => println!("{}", cfg.to_json().to_string()),
+        other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
+    }
+    Ok(())
+}

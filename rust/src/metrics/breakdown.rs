@@ -1,0 +1,105 @@
+//! Per-phase latency breakdown (Fig. 11's stacked bars).
+
+
+/// Where a unit of wall-clock time went during a decode step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// GPU busy: attention kernels.
+    GpuAttention,
+    /// GPU busy: everything else in the layer (QKV, FFN, norm, head).
+    GpuOther,
+    /// GPU stalled waiting on CPU attention or PCIe transfers ("idle" in
+    /// Fig. 11).
+    Idle,
+    /// Scheduler/bookkeeping on the critical path.
+    Scheduler,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] =
+        [Phase::GpuAttention, Phase::GpuOther, Phase::Idle, Phase::Scheduler];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::GpuAttention => "attention",
+            Phase::GpuOther => "other-compute",
+            Phase::Idle => "idle",
+            Phase::Scheduler => "scheduler",
+        }
+    }
+}
+
+/// Accumulated time per phase (microseconds).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseBreakdown {
+    pub gpu_attention_us: f64,
+    pub gpu_other_us: f64,
+    pub idle_us: f64,
+    pub scheduler_us: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn add(&mut self, phase: Phase, us: f64) {
+        debug_assert!(us >= 0.0, "negative phase time {us}");
+        match phase {
+            Phase::GpuAttention => self.gpu_attention_us += us,
+            Phase::GpuOther => self.gpu_other_us += us,
+            Phase::Idle => self.idle_us += us,
+            Phase::Scheduler => self.scheduler_us += us,
+        }
+    }
+
+    pub fn get(&self, phase: Phase) -> f64 {
+        match phase {
+            Phase::GpuAttention => self.gpu_attention_us,
+            Phase::GpuOther => self.gpu_other_us,
+            Phase::Idle => self.idle_us,
+            Phase::Scheduler => self.scheduler_us,
+        }
+    }
+
+    pub fn total_us(&self) -> f64 {
+        self.gpu_attention_us + self.gpu_other_us + self.idle_us + self.scheduler_us
+    }
+
+    /// Fig. 11's headline number: fraction of end-to-end time the GPU
+    /// spends stalled.
+    pub fn idle_fraction(&self) -> f64 {
+        let t = self.total_us();
+        if t == 0.0 { 0.0 } else { self.idle_us / t }
+    }
+
+    pub fn merge(&mut self, other: &PhaseBreakdown) {
+        self.gpu_attention_us += other.gpu_attention_us;
+        self.gpu_other_us += other.gpu_other_us;
+        self.idle_us += other.idle_us;
+        self.scheduler_us += other.scheduler_us;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_fraction() {
+        let mut b = PhaseBreakdown::default();
+        b.add(Phase::GpuAttention, 30.0);
+        b.add(Phase::GpuOther, 10.0);
+        b.add(Phase::Idle, 60.0);
+        assert!((b.idle_fraction() - 0.6).abs() < 1e-9);
+        assert_eq!(b.total_us(), 100.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseBreakdown::default();
+        a.add(Phase::Idle, 1.0);
+        let mut b = PhaseBreakdown::default();
+        b.add(Phase::Idle, 2.0);
+        b.add(Phase::Scheduler, 3.0);
+        a.merge(&b);
+        assert_eq!(a.idle_us, 3.0);
+        assert_eq!(a.scheduler_us, 3.0);
+    }
+}

@@ -1,0 +1,73 @@
+//! Metrics substrate: counters, latency histograms, phase breakdowns.
+//!
+//! Everything the paper reports — decode throughput, GPU idle fraction,
+//! CPU compute ratio, latency breakdown (Fig. 11) — is assembled from
+//! these primitives by the coordinator and the simulator.
+
+mod breakdown;
+mod histogram;
+
+pub use breakdown::{Phase, PhaseBreakdown};
+pub use histogram::Histogram;
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use std::sync::Mutex;
+
+/// Named execution counters (per-artifact call counts + cumulative time).
+#[derive(Default)]
+pub struct Counters {
+    inner: Mutex<HashMap<String, (u64, Duration)>>,
+}
+
+impl Counters {
+    pub fn record_exec(&self, name: &str, dt: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.entry(name.to_string()).or_insert((0, Duration::ZERO));
+        e.0 += 1;
+        e.1 += dt;
+    }
+
+    /// (calls, total time) for one name.
+    pub fn get(&self, name: &str) -> (u64, Duration) {
+        self.inner
+            .lock().unwrap()
+            .get(name)
+            .copied()
+            .unwrap_or((0, Duration::ZERO))
+    }
+
+    /// Snapshot sorted by cumulative time, descending.
+    pub fn snapshot(&self) -> Vec<(String, u64, Duration)> {
+        let mut v: Vec<_> = self
+            .inner
+            .lock().unwrap()
+            .iter()
+            .map(|(k, (n, d))| (k.clone(), *n, *d))
+            .collect();
+        v.sort_by(|a, b| b.2.cmp(&a.2));
+        v
+    }
+
+    pub fn reset(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let c = Counters::default();
+        c.record_exec("a", Duration::from_millis(2));
+        c.record_exec("a", Duration::from_millis(3));
+        c.record_exec("b", Duration::from_millis(1));
+        let (n, d) = c.get("a");
+        assert_eq!(n, 2);
+        assert_eq!(d, Duration::from_millis(5));
+        assert_eq!(c.snapshot()[0].0, "a");
+    }
+}

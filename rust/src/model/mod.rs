@@ -1,0 +1,12 @@
+//! Model descriptions and synthetic weights.
+//!
+//! `ModelSpec` mirrors the python `ModelConfig` (the artifact manifest is
+//! the source of truth for artifact-backed runs); `weights` generates
+//! seeded synthetic parameters with residual-stream-realistic scaling so
+//! the Table-1 / Fig-6 structural studies transfer (DESIGN.md §2).
+
+pub mod spec;
+pub mod weights;
+
+pub use spec::{ModelSpec, PROXY_MODELS};
+pub use weights::Weights;

@@ -1,0 +1,173 @@
+//! Static model shape description.
+
+use crate::util::Json;
+
+/// Shape of a GQA transformer plus its KV-cache blocking parameters.
+///
+/// Matches `python/compile/model.py::ModelConfig` field-for-field; when a
+/// run is artifact-backed, the copy embedded in `manifest.json` wins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// KV cache capacity in tokens (S).
+    pub max_seq: usize,
+    /// Tokens per KV block (bs).
+    pub block_size: usize,
+    /// Sparse budget in blocks (kb = budget_tokens / bs).
+    pub k_blocks: usize,
+    /// Decode batch tile the artifacts were lowered for (B).
+    pub batch: usize,
+    pub rope_theta: f64,
+}
+
+impl ModelSpec {
+    /// Parse from the manifest's embedded python `ModelConfig`.
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let spec = ModelSpec {
+            name: j.req_str("name")?,
+            n_layers: j.req_usize("n_layers")?,
+            d_model: j.req_usize("d_model")?,
+            n_q_heads: j.req_usize("n_q_heads")?,
+            n_kv_heads: j.req_usize("n_kv_heads")?,
+            head_dim: j.req_usize("head_dim")?,
+            d_ff: j.req_usize("d_ff")?,
+            vocab: j.req_usize("vocab")?,
+            max_seq: j.req_usize("max_seq")?,
+            block_size: j.req_usize("block_size")?,
+            k_blocks: j.req_usize("k_blocks")?,
+            batch: j.req_usize("batch")?,
+            rope_theta: j.get("rope_theta").and_then(|v| v.as_f64()).unwrap_or(10000.0),
+        };
+        Ok(spec)
+    }
+
+    /// Number of KV blocks (nb).
+    pub fn n_blocks(&self) -> usize {
+        debug_assert_eq!(self.max_seq % self.block_size, 0);
+        self.max_seq / self.block_size
+    }
+
+    /// GQA group size (query heads per KV head).
+    pub fn group(&self) -> usize {
+        debug_assert_eq!(self.n_q_heads % self.n_kv_heads, 0);
+        self.n_q_heads / self.n_kv_heads
+    }
+
+    /// Attention softmax scale.
+    pub fn scale(&self) -> f32 {
+        1.0 / (self.head_dim as f32).sqrt()
+    }
+
+    /// Bytes of KV cache per token per layer (f32 K + V).
+    pub fn kv_bytes_per_token_layer(&self) -> usize {
+        2 * self.n_kv_heads * self.head_dim * 4
+    }
+
+    /// Bytes of one KV block for one layer (K + V).
+    pub fn kv_block_bytes(&self) -> usize {
+        self.block_size * self.kv_bytes_per_token_layer()
+    }
+
+    /// Approximate parameter count.
+    pub fn param_count(&self) -> usize {
+        let hq_d = self.n_q_heads * self.head_dim;
+        let hkv_d = self.n_kv_heads * self.head_dim;
+        let per_layer = self.d_model * hq_d        // wq
+            + 2 * self.d_model * hkv_d             // wk, wv
+            + hq_d * self.d_model                  // wo
+            + 2 * self.d_model * self.d_ff         // w1, w2
+            + 2 * self.d_model; // ln1, ln2
+        self.n_layers * per_layer + self.vocab * self.d_model + self.d_model
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.max_seq % self.block_size == 0, "max_seq % block_size != 0");
+        anyhow::ensure!(self.n_q_heads % self.n_kv_heads == 0, "GQA head mismatch");
+        anyhow::ensure!(self.head_dim % 2 == 0, "RoPE needs even head_dim");
+        anyhow::ensure!(self.k_blocks <= self.n_blocks(), "budget exceeds cache");
+        anyhow::ensure!(self.k_blocks >= 1 && self.batch >= 1 && self.n_layers >= 1, "degenerate spec");
+        Ok(())
+    }
+}
+
+/// Scaled-down shape proxies of the paper's Table-1 model zoo, used by the
+/// native-engine studies (query predictability, drift). Layer counts and
+/// head geometry follow the real architectures; widths are divided down so
+/// a study over five models runs in seconds on one core.
+pub const PROXY_MODELS: &[(&str, fn() -> ModelSpec)] = &[
+    ("qwen3-8b-proxy", || proxy("qwen3-8b-proxy", 12, 512, 8, 2, 64, 1536)),
+    ("gemma3-12b-proxy", || proxy("gemma3-12b-proxy", 14, 480, 8, 4, 60, 1440)),
+    ("llama31-8b-proxy", || proxy("llama31-8b-proxy", 12, 512, 8, 2, 64, 1792)),
+    ("mistral-7b-proxy", || proxy("mistral-7b-proxy", 12, 512, 8, 2, 64, 1792)),
+    ("glm4-9b-proxy", || proxy("glm4-9b-proxy", 13, 512, 8, 2, 64, 1664)),
+];
+
+fn proxy(
+    name: &str,
+    n_layers: usize,
+    d_model: usize,
+    n_q_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+    d_ff: usize,
+) -> ModelSpec {
+    ModelSpec {
+        name: name.to_string(),
+        n_layers,
+        d_model,
+        n_q_heads,
+        n_kv_heads,
+        head_dim,
+        d_ff,
+        vocab: 4096,
+        max_seq: 1024,
+        block_size: 32,
+        k_blocks: 8,
+        batch: 1,
+        rope_theta: 10000.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proxies_validate() {
+        for (name, f) in PROXY_MODELS {
+            let spec = f();
+            assert_eq!(&spec.name, name);
+            spec.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn kv_accounting() {
+        let spec = proxy("t", 2, 128, 4, 2, 32, 256);
+        assert_eq!(spec.kv_bytes_per_token_layer(), 2 * 2 * 32 * 4);
+        assert_eq!(spec.kv_block_bytes(), 32 * 512);
+        assert_eq!(spec.n_blocks(), 32);
+        assert_eq!(spec.group(), 2);
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        let mut s = proxy("bad", 2, 128, 4, 2, 32, 256);
+        s.max_seq = 1000; // not a multiple of 32
+        assert!(s.validate().is_err());
+        let mut s2 = proxy("bad2", 2, 128, 4, 2, 32, 256);
+        s2.n_kv_heads = 3;
+        assert!(s2.validate().is_err());
+        let mut s3 = proxy("bad3", 2, 128, 4, 2, 32, 256);
+        s3.k_blocks = 1000;
+        assert!(s3.validate().is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Seeded synthetic weight generation.
+//!
+//! Weights are *runtime inputs* to the AOT executables, so rust owns them.
+//! Initialization follows the python test suite's scaling: matrices are
+//! N(0, (0.2/sqrt(d))^2) so each residual-branch update is small relative
+//! to the residual stream — the property the paper's layer-ahead query
+//! prediction (Table 1) and our Table-1 proxy study both rely on.
+
+use super::spec::ModelSpec;
+use crate::tensor::Tensor;
+use crate::util::Rng64;
+
+/// All parameters of one model, stacked per layer (leading axis = layer),
+/// mirroring the `decode_full` / `prefill` artifact input layout.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub ln1: Tensor,   // [L, d]
+    pub wq: Tensor,    // [L, d, Hq*D]
+    pub wk: Tensor,    // [L, d, Hkv*D]
+    pub wv: Tensor,    // [L, d, Hkv*D]
+    pub wo: Tensor,    // [L, Hq*D, d]
+    pub ln2: Tensor,   // [L, d]
+    pub w1: Tensor,    // [L, d, dff]
+    pub w2: Tensor,    // [L, dff, d]
+    pub ln_f: Tensor,  // [d]
+    pub embed: Tensor, // [V, d]
+}
+
+/// Seeded normal-tensor sampler over the in-tree PRNG.
+pub struct NormalSampler {
+    rng: Rng64,
+}
+
+impl NormalSampler {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng64::new(seed) }
+    }
+
+    pub fn sample(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn tensor(&mut self, shape: &[usize], scale: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| self.sample() as f32 * scale).collect();
+        Tensor::from_vec(shape, data)
+    }
+}
+
+impl Weights {
+    /// Generate seeded weights for a spec. `residual_scale` multiplies the
+    /// branch matrices; 1.0 is the default regime, larger values weaken
+    /// the residual-stream dominance (used by the Table-1 sensitivity
+    /// study).
+    pub fn generate(spec: &ModelSpec, seed: u64, residual_scale: f32) -> Self {
+        let mut s = NormalSampler::new(seed);
+        let (l, d, dff, v) = (spec.n_layers, spec.d_model, spec.d_ff, spec.vocab);
+        let hq_d = spec.n_q_heads * spec.head_dim;
+        let hkv_d = spec.n_kv_heads * spec.head_dim;
+        let sc = residual_scale * 0.2 / (d as f32).sqrt();
+        Weights {
+            ln1: Tensor::full(&[l, d], 1.0),
+            wq: s.tensor(&[l, d, hq_d], sc),
+            wk: s.tensor(&[l, d, hkv_d], sc),
+            wv: s.tensor(&[l, d, hkv_d], sc),
+            wo: s.tensor(&[l, hq_d, d], sc),
+            ln2: Tensor::full(&[l, d], 1.0),
+            w1: s.tensor(&[l, d, dff], sc),
+            w2: s.tensor(&[l, dff, d], sc),
+            ln_f: Tensor::full(&[d], 1.0),
+            embed: s.tensor(&[v, d], 1.0),
+        }
+    }
+
+    /// Embedding row for a token id.
+    pub fn embed_token(&self, tok: u32) -> &[f32] {
+        let d = self.embed.shape()[1];
+        self.embed.rows(tok as usize, 1).get(..d).unwrap()
+    }
+
+    /// Per-layer slice helpers (layer-granular artifact inputs).
+    pub fn layer_ln1(&self, i: usize) -> &[f32] {
+        self.ln1.rows(i, 1)
+    }
+    pub fn layer_wq(&self, i: usize) -> &[f32] {
+        self.wq.rows(i, 1)
+    }
+    pub fn layer_wk(&self, i: usize) -> &[f32] {
+        self.wk.rows(i, 1)
+    }
+    pub fn layer_wv(&self, i: usize) -> &[f32] {
+        self.wv.rows(i, 1)
+    }
+    pub fn layer_wo(&self, i: usize) -> &[f32] {
+        self.wo.rows(i, 1)
+    }
+    pub fn layer_ln2(&self, i: usize) -> &[f32] {
+        self.ln2.rows(i, 1)
+    }
+    pub fn layer_w1(&self, i: usize) -> &[f32] {
+        self.w1.rows(i, 1)
+    }
+    pub fn layer_w2(&self, i: usize) -> &[f32] {
+        self.w2.rows(i, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::PROXY_MODELS;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = PROXY_MODELS[0].1();
+        let a = Weights::generate(&spec, 7, 1.0);
+        let b = Weights::generate(&spec, 7, 1.0);
+        assert_eq!(a.wq.data(), b.wq.data());
+        let c = Weights::generate(&spec, 8, 1.0);
+        assert_ne!(a.wq.data(), c.wq.data());
+    }
+
+    #[test]
+    fn normal_sampler_moments() {
+        let mut s = NormalSampler::new(42);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| s.sample()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn layer_slices_have_expected_sizes() {
+        let spec = PROXY_MODELS[0].1();
+        let w = Weights::generate(&spec, 1, 1.0);
+        assert_eq!(w.layer_wq(0).len(), spec.d_model * spec.n_q_heads * spec.head_dim);
+        assert_eq!(w.layer_w2(spec.n_layers - 1).len(), spec.d_ff * spec.d_model);
+        assert_eq!(w.embed_token(3).len(), spec.d_model);
+    }
+}

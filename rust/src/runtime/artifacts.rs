@@ -1,0 +1,143 @@
+//! Artifact manifest parsing (`artifacts/<preset>/manifest.json`), via the
+//! in-tree JSON parser.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::model::ModelSpec;
+use crate::util::Json;
+
+/// Shape + dtype of one executable operand.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn volume(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(Self {
+            name: j.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+                .collect::<crate::Result<Vec<_>>>()?,
+            dtype: j.req_str("dtype")?,
+        })
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactEntry {
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        let specs = |key: &str| -> crate::Result<Vec<TensorSpec>> {
+            j.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(Self { file: j.req_str("file")?, inputs: specs("inputs")?, outputs: specs("outputs")? })
+    }
+}
+
+/// `manifest.json`: the python-side `ModelConfig` plus per-entry I/O specs.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub config: ModelSpec,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<artifacts_dir>/<preset>/manifest.json`.
+    pub fn load(artifacts_dir: &str, preset: &str) -> crate::Result<Self> {
+        let dir = Path::new(artifacts_dir).join(preset);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text)?;
+        let config = ModelSpec::from_json(j.req("config")?)?;
+        config.validate()?;
+        let mut entries = BTreeMap::new();
+        for (name, ej) in j
+            .req("entries")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("entries not an object"))?
+        {
+            entries.insert(name.clone(), ArtifactEntry::from_json(ej)?);
+        }
+        let m = Manifest { preset: j.req_str("preset")?, config, entries, dir };
+        for (name, e) in &m.entries {
+            anyhow::ensure!(
+                m.dir.join(&e.file).exists(),
+                "artifact file missing for entry {name}: {}",
+                e.file
+            );
+        }
+        Ok(m)
+    }
+
+    pub fn entry(&self, name: &str) -> crate::Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact entry {name:?} in preset {}", self.preset))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> crate::Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // Uses the checked-in test-tiny artifacts when available (CI runs
+        // `make artifacts` first); skip silently otherwise so unit tests
+        // do not depend on the build step.
+        let Ok(m) = Manifest::load("artifacts", "test-tiny") else {
+            return;
+        };
+        assert_eq!(m.preset, "test-tiny");
+        assert!(m.entries.contains_key("decode_full"));
+        let e = m.entry("sparse_attn").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.outputs.len(), 3);
+        // acc output is [B, Hq, D]
+        assert_eq!(
+            e.outputs[0].shape,
+            vec![m.config.batch, m.config.n_q_heads, m.config.head_dim]
+        );
+        assert_eq!(e.inputs[0].name, "q");
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = Manifest::load("artifacts", "no-such-preset").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,52 @@
+//! Tensor <-> XLA literal conversion.
+
+use xla::{ElementType, Literal};
+
+use crate::tensor::Tensor;
+
+/// Build an f32 literal from a tensor (single copy, via raw bytes).
+pub fn tensor_to_literal(t: &Tensor) -> crate::Result<Literal> {
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, t.shape(), t.as_bytes())
+        .map_err(|e| anyhow::anyhow!("literal from tensor {:?}: {e:?}", t.shape()))
+}
+
+/// Build an i32 literal (positions, lengths).
+pub fn vec_i32_literal(shape: &[usize], data: &[i32]) -> crate::Result<Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow::anyhow!("i32 literal {shape:?}: {e:?}"))
+}
+
+/// Copy an f32 literal back into a tensor.
+pub fn literal_to_tensor(lit: &Literal) -> crate::Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = lit
+        .to_vec()
+        .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_literal_shape() {
+        let lit = vec_i32_literal(&[3], &[7, 8, 9]).unwrap();
+        let v: Vec<i32> = lit.to_vec().unwrap();
+        assert_eq!(v, vec![7, 8, 9]);
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! `make artifacts` (python, build-time only) leaves
+//! `artifacts/<preset>/{*.hlo.txt, manifest.json}`; this module loads the
+//! manifest, compiles each entry on the PJRT CPU client once, validates
+//! every call's operand shapes against the manifest, and converts between
+//! [`crate::Tensor`] and XLA literals. Nothing here ever calls python.
+
+pub mod artifacts;
+pub mod client;
+pub mod literal;
+
+pub use artifacts::{ArtifactEntry, Manifest, TensorSpec};
+pub use client::Runtime;
+pub use literal::{literal_to_tensor, tensor_to_literal, vec_i32_literal};

@@ -1,0 +1,76 @@
+//! Wire protocol types (JSON-lines, via the in-tree JSON codec).
+
+use crate::coordinator::{RequestOutput, RequestSpec};
+use crate::util::Json;
+
+/// Client -> server.
+#[derive(Debug, Clone)]
+pub struct IncomingRequest {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+impl IncomingRequest {
+    pub fn parse(line: &str) -> crate::Result<Self> {
+        let j = Json::parse(line)?;
+        let prompt = j
+            .req("prompt")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("prompt must be an array of token ids"))?
+            .iter()
+            .map(|v| v.as_u64().map(|x| x as u32).ok_or_else(|| anyhow::anyhow!("bad token id")))
+            .collect::<crate::Result<Vec<u32>>>()?;
+        anyhow::ensure!(!prompt.is_empty(), "prompt must be non-empty");
+        let max_new_tokens =
+            j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
+        Ok(Self { prompt, max_new_tokens })
+    }
+
+    pub fn into_spec(self, id: u64) -> RequestSpec {
+        RequestSpec { id, prompt: self.prompt, max_new_tokens: self.max_new_tokens, arrival_us: 0 }
+    }
+}
+
+/// Server -> client.
+pub fn output_to_json(out: &RequestOutput) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(out.id as f64)),
+        ("generated", Json::arr_u32(&out.generated)),
+        ("steps", Json::num(out.steps as f64)),
+        ("decode_wall_us", Json::num(out.decode_wall_us as f64)),
+    ])
+}
+
+pub fn error_to_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_with_defaults() {
+        let r = IncomingRequest::parse("{\"prompt\":[1,2]}").unwrap();
+        assert_eq!(r.max_new_tokens, 32);
+        assert_eq!(r.prompt, vec![1, 2]);
+        let spec = r.into_spec(5);
+        assert_eq!(spec.id, 5);
+    }
+
+    #[test]
+    fn rejects_empty_or_malformed() {
+        assert!(IncomingRequest::parse("{\"prompt\":[]}").is_err());
+        assert!(IncomingRequest::parse("{}").is_err());
+        assert!(IncomingRequest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn output_json_shape() {
+        let out = RequestOutput { id: 3, generated: vec![7, 8], steps: 2, decode_wall_us: 10 };
+        let j = output_to_json(&out);
+        let text = j.to_string();
+        assert!(text.contains("\"id\":3"));
+        assert!(text.contains("\"generated\":[7,8]"));
+    }
+}

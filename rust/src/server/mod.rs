@@ -1,0 +1,145 @@
+//! Serving front-end: a threaded TCP listener speaking JSON-lines,
+//! feeding a dedicated engine thread that owns the (non-Send) PJRT stack.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"prompt": [1,2,3], "max_new_tokens": 16}
+//!   <- {"id": 0, "generated": [...], "steps": 16, "decode_wall_us": ...}
+//!
+//! The engine thread runs the continuous-batching loop: drain admissions,
+//! prefill, decode step, reap, publish outputs. Python is nowhere on this
+//! path — the binary serves directly from the AOT artifacts. (The offline
+//! crate universe has no tokio; connection handling is thread-per-conn
+//! over std::net, which is plenty for the evaluation workloads.)
+
+pub mod api;
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::config::RunConfig;
+use crate::coordinator::{RequestOutput, RequestSpec};
+use crate::harness::Stack;
+
+/// Engine-thread loop: owns scheduler + batch; processes until `rx`
+/// disconnects.
+fn engine_loop(
+    cfg: RunConfig,
+    rx: Receiver<RequestSpec>,
+    tx_out: Sender<RequestOutput>,
+) -> crate::Result<()> {
+    let stack = Stack::load(&cfg)?;
+    let mut sched = stack.scheduler(cfg.method, None);
+    let mut batch = stack.batch();
+    loop {
+        // Block when fully idle; otherwise drain whatever queued up.
+        if batch.idle() {
+            match rx.recv() {
+                Ok(r) => batch.enqueue(r),
+                Err(_) => return Ok(()), // shutdown
+            }
+        }
+        while let Ok(r) = rx.try_recv() {
+            batch.enqueue(r);
+        }
+        for req in batch.admissible() {
+            sched.admit(&mut batch, &req)?;
+        }
+        if batch.live() > 0 {
+            sched.step(&mut batch)?;
+            batch.reap();
+        }
+        for out in batch.finished.drain(..) {
+            let _ = tx_out.send(out);
+        }
+    }
+}
+
+type Waiters = Arc<Mutex<HashMap<u64, SyncSender<RequestOutput>>>>;
+
+fn handle_conn(
+    sock: TcpStream,
+    tx_req: SyncSender<RequestSpec>,
+    waiters: Waiters,
+    next_id: Arc<AtomicU64>,
+) {
+    let peer = sock.peer_addr().ok();
+    let reader = BufReader::new(sock.try_clone().expect("clone socket"));
+    let mut w = sock;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match api::IncomingRequest::parse(&line) {
+            Ok(inc) => {
+                let id = next_id.fetch_add(1, Ordering::SeqCst);
+                let (txo, rxo) = sync_channel::<RequestOutput>(1);
+                waiters.lock().unwrap().insert(id, txo);
+                if tx_req.send(inc.into_spec(id)).is_err() {
+                    break;
+                }
+                match rxo.recv() {
+                    Ok(out) => {
+                        let resp = api::output_to_json(&out).to_string();
+                        if writeln!(w, "{resp}").is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            Err(e) => {
+                let _ = writeln!(w, "{}", api::error_to_json(&e.to_string()).to_string());
+            }
+        }
+    }
+    let _ = peer;
+}
+
+/// Run the server until the listener errors (or forever).
+pub fn serve(cfg: RunConfig) -> crate::Result<()> {
+    let listener = TcpListener::bind(&cfg.server.listen)
+        .map_err(|e| anyhow::anyhow!("bind {}: {e}", cfg.server.listen))?;
+    eprintln!(
+        "scout: serving {} ({}) on {}",
+        cfg.preset,
+        cfg.method.label(),
+        cfg.server.listen
+    );
+
+    let (tx_req, rx_req) = sync_channel::<RequestSpec>(cfg.server.queue_depth);
+    let (tx_out, rx_out) = mpsc::channel::<RequestOutput>();
+    let engine_cfg = cfg.clone();
+    std::thread::spawn(move || {
+        if let Err(e) = engine_loop(engine_cfg, rx_req, tx_out) {
+            eprintln!("engine thread error: {e:#}");
+        }
+    });
+
+    // Route outputs to per-request response channels.
+    let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
+    {
+        let waiters = waiters.clone();
+        std::thread::spawn(move || {
+            while let Ok(out) = rx_out.recv() {
+                if let Some(tx) = waiters.lock().unwrap().remove(&out.id) {
+                    let _ = tx.send(out);
+                }
+            }
+        });
+    }
+
+    let next_id = Arc::new(AtomicU64::new(0));
+    for sock in listener.incoming() {
+        let Ok(sock) = sock else { continue };
+        let tx_req = tx_req.clone();
+        let waiters = waiters.clone();
+        let next_id = next_id.clone();
+        std::thread::spawn(move || handle_conn(sock, tx_req, waiters, next_id));
+    }
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Timing plane: discrete-event simulator of the GPU/CPU/PCIe pipeline.
+//!
+//! The numerics plane (engines + coordinator) proves the *algorithm*; this
+//! module reproduces the paper's *performance* claims by replaying the
+//! coordinator's schedules under the published device ratios (DESIGN.md
+//! §7): the PCIe effective-bandwidth curve of Fig. 2, the 1.9 TB/s HBM,
+//! the ~20x GPU:CPU attention gap, and the 300 us attention / 900 us layer
+//! decode times of §3.3.
+//!
+//! Submodules:
+//! - [`timing`]  — the calibrated `DeviceModel` (config-overridable)
+//! - [`engine`]  — minimal event-driven executor with named resources
+//! - [`pipeline`]— per-method decode-step pipeline models (FullKV,
+//!   InfiniGen, HGCA, Scout ± PC ± PR), producing per-phase latency
+//!   breakdowns and utilization traces
+//! - [`trace`]   — Gantt-style trace records (Fig. 1 reproduction)
+
+pub mod engine;
+pub mod pipeline;
+pub mod timing;
+pub mod trace;
+
+pub use pipeline::{MethodSim, StepBreakdown, SimReport};
+pub use timing::DeviceModel;

@@ -1,0 +1,362 @@
+//! Per-method decode-step pipeline models (the Fig. 1 schedules, priced).
+//!
+//! Two entry points:
+//! - [`price_step`] prices a *measured* [`StepStats`] record produced by
+//!   the real coordinator (numerics plane) under the device model;
+//! - [`MethodSim`] synthesizes paper-scale schedules (64k context, 40
+//!   layers, batch 40) from the method's policy + a drift model, then
+//!   prices them the same way — this is what regenerates Figs. 3/8–12.
+//!
+//! The schedules encode exactly the overlap structure of Fig. 1:
+//! - FullKV: GPU dense attention, no offload, batch bounded by HBM.
+//! - InfiniGen: per layer, selected-but-missing blocks cross PCIe with a
+//!   one-*layer* prefetch window -> stall = max(0, io - window).
+//! - HGCA: CPU computes offloaded attention in parallel with the same
+//!   layer's GPU attention -> stall = max(0, cpu - gpu_attn).
+//! - Scout: CPU pre-computation started one layer ahead gets the whole
+//!   previous layer as its window (≈3x, §3.3) -> stall = max(0, cpu -
+//!   layer); periodic recall I/O gets a whole *step* as its window.
+
+
+use crate::config::Method;
+use crate::coordinator::StepStats;
+use crate::metrics::{Phase, PhaseBreakdown};
+
+use super::timing::DeviceModel;
+
+/// Result of pricing one decode step.
+#[derive(Debug, Clone, Default)]
+pub struct StepBreakdown {
+    pub breakdown: PhaseBreakdown,
+    pub step_us: f64,
+    /// Tokens produced this step.
+    pub tokens: f64,
+}
+
+/// Aggregate over a simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    pub method: String,
+    pub breakdown: PhaseBreakdown,
+    pub total_us: f64,
+    pub tokens: f64,
+    pub steps: usize,
+}
+
+impl SimReport {
+    /// Decode throughput in tokens/second.
+    pub fn throughput_tps(&self) -> f64 {
+        if self.total_us == 0.0 { 0.0 } else { self.tokens / self.total_us * 1e6 }
+    }
+
+    pub fn idle_fraction(&self) -> f64 {
+        self.breakdown.idle_fraction()
+    }
+
+    pub fn add_step(&mut self, s: &StepBreakdown) {
+        self.breakdown.merge(&s.breakdown);
+        self.total_us += s.step_us;
+        self.tokens += s.tokens;
+        self.steps += 1;
+    }
+}
+
+/// Price one measured step record under the device model. `block_bytes`
+/// is the KV size of one block for one layer; `tail_tokens` approximates
+/// the GPU tail window per sequence.
+pub fn price_step(
+    method: Method,
+    stats: &StepStats,
+    m: &DeviceModel,
+    block_bytes: f64,
+    block_size: usize,
+) -> StepBreakdown {
+    let mut out = StepBreakdown { tokens: stats.live_seqs as f64, ..Default::default() };
+    let bd = &mut out.breakdown;
+    let mut prev_layer_us = m.step_other_us.max(1.0); // window for layer 0
+    let mut recall_bytes_total = 0.0;
+    for l in &stats.layers {
+        // GPU attention bytes this layer: sparse blocks + tail + dense +
+        // the digest scan for top-k selection (one kmin/kmax pair — one
+        // token's worth of KV — per block, per §2.2).
+        let gpu_bytes = l.gpu_blocks as f64 * block_bytes
+            + l.dense_tokens as f64 * block_bytes / block_size as f64
+            + l.digest_blocks as f64 * block_bytes / block_size as f64
+            + stats.live_seqs as f64 * block_bytes; // tail window
+        let t_attn = m.gpu_attn_us(gpu_bytes);
+        let t_other = m.layer_other_us;
+        let cpu_bytes = l.cpu_blocks as f64 * block_bytes;
+        let t_cpu = if cpu_bytes > 0.0 { m.cpu_attn_us(cpu_bytes, 1.0) } else { 0.0 };
+        let io_bytes = l.sync_transfer_blocks as f64 * block_bytes;
+        let t_io = if l.sync_transfer_blocks > 0 {
+            l.sync_transfer_blocks as f64 * m.pcie_msg_overhead_us + io_bytes / m.pcie_line_bw
+        } else {
+            0.0
+        };
+        recall_bytes_total += l.recall_blocks as f64 * block_bytes;
+
+        let stall = match method {
+            Method::FullKv => 0.0,
+            // one-layer-ahead prefetch: window = previous layer
+            Method::Infinigen => (t_io - prev_layer_us).max(0.0),
+            // same-layer parallel CPU: window = this layer's GPU attention
+            Method::Hgca => (t_cpu - t_attn).max(0.0),
+            // layer-ahead pre-computation: window = whole previous layer
+            Method::Scout => {
+                if stats.layer_ahead {
+                    (t_cpu - prev_layer_us).max(0.0)
+                } else {
+                    (t_cpu - t_attn).max(0.0)
+                }
+            }
+        };
+
+        bd.add(Phase::GpuAttention, t_attn);
+        bd.add(Phase::GpuOther, t_other);
+        bd.add(Phase::Idle, stall);
+        prev_layer_us = t_attn + t_other + stall;
+        out.step_us += t_attn + t_other + stall;
+    }
+    // Scout's periodic recall is asynchronous with a full-step window;
+    // only the overflow stalls. Other methods have no recall term.
+    if recall_bytes_total > 0.0 {
+        let t_recall =
+            recall_bytes_total / block_bytes * m.pcie_msg_overhead_us + recall_bytes_total / m.pcie_line_bw;
+        let overflow = (t_recall - out.step_us).max(0.0);
+        bd.add(Phase::Idle, overflow);
+        out.step_us += overflow;
+    }
+    bd.add(Phase::Scheduler, m.step_other_us);
+    out.step_us += m.step_other_us;
+    out
+}
+
+/// Paper-scale synthetic workload parameters.
+#[derive(Debug, Clone)]
+pub struct SynthWorkload {
+    /// Context length per sequence (tokens).
+    pub seq_len: usize,
+    /// Decode batch size requested.
+    pub batch: usize,
+    /// Sparse budget (tokens).
+    pub budget_tokens: usize,
+    /// Block size (tokens).
+    pub block_size: usize,
+    /// Decode steps to simulate.
+    pub steps: usize,
+    /// CPU-ratio drift per decode step without recall (fraction of the
+    /// budget that newly misses the resident set each step). Default
+    /// calibrated to Fig. 6a's drift (reaches ~30-40% after 100 steps).
+    pub drift_per_step: f64,
+    /// Initial CPU ratio right after prefill/refresh.
+    pub cpu_ratio0: f64,
+    /// Recall interval in steps (Scout only; usize::MAX = disabled).
+    pub recall_interval: usize,
+}
+
+impl SynthWorkload {
+    pub fn paper_default(seq_len: usize, batch: usize) -> Self {
+        Self {
+            seq_len,
+            batch,
+            budget_tokens: 2048,
+            block_size: 32,
+            steps: 128,
+            drift_per_step: 0.005,
+            cpu_ratio0: 0.03,
+            recall_interval: 9, // the paper's measured mean is 8.7
+        }
+    }
+
+    pub fn n_budget_blocks(&self) -> usize {
+        (self.budget_tokens / self.block_size).max(1)
+    }
+}
+
+/// Synthesizes + prices schedules for one method at paper scale.
+pub struct MethodSim {
+    pub method: Method,
+    pub device: DeviceModel,
+    /// Scout ablation arms (Fig. 12): pre-computation / periodic recall.
+    pub layer_ahead: bool,
+    pub periodic_recall: bool,
+    /// InfiniGen: fraction of the budget whose blocks miss the GPU pool
+    /// each layer and must cross PCIe synchronously. Calibrated so the
+    /// 32k/bs40 point reproduces Fig. 3's 61% idle (speculation turnover
+    /// measured by the paper's InfiniGen analysis).
+    pub infinigen_turnover: f64,
+    /// HGCA: CPU-side sparse budget as a fraction of the method budget.
+    /// Calibrated so the 32k/bs40 point reproduces Fig. 3's 57% idle.
+    pub hgca_cpu_fraction: f64,
+}
+
+impl MethodSim {
+    pub fn new(method: Method, device: DeviceModel) -> Self {
+        Self {
+            method,
+            device,
+            layer_ahead: true,
+            periodic_recall: true,
+            infinigen_turnover: 0.12,
+            hgca_cpu_fraction: 0.28,
+        }
+    }
+
+    /// Build the synthetic per-step stats for `w` and price the run.
+    pub fn run(&self, w: &SynthWorkload) -> SimReport {
+        let m = &self.device;
+        let block_bytes = m.kv_bytes_per_token_layer * w.block_size as f64;
+        let kb = w.n_budget_blocks();
+        // FullKV memory feasibility: with continuous batching the live
+        // set is capped by HBM capacity; excess requests queue, so time
+        // stretches by batch/maxbatch (sparse methods keep only the
+        // budget + digests on GPU and are not capacity-bound here).
+        let (eff_batch, time_mult) = match self.method {
+            Method::FullKv => {
+                let maxb = m.max_batch_fullkv(w.seq_len).max(1).min(w.batch);
+                (maxb, w.batch as f64 / maxb as f64)
+            }
+            _ => (w.batch, 1.0),
+        };
+
+        let mut report = SimReport {
+            method: self.method.label().to_string(),
+            ..Default::default()
+        };
+        let mut cpu_ratio = w.cpu_ratio0;
+        let mut since_recall = 0usize;
+        for _step in 0..w.steps {
+            let mut stats = StepStats::new(m.n_layers, eff_batch, self.layer_ahead);
+            let mut recall_now = false;
+            if self.method == Method::Scout && self.periodic_recall {
+                since_recall += 1;
+                if since_recall >= w.recall_interval.max(1) {
+                    recall_now = true;
+                    since_recall = 0;
+                }
+            }
+            for l in stats.layers.iter_mut() {
+                match self.method {
+                    Method::FullKv => {
+                        l.dense_tokens = w.seq_len * eff_batch;
+                        l.selected_blocks = kb * eff_batch;
+                    }
+                    Method::Infinigen => {
+                        // per-step/layer selection turnover crosses PCIe
+                        // with only a one-layer prefetch window. InfiniGen
+                        // refreshes its speculative pool every layer, so
+                        // importance drift does not accumulate — turnover
+                        // stays at the calibrated base rate.
+                        let turnover = self.infinigen_turnover.min(1.0);
+                        l.digest_blocks = (w.seq_len / w.block_size) * eff_batch;
+                        l.gpu_blocks = kb * eff_batch;
+                        l.sync_transfer_blocks =
+                            ((kb as f64 * turnover).ceil() as usize) * eff_batch;
+                        l.selected_blocks = kb * eff_batch;
+                    }
+                    Method::Hgca => {
+                        // fixed 25% window on GPU; the CPU covers its own
+                        // (moving-average) sparse budget over the rest
+                        let win = (kb / 4).max(1);
+                        let cpu = ((kb as f64 * self.hgca_cpu_fraction).ceil() as usize).max(1);
+                        l.gpu_blocks = win * eff_batch;
+                        l.cpu_blocks = cpu * eff_batch;
+                        l.selected_blocks = (win + cpu) * eff_batch;
+                    }
+                    Method::Scout => {
+                        l.digest_blocks = (w.seq_len / w.block_size) * eff_batch;
+                        let cpu_blocks = (kb as f64 * cpu_ratio).round() as usize;
+                        l.cpu_blocks = cpu_blocks * eff_batch;
+                        l.gpu_blocks = (kb - cpu_blocks.min(kb)) * eff_batch;
+                        l.selected_blocks = kb * eff_batch;
+                        if recall_now {
+                            l.recall_blocks = cpu_blocks * eff_batch;
+                        }
+                    }
+                }
+            }
+            let mut priced = price_step(self.method, &stats, m, block_bytes, w.block_size);
+            // queueing stretch for capacity-bound FullKV
+            priced.step_us *= time_mult;
+            priced.breakdown.gpu_attention_us *= time_mult;
+            priced.breakdown.gpu_other_us *= time_mult;
+            priced.breakdown.idle_us *= time_mult;
+            priced.breakdown.scheduler_us *= time_mult;
+            report.add_step(&priced);
+            // drift evolution
+            if self.method == Method::Scout {
+                if recall_now {
+                    cpu_ratio = w.cpu_ratio0;
+                } else {
+                    cpu_ratio = (cpu_ratio + w.drift_per_step).min(0.9);
+                }
+            } else {
+                cpu_ratio = (cpu_ratio + w.drift_per_step).min(0.9);
+            }
+        }
+        report.tokens = (w.batch * w.steps) as f64;
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(method: Method) -> SimReport {
+        let mut s = MethodSim::new(method, DeviceModel::default());
+        if method != Method::Scout {
+            s.periodic_recall = false;
+        }
+        s.run(&SynthWorkload::paper_default(32768, 40))
+    }
+
+    #[test]
+    fn scout_beats_baselines_at_32k_bs40() {
+        let full = sim(Method::FullKv);
+        let inf = sim(Method::Infinigen);
+        let hgca = sim(Method::Hgca);
+        let scout = sim(Method::Scout);
+        assert!(scout.throughput_tps() > inf.throughput_tps());
+        assert!(scout.throughput_tps() > hgca.throughput_tps());
+        assert!(scout.throughput_tps() > full.throughput_tps());
+    }
+
+    #[test]
+    fn idle_fractions_match_fig3_shape() {
+        let inf = sim(Method::Infinigen);
+        let hgca = sim(Method::Hgca);
+        let scout = sim(Method::Scout);
+        assert!(inf.idle_fraction() > 0.4, "infinigen idle {}", inf.idle_fraction());
+        assert!(hgca.idle_fraction() > 0.35, "hgca idle {}", hgca.idle_fraction());
+        assert!(scout.idle_fraction() < 0.15, "scout idle {}", scout.idle_fraction());
+        assert!(inf.idle_fraction() > hgca.idle_fraction(), "paper: 61% vs 57%");
+    }
+
+    #[test]
+    fn fullkv_degrades_with_length() {
+        let dev = DeviceModel::default();
+        let t8 = MethodSim::new(Method::FullKv, dev.clone())
+            .run(&SynthWorkload::paper_default(8192, 40));
+        let t64 = MethodSim::new(Method::FullKv, dev)
+            .run(&SynthWorkload::paper_default(65536, 40));
+        assert!(t8.throughput_tps() > 2.0 * t64.throughput_tps());
+    }
+
+    #[test]
+    fn ablation_ordering_matches_fig12() {
+        let dev = DeviceModel::default();
+        let w = SynthWorkload::paper_default(32768, 40);
+        let mut base = MethodSim::new(Method::Scout, dev.clone());
+        base.layer_ahead = false;
+        base.periodic_recall = false;
+        let mut pc = MethodSim::new(Method::Scout, dev.clone());
+        pc.periodic_recall = false;
+        let full = MethodSim::new(Method::Scout, dev);
+        let t0 = base.run(&w).throughput_tps();
+        let t1 = pc.run(&w).throughput_tps();
+        let t2 = full.run(&w).throughput_tps();
+        assert!(t1 > t0, "+PC must speed up: {t0} -> {t1}");
+        assert!(t2 > t1, "+PR must speed up further: {t1} -> {t2}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Temporal-locality and CPU-compute-ratio analytics (Fig. 6).
+
+use std::collections::BTreeSet;
+
+use crate::kvcache::BlockId;
+
+/// Tracks, per layer, how the selected top-k set evolves across decode
+/// steps: turnover between consecutive steps (the paper's "<15% of
+/// important blocks change") and the CPU compute ratio
+/// `|selected \ resident| / budget` whose drift motivates §3.4.
+#[derive(Debug, Clone)]
+pub struct LocalityTracker {
+    prev: Vec<Option<BTreeSet<BlockId>>>,
+    /// Per-layer series of turnover fractions.
+    pub turnover: Vec<Vec<f64>>,
+    /// Per-layer series of CPU compute ratios.
+    pub cpu_ratio: Vec<Vec<f64>>,
+}
+
+impl LocalityTracker {
+    pub fn new(n_layers: usize) -> Self {
+        Self {
+            prev: vec![None; n_layers],
+            turnover: vec![Vec::new(); n_layers],
+            cpu_ratio: vec![Vec::new(); n_layers],
+        }
+    }
+
+    /// Record one step's selection + partition for a layer.
+    pub fn record(
+        &mut self,
+        layer: usize,
+        selected: &[BlockId],
+        cpu_blocks: usize,
+        budget: usize,
+    ) {
+        let cur: BTreeSet<BlockId> = selected.iter().copied().collect();
+        if let Some(prev) = &self.prev[layer] {
+            let inter = prev.intersection(&cur).count();
+            let denom = cur.len().max(1);
+            self.turnover[layer].push(1.0 - inter as f64 / denom as f64);
+        }
+        self.cpu_ratio[layer].push(cpu_blocks as f64 / budget.max(1) as f64);
+        self.prev[layer] = Some(cur);
+    }
+
+    /// Mean turnover across layers and steps.
+    pub fn mean_turnover(&self) -> f64 {
+        mean_of(&self.turnover)
+    }
+
+    /// Mean CPU compute ratio across layers and steps (Fig. 6b's 8.2%).
+    pub fn mean_cpu_ratio(&self) -> f64 {
+        mean_of(&self.cpu_ratio)
+    }
+
+    /// Per-layer mean CPU ratio.
+    pub fn layer_cpu_ratio(&self, layer: usize) -> f64 {
+        let v = &self.cpu_ratio[layer];
+        if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 }
+    }
+}
+
+fn mean_of(series: &[Vec<f64>]) -> f64 {
+    let (mut s, mut n) = (0.0, 0usize);
+    for layer in series {
+        s += layer.iter().sum::<f64>();
+        n += layer.len();
+    }
+    if n == 0 { 0.0 } else { s / n as f64 }
+}
+
+/// A per-layer CPU-ratio time series from an offline profiling run,
+/// consumed by the recall-interval profiler (§3.4: "for each layer, the
+/// maximum number of steps that keeps the measured ratio below beta").
+#[derive(Debug, Clone)]
+pub struct CpuRatioSeries {
+    /// `series[layer][step]` = CPU ratio at that decode step with NO
+    /// recall (drift accumulates monotonically on average).
+    pub series: Vec<Vec<f64>>,
+}
+
+impl CpuRatioSeries {
+    /// Derive the per-layer recall interval: the largest number of steps
+    /// `n` such that the ratio stays below `beta` for the first `n`
+    /// steps after a refresh. Clamped to `[1, max_interval]`.
+    pub fn intervals(&self, beta: f64, max_interval: usize) -> Vec<usize> {
+        self.series
+            .iter()
+            .map(|s| {
+                let mut n = 0;
+                for &r in s {
+                    if r < beta {
+                        n += 1;
+                    } else {
+                        break;
+                    }
+                }
+                n.clamp(1, max_interval)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn turnover_counts_set_changes() {
+        let mut t = LocalityTracker::new(1);
+        t.record(0, &[1, 2, 3, 4], 0, 4);
+        t.record(0, &[1, 2, 3, 5], 1, 4); // one of four changed
+        assert!((t.turnover[0][0] - 0.25).abs() < 1e-9);
+        assert!((t.cpu_ratio[0][1] - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn intervals_respect_beta() {
+        let s = CpuRatioSeries {
+            series: vec![
+                vec![0.02, 0.05, 0.08, 0.15, 0.2],
+                vec![0.2, 0.3],
+                vec![0.01; 100],
+            ],
+        };
+        assert_eq!(s.intervals(0.12, 32), vec![3, 1, 32]);
+    }
+
+    #[test]
+    fn mean_ratio_over_layers() {
+        let mut t = LocalityTracker::new(2);
+        t.record(0, &[1], 1, 4);
+        t.record(1, &[1], 3, 4);
+        assert!((t.mean_cpu_ratio() - 0.5).abs() < 1e-9);
+        assert!((t.layer_cpu_ratio(1) - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Block selection & importance-drift analytics.
+//!
+//! [`topk`] ranks blocks by Quest digest score (with sink/recent pinning);
+//! [`locality`] measures the temporal-locality statistics the paper's
+//! design leans on — the overlap of consecutive selected sets (Fig. 6a's
+//! "<15% of important blocks change between tokens") and the CPU compute
+//! ratio that asynchronous periodic recall keeps below beta (Fig. 6b).
+
+pub mod locality;
+pub mod topk;
+
+pub use locality::{CpuRatioSeries, LocalityTracker};
+pub use topk::{score_blocks_native, select_topk, TopkSelection};

@@ -1,0 +1,103 @@
+//! Quest block scoring (native path) and top-k selection with pinning.
+
+use crate::kvcache::{BlockId, DigestStore};
+
+/// Result of block selection for one (sequence, layer) step.
+#[derive(Debug, Clone)]
+pub struct TopkSelection {
+    /// Selected block ids, highest score first (pins included).
+    pub blocks: Vec<BlockId>,
+    /// Dense scores (useful for recall ranking / analytics).
+    pub scores: Vec<f32>,
+}
+
+/// Native Quest scores: `score[b] = sum_h sum_d max(q*kmin, q*kmax)`.
+///
+/// Mirrors the `block_scores` L1 kernel bit-for-bit (same operation
+/// order per channel) — parity is enforced by the integration test
+/// against the XLA artifact. `q` is `[Hq, D]`, digests are `[Hkv*D]`
+/// per block; GQA maps query head `h` to kv head `h / (Hq/Hkv)`.
+pub fn score_blocks_native(
+    q: &[f32],
+    digests: &DigestStore,
+    layer: usize,
+    n_full_blocks: usize,
+    hq: usize,
+    hkv: usize,
+    d: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(q.len(), hq * d);
+    let g = hq / hkv;
+    let mut scores = vec![f32::NEG_INFINITY; digests.n_blocks()];
+    for (b, score) in scores.iter_mut().enumerate().take(n_full_blocks) {
+        let (lo, hi) = digests.block(layer, b);
+        let mut s = 0.0f32;
+        for h in 0..hq {
+            let kvh = h / g;
+            let qrow = &q[h * d..(h + 1) * d];
+            let lorow = &lo[kvh * d..(kvh + 1) * d];
+            let hirow = &hi[kvh * d..(kvh + 1) * d];
+            for i in 0..d {
+                s += (qrow[i] * lorow[i]).max(qrow[i] * hirow[i]);
+            }
+        }
+        *score = s;
+    }
+    scores
+}
+
+/// Select up to `k` blocks by score, always including `pinned` (sink /
+/// recent blocks) first. Only blocks with finite scores (i.e. complete
+/// blocks) are eligible.
+pub fn select_topk(scores: &[f32], k: usize, pinned: &[BlockId]) -> TopkSelection {
+    let mut blocks: Vec<BlockId> = Vec::with_capacity(k);
+    for &p in pinned {
+        if p < scores.len() && scores[p].is_finite() && !blocks.contains(&p) && blocks.len() < k {
+            blocks.push(p);
+        }
+    }
+    let mut ranked: Vec<BlockId> = (0..scores.len())
+        .filter(|&b| scores[b].is_finite() && !blocks.contains(&b))
+        .collect();
+    ranked.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    for b in ranked {
+        if blocks.len() >= k {
+            break;
+        }
+        blocks.push(b);
+    }
+    TopkSelection { blocks, scores: scores.to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_orders_by_score() {
+        let scores = [1.0, 5.0, 3.0, f32::NEG_INFINITY, 4.0];
+        let sel = select_topk(&scores, 3, &[]);
+        assert_eq!(sel.blocks, vec![1, 4, 2]);
+    }
+
+    #[test]
+    fn pins_take_priority() {
+        let scores = [1.0, 5.0, 3.0, 2.0, 4.0];
+        let sel = select_topk(&scores, 3, &[0, 3]);
+        assert_eq!(sel.blocks, vec![0, 3, 1]);
+    }
+
+    #[test]
+    fn incomplete_blocks_never_selected() {
+        let scores = [f32::NEG_INFINITY, f32::NEG_INFINITY, 2.0];
+        let sel = select_topk(&scores, 3, &[0]);
+        assert_eq!(sel.blocks, vec![2]);
+    }
+
+    #[test]
+    fn k_larger_than_blocks_is_fine() {
+        let scores = [1.0, 2.0];
+        let sel = select_topk(&scores, 10, &[]);
+        assert_eq!(sel.blocks.len(), 2);
+    }
+}

@@ -1,0 +1,141 @@
+//! Analysis studies backing Table 1 and Figure 6.
+//!
+//! Both run on the *numerics plane*: Table 1 uses the native engine over
+//! the proxy model zoo (shape-flexible), Fig. 6 uses the full artifact
+//! stack with the Scout scheduler's measured per-layer schedules.
+
+use std::io::Write;
+
+use crate::config::{RecallPolicy, RunConfig};
+use crate::engines::NativeEngine;
+use crate::harness::{self, Stack};
+use crate::kvcache::SeqKvCache;
+use crate::model::PROXY_MODELS;
+use crate::workload::{LengthMix, WorkloadGen};
+
+/// Table 1: cosine similarity between the layer-ahead predicted query
+/// `W_Q^{i+1} X^i` and the real query `W_Q^{i+1} X^{i+1}`, averaged over
+/// layers and decode steps, for each proxy model.
+pub fn tab1_query_similarity(seed: u64, out: &mut dyn Write) -> crate::Result<()> {
+    writeln!(out, "Table 1 — cos(Q_pred, Q_real), proxy model zoo")?;
+    writeln!(out, "{:<20} {:>8} {:>8}", "model", "cos-sim", "layers")?;
+    let mut rows = Vec::new();
+    for (name, f) in PROXY_MODELS {
+        let spec = f();
+        let engine = NativeEngine::from_seed(&spec, seed);
+        let mut cache = SeqKvCache::new(&spec);
+        // prefill a random prompt, then decode a few steps measuring
+        // per-layer query prediction quality
+        let mut gen = WorkloadGen::new(seed ^ 0x51ED, spec.vocab, LengthMix::Fixed(96), 0);
+        let prompt = gen.next_request().prompt;
+        let mut x = engine.prefill(&prompt, &mut cache);
+        let mut sims = Vec::new();
+        for _step in 0..8 {
+            let pos = cache.len() as i64;
+            // Walk the layer stack. Before layer i+1 runs, xi == X^{i+1};
+            // Alg. 1 predicted Q^{i+1} from X^i — compare the two.
+            let mut xi = x.clone();
+            let mut kn = Vec::new();
+            let mut vn = Vec::new();
+            let mut q_pred_next: Option<Vec<f32>> = None;
+            for layer in 0..spec.n_layers {
+                // real query of this layer (from its true input X^layer)
+                let (q_real, k_new, v_new) = engine.pre_attn(&xi, layer, pos);
+                if let Some(qp) = q_pred_next.take() {
+                    sims.push(cosine(&qp, &q_real));
+                }
+                // Alg. 1 line 4: predict next layer's query from X^layer
+                if layer + 1 < spec.n_layers {
+                    q_pred_next = Some(engine.qpred(&xi, layer + 1, pos));
+                }
+                // full attention to advance the layer faithfully
+                let mut p = engine.attend_tail(&q_real, &cache, layer, &k_new, &v_new);
+                for b in 0..cache.full_blocks() {
+                    p.merge(&engine.attend_blocks(&q_real, &cache, layer, &[b]));
+                }
+                engine.post_attn(&mut xi, &p, layer);
+                kn.push(k_new);
+                vn.push(v_new);
+            }
+            // greedy next token
+            let logits = engine.lm_head(&xi);
+            let tok = crate::coordinator::scout::argmax(&logits) as u32;
+            for (l, (k, v)) in kn.iter().zip(&vn).enumerate() {
+                cache.append_layer(l, k, v);
+            }
+            cache.advance();
+            x = engine.weights.embed_token(tok).to_vec();
+        }
+        let mean = sims.iter().sum::<f32>() / sims.len() as f32;
+        writeln!(out, "{:<20} {:>8.3} {:>8}", name, mean, spec.n_layers)?;
+        rows.push((name.to_string(), mean));
+    }
+    writeln!(out, "paper reports 0.93-0.97 on the real checkpoints")?;
+    Ok(())
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let (mut d, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in a.iter().zip(b) {
+        d += (*x as f64) * (*y as f64);
+        na += (*x as f64) * (*x as f64);
+        nb += (*y as f64) * (*y as f64);
+    }
+    (d / (na.sqrt() * nb.sqrt()).max(1e-30)) as f32
+}
+
+/// Fig. 6: CPU compute ratio across decode steps, without (6a) and with
+/// (6b) asynchronous periodic recall, on the real artifact stack.
+/// Also prints the profiled per-layer intervals and their mean.
+pub fn fig6_drift(cfg: &RunConfig, steps: usize, out: &mut dyn Write) -> crate::Result<()> {
+    let stack = Stack::load(cfg)?;
+    let spec = stack.gpu.spec.clone();
+    let prompt_len = spec.max_seq - steps - 2;
+    let mut gen = WorkloadGen::new(cfg.seed, spec.vocab, LengthMix::Fixed(prompt_len), steps);
+    let reqs = gen.take(spec.batch.min(2));
+
+    // 6a: no recall
+    let mut cfg_norecall = cfg.clone();
+    cfg_norecall.scout.recall = RecallPolicy::Disabled;
+    let stack_a = Stack { cfg: cfg_norecall, ..clone_stack(&stack) };
+    let run_a = harness::run_method(&stack_a, crate::config::Method::Scout, reqs.clone(), 10_000, None)?;
+    writeln!(out, "Fig 6a — CPU compute ratio per decode step (no recall)")?;
+    print_ratio_series(out, &run_a)?;
+
+    // profile intervals from 6a
+    let series = run_a.cpu_ratio_series(spec.n_layers);
+    let rc = crate::coordinator::RecallController::new(&stack.cfg.scout, spec.n_layers, Some(&series));
+    writeln!(out, "profiled per-layer recall intervals (beta = {}):", stack.cfg.scout.beta)?;
+    writeln!(out, "  {:?}  (mean {:.1}; paper: mean 8.7)", rc.intervals, rc.mean_interval())?;
+
+    // 6b: with periodic recall at the profiled intervals
+    let run_b = harness::run_method(
+        &stack,
+        crate::config::Method::Scout,
+        reqs,
+        10_000,
+        Some(&series),
+    )?;
+    writeln!(out, "Fig 6b — CPU compute ratio per decode step (periodic recall)")?;
+    print_ratio_series(out, &run_b)?;
+    writeln!(
+        out,
+        "mean CPU ratio: {:.3} -> {:.3}  (paper: drifts up -> 0.082)",
+        run_a.mean_cpu_ratio(),
+        run_b.mean_cpu_ratio()
+    )?;
+    Ok(())
+}
+
+fn clone_stack(s: &Stack) -> Stack {
+    Stack { cfg: s.cfg.clone(), rt: s.rt.clone(), gpu: s.gpu.clone(), native: s.native.clone() }
+}
+
+fn print_ratio_series(out: &mut dyn Write, run: &harness::ServingRun) -> crate::Result<()> {
+    for (i, st) in run.stats.iter().enumerate() {
+        if i % 4 == 0 {
+            writeln!(out, "  step {:>3}: cpu_ratio {:.3}", i, st.cpu_ratio())?;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Minimal dense f32 tensor used across the coordinator.
+//!
+//! The hot path moves contiguous blocks of KV cache between pools, gathers
+//! them into XLA literals, and runs native block attention over them. A
+//! tiny row-major tensor with explicit strides covers all of that without
+//! pulling in an ndarray dependency; keeping the layout trivially
+//! predictable also makes the `engines::cpu` SIMD-friendly inner loops
+//! easy for LLVM to vectorize.
+
+use std::fmt;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Build from existing data; `data.len()` must equal the shape volume.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal volume.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            self.data.len(),
+            shape.iter().product::<usize>(),
+            "reshape {:?} -> {shape:?}",
+            self.shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Raw byte view (for building XLA literals without a copy).
+    pub fn as_bytes(&self) -> &[u8] {
+        unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * std::mem::size_of::<f32>(),
+            )
+        }
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < dim, "index {idx:?} out of bounds {:?} at axis {i}", self.shape);
+            off = off * dim + ix;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Contiguous sub-slice covering `rows` leading-axis rows starting at
+    /// `row` (i.e. `self[row..row+rows]` flattened).
+    pub fn rows(&self, row: usize, rows: usize) -> &[f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &self.data[row * stride..(row + rows) * stride]
+    }
+
+    pub fn rows_mut(&mut self, row: usize, rows: usize) -> &mut [f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &mut self.data[row * stride..(row + rows) * stride]
+    }
+
+    /// Elementwise maximum absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Cosine similarity of the flattened tensors.
+    pub fn cosine(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+        for (a, b) in self.data.iter().zip(&other.data) {
+            dot += (*a as f64) * (*b as f64);
+            na += (*a as f64) * (*a as f64);
+            nb += (*b as f64) * (*b as f64);
+        }
+        if na == 0.0 || nb == 0.0 {
+            return 0.0;
+        }
+        (dot / (na.sqrt() * nb.sqrt())) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_are_row_major() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 5.0);
+        assert_eq!(t.data()[1 * 12 + 2 * 4 + 3], 5.0);
+        assert_eq!(t.at(&[1, 2, 3]), 5.0);
+    }
+
+    #[test]
+    fn rows_slices_leading_axis() {
+        let t = Tensor::from_vec(&[3, 2], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.rows(1, 2), &[2., 3., 4., 5.]);
+    }
+
+    #[test]
+    fn cosine_of_self_is_one() {
+        let t = Tensor::from_vec(&[4], vec![1., -2., 3., 0.5]);
+        assert!((t.cosine(&t) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_volume() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect());
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+}

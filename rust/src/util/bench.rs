@@ -1,0 +1,63 @@
+//! Tiny measurement harness for the `benches/` targets (criterion is not
+//! in the offline crate universe): warmup + repeated timing with
+//! mean/p50/p95 reporting.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmarked closure.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub min_us: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<36} {:>10.1} us/iter  (p50 {:>9.1}, p95 {:>9.1}, min {:>9.1}, n={})",
+            self.name, self.mean_us, self.p50_us, self.p95_us, self.min_us, self.iters
+        )
+    }
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_us: mean,
+        p50_us: q(0.5),
+        p95_us: q(0.95),
+        min_us: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordered() {
+        let r = bench("noop-ish", 2, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.min_us <= r.p50_us && r.p50_us <= r.p95_us);
+        assert_eq!(r.iters, 50);
+    }
+}

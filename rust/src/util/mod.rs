@@ -1,0 +1,10 @@
+//! In-tree substrates for the offline build environment (the vendored
+//! crate universe is exactly the `xla` closure + `anyhow`): a JSON
+//! parser/writer, a seeded PRNG, and a tiny bench timer.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng64;

@@ -1,0 +1,9 @@
+//! Workload generation: synthetic request streams and the needle
+//! (retrieval) workload used by the accuracy benchmark (Fig. 7
+//! substitute — see DESIGN.md §2).
+
+mod needle;
+mod synthetic;
+
+pub use needle::{plant_needle, NeedleEval};
+pub use synthetic::{LengthMix, WorkloadGen};

@@ -1,0 +1,129 @@
+//! Needle (retrieval) workload: plant a KV block that dominates attention
+//! for a known query direction and check whether each method's selection
+//! finds it and how faithful the resulting attention output is.
+//!
+//! LongBench substitution rationale (DESIGN.md §2): retrieval-style
+//! accuracy on long context is, mechanistically, "does the sparse method
+//! keep the blocks the query needs". Planting the needle directly in KV
+//! space lets us measure exactly that with synthetic weights.
+
+use crate::kvcache::SeqKvCache;
+use crate::model::ModelSpec;
+use crate::util::Rng64;
+
+/// Plant a needle into `cache` at `needle_block` for every layer: keys in
+/// that block are rotated toward `q_dir` (unit, `[Hq*D]` per-head
+/// structure collapsed to kv heads) so the block carries outsized
+/// attention mass for queries near `q_dir`. Returns the per-head needle
+/// key direction actually used (`[Hkv*D]`).
+pub fn plant_needle(
+    cache: &mut SeqKvCache,
+    spec: &ModelSpec,
+    needle_block: usize,
+    strength: f32,
+    seed: u64,
+) -> Vec<f32> {
+    let w = spec.n_kv_heads * spec.head_dim;
+    let bs = spec.block_size;
+    let mut rng = Rng64::new(seed);
+    let dir: Vec<f32> = (0..w).map(|_| rng.f32() - 0.5).collect();
+    let norm = dir.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let dir: Vec<f32> = dir.iter().map(|x| x / norm).collect();
+    for layer in 0..spec.n_layers {
+        // overwrite the block's K rows with dir * strength (+ tiny jitter)
+        let mut k = vec![0.0f32; bs * w];
+        for t in 0..bs {
+            for i in 0..w {
+                k[t * w + i] = dir[i] * strength + (rng.f32() - 0.5) * 0.01;
+            }
+        }
+        let v: Vec<f32> = (0..bs * w).map(|_| rng.f32() - 0.5).collect();
+        cache.overwrite_block(layer, needle_block, &k, &v);
+    }
+    dir
+}
+
+/// Accuracy metrics for one method on one workload run.
+#[derive(Debug, Clone, Default)]
+pub struct NeedleEval {
+    /// Fraction of (step, layer) selections that included the needle
+    /// block.
+    pub needle_recall: f64,
+    /// Mean cosine similarity of the method's attention output vs the
+    /// dense oracle.
+    pub output_cosine: f64,
+    /// Mean top-k block recall vs the oracle's attention-mass ranking.
+    pub topk_recall: f64,
+    /// Samples aggregated.
+    pub n: usize,
+}
+
+impl NeedleEval {
+    pub fn merge(&mut self, other: &NeedleEval) {
+        let n = (self.n + other.n).max(1);
+        let wa = self.n as f64 / n as f64;
+        let wb = other.n as f64 / n as f64;
+        self.needle_recall = self.needle_recall * wa + other.needle_recall * wb;
+        self.output_cosine = self.output_cosine * wa + other.output_cosine * wb;
+        self.topk_recall = self.topk_recall * wa + other.topk_recall * wb;
+        self.n = self.n + other.n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::PROXY_MODELS;
+
+    #[test]
+    fn planted_block_dominates_scores() {
+        let mut spec = PROXY_MODELS[0].1();
+        spec.n_layers = 2;
+        spec.max_seq = 128;
+        spec.block_size = 16;
+        spec.n_kv_heads = 2;
+        spec.head_dim = 8;
+        spec.n_q_heads = 4;
+        let mut cache = SeqKvCache::new(&spec);
+        let w = spec.n_kv_heads * spec.head_dim;
+        let mut rng = Rng64::new(9);
+        for _t in 0..64 {
+            for l in 0..spec.n_layers {
+                let k: Vec<f32> = (0..w).map(|_| rng.f32() - 0.5).collect();
+                let v: Vec<f32> = (0..w).map(|_| rng.f32() - 0.5).collect();
+                cache.append_layer(l, &k, &v);
+            }
+            cache.advance();
+        }
+        let dir = plant_needle(&mut cache, &spec, 2, 5.0, 1);
+        // a query aligned with dir (replicated per q head) scores block 2
+        // far above the others
+        let g = spec.n_q_heads / spec.n_kv_heads;
+        let mut q = vec![0.0f32; spec.n_q_heads * spec.head_dim];
+        for h in 0..spec.n_q_heads {
+            let kvh = h / g;
+            q[h * spec.head_dim..(h + 1) * spec.head_dim]
+                .copy_from_slice(&dir[kvh * spec.head_dim..(kvh + 1) * spec.head_dim]);
+        }
+        let scores = crate::sparse::score_blocks_native(
+            &q, &cache.digests, 0, cache.full_blocks(),
+            spec.n_q_heads, spec.n_kv_heads, spec.head_dim,
+        );
+        let best = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, 2, "scores {scores:?}");
+    }
+
+    #[test]
+    fn eval_merge_weights_by_n() {
+        let mut a = NeedleEval { needle_recall: 1.0, output_cosine: 1.0, topk_recall: 1.0, n: 1 };
+        let b = NeedleEval { needle_recall: 0.0, output_cosine: 0.5, topk_recall: 0.0, n: 3 };
+        a.merge(&b);
+        assert!((a.needle_recall - 0.25).abs() < 1e-9);
+        assert_eq!(a.n, 4);
+    }
+}

@@ -1,0 +1,124 @@
+//! Synthetic request-stream generator (Poisson arrivals, length mixes).
+
+use crate::coordinator::RequestSpec;
+use crate::util::Rng64;
+
+/// Prompt-length distribution.
+#[derive(Debug, Clone)]
+pub enum LengthMix {
+    /// All prompts exactly `n` tokens.
+    Fixed(usize),
+    /// Uniform in `[lo, hi]`.
+    Uniform(usize, usize),
+    /// Bimodal short/long mix: `p_long` fraction at `long`, rest at
+    /// `short` (the RAG + CoT convergence the paper's intro motivates).
+    Bimodal { short: usize, long: usize, p_long: f64 },
+}
+
+impl LengthMix {
+    fn sample(&self, rng: &mut Rng64) -> usize {
+        match self {
+            LengthMix::Fixed(n) => *n,
+            LengthMix::Uniform(lo, hi) => rng.range(*lo, *hi),
+            LengthMix::Bimodal { short, long, p_long } => {
+                if rng.bool(*p_long) {
+                    *long
+                } else {
+                    *short
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic (seeded) request generator.
+pub struct WorkloadGen {
+    rng: Rng64,
+    pub vocab: usize,
+    pub mix: LengthMix,
+    pub max_new_tokens: usize,
+    /// Mean inter-arrival time, us (Poisson process; 0 = all at t=0).
+    pub mean_interarrival_us: f64,
+    next_id: u64,
+    clock_us: f64,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64, vocab: usize, mix: LengthMix, max_new_tokens: usize) -> Self {
+        Self {
+            rng: Rng64::new(seed),
+            vocab,
+            mix,
+            max_new_tokens,
+            mean_interarrival_us: 0.0,
+            next_id: 0,
+            clock_us: 0.0,
+        }
+    }
+
+    pub fn with_arrival_rate(mut self, mean_interarrival_us: f64) -> Self {
+        self.mean_interarrival_us = mean_interarrival_us;
+        self
+    }
+
+    /// Generate the next request.
+    pub fn next_request(&mut self) -> RequestSpec {
+        let len = self.mix.sample(&mut self.rng).max(1);
+        // Token ids avoid 0 (the pad token used for batch padding).
+        let prompt: Vec<u32> =
+            (0..len).map(|_| 1 + self.rng.u32_below(self.vocab as u32 - 1)).collect();
+        if self.mean_interarrival_us > 0.0 {
+            // exponential inter-arrival
+            self.clock_us += self.rng.exponential(self.mean_interarrival_us);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        RequestSpec {
+            id,
+            prompt,
+            max_new_tokens: self.max_new_tokens,
+            arrival_us: self.clock_us as u64,
+        }
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<RequestSpec> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_vocab() {
+        let mut a = WorkloadGen::new(1, 100, LengthMix::Uniform(5, 10), 4);
+        let mut b = WorkloadGen::new(1, 100, LengthMix::Uniform(5, 10), 4);
+        let ra = a.take(10);
+        let rb = b.take(10);
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.prompt, y.prompt);
+            assert!(x.prompt.iter().all(|&t| t >= 1 && t < 100));
+            assert!(x.prompt.len() >= 5 && x.prompt.len() <= 10);
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone() {
+        let mut g = WorkloadGen::new(2, 50, LengthMix::Fixed(4), 2)
+            .with_arrival_rate(1000.0);
+        let rs = g.take(20);
+        for w in rs.windows(2) {
+            assert!(w[1].arrival_us >= w[0].arrival_us);
+        }
+        assert!(rs.last().unwrap().arrival_us > 0);
+    }
+
+    #[test]
+    fn bimodal_mixes() {
+        let mut g = WorkloadGen::new(3, 50, LengthMix::Bimodal { short: 4, long: 40, p_long: 0.5 }, 2);
+        let rs = g.take(100);
+        let longs = rs.iter().filter(|r| r.prompt.len() == 40).count();
+        assert!(longs > 20 && longs < 80, "{longs}");
+    }
+}

@@ -1,0 +1,43 @@
+//! Shared helpers for integration tests.
+#![allow(dead_code)] // each test binary uses a different subset
+//!
+//! Tests that execute AOT artifacts require `make artifacts` to have run;
+//! `stack()` panics with a clear message if the test-tiny artifact set is
+//! missing (CI runs `make artifacts` first, see Makefile `test`).
+
+use std::sync::Arc;
+
+use scoutattention::config::RunConfig;
+use scoutattention::harness::Stack;
+
+pub const PRESET: &str = "test-tiny";
+
+pub fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/test-tiny/manifest.json").exists()
+}
+
+/// Load the test stack, or None when artifacts are absent (unit-only CI).
+pub fn try_stack() -> Option<Arc<Stack>> {
+    if !artifacts_present() {
+        eprintln!("SKIP: artifacts/test-tiny missing — run `make artifacts`");
+        return None;
+    }
+    let cfg = RunConfig::for_preset(PRESET);
+    Some(Arc::new(Stack::load(&cfg).expect("load test-tiny stack")))
+}
+
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}: idx {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Max relative error helper for reporting.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}

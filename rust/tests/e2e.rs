@@ -1,0 +1,153 @@
+//! End-to-end scheduler tests on the test-tiny artifact stack: all four
+//! methods decode the same workload; Scout output stays close to the
+//! FullKV oracle; schedule stats behave per the paper's mechanisms.
+
+mod common;
+
+use scoutattention::config::{Method, RecallPolicy};
+use scoutattention::harness::{self, Stack};
+use scoutattention::workload::{LengthMix, WorkloadGen};
+
+fn requests(stack: &Stack, n: usize, prompt: usize, new_tokens: usize) -> Vec<scoutattention::coordinator::RequestSpec> {
+    let spec = stack.gpu.spec.clone();
+    let mut gen = WorkloadGen::new(7, spec.vocab, LengthMix::Fixed(prompt), new_tokens);
+    gen.take(n)
+}
+
+#[test]
+fn all_methods_decode_and_scout_tracks_oracle() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let prompt = spec.block_size * 8; // 8 full blocks > k_blocks=4 budget
+    let reqs = requests(&stack, 3, prompt, 12);
+
+    let oracle = harness::run_method(&stack, Method::FullKv, reqs.clone(), 1000, None).unwrap();
+    assert_eq!(oracle.outputs.len(), 3);
+    for o in &oracle.outputs {
+        assert_eq!(o.generated.len(), 12, "oracle finished");
+    }
+
+    for method in [Method::Scout, Method::Infinigen, Method::Hgca] {
+        let run = harness::run_method(&stack, method, reqs.clone(), 1000, None).unwrap();
+        assert_eq!(run.outputs.len(), 3, "{method:?} finished all requests");
+        let agree = harness::token_agreement(&run, &oracle);
+        // sparse methods on a tiny random-weight model: demand substantial
+        // agreement with dense attention (scout/infinigen select with
+        // digest top-k; hgca keeps a window)
+        assert!(
+            agree >= 0.5,
+            "{method:?} token agreement vs FullKV too low: {agree}"
+        );
+        // sparse methods must actually offload: scout & hgca have CPU work
+        if method != Method::Infinigen {
+            assert!(
+                run.stats.iter().any(|s| s.cpu_ratio() > 0.0),
+                "{method:?} never used the CPU side"
+            );
+        }
+    }
+}
+
+#[test]
+fn scout_beats_selection_off_in_agreement() {
+    // The needle of the design: predicted-query selection must track the
+    // oracle better than a static (no-selection, window-only) policy. We
+    // proxy the latter with HGCA at the same budget.
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let prompt = spec.block_size * 10;
+    let reqs = requests(&stack, 2, prompt, 16);
+    let oracle = harness::run_method(&stack, Method::FullKv, reqs.clone(), 1000, None).unwrap();
+    let scout = harness::run_method(&stack, Method::Scout, reqs.clone(), 1000, None).unwrap();
+    let hgca = harness::run_method(&stack, Method::Hgca, reqs, 1000, None).unwrap();
+    let a_scout = harness::token_agreement(&scout, &oracle);
+    let a_hgca = harness::token_agreement(&hgca, &oracle);
+    assert!(
+        a_scout + 1e-9 >= a_hgca,
+        "scout {a_scout} should track the oracle at least as well as window-only {a_hgca}"
+    );
+}
+
+#[test]
+fn periodic_recall_reduces_cpu_ratio() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let prompt = spec.block_size * 10;
+    let reqs = requests(&stack, 2, prompt, 24);
+
+    // no recall: drift accumulates
+    let mut cfg_a = stack.cfg.clone();
+    cfg_a.scout.recall = RecallPolicy::Disabled;
+    let stack_a = Stack { cfg: cfg_a, rt: stack.rt.clone(), gpu: stack.gpu.clone(), native: stack.native.clone() };
+    let run_a = harness::run_method(&stack_a, Method::Scout, reqs.clone(), 1000, None).unwrap();
+
+    // aggressive fixed recall
+    let mut cfg_b = stack.cfg.clone();
+    cfg_b.scout.recall = RecallPolicy::Fixed { interval: 2 };
+    let stack_b = Stack { cfg: cfg_b, rt: stack.rt.clone(), gpu: stack.gpu.clone(), native: stack.native.clone() };
+    let run_b = harness::run_method(&stack_b, Method::Scout, reqs, 1000, None).unwrap();
+
+    let recall_blocks: usize = run_b.stats.iter().map(|s| s.recall_blocks()).sum();
+    assert!(recall_blocks > 0, "recall must fire");
+    assert!(
+        run_b.mean_cpu_ratio() <= run_a.mean_cpu_ratio() + 1e-9,
+        "recall should not increase CPU load: {} vs {}",
+        run_b.mean_cpu_ratio(),
+        run_a.mean_cpu_ratio()
+    );
+    let no_recall: usize = run_a.stats.iter().map(|s| s.recall_blocks()).sum();
+    assert_eq!(no_recall, 0, "disabled policy must never recall");
+}
+
+#[test]
+fn ablation_arms_run_and_record_modes() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let prompt = spec.block_size * 6;
+    let reqs = requests(&stack, 2, prompt, 6);
+
+    let mut cfg = stack.cfg.clone();
+    cfg.scout.layer_ahead = false;
+    let stack_nopc =
+        Stack { cfg, rt: stack.rt.clone(), gpu: stack.gpu.clone(), native: stack.native.clone() };
+    let run = harness::run_method(&stack_nopc, Method::Scout, reqs.clone(), 1000, None).unwrap();
+    assert!(run.stats.iter().all(|s| !s.layer_ahead), "-PC arm must be serial");
+    let run_pc = harness::run_method(&stack, Method::Scout, reqs, 1000, None).unwrap();
+    assert!(run_pc.stats.iter().all(|s| s.layer_ahead), "default is pipelined");
+    // same numbers either way within fp tolerance? Not exactly: -PC uses
+    // the REAL query for CPU-side selection, so outputs may differ — but
+    // both must complete every request.
+    assert_eq!(run.outputs.len(), 2);
+    assert_eq!(run_pc.outputs.len(), 2);
+}
+
+#[test]
+fn continuous_batching_admits_beyond_tile() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    // 2x the batch tile: forces chunked steps + queueing
+    let reqs = requests(&stack, spec.batch * 2 + 1, spec.block_size * 4, 4);
+    let run = harness::run_method(&stack, Method::Scout, reqs, 2000, None).unwrap();
+    assert_eq!(run.outputs.len(), spec.batch * 2 + 1);
+    for o in &run.outputs {
+        assert_eq!(o.generated.len(), 4);
+    }
+}
+
+#[test]
+fn profiled_recall_intervals_derive_from_measured_series() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let reqs = requests(&stack, 2, spec.block_size * 10, 16);
+    let mut cfg = stack.cfg.clone();
+    cfg.scout.recall = RecallPolicy::Disabled;
+    let stack_a = Stack { cfg, rt: stack.rt.clone(), gpu: stack.gpu.clone(), native: stack.native.clone() };
+    let run = harness::run_method(&stack_a, Method::Scout, reqs.clone(), 1000, None).unwrap();
+    let series = run.cpu_ratio_series(spec.n_layers);
+    assert_eq!(series.series.len(), spec.n_layers);
+    let intervals = series.intervals(stack.cfg.scout.beta, 32);
+    assert!(intervals.iter().all(|&i| (1..=32).contains(&i)));
+    // feeding the profile back in must produce a working scheduler
+    let run2 = harness::run_method(&stack, Method::Scout, reqs, 1000, Some(&series)).unwrap();
+    assert_eq!(run2.outputs.len(), 2);
+}

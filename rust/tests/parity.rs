@@ -1,0 +1,296 @@
+//! Cross-engine parity: every AOT executable must agree with the native
+//! rust engine on identical inputs. This is the contract that lets the
+//! coordinator split attention between the "GPU" (XLA) and "CPU" (native)
+//! and LSE-merge the partials (§3.2).
+
+mod common;
+
+use scoutattention::engines::Partial;
+use scoutattention::kvcache::SeqKvCache;
+use scoutattention::tensor::Tensor;
+use scoutattention::util::Rng64;
+
+fn rand_tensor(rng: &mut Rng64, shape: &[usize], scale: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| (rng.f32() - 0.5) * scale).collect())
+}
+
+#[test]
+fn pre_attn_matches_native() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let mut rng = Rng64::new(11);
+    let x = rand_tensor(&mut rng, &[spec.batch, spec.d_model], 2.0);
+    let pos: Vec<i32> = (0..spec.batch).map(|s| 3 + 2 * s as i32).collect();
+    for layer in [0, spec.n_layers - 1] {
+        let (q, k, v) = stack.gpu.pre_attn(&x, layer, &pos).unwrap();
+        for s in 0..spec.batch {
+            let (qn, kn, vn) = stack.native.pre_attn(x.rows(s, 1), layer, pos[s] as i64);
+            common::assert_close(q.rows(s, 1), &qn, 2e-4, 2e-5, "q");
+            common::assert_close(k.rows(s, 1), &kn, 2e-4, 2e-5, "k");
+            common::assert_close(v.rows(s, 1), &vn, 2e-4, 2e-5, "v");
+        }
+    }
+}
+
+#[test]
+fn qpred_matches_native_and_degenerate_equals_real_q() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let mut rng = Rng64::new(12);
+    let x = rand_tensor(&mut rng, &[spec.batch, spec.d_model], 2.0);
+    let pos: Vec<i32> = vec![9; spec.batch];
+    let qp = stack.gpu.qpred(&x, 1, &pos).unwrap();
+    for s in 0..spec.batch {
+        let qn = stack.native.qpred(x.rows(s, 1), 1, 9);
+        common::assert_close(qp.rows(s, 1), &qn, 2e-4, 2e-5, "qpred");
+    }
+    // degenerate: qpred with layer i's own input == the real q_i
+    let (q, _, _) = stack.gpu.pre_attn(&x, 1, &pos).unwrap();
+    common::assert_close(q.data(), qp.data(), 2e-4, 2e-5, "qpred==q same-layer");
+}
+
+fn filled_cache(stack: &scoutattention::harness::Stack, tokens: usize, seed: u64) -> SeqKvCache {
+    let spec = stack.gpu.spec.clone();
+    let mut cache = SeqKvCache::new(&spec);
+    let mut rng = Rng64::new(seed);
+    let w = spec.n_kv_heads * spec.head_dim;
+    for _t in 0..tokens {
+        for l in 0..spec.n_layers {
+            let k: Vec<f32> = (0..w).map(|_| rng.f32() - 0.5).collect();
+            let v: Vec<f32> = (0..w).map(|_| rng.f32() - 0.5).collect();
+            cache.append_layer(l, &k, &v);
+        }
+        cache.advance();
+    }
+    cache
+}
+
+#[test]
+fn sparse_attn_artifact_matches_native_blocks() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let (b, kb, bs, hkv, d) = (spec.batch, spec.k_blocks, spec.block_size, spec.n_kv_heads, spec.head_dim);
+    let cache = filled_cache(&stack, spec.block_size * 6, 21);
+    let mut rng = Rng64::new(22);
+    let q = rand_tensor(&mut rng, &[b, spec.n_q_heads, d], 1.0);
+
+    // gather blocks [2,0,4] for every sequence
+    let blocks = vec![2usize, 0, 4];
+    let w = hkv * d;
+    let blk_w = bs * w;
+    let mut k = Tensor::zeros(&[b, kb, bs, hkv, d]);
+    let mut v = Tensor::zeros(&[b, kb, bs, hkv, d]);
+    let mut m = Tensor::zeros(&[b, kb, bs]);
+    for s in 0..b {
+        cache.gather_blocks(
+            1,
+            &blocks,
+            kb,
+            &mut k.data_mut()[s * kb * blk_w..(s + 1) * kb * blk_w],
+            &mut v.data_mut()[s * kb * blk_w..(s + 1) * kb * blk_w],
+            &mut m.data_mut()[s * kb * bs..(s + 1) * kb * bs],
+        );
+    }
+    let p = stack.gpu.sparse_attn(&q, &k, &v, &m).unwrap();
+    for s in 0..b {
+        let qrow = &q.rows(s, 1)[..spec.n_q_heads * d];
+        let pn = stack.native.attend_blocks(qrow, &cache, 1, &blocks);
+        common::assert_close(p.acc.rows(s, 1), &pn.acc, 5e-4, 1e-5, "acc");
+        common::assert_close(p.l.rows(s, 1), &pn.l, 5e-4, 1e-6, "l");
+        common::assert_close(p.m.rows(s, 1), &pn.m, 5e-4, 1e-5, "m");
+    }
+}
+
+#[test]
+fn block_scores_artifact_matches_native_scoring() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let cache = filled_cache(&stack, spec.block_size * 5 + 3, 31);
+    let mut rng = Rng64::new(32);
+    let (b, nb, hkv, d, hq) =
+        (spec.batch, spec.n_blocks(), spec.n_kv_heads, spec.head_dim, spec.n_q_heads);
+    let q = rand_tensor(&mut rng, &[b, hq, d], 1.0);
+    // assemble digest operands from the cache's digest store (layer 0)
+    let (kmin_t, kmax_t) = cache.digests.layer(0);
+    let mut kmin = Tensor::zeros(&[b, nb, hkv, d]);
+    let mut kmax = Tensor::zeros(&[b, nb, hkv, d]);
+    for s in 0..b {
+        // incomplete blocks hold +-inf sentinels; zero them for the
+        // artifact (the coordinator only reads complete-block scores)
+        let full = cache.full_blocks();
+        let wrow = nb * hkv * d;
+        for blk in 0..full {
+            let off = s * wrow + blk * hkv * d;
+            kmin.data_mut()[off..off + hkv * d]
+                .copy_from_slice(&kmin_t.data()[blk * hkv * d..(blk + 1) * hkv * d]);
+            kmax.data_mut()[off..off + hkv * d]
+                .copy_from_slice(&kmax_t.data()[blk * hkv * d..(blk + 1) * hkv * d]);
+        }
+    }
+    let scores = stack.gpu.block_scores(&q, &kmin, &kmax).unwrap();
+    for s in 0..b {
+        let native = scoutattention::sparse::score_blocks_native(
+            &q.rows(s, 1)[..hq * d],
+            &cache.digests,
+            0,
+            cache.full_blocks(),
+            hq,
+            hkv,
+            d,
+        );
+        for blk in 0..cache.full_blocks() {
+            let a = scores.at(&[s, blk]);
+            let n = native[blk];
+            assert!((a - n).abs() <= 1e-3 + 1e-3 * n.abs(), "blk {blk}: {a} vs {n}");
+        }
+    }
+}
+
+#[test]
+fn merge_artifact_matches_native_merge() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let (b, hq, d) = (spec.batch, spec.n_q_heads, spec.head_dim);
+    let mut rng = Rng64::new(41);
+    let mk = |rng: &mut Rng64| {
+        let acc = rand_tensor(rng, &[b, hq, d], 1.0);
+        let m = rand_tensor(rng, &[b, hq], 2.0);
+        let mut l = rand_tensor(rng, &[b, hq], 1.0);
+        for x in l.data_mut() {
+            *x = x.abs() + 0.1;
+        }
+        scoutattention::engines::gpu::BatchPartial { acc, m, l }
+    };
+    let a = mk(&mut rng);
+    let bb = mk(&mut rng);
+    let merged = stack.gpu.merge(&a, &bb).unwrap();
+    for s in 0..b {
+        let mut pa = Partial::empty(hq, d);
+        pa.acc.copy_from_slice(a.acc.rows(s, 1));
+        pa.m.copy_from_slice(a.m.rows(s, 1));
+        pa.l.copy_from_slice(a.l.rows(s, 1));
+        let mut pb = Partial::empty(hq, d);
+        pb.acc.copy_from_slice(bb.acc.rows(s, 1));
+        pb.m.copy_from_slice(bb.m.rows(s, 1));
+        pb.l.copy_from_slice(bb.l.rows(s, 1));
+        pa.merge(&pb);
+        common::assert_close(merged.acc.rows(s, 1), &pa.acc, 2e-4, 1e-6, "macc");
+        common::assert_close(merged.l.rows(s, 1), &pa.l, 2e-4, 1e-6, "ml");
+    }
+}
+
+#[test]
+fn decode_full_artifact_matches_native_oracle() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let (b, s_max) = (spec.batch, spec.max_seq);
+    let w = spec.n_kv_heads * spec.head_dim;
+    let n_tok = spec.block_size * 3 + 5;
+    let cache = filled_cache(&stack, n_tok, 51);
+    let mut rng = Rng64::new(52);
+    let x = rand_tensor(&mut rng, &[b, spec.d_model], 1.0);
+    // dense cache operands
+    let mut kc = Tensor::zeros(&[spec.n_layers, b, s_max, spec.n_kv_heads, spec.head_dim]);
+    let mut vc = Tensor::zeros(&[spec.n_layers, b, s_max, spec.n_kv_heads, spec.head_dim]);
+    let seq_w = s_max * w;
+    for layer in 0..spec.n_layers {
+        for s in 0..b {
+            let off = (layer * b + s) * seq_w;
+            kc.data_mut()[off..off + n_tok * w].copy_from_slice(cache.k_rows(layer, 0, n_tok));
+            vc.data_mut()[off..off + n_tok * w].copy_from_slice(cache.v_rows(layer, 0, n_tok));
+        }
+    }
+    let pos = vec![n_tok as i32; b];
+    let (logits, kn, vn) = stack.gpu.decode_full(&x, &kc, &vc, &pos).unwrap();
+    for s in 0..b.min(2) {
+        let (ln, knn, vnn) = stack.native.decode_step_full(x.rows(s, 1), &cache, n_tok as i64);
+        // logits agree to float tolerance across two very different
+        // execution orders (XLA fused scan vs per-token online softmax)
+        common::assert_close(logits.rows(s, 1), &ln, 3e-3, 3e-3, "logits");
+        for layer in 0..spec.n_layers {
+            common::assert_close(
+                &kn.rows(layer, 1)[s * w..(s + 1) * w],
+                &knn[layer],
+                1e-3,
+                1e-4,
+                "k_new",
+            );
+            common::assert_close(
+                &vn.rows(layer, 1)[s * w..(s + 1) * w],
+                &vnn[layer],
+                1e-3,
+                1e-4,
+                "v_new",
+            );
+        }
+    }
+}
+
+#[test]
+fn prefill_artifact_consistent_with_native_prefill() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let n = spec.block_size * 2 + 7;
+    let toks: Vec<u32> = (0..n).map(|i| 1 + (i as u32 * 7) % (spec.vocab as u32 - 1)).collect();
+    // XLA prefill
+    let mut x_seq = Tensor::zeros(&[spec.max_seq, spec.d_model]);
+    for (t, &tok) in toks.iter().enumerate() {
+        x_seq.rows_mut(t, 1).copy_from_slice(stack.gpu.weights.embed_token(tok));
+    }
+    let (k, v, h_last, logits_last) = stack.gpu.prefill(&x_seq, n).unwrap();
+    // native prefill
+    let mut cache = SeqKvCache::new(&spec);
+    let h_native = stack.native.prefill(&toks, &mut cache);
+    let w = spec.n_kv_heads * spec.head_dim;
+    for layer in 0..spec.n_layers {
+        common::assert_close(
+            &k.rows(layer, 1)[..n * w],
+            cache.k_rows(layer, 0, n),
+            3e-3,
+            3e-4,
+            "prefill k",
+        );
+        common::assert_close(
+            &v.rows(layer, 1)[..n * w],
+            cache.v_rows(layer, 0, n),
+            3e-3,
+            3e-4,
+            "prefill v",
+        );
+    }
+    common::assert_close(h_last.data(), &h_native, 3e-3, 3e-4, "h_last");
+    let logits_native = stack.native.lm_head(&h_native);
+    common::assert_close(logits_last.data(), &logits_native, 5e-3, 5e-3, "prefill logits");
+}
+
+#[test]
+fn lm_head_matches_native() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let mut rng = Rng64::new(61);
+    let x = rand_tensor(&mut rng, &[spec.batch, spec.d_model], 1.5);
+    let logits = stack.gpu.lm_head(&x).unwrap();
+    for s in 0..spec.batch {
+        let ln = stack.native.lm_head(x.rows(s, 1));
+        common::assert_close(logits.rows(s, 1), &ln, 1e-3, 1e-4, "lm_head");
+    }
+}
+
+#[test]
+fn digest_build_artifact_matches_store() {
+    let Some(stack) = common::try_stack() else { return };
+    let spec = stack.gpu.spec.clone();
+    let (b, nb, bs, hkv, d) = (spec.batch, spec.n_blocks(), spec.block_size, spec.n_kv_heads, spec.head_dim);
+    let mut rng = Rng64::new(71);
+    let kblocks = rand_tensor(&mut rng, &[b, nb, bs, hkv, d], 1.0);
+    let (kmin, kmax) = stack.gpu.digest_build(&kblocks).unwrap();
+    // spot-check vs a DigestStore rebuild on sequence 0, block 3
+    let mut store = scoutattention::kvcache::DigestStore::new(&spec);
+    let blk_w = bs * hkv * d;
+    let slab = &kblocks.data()[3 * blk_w..4 * blk_w];
+    store.rebuild_block(0, 3, slab);
+    let (lo, hi) = store.block(0, 3);
+    common::assert_close(&kmin.rows(0, 1)[3 * hkv * d..4 * hkv * d], lo, 1e-6, 0.0, "kmin");
+    common::assert_close(&kmax.rows(0, 1)[3 * hkv * d..4 * hkv * d], hi, 1e-6, 0.0, "kmax");
+}

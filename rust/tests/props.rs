@@ -1,0 +1,215 @@
+//! Property-based tests over coordinator invariants (hand-rolled
+//! rng-driven sweeps — the offline crate universe has no proptest; each
+//! property runs hundreds of random cases with a seeded generator so
+//! failures are reproducible from the printed seed).
+
+mod common;
+
+use scoutattention::engines::Partial;
+use scoutattention::kvcache::ResidentSet;
+use scoutattention::sparse::select_topk;
+use scoutattention::util::Rng64;
+
+fn rand_partial(rng: &mut Rng64, hq: usize, d: usize) -> Partial {
+    let mut p = Partial::empty(hq, d);
+    let tokens = rng.range(1, 12);
+    for _ in 0..tokens {
+        let h = rng.range(0, hq - 1);
+        let s = (rng.f32() - 0.5) * 8.0;
+        let v: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+        p.update_token(h, s, &v);
+    }
+    p
+}
+
+#[test]
+fn prop_merge_associative_and_commutative() {
+    for case in 0..300 {
+        let mut rng = Rng64::new(1000 + case);
+        let (hq, d) = (rng.range(1, 4), rng.range(1, 8));
+        let a = rand_partial(&mut rng, hq, d);
+        let b = rand_partial(&mut rng, hq, d);
+        let c = rand_partial(&mut rng, hq, d);
+        // (a+b)+c == a+(b+c)
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        common::assert_close(&ab_c.finalize(), &a_bc.finalize(), 1e-4, 1e-5, &format!("assoc case {case}"));
+        // a+b == b+a
+        let mut ba = b.clone();
+        ba.merge(&a);
+        common::assert_close(&ab.finalize(), &ba.finalize(), 1e-5, 1e-6, &format!("comm case {case}"));
+    }
+}
+
+#[test]
+fn prop_merge_identity_and_self_consistency() {
+    for case in 0..200 {
+        let mut rng = Rng64::new(2000 + case);
+        let (hq, d) = (rng.range(1, 4), rng.range(1, 8));
+        let a = rand_partial(&mut rng, hq, d);
+        let mut with_empty = a.clone();
+        with_empty.merge(&Partial::empty(hq, d));
+        common::assert_close(&with_empty.finalize(), &a.finalize(), 1e-6, 1e-7, "identity");
+        // merging a with itself doubles l but leaves the output unchanged
+        let mut doubled = a.clone();
+        doubled.merge(&a);
+        common::assert_close(&doubled.finalize(), &a.finalize(), 1e-5, 1e-6, "self-merge output");
+        for (l2, l1) in doubled.l.iter().zip(&a.l) {
+            assert!((l2 - 2.0 * l1).abs() <= 1e-4 * l1.abs() + 1e-6, "self-merge l");
+        }
+    }
+}
+
+#[test]
+fn prop_topk_selection_invariants() {
+    for case in 0..400 {
+        let mut rng = Rng64::new(3000 + case);
+        let n = rng.range(1, 40);
+        let k = rng.range(1, 20);
+        let scores: Vec<f32> = (0..n)
+            .map(|_| if rng.bool(0.15) { f32::NEG_INFINITY } else { (rng.f32() - 0.5) * 10.0 })
+            .collect();
+        let n_pins = rng.range(0, 3.min(n));
+        let pins: Vec<usize> = (0..n_pins).map(|_| rng.range(0, n - 1)).collect();
+        let sel = select_topk(&scores, k, &pins);
+        // size bound
+        assert!(sel.blocks.len() <= k);
+        // no duplicates
+        let mut sorted = sel.blocks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), sel.blocks.len(), "dupes in {:?}", sel.blocks);
+        // only finite-score blocks
+        assert!(sel.blocks.iter().all(|&b| scores[b].is_finite()));
+        // pins (with finite scores) come first, then scores descend
+        let finite_pins: Vec<usize> =
+            pins.iter().copied().filter(|&p| scores[p].is_finite()).collect();
+        for (i, &p) in finite_pins.iter().take(k).enumerate() {
+            if !finite_pins[..i].contains(&p) {
+                assert!(sel.blocks.contains(&p), "pin {p} missing (case {case})");
+            }
+        }
+        // unpinned tail is sorted by score descending
+        let tail: Vec<usize> = sel
+            .blocks
+            .iter()
+            .copied()
+            .filter(|b| !finite_pins.contains(b))
+            .collect();
+        for w in tail.windows(2) {
+            assert!(scores[w[0]] >= scores[w[1]], "tail not sorted (case {case})");
+        }
+        // optimality: any unselected finite block scores <= the minimum
+        // unpinned selected block
+        if let Some(&min_sel) = tail.last() {
+            for b in 0..n {
+                if scores[b].is_finite() && !sel.blocks.contains(&b) && sel.blocks.len() == k {
+                    assert!(
+                        scores[b] <= scores[min_sel] + 1e-6,
+                        "missed better block {b} (case {case})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_resident_set_refresh_and_partition() {
+    for case in 0..300 {
+        let mut rng = Rng64::new(4000 + case);
+        let nb = rng.range(2, 48);
+        let cap = rng.range(1, nb);
+        let mut rs = ResidentSet::new(nb, cap);
+        let mut prev: Vec<usize> = Vec::new();
+        for _round in 0..6 {
+            let want = rng.range(0, nb);
+            let mut ranked: Vec<usize> = Vec::new();
+            for _ in 0..want {
+                let b = rng.range(0, nb - 1);
+                if !ranked.contains(&b) {
+                    ranked.push(b);
+                }
+            }
+            let added = rs.refresh(&ranked);
+            // capacity respected
+            assert!(rs.len() <= cap);
+            // the kept set is exactly the first cap of ranked
+            let kept: Vec<usize> = ranked.iter().copied().take(cap).collect();
+            for &b in &kept {
+                assert!(rs.contains(b));
+            }
+            // added = kept \ prev
+            for &b in &added {
+                assert!(kept.contains(&b) && !prev.contains(&b), "case {case}");
+            }
+            // partition covers the selected set exactly once
+            let selected: Vec<usize> = (0..nb).filter(|_| rng.bool(0.3)).collect();
+            let (gpu, cpu) = rs.partition(&selected);
+            assert_eq!(gpu.len() + cpu.len(), selected.len());
+            for &g in &gpu {
+                assert!(rs.contains(g));
+            }
+            for &c in &cpu {
+                assert!(!rs.contains(c));
+            }
+            prev = kept;
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    use scoutattention::util::Json;
+    fn rand_json(rng: &mut Rng64, depth: usize) -> Json {
+        match if depth == 0 { rng.range(0, 2) } else { rng.range(0, 5) } {
+            0 => Json::Num((rng.f64() - 0.5) * 1e6),
+            1 => Json::str(format!("s{}\n\"x{}", rng.next_u64() % 1000, rng.range(0, 9))),
+            2 => Json::Bool(rng.bool(0.5)),
+            3 => Json::Arr((0..rng.range(0, 4)).map(|_| rand_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.range(0, 4))
+                    .map(|i| (format!("k{i}"), rand_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..300 {
+        let mut rng = Rng64::new(5000 + case);
+        let j = rand_json(&mut rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        match (&j, &back) {
+            (Json::Num(a), Json::Num(b)) => assert!((a - b).abs() <= 1e-9 * a.abs().max(1.0)),
+            _ => assert_eq!(j, back, "case {case}"),
+        }
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_bounded() {
+    use scoutattention::metrics::Histogram;
+    for case in 0..100 {
+        let mut rng = Rng64::new(6000 + case);
+        let mut h = Histogram::new();
+        let n = rng.range(1, 500);
+        let mut max = 0.0f64;
+        for _ in 0..n {
+            let v = rng.f64() * 1e5;
+            max = max.max(v);
+            h.record(v);
+        }
+        assert_eq!(h.count(), n as u64);
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            let x = h.quantile(q);
+            assert!(x >= h.min() - 1e-9 && x <= h.max() + 1e-9, "q{q}={x} case {case}");
+        }
+        assert!(h.quantile(0.5) <= h.quantile(0.99) + 1e-9);
+    }
+}

@@ -1,0 +1,61 @@
+//! Server integration: spin the JSON-lines TCP server on the test-tiny
+//! preset and drive it from a client socket — the full python-free
+//! request path (admission -> prefill -> scout decode -> response).
+
+mod common;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use scoutattention::config::RunConfig;
+use scoutattention::util::Json;
+
+#[test]
+fn serve_roundtrip_over_tcp() {
+    if !common::artifacts_present() {
+        eprintln!("SKIP: artifacts/test-tiny missing — run `make artifacts`");
+        return;
+    }
+    let mut cfg = RunConfig::for_preset(common::PRESET);
+    cfg.server.listen = "127.0.0.1:17411".to_string();
+    std::thread::spawn(move || {
+        let _ = scoutattention::server::serve(cfg);
+    });
+
+    // wait for the listener (engine loads artifacts lazily, bind is fast)
+    let mut sock = None;
+    for _ in 0..100 {
+        match TcpStream::connect("127.0.0.1:17411") {
+            Ok(s) => {
+                sock = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(100)),
+        }
+    }
+    let sock = sock.expect("server did not come up");
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut w = sock;
+
+    // malformed line gets an error object, not a hangup
+    writeln!(w, "this is not json").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(Json::parse(&line).unwrap().get("error").is_some(), "{line}");
+
+    // real request
+    writeln!(w, "{{\"prompt\":[5,6,7,8,9,10,11,12], \"max_new_tokens\": 4}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    let gen = j.req("generated").unwrap().as_arr().unwrap();
+    assert_eq!(gen.len(), 4, "{line}");
+    assert_eq!(j.req_usize("steps").unwrap(), 4);
+
+    // second request on the same connection (engine keeps serving)
+    writeln!(w, "{{\"prompt\":[1,2,3,4], \"max_new_tokens\": 2}}").unwrap();
+    let mut line2 = String::new();
+    reader.read_line(&mut line2).unwrap();
+    let j2 = Json::parse(&line2).unwrap();
+    assert_eq!(j2.req("generated").unwrap().as_arr().unwrap().len(), 2);
+}
