@@ -1,0 +1,46 @@
+# ScoutAttention build entry points.
+#
+# The rust workspace is self-contained: `make test` needs no artifacts
+# (the interpreter backend synthesizes manifests for built-in presets).
+# `make artifacts` runs the python AOT step, which lowers the JAX/Pallas
+# compute plane to HLO-text artifacts for the PJRT backend — it is only
+# required for `--features pjrt` runs and is skipped with a message when
+# the JAX toolchain is absent.
+
+PRESETS ?= test-tiny
+ARTIFACTS_DIR := artifacts
+
+.PHONY: all build test bench clippy artifacts clean
+
+all: build
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench: build
+	cargo bench
+
+clippy:
+	cargo clippy --workspace --all-targets -- -D warnings
+
+# AOT-lower the python compute plane (L1/L2) into HLO-text artifacts +
+# manifests consumed by the PJRT backend. No-ops with a clear message
+# when python/JAX is unavailable; the default interpreter backend does
+# not need these files.
+artifacts:
+	@if python3 -c "import jax" 2>/dev/null; then \
+		(cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS_DIR) \
+			$(foreach p,$(PRESETS),--preset $(p))); \
+		ln -sfn ../$(ARTIFACTS_DIR) rust/$(ARTIFACTS_DIR); \
+	else \
+		echo "make artifacts: python3/JAX toolchain not available — skipping."; \
+		echo "  (The rust test suite runs on the interpreter backend and"; \
+		echo "   does not need artifacts; only --features pjrt does.)"; \
+	fi
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACTS_DIR) rust/$(ARTIFACTS_DIR)

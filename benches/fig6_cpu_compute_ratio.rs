@@ -1,7 +1,7 @@
 //! Fig. 6 — CPU compute ratio across decode steps, measured on the real
 //! artifact stack (numerics plane): 6a without periodic recall (drift
 //! accumulates), 6b with profiled per-layer intervals at beta = 12%.
-//! Requires `make artifacts` (test-tiny preset).
+//! Runs on the interpreter backend out of the box (test-tiny preset).
 
 use scoutattention::config::{Method, RecallPolicy, RunConfig};
 use scoutattention::coordinator::RecallController;

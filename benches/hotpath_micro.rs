@@ -1,6 +1,7 @@
 //! Hot-path microbenchmarks (perf §L3): the coordinator-side operations
 //! that sit on the decode critical path, measured in isolation with the
-//! in-tree bench harness. Run after `make artifacts`.
+//! in-tree bench harness. Runs on the interpreter backend out of the box
+//! (`make artifacts` + `--features pjrt` to measure the PJRT path).
 
 use scoutattention::config::RunConfig;
 use scoutattention::engines::Partial;

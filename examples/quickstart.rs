@@ -1,8 +1,10 @@
 //! Quickstart: load an artifact preset, admit a few requests, decode with
 //! the ScoutAttention scheduler, and print the generated tokens.
 //!
-//!     make artifacts            # once (python AOT step)
 //!     cargo run --release --example quickstart [preset]
+//!
+//! Runs on the interpreter backend out of the box; `make artifacts` +
+//! `--features pjrt` switches the numerics plane to the AOT XLA path.
 //!
 //! Uses the fast `test-tiny` preset by default so the whole example runs
 //! in seconds; pass `serve-20m` for the ~29M-parameter model.

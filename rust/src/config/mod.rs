@@ -10,6 +10,7 @@
 mod scout;
 mod validate;
 
+pub use crate::runtime::BackendKind;
 pub use scout::{RecallPolicy, ScoutConfig};
 
 use crate::sim::timing::DeviceModel;
@@ -104,6 +105,9 @@ pub struct RunConfig {
     pub artifacts_dir: String,
     /// Scheduling method (defaults to Scout).
     pub method: Method,
+    /// Execution backend for the numerics plane (defaults to Auto:
+    /// PJRT when compiled in and artifacts exist, interpreter otherwise).
+    pub backend: BackendKind,
     /// RNG seed for weights + workloads.
     pub seed: u64,
     pub scout: ScoutConfig,
@@ -118,6 +122,7 @@ impl RunConfig {
             preset: preset.to_string(),
             artifacts_dir: "artifacts".to_string(),
             method: Method::Scout,
+            backend: BackendKind::Auto,
             seed: 0xC0FFEE,
             scout: ScoutConfig::default(),
             device: DeviceModel::default(),
@@ -142,6 +147,9 @@ impl RunConfig {
         if let Some(v) = j.get("method") {
             c.method = v.as_str().unwrap_or("scout").parse()?;
         }
+        if let Some(v) = j.get("backend") {
+            c.backend = v.as_str().unwrap_or("auto").parse()?;
+        }
         if let Some(v) = j.get("seed") {
             c.seed = v.as_u64().unwrap_or(c.seed);
         }
@@ -163,6 +171,7 @@ impl RunConfig {
             ("preset", Json::str(self.preset.clone())),
             ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
             ("method", Json::str(self.method.label().to_lowercase())),
+            ("backend", Json::str(self.backend.label())),
             ("seed", Json::num(self.seed as f64)),
             ("scout", self.scout.to_json()),
             ("device", self.device.to_json()),
@@ -199,8 +208,27 @@ mod tests {
     fn partial_json_uses_defaults() {
         let cfg = RunConfig::from_json(&Json::parse("{\"preset\":\"p\"}").unwrap()).unwrap();
         assert_eq!(cfg.method, Method::Scout);
+        assert_eq!(cfg.backend, BackendKind::Auto);
         assert!(cfg.scout.pin_sink);
         assert_eq!(cfg.artifacts_dir, "artifacts");
+    }
+
+    #[test]
+    fn backend_json_roundtrip() {
+        let mut cfg = RunConfig::for_preset("test-tiny");
+        cfg.backend = BackendKind::Interpreter;
+        let text = cfg.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.backend, BackendKind::Interpreter);
+        let cfg = RunConfig::from_json(
+            &Json::parse("{\"preset\":\"p\",\"backend\":\"pjrt\"}").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.backend, BackendKind::Pjrt);
+        assert!(RunConfig::from_json(
+            &Json::parse("{\"preset\":\"p\",\"backend\":\"bogus\"}").unwrap()
+        )
+        .is_err());
     }
 
     #[test]

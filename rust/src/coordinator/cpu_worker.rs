@@ -39,6 +39,11 @@ pub struct CpuWorkerPool {
     tx: SyncSender<Job>,
     rx_done: Receiver<JobResult>,
     outstanding: usize,
+    /// Completed jobs received while collecting a *different* layer.
+    /// Worker threads race, so a layer-`i+1` job spawned early can finish
+    /// before a straggling layer-`i` job is collected; such results are
+    /// parked here and drained by the matching `collect_layer` call.
+    buffered: Vec<JobResult>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -69,7 +74,7 @@ impl CpuWorkerPool {
                 }
             }));
         }
-        Self { tx, rx_done, outstanding: 0, handles }
+        Self { tx, rx_done, outstanding: 0, buffered: Vec::new(), handles }
     }
 
     /// Enqueue one pre-computation job (Alg. 1 line 7).
@@ -93,18 +98,31 @@ impl CpuWorkerPool {
         self.outstanding
     }
 
-    /// Collect all results for the given layer, blocking until every
-    /// outstanding job of that layer has arrived. Results for other
-    /// layers are buffered by the caller via the returned Vec (jobs are
-    /// only ever spawned one layer ahead, so out-of-order keys indicate a
-    /// scheduler bug and panic).
+    /// Collect `expected` results for the given layer, blocking until
+    /// every outstanding job of that layer has arrived. Results for
+    /// *other* layers — possible whenever worker threads race across the
+    /// one-layer-ahead spawn window — are buffered internally and drained
+    /// first by the matching `collect_layer` call, so collection order
+    /// never deadlocks or panics on interleaving.
     pub fn collect_layer(&mut self, layer: usize, expected: usize) -> Vec<JobResult> {
         let mut out = Vec::with_capacity(expected);
+        // Drain anything already parked for this layer.
+        let mut i = 0;
+        while i < self.buffered.len() && out.len() < expected {
+            if self.buffered[i].key.1 == layer {
+                out.push(self.buffered.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
         while out.len() < expected {
             let r = self.rx_done.recv().expect("cpu worker pool hung up");
-            assert_eq!(r.key.1, layer, "out-of-order CPU result (layer {} while collecting {layer})", r.key.1);
             self.outstanding -= 1;
-            out.push(r);
+            if r.key.1 == layer {
+                out.push(r);
+            } else {
+                self.buffered.push(r);
+            }
         }
         out
     }
@@ -163,6 +181,53 @@ mod tests {
         let inline1 = engine.attend_blocks(&q, &cache.read().unwrap(), 1, &[1, 3]);
         assert_eq!(results[0].partial.finalize(), inline0.finalize());
         assert_eq!(results[1].partial.finalize(), inline1.finalize());
+    }
+
+    #[test]
+    fn out_of_order_results_are_buffered_and_drained() {
+        let mut spec = PROXY_MODELS[0].1();
+        spec.n_layers = 8;
+        spec.d_model = 32;
+        spec.n_q_heads = 2;
+        spec.n_kv_heads = 1;
+        spec.head_dim = 8;
+        spec.max_seq = 32;
+        spec.block_size = 8;
+        let engine = Arc::new(NativeEngine::from_seed(&spec, 9));
+        let cache = Arc::new(RwLock::new(SeqKvCache::new(&spec)));
+        {
+            let mut c = cache.write().unwrap();
+            let w = spec.n_kv_heads * spec.head_dim;
+            for t in 0..16 {
+                for l in 0..spec.n_layers {
+                    let k: Vec<f32> = (0..w).map(|i| ((t + l + i) as f32).sin()).collect();
+                    let v: Vec<f32> = (0..w).map(|i| ((t + l + i) as f32).cos()).collect();
+                    c.append_layer(l, &k, &v);
+                }
+                c.advance();
+            }
+        }
+        let q: Vec<f32> =
+            (0..spec.n_q_heads * spec.head_dim).map(|i| (i as f32 * 0.3).sin()).collect();
+        // Single worker thread => results land on the done-channel in
+        // spawn order: layer 5 first, then layer 3.
+        let mut pool = CpuWorkerPool::new(engine.clone(), 1);
+        pool.spawn((0, 5), q.clone(), cache.clone(), vec![0]);
+        pool.spawn((0, 3), q.clone(), cache.clone(), vec![1]);
+        // Collecting layer 3 first must buffer the layer-5 result (the
+        // old implementation panicked on the mismatched key).
+        let r3 = pool.collect_layer(3, 1);
+        assert_eq!(r3.len(), 1);
+        assert_eq!(r3[0].key, (0, 3));
+        // The buffered layer-5 result is drained without touching the
+        // (now empty) channel — a recv here would deadlock.
+        let r5 = pool.collect_layer(5, 1);
+        assert_eq!(r5.len(), 1);
+        assert_eq!(r5[0].key, (0, 5));
+        assert_eq!(pool.outstanding(), 0);
+        // numerics unaffected by the reordering
+        let inline5 = engine.attend_blocks(&q, &cache.read().unwrap(), 5, &[0]);
+        assert_eq!(r5[0].partial.finalize(), inline5.finalize());
     }
 
     #[test]

@@ -74,7 +74,9 @@ pub fn sample_and_append(
     kv_width: usize,
 ) {
     for (s, seq) in seqs.iter_mut().enumerate() {
-        let tok = super::scout::argmax(logits.rows(s, 1)) as u32;
+        // all-NaN logits (a numerically-dead sequence) fall back to token
+        // 0 by policy; util::argmax is NaN-skipping and tie-deterministic.
+        let tok = crate::util::argmax(logits.rows(s, 1)).unwrap_or(0) as u32;
         let mut cache = seq.cache.write().unwrap();
         for (i, (kn, vn)) in k_news.iter().zip(v_news).enumerate() {
             cache.append_layer(i, &kn.rows(s, 1)[..kv_width], &vn.rows(s, 1)[..kv_width]);

@@ -225,16 +225,6 @@ impl ScoutScheduler {
     }
 }
 
-pub fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
-        }
-    }
-    best
-}
-
 impl DecodeScheduler for ScoutScheduler {
     fn admit(&mut self, batch: &mut Batch, req: &super::request::RequestSpec) -> crate::Result<()> {
         self.prefill_request(batch, req)

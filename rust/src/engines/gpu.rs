@@ -1,17 +1,18 @@
-//! GPU engine: batched execution of the AOT XLA artifacts.
+//! GPU engine: batched execution of the manifest entries through the
+//! pluggable runtime backend.
 //!
 //! Stands in for the paper's GPU. One method per artifact entry; weight
-//! operands are converted to XLA literals once at construction (they are
-//! the same every call), activation operands per call. The batch tile
-//! `B` is fixed by the artifact set; the coordinator pads partial
-//! batches.
+//! operands are *borrowed row slices of the stacked weight tensors* —
+//! no per-call conversion and no resident second copy of the model. The
+//! backend decides what to do with a borrowed operand (the interpreter
+//! walks it in place; PJRT builds an XLA literal from the raw bytes).
+//! The batch tile `B` is fixed by the manifest; the coordinator pads
+//! partial batches.
 
 use std::sync::Arc;
 
-use xla::Literal;
-
 use crate::model::{ModelSpec, Weights};
-use crate::runtime::{literal_to_tensor, tensor_to_literal, vec_i32_literal, Runtime};
+use crate::runtime::{Operand, Runtime};
 use crate::tensor::Tensor;
 
 /// Batched attention partial: acc `[B,Hq,D]`, m `[B,Hq]`, l `[B,Hq]`.
@@ -41,67 +42,65 @@ impl BatchPartial {
     }
 }
 
-/// Per-layer weight literals (cached operand set).
-struct LayerLits {
-    ln1: Literal,
-    wq: Literal,
-    wk: Literal,
-    wv: Literal,
-    wo: Literal,
-    ln2: Literal,
-    w1: Literal,
-    w2: Literal,
+/// Operand shapes of the per-layer weight slices (the granular entries'
+/// manifest shapes; identical for every layer).
+struct LayerShapes {
+    ln: [usize; 1],
+    wq: [usize; 2],
+    wkv: [usize; 2],
+    wo: [usize; 2],
+    w1: [usize; 2],
+    w2: [usize; 2],
 }
 
 pub struct GpuEngine {
     pub rt: Arc<Runtime>,
     pub spec: ModelSpec,
     pub weights: Weights,
-    layers: Vec<LayerLits>,
-    stacked: Vec<Literal>, // [ln1, wq, wk, wv, wo, ln2, w1, w2] stacked [L,...]
-    ln_f: Literal,
-    embed: Literal,
+    shapes: LayerShapes,
 }
 
 impl GpuEngine {
     pub fn new(rt: Arc<Runtime>, weights: Weights) -> crate::Result<Self> {
         let spec = rt.manifest.config.clone();
-        let (l, d, dff) = (spec.n_layers, spec.d_model, spec.d_ff);
+        let (d, dff) = (spec.d_model, spec.d_ff);
         let hq_d = spec.n_q_heads * spec.head_dim;
         let hkv_d = spec.n_kv_heads * spec.head_dim;
-        let lit = |data: &[f32], shape: &[usize]| -> crate::Result<Literal> {
-            tensor_to_literal(&Tensor::from_vec(shape, data.to_vec()))
+        let shapes = LayerShapes {
+            ln: [d],
+            wq: [d, hq_d],
+            wkv: [d, hkv_d],
+            wo: [hq_d, d],
+            w1: [d, dff],
+            w2: [dff, d],
         };
-        let mut layers = Vec::with_capacity(l);
-        for i in 0..l {
-            layers.push(LayerLits {
-                ln1: lit(weights.layer_ln1(i), &[d])?,
-                wq: lit(weights.layer_wq(i), &[d, hq_d])?,
-                wk: lit(weights.layer_wk(i), &[d, hkv_d])?,
-                wv: lit(weights.layer_wv(i), &[d, hkv_d])?,
-                wo: lit(weights.layer_wo(i), &[hq_d, d])?,
-                ln2: lit(weights.layer_ln2(i), &[d])?,
-                w1: lit(weights.layer_w1(i), &[d, dff])?,
-                w2: lit(weights.layer_w2(i), &[dff, d])?,
-            });
-        }
-        let stacked = vec![
-            tensor_to_literal(&weights.ln1)?,
-            tensor_to_literal(&weights.wq)?,
-            tensor_to_literal(&weights.wk)?,
-            tensor_to_literal(&weights.wv)?,
-            tensor_to_literal(&weights.wo)?,
-            tensor_to_literal(&weights.ln2)?,
-            tensor_to_literal(&weights.w1)?,
-            tensor_to_literal(&weights.w2)?,
-        ];
-        let ln_f = tensor_to_literal(&weights.ln_f)?;
-        let embed = tensor_to_literal(&weights.embed)?;
-        Ok(Self { rt, spec, weights, layers, stacked, ln_f, embed })
+        Ok(Self { rt, spec, weights, shapes })
     }
 
-    fn pos_lit(&self, pos: &[i32]) -> crate::Result<Literal> {
-        vec_i32_literal(&[pos.len()], pos)
+    /// The stacked-weight operand prefix shared by `decode_full` and
+    /// `prefill` (the `Weights` tensors already carry the `[L, ...]`
+    /// manifest shapes).
+    fn stacked_operands(&self) -> [Operand<'_>; 10] {
+        [
+            Operand::t(&self.weights.ln1),
+            Operand::t(&self.weights.wq),
+            Operand::t(&self.weights.wk),
+            Operand::t(&self.weights.wv),
+            Operand::t(&self.weights.wo),
+            Operand::t(&self.weights.ln2),
+            Operand::t(&self.weights.w1),
+            Operand::t(&self.weights.w2),
+            Operand::t(&self.weights.ln_f),
+            Operand::t(&self.weights.embed),
+        ]
+    }
+
+    fn partial_from(mut outs: Vec<Tensor>) -> crate::Result<BatchPartial> {
+        anyhow::ensure!(outs.len() == 3, "partial entry returned {} outputs", outs.len());
+        let l = outs.pop().unwrap();
+        let m = outs.pop().unwrap();
+        let acc = outs.pop().unwrap();
+        Ok(BatchPartial { acc, m, l })
     }
 
     /// QKV + RoPE for the batch tile at one layer.
@@ -111,26 +110,41 @@ impl GpuEngine {
         layer: usize,
         pos: &[i32],
     ) -> crate::Result<(Tensor, Tensor, Tensor)> {
-        let w = &self.layers[layer];
-        let xl = tensor_to_literal(x)?;
-        let pl = self.pos_lit(pos)?;
-        let outs = self
-            .rt
-            .execute("layer_pre_attn", &[&xl, &w.ln1, &w.wq, &w.wk, &w.wv, &pl])?;
-        Ok((
-            literal_to_tensor(&outs[0])?,
-            literal_to_tensor(&outs[1])?,
-            literal_to_tensor(&outs[2])?,
-        ))
+        let s = &self.shapes;
+        let w = &self.weights;
+        let pos_shape = [pos.len()];
+        let mut outs = self.rt.execute(
+            "layer_pre_attn",
+            &[
+                Operand::t(x),
+                Operand::f32_slice(&s.ln, w.layer_ln1(layer)),
+                Operand::f32_slice(&s.wq, w.layer_wq(layer)),
+                Operand::f32_slice(&s.wkv, w.layer_wk(layer)),
+                Operand::f32_slice(&s.wkv, w.layer_wv(layer)),
+                Operand::I32 { shape: &pos_shape, data: pos },
+            ],
+        )?;
+        let v = outs.pop().unwrap();
+        let k = outs.pop().unwrap();
+        let q = outs.pop().unwrap();
+        Ok((q, k, v))
     }
 
     /// Predicted query for layer `layer_next` from the current input.
     pub fn qpred(&self, x: &Tensor, layer_next: usize, pos: &[i32]) -> crate::Result<Tensor> {
-        let w = &self.layers[layer_next];
-        let xl = tensor_to_literal(x)?;
-        let pl = self.pos_lit(pos)?;
-        let outs = self.rt.execute("qpred", &[&xl, &w.ln1, &w.wq, &pl])?;
-        literal_to_tensor(&outs[0])
+        let s = &self.shapes;
+        let w = &self.weights;
+        let pos_shape = [pos.len()];
+        let mut outs = self.rt.execute(
+            "qpred",
+            &[
+                Operand::t(x),
+                Operand::f32_slice(&s.ln, w.layer_ln1(layer_next)),
+                Operand::f32_slice(&s.wq, w.layer_wq(layer_next)),
+                Operand::I32 { shape: &pos_shape, data: pos },
+            ],
+        )?;
+        Ok(outs.pop().unwrap())
     }
 
     /// Block-sparse attention partial over gathered blocks.
@@ -141,18 +155,11 @@ impl GpuEngine {
         v_sel: &Tensor,
         mask: &Tensor,
     ) -> crate::Result<BatchPartial> {
-        let (ql, kl, vl, ml) = (
-            tensor_to_literal(q)?,
-            tensor_to_literal(k_sel)?,
-            tensor_to_literal(v_sel)?,
-            tensor_to_literal(mask)?,
-        );
-        let outs = self.rt.execute("sparse_attn", &[&ql, &kl, &vl, &ml])?;
-        Ok(BatchPartial {
-            acc: literal_to_tensor(&outs[0])?,
-            m: literal_to_tensor(&outs[1])?,
-            l: literal_to_tensor(&outs[2])?,
-        })
+        let outs = self.rt.execute(
+            "sparse_attn",
+            &[Operand::t(q), Operand::t(k_sel), Operand::t(v_sel), Operand::t(mask)],
+        )?;
+        Self::partial_from(outs)
     }
 
     /// Tail partial (kb = 1 instantiation of the same kernel).
@@ -163,39 +170,27 @@ impl GpuEngine {
         v_tail: &Tensor,
         mask: &Tensor,
     ) -> crate::Result<BatchPartial> {
-        let (ql, kl, vl, ml) = (
-            tensor_to_literal(q)?,
-            tensor_to_literal(k_tail)?,
-            tensor_to_literal(v_tail)?,
-            tensor_to_literal(mask)?,
-        );
-        let outs = self.rt.execute("tail_attn", &[&ql, &kl, &vl, &ml])?;
-        Ok(BatchPartial {
-            acc: literal_to_tensor(&outs[0])?,
-            m: literal_to_tensor(&outs[1])?,
-            l: literal_to_tensor(&outs[2])?,
-        })
+        let outs = self.rt.execute(
+            "tail_attn",
+            &[Operand::t(q), Operand::t(k_tail), Operand::t(v_tail), Operand::t(mask)],
+        )?;
+        Self::partial_from(outs)
     }
 
     /// LSE merge of two batched partials (L1 merge kernel).
     pub fn merge(&self, a: &BatchPartial, b: &BatchPartial) -> crate::Result<BatchPartial> {
-        let ops = (
-            tensor_to_literal(&a.acc)?,
-            tensor_to_literal(&a.m)?,
-            tensor_to_literal(&a.l)?,
-            tensor_to_literal(&b.acc)?,
-            tensor_to_literal(&b.m)?,
-            tensor_to_literal(&b.l)?,
-        );
         let outs = self.rt.execute(
             "merge",
-            &[&ops.0, &ops.1, &ops.2, &ops.3, &ops.4, &ops.5],
+            &[
+                Operand::t(&a.acc),
+                Operand::t(&a.m),
+                Operand::t(&a.l),
+                Operand::t(&b.acc),
+                Operand::t(&b.m),
+                Operand::t(&b.l),
+            ],
         )?;
-        Ok(BatchPartial {
-            acc: literal_to_tensor(&outs[0])?,
-            m: literal_to_tensor(&outs[1])?,
-            l: literal_to_tensor(&outs[2])?,
-        })
+        Self::partial_from(outs)
     }
 
     /// Attention finalize + out-proj + MLP for one layer.
@@ -205,31 +200,42 @@ impl GpuEngine {
         p: &BatchPartial,
         layer: usize,
     ) -> crate::Result<Tensor> {
-        let w = &self.layers[layer];
-        let (xl, accl, ll) = (
-            tensor_to_literal(x)?,
-            tensor_to_literal(&p.acc)?,
-            tensor_to_literal(&p.l)?,
-        );
-        let outs = self.rt.execute(
+        let s = &self.shapes;
+        let w = &self.weights;
+        let mut outs = self.rt.execute(
             "layer_post_attn",
-            &[&xl, &accl, &ll, &w.wo, &w.ln2, &w.w1, &w.w2],
+            &[
+                Operand::t(x),
+                Operand::t(&p.acc),
+                Operand::t(&p.l),
+                Operand::f32_slice(&s.wo, w.layer_wo(layer)),
+                Operand::f32_slice(&s.ln, w.layer_ln2(layer)),
+                Operand::f32_slice(&s.w1, w.layer_w1(layer)),
+                Operand::f32_slice(&s.w2, w.layer_w2(layer)),
+            ],
         )?;
-        literal_to_tensor(&outs[0])
+        Ok(outs.pop().unwrap())
     }
 
     /// Final norm + tied LM head: logits `[B, V]`.
     pub fn lm_head(&self, x: &Tensor) -> crate::Result<Tensor> {
-        let xl = tensor_to_literal(x)?;
-        let outs = self.rt.execute("lm_head", &[&xl, &self.ln_f, &self.embed])?;
-        literal_to_tensor(&outs[0])
+        let mut outs = self.rt.execute(
+            "lm_head",
+            &[
+                Operand::t(x),
+                Operand::t(&self.weights.ln_f),
+                Operand::t(&self.weights.embed),
+            ],
+        )?;
+        Ok(outs.pop().unwrap())
     }
 
     /// Quest digests for gathered blocks `[B, nb, bs, Hkv, D]`.
     pub fn digest_build(&self, k_blocks: &Tensor) -> crate::Result<(Tensor, Tensor)> {
-        let kl = tensor_to_literal(k_blocks)?;
-        let outs = self.rt.execute("digest_build", &[&kl])?;
-        Ok((literal_to_tensor(&outs[0])?, literal_to_tensor(&outs[1])?))
+        let mut outs = self.rt.execute("digest_build", &[Operand::t(k_blocks)])?;
+        let kmax = outs.pop().unwrap();
+        let kmin = outs.pop().unwrap();
+        Ok((kmin, kmax))
     }
 
     /// Quest block scores `[B, nb]`.
@@ -239,10 +245,11 @@ impl GpuEngine {
         kmin: &Tensor,
         kmax: &Tensor,
     ) -> crate::Result<Tensor> {
-        let (ql, lol, hil) =
-            (tensor_to_literal(q)?, tensor_to_literal(kmin)?, tensor_to_literal(kmax)?);
-        let outs = self.rt.execute("block_scores", &[&ql, &lol, &hil])?;
-        literal_to_tensor(&outs[0])
+        let mut outs = self.rt.execute(
+            "block_scores",
+            &[Operand::t(q), Operand::t(kmin), Operand::t(kmax)],
+        )?;
+        Ok(outs.pop().unwrap())
     }
 
     /// Fused FullKV decode step (baseline/oracle):
@@ -254,23 +261,17 @@ impl GpuEngine {
         vcache: &Tensor,
         pos: &[i32],
     ) -> crate::Result<(Tensor, Tensor, Tensor)> {
-        let xl = tensor_to_literal(x)?;
-        let kl = tensor_to_literal(kcache)?;
-        let vl = tensor_to_literal(vcache)?;
-        let pl = self.pos_lit(pos)?;
-        let mut inputs: Vec<&Literal> = vec![&xl];
-        inputs.extend(self.stacked.iter());
-        inputs.push(&self.ln_f);
-        inputs.push(&self.embed);
-        inputs.push(&kl);
-        inputs.push(&vl);
-        inputs.push(&pl);
-        let outs = self.rt.execute("decode_full", &inputs)?;
-        Ok((
-            literal_to_tensor(&outs[0])?,
-            literal_to_tensor(&outs[1])?,
-            literal_to_tensor(&outs[2])?,
-        ))
+        let pos_shape = [pos.len()];
+        let mut inputs: Vec<Operand> = vec![Operand::t(x)];
+        inputs.extend(self.stacked_operands());
+        inputs.push(Operand::t(kcache));
+        inputs.push(Operand::t(vcache));
+        inputs.push(Operand::I32 { shape: &pos_shape, data: pos });
+        let mut outs = self.rt.execute("decode_full", &inputs)?;
+        let v_new = outs.pop().unwrap();
+        let k_new = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok((logits, k_new, v_new))
     }
 
     /// Fused causal prefill for one sequence (padded to S):
@@ -280,20 +281,16 @@ impl GpuEngine {
         x_seq: &Tensor,
         length: usize,
     ) -> crate::Result<(Tensor, Tensor, Tensor, Tensor)> {
-        let xl = tensor_to_literal(x_seq)?;
-        let ll = vec_i32_literal(&[], &[length as i32])?;
-        let mut inputs: Vec<&Literal> = vec![&xl];
-        inputs.extend(self.stacked.iter());
-        inputs.push(&self.ln_f);
-        inputs.push(&self.embed);
-        inputs.push(&ll);
-        let outs = self.rt.execute("prefill", &inputs)?;
-        Ok((
-            literal_to_tensor(&outs[0])?,
-            literal_to_tensor(&outs[1])?,
-            literal_to_tensor(&outs[2])?,
-            literal_to_tensor(&outs[3])?,
-        ))
+        let len = [length as i32];
+        let mut inputs: Vec<Operand> = vec![Operand::t(x_seq)];
+        inputs.extend(self.stacked_operands());
+        inputs.push(Operand::I32 { shape: &[], data: &len });
+        let mut outs = self.rt.execute("prefill", &inputs)?;
+        let logits_last = outs.pop().unwrap();
+        let h_last = outs.pop().unwrap();
+        let v = outs.pop().unwrap();
+        let k = outs.pop().unwrap();
+        Ok((k, v, h_last, logits_last))
     }
 
     /// Embed a batch of token ids into `[B, d]` (host-side row gather —

@@ -6,11 +6,12 @@
 //!   *CPU/IPEX attention worker* computing offloaded blocks near the
 //!   data, and (b) a shape-flexible oracle for the Table-1 / Fig-6
 //!   structural studies over the proxy model zoo.
-//! - [`gpu`] — the *GPU* stand-in: drives the AOT XLA executables through
-//!   the PJRT runtime, one call per artifact entry.
+//! - [`gpu`] — the *GPU* stand-in: drives the manifest entries through
+//!   the pluggable runtime backend (interpreter by default, PJRT-loaded
+//!   XLA executables with `--features pjrt`), one call per entry.
 //!
-//! Cross-engine parity (native vs XLA on identical inputs) is enforced by
-//! `rust/tests/parity.rs`.
+//! Cross-engine parity (native vs the batched backend on identical
+//! inputs) is enforced by `rust/tests/parity.rs`.
 
 pub mod gpu;
 pub mod native;

@@ -51,8 +51,9 @@ pub fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32]) {
     }
 }
 
+/// SiLU activation (shared with the interpreter backend).
 #[inline]
-fn silu(x: f32) -> f32 {
+pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 

@@ -26,10 +26,11 @@ pub struct Stack {
 }
 
 impl Stack {
-    /// Load artifacts, generate seeded weights, build both engines.
+    /// Load the runtime (configured backend), generate seeded weights,
+    /// build both engines.
     pub fn load(cfg: &RunConfig) -> crate::Result<Self> {
         cfg.validate()?;
-        let rt = Arc::new(Runtime::load(&cfg.artifacts_dir, &cfg.preset)?);
+        let rt = Arc::new(Runtime::load_with(&cfg.artifacts_dir, &cfg.preset, cfg.backend)?);
         let spec = rt.manifest.config.clone();
         let weights = Weights::generate(&spec, cfg.seed, 1.0);
         let gpu = Arc::new(GpuEngine::new(rt.clone(), weights.clone())?);

@@ -16,9 +16,11 @@
 //!   HGCA) used by the paper's evaluation.
 //!
 //! Two planes:
-//! - the **numerics plane** executes real attention via PJRT-loaded XLA
-//!   executables (standing in for the GPU) plus a native-rust block
-//!   attention worker (standing in for the CPU/IPEX side);
+//! - the **numerics plane** executes real attention through a pluggable
+//!   [`runtime::Backend`] standing in for the GPU — a pure-rust
+//!   interpreter by default, PJRT-loaded XLA executables with
+//!   `--features pjrt` — plus a native-rust block attention worker
+//!   (standing in for the CPU/IPEX side);
 //! - the **timing plane** (`sim`) replays coordinator schedules under the
 //!   paper's published device ratios (PCIe curve, HBM bw, 20x GPU/CPU
 //!   gap) to regenerate the evaluation figures.

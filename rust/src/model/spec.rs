@@ -98,6 +98,41 @@ impl ModelSpec {
     }
 }
 
+/// Built-in artifact presets, mirroring `python/compile/model.py::PRESETS`
+/// field-for-field. These let the interpreter backend synthesize a
+/// manifest (and therefore run the full integration suite) with no
+/// python AOT step; when `make artifacts` *has* run, the copy embedded in
+/// the on-disk manifest wins.
+pub fn builtin_preset(name: &str) -> Option<ModelSpec> {
+    let mk = |n_layers, d_model, n_q_heads, n_kv_heads, head_dim, d_ff, vocab, max_seq,
+              block_size, k_blocks, batch| ModelSpec {
+        name: name.to_string(),
+        n_layers,
+        d_model,
+        n_q_heads,
+        n_kv_heads,
+        head_dim,
+        d_ff,
+        vocab,
+        max_seq,
+        block_size,
+        k_blocks,
+        batch,
+        rope_theta: 10000.0,
+    };
+    match name {
+        // Fast shapes for rust integration tests.
+        "test-tiny" => Some(mk(2, 128, 4, 2, 32, 256, 256, 256, 16, 4, 2)),
+        // E2E serving example: ~29M params.
+        "serve-20m" => Some(mk(8, 512, 8, 2, 64, 2048, 8192, 2048, 32, 32, 8)),
+        // Accuracy evaluation at 4k context, budget 1024 tokens (kb=32).
+        "eval-4k" => Some(mk(8, 256, 8, 2, 32, 1024, 4096, 4096, 32, 32, 4)),
+        // Accuracy evaluation at 4k context, budget 2048 tokens (kb=64).
+        "eval-4k-b2048" => Some(mk(8, 256, 8, 2, 32, 1024, 4096, 4096, 32, 64, 4)),
+        _ => None,
+    }
+}
+
 /// Scaled-down shape proxies of the paper's Table-1 model zoo, used by the
 /// native-engine studies (query predictability, drift). Layer counts and
 /// head geometry follow the real architectures; widths are divided down so
@@ -139,6 +174,16 @@ fn proxy(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn builtin_presets_validate() {
+        for name in ["test-tiny", "serve-20m", "eval-4k", "eval-4k-b2048"] {
+            let spec = builtin_preset(name).unwrap();
+            assert_eq!(spec.name, name);
+            spec.validate().unwrap();
+        }
+        assert!(builtin_preset("nope").is_none());
+    }
 
     #[test]
     fn proxies_validate() {

@@ -1,5 +1,12 @@
-//! Artifact manifest parsing (`artifacts/<preset>/manifest.json`), via the
-//! in-tree JSON parser.
+//! Artifact manifests: the per-entry I/O contract of the compute plane.
+//!
+//! Two sources, same type:
+//! - [`Manifest::load`] parses `artifacts/<preset>/manifest.json` written
+//!   by `make artifacts` (python AOT step), via the in-tree JSON parser.
+//! - [`Manifest::synthesize`] derives the identical entry set directly
+//!   from a [`ModelSpec`], mirroring `python/compile/aot.py::entry_points`
+//!   shape-for-shape — this is what lets the interpreter backend run with
+//!   no artifacts on disk while keeping full shape checking.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -99,6 +106,173 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Derive the manifest for `spec` without touching disk, mirroring
+    /// `aot.py::entry_points` (names, operand order, shapes, dtypes).
+    /// The `file` fields point at the HLO artifacts the python step
+    /// *would* write; only the PJRT backend ever opens them.
+    pub fn synthesize(spec: &ModelSpec) -> crate::Result<Self> {
+        spec.validate()?;
+        let (l, d, dff, v, s) =
+            (spec.n_layers, spec.d_model, spec.d_ff, spec.vocab, spec.max_seq);
+        let (b, hq, hkv, dd) = (spec.batch, spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
+        let (nb, bs, kb) = (spec.n_blocks(), spec.block_size, spec.k_blocks);
+        let (hq_d, hkv_d) = (hq * dd, hkv * dd);
+
+        let f = |name: &str, shape: &[usize]| TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: "float32".to_string(),
+        };
+        let i = |name: &str, shape: &[usize]| TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: "int32".to_string(),
+        };
+        let out = |shape: &[usize]| f("", shape);
+        let stacked = || {
+            vec![
+                f("ln1", &[l, d]),
+                f("wq", &[l, d, hq_d]),
+                f("wk", &[l, d, hkv_d]),
+                f("wv", &[l, d, hkv_d]),
+                f("wo", &[l, hq_d, d]),
+                f("ln2", &[l, d]),
+                f("w1", &[l, d, dff]),
+                f("w2", &[l, dff, d]),
+            ]
+        };
+        let attn_io = |slots: usize| {
+            (
+                vec![
+                    f("q", &[b, hq, dd]),
+                    f("k_sel", &[b, slots, bs, hkv, dd]),
+                    f("v_sel", &[b, slots, bs, hkv, dd]),
+                    f("token_mask", &[b, slots, bs]),
+                ],
+                vec![out(&[b, hq, dd]), out(&[b, hq]), out(&[b, hq])],
+            )
+        };
+
+        let mut entries = BTreeMap::new();
+        let mut add = |name: &str, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| {
+            entries.insert(
+                name.to_string(),
+                ArtifactEntry { file: format!("{name}.hlo.txt"), inputs, outputs },
+            );
+        };
+        add(
+            "layer_pre_attn",
+            vec![
+                f("x", &[b, d]),
+                f("ln1", &[d]),
+                f("wq", &[d, hq_d]),
+                f("wk", &[d, hkv_d]),
+                f("wv", &[d, hkv_d]),
+                i("pos", &[b]),
+            ],
+            vec![out(&[b, hq, dd]), out(&[b, hkv, dd]), out(&[b, hkv, dd])],
+        );
+        add(
+            "qpred",
+            vec![
+                f("x", &[b, d]),
+                f("ln1_next", &[d]),
+                f("wq_next", &[d, hq_d]),
+                i("pos", &[b]),
+            ],
+            vec![out(&[b, hq, dd])],
+        );
+        add(
+            "digest_build",
+            vec![f("k_blocks", &[b, nb, bs, hkv, dd])],
+            vec![out(&[b, nb, hkv, dd]), out(&[b, nb, hkv, dd])],
+        );
+        add(
+            "block_scores",
+            vec![
+                f("q", &[b, hq, dd]),
+                f("kmin", &[b, nb, hkv, dd]),
+                f("kmax", &[b, nb, hkv, dd]),
+            ],
+            vec![out(&[b, nb])],
+        );
+        let (inp, outp) = attn_io(kb);
+        add("sparse_attn", inp, outp);
+        let (inp, outp) = attn_io(1);
+        add("tail_attn", inp, outp);
+        add(
+            "merge",
+            vec![
+                f("acc_a", &[b, hq, dd]),
+                f("m_a", &[b, hq]),
+                f("l_a", &[b, hq]),
+                f("acc_b", &[b, hq, dd]),
+                f("m_b", &[b, hq]),
+                f("l_b", &[b, hq]),
+            ],
+            vec![out(&[b, hq, dd]), out(&[b, hq]), out(&[b, hq])],
+        );
+        add(
+            "layer_post_attn",
+            vec![
+                f("x", &[b, d]),
+                f("acc", &[b, hq, dd]),
+                f("l", &[b, hq]),
+                f("wo", &[hq_d, d]),
+                f("ln2", &[d]),
+                f("w1", &[d, dff]),
+                f("w2", &[dff, d]),
+            ],
+            vec![out(&[b, d])],
+        );
+        add(
+            "lm_head",
+            vec![f("x", &[b, d]), f("ln_f", &[d]), f("embed", &[v, d])],
+            vec![out(&[b, v])],
+        );
+        let mut decode_in = vec![f("x", &[b, d])];
+        decode_in.extend(stacked());
+        decode_in.push(f("ln_f", &[d]));
+        decode_in.push(f("embed", &[v, d]));
+        decode_in.push(f("kcache", &[l, b, s, hkv, dd]));
+        decode_in.push(f("vcache", &[l, b, s, hkv, dd]));
+        decode_in.push(i("pos", &[b]));
+        add(
+            "decode_full",
+            decode_in,
+            vec![out(&[b, v]), out(&[l, b, hkv, dd]), out(&[l, b, hkv, dd])],
+        );
+        let mut prefill_in = vec![f("x_seq", &[s, d])];
+        prefill_in.extend(stacked());
+        prefill_in.push(f("ln_f", &[d]));
+        prefill_in.push(f("embed", &[v, d]));
+        prefill_in.push(i("length", &[]));
+        add(
+            "prefill",
+            prefill_in,
+            vec![out(&[l, s, hkv, dd]), out(&[l, s, hkv, dd]), out(&[d]), out(&[v])],
+        );
+
+        Ok(Manifest {
+            preset: spec.name.clone(),
+            config: spec.clone(),
+            entries,
+            dir: PathBuf::new(),
+        })
+    }
+
+    /// Synthesize the manifest of a built-in preset by name (the presets
+    /// mirror `python/compile/model.py::PRESETS`).
+    pub fn synthesize_preset(name: &str) -> crate::Result<Self> {
+        let spec = crate::model::spec::builtin_preset(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown preset {name:?}: no artifacts on disk and not a built-in \
+                 preset (built-ins: test-tiny, serve-20m, eval-4k, eval-4k-b2048)"
+            )
+        })?;
+        Self::synthesize(&spec)
+    }
+
     pub fn entry(&self, name: &str) -> crate::Result<&ArtifactEntry> {
         self.entries
             .get(name)
@@ -139,5 +313,52 @@ mod tests {
     fn missing_manifest_is_a_clear_error() {
         let err = Manifest::load("artifacts", "no-such-preset").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn synthesized_manifest_mirrors_aot_entry_points() {
+        let m = Manifest::synthesize_preset("test-tiny").unwrap();
+        assert_eq!(m.preset, "test-tiny");
+        let c = &m.config;
+        // the full aot.py entry set
+        for name in [
+            "layer_pre_attn",
+            "qpred",
+            "digest_build",
+            "block_scores",
+            "sparse_attn",
+            "tail_attn",
+            "merge",
+            "layer_post_attn",
+            "lm_head",
+            "decode_full",
+            "prefill",
+        ] {
+            assert!(m.entries.contains_key(name), "missing entry {name}");
+        }
+        let e = m.entry("sparse_attn").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.outputs.len(), 3);
+        assert_eq!(e.inputs[0].name, "q");
+        assert_eq!(e.inputs[1].shape, vec![c.batch, c.k_blocks, c.block_size, c.n_kv_heads, c.head_dim]);
+        assert_eq!(e.outputs[0].shape, vec![c.batch, c.n_q_heads, c.head_dim]);
+        // tail_attn is the kb=1 instantiation
+        let t = m.entry("tail_attn").unwrap();
+        assert_eq!(t.inputs[1].shape[1], 1);
+        // decode_full arity: x + 8 stacked + ln_f + embed + 2 caches + pos
+        let dec = m.entry("decode_full").unwrap();
+        assert_eq!(dec.inputs.len(), 14);
+        assert_eq!(dec.inputs[13].dtype, "int32");
+        // prefill length is an i32 scalar
+        let p = m.entry("prefill").unwrap();
+        assert_eq!(p.inputs.last().unwrap().shape, Vec::<usize>::new());
+        assert_eq!(p.inputs.last().unwrap().dtype, "int32");
+        assert_eq!(p.outputs.len(), 4);
+    }
+
+    #[test]
+    fn unknown_preset_has_clear_synthesis_error() {
+        let err = Manifest::synthesize_preset("definitely-missing").unwrap_err();
+        assert!(err.to_string().contains("built-in"));
     }
 }

@@ -1,0 +1,248 @@
+//! The execution-backend contract.
+//!
+//! The coordinator's contribution (the ScoutAttention *schedule*) is
+//! independent of how each manifest entry is computed, so the runtime is
+//! split into a thin shape-checking front (`Runtime`) and a swappable
+//! [`Backend`] that evaluates one entry at a time:
+//!
+//! - [`crate::runtime::InterpreterBackend`] — pure-rust reference
+//!   evaluation of every entry (default; needs no artifacts on disk).
+//! - `PjrtBackend` (`--features pjrt`) — compiles the AOT HLO-text
+//!   artifacts on the PJRT CPU client and executes them.
+//!
+//! Operands are *borrowed* ([`Operand`]): activations and weight row
+//! slices cross the boundary by reference, so the default interpreter
+//! path runs with no per-call deep copy and no resident second copy of
+//! the model. (The PJRT backend still materializes literals per call —
+//! see `runtime/pjrt.rs` for the caching item.)
+
+use std::str::FromStr;
+
+use super::artifacts::ArtifactEntry;
+use crate::tensor::Tensor;
+
+/// Borrowed view of an f32 tensor: shape + contiguous row-major data.
+///
+/// This is what lets weight operands cross the backend boundary without
+/// a resident copy — a view can come from an owned [`Tensor`] *or* from
+/// a row slice of a stacked weight tensor (`Weights::layer_wq` etc.).
+/// Accessors mirror [`Tensor`]'s so backend code reads the same either
+/// way.
+#[derive(Clone, Copy)]
+pub struct TensorView<'a> {
+    shape: &'a [usize],
+    data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    pub fn new(shape: &'a [usize], data: &'a [f32]) -> Self {
+        debug_assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "view shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn shape(&self) -> &'a [usize] {
+        self.shape
+    }
+
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Contiguous sub-slice covering `rows` leading-axis rows starting
+    /// at `row` (mirrors [`Tensor::rows`]).
+    pub fn rows(&self, row: usize, rows: usize) -> &'a [f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &self.data[row * stride..(row + rows) * stride]
+    }
+}
+
+impl<'a> From<&'a Tensor> for TensorView<'a> {
+    fn from(t: &'a Tensor) -> Self {
+        Self { shape: t.shape(), data: t.data() }
+    }
+}
+
+/// One borrowed executable operand: an f32 tensor view or an i32 array
+/// (positions, lengths). Dtype strings match the manifest ("float32" /
+/// "int32").
+#[derive(Clone, Copy)]
+pub enum Operand<'a> {
+    F32(TensorView<'a>),
+    I32 { shape: &'a [usize], data: &'a [i32] },
+}
+
+impl<'a> Operand<'a> {
+    /// f32 operand borrowing an owned tensor.
+    pub fn t(t: &'a Tensor) -> Self {
+        Operand::F32(t.into())
+    }
+
+    /// f32 operand from raw shape + data (weight row slices — no copy).
+    pub fn f32_slice(shape: &'a [usize], data: &'a [f32]) -> Self {
+        Operand::F32(TensorView::new(shape, data))
+    }
+
+    pub fn shape(&self) -> &'a [usize] {
+        match *self {
+            Operand::F32(v) => v.shape(),
+            Operand::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Operand::F32(_) => "float32",
+            Operand::I32 { .. } => "int32",
+        }
+    }
+
+    /// The operand as an f32 view, or a clear error.
+    pub fn f32(&self) -> crate::Result<TensorView<'a>> {
+        match *self {
+            Operand::F32(v) => Ok(v),
+            Operand::I32 { .. } => anyhow::bail!("operand is int32, expected float32"),
+        }
+    }
+
+    /// The operand as i32 data, or a clear error.
+    pub fn i32(&self) -> crate::Result<&'a [i32]> {
+        match *self {
+            Operand::I32 { data, .. } => Ok(data),
+            Operand::F32(_) => anyhow::bail!("operand is float32, expected int32"),
+        }
+    }
+}
+
+/// An execution backend: evaluates one manifest entry per call.
+///
+/// Implementations receive operands already shape- and dtype-validated
+/// against the manifest by [`crate::runtime::Runtime::execute`], and must
+/// return exactly `entry.outputs.len()` f32 tensors in manifest order
+/// (every entry's outputs are f32).
+///
+/// Deliberately NOT `Send`/`Sync`: real PJRT client stacks are
+/// single-threaded objects (the server's engine thread owns the whole
+/// stack for exactly this reason), and requiring the bounds here would
+/// make the `pjrt` feature uncompilable against the real `xla` crate.
+pub trait Backend {
+    /// Short label for reports ("interpreter" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Optional ahead-of-time preparation (compile caches etc.).
+    fn warmup(&self, _manifest: &super::Manifest) -> crate::Result<()> {
+        Ok(())
+    }
+
+    /// Per-entry preparation, called by the runtime *outside* the timed
+    /// region of each execute (PJRT does its lazy HLO parse+compile here
+    /// so first-call compile time never lands in the per-entry exec
+    /// counters).
+    fn prepare(&self, _name: &str) -> crate::Result<()> {
+        Ok(())
+    }
+
+    /// Evaluate `entry` (named `name`) on `inputs`.
+    fn execute(
+        &self,
+        entry: &ArtifactEntry,
+        name: &str,
+        inputs: &[Operand],
+    ) -> crate::Result<Vec<Tensor>>;
+}
+
+/// Which backend a run should use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// PJRT when the crate is built with `--features pjrt` *and* the
+    /// preset's artifacts exist on disk; interpreter otherwise.
+    #[default]
+    Auto,
+    /// Pure-rust interpreter (synthesizes the manifest for built-in
+    /// presets when no artifacts are on disk).
+    Interpreter,
+    /// PJRT execution of the AOT artifacts; errors unless built with
+    /// `--features pjrt`.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Interpreter => "interpreter",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendKind::Auto),
+            "interpreter" | "interp" | "native" => Ok(BackendKind::Interpreter),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => anyhow::bail!("unknown backend {other:?} (auto|interpreter|pjrt)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operand_accessors() {
+        let t = Tensor::zeros(&[2, 3]);
+        let op = Operand::t(&t);
+        assert_eq!(op.shape(), &[2, 3]);
+        assert_eq!(op.dtype(), "float32");
+        assert!(op.f32().is_ok());
+        assert!(op.i32().is_err());
+
+        let data = [1i32, 2];
+        let shape = [2usize];
+        let op = Operand::I32 { shape: &shape, data: &data };
+        assert_eq!(op.dtype(), "int32");
+        assert_eq!(op.i32().unwrap(), &[1, 2]);
+        assert!(op.f32().is_err());
+    }
+
+    #[test]
+    fn slice_operand_views_rows_like_a_tensor() {
+        let data: Vec<f32> = (0..6).map(|x| x as f32).collect();
+        let shape = [3usize, 2];
+        let op = Operand::f32_slice(&shape, &data);
+        let v = op.f32().unwrap();
+        assert_eq!(v.shape(), &[3, 2]);
+        assert_eq!(v.rows(1, 2), &[2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(v.len(), 6);
+        // view over an owned tensor reads identically
+        let t = Tensor::from_vec(&[3, 2], data.clone());
+        let tv = Operand::t(&t).f32().unwrap();
+        assert_eq!(tv.rows(1, 2), v.rows(1, 2));
+    }
+
+    #[test]
+    fn backend_kind_parses_and_roundtrips() {
+        for k in [BackendKind::Auto, BackendKind::Interpreter, BackendKind::Pjrt] {
+            assert_eq!(k.label().parse::<BackendKind>().unwrap(), k);
+        }
+        assert!("gpu".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Auto);
+    }
+}

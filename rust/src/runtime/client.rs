@@ -1,70 +1,122 @@
-//! PJRT client wrapper: compile-once, shape-checked execution.
+//! The runtime front: manifest-validated execution over a pluggable
+//! [`Backend`].
+//!
+//! `Runtime` owns the manifest (the I/O contract of every entry), checks
+//! each call's operand shapes and dtypes against it — so a drifted
+//! artifact set or a miswired coordinator fails loudly instead of
+//! producing garbage — and dispatches to the configured backend:
+//! the pure-rust interpreter by default, PJRT when built with
+//! `--features pjrt` and artifacts exist on disk.
 
-use std::collections::HashMap;
-
-use std::sync::Mutex;
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use std::time::Instant;
 
 use super::artifacts::Manifest;
+use super::backend::{Backend, BackendKind, Operand};
+use super::interp::InterpreterBackend;
 use crate::metrics::Counters;
+use crate::model::ModelSpec;
+use crate::tensor::Tensor;
 
-/// Compiled artifact set on the PJRT CPU client.
-///
-/// Executables are compiled lazily on first use and cached; execution is
-/// shape-validated against the manifest so a drifted artifact set fails
-/// loudly instead of producing garbage.
+/// A loaded execution stack for one preset: manifest + backend + counters.
 pub struct Runtime {
-    client: PjRtClient,
     pub manifest: Manifest,
-    exes: Mutex<HashMap<String, std::sync::Arc<PjRtLoadedExecutable>>>,
+    backend: Box<dyn Backend>,
     pub counters: Counters,
 }
 
 impl Runtime {
-    /// Load a preset's manifest and create the PJRT CPU client.
+    /// Load a preset with automatic backend selection (see
+    /// [`BackendKind::Auto`]).
     pub fn load(artifacts_dir: &str, preset: &str) -> crate::Result<Self> {
-        let manifest = Manifest::load(artifacts_dir, preset)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self {
-            client,
-            manifest,
-            exes: Mutex::new(HashMap::new()),
-            counters: Counters::default(),
-        })
+        Self::load_with(artifacts_dir, preset, BackendKind::Auto)
     }
 
-    /// Eagerly compile every entry (used by `scout warmup` and benches so
-    /// compile time stays out of measured regions).
+    /// Load a preset on a specific backend.
+    ///
+    /// The manifest comes from `artifacts/<preset>/manifest.json` when
+    /// `make artifacts` has run; otherwise it is synthesized from the
+    /// built-in preset table (interpreter only — PJRT needs the HLO
+    /// files and therefore the on-disk manifest).
+    pub fn load_with(
+        artifacts_dir: &str,
+        preset: &str,
+        kind: BackendKind,
+    ) -> crate::Result<Self> {
+        let disk = Manifest::load(artifacts_dir, preset);
+        // Synthesis is a fallback for a *missing* artifact set only. A
+        // manifest.json that exists but fails to load is corruption (or
+        // drift) and must surface, never be papered over with built-in
+        // shapes.
+        let fall_back = |disk_err: anyhow::Error| -> crate::Result<Manifest> {
+            let path = std::path::Path::new(artifacts_dir).join(preset).join("manifest.json");
+            if path.exists() {
+                return Err(disk_err);
+            }
+            Manifest::synthesize_preset(preset)
+                .map_err(|synth_err| anyhow::anyhow!("{disk_err}; {synth_err}"))
+        };
+        match kind {
+            BackendKind::Interpreter => {
+                let manifest = match disk {
+                    Ok(m) => m,
+                    Err(e) => fall_back(e)?,
+                };
+                Ok(Self::interpreter(manifest))
+            }
+            BackendKind::Pjrt => Self::pjrt(disk?),
+            BackendKind::Auto => match disk {
+                Ok(m) => {
+                    if cfg!(feature = "pjrt") {
+                        Self::pjrt(m)
+                    } else {
+                        Ok(Self::interpreter(m))
+                    }
+                }
+                Err(e) => Ok(Self::interpreter(fall_back(e)?)),
+            },
+        }
+    }
+
+    /// Build an interpreter runtime directly from a model spec (no
+    /// artifacts, no preset lookup) — used by tests and studies that
+    /// sweep custom shapes.
+    pub fn for_spec(spec: &ModelSpec) -> crate::Result<Self> {
+        Ok(Self::interpreter(Manifest::synthesize(spec)?))
+    }
+
+    fn interpreter(manifest: Manifest) -> Self {
+        let backend = Box::new(InterpreterBackend::new(manifest.config.clone()));
+        Self { manifest, backend, counters: Counters::default() }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn pjrt(manifest: Manifest) -> crate::Result<Self> {
+        let backend = Box::new(super::pjrt::PjrtBackend::new(&manifest)?);
+        Ok(Self { manifest, backend, counters: Counters::default() })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn pjrt(_manifest: Manifest) -> crate::Result<Self> {
+        anyhow::bail!("the pjrt backend requires building with `--features pjrt`")
+    }
+
+    /// Short label of the active backend ("interpreter" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Eagerly prepare every entry (PJRT compiles its executables here so
+    /// compile time stays out of measured regions; the interpreter is a
+    /// no-op).
     pub fn warmup(&self) -> crate::Result<()> {
-        let names: Vec<String> = self.manifest.entries.keys().cloned().collect();
-        for n in names {
-            self.executable(&n)?;
-        }
-        Ok(())
+        self.backend.warmup(&self.manifest)
     }
 
-    fn executable(&self, name: &str) -> crate::Result<std::sync::Arc<PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.lock().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let path = self.manifest.hlo_path(name)?;
-        let proto = HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parse HLO {}: {e:?}", path.display()))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
-        let arc = std::sync::Arc::new(exe);
-        self.exes.lock().unwrap().insert(name.to_string(), arc.clone());
-        Ok(arc)
-    }
-
-    /// Execute entry `name` with the given operand literals; returns the
-    /// decomposed output tuple. Operands are borrowed — cached weight
-    /// literals are passed by reference with no per-call deep copy
-    /// (perf §L3: this removed the dominant decode-path memcpy).
-    pub fn execute(&self, name: &str, inputs: &[&Literal]) -> crate::Result<Vec<Literal>> {
+    /// Execute entry `name` on the given operands; returns the entry's
+    /// output tensors in manifest order. Operands are borrowed, so the
+    /// interpreter path never copies them; the PJRT path materializes
+    /// literals per call (see `runtime/pjrt.rs` on caching).
+    pub fn execute(&self, name: &str, inputs: &[Operand]) -> crate::Result<Vec<Tensor>> {
         let entry = self.manifest.entry(name)?;
         anyhow::ensure!(
             inputs.len() == entry.inputs.len(),
@@ -72,36 +124,57 @@ impl Runtime {
             inputs.len(),
             entry.inputs.len()
         );
-        for (i, (lit, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
-            let shape = lit
-                .array_shape()
-                .map_err(|e| anyhow::anyhow!("{name} operand {i}: {e:?}"))?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        for (i, (op, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
             anyhow::ensure!(
-                dims == spec.shape,
-                "{name} operand {i} ({}): shape {dims:?} != manifest {:?}",
+                op.dtype() == spec.dtype,
+                "{name} operand {i} ({}): dtype {} != manifest {}",
                 spec.name,
+                op.dtype(),
+                spec.dtype
+            );
+            anyhow::ensure!(
+                op.shape() == spec.shape.as_slice(),
+                "{name} operand {i} ({}): shape {:?} != manifest {:?}",
+                spec.name,
+                op.shape(),
                 spec.shape
             );
+            // Shape can be caller-supplied for raw-slice operands, so
+            // also enforce that the data really has that many elements
+            // (backstops TensorView's debug-only assertion in release
+            // builds — a short weight slice must fail here, not as an
+            // opaque OOB mid-evaluation).
+            let elems = match op {
+                Operand::F32(v) => v.data().len(),
+                Operand::I32 { data, .. } => data.len(),
+            };
+            anyhow::ensure!(
+                elems == spec.volume(),
+                "{name} operand {i} ({}): data has {elems} elements, shape {:?} needs {}",
+                spec.name,
+                spec.shape,
+                spec.volume()
+            );
         }
-        let exe = self.executable(name)?;
-        let t0 = std::time::Instant::now();
-        let result = exe
-            .execute::<&Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result {name}: {e:?}"))?;
-        // aot.py lowers with return_tuple=True, so outputs are one tuple.
-        let outs = lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("decompose {name}: {e:?}"))?;
+        // Lazy per-entry setup (PJRT compile) happens outside the timed
+        // region so the counters only measure execution.
+        self.backend.prepare(name)?;
+        let t0 = Instant::now();
+        let outs = self.backend.execute(entry, name, inputs)?;
         anyhow::ensure!(
             outs.len() == entry.outputs.len(),
-            "{name}: {} outputs, manifest says {}",
+            "{name}: backend returned {} outputs, manifest says {}",
             outs.len(),
             entry.outputs.len()
         );
+        for (i, (out, spec)) in outs.iter().zip(&entry.outputs).enumerate() {
+            anyhow::ensure!(
+                out.shape() == spec.shape.as_slice(),
+                "{name} output {i}: shape {:?} != manifest {:?}",
+                out.shape(),
+                spec.shape
+            );
+        }
         self.counters.record_exec(name, t0.elapsed());
         Ok(outs)
     }
@@ -109,13 +182,106 @@ impl Runtime {
 
 #[cfg(test)]
 mod tests {
-    // Execution against real artifacts is covered by the integration tests
-    // in rust/tests/ (they require `make artifacts`); here we only check
-    // the error path for a missing preset.
     use super::*;
 
     #[test]
     fn load_missing_preset_errors() {
         assert!(Runtime::load("artifacts", "definitely-missing").is_err());
+    }
+
+    #[test]
+    fn corrupt_on_disk_manifest_is_not_masked_by_synthesis() {
+        // A manifest.json that exists but cannot be loaded must surface
+        // the load error instead of silently falling back to built-in
+        // shapes.
+        let dir = std::env::temp_dir().join(format!("scout-corrupt-{}", std::process::id()));
+        let preset_dir = dir.join("test-tiny");
+        std::fs::create_dir_all(&preset_dir).unwrap();
+        std::fs::write(preset_dir.join("manifest.json"), "{not json").unwrap();
+        let dir_str = dir.to_str().unwrap();
+        for kind in [BackendKind::Auto, BackendKind::Interpreter] {
+            let err = Runtime::load_with(dir_str, "test-tiny", kind).unwrap_err();
+            assert!(!err.to_string().contains("built-in"), "masked corruption: {err}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn builtin_preset_loads_on_interpreter_without_artifacts() {
+        let rt = Runtime::load("artifacts", "test-tiny").unwrap();
+        assert_eq!(rt.backend_name(), "interpreter");
+        assert_eq!(rt.manifest.config.name, "test-tiny");
+        rt.warmup().unwrap();
+    }
+
+    #[test]
+    fn execute_rejects_wrong_shapes_and_dtypes() {
+        let rt = Runtime::load("artifacts", "test-tiny").unwrap();
+        let spec = rt.manifest.config.clone();
+        // lm_head expects x [B, d]
+        let bad = Tensor::zeros(&[spec.batch, spec.d_model + 1]);
+        let ln_f = Tensor::full(&[spec.d_model], 1.0);
+        let emb = Tensor::zeros(&[spec.vocab, spec.d_model]);
+        let err = rt
+            .execute("lm_head", &[Operand::t(&bad), Operand::t(&ln_f), Operand::t(&emb)])
+            .unwrap_err();
+        assert!(err.to_string().contains("shape"), "{err}");
+        // wrong arity
+        assert!(rt.execute("lm_head", &[Operand::t(&ln_f)]).is_err());
+        // wrong dtype for pos
+        let x = Tensor::zeros(&[spec.batch, spec.d_model]);
+        let w = Tensor::zeros(&[spec.d_model, spec.n_q_heads * spec.head_dim]);
+        let ln1 = Tensor::full(&[spec.d_model], 1.0);
+        let fake_pos = Tensor::zeros(&[spec.batch]);
+        let err = rt
+            .execute(
+                "qpred",
+                &[
+                    Operand::t(&x),
+                    Operand::t(&ln1),
+                    Operand::t(&w),
+                    Operand::t(&fake_pos),
+                ],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("dtype"), "{err}");
+        // unknown entry
+        assert!(rt.execute("nope", &[]).is_err());
+        // data length inconsistent with the (caller-supplied) shape —
+        // must fail validation, not OOB inside a backend
+        let short = [7i32];
+        let pos_shape = [spec.batch];
+        let hq_d = spec.n_q_heads * spec.head_dim;
+        let wq_shape = [spec.d_model, hq_d];
+        let wq = Tensor::zeros(&[spec.d_model, hq_d]);
+        let err = rt
+            .execute(
+                "qpred",
+                &[
+                    Operand::t(&x),
+                    Operand::t(&ln_f),
+                    Operand::f32_slice(&wq_shape, wq.data()),
+                    Operand::I32 { shape: &pos_shape, data: &short },
+                ],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("elements"), "{err}");
+    }
+
+    #[test]
+    fn execute_runs_lm_head_end_to_end() {
+        let rt = Runtime::load("artifacts", "test-tiny").unwrap();
+        let spec = rt.manifest.config.clone();
+        let x = Tensor::full(&[spec.batch, spec.d_model], 0.25);
+        let ln_f = Tensor::full(&[spec.d_model], 1.0);
+        let emb = Tensor::full(&[spec.vocab, spec.d_model], 0.01);
+        let outs = rt
+            .execute("lm_head", &[Operand::t(&x), Operand::t(&ln_f), Operand::t(&emb)])
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].shape(), &[spec.batch, spec.vocab]);
+        assert!(outs[0].data().iter().all(|v| v.is_finite()));
+        let (calls, _) = rt.counters.get("lm_head");
+        assert_eq!(calls, 1);
     }
 }

@@ -1,0 +1,590 @@
+//! Pure-rust interpreter backend: evaluates every manifest entry with the
+//! reference math of `engines/native.rs` (which itself mirrors
+//! `python/compile/kernels/ref.py`).
+//!
+//! This is the default execution backend. It exists so the coordinator —
+//! the paper's actual contribution, Algorithm 1's layer-ahead schedule
+//! plus §3.4 periodic recall — is fully testable offline: no python AOT
+//! step, no PJRT runtime, no artifacts on disk. Numerics follow the same
+//! (acc, m, l) partial-attention contract as the Pallas kernels, so the
+//! cross-engine parity suite (`rust/tests/parity.rs`) runs unchanged
+//! against either backend.
+//!
+//! Shapes are validated upstream by [`crate::runtime::Runtime::execute`]
+//! against the manifest; evaluators here may index operands positionally.
+
+use super::artifacts::ArtifactEntry;
+use super::backend::{Backend, Operand};
+use crate::engines::native::{dot, matvec, rmsnorm, rope_inplace, silu};
+use crate::engines::partial::Partial;
+use crate::model::ModelSpec;
+use crate::tensor::Tensor;
+
+/// Interpreter over one model spec (taken from the manifest's config).
+pub struct InterpreterBackend {
+    spec: ModelSpec,
+}
+
+impl InterpreterBackend {
+    pub fn new(spec: ModelSpec) -> Self {
+        Self { spec }
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+}
+
+impl Backend for InterpreterBackend {
+    fn name(&self) -> &'static str {
+        "interpreter"
+    }
+
+    fn execute(
+        &self,
+        _entry: &ArtifactEntry,
+        name: &str,
+        inputs: &[Operand],
+    ) -> crate::Result<Vec<Tensor>> {
+        match name {
+            "layer_pre_attn" => self.layer_pre_attn(inputs),
+            "qpred" => self.qpred(inputs),
+            "digest_build" => self.digest_build(inputs),
+            "block_scores" => self.block_scores(inputs),
+            // tail_attn is the slots=1 instantiation of the same kernel
+            "sparse_attn" | "tail_attn" => self.masked_attn(inputs),
+            "merge" => self.merge(inputs),
+            "layer_post_attn" => self.layer_post_attn(inputs),
+            "lm_head" => self.lm_head(inputs),
+            "decode_full" => self.decode_full(inputs),
+            "prefill" => self.prefill(inputs),
+            other => anyhow::bail!("interpreter: no evaluator for entry {other:?}"),
+        }
+    }
+}
+
+impl InterpreterBackend {
+    /// `x [B,d], ln1 [d], wq, wk, wv, pos [B]` ->
+    /// `(q [B,Hq,D] roped, k_new [B,Hkv,D] roped, v_new [B,Hkv,D])`.
+    fn layer_pre_attn(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
+        let (x, ln1, wq, wk, wv) =
+            (ins[0].f32()?, ins[1].f32()?, ins[2].f32()?, ins[3].f32()?, ins[4].f32()?);
+        let pos = ins[5].i32()?;
+        let s = &self.spec;
+        let (b, d) = (x.shape()[0], s.d_model);
+        let (hq, hkv, dd) = (s.n_q_heads, s.n_kv_heads, s.head_dim);
+        let mut q = Tensor::zeros(&[b, hq, dd]);
+        let mut k = Tensor::zeros(&[b, hkv, dd]);
+        let mut v = Tensor::zeros(&[b, hkv, dd]);
+        let mut h = vec![0.0; d];
+        for r in 0..b {
+            rmsnorm(x.rows(r, 1), ln1.data(), &mut h);
+            matvec(&h, wq.data(), hq * dd, q.rows_mut(r, 1));
+            matvec(&h, wk.data(), hkv * dd, k.rows_mut(r, 1));
+            matvec(&h, wv.data(), hkv * dd, v.rows_mut(r, 1));
+            rope_inplace(q.rows_mut(r, 1), hq, dd, pos[r] as i64, s.rope_theta);
+            rope_inplace(k.rows_mut(r, 1), hkv, dd, pos[r] as i64, s.rope_theta);
+        }
+        Ok(vec![q, k, v])
+    }
+
+    /// Layer-ahead predicted query (Alg. 1 line 4): next layer's ln/W_Q
+    /// applied to the current layer's input.
+    fn qpred(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
+        let (x, ln1, wq) = (ins[0].f32()?, ins[1].f32()?, ins[2].f32()?);
+        let pos = ins[3].i32()?;
+        let s = &self.spec;
+        let (b, d) = (x.shape()[0], s.d_model);
+        let (hq, dd) = (s.n_q_heads, s.head_dim);
+        let mut q = Tensor::zeros(&[b, hq, dd]);
+        let mut h = vec![0.0; d];
+        for r in 0..b {
+            rmsnorm(x.rows(r, 1), ln1.data(), &mut h);
+            matvec(&h, wq.data(), hq * dd, q.rows_mut(r, 1));
+            rope_inplace(q.rows_mut(r, 1), hq, dd, pos[r] as i64, s.rope_theta);
+        }
+        Ok(vec![q])
+    }
+
+    /// Quest digests: `k_blocks [B,nb,bs,Hkv,D]` -> channel-wise
+    /// `(kmin, kmax) [B,nb,Hkv,D]`.
+    fn digest_build(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
+        let kb = ins[0].f32()?;
+        let shp = kb.shape().to_vec(); // [B, nb, bs, Hkv, D]
+        let (b, nb, bs) = (shp[0], shp[1], shp[2]);
+        let w = shp[3] * shp[4];
+        let mut kmin = Tensor::full(&[b, nb, shp[3], shp[4]], f32::INFINITY);
+        let mut kmax = Tensor::full(&[b, nb, shp[3], shp[4]], f32::NEG_INFINITY);
+        let data = kb.data();
+        for blk in 0..b * nb {
+            let base = blk * bs * w;
+            let lo = &mut kmin.data_mut()[blk * w..(blk + 1) * w];
+            for t in 0..bs {
+                for (c, lo_c) in lo.iter_mut().enumerate() {
+                    let x = data[base + t * w + c];
+                    if x < *lo_c {
+                        *lo_c = x;
+                    }
+                }
+            }
+            let hi = &mut kmax.data_mut()[blk * w..(blk + 1) * w];
+            for t in 0..bs {
+                for (c, hi_c) in hi.iter_mut().enumerate() {
+                    let x = data[base + t * w + c];
+                    if x > *hi_c {
+                        *hi_c = x;
+                    }
+                }
+            }
+        }
+        Ok(vec![kmin, kmax])
+    }
+
+    /// Quest block scores: `q [B,Hq,D], kmin/kmax [B,nb,Hkv,D]` ->
+    /// `[B,nb]`; same per-channel operation order as
+    /// `sparse::score_blocks_native`.
+    fn block_scores(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
+        let (q, kmin, kmax) = (ins[0].f32()?, ins[1].f32()?, ins[2].f32()?);
+        let (b, hq, dd) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+        let (nb, hkv) = (kmin.shape()[1], kmin.shape()[2]);
+        let g = hq / hkv;
+        let w = hkv * dd;
+        let mut out = Tensor::zeros(&[b, nb]);
+        for bi in 0..b {
+            let qrow = q.rows(bi, 1);
+            for blk in 0..nb {
+                let lo = &kmin.data()[(bi * nb + blk) * w..(bi * nb + blk + 1) * w];
+                let hi = &kmax.data()[(bi * nb + blk) * w..(bi * nb + blk + 1) * w];
+                let mut sc = 0.0f32;
+                for h in 0..hq {
+                    let kvh = h / g;
+                    for c in 0..dd {
+                        let qv = qrow[h * dd + c];
+                        sc += (qv * lo[kvh * dd + c]).max(qv * hi[kvh * dd + c]);
+                    }
+                }
+                out.data_mut()[bi * nb + blk] = sc;
+            }
+        }
+        Ok(vec![out])
+    }
+
+    /// Masked block attention partial (`sparse_attn` and its `tail_attn`
+    /// instantiation): `q [B,Hq,D], k/v [B,slots,bs,Hkv,D], mask
+    /// [B,slots,bs]` -> `(acc, m, l)`. Per-slot partials are LSE-merged,
+    /// mirroring `NativeEngine::attend_blocks`; a fully-masked slot is
+    /// the merge identity.
+    fn masked_attn(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
+        let (q, k, v, mask) = (ins[0].f32()?, ins[1].f32()?, ins[2].f32()?, ins[3].f32()?);
+        let (b, hq, dd) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+        let (slots, bs, hkv) = (k.shape()[1], k.shape()[2], k.shape()[3]);
+        let g = hq / hkv;
+        let w = hkv * dd;
+        let scale = self.spec.scale();
+        let mut acc = Tensor::zeros(&[b, hq, dd]);
+        let mut m = Tensor::zeros(&[b, hq]);
+        let mut l = Tensor::zeros(&[b, hq]);
+        for bi in 0..b {
+            let qrow = q.rows(bi, 1);
+            let mut p = Partial::empty(hq, dd);
+            for slot in 0..slots {
+                let base = (bi * slots + slot) * bs * w;
+                let kslab = &k.data()[base..base + bs * w];
+                let vslab = &v.data()[base..base + bs * w];
+                let mrow = &mask.data()[(bi * slots + slot) * bs..(bi * slots + slot + 1) * bs];
+                let mut ps = Partial::empty(hq, dd);
+                for t in 0..bs {
+                    if mrow[t] <= 0.0 {
+                        continue;
+                    }
+                    let krow = &kslab[t * w..(t + 1) * w];
+                    let vrow = &vslab[t * w..(t + 1) * w];
+                    for h in 0..hq {
+                        let kvh = h / g;
+                        let sc =
+                            dot(&qrow[h * dd..(h + 1) * dd], &krow[kvh * dd..(kvh + 1) * dd])
+                                * scale;
+                        ps.update_token(h, sc, &vrow[kvh * dd..(kvh + 1) * dd]);
+                    }
+                }
+                p.merge(&ps);
+            }
+            acc.rows_mut(bi, 1).copy_from_slice(&p.acc);
+            m.rows_mut(bi, 1).copy_from_slice(&p.m);
+            l.rows_mut(bi, 1).copy_from_slice(&p.l);
+        }
+        Ok(vec![acc, m, l])
+    }
+
+    /// FlashAttention log-sum-exp merge of two batched partials.
+    fn merge(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
+        let (aa, ma, la) = (ins[0].f32()?, ins[1].f32()?, ins[2].f32()?);
+        let (ab, mb, lb) = (ins[3].f32()?, ins[4].f32()?, ins[5].f32()?);
+        let n = ma.len(); // B * Hq
+        let dd = aa.len() / n;
+        let mut acc = Tensor::zeros(aa.shape());
+        let mut m = Tensor::zeros(ma.shape());
+        let mut l = Tensor::zeros(la.shape());
+        for i in 0..n {
+            let mn = ma.data()[i].max(mb.data()[i]);
+            let wa = (ma.data()[i] - mn).exp();
+            let wb = (mb.data()[i] - mn).exp();
+            m.data_mut()[i] = mn;
+            l.data_mut()[i] = la.data()[i] * wa + lb.data()[i] * wb;
+            for c in 0..dd {
+                acc.data_mut()[i * dd + c] =
+                    aa.data()[i * dd + c] * wa + ab.data()[i * dd + c] * wb;
+            }
+        }
+        Ok(vec![acc, m, l])
+    }
+
+    /// Finalize the merged partial and run the rest of the layer:
+    /// out-projection, MLP, residuals.
+    fn layer_post_attn(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
+        let (x, acc, l) = (ins[0].f32()?, ins[1].f32()?, ins[2].f32()?);
+        let (wo, ln2, w1, w2) = (ins[3].f32()?, ins[4].f32()?, ins[5].f32()?, ins[6].f32()?);
+        let s = &self.spec;
+        let (b, d, dff) = (x.shape()[0], s.d_model, s.d_ff);
+        let (hq, dd) = (s.n_q_heads, s.head_dim);
+        let mut out = Tensor::zeros(&[b, d]);
+        let mut att = vec![0.0; hq * dd];
+        let mut proj = vec![0.0; d];
+        let mut h = vec![0.0; d];
+        let mut mid = vec![0.0; dff];
+        let mut back = vec![0.0; d];
+        for r in 0..b {
+            let accr = acc.rows(r, 1);
+            let lr = l.rows(r, 1);
+            for hh in 0..hq {
+                let denom = lr[hh].max(1e-30);
+                for c in 0..dd {
+                    att[hh * dd + c] = accr[hh * dd + c] / denom;
+                }
+            }
+            let mut xr = x.rows(r, 1).to_vec();
+            matvec(&att, wo.data(), d, &mut proj);
+            for i in 0..d {
+                xr[i] += proj[i];
+            }
+            rmsnorm(&xr, ln2.data(), &mut h);
+            matvec(&h, w1.data(), dff, &mut mid);
+            for v in mid.iter_mut() {
+                *v = silu(*v);
+            }
+            matvec(&mid, w2.data(), d, &mut back);
+            for i in 0..d {
+                xr[i] += back[i];
+            }
+            out.rows_mut(r, 1).copy_from_slice(&xr);
+        }
+        Ok(vec![out])
+    }
+
+    /// Final norm + tied LM head: `x [B,d]` -> logits `[B,V]`.
+    fn lm_head(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
+        let (x, ln_f, embed) = (ins[0].f32()?, ins[1].f32()?, ins[2].f32()?);
+        let s = &self.spec;
+        let (b, d, vsz) = (x.shape()[0], s.d_model, s.vocab);
+        let mut logits = Tensor::zeros(&[b, vsz]);
+        let mut h = vec![0.0; d];
+        let emb = embed.data();
+        for r in 0..b {
+            rmsnorm(x.rows(r, 1), ln_f.data(), &mut h);
+            let lrow = logits.rows_mut(r, 1);
+            for (t, lo) in lrow.iter_mut().enumerate() {
+                *lo = dot(&h, &emb[t * d..(t + 1) * d]);
+            }
+        }
+        Ok(vec![logits])
+    }
+
+    /// Fused full-attention decode step (FullKV baseline / oracle):
+    /// attention over the first `pos[b]` cache rows plus the new token.
+    /// Returns `(logits [B,V], k_new [L,B,Hkv,D], v_new [L,B,Hkv,D])`.
+    fn decode_full(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
+        let x = ins[0].f32()?;
+        let mut st = Vec::with_capacity(8); // ln1, wq, wk, wv, wo, ln2, w1, w2
+        for op in &ins[1..9] {
+            st.push(op.f32()?);
+        }
+        let (ln_f, embed) = (ins[9].f32()?, ins[10].f32()?);
+        let (kcache, vcache) = (ins[11].f32()?, ins[12].f32()?);
+        let pos = ins[13].i32()?;
+        let s = &self.spec;
+        let (l_layers, b) = (s.n_layers, x.shape()[0]);
+        let s_max = kcache.shape()[2];
+        let (hq, hkv, dd, d, dff, vsz) =
+            (s.n_q_heads, s.n_kv_heads, s.head_dim, s.d_model, s.d_ff, s.vocab);
+        let w = hkv * dd;
+        let g = hq / hkv;
+        let scale = s.scale();
+        let mut logits = Tensor::zeros(&[b, vsz]);
+        let mut k_new = Tensor::zeros(&[l_layers, b, hkv, dd]);
+        let mut v_new = Tensor::zeros(&[l_layers, b, hkv, dd]);
+        let (kd, vd) = (kcache.data(), vcache.data());
+        for bi in 0..b {
+            let mut xr = x.rows(bi, 1).to_vec();
+            let n_tok = (pos[bi].max(0) as usize).min(s_max);
+            for layer in 0..l_layers {
+                let (ln1, wq, wk, wv) = (
+                    st[0].rows(layer, 1),
+                    st[1].rows(layer, 1),
+                    st[2].rows(layer, 1),
+                    st[3].rows(layer, 1),
+                );
+                let (wo, ln2, w1, w2) = (
+                    st[4].rows(layer, 1),
+                    st[5].rows(layer, 1),
+                    st[6].rows(layer, 1),
+                    st[7].rows(layer, 1),
+                );
+                let mut h = vec![0.0; d];
+                rmsnorm(&xr, ln1, &mut h);
+                let mut qv = vec![0.0; hq * dd];
+                let mut kv = vec![0.0; w];
+                let mut vv = vec![0.0; w];
+                matvec(&h, wq, hq * dd, &mut qv);
+                matvec(&h, wk, w, &mut kv);
+                matvec(&h, wv, w, &mut vv);
+                rope_inplace(&mut qv, hq, dd, pos[bi] as i64, s.rope_theta);
+                rope_inplace(&mut kv, hkv, dd, pos[bi] as i64, s.rope_theta);
+
+                let base = (layer * b + bi) * s_max * w;
+                let mut p = Partial::empty(hq, dd);
+                for t in 0..n_tok {
+                    let krow = &kd[base + t * w..base + (t + 1) * w];
+                    let vrow = &vd[base + t * w..base + (t + 1) * w];
+                    for hh in 0..hq {
+                        let kvh = hh / g;
+                        let sc = dot(&qv[hh * dd..(hh + 1) * dd], &krow[kvh * dd..(kvh + 1) * dd])
+                            * scale;
+                        p.update_token(hh, sc, &vrow[kvh * dd..(kvh + 1) * dd]);
+                    }
+                }
+                // the new token attends to itself
+                for hh in 0..hq {
+                    let kvh = hh / g;
+                    let sc =
+                        dot(&qv[hh * dd..(hh + 1) * dd], &kv[kvh * dd..(kvh + 1) * dd]) * scale;
+                    p.update_token(hh, sc, &vv[kvh * dd..(kvh + 1) * dd]);
+                }
+
+                let att = p.finalize();
+                let mut proj = vec![0.0; d];
+                matvec(&att, wo, d, &mut proj);
+                for i in 0..d {
+                    xr[i] += proj[i];
+                }
+                let mut h2 = vec![0.0; d];
+                rmsnorm(&xr, ln2, &mut h2);
+                let mut mid = vec![0.0; dff];
+                matvec(&h2, w1, dff, &mut mid);
+                for v in mid.iter_mut() {
+                    *v = silu(*v);
+                }
+                let mut back = vec![0.0; d];
+                matvec(&mid, w2, d, &mut back);
+                for i in 0..d {
+                    xr[i] += back[i];
+                }
+
+                let off = (layer * b + bi) * w;
+                k_new.data_mut()[off..off + w].copy_from_slice(&kv);
+                v_new.data_mut()[off..off + w].copy_from_slice(&vv);
+            }
+            let mut hf = vec![0.0; d];
+            rmsnorm(&xr, ln_f.data(), &mut hf);
+            let emb = embed.data();
+            let lrow = logits.rows_mut(bi, 1);
+            for (t, lo) in lrow.iter_mut().enumerate() {
+                *lo = dot(&hf, &emb[t * d..(t + 1) * d]);
+            }
+        }
+        Ok(vec![logits, k_new, v_new])
+    }
+
+    /// Fused causal prefill for one sequence padded to `S = max_seq`.
+    /// Only the first `length` rows are computed; padded rows of the
+    /// output caches stay zero (consumers only read `< length`).
+    /// Returns `(k [L,S,Hkv,D], v [L,S,Hkv,D], h_last [d], logits [V])`.
+    fn prefill(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
+        let x_seq = ins[0].f32()?;
+        let mut st = Vec::with_capacity(8);
+        for op in &ins[1..9] {
+            st.push(op.f32()?);
+        }
+        let (ln_f, embed) = (ins[9].f32()?, ins[10].f32()?);
+        let length = ins[11].i32()?[0];
+        let s = &self.spec;
+        let s_max = x_seq.shape()[0];
+        let n = (length.max(0) as usize).min(s_max);
+        let (hq, hkv, dd, d, dff, vsz, l_layers) =
+            (s.n_q_heads, s.n_kv_heads, s.head_dim, s.d_model, s.d_ff, s.vocab, s.n_layers);
+        let w = hkv * dd;
+        let g = hq / hkv;
+        let scale = s.scale();
+        let mut k_out = Tensor::zeros(&[l_layers, s_max, hkv, dd]);
+        let mut v_out = Tensor::zeros(&[l_layers, s_max, hkv, dd]);
+        let mut xs: Vec<Vec<f32>> = (0..n).map(|t| x_seq.rows(t, 1).to_vec()).collect();
+        for layer in 0..l_layers {
+            let (ln1, wq, wk, wv) = (
+                st[0].rows(layer, 1),
+                st[1].rows(layer, 1),
+                st[2].rows(layer, 1),
+                st[3].rows(layer, 1),
+            );
+            let (wo, ln2, w1, w2) = (
+                st[4].rows(layer, 1),
+                st[5].rows(layer, 1),
+                st[6].rows(layer, 1),
+                st[7].rows(layer, 1),
+            );
+            // project every position first (they attend within the layer)
+            let mut qs = Vec::with_capacity(n);
+            let mut ks = Vec::with_capacity(n);
+            let mut vs = Vec::with_capacity(n);
+            let mut h = vec![0.0; d];
+            for (t, xr) in xs.iter().enumerate() {
+                rmsnorm(xr, ln1, &mut h);
+                let mut qv = vec![0.0; hq * dd];
+                let mut kv = vec![0.0; w];
+                let mut vv = vec![0.0; w];
+                matvec(&h, wq, hq * dd, &mut qv);
+                matvec(&h, wk, w, &mut kv);
+                matvec(&h, wv, w, &mut vv);
+                rope_inplace(&mut qv, hq, dd, t as i64, s.rope_theta);
+                rope_inplace(&mut kv, hkv, dd, t as i64, s.rope_theta);
+                qs.push(qv);
+                ks.push(kv);
+                vs.push(vv);
+            }
+            for t in 0..n {
+                // causal attention over [0, t]
+                let mut p = Partial::empty(hq, dd);
+                for u in 0..=t {
+                    for hh in 0..hq {
+                        let kvh = hh / g;
+                        let sc = dot(
+                            &qs[t][hh * dd..(hh + 1) * dd],
+                            &ks[u][kvh * dd..(kvh + 1) * dd],
+                        ) * scale;
+                        p.update_token(hh, sc, &vs[u][kvh * dd..(kvh + 1) * dd]);
+                    }
+                }
+                let att = p.finalize();
+                let xr = &mut xs[t];
+                let mut proj = vec![0.0; d];
+                matvec(&att, wo, d, &mut proj);
+                for i in 0..d {
+                    xr[i] += proj[i];
+                }
+                let mut h2 = vec![0.0; d];
+                rmsnorm(xr, ln2, &mut h2);
+                let mut mid = vec![0.0; dff];
+                matvec(&h2, w1, dff, &mut mid);
+                for v in mid.iter_mut() {
+                    *v = silu(*v);
+                }
+                let mut back = vec![0.0; d];
+                matvec(&mid, w2, d, &mut back);
+                for i in 0..d {
+                    xr[i] += back[i];
+                }
+            }
+            let base = layer * s_max * w;
+            for t in 0..n {
+                k_out.data_mut()[base + t * w..base + (t + 1) * w].copy_from_slice(&ks[t]);
+                v_out.data_mut()[base + t * w..base + (t + 1) * w].copy_from_slice(&vs[t]);
+            }
+        }
+        let h_last = if n > 0 { xs[n - 1].clone() } else { vec![0.0; d] };
+        let mut hf = vec![0.0; d];
+        rmsnorm(&h_last, ln_f.data(), &mut hf);
+        let emb = embed.data();
+        let mut logits_last = vec![0.0; vsz];
+        for (t, lo) in logits_last.iter_mut().enumerate() {
+            *lo = dot(&hf, &emb[t * d..(t + 1) * d]);
+        }
+        Ok(vec![
+            k_out,
+            v_out,
+            Tensor::from_vec(&[d], h_last),
+            Tensor::from_vec(&[vsz], logits_last),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::builtin_preset;
+    use crate::runtime::Manifest;
+
+    fn interp() -> (ModelSpec, InterpreterBackend, Manifest) {
+        let spec = builtin_preset("test-tiny").unwrap();
+        let m = Manifest::synthesize(&spec).unwrap();
+        (spec.clone(), InterpreterBackend::new(spec), m)
+    }
+
+    #[test]
+    fn merge_with_identity_is_identity() {
+        let (spec, be, m) = interp();
+        let (b, hq, dd) = (spec.batch, spec.n_q_heads, spec.head_dim);
+        let acc = Tensor::full(&[b, hq, dd], 0.5);
+        let mm = Tensor::full(&[b, hq], 1.0);
+        let ll = Tensor::full(&[b, hq], 2.0);
+        let e_acc = Tensor::zeros(&[b, hq, dd]);
+        let e_m = Tensor::full(&[b, hq], crate::engines::partial::NEG_INF);
+        let e_l = Tensor::zeros(&[b, hq]);
+        let entry = m.entry("merge").unwrap();
+        let outs = be
+            .execute(
+                entry,
+                "merge",
+                &[
+                    Operand::t(&acc),
+                    Operand::t(&mm),
+                    Operand::t(&ll),
+                    Operand::t(&e_acc),
+                    Operand::t(&e_m),
+                    Operand::t(&e_l),
+                ],
+            )
+            .unwrap();
+        for (a, b) in outs[0].data().iter().zip(acc.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(outs[1].data(), mm.data());
+        assert_eq!(outs[2].data(), ll.data());
+    }
+
+    #[test]
+    fn fully_masked_attention_is_merge_identity() {
+        let (spec, be, m) = interp();
+        let (b, hq, dd) = (spec.batch, spec.n_q_heads, spec.head_dim);
+        let (kb, bs, hkv) = (spec.k_blocks, spec.block_size, spec.n_kv_heads);
+        let q = Tensor::full(&[b, hq, dd], 0.3);
+        let k = Tensor::full(&[b, kb, bs, hkv, dd], 0.7);
+        let v = k.clone();
+        let mask = Tensor::zeros(&[b, kb, bs]);
+        let entry = m.entry("sparse_attn").unwrap();
+        let outs = be
+            .execute(
+                entry,
+                "sparse_attn",
+                &[Operand::t(&q), Operand::t(&k), Operand::t(&v), Operand::t(&mask)],
+            )
+            .unwrap();
+        assert!(outs[0].data().iter().all(|&x| x == 0.0), "acc");
+        assert!(outs[2].data().iter().all(|&x| x == 0.0), "l");
+        assert!(outs[1].data().iter().all(|&x| x <= crate::engines::partial::NEG_INF), "m");
+    }
+
+    #[test]
+    fn unknown_entry_is_an_error() {
+        let (_, be, m) = interp();
+        let entry = m.entry("merge").unwrap();
+        assert!(be.execute(entry, "not_an_entry", &[]).is_err());
+    }
+}

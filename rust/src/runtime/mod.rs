@@ -1,15 +1,24 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Execution runtime: manifests + pluggable backends.
 //!
-//! `make artifacts` (python, build-time only) leaves
-//! `artifacts/<preset>/{*.hlo.txt, manifest.json}`; this module loads the
-//! manifest, compiles each entry on the PJRT CPU client once, validates
-//! every call's operand shapes against the manifest, and converts between
-//! [`crate::Tensor`] and XLA literals. Nothing here ever calls python.
+//! The manifest (`artifacts/<preset>/manifest.json`, or synthesized from
+//! a built-in preset) defines every entry point's I/O contract; the
+//! [`Runtime`] validates each call against it and dispatches to a
+//! [`Backend`]:
+//!
+//! - [`InterpreterBackend`] (default) — pure-rust reference evaluation,
+//!   runs everywhere with no artifacts and no python.
+//! - `PjrtBackend` (`--features pjrt`) — compiles the AOT HLO-text
+//!   artifacts left by `make artifacts` on the PJRT CPU client once and
+//!   executes them. Nothing on this path ever calls python.
 
 pub mod artifacts;
+pub mod backend;
 pub mod client;
-pub mod literal;
+pub mod interp;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use artifacts::{ArtifactEntry, Manifest, TensorSpec};
+pub use backend::{Backend, BackendKind, Operand, TensorView};
 pub use client::Runtime;
-pub use literal::{literal_to_tensor, tensor_to_literal, vec_i32_literal};
+pub use interp::InterpreterBackend;

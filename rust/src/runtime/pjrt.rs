@@ -1,0 +1,184 @@
+//! PJRT backend (`--features pjrt`): compile-once, cached execution of
+//! the AOT HLO-text artifacts written by `make artifacts`.
+//!
+//! This is the only module that touches the `xla` crate, so the
+//! dependency never compiles under default features. Offline builds link
+//! the in-tree API stub (`vendor/xla`), which type-checks this path but
+//! errors at runtime; swap in the real crate to execute on PJRT.
+//!
+//! Known cost (ROADMAP): operands are materialized into literals per
+//! call, including the weight slices — the pre-backend design cached
+//! weight literals at engine construction (perf §L3). Restoring that
+//! here needs a safe identity for borrowed operands (e.g. a weight
+//! registration API on [`Backend`]); do that before benchmarking this
+//! path in anger.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::Manifest;
+use super::backend::{Backend, Operand};
+use crate::tensor::Tensor;
+
+/// Compiled artifact set on the PJRT CPU client.
+///
+/// Executables are compiled lazily on first use and cached.
+pub struct PjrtBackend {
+    client: PjRtClient,
+    dir: PathBuf,
+    /// entry name -> HLO file name (from the manifest).
+    files: HashMap<String, String>,
+    exes: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+}
+
+impl PjrtBackend {
+    /// Create the PJRT CPU client for a loaded (on-disk) manifest.
+    pub fn new(manifest: &Manifest) -> crate::Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        let files = manifest
+            .entries
+            .iter()
+            .map(|(name, e)| (name.clone(), e.file.clone()))
+            .collect();
+        Ok(Self { client, dir: manifest.dir.clone(), files, exes: Mutex::new(HashMap::new()) })
+    }
+
+    fn executable(&self, name: &str) -> crate::Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let file = self
+            .files
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact file for entry {name:?}"))?;
+        let path = self.dir.join(file);
+        let proto = HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse HLO {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        let arc = Arc::new(exe);
+        self.exes.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// Eagerly compile every entry (`scout warmup` / benches) so compile
+    /// time stays out of measured regions.
+    fn warmup(&self, manifest: &Manifest) -> crate::Result<()> {
+        for name in manifest.entries.keys() {
+            self.executable(name)?;
+        }
+        Ok(())
+    }
+
+    /// Lazy compile happens here — the runtime calls this before it
+    /// starts the exec timer, so compile time stays out of the counters.
+    fn prepare(&self, name: &str) -> crate::Result<()> {
+        self.executable(name)?;
+        Ok(())
+    }
+
+    fn execute(
+        &self,
+        entry: &super::artifacts::ArtifactEntry,
+        name: &str,
+        inputs: &[Operand],
+    ) -> crate::Result<Vec<Tensor>> {
+        let lits: Vec<Literal> = inputs
+            .iter()
+            .map(operand_to_literal)
+            .collect::<crate::Result<_>>()?;
+        let refs: Vec<&Literal> = lits.iter().collect();
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<&Literal>(&refs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True, so outputs are one tuple.
+        let outs = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose {name}: {e:?}"))?;
+        anyhow::ensure!(
+            outs.len() == entry.outputs.len(),
+            "{name}: {} outputs, manifest says {}",
+            outs.len(),
+            entry.outputs.len()
+        );
+        outs.iter().map(literal_to_tensor).collect()
+    }
+}
+
+/// Build a literal from a borrowed operand (single copy, via raw bytes).
+fn operand_to_literal(op: &Operand) -> crate::Result<Literal> {
+    match *op {
+        Operand::F32(v) => {
+            let data = v.data();
+            let bytes = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+            };
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, v.shape(), bytes)
+                .map_err(|e| anyhow::anyhow!("literal from operand {:?}: {e:?}", v.shape()))
+        }
+        Operand::I32 { shape, data } => vec_i32_literal(shape, data),
+    }
+}
+
+/// Build an f32 literal from a tensor.
+pub fn tensor_to_literal(t: &Tensor) -> crate::Result<Literal> {
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, t.shape(), t.as_bytes())
+        .map_err(|e| anyhow::anyhow!("literal from tensor {:?}: {e:?}", t.shape()))
+}
+
+/// Build an i32 literal (positions, lengths).
+pub fn vec_i32_literal(shape: &[usize], data: &[i32]) -> crate::Result<Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow::anyhow!("i32 literal {shape:?}: {e:?}"))
+}
+
+/// Copy an f32 literal back into a tensor.
+pub fn literal_to_tensor(lit: &Literal) -> crate::Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = lit
+        .to_vec()
+        .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_literal_shape() {
+        let lit = vec_i32_literal(&[3], &[7, 8, 9]).unwrap();
+        let v: Vec<i32> = lit.to_vec().unwrap();
+        assert_eq!(v, vec![7, 8, 9]);
+    }
+}

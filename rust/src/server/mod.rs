@@ -1,5 +1,7 @@
 //! Serving front-end: a threaded TCP listener speaking JSON-lines,
-//! feeding a dedicated engine thread that owns the (non-Send) PJRT stack.
+//! feeding a dedicated engine thread that owns the execution stack
+//! (interpreter by default; PJRT stacks are non-Send, so ownership stays
+//! on this one thread either way).
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"prompt": [1,2,3], "max_new_tokens": 16}

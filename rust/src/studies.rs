@@ -59,7 +59,7 @@ pub fn tab1_query_similarity(seed: u64, out: &mut dyn Write) -> crate::Result<()
             }
             // greedy next token
             let logits = engine.lm_head(&xi);
-            let tok = crate::coordinator::scout::argmax(&logits) as u32;
+            let tok = crate::util::argmax(&logits).unwrap_or(0) as u32;
             for (l, (k, v)) in kn.iter().zip(&vn).enumerate() {
                 cache.append_layer(l, k, v);
             }

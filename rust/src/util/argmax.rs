@@ -1,0 +1,75 @@
+//! NaN-aware argmax with deterministic tie-breaking.
+
+/// Index of the largest value in `xs`.
+///
+/// Semantics (the greedy-sampling contract):
+/// - NaN entries are skipped entirely — a NaN can neither win nor, by
+///   poisoning a comparison, block a later finite value from winning
+///   (the old coordinator-local argmax returned index 0 whenever
+///   `xs[0]` was NaN).
+/// - Ties break to the **lowest** index, so sampling is deterministic
+///   across platforms and backends.
+/// - Returns `None` for an empty slice or an all-NaN slice; the caller
+///   chooses the fallback policy.
+pub fn argmax(xs: &[f32]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            Some(b) if xs[b] >= x => {}
+            _ => best = Some(i),
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_the_maximum() {
+        assert_eq!(argmax(&[1.0, 5.0, 3.0]), Some(1));
+        assert_eq!(argmax(&[-3.0, -1.0, -2.0]), Some(1));
+        assert_eq!(argmax(&[2.5]), Some(0));
+    }
+
+    #[test]
+    fn empty_slice_is_none() {
+        assert_eq!(argmax(&[]), None);
+    }
+
+    #[test]
+    fn all_nan_is_none() {
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), None);
+    }
+
+    #[test]
+    fn nan_entries_are_skipped_not_poisonous() {
+        // leading NaN must not shadow a later finite maximum
+        assert_eq!(argmax(&[f32::NAN, 1.0, 3.0, 2.0]), Some(2));
+        // NaN between finite values
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), Some(0));
+        // only one finite value
+        assert_eq!(argmax(&[f32::NAN, -7.0, f32::NAN]), Some(1));
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        assert_eq!(argmax(&[2.0, 5.0, 5.0, 5.0, 1.0]), Some(1));
+        assert_eq!(argmax(&[0.0, 0.0]), Some(0));
+        assert_eq!(
+            argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]),
+            Some(0),
+            "-inf ties are still deterministic"
+        );
+    }
+
+    #[test]
+    fn infinities_are_ordinary_values() {
+        assert_eq!(argmax(&[1.0, f32::INFINITY, 2.0]), Some(1));
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1e30]), Some(1));
+    }
+}

@@ -1,9 +1,12 @@
 //! Shared helpers for integration tests.
 #![allow(dead_code)] // each test binary uses a different subset
 //!
-//! Tests that execute AOT artifacts require `make artifacts` to have run;
-//! `stack()` panics with a clear message if the test-tiny artifact set is
-//! missing (CI runs `make artifacts` first, see Makefile `test`).
+//! The stack loads through `Runtime::load_with(.., BackendKind::Auto)`:
+//! with default features that is the pure-rust interpreter backend (its
+//! manifest is synthesized from the built-in `test-tiny` preset), so the
+//! suite runs real decode steps with no `make artifacts` and no python.
+//! When artifacts *are* on disk and the crate is built with
+//! `--features pjrt`, the same tests exercise the PJRT path instead.
 
 use std::sync::Arc;
 
@@ -12,18 +15,11 @@ use scoutattention::harness::Stack;
 
 pub const PRESET: &str = "test-tiny";
 
-pub fn artifacts_present() -> bool {
-    std::path::Path::new("artifacts/test-tiny/manifest.json").exists()
-}
-
-/// Load the test stack, or None when artifacts are absent (unit-only CI).
-pub fn try_stack() -> Option<Arc<Stack>> {
-    if !artifacts_present() {
-        eprintln!("SKIP: artifacts/test-tiny missing — run `make artifacts`");
-        return None;
-    }
+/// Load the test stack (never skips — the interpreter backend needs no
+/// on-disk artifacts).
+pub fn stack() -> Arc<Stack> {
     let cfg = RunConfig::for_preset(PRESET);
-    Some(Arc::new(Stack::load(&cfg).expect("load test-tiny stack")))
+    Arc::new(Stack::load(&cfg).expect("load test-tiny stack"))
 }
 
 pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32, what: &str) {

@@ -1,6 +1,7 @@
-//! End-to-end scheduler tests on the test-tiny artifact stack: all four
-//! methods decode the same workload; Scout output stays close to the
-//! FullKV oracle; schedule stats behave per the paper's mechanisms.
+//! End-to-end scheduler tests on the test-tiny stack (interpreter
+//! backend by default — no artifacts required): all four methods decode
+//! the same workload; Scout output stays close to the FullKV oracle;
+//! schedule stats behave per the paper's mechanisms.
 
 mod common;
 
@@ -16,7 +17,7 @@ fn requests(stack: &Stack, n: usize, prompt: usize, new_tokens: usize) -> Vec<sc
 
 #[test]
 fn all_methods_decode_and_scout_tracks_oracle() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let prompt = spec.block_size * 8; // 8 full blocks > k_blocks=4 budget
     let reqs = requests(&stack, 3, prompt, 12);
@@ -53,7 +54,7 @@ fn scout_beats_selection_off_in_agreement() {
     // The needle of the design: predicted-query selection must track the
     // oracle better than a static (no-selection, window-only) policy. We
     // proxy the latter with HGCA at the same budget.
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let prompt = spec.block_size * 10;
     let reqs = requests(&stack, 2, prompt, 16);
@@ -70,7 +71,7 @@ fn scout_beats_selection_off_in_agreement() {
 
 #[test]
 fn periodic_recall_reduces_cpu_ratio() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let prompt = spec.block_size * 10;
     let reqs = requests(&stack, 2, prompt, 24);
@@ -101,7 +102,7 @@ fn periodic_recall_reduces_cpu_ratio() {
 
 #[test]
 fn ablation_arms_run_and_record_modes() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let prompt = spec.block_size * 6;
     let reqs = requests(&stack, 2, prompt, 6);
@@ -123,7 +124,7 @@ fn ablation_arms_run_and_record_modes() {
 
 #[test]
 fn continuous_batching_admits_beyond_tile() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     // 2x the batch tile: forces chunked steps + queueing
     let reqs = requests(&stack, spec.batch * 2 + 1, spec.block_size * 4, 4);
@@ -136,7 +137,7 @@ fn continuous_batching_admits_beyond_tile() {
 
 #[test]
 fn profiled_recall_intervals_derive_from_measured_series() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let reqs = requests(&stack, 2, spec.block_size * 10, 16);
     let mut cfg = stack.cfg.clone();

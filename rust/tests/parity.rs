@@ -1,7 +1,8 @@
-//! Cross-engine parity: every AOT executable must agree with the native
-//! rust engine on identical inputs. This is the contract that lets the
-//! coordinator split attention between the "GPU" (XLA) and "CPU" (native)
-//! and LSE-merge the partials (§3.2).
+//! Cross-engine parity: every batched backend entry must agree with the
+//! native rust engine on identical inputs. This is the contract that lets
+//! the coordinator split attention between the "GPU" (the runtime
+//! backend — interpreter by default, PJRT with `--features pjrt`) and the
+//! "CPU" (native) and LSE-merge the partials (§3.2).
 
 mod common;
 
@@ -17,7 +18,7 @@ fn rand_tensor(rng: &mut Rng64, shape: &[usize], scale: f32) -> Tensor {
 
 #[test]
 fn pre_attn_matches_native() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let mut rng = Rng64::new(11);
     let x = rand_tensor(&mut rng, &[spec.batch, spec.d_model], 2.0);
@@ -35,7 +36,7 @@ fn pre_attn_matches_native() {
 
 #[test]
 fn qpred_matches_native_and_degenerate_equals_real_q() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let mut rng = Rng64::new(12);
     let x = rand_tensor(&mut rng, &[spec.batch, spec.d_model], 2.0);
@@ -68,7 +69,7 @@ fn filled_cache(stack: &scoutattention::harness::Stack, tokens: usize, seed: u64
 
 #[test]
 fn sparse_attn_artifact_matches_native_blocks() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let (b, kb, bs, hkv, d) = (spec.batch, spec.k_blocks, spec.block_size, spec.n_kv_heads, spec.head_dim);
     let cache = filled_cache(&stack, spec.block_size * 6, 21);
@@ -104,7 +105,7 @@ fn sparse_attn_artifact_matches_native_blocks() {
 
 #[test]
 fn block_scores_artifact_matches_native_scoring() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let cache = filled_cache(&stack, spec.block_size * 5 + 3, 31);
     let mut rng = Rng64::new(32);
@@ -149,7 +150,7 @@ fn block_scores_artifact_matches_native_scoring() {
 
 #[test]
 fn merge_artifact_matches_native_merge() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let (b, hq, d) = (spec.batch, spec.n_q_heads, spec.head_dim);
     let mut rng = Rng64::new(41);
@@ -182,7 +183,7 @@ fn merge_artifact_matches_native_merge() {
 
 #[test]
 fn decode_full_artifact_matches_native_oracle() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let (b, s_max) = (spec.batch, spec.max_seq);
     let w = spec.n_kv_heads * spec.head_dim;
@@ -229,7 +230,7 @@ fn decode_full_artifact_matches_native_oracle() {
 
 #[test]
 fn prefill_artifact_consistent_with_native_prefill() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let n = spec.block_size * 2 + 7;
     let toks: Vec<u32> = (0..n).map(|i| 1 + (i as u32 * 7) % (spec.vocab as u32 - 1)).collect();
@@ -264,9 +265,136 @@ fn prefill_artifact_consistent_with_native_prefill() {
     common::assert_close(logits_last.data(), &logits_native, 5e-3, 5e-3, "prefill logits");
 }
 
+/// Satellite check for the interpreter backend itself: on a seeded tiny
+/// spec (geometry deliberately different from test-tiny — GQA group 4,
+/// odd tail), the interpreter's `sparse_attn` / `tail_attn` / `merge`
+/// partials must match `engines/native.rs` within assert_close
+/// tolerances. Built directly on `Runtime::for_spec`, so it also covers
+/// manifest synthesis for non-builtin shapes.
+#[test]
+fn interpreter_partials_match_native_on_seeded_tiny_spec() {
+    use scoutattention::engines::gpu::BatchPartial;
+    use scoutattention::engines::{GpuEngine, NativeEngine};
+    use scoutattention::model::{ModelSpec, Weights};
+    use scoutattention::runtime::Runtime;
+    use std::sync::Arc;
+
+    let spec = ModelSpec {
+        name: "interp-parity".into(),
+        n_layers: 2,
+        d_model: 48,
+        n_q_heads: 8,
+        n_kv_heads: 2,
+        head_dim: 12,
+        d_ff: 96,
+        vocab: 64,
+        max_seq: 96,
+        block_size: 8,
+        k_blocks: 3,
+        batch: 3,
+        rope_theta: 10000.0,
+    };
+    spec.validate().unwrap();
+    let rt = Arc::new(Runtime::for_spec(&spec).unwrap());
+    assert_eq!(rt.backend_name(), "interpreter");
+    let weights = Weights::generate(&spec, 77, 1.0);
+    let gpu = GpuEngine::new(rt, weights.clone()).unwrap();
+    let native = NativeEngine::new(spec.clone(), weights);
+
+    // 6 full blocks + a 5-token tail
+    let (b, kb, bs, hkv, hq, d) =
+        (spec.batch, spec.k_blocks, spec.block_size, spec.n_kv_heads, spec.n_q_heads, spec.head_dim);
+    let w = hkv * d;
+    let mut cache = SeqKvCache::new(&spec);
+    let mut rng = Rng64::new(81);
+    for _t in 0..bs * 6 + 5 {
+        for l in 0..spec.n_layers {
+            let kr: Vec<f32> = (0..w).map(|_| rng.f32() - 0.5).collect();
+            let vr: Vec<f32> = (0..w).map(|_| rng.f32() - 0.5).collect();
+            cache.append_layer(l, &kr, &vr);
+        }
+        cache.advance();
+    }
+    let q = rand_tensor(&mut rng, &[b, hq, d], 1.0);
+
+    // sparse_attn over gathered blocks [4, 1, 0]
+    let blocks = vec![4usize, 1, 0];
+    let blk_w = bs * w;
+    let mut k = Tensor::zeros(&[b, kb, bs, hkv, d]);
+    let mut v = Tensor::zeros(&[b, kb, bs, hkv, d]);
+    let mut m = Tensor::zeros(&[b, kb, bs]);
+    for s in 0..b {
+        cache.gather_blocks(
+            1,
+            &blocks,
+            kb,
+            &mut k.data_mut()[s * kb * blk_w..(s + 1) * kb * blk_w],
+            &mut v.data_mut()[s * kb * blk_w..(s + 1) * kb * blk_w],
+            &mut m.data_mut()[s * kb * bs..(s + 1) * kb * bs],
+        );
+    }
+    let p_sparse = gpu.sparse_attn(&q, &k, &v, &m).unwrap();
+    for s in 0..b {
+        let qrow = &q.rows(s, 1)[..hq * d];
+        let pn = native.attend_blocks(qrow, &cache, 1, &blocks);
+        common::assert_close(p_sparse.acc.rows(s, 1), &pn.acc, 1e-5, 1e-6, "interp sparse acc");
+        common::assert_close(p_sparse.m.rows(s, 1), &pn.m, 1e-5, 1e-6, "interp sparse m");
+        common::assert_close(p_sparse.l.rows(s, 1), &pn.l, 1e-5, 1e-6, "interp sparse l");
+    }
+
+    // tail_attn over the 5-token tail + per-sequence current token
+    let k_new = rand_tensor(&mut rng, &[b, hkv, d], 1.0);
+    let v_new = rand_tensor(&mut rng, &[b, hkv, d], 1.0);
+    let mut kt = Tensor::zeros(&[b, 1, bs, hkv, d]);
+    let mut vt = Tensor::zeros(&[b, 1, bs, hkv, d]);
+    let mut mt = Tensor::zeros(&[b, 1, bs]);
+    let tail = cache.tail_len();
+    assert_eq!(tail, 5);
+    for s in 0..b {
+        let ks = &mut kt.data_mut()[s * bs * w..(s + 1) * bs * w];
+        let vs = &mut vt.data_mut()[s * bs * w..(s + 1) * bs * w];
+        let ms = &mut mt.data_mut()[s * bs..(s + 1) * bs];
+        cache.gather_tail(1, ks, vs, ms);
+        ks[tail * w..(tail + 1) * w].copy_from_slice(&k_new.rows(s, 1)[..w]);
+        vs[tail * w..(tail + 1) * w].copy_from_slice(&v_new.rows(s, 1)[..w]);
+        ms[tail] = 1.0;
+    }
+    let p_tail = gpu.tail_attn(&q, &kt, &vt, &mt).unwrap();
+    for s in 0..b {
+        let qrow = &q.rows(s, 1)[..hq * d];
+        let pn = native.attend_tail(
+            qrow,
+            &cache,
+            1,
+            &k_new.rows(s, 1)[..w],
+            &v_new.rows(s, 1)[..w],
+        );
+        common::assert_close(p_tail.acc.rows(s, 1), &pn.acc, 1e-5, 1e-6, "interp tail acc");
+        common::assert_close(p_tail.l.rows(s, 1), &pn.l, 1e-5, 1e-6, "interp tail l");
+    }
+
+    // merge of the two partials vs the native per-sequence LSE merge
+    let merged = gpu.merge(&p_sparse, &p_tail).unwrap();
+    let rowp = |bp: &BatchPartial, s: usize| {
+        let mut p = Partial::empty(hq, d);
+        p.acc.copy_from_slice(bp.acc.rows(s, 1));
+        p.m.copy_from_slice(bp.m.rows(s, 1));
+        p.l.copy_from_slice(bp.l.rows(s, 1));
+        p
+    };
+    for s in 0..b {
+        let mut pa = rowp(&p_sparse, s);
+        let pb = rowp(&p_tail, s);
+        pa.merge(&pb);
+        common::assert_close(merged.acc.rows(s, 1), &pa.acc, 1e-5, 1e-6, "interp merge acc");
+        common::assert_close(merged.l.rows(s, 1), &pa.l, 1e-5, 1e-6, "interp merge l");
+        common::assert_close(merged.m.rows(s, 1), &pa.m, 1e-5, 1e-6, "interp merge m");
+    }
+}
+
 #[test]
 fn lm_head_matches_native() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let mut rng = Rng64::new(61);
     let x = rand_tensor(&mut rng, &[spec.batch, spec.d_model], 1.5);
@@ -279,7 +407,7 @@ fn lm_head_matches_native() {
 
 #[test]
 fn digest_build_artifact_matches_store() {
-    let Some(stack) = common::try_stack() else { return };
+    let stack = common::stack();
     let spec = stack.gpu.spec.clone();
     let (b, nb, bs, hkv, d) = (spec.batch, spec.n_blocks(), spec.block_size, spec.n_kv_heads, spec.head_dim);
     let mut rng = Rng64::new(71);

@@ -1,6 +1,7 @@
 //! Server integration: spin the JSON-lines TCP server on the test-tiny
-//! preset and drive it from a client socket — the full python-free
-//! request path (admission -> prefill -> scout decode -> response).
+//! preset (interpreter backend — no artifacts required) and drive it from
+//! a client socket — the full python-free request path (admission ->
+//! prefill -> scout decode -> response).
 
 mod common;
 
@@ -12,10 +13,6 @@ use scoutattention::util::Json;
 
 #[test]
 fn serve_roundtrip_over_tcp() {
-    if !common::artifacts_present() {
-        eprintln!("SKIP: artifacts/test-tiny missing — run `make artifacts`");
-        return;
-    }
     let mut cfg = RunConfig::for_preset(common::PRESET);
     cfg.server.listen = "127.0.0.1:17411".to_string();
     std::thread::spawn(move || {

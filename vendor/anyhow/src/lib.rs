@@ -1,0 +1,155 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The offline build environment has no crate registry, so this in-tree
+//! shim provides the subset of the real API the workspace uses:
+//!
+//! - [`Error`]: an opaque, message-carrying error type. Like the real
+//!   crate, it deliberately does **not** implement `std::error::Error`,
+//!   which is what permits the blanket `From<E: std::error::Error>`
+//!   conversion that makes `?` work on any std error.
+//! - [`Result`]: `std::result::Result` defaulted to [`Error`].
+//! - [`anyhow!`], [`bail!`], [`ensure!`]: the formatting macros.
+//!
+//! Swap in the real `anyhow` via a `[patch]` entry when building online;
+//! nothing in the workspace depends on shim-only behavior.
+
+use std::fmt;
+
+/// Opaque error: a rendered message plus an optional source chain entry.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// The first entry of the source chain, if any.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_deref().map(|e| e as _)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on the real crate appends the source chain; mirror that.
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut src = self.source();
+            while let Some(e) = src {
+                write!(f, ": {e}")?;
+                src = e.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source();
+        while let Some(e) = src {
+            write!(f, "\n\nCaused by:\n    {e}")?;
+            src = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `std::result::Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any displayable expr).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_num(s: &str) -> Result<i32> {
+        Ok(s.parse::<i32>()?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_num("42").unwrap(), 42);
+        let e = parse_num("nope").unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 7;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(e.to_string(), "value 7 bad");
+        let e2 = anyhow!("{} and {}", 1, 2);
+        assert_eq!(e2.to_string(), "1 and 2");
+        const MSG: &str = "plain";
+        let e3 = anyhow!(MSG);
+        assert_eq!(e3.to_string(), "plain");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<()> {
+            ensure!(ok, "flag was {ok}");
+            bail!("always fails after ensure passes")
+        }
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(f(true).unwrap_err().to_string(), "always fails after ensure passes");
+    }
+
+    #[test]
+    fn alternate_display_includes_source() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "inner");
+        let e: Error = io.into();
+        assert!(format!("{e:#}").contains("inner"));
+    }
+}

@@ -1,0 +1,231 @@
+//! Offline API stub of the `xla` crate (the PJRT bindings used to execute
+//! AOT HLO artifacts).
+//!
+//! The offline build environment cannot link libxla, but the crate's API
+//! must still *type-check* so the `pjrt` feature of `scoutattention`
+//! compiles (`cargo check --features pjrt`). This stub mirrors the names
+//! and signatures the runtime uses:
+//!
+//! - [`Literal`] is fully functional in memory (shape + dtype + bytes),
+//!   so literal round-trip code and its tests work.
+//! - [`PjRtClient`] / compilation / execution return [`Error`] at runtime
+//!   with a clear "PJRT unavailable offline" message.
+//!
+//! Building online: replace this path dependency with the real `xla`
+//! crate (0.1.6) via `[patch]`; the runtime code compiles against either.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (the real crate's `Error` is richer; only `Debug` and
+/// `Display` are relied on by callers).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn offline<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} is unavailable in the offline build (link the real xla crate to use PJRT)"
+    )))
+}
+
+/// Element types the runtime materializes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_width(self) -> usize {
+        4
+    }
+}
+
+/// Array shape of a literal (dims in the real crate are i64).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Sealed helper for typed element access.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+/// Host literal: dtype + dims + raw bytes. Fully functional in memory.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Self> {
+        let volume: usize = dims.iter().product();
+        if volume * ty.byte_width() != data.len() {
+            return Err(Error(format!(
+                "literal shape {dims:?} needs {} bytes, got {}",
+                volume * ty.byte_width(),
+                data.len()
+            )));
+        }
+        Ok(Self { ty, dims: dims.iter().map(|&d| d as i64).collect(), data: data.to_vec() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error(format!("literal is {:?}, requested {:?}", self.ty, T::TY)));
+        }
+        let width = std::mem::size_of::<T>();
+        let n = self.data.len() / width;
+        let mut out: Vec<T> = Vec::with_capacity(n);
+        unsafe {
+            // Byte-level copy: the source Vec<u8> has no alignment
+            // guarantee for T, the destination Vec<T> does.
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                n * width,
+            );
+            out.set_len(n);
+        }
+        Ok(out)
+    }
+
+    /// Decompose a tuple literal. The stub never constructs tuples (it
+    /// cannot execute anything that would return one), so this errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        offline("tuple literal decomposition")
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        offline("HLO text parsing")
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _priv: () }
+    }
+}
+
+/// PJRT device buffer handle.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        offline("device-to-host transfer")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        offline("executable execution")
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        offline("PJRT CPU client creation")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        offline("HLO compilation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, 2.0, 3.0, 4.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &bytes)
+                .unwrap();
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn volume_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[3], &[0u8; 8])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn pjrt_paths_error_cleanly() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("offline"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
