@@ -10,7 +10,7 @@
 PRESETS ?= test-tiny
 ARTIFACTS_DIR := artifacts
 
-.PHONY: all build test bench clippy artifacts clean
+.PHONY: all build test bench bench-smoke clippy fmt artifacts clean
 
 all: build
 
@@ -23,8 +23,17 @@ test:
 bench: build
 	cargo bench
 
+# Run every bench target once with a single measured iteration (the
+# in-tree harness reads SCOUT_BENCH_SMOKE; perf assertions are skipped).
+# Keeps benches compiling AND running in CI so they can't silently rot.
+bench-smoke: build
+	SCOUT_BENCH_SMOKE=1 cargo bench
+
 clippy:
 	cargo clippy --workspace --all-targets -- -D warnings
+
+fmt:
+	cargo fmt --check
 
 # AOT-lower the python compute plane (L1/L2) into HLO-text artifacts +
 # manifests consumed by the PJRT backend. No-ops with a clear message

@@ -1,0 +1,127 @@
+//! Worker-group scaling: decode throughput of the Scout scheduler on
+//! the interpreter backend as the CPU plane widens, sweeping worker
+//! groups × threads-per-group × batch size.
+//!
+//! Each arm builds a fresh stack on a CPU-heavy shape (tight resident
+//! budget, wide top-k ⇒ most selected blocks land on the CPU side),
+//! prefills the batch, then times the decode loop only. One JSON row
+//! per arm (decode steps/s) feeds the perf trajectory.
+//!
+//! The load-bearing comparison: a single shared 1-thread group (the
+//! pre-sharding pool shape) vs one group per sequence — per-sequence
+//! groups must scale decode throughput on a multi-sequence batch.
+
+use std::sync::Arc;
+
+use scoutattention::config::{RecallPolicy, ScoutConfig};
+use scoutattention::coordinator::{Batch, DecodeScheduler, RecallController, ScoutScheduler};
+use scoutattention::engines::{GpuEngine, NativeEngine};
+use scoutattention::model::spec::builtin_preset;
+use scoutattention::model::{ModelSpec, Weights};
+use scoutattention::runtime::Runtime;
+use scoutattention::util::bench::smoke;
+use scoutattention::workload::{LengthMix, WorkloadGen};
+
+const DECODE_TOKENS: usize = 16;
+const PROMPT_BLOCKS: usize = 32;
+
+fn bench_spec(batch: usize) -> ModelSpec {
+    let mut s = builtin_preset("test-tiny").unwrap();
+    s.name = format!("wg-scaling-b{batch}");
+    s.n_layers = 4;
+    s.d_model = 64;
+    s.n_q_heads = 4;
+    s.n_kv_heads = 2;
+    s.head_dim = 16;
+    s.d_ff = 128;
+    s.vocab = 64;
+    s.max_seq = 768;
+    s.block_size = 16;
+    // Wide top-k + tiny resident budget (below): most selected blocks
+    // miss the GPU pool, so the CPU plane carries the step.
+    s.k_blocks = 16;
+    s.batch = batch;
+    s
+}
+
+/// One arm: build stack, prefill `batch` sequences, time decode only.
+/// Returns decode steps per second.
+fn run_arm(batch: usize, worker_groups: usize, threads_per_group: usize) -> f64 {
+    let spec = bench_spec(batch);
+    let rt = Arc::new(Runtime::for_spec(&spec).expect("synthesized runtime"));
+    let weights = Weights::generate(&spec, 7, 1.0);
+    let gpu = Arc::new(GpuEngine::new(rt, weights.clone()).expect("gpu engine"));
+    let native = Arc::new(NativeEngine::new(spec.clone(), weights));
+    let cfg = ScoutConfig {
+        recall: RecallPolicy::Fixed { interval: 4 },
+        worker_groups,
+        threads_per_group,
+        ..ScoutConfig::default()
+    };
+    let recall = RecallController::new(&cfg, spec.n_layers, None);
+    let mut sched = ScoutScheduler::new(gpu, native, cfg, recall);
+
+    let budget_blocks = 2; // resident capacity per (seq, layer)
+    let mut batch_q = Batch::new(spec.clone(), budget_blocks, batch);
+    let mut gen = WorkloadGen::new(
+        11,
+        spec.vocab,
+        LengthMix::Fixed(spec.block_size * PROMPT_BLOCKS),
+        DECODE_TOKENS,
+    );
+    for req in gen.take(batch) {
+        sched.admit(&mut batch_q, &req).expect("prefill");
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut steps = 0usize;
+    let cap = if smoke() { 2 } else { DECODE_TOKENS + 4 };
+    while batch_q.live() > 0 && steps < cap {
+        sched.step(&mut batch_q).expect("decode step");
+        batch_q.reap();
+        steps += 1;
+    }
+    steps as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
+fn main() {
+    println!("worker_group_scaling — decode steps/s on the interpreter backend");
+    // (batch, worker_groups [0 = one per slot], threads_per_group)
+    let arms: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (4, 1, 1), // single shared 1-thread group: the scaling baseline
+        (4, 0, 1), // one group per sequence = 4 worker threads
+        (4, 0, 2), // two threads per group = 8 worker threads
+    ];
+    let mut single_group = 0.0;
+    let mut per_seq = 0.0;
+    for &(batch, groups, tpg) in arms {
+        let sps = run_arm(batch, groups, tpg);
+        let eff_groups = if groups == 0 { batch } else { groups };
+        println!(
+            "{{\"bench\":\"worker_group_scaling\",\"batch\":{batch},\
+             \"worker_groups\":{eff_groups},\"threads_per_group\":{tpg},\
+             \"total_threads\":{},\"decode_steps_per_s\":{sps:.3}}}",
+            eff_groups * tpg
+        );
+        if (batch, groups, tpg) == (4, 1, 1) {
+            single_group = sps;
+        }
+        if (batch, groups, tpg) == (4, 0, 1) {
+            per_seq = sps;
+        }
+    }
+    if smoke() {
+        println!("smoke mode: skipping the scaling assertion (n=1 timings)");
+        return;
+    }
+    println!(
+        "batch 4: single shared thread {single_group:.1} steps/s -> per-seq groups {per_seq:.1} steps/s ({:.2}x)",
+        per_seq / single_group
+    );
+    assert!(
+        per_seq > single_group * 1.05,
+        "per-sequence worker groups must beat a single shared 1-thread group \
+         on a multi-sequence batch: {per_seq:.1} vs {single_group:.1} steps/s"
+    );
+}

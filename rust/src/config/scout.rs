@@ -65,8 +65,15 @@ pub struct ScoutConfig {
     /// Always keep the newest `pin_recent` full blocks resident.
     pub pin_recent: usize,
     pub recall: RecallPolicy,
-    /// CPU worker threads (thread groups in the paper's IPEX worker).
-    pub cpu_threads: usize,
+    /// Number of CPU worker groups the batch slots are sharded onto
+    /// (§4's thread partitioning). `0` = one group per batch slot (the
+    /// paper's layout, and the default); `1` folds every sequence onto
+    /// a single shared group (the pre-sharding pool shape, useful as a
+    /// scaling baseline).
+    pub worker_groups: usize,
+    /// Worker threads inside each group — §4's threads-per-sequence
+    /// knob. Total CPU threads = groups × threads_per_group.
+    pub threads_per_group: usize,
 }
 
 impl Default for ScoutConfig {
@@ -78,7 +85,8 @@ impl Default for ScoutConfig {
             pin_sink: true,
             pin_recent: 1,
             recall: RecallPolicy::default(),
-            cpu_threads: 4,
+            worker_groups: 0,
+            threads_per_group: 1,
         }
     }
 }
@@ -104,8 +112,20 @@ impl ScoutConfig {
         if let Some(v) = j.get("recall") {
             c.recall = RecallPolicy::from_json(v)?;
         }
+        if let Some(v) = j.get("worker_groups") {
+            c.worker_groups = v.as_usize().unwrap_or(c.worker_groups);
+        }
+        if let Some(v) = j.get("threads_per_group") {
+            c.threads_per_group = v.as_usize().unwrap_or(c.threads_per_group);
+        }
+        // Legacy knob from the shared-pool era: *total* CPU threads. Map
+        // it onto the sharded shape that preserves the thread budget:
+        // that many single-thread groups (the scheduler caps groups at
+        // the batch tile, so the old total is never exceeded).
         if let Some(v) = j.get("cpu_threads") {
-            c.cpu_threads = v.as_usize().unwrap_or(c.cpu_threads);
+            if j.get("worker_groups").is_none() && j.get("threads_per_group").is_none() {
+                c.worker_groups = v.as_usize().unwrap_or(1).max(1);
+            }
         }
         Ok(c)
     }
@@ -118,7 +138,8 @@ impl ScoutConfig {
             ("pin_sink", Json::Bool(self.pin_sink)),
             ("pin_recent", Json::num(self.pin_recent as f64)),
             ("recall", self.recall.to_json()),
-            ("cpu_threads", Json::num(self.cpu_threads as f64)),
+            ("worker_groups", Json::num(self.worker_groups as f64)),
+            ("threads_per_group", Json::num(self.threads_per_group as f64)),
         ])
     }
 }
@@ -150,5 +171,31 @@ mod tests {
         let c = ScoutConfig::default();
         assert!((c.beta - 0.12).abs() < 1e-12);
         assert!(c.layer_ahead && c.predicted_query);
+        assert_eq!(c.worker_groups, 0, "default: one group per batch slot");
+        assert_eq!(c.threads_per_group, 1);
+    }
+
+    #[test]
+    fn worker_knobs_roundtrip_and_legacy_alias() {
+        let c = ScoutConfig::from_json(
+            &Json::parse("{\"worker_groups\":2,\"threads_per_group\":3}").unwrap(),
+        )
+        .unwrap();
+        assert_eq!((c.worker_groups, c.threads_per_group), (2, 3));
+        let back = ScoutConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!((back.worker_groups, back.threads_per_group), (2, 3));
+        // legacy shared-pool knob (total threads) maps onto that many
+        // single-thread groups, preserving the old thread budget…
+        let legacy =
+            ScoutConfig::from_json(&Json::parse("{\"cpu_threads\":4}").unwrap()).unwrap();
+        assert_eq!(legacy.worker_groups, 4);
+        assert_eq!(legacy.threads_per_group, 1);
+        // …and never overrides the explicit sharded knobs
+        let both = ScoutConfig::from_json(
+            &Json::parse("{\"cpu_threads\":4,\"threads_per_group\":2}").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(both.threads_per_group, 2);
+        assert_eq!(both.worker_groups, 0);
     }
 }

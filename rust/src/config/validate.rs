@@ -12,7 +12,7 @@ impl RunConfig {
             "beta must be in (0,1), got {}",
             self.scout.beta
         );
-        anyhow::ensure!(self.scout.cpu_threads >= 1, "cpu_threads >= 1");
+        anyhow::ensure!(self.scout.threads_per_group >= 1, "threads_per_group >= 1");
         if let super::RecallPolicy::Fixed { interval } = self.scout.recall {
             anyhow::ensure!(interval >= 1, "recall interval >= 1");
         }

@@ -53,8 +53,11 @@ impl SeqState {
     }
 
     pub fn done(&self) -> bool {
-        self.generated.len() >= self.max_new_tokens
-            || self.cache.read().unwrap().len() >= self.cache.read().unwrap().spec().max_seq
+        if self.generated.len() >= self.max_new_tokens {
+            return true;
+        }
+        let cache = self.cache.read().unwrap();
+        cache.len() >= cache.spec().max_seq
     }
 
     pub fn pos(&self) -> i32 {

@@ -1,9 +1,11 @@
 //! Shared gather/assembly helpers used by Scout and the baseline
 //! schedulers: materializing selected blocks and the tail window into the
-//! artifact operand layout.
+//! artifact operand layout. Per-sequence gathers write disjoint operand
+//! slices, so they fan out across scoped threads (`util::par`).
 
 use crate::engines::GpuEngine;
 use crate::tensor::Tensor;
+use crate::util::par;
 
 use super::batch::SeqState;
 
@@ -13,26 +15,29 @@ pub fn gather_block_lists(
     gpu: &GpuEngine,
     seqs: &[SeqState],
     layer: usize,
-    lists: impl Fn(usize, &SeqState) -> Vec<usize>,
+    lists: impl Fn(usize, &SeqState) -> Vec<usize> + Sync,
 ) -> (Tensor, Tensor, Tensor) {
     let spec = &gpu.spec;
-    let (b, kb, bs) = (spec.batch, spec.k_blocks, spec.block_size);
+    let (kb, bs) = (spec.k_blocks, spec.block_size);
     let w = spec.n_kv_heads * spec.head_dim;
     let blk_w = bs * w;
-    let mut k = Tensor::zeros(&[b, kb, bs, spec.n_kv_heads, spec.head_dim]);
-    let mut v = Tensor::zeros(&[b, kb, bs, spec.n_kv_heads, spec.head_dim]);
-    let mut m = Tensor::zeros(&[b, kb, bs]);
-    for (s, seq) in seqs.iter().enumerate() {
-        let blocks = lists(s, seq);
-        let cache = seq.cache.read().unwrap();
-        cache.gather_blocks(
-            layer,
-            &blocks,
-            kb,
-            &mut k.data_mut()[s * kb * blk_w..(s + 1) * kb * blk_w],
-            &mut v.data_mut()[s * kb * blk_w..(s + 1) * kb * blk_w],
-            &mut m.data_mut()[s * kb * bs..(s + 1) * kb * bs],
-        );
+    let mut k = Tensor::zeros(&[spec.batch, kb, bs, spec.n_kv_heads, spec.head_dim]);
+    let mut v = Tensor::zeros(&[spec.batch, kb, bs, spec.n_kv_heads, spec.head_dim]);
+    let mut m = Tensor::zeros(&[spec.batch, kb, bs]);
+    {
+        let rows: Vec<_> = k
+            .data_mut()
+            .chunks_mut(kb * blk_w)
+            .zip(v.data_mut().chunks_mut(kb * blk_w))
+            .zip(m.data_mut().chunks_mut(kb * bs))
+            .zip(seqs.iter())
+            .map(|(((kr, vr), mr), seq)| (kr, vr, mr, seq))
+            .collect();
+        par::par_for_each(rows, par::default_threads(), |s, (kr, vr, mr, seq)| {
+            let blocks = lists(s, seq);
+            let cache = seq.cache.read().unwrap();
+            cache.gather_blocks(layer, &blocks, kb, kr, vr, mr);
+        });
     }
     (k, v, m)
 }
@@ -46,21 +51,28 @@ pub fn gather_tail(
     v_new: &Tensor,
 ) -> (Tensor, Tensor, Tensor) {
     let spec = &gpu.spec;
-    let (b, bs) = (spec.batch, spec.block_size);
+    let bs = spec.block_size;
     let w = spec.n_kv_heads * spec.head_dim;
-    let mut k = Tensor::zeros(&[b, 1, bs, spec.n_kv_heads, spec.head_dim]);
-    let mut v = Tensor::zeros(&[b, 1, bs, spec.n_kv_heads, spec.head_dim]);
-    let mut m = Tensor::zeros(&[b, 1, bs]);
-    for (s, seq) in seqs.iter().enumerate() {
-        let cache = seq.cache.read().unwrap();
-        let ks = &mut k.data_mut()[s * bs * w..(s + 1) * bs * w];
-        let vs = &mut v.data_mut()[s * bs * w..(s + 1) * bs * w];
-        let ms = &mut m.data_mut()[s * bs..(s + 1) * bs];
-        cache.gather_tail(layer, ks, vs, ms);
-        let t = cache.tail_len();
-        ks[t * w..(t + 1) * w].copy_from_slice(&k_new.rows(s, 1)[..w]);
-        vs[t * w..(t + 1) * w].copy_from_slice(&v_new.rows(s, 1)[..w]);
-        ms[t] = 1.0;
+    let mut k = Tensor::zeros(&[spec.batch, 1, bs, spec.n_kv_heads, spec.head_dim]);
+    let mut v = Tensor::zeros(&[spec.batch, 1, bs, spec.n_kv_heads, spec.head_dim]);
+    let mut m = Tensor::zeros(&[spec.batch, 1, bs]);
+    {
+        let rows: Vec<_> = k
+            .data_mut()
+            .chunks_mut(bs * w)
+            .zip(v.data_mut().chunks_mut(bs * w))
+            .zip(m.data_mut().chunks_mut(bs))
+            .zip(seqs.iter())
+            .map(|(((kr, vr), mr), seq)| (kr, vr, mr, seq))
+            .collect();
+        par::par_for_each(rows, par::default_threads(), |s, (ks, vs, ms, seq)| {
+            let cache = seq.cache.read().unwrap();
+            cache.gather_tail(layer, ks, vs, ms);
+            let t = cache.tail_len();
+            ks[t * w..(t + 1) * w].copy_from_slice(&k_new.rows(s, 1)[..w]);
+            vs[t * w..(t + 1) * w].copy_from_slice(&v_new.rows(s, 1)[..w]);
+            ms[t] = 1.0;
+        });
     }
     (k, v, m)
 }

@@ -3,13 +3,15 @@
 //! Structure (one module per §3 mechanism):
 //! - [`request`]  — request/response types and per-sequence decode state
 //! - [`batch`]    — continuous batcher over the artifact batch tile
-//! - [`cpu_worker`] — the asynchronous CPU attention worker pool
-//!   (thread-group model of §4, one group per sequence)
+//! - [`worker_group`] — sequence-sharded CPU attention worker groups
+//!   (§4's thread partitioning: one fixed group per batch slot with
+//!   slot-local job/result channels — cross-sequence jobs never contend)
 //! - [`recall`]   — asynchronous periodic KV recall: per-layer interval
-//!   profiling against beta + countdowns (§3.4)
+//!   profiling against beta + countdowns (§3.4); refreshes are *staged*
+//!   into the double-buffered resident set and committed one step later
 //! - [`scout`]    — the per-step, per-layer schedule of Algorithm 1:
 //!   predicted-query selection one layer ahead, GPU/CPU partition,
-//!   LSE merge, recall bookkeeping
+//!   LSE merge, staged-recall commit at the same-layer boundary
 //! - [`stats`]    — per-step schedule records consumed by the timing
 //!   plane (`sim`) and the analytics benches
 //!
@@ -18,19 +20,19 @@
 
 pub mod admission;
 pub mod batch;
-pub mod cpu_worker;
 pub mod gather;
 pub mod recall;
 pub mod request;
 pub mod scout;
 pub mod stats;
+pub mod worker_group;
 
 pub use batch::{Batch, SeqState};
-pub use cpu_worker::CpuWorkerPool;
 pub use recall::RecallController;
 pub use request::{RequestOutput, RequestSpec};
 pub use scout::ScoutScheduler;
 pub use stats::{LayerStats, StepStats};
+pub use worker_group::WorkerGroups;
 
 /// A decode scheduler: admits requests and advances a batch by one token.
 pub trait DecodeScheduler {

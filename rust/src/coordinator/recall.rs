@@ -5,13 +5,14 @@
 //!    per-layer CPU-compute-ratio series, and derive per-layer intervals
 //!    as "max steps that keep the ratio below beta" (paper default 12%).
 //! 2. **Online controller** — per-(sequence, layer) countdowns; when one
-//!    expires, re-rank blocks by current digest scores and refresh the
-//!    resident set. The refresh I/O is *asynchronous*: blocks are not
-//!    needed until the same layer of the NEXT decode step, so the PCIe
-//!    window is a whole step (>20 ms in the paper's testbed). The
-//!    numerics plane applies the refresh immediately (the data is the
-//!    same); the timing plane prices the transfer into the off-critical
-//!    path window and only stalls if it would not fit.
+//!    expires, re-rank blocks by current digest scores and *stage* the
+//!    refreshed resident set ([`crate::kvcache::ResidentSet::stage`]).
+//!    The refresh I/O is *asynchronous* structurally: the staged set is
+//!    invisible to GPU attention until the scheduler commits it at the
+//!    same layer of the NEXT decode step, so the PCIe fetch always has a
+//!    whole step as its window (>20 ms in the paper's testbed). The
+//!    timing plane prices the staged bytes against that window and only
+//!    stalls if they would not fit.
 
 use crate::config::{RecallPolicy, ScoutConfig};
 use crate::sparse::locality::CpuRatioSeries;

@@ -7,17 +7,25 @@
 //! for layer i in 0..L:
 //!     if i+1 < L and layer_ahead:
 //!         Q_pred^{i+1} = qpred(x, i+1)              # Alg. 1 line 4
+//!         commit recall set staged for i+1 last step       # §3.4 window
 //!         select top-k blocks for i+1 (digest scores)        # line 5
 //!         partition vs resident set -> B_cpu^{i+1}           # line 6
-//!         spawn CPUATTN(B_cpu^{i+1})                         # line 7
+//!         spawn CPUATTN(B_cpu^{i+1}) into slot's group       # line 7
 //!     (q, k_new, v_new) = pre_attn(x, i)                     # line 9
 //!     A_gpu = sparse_attn(q, resident ∩ selected) + tail     # line 10
 //!     A_cpu = collect layer-i results (spawned at i-1)       # line 11
 //!     A = merge(A_gpu, A_cpu)                                # line 12
 //!     x = post_attn(x, A, i)
-//!     periodic-recall tick: refresh resident set (async I/O) # §3.4
+//!     periodic-recall tick: STAGE re-ranked resident set     # §3.4
 //! logits = lm_head(x); greedy sample; append K/V
 //! ```
+//!
+//! Concurrency shape: CPU jobs go to per-slot [`WorkerGroups`] (§4's
+//! thread partitioning — no shared queue across sequences), digest
+//! scoring fans out over a scoped thread pool, and a recall tick only
+//! *stages* the re-ranked set — it becomes visible at the same layer of
+//! the *next* step, so the fetch always has one full decode step as its
+//! PCIe window and never lands on the critical path.
 //!
 //! The scheduler runs the *numerics plane*; every scheduling decision is
 //! recorded in [`StepStats`] for the timing plane to price.
@@ -27,13 +35,14 @@ use std::sync::Arc;
 use crate::config::ScoutConfig;
 use crate::engines::gpu::BatchPartial;
 use crate::engines::{GpuEngine, NativeEngine};
-use crate::sparse::{score_blocks_native, select_topk};
+use crate::sparse::{score_blocks_native, select_topk, TopkSelection};
 use crate::tensor::Tensor;
+use crate::util::par;
 
 use super::batch::{Batch, SeqState};
-use super::cpu_worker::CpuWorkerPool;
 use super::recall::RecallController;
 use super::stats::StepStats;
+use super::worker_group::WorkerGroups;
 use super::DecodeScheduler;
 
 pub struct ScoutScheduler {
@@ -41,7 +50,9 @@ pub struct ScoutScheduler {
     pub native: Arc<NativeEngine>,
     pub cfg: ScoutConfig,
     pub recall: RecallController,
-    pool: CpuWorkerPool,
+    pool: WorkerGroups,
+    /// Scoped-thread width for the in-step scoring fan-out.
+    par_threads: usize,
 }
 
 impl ScoutScheduler {
@@ -51,8 +62,22 @@ impl ScoutScheduler {
         cfg: ScoutConfig,
         recall: RecallController,
     ) -> Self {
-        let pool = CpuWorkerPool::new(native.clone(), cfg.cpu_threads);
-        Self { gpu, native, cfg, recall, pool }
+        // One worker group per batch slot (§4) unless the config folds
+        // slots together; slot s maps to group s % n_groups.
+        let tile = gpu.spec.batch;
+        let n_groups = if cfg.worker_groups == 0 {
+            tile
+        } else {
+            cfg.worker_groups.min(tile)
+        };
+        let pool = WorkerGroups::new(native.clone(), n_groups, cfg.threads_per_group);
+        let par_threads = par::default_threads();
+        Self { gpu, native, cfg, recall, pool, par_threads }
+    }
+
+    /// The worker-group plane (tests / benches introspection).
+    pub fn worker_groups(&self) -> &WorkerGroups {
+        &self.pool
     }
 
     /// Whether CPU pre-computation runs one layer ahead. Requires the
@@ -70,27 +95,47 @@ impl ScoutScheduler {
     }
 
     /// Score + select + partition + spawn CPU work for `layer`, using
-    /// query rows from `q` (`[B, Hq*D]` layout). Returns per-seq
-    /// (gpu_blocks, cpu_blocks) and stores selection/scores on the seq.
-    #[allow(clippy::too_many_arguments)]
+    /// query rows from `q` (`[B, Hq*D]` layout). Scoring and top-k run
+    /// fanned out across sequences (read-only); the sequential epilogue
+    /// commits the recall set staged one step ago (this is the §3.4
+    /// same-layer commit boundary — the staged fetch has had the whole
+    /// intervening step as its PCIe window), partitions against the
+    /// now-visible resident set, and spawns each sequence's CPU job
+    /// into its owning worker group.
     fn select_and_spawn(
         &mut self,
         seqs: &mut [SeqState],
         q: &Tensor,
         layer: usize,
         stats: &mut StepStats,
-    ) -> usize {
+    ) {
         let spec = &self.gpu.spec;
         let (hq, hkv, d) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
-        let mut spawned = 0;
-        for (s, seq) in seqs.iter_mut().enumerate() {
-            let cache = seq.cache.read().unwrap();
-            let full = cache.full_blocks();
-            let qrow = &q.rows(s, 1)[..hq * d];
-            let scores =
-                score_blocks_native(qrow, &cache.digests, layer, full, hq, hkv, d);
-            drop(cache);
-            let sel = select_topk(&scores, spec.k_blocks, &self.pins(full));
+        let kb = spec.k_blocks;
+        let (pin_sink, pin_recent) = (self.cfg.pin_sink, self.cfg.pin_recent);
+
+        // Parallel phase: digest scoring + top-k per sequence.
+        let mut sels: Vec<Option<TopkSelection>> = (0..seqs.len()).map(|_| None).collect();
+        {
+            let items: Vec<(&mut Option<TopkSelection>, &SeqState)> =
+                sels.iter_mut().zip(seqs.iter()).collect();
+            par::par_for_each(items, self.par_threads, |s, (slot, seq)| {
+                let cache = seq.cache.read().unwrap();
+                let full = cache.full_blocks();
+                let qrow = &q.rows(s, 1)[..hq * d];
+                let scores =
+                    score_blocks_native(qrow, &cache.digests, layer, full, hq, hkv, d);
+                drop(cache);
+                let pins = super::admission::pins(pin_sink, pin_recent, full);
+                *slot = Some(select_topk(&scores, kb, &pins));
+            });
+        }
+
+        // Sequential epilogue: commit staged recall, partition, spawn.
+        for (s, (seq, sel)) in seqs.iter_mut().zip(sels).enumerate() {
+            let sel = sel.expect("selection computed for every sequence");
+            let fetched = seq.resident[layer].commit_staged();
+            stats.layers[layer].recall_blocks += fetched;
             let (gpu_blocks, cpu_blocks) = seq.resident[layer].partition(&sel.blocks);
             stats.layers[layer].gpu_blocks += gpu_blocks.len();
             stats.layers[layer].cpu_blocks += cpu_blocks.len();
@@ -98,11 +143,10 @@ impl ScoutScheduler {
             seq.selected[layer] = gpu_blocks;
             seq.scores_mut(layer).clone_from(&sel.scores);
             if !cpu_blocks.is_empty() {
-                self.pool.spawn((s, layer), qrow.to_vec(), seq.cache.clone(), cpu_blocks);
-                spawned += 1;
+                let qrow = q.rows(s, 1)[..hq * d].to_vec();
+                self.pool.spawn((s, layer), qrow, seq.cache.clone(), cpu_blocks);
             }
         }
-        spawned
     }
 
     /// One decode step over a chunk of at most `spec.batch` sequences.
@@ -126,10 +170,9 @@ impl ScoutScheduler {
         // Layer-0 CPU work: x is layer 0's input, so qpred(x, 0) IS the
         // real query — the step's pipeline starts with exact selection.
         let pipelined = self.pipelined();
-        let mut expected: Vec<usize> = vec![0; l_layers];
         if pipelined {
             let q0 = self.gpu.qpred(&x, 0, &pos)?;
-            expected[0] = self.select_and_spawn(seqs, &q0, 0, stats);
+            self.select_and_spawn(seqs, &q0, 0, stats);
         }
 
         let mut k_news: Vec<Tensor> = Vec::with_capacity(l_layers);
@@ -141,7 +184,7 @@ impl ScoutScheduler {
             // Table 1).
             if pipelined && i + 1 < l_layers {
                 let qp = self.gpu.qpred(&x, i + 1, &pos)?;
-                expected[i + 1] = self.select_and_spawn(seqs, &qp, i + 1, stats);
+                self.select_and_spawn(seqs, &qp, i + 1, stats);
             }
 
             // line 9: real QKV for this layer.
@@ -154,7 +197,7 @@ impl ScoutScheduler {
                 // layer and is collected immediately below (no overlap;
                 // the timing plane prices the stall).
                 let q2 = q.clone().reshape(&[b_tile, spec.n_q_heads * spec.head_dim]);
-                expected[i] = self.select_and_spawn(seqs, &q2, i, stats);
+                self.select_and_spawn(seqs, &q2, i, stats);
             }
 
             // line 10: GPU-side attention over resident∩selected + tail.
@@ -167,10 +210,11 @@ impl ScoutScheduler {
             let p_tail = self.gpu.tail_attn(&q, &kt, &vt, &mt)?;
             let mut merged = self.gpu.merge(&p_gpu, &p_tail)?;
 
-            // lines 11-12: fold in the CPU partial pre-computed one layer
-            // ahead (or just now in the -PC arm).
-            if expected[i] > 0 {
-                let results = self.pool.collect_layer(i, expected[i]);
+            // lines 11-12: fold in the CPU partials pre-computed one
+            // layer ahead (or just now in the -PC arm), collected from
+            // each slot's own worker group.
+            let results = self.pool.collect_layer(i);
+            if !results.is_empty() {
                 let mut cpu_bp =
                     BatchPartial::empty(b_tile, spec.n_q_heads, spec.head_dim);
                 for r in results {
@@ -183,7 +227,11 @@ impl ScoutScheduler {
             k_news.push(k_new);
             v_news.push(v_new);
 
-            // §3.4: asynchronous periodic recall (refresh resident sets).
+            // §3.4: asynchronous periodic recall — *stage* the re-ranked
+            // resident set. It stays invisible to GPU attention until the
+            // commit at this layer of the NEXT decode step, so the fetch
+            // gets a whole step as its PCIe window; the timing plane
+            // prices the staged bytes against that window.
             for seq in seqs.iter_mut() {
                 if self.recall.tick(&mut seq.recall_in, i) {
                     let full = seq.cache.read().unwrap().full_blocks();
@@ -193,8 +241,8 @@ impl ScoutScheduler {
                     }
                     let cap = seq.resident[i].capacity();
                     let ranked = select_topk(&scores, cap, &self.pins(full));
-                    let added = seq.resident[i].refresh(&ranked.blocks);
-                    stats.layers[i].recall_blocks += added.len();
+                    let staged = seq.resident[i].stage(&ranked.blocks);
+                    stats.layers[i].recall_staged_blocks += staged;
                 }
             }
         }

@@ -16,8 +16,14 @@ pub struct LayerStats {
     pub gpu_blocks: usize,
     /// Blocks attended by the CPU worker (selected \ resident).
     pub cpu_blocks: usize,
-    /// Blocks recalled GPU-ward by the periodic refresh at this layer.
+    /// Blocks committed into the resident set at this layer — recall
+    /// I/O staged one step earlier whose fetch has now landed.
     pub recall_blocks: usize,
+    /// Blocks *staged* for asynchronous recall at this layer: the fetch
+    /// list issued by a §3.4 tick this step. This is the PCIe traffic
+    /// the timing plane prices against the full-step window (the
+    /// matching commit shows up in `recall_blocks` next step).
+    pub recall_staged_blocks: usize,
     /// Blocks transferred on the critical path (InfiniGen-style prefetch;
     /// 0 for Scout where recall is asynchronous).
     pub sync_transfer_blocks: usize,
@@ -64,9 +70,15 @@ impl StepStats {
         if s == 0 { 0.0 } else { c as f64 / s as f64 }
     }
 
-    /// Total recall volume in blocks.
+    /// Total committed recall volume in blocks.
     pub fn recall_blocks(&self) -> usize {
         self.layers.iter().map(|l| l.recall_blocks).sum()
+    }
+
+    /// Total recall fetch volume staged this step, in blocks (the
+    /// asynchronous PCIe traffic the timing plane prices).
+    pub fn recall_staged_blocks(&self) -> usize {
+        self.layers.iter().map(|l| l.recall_staged_blocks).sum()
     }
 }
 

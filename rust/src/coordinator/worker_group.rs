@@ -1,0 +1,366 @@
+//! Sequence-sharded CPU attention worker groups.
+//!
+//! The paper's CPU side (§3.2/§4) partitions the worker threads into
+//! **groups, one group per sequence**; each group computes the
+//! near-data block attention for its own sequence only. [`WorkerGroups`]
+//! makes that structural: one fixed thread group per batch slot, each
+//! with its own slot-local job and result channels. Jobs are issued one
+//! layer ahead of the GPU (Alg. 1 line 7 `spawn CPUATTN`) into the
+//! owning group and collected when the GPU reaches that layer, so
+//! cross-sequence work never shares a queue, a mutex, or a channel —
+//! a slow sequence can only ever delay itself.
+//!
+//! Within one group, threads (`threads_per_group`, the §4 partitioning
+//! knob) share that group's receiver behind a group-local mutex; with
+//! the default of one thread per group there is no contention at all.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::engines::{NativeEngine, Partial};
+use crate::kvcache::SeqKvCache;
+
+/// Key identifying a pre-computation job: (sequence slot, layer).
+pub type JobKey = (usize, usize);
+
+struct Job {
+    key: JobKey,
+    /// Predicted (or real, if `predicted_query=false`) query `[Hq*D]`.
+    q: Vec<f32>,
+    cache: Arc<RwLock<SeqKvCache>>,
+    blocks: Vec<usize>,
+}
+
+/// Completed job.
+pub struct JobResult {
+    pub key: JobKey,
+    pub partial: Partial,
+    pub blocks: usize,
+}
+
+/// One slot's thread group: private job/result channels + bookkeeping.
+struct WorkerGroup {
+    tx: SyncSender<Job>,
+    rx_done: Receiver<JobResult>,
+    /// Jobs spawned but not yet collected, indexed by layer (grown on
+    /// demand — the group does not need to know the model depth).
+    pending: Vec<usize>,
+    /// Completed jobs received while collecting a *different* layer.
+    /// A group's threads race across the one-layer-ahead spawn window,
+    /// so a layer-`i+1` job can finish before a straggling layer-`i`
+    /// job is collected; such results are parked here and drained by
+    /// the matching `collect_layer` call.
+    buffered: Vec<JobResult>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerGroup {
+    fn new(engine: &Arc<NativeEngine>, threads: usize) -> Self {
+        let (tx, rx) = sync_channel::<Job>(256);
+        let rx = Arc::new(Mutex::new(rx));
+        let (tx_done, rx_done) = sync_channel::<JobResult>(256);
+        let mut handles = Vec::new();
+        for _ in 0..threads.max(1) {
+            let rx = rx.clone();
+            let tx_done = tx_done.clone();
+            let engine = engine.clone();
+            handles.push(std::thread::spawn(move || {
+                loop {
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(j) => j,
+                        Err(_) => return,
+                    };
+                    let cache = job.cache.read().unwrap();
+                    let partial = engine.attend_blocks(&job.q, &cache, job.key.1, &job.blocks);
+                    drop(cache);
+                    let _ = tx_done.send(JobResult {
+                        key: job.key,
+                        partial,
+                        blocks: job.blocks.len(),
+                    });
+                }
+            }));
+        }
+        Self { tx, rx_done, pending: Vec::new(), buffered: Vec::new(), handles }
+    }
+
+    fn note_spawn(&mut self, layer: usize) {
+        if self.pending.len() <= layer {
+            self.pending.resize(layer + 1, 0);
+        }
+        self.pending[layer] += 1;
+    }
+
+    fn outstanding(&self) -> usize {
+        self.pending.iter().sum()
+    }
+
+    /// Collect every pending result of `layer` from this group,
+    /// buffering results of other layers for their own collect call.
+    fn collect_layer(&mut self, layer: usize, out: &mut Vec<JobResult>) {
+        let expected = self.pending.get(layer).copied().unwrap_or(0);
+        if expected == 0 {
+            return;
+        }
+        let mut got = 0;
+        let mut i = 0;
+        while i < self.buffered.len() && got < expected {
+            if self.buffered[i].key.1 == layer {
+                out.push(self.buffered.swap_remove(i));
+                got += 1;
+            } else {
+                i += 1;
+            }
+        }
+        while got < expected {
+            let r = self.rx_done.recv().expect("cpu worker group hung up");
+            if r.key.1 == layer {
+                out.push(r);
+                got += 1;
+            } else {
+                self.buffered.push(r);
+            }
+        }
+        self.pending[layer] = 0;
+    }
+}
+
+impl Drop for WorkerGroup {
+    fn drop(&mut self) {
+        // Close the job channel so the group's threads exit, then join.
+        let (tx, _rx) = sync_channel::<Job>(1);
+        let old = std::mem::replace(&mut self.tx, tx);
+        drop(old);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Fixed per-slot thread groups doing block attention (§4's thread
+/// partitioning). Slot `s` is served by group `s % n_groups`; with the
+/// default `n_groups == batch tile` that is exactly one group per
+/// sequence, and shrinking `n_groups` folds slots together (down to the
+/// pre-sharding single shared pool at `n_groups == 1`).
+pub struct WorkerGroups {
+    groups: Vec<WorkerGroup>,
+    threads_per_group: usize,
+}
+
+impl WorkerGroups {
+    pub fn new(engine: Arc<NativeEngine>, n_groups: usize, threads_per_group: usize) -> Self {
+        let n_groups = n_groups.max(1);
+        let threads_per_group = threads_per_group.max(1);
+        let groups =
+            (0..n_groups).map(|_| WorkerGroup::new(&engine, threads_per_group)).collect();
+        Self { groups, threads_per_group }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn threads_per_group(&self) -> usize {
+        self.threads_per_group
+    }
+
+    /// Total worker threads across all groups.
+    pub fn total_threads(&self) -> usize {
+        self.groups.len() * self.threads_per_group
+    }
+
+    fn group_of(&self, slot: usize) -> usize {
+        slot % self.groups.len()
+    }
+
+    /// Enqueue one pre-computation job (Alg. 1 line 7) into the slot's
+    /// owning group.
+    pub fn spawn(
+        &mut self,
+        key: JobKey,
+        q: Vec<f32>,
+        cache: Arc<RwLock<SeqKvCache>>,
+        blocks: Vec<usize>,
+    ) {
+        if blocks.is_empty() {
+            return; // merge identity — nothing to do
+        }
+        let g = self.group_of(key.0);
+        let group = &mut self.groups[g];
+        group.note_spawn(key.1);
+        group.tx.send(Job { key, q, cache, blocks }).expect("cpu worker group hung up");
+    }
+
+    /// Jobs spawned but not yet collected, across all groups.
+    pub fn outstanding(&self) -> usize {
+        self.groups.iter().map(|g| g.outstanding()).sum()
+    }
+
+    /// Collect every outstanding result for `layer`, blocking until each
+    /// group has delivered its own. Results for *other* layers are
+    /// buffered inside their owning group and drained first by the
+    /// matching `collect_layer` call, so collection order never
+    /// deadlocks, panics on interleaving, or crosses groups.
+    pub fn collect_layer(&mut self, layer: usize) -> Vec<JobResult> {
+        let mut out = Vec::new();
+        for group in &mut self.groups {
+            group.collect_layer(layer, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::PROXY_MODELS;
+
+    fn tiny_spec() -> crate::model::ModelSpec {
+        let mut spec = PROXY_MODELS[0].1();
+        spec.n_layers = 8;
+        spec.d_model = 64;
+        spec.n_q_heads = 4;
+        spec.n_kv_heads = 2;
+        spec.head_dim = 16;
+        spec.d_ff = 64;
+        spec.vocab = 32;
+        spec.max_seq = 64;
+        spec.block_size = 8;
+        spec
+    }
+
+    fn filled_cache(spec: &crate::model::ModelSpec, tokens: usize, salt: usize) -> Arc<RwLock<SeqKvCache>> {
+        let cache = Arc::new(RwLock::new(SeqKvCache::new(spec)));
+        {
+            let mut c = cache.write().unwrap();
+            let w = spec.n_kv_heads * spec.head_dim;
+            for t in 0..tokens {
+                for l in 0..spec.n_layers {
+                    let k: Vec<f32> =
+                        (0..w).map(|i| ((t + l + i + salt) as f32).sin()).collect();
+                    let v: Vec<f32> =
+                        (0..w).map(|i| ((t * 2 + l + i + salt) as f32).cos()).collect();
+                    c.append_layer(l, &k, &v);
+                }
+                c.advance();
+            }
+        }
+        cache
+    }
+
+    #[test]
+    fn groups_compute_same_as_inline() {
+        let spec = tiny_spec();
+        let engine = Arc::new(NativeEngine::from_seed(&spec, 3));
+        let cache = filled_cache(&spec, 32, 0);
+        let q: Vec<f32> =
+            (0..spec.n_q_heads * spec.head_dim).map(|i| (i as f32 * 0.2).sin()).collect();
+        let mut pool = WorkerGroups::new(engine.clone(), 2, 1);
+        pool.spawn((0, 1), q.clone(), cache.clone(), vec![0, 2]);
+        pool.spawn((1, 1), q.clone(), cache.clone(), vec![1, 3]);
+        let mut results = pool.collect_layer(1);
+        assert_eq!(results.len(), 2);
+        results.sort_by_key(|r| r.key.0);
+        let inline0 = engine.attend_blocks(&q, &cache.read().unwrap(), 1, &[0, 2]);
+        let inline1 = engine.attend_blocks(&q, &cache.read().unwrap(), 1, &[1, 3]);
+        assert_eq!(results[0].partial.finalize(), inline0.finalize());
+        assert_eq!(results[1].partial.finalize(), inline1.finalize());
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn out_of_order_layers_are_buffered_within_a_group() {
+        let spec = tiny_spec();
+        let engine = Arc::new(NativeEngine::from_seed(&spec, 9));
+        let cache = filled_cache(&spec, 16, 0);
+        let q: Vec<f32> =
+            (0..spec.n_q_heads * spec.head_dim).map(|i| (i as f32 * 0.3).sin()).collect();
+        // Single group, single thread => results land on the done
+        // channel in spawn order: layer 5 first, then layer 3.
+        let mut pool = WorkerGroups::new(engine.clone(), 1, 1);
+        pool.spawn((0, 5), q.clone(), cache.clone(), vec![0]);
+        pool.spawn((0, 3), q.clone(), cache.clone(), vec![1]);
+        // Collecting layer 3 first must buffer the layer-5 result.
+        let r3 = pool.collect_layer(3);
+        assert_eq!(r3.len(), 1);
+        assert_eq!(r3[0].key, (0, 3));
+        // The buffered layer-5 result is drained without touching the
+        // (now empty) channel — a recv here would deadlock.
+        let r5 = pool.collect_layer(5);
+        assert_eq!(r5.len(), 1);
+        assert_eq!(r5[0].key, (0, 5));
+        assert_eq!(pool.outstanding(), 0);
+        let inline5 = engine.attend_blocks(&q, &cache.read().unwrap(), 5, &[0]);
+        assert_eq!(r5[0].partial.finalize(), inline5.finalize());
+    }
+
+    #[test]
+    fn groups_finishing_out_of_order_never_cross_deliver() {
+        // Slot 0 gets a slow job (many blocks), slot 1 a fast one, with
+        // *different* queries and block lists — if results ever crossed
+        // groups the per-slot partials would not match their own inline
+        // recomputation.
+        let spec = tiny_spec();
+        let engine = Arc::new(NativeEngine::from_seed(&spec, 11));
+        let cache0 = filled_cache(&spec, 56, 1);
+        let cache1 = filled_cache(&spec, 56, 2);
+        let q0: Vec<f32> =
+            (0..spec.n_q_heads * spec.head_dim).map(|i| (i as f32 * 0.17).sin()).collect();
+        let q1: Vec<f32> =
+            (0..spec.n_q_heads * spec.head_dim).map(|i| (i as f32 * 0.71).cos()).collect();
+        let slow: Vec<usize> = (0..6).collect();
+        let fast = vec![3];
+        let mut pool = WorkerGroups::new(engine.clone(), 2, 1);
+        for layer in 0..spec.n_layers {
+            pool.spawn((0, layer), q0.clone(), cache0.clone(), slow.clone());
+            pool.spawn((1, layer), q1.clone(), cache1.clone(), fast.clone());
+        }
+        for layer in 0..spec.n_layers {
+            let mut results = pool.collect_layer(layer);
+            assert_eq!(results.len(), 2, "layer {layer}");
+            results.sort_by_key(|r| r.key.0);
+            assert_eq!(results[0].key, (0, layer));
+            assert_eq!(results[1].key, (1, layer));
+            assert_eq!(results[0].blocks, slow.len());
+            assert_eq!(results[1].blocks, fast.len());
+            let inline0 =
+                engine.attend_blocks(&q0, &cache0.read().unwrap(), layer, &slow);
+            let inline1 =
+                engine.attend_blocks(&q1, &cache1.read().unwrap(), layer, &fast);
+            assert_eq!(results[0].partial.finalize(), inline0.finalize(), "layer {layer}");
+            assert_eq!(results[1].partial.finalize(), inline1.finalize(), "layer {layer}");
+        }
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn slots_fold_onto_groups_modulo() {
+        let spec = tiny_spec();
+        let engine = Arc::new(NativeEngine::from_seed(&spec, 5));
+        let cache = filled_cache(&spec, 24, 0);
+        let q: Vec<f32> =
+            (0..spec.n_q_heads * spec.head_dim).map(|i| (i as f32 * 0.4).sin()).collect();
+        // 3 slots on 2 groups: slot 2 shares group 0.
+        let mut pool = WorkerGroups::new(engine, 2, 2);
+        for s in 0..3 {
+            pool.spawn((s, 0), q.clone(), cache.clone(), vec![s]);
+        }
+        assert_eq!(pool.outstanding(), 3);
+        let mut results = pool.collect_layer(0);
+        results.sort_by_key(|r| r.key.0);
+        let slots: Vec<usize> = results.iter().map(|r| r.key.0).collect();
+        assert_eq!(slots, vec![0, 1, 2]);
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn empty_block_list_is_not_spawned() {
+        let spec = PROXY_MODELS[0].1();
+        let engine = Arc::new(NativeEngine::from_seed(&spec, 1));
+        let cache = Arc::new(RwLock::new(SeqKvCache::new(&spec)));
+        let mut pool = WorkerGroups::new(engine, 1, 1);
+        pool.spawn((0, 0), vec![], cache, vec![]);
+        assert_eq!(pool.outstanding(), 0);
+        assert!(pool.collect_layer(0).is_empty());
+    }
+}

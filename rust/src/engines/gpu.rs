@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use crate::model::{ModelSpec, Weights};
-use crate::runtime::{Operand, Runtime};
+use crate::runtime::{Operand, Runtime, TensorView, WeightId};
 use crate::tensor::Tensor;
 
 /// Batched attention partial: acc `[B,Hq,D]`, m `[B,Hq]`, l `[B,Hq]`.
@@ -53,11 +53,32 @@ struct LayerShapes {
     w2: [usize; 2],
 }
 
+/// Backend registration handles for every weight operand the engine
+/// passes (per-layer row slices + the stacked `[L, ...]` tensors). The
+/// interpreter hands out the unregistered id for all of these and keeps
+/// reading the borrowed views; PJRT caches one literal per handle so no
+/// weight bytes are re-materialized per call.
+struct WeightReg {
+    ln1: Vec<WeightId>,
+    wq: Vec<WeightId>,
+    wk: Vec<WeightId>,
+    wv: Vec<WeightId>,
+    wo: Vec<WeightId>,
+    ln2: Vec<WeightId>,
+    w1: Vec<WeightId>,
+    w2: Vec<WeightId>,
+    /// ln1, wq, wk, wv, wo, ln2, w1, w2, ln_f, embed — the stacked
+    /// operand prefix of `decode_full`/`prefill`; `ln_f`/`embed` double
+    /// as `lm_head`'s operands.
+    stacked: [WeightId; 10],
+}
+
 pub struct GpuEngine {
     pub rt: Arc<Runtime>,
     pub spec: ModelSpec,
     pub weights: Weights,
     shapes: LayerShapes,
+    reg: WeightReg,
 }
 
 impl GpuEngine {
@@ -74,25 +95,59 @@ impl GpuEngine {
             w1: [d, dff],
             w2: [dff, d],
         };
-        Ok(Self { rt, spec, weights, shapes })
+        let reg = Self::register_weights(&rt, &spec, &weights, &shapes)?;
+        Ok(Self { rt, spec, weights, shapes, reg })
+    }
+
+    /// Register every weight operand with the backend once, at engine
+    /// construction — per-layer row slices and the stacked tensors.
+    fn register_weights(
+        rt: &Runtime,
+        spec: &ModelSpec,
+        w: &Weights,
+        s: &LayerShapes,
+    ) -> crate::Result<WeightReg> {
+        let n = spec.n_layers;
+        let mut reg = WeightReg {
+            ln1: Vec::with_capacity(n),
+            wq: Vec::with_capacity(n),
+            wk: Vec::with_capacity(n),
+            wv: Vec::with_capacity(n),
+            wo: Vec::with_capacity(n),
+            ln2: Vec::with_capacity(n),
+            w1: Vec::with_capacity(n),
+            w2: Vec::with_capacity(n),
+            stacked: [WeightId::UNREGISTERED; 10],
+        };
+        for i in 0..n {
+            reg.ln1.push(rt.register_weights(TensorView::new(&s.ln, w.layer_ln1(i)))?);
+            reg.wq.push(rt.register_weights(TensorView::new(&s.wq, w.layer_wq(i)))?);
+            reg.wk.push(rt.register_weights(TensorView::new(&s.wkv, w.layer_wk(i)))?);
+            reg.wv.push(rt.register_weights(TensorView::new(&s.wkv, w.layer_wv(i)))?);
+            reg.wo.push(rt.register_weights(TensorView::new(&s.wo, w.layer_wo(i)))?);
+            reg.ln2.push(rt.register_weights(TensorView::new(&s.ln, w.layer_ln2(i)))?);
+            reg.w1.push(rt.register_weights(TensorView::new(&s.w1, w.layer_w1(i)))?);
+            reg.w2.push(rt.register_weights(TensorView::new(&s.w2, w.layer_w2(i)))?);
+        }
+        let stacked: [&Tensor; 10] = [
+            &w.ln1, &w.wq, &w.wk, &w.wv, &w.wo, &w.ln2, &w.w1, &w.w2, &w.ln_f, &w.embed,
+        ];
+        for (slot, t) in reg.stacked.iter_mut().zip(stacked) {
+            *slot = rt.register_weights(t.into())?;
+        }
+        Ok(reg)
     }
 
     /// The stacked-weight operand prefix shared by `decode_full` and
     /// `prefill` (the `Weights` tensors already carry the `[L, ...]`
     /// manifest shapes).
     fn stacked_operands(&self) -> [Operand<'_>; 10] {
-        [
-            Operand::t(&self.weights.ln1),
-            Operand::t(&self.weights.wq),
-            Operand::t(&self.weights.wk),
-            Operand::t(&self.weights.wv),
-            Operand::t(&self.weights.wo),
-            Operand::t(&self.weights.ln2),
-            Operand::t(&self.weights.w1),
-            Operand::t(&self.weights.w2),
-            Operand::t(&self.weights.ln_f),
-            Operand::t(&self.weights.embed),
-        ]
+        let w = &self.weights;
+        let r = &self.reg.stacked;
+        let ts: [&Tensor; 10] = [
+            &w.ln1, &w.wq, &w.wk, &w.wv, &w.wo, &w.ln2, &w.w1, &w.w2, &w.ln_f, &w.embed,
+        ];
+        std::array::from_fn(|i| Operand::weights(r[i], ts[i].shape(), ts[i].data()))
     }
 
     fn partial_from(mut outs: Vec<Tensor>) -> crate::Result<BatchPartial> {
@@ -117,10 +172,10 @@ impl GpuEngine {
             "layer_pre_attn",
             &[
                 Operand::t(x),
-                Operand::f32_slice(&s.ln, w.layer_ln1(layer)),
-                Operand::f32_slice(&s.wq, w.layer_wq(layer)),
-                Operand::f32_slice(&s.wkv, w.layer_wk(layer)),
-                Operand::f32_slice(&s.wkv, w.layer_wv(layer)),
+                Operand::weights(self.reg.ln1[layer], &s.ln, w.layer_ln1(layer)),
+                Operand::weights(self.reg.wq[layer], &s.wq, w.layer_wq(layer)),
+                Operand::weights(self.reg.wk[layer], &s.wkv, w.layer_wk(layer)),
+                Operand::weights(self.reg.wv[layer], &s.wkv, w.layer_wv(layer)),
                 Operand::I32 { shape: &pos_shape, data: pos },
             ],
         )?;
@@ -139,8 +194,8 @@ impl GpuEngine {
             "qpred",
             &[
                 Operand::t(x),
-                Operand::f32_slice(&s.ln, w.layer_ln1(layer_next)),
-                Operand::f32_slice(&s.wq, w.layer_wq(layer_next)),
+                Operand::weights(self.reg.ln1[layer_next], &s.ln, w.layer_ln1(layer_next)),
+                Operand::weights(self.reg.wq[layer_next], &s.wq, w.layer_wq(layer_next)),
                 Operand::I32 { shape: &pos_shape, data: pos },
             ],
         )?;
@@ -208,10 +263,10 @@ impl GpuEngine {
                 Operand::t(x),
                 Operand::t(&p.acc),
                 Operand::t(&p.l),
-                Operand::f32_slice(&s.wo, w.layer_wo(layer)),
-                Operand::f32_slice(&s.ln, w.layer_ln2(layer)),
-                Operand::f32_slice(&s.w1, w.layer_w1(layer)),
-                Operand::f32_slice(&s.w2, w.layer_w2(layer)),
+                Operand::weights(self.reg.wo[layer], &s.wo, w.layer_wo(layer)),
+                Operand::weights(self.reg.ln2[layer], &s.ln, w.layer_ln2(layer)),
+                Operand::weights(self.reg.w1[layer], &s.w1, w.layer_w1(layer)),
+                Operand::weights(self.reg.w2[layer], &s.w2, w.layer_w2(layer)),
             ],
         )?;
         Ok(outs.pop().unwrap())
@@ -219,12 +274,13 @@ impl GpuEngine {
 
     /// Final norm + tied LM head: logits `[B, V]`.
     pub fn lm_head(&self, x: &Tensor) -> crate::Result<Tensor> {
+        let w = &self.weights;
         let mut outs = self.rt.execute(
             "lm_head",
             &[
                 Operand::t(x),
-                Operand::t(&self.weights.ln_f),
-                Operand::t(&self.weights.embed),
+                Operand::weights(self.reg.stacked[8], w.ln_f.shape(), w.ln_f.data()),
+                Operand::weights(self.reg.stacked[9], w.embed.shape(), w.embed.data()),
             ],
         )?;
         Ok(outs.pop().unwrap())

@@ -3,10 +3,30 @@
 //! Paper semantics (§3.2/§3.4): the resident set is established after
 //! prefill (top-budget blocks by digest score), optionally pins the
 //! attention-sink block and the most recent blocks, and is refreshed only
-//! by the asynchronous periodic recall — *not* every step (that is what
-//! keeps recall I/O off the critical path).
+//! by the asynchronous periodic recall — *not* every step.
+//!
+//! The recall refresh is **double-buffered** to make "asynchronous"
+//! structural rather than an accounting convention: a recall tick
+//! [`stage`](ResidentSet::stage)s the re-ranked set plus its fetch list
+//! (the blocks that must cross PCIe), and the staged set only becomes
+//! visible to GPU attention when the scheduler
+//! [`commit_staged`](ResidentSet::commit_staged)s it at the *same layer
+//! of the next decode step*. The fetch therefore always has one full
+//! decode step as its transfer window (§3.4), and the numerics plane can
+//! never consume a block the timing plane would still count as in
+//! flight.
 
 use super::BlockId;
+
+/// A staged (not yet visible) refresh of the resident set.
+#[derive(Debug, Clone)]
+struct StagedSet {
+    resident: Vec<bool>,
+    count: usize,
+    /// Blocks in the staged set that are not currently resident — the
+    /// recall I/O the GPU pool fetches over PCIe during the step window.
+    fetch: Vec<BlockId>,
+}
 
 /// Budget-bounded set of GPU-resident complete blocks for one
 /// (sequence, layer).
@@ -15,11 +35,12 @@ pub struct ResidentSet {
     capacity: usize,
     resident: Vec<bool>,
     count: usize,
+    staged: Option<StagedSet>,
 }
 
 impl ResidentSet {
     pub fn new(n_blocks: usize, capacity: usize) -> Self {
-        Self { capacity, resident: vec![false; n_blocks], count: 0 }
+        Self { capacity, resident: vec![false; n_blocks], count: 0, staged: None }
     }
 
     pub fn capacity(&self) -> usize {
@@ -42,27 +63,92 @@ impl ResidentSet {
         self.resident.iter().enumerate().filter(|(_, &r)| r).map(|(i, _)| i)
     }
 
-    /// Replace the resident set with (up to capacity) blocks, highest
-    /// priority first. Returns the blocks that were newly added — i.e.
-    /// the recall I/O the GPU pool must fetch over PCIe.
-    pub fn refresh(&mut self, ranked: &[BlockId]) -> Vec<BlockId> {
-        let take: Vec<BlockId> = ranked.iter().copied().take(self.capacity).collect();
-        let mut added = Vec::new();
+    /// Build the (resident flags, count, fetch list) of a ranked refresh
+    /// without applying it.
+    fn plan(&self, ranked: &[BlockId]) -> StagedSet {
         let mut next = vec![false; self.resident.len()];
-        for &b in &take {
+        let mut count = 0;
+        let mut fetch = Vec::new();
+        for &b in ranked.iter().take(self.capacity) {
             debug_assert!(b < self.resident.len(), "block {b} out of range");
             next[b] = true;
+            count += 1;
             if !self.resident[b] {
-                added.push(b);
+                fetch.push(b);
             }
         }
-        self.resident = next;
-        self.count = take.len();
+        StagedSet { resident: next, count, fetch }
+    }
+
+    /// Replace the resident set *immediately* with (up to capacity)
+    /// blocks, highest priority first. Returns the blocks that were
+    /// newly added. This is the prefill/admission path (the set is
+    /// established before decode starts, so there is no step window to
+    /// overlap with); decode-time recall must use [`stage`] +
+    /// [`commit_staged`] instead.
+    ///
+    /// [`stage`]: ResidentSet::stage
+    /// [`commit_staged`]: ResidentSet::commit_staged
+    pub fn refresh(&mut self, ranked: &[BlockId]) -> Vec<BlockId> {
+        let plan = self.plan(ranked);
+        let added = plan.fetch.clone();
+        self.resident = plan.resident;
+        self.count = plan.count;
+        self.staged = None;
         added
     }
 
+    /// Stage a re-ranked set (§3.4 recall tick). The visible set is
+    /// untouched; the staged set waits for [`commit_staged`]. Staging
+    /// again before a commit replaces the pending set (the newer ranking
+    /// wins — its fetch list is recomputed against the *visible* set,
+    /// which is still what the GPU pool holds). Returns the number of
+    /// blocks to fetch.
+    ///
+    /// [`commit_staged`]: ResidentSet::commit_staged
+    pub fn stage(&mut self, ranked: &[BlockId]) -> usize {
+        let plan = self.plan(ranked);
+        let fetch = plan.fetch.len();
+        self.staged = Some(plan);
+        fetch
+    }
+
+    /// Whether a staged refresh is waiting for its commit boundary.
+    pub fn has_staged(&self) -> bool {
+        self.staged.is_some()
+    }
+
+    /// The pending fetch list (empty when nothing is staged).
+    pub fn staged_fetch(&self) -> &[BlockId] {
+        self.staged.as_ref().map(|s| s.fetch.as_slice()).unwrap_or(&[])
+    }
+
+    /// The full staged block set, if any (tests / instrumentation).
+    pub fn staged_blocks(&self) -> Option<Vec<BlockId>> {
+        self.staged.as_ref().map(|s| {
+            s.resident.iter().enumerate().filter(|(_, &r)| r).map(|(i, _)| i).collect()
+        })
+    }
+
+    /// Make the staged set visible (the commit boundary: same layer,
+    /// next decode step — the staged fetch has had a whole step to
+    /// land). Returns the number of blocks that just became resident,
+    /// i.e. the recall I/O that arrived; 0 when nothing was staged.
+    pub fn commit_staged(&mut self) -> usize {
+        match self.staged.take() {
+            Some(s) => {
+                let fetched = s.fetch.len();
+                self.resident = s.resident;
+                self.count = s.count;
+                fetched
+            }
+            None => 0,
+        }
+    }
+
     /// Split a selected top-k set into (gpu_resident, cpu_side) — the
-    /// partition at the heart of §3.2's collaborative attention.
+    /// partition at the heart of §3.2's collaborative attention. Only
+    /// the *visible* set counts; staged blocks are still in flight.
     pub fn partition(&self, selected: &[BlockId]) -> (Vec<BlockId>, Vec<BlockId>) {
         let mut gpu = Vec::with_capacity(selected.len());
         let mut cpu = Vec::new();
@@ -108,6 +194,57 @@ mod tests {
         let mut r = ResidentSet::new(8, 2);
         r.refresh(&[0, 1, 2, 3]);
         assert_eq!(r.len(), 2);
+        assert_eq!(r.iter().collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn staged_set_is_invisible_until_commit() {
+        let mut r = ResidentSet::new(16, 3);
+        r.refresh(&[0, 1, 2]);
+        let fetch = r.stage(&[0, 5, 6]);
+        assert_eq!(fetch, 2, "5 and 6 must cross PCIe");
+        assert!(r.has_staged());
+        assert_eq!(r.staged_fetch(), &[5, 6]);
+        // visible set (and therefore partition) unchanged
+        assert_eq!(r.iter().collect::<Vec<_>>(), vec![0, 1, 2]);
+        let (gpu, cpu) = r.partition(&[0, 5]);
+        assert_eq!(gpu, vec![0]);
+        assert_eq!(cpu, vec![5]);
+        // commit flips visibility and reports the arrived I/O
+        assert_eq!(r.commit_staged(), 2);
+        assert!(!r.has_staged());
+        assert_eq!(r.iter().collect::<Vec<_>>(), vec![0, 5, 6]);
+        let (gpu, cpu) = r.partition(&[0, 5]);
+        assert_eq!(gpu, vec![0, 5]);
+        assert!(cpu.is_empty());
+    }
+
+    #[test]
+    fn commit_without_stage_is_a_noop() {
+        let mut r = ResidentSet::new(8, 2);
+        r.refresh(&[0, 1]);
+        assert_eq!(r.commit_staged(), 0);
+        assert_eq!(r.iter().collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn restaging_replaces_the_pending_set() {
+        let mut r = ResidentSet::new(8, 2);
+        r.refresh(&[0, 1]);
+        r.stage(&[2, 3]);
+        let fetch = r.stage(&[0, 4]);
+        assert_eq!(fetch, 1, "newer ranking wins; fetch recomputed vs visible set");
+        assert_eq!(r.commit_staged(), 1);
+        assert_eq!(r.iter().collect::<Vec<_>>(), vec![0, 4]);
+    }
+
+    #[test]
+    fn immediate_refresh_discards_staged() {
+        let mut r = ResidentSet::new(8, 2);
+        r.stage(&[2, 3]);
+        r.refresh(&[0, 1]);
+        assert!(!r.has_staged());
+        assert_eq!(r.commit_staged(), 0);
         assert_eq!(r.iter().collect::<Vec<_>>(), vec![0, 1]);
     }
 }

@@ -13,8 +13,11 @@
 //! Operands are *borrowed* ([`Operand`]): activations and weight row
 //! slices cross the boundary by reference, so the default interpreter
 //! path runs with no per-call deep copy and no resident second copy of
-//! the model. (The PJRT backend still materializes literals per call —
-//! see `runtime/pjrt.rs` for the caching item.)
+//! the model. Long-lived weights go one step further: the engine
+//! registers them once ([`Backend::register_weights`]) and passes
+//! [`Operand::Weights`] — a borrowed view plus the backend's cache
+//! handle — so a conversion-based backend (PJRT) reuses its literal
+//! instead of re-materializing the bytes every call.
 
 use std::str::FromStr;
 
@@ -75,13 +78,33 @@ impl<'a> From<&'a Tensor> for TensorView<'a> {
     }
 }
 
-/// One borrowed executable operand: an f32 tensor view or an i32 array
-/// (positions, lengths). Dtype strings match the manifest ("float32" /
-/// "int32").
+/// Handle to weight data registered with a backend via
+/// [`Backend::register_weights`]. The zero handle means "unregistered":
+/// backends that keep no operand-side state (the interpreter evaluates
+/// borrowed views in place) hand it out for everything, and consumers of
+/// a [`Operand::Weights`] operand must fall back to the borrowed view
+/// when they do not recognize the id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WeightId(pub u64);
+
+impl WeightId {
+    /// The "not registered / backend keeps no state" handle.
+    pub const UNREGISTERED: WeightId = WeightId(0);
+}
+
+/// One borrowed executable operand: an f32 tensor view, an i32 array
+/// (positions, lengths), or backend-registered weights. Dtype strings
+/// match the manifest ("float32" / "int32").
 #[derive(Clone, Copy)]
 pub enum Operand<'a> {
     F32(TensorView<'a>),
     I32 { shape: &'a [usize], data: &'a [i32] },
+    /// Long-lived weight data: the borrowed view (for manifest
+    /// validation and in-place interpreter evaluation) plus the handle
+    /// returned by [`Backend::register_weights`], letting a backend with
+    /// per-call operand conversion (PJRT literals) reuse its cached copy
+    /// instead of re-materializing the bytes every call.
+    Weights { id: WeightId, view: TensorView<'a> },
 }
 
 impl<'a> Operand<'a> {
@@ -95,24 +118,33 @@ impl<'a> Operand<'a> {
         Operand::F32(TensorView::new(shape, data))
     }
 
+    /// Registered-weights operand: borrowed view + backend handle.
+    pub fn weights(id: WeightId, shape: &'a [usize], data: &'a [f32]) -> Self {
+        Operand::Weights { id, view: TensorView::new(shape, data) }
+    }
+
     pub fn shape(&self) -> &'a [usize] {
         match *self {
             Operand::F32(v) => v.shape(),
             Operand::I32 { shape, .. } => shape,
+            Operand::Weights { view, .. } => view.shape(),
         }
     }
 
     pub fn dtype(&self) -> &'static str {
         match self {
-            Operand::F32(_) => "float32",
+            Operand::F32(_) | Operand::Weights { .. } => "float32",
             Operand::I32 { .. } => "int32",
         }
     }
 
-    /// The operand as an f32 view, or a clear error.
+    /// The operand as an f32 view, or a clear error. Registered weights
+    /// read through their borrowed view — this is the interpreter's
+    /// (no-op) fallback for every [`Operand::Weights`].
     pub fn f32(&self) -> crate::Result<TensorView<'a>> {
         match *self {
             Operand::F32(v) => Ok(v),
+            Operand::Weights { view, .. } => Ok(view),
             Operand::I32 { .. } => anyhow::bail!("operand is int32, expected float32"),
         }
     }
@@ -121,7 +153,17 @@ impl<'a> Operand<'a> {
     pub fn i32(&self) -> crate::Result<&'a [i32]> {
         match *self {
             Operand::I32 { data, .. } => Ok(data),
-            Operand::F32(_) => anyhow::bail!("operand is float32, expected int32"),
+            Operand::F32(_) | Operand::Weights { .. } => {
+                anyhow::bail!("operand is float32, expected int32")
+            }
+        }
+    }
+
+    /// The registration handle, if this is a weights operand with one.
+    pub fn weight_id(&self) -> Option<WeightId> {
+        match *self {
+            Operand::Weights { id, .. } if id != WeightId::UNREGISTERED => Some(id),
+            _ => None,
         }
     }
 }
@@ -144,6 +186,24 @@ pub trait Backend {
     /// Optional ahead-of-time preparation (compile caches etc.).
     fn warmup(&self, _manifest: &super::Manifest) -> crate::Result<()> {
         Ok(())
+    }
+
+    /// Register long-lived weight data, returning a handle the engine
+    /// embeds in [`Operand::Weights`] operands for the lifetime of this
+    /// backend. Backends with per-call operand conversion (PJRT) copy
+    /// the bytes into their device format once, here, and reuse that
+    /// copy on every execute; backends that evaluate borrowed views in
+    /// place (the interpreter) keep no state and return
+    /// [`WeightId::UNREGISTERED`], which consumers treat as "use the
+    /// view". Contract: a registered handle asserts the data is
+    /// *immutable* — every later [`Operand::Weights`] carrying this id
+    /// must view bytes identical to those registered, or caching
+    /// backends (which ignore the view on a cache hit) will silently
+    /// diverge from view-reading ones. Weights that change must be
+    /// re-registered under a fresh handle (or passed as plain
+    /// [`Operand::F32`]).
+    fn register_weights(&self, _view: TensorView) -> crate::Result<WeightId> {
+        Ok(WeightId::UNREGISTERED)
     }
 
     /// Per-entry preparation, called by the runtime *outside* the timed
@@ -235,6 +295,21 @@ mod tests {
         let t = Tensor::from_vec(&[3, 2], data.clone());
         let tv = Operand::t(&t).f32().unwrap();
         assert_eq!(tv.rows(1, 2), v.rows(1, 2));
+    }
+
+    #[test]
+    fn weights_operand_reads_like_f32_and_carries_its_id() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let op = Operand::weights(WeightId(7), t.shape(), t.data());
+        assert_eq!(op.dtype(), "float32");
+        assert_eq!(op.shape(), &[2, 2]);
+        assert_eq!(op.f32().unwrap().data(), t.data());
+        assert!(op.i32().is_err());
+        assert_eq!(op.weight_id(), Some(WeightId(7)));
+        // the zero handle means "unregistered" — no id to look up
+        let un = Operand::weights(WeightId::UNREGISTERED, t.shape(), t.data());
+        assert_eq!(un.weight_id(), None);
+        assert_eq!(Operand::t(&t).weight_id(), None);
     }
 
     #[test]

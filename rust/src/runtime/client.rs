@@ -11,7 +11,7 @@
 use std::time::Instant;
 
 use super::artifacts::Manifest;
-use super::backend::{Backend, BackendKind, Operand};
+use super::backend::{Backend, BackendKind, Operand, TensorView, WeightId};
 use super::interp::InterpreterBackend;
 use crate::metrics::Counters;
 use crate::model::ModelSpec;
@@ -112,6 +112,14 @@ impl Runtime {
         self.backend.warmup(&self.manifest)
     }
 
+    /// Register long-lived weight data with the active backend (see
+    /// [`Backend::register_weights`]): PJRT caches a literal and returns
+    /// its handle; the interpreter returns the unregistered handle and
+    /// keeps reading the borrowed view per call.
+    pub fn register_weights(&self, view: TensorView) -> crate::Result<WeightId> {
+        self.backend.register_weights(view)
+    }
+
     /// Execute entry `name` on the given operands; returns the entry's
     /// output tensors in manifest order. Operands are borrowed, so the
     /// interpreter path never copies them; the PJRT path materializes
@@ -146,6 +154,7 @@ impl Runtime {
             // opaque OOB mid-evaluation).
             let elems = match op {
                 Operand::F32(v) => v.data().len(),
+                Operand::Weights { view, .. } => view.data().len(),
                 Operand::I32 { data, .. } => data.len(),
             };
             anyhow::ensure!(

@@ -10,6 +10,13 @@
 //! cross-engine parity suite (`rust/tests/parity.rs`) runs unchanged
 //! against either backend.
 //!
+//! Batched entries fan their independent rows (sequences, cache blocks,
+//! prefill positions) out across scoped threads (`util::par`), so the
+//! default numerics plane scales with cores. Every row computes exactly
+//! the sequential math on disjoint output slices — results are
+//! bit-identical at any thread count, which is what keeps the parity
+//! suite meaningful.
+//!
 //! Shapes are validated upstream by [`crate::runtime::Runtime::execute`]
 //! against the manifest; evaluators here may index operands positionally.
 
@@ -19,19 +26,44 @@ use crate::engines::native::{dot, matvec, rmsnorm, rope_inplace, silu};
 use crate::engines::partial::Partial;
 use crate::model::ModelSpec;
 use crate::tensor::Tensor;
+use crate::util::par;
 
 /// Interpreter over one model spec (taken from the manifest's config).
 pub struct InterpreterBackend {
     spec: ModelSpec,
+    /// Scoped-thread width for batched entries.
+    threads: usize,
 }
 
 impl InterpreterBackend {
     pub fn new(spec: ModelSpec) -> Self {
-        Self { spec }
+        Self::with_threads(spec, par::default_threads())
+    }
+
+    /// Explicit thread width (benches / scaling studies; `1` forces the
+    /// sequential path everywhere).
+    pub fn with_threads(spec: ModelSpec, threads: usize) -> Self {
+        Self { spec, threads: threads.max(1) }
     }
 
     pub fn spec(&self) -> &ModelSpec {
         &self.spec
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Fan-out width for a loop of `rows` light independent items: stay
+    /// inline for tiny tiles, where a thread spawn would dominate the
+    /// per-row matvec work. Heavy rows (prefill positions, fused decode
+    /// sequences) bypass this and use the full width.
+    fn fan(&self, rows: usize) -> usize {
+        if rows < 4 {
+            1
+        } else {
+            self.threads
+        }
     }
 }
 
@@ -73,17 +105,27 @@ impl InterpreterBackend {
         let s = &self.spec;
         let (b, d) = (x.shape()[0], s.d_model);
         let (hq, hkv, dd) = (s.n_q_heads, s.n_kv_heads, s.head_dim);
+        let theta = s.rope_theta;
         let mut q = Tensor::zeros(&[b, hq, dd]);
         let mut k = Tensor::zeros(&[b, hkv, dd]);
         let mut v = Tensor::zeros(&[b, hkv, dd]);
-        let mut h = vec![0.0; d];
-        for r in 0..b {
-            rmsnorm(x.rows(r, 1), ln1.data(), &mut h);
-            matvec(&h, wq.data(), hq * dd, q.rows_mut(r, 1));
-            matvec(&h, wk.data(), hkv * dd, k.rows_mut(r, 1));
-            matvec(&h, wv.data(), hkv * dd, v.rows_mut(r, 1));
-            rope_inplace(q.rows_mut(r, 1), hq, dd, pos[r] as i64, s.rope_theta);
-            rope_inplace(k.rows_mut(r, 1), hkv, dd, pos[r] as i64, s.rope_theta);
+        {
+            let rows: Vec<_> = q
+                .data_mut()
+                .chunks_mut(hq * dd)
+                .zip(k.data_mut().chunks_mut(hkv * dd))
+                .zip(v.data_mut().chunks_mut(hkv * dd))
+                .map(|((qr, kr), vr)| (qr, kr, vr))
+                .collect();
+            par::par_for_each(rows, self.fan(b), |r, (qr, kr, vr)| {
+                let mut h = vec![0.0; d];
+                rmsnorm(x.rows(r, 1), ln1.data(), &mut h);
+                matvec(&h, wq.data(), hq * dd, qr);
+                matvec(&h, wk.data(), hkv * dd, kr);
+                matvec(&h, wv.data(), hkv * dd, vr);
+                rope_inplace(qr, hq, dd, pos[r] as i64, theta);
+                rope_inplace(kr, hkv, dd, pos[r] as i64, theta);
+            });
         }
         Ok(vec![q, k, v])
     }
@@ -96,12 +138,16 @@ impl InterpreterBackend {
         let s = &self.spec;
         let (b, d) = (x.shape()[0], s.d_model);
         let (hq, dd) = (s.n_q_heads, s.head_dim);
+        let theta = s.rope_theta;
         let mut q = Tensor::zeros(&[b, hq, dd]);
-        let mut h = vec![0.0; d];
-        for r in 0..b {
-            rmsnorm(x.rows(r, 1), ln1.data(), &mut h);
-            matvec(&h, wq.data(), hq * dd, q.rows_mut(r, 1));
-            rope_inplace(q.rows_mut(r, 1), hq, dd, pos[r] as i64, s.rope_theta);
+        {
+            let rows: Vec<_> = q.data_mut().chunks_mut(hq * dd).collect();
+            par::par_for_each(rows, self.fan(b), |r, qr| {
+                let mut h = vec![0.0; d];
+                rmsnorm(x.rows(r, 1), ln1.data(), &mut h);
+                matvec(&h, wq.data(), hq * dd, qr);
+                rope_inplace(qr, hq, dd, pos[r] as i64, theta);
+            });
         }
         Ok(vec![q])
     }
@@ -116,26 +162,31 @@ impl InterpreterBackend {
         let mut kmin = Tensor::full(&[b, nb, shp[3], shp[4]], f32::INFINITY);
         let mut kmax = Tensor::full(&[b, nb, shp[3], shp[4]], f32::NEG_INFINITY);
         let data = kb.data();
-        for blk in 0..b * nb {
-            let base = blk * bs * w;
-            let lo = &mut kmin.data_mut()[blk * w..(blk + 1) * w];
-            for t in 0..bs {
-                for (c, lo_c) in lo.iter_mut().enumerate() {
-                    let x = data[base + t * w + c];
-                    if x < *lo_c {
-                        *lo_c = x;
+        {
+            let rows: Vec<_> = kmin
+                .data_mut()
+                .chunks_mut(w)
+                .zip(kmax.data_mut().chunks_mut(w))
+                .collect();
+            par::par_for_each(rows, self.fan(b * nb), |blk, (lo, hi)| {
+                let base = blk * bs * w;
+                for t in 0..bs {
+                    for (c, lo_c) in lo.iter_mut().enumerate() {
+                        let x = data[base + t * w + c];
+                        if x < *lo_c {
+                            *lo_c = x;
+                        }
                     }
                 }
-            }
-            let hi = &mut kmax.data_mut()[blk * w..(blk + 1) * w];
-            for t in 0..bs {
-                for (c, hi_c) in hi.iter_mut().enumerate() {
-                    let x = data[base + t * w + c];
-                    if x > *hi_c {
-                        *hi_c = x;
+                for t in 0..bs {
+                    for (c, hi_c) in hi.iter_mut().enumerate() {
+                        let x = data[base + t * w + c];
+                        if x > *hi_c {
+                            *hi_c = x;
+                        }
                     }
                 }
-            }
+            });
         }
         Ok(vec![kmin, kmax])
     }
@@ -150,21 +201,24 @@ impl InterpreterBackend {
         let g = hq / hkv;
         let w = hkv * dd;
         let mut out = Tensor::zeros(&[b, nb]);
-        for bi in 0..b {
-            let qrow = q.rows(bi, 1);
-            for blk in 0..nb {
-                let lo = &kmin.data()[(bi * nb + blk) * w..(bi * nb + blk + 1) * w];
-                let hi = &kmax.data()[(bi * nb + blk) * w..(bi * nb + blk + 1) * w];
-                let mut sc = 0.0f32;
-                for h in 0..hq {
-                    let kvh = h / g;
-                    for c in 0..dd {
-                        let qv = qrow[h * dd + c];
-                        sc += (qv * lo[kvh * dd + c]).max(qv * hi[kvh * dd + c]);
+        {
+            let rows: Vec<_> = out.data_mut().chunks_mut(nb).collect();
+            par::par_for_each(rows, self.fan(b), |bi, orow| {
+                let qrow = q.rows(bi, 1);
+                for (blk, o) in orow.iter_mut().enumerate() {
+                    let lo = &kmin.data()[(bi * nb + blk) * w..(bi * nb + blk + 1) * w];
+                    let hi = &kmax.data()[(bi * nb + blk) * w..(bi * nb + blk + 1) * w];
+                    let mut sc = 0.0f32;
+                    for h in 0..hq {
+                        let kvh = h / g;
+                        for c in 0..dd {
+                            let qv = qrow[h * dd + c];
+                            sc += (qv * lo[kvh * dd + c]).max(qv * hi[kvh * dd + c]);
+                        }
                     }
+                    *o = sc;
                 }
-                out.data_mut()[bi * nb + blk] = sc;
-            }
+            });
         }
         Ok(vec![out])
     }
@@ -184,34 +238,45 @@ impl InterpreterBackend {
         let mut acc = Tensor::zeros(&[b, hq, dd]);
         let mut m = Tensor::zeros(&[b, hq]);
         let mut l = Tensor::zeros(&[b, hq]);
-        for bi in 0..b {
-            let qrow = q.rows(bi, 1);
-            let mut p = Partial::empty(hq, dd);
-            for slot in 0..slots {
-                let base = (bi * slots + slot) * bs * w;
-                let kslab = &k.data()[base..base + bs * w];
-                let vslab = &v.data()[base..base + bs * w];
-                let mrow = &mask.data()[(bi * slots + slot) * bs..(bi * slots + slot + 1) * bs];
-                let mut ps = Partial::empty(hq, dd);
-                for t in 0..bs {
-                    if mrow[t] <= 0.0 {
-                        continue;
+        {
+            let rows: Vec<_> = acc
+                .data_mut()
+                .chunks_mut(hq * dd)
+                .zip(m.data_mut().chunks_mut(hq))
+                .zip(l.data_mut().chunks_mut(hq))
+                .map(|((ar, mr), lr)| (ar, mr, lr))
+                .collect();
+            par::par_for_each(rows, self.fan(b), |bi, (ar, mr, lr)| {
+                let qrow = q.rows(bi, 1);
+                let mut p = Partial::empty(hq, dd);
+                for slot in 0..slots {
+                    let base = (bi * slots + slot) * bs * w;
+                    let kslab = &k.data()[base..base + bs * w];
+                    let vslab = &v.data()[base..base + bs * w];
+                    let mrow =
+                        &mask.data()[(bi * slots + slot) * bs..(bi * slots + slot + 1) * bs];
+                    let mut ps = Partial::empty(hq, dd);
+                    for t in 0..bs {
+                        if mrow[t] <= 0.0 {
+                            continue;
+                        }
+                        let krow = &kslab[t * w..(t + 1) * w];
+                        let vrow = &vslab[t * w..(t + 1) * w];
+                        for h in 0..hq {
+                            let kvh = h / g;
+                            let sc = dot(
+                                &qrow[h * dd..(h + 1) * dd],
+                                &krow[kvh * dd..(kvh + 1) * dd],
+                            ) * scale;
+                            ps.update_token(h, sc, &vrow[kvh * dd..(kvh + 1) * dd]);
+                        }
                     }
-                    let krow = &kslab[t * w..(t + 1) * w];
-                    let vrow = &vslab[t * w..(t + 1) * w];
-                    for h in 0..hq {
-                        let kvh = h / g;
-                        let sc =
-                            dot(&qrow[h * dd..(h + 1) * dd], &krow[kvh * dd..(kvh + 1) * dd])
-                                * scale;
-                        ps.update_token(h, sc, &vrow[kvh * dd..(kvh + 1) * dd]);
-                    }
+                    p.merge(&ps);
                 }
-                p.merge(&ps);
-            }
-            acc.rows_mut(bi, 1).copy_from_slice(&p.acc);
-            m.rows_mut(bi, 1).copy_from_slice(&p.m);
-            l.rows_mut(bi, 1).copy_from_slice(&p.l);
+                ar.copy_from_slice(&p.acc);
+                mr.copy_from_slice(&p.m);
+                lr.copy_from_slice(&p.l);
+            });
         }
         Ok(vec![acc, m, l])
     }
@@ -248,35 +313,38 @@ impl InterpreterBackend {
         let (b, d, dff) = (x.shape()[0], s.d_model, s.d_ff);
         let (hq, dd) = (s.n_q_heads, s.head_dim);
         let mut out = Tensor::zeros(&[b, d]);
-        let mut att = vec![0.0; hq * dd];
-        let mut proj = vec![0.0; d];
-        let mut h = vec![0.0; d];
-        let mut mid = vec![0.0; dff];
-        let mut back = vec![0.0; d];
-        for r in 0..b {
-            let accr = acc.rows(r, 1);
-            let lr = l.rows(r, 1);
-            for hh in 0..hq {
-                let denom = lr[hh].max(1e-30);
-                for c in 0..dd {
-                    att[hh * dd + c] = accr[hh * dd + c] / denom;
+        {
+            let rows: Vec<_> = out.data_mut().chunks_mut(d).collect();
+            par::par_for_each(rows, self.fan(b), |r, orow| {
+                let accr = acc.rows(r, 1);
+                let lr = l.rows(r, 1);
+                let mut att = vec![0.0; hq * dd];
+                for hh in 0..hq {
+                    let denom = lr[hh].max(1e-30);
+                    for c in 0..dd {
+                        att[hh * dd + c] = accr[hh * dd + c] / denom;
+                    }
                 }
-            }
-            let mut xr = x.rows(r, 1).to_vec();
-            matvec(&att, wo.data(), d, &mut proj);
-            for i in 0..d {
-                xr[i] += proj[i];
-            }
-            rmsnorm(&xr, ln2.data(), &mut h);
-            matvec(&h, w1.data(), dff, &mut mid);
-            for v in mid.iter_mut() {
-                *v = silu(*v);
-            }
-            matvec(&mid, w2.data(), d, &mut back);
-            for i in 0..d {
-                xr[i] += back[i];
-            }
-            out.rows_mut(r, 1).copy_from_slice(&xr);
+                let mut xr = x.rows(r, 1).to_vec();
+                let mut proj = vec![0.0; d];
+                matvec(&att, wo.data(), d, &mut proj);
+                for i in 0..d {
+                    xr[i] += proj[i];
+                }
+                let mut h = vec![0.0; d];
+                rmsnorm(&xr, ln2.data(), &mut h);
+                let mut mid = vec![0.0; dff];
+                matvec(&h, w1.data(), dff, &mut mid);
+                for v in mid.iter_mut() {
+                    *v = silu(*v);
+                }
+                let mut back = vec![0.0; d];
+                matvec(&mid, w2.data(), d, &mut back);
+                for i in 0..d {
+                    xr[i] += back[i];
+                }
+                orow.copy_from_slice(&xr);
+            });
         }
         Ok(vec![out])
     }
@@ -287,20 +355,25 @@ impl InterpreterBackend {
         let s = &self.spec;
         let (b, d, vsz) = (x.shape()[0], s.d_model, s.vocab);
         let mut logits = Tensor::zeros(&[b, vsz]);
-        let mut h = vec![0.0; d];
         let emb = embed.data();
-        for r in 0..b {
-            rmsnorm(x.rows(r, 1), ln_f.data(), &mut h);
-            let lrow = logits.rows_mut(r, 1);
-            for (t, lo) in lrow.iter_mut().enumerate() {
-                *lo = dot(&h, &emb[t * d..(t + 1) * d]);
-            }
+        {
+            let rows: Vec<_> = logits.data_mut().chunks_mut(vsz).collect();
+            par::par_for_each(rows, self.fan(b), |r, lrow| {
+                let mut h = vec![0.0; d];
+                rmsnorm(x.rows(r, 1), ln_f.data(), &mut h);
+                for (t, lo) in lrow.iter_mut().enumerate() {
+                    *lo = dot(&h, &emb[t * d..(t + 1) * d]);
+                }
+            });
         }
         Ok(vec![logits])
     }
 
     /// Fused full-attention decode step (FullKV baseline / oracle):
     /// attention over the first `pos[b]` cache rows plus the new token.
+    /// Sequences are independent, so each batch row runs on its own
+    /// scoped thread (per-row K/V lands in a local buffer and is
+    /// scattered into the layer-major outputs afterwards).
     /// Returns `(logits [B,V], k_new [L,B,Hkv,D], v_new [L,B,Hkv,D])`.
     fn decode_full(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
         let x = ins[0].f32()?;
@@ -319,86 +392,109 @@ impl InterpreterBackend {
         let w = hkv * dd;
         let g = hq / hkv;
         let scale = s.scale();
+        let theta = s.rope_theta;
         let mut logits = Tensor::zeros(&[b, vsz]);
         let mut k_new = Tensor::zeros(&[l_layers, b, hkv, dd]);
         let mut v_new = Tensor::zeros(&[l_layers, b, hkv, dd]);
         let (kd, vd) = (kcache.data(), vcache.data());
-        for bi in 0..b {
-            let mut xr = x.rows(bi, 1).to_vec();
-            let n_tok = (pos[bi].max(0) as usize).min(s_max);
-            for layer in 0..l_layers {
-                let (ln1, wq, wk, wv) = (
-                    st[0].rows(layer, 1),
-                    st[1].rows(layer, 1),
-                    st[2].rows(layer, 1),
-                    st[3].rows(layer, 1),
-                );
-                let (wo, ln2, w1, w2) = (
-                    st[4].rows(layer, 1),
-                    st[5].rows(layer, 1),
-                    st[6].rows(layer, 1),
-                    st[7].rows(layer, 1),
-                );
-                let mut h = vec![0.0; d];
-                rmsnorm(&xr, ln1, &mut h);
-                let mut qv = vec![0.0; hq * dd];
-                let mut kv = vec![0.0; w];
-                let mut vv = vec![0.0; w];
-                matvec(&h, wq, hq * dd, &mut qv);
-                matvec(&h, wk, w, &mut kv);
-                matvec(&h, wv, w, &mut vv);
-                rope_inplace(&mut qv, hq, dd, pos[bi] as i64, s.rope_theta);
-                rope_inplace(&mut kv, hkv, dd, pos[bi] as i64, s.rope_theta);
+        let mut kbufs: Vec<Vec<f32>> = vec![vec![0.0; l_layers * w]; b];
+        let mut vbufs: Vec<Vec<f32>> = vec![vec![0.0; l_layers * w]; b];
+        {
+            let st = &st;
+            let rows: Vec<_> = logits
+                .data_mut()
+                .chunks_mut(vsz)
+                .zip(kbufs.iter_mut())
+                .zip(vbufs.iter_mut())
+                .map(|((lrow, kb), vb)| (lrow, kb, vb))
+                .collect();
+            par::par_for_each(rows, self.threads, |bi, (lrow, kbuf, vbuf)| {
+                let mut xr = x.rows(bi, 1).to_vec();
+                let n_tok = (pos[bi].max(0) as usize).min(s_max);
+                for layer in 0..l_layers {
+                    let (ln1, wq, wk, wv) = (
+                        st[0].rows(layer, 1),
+                        st[1].rows(layer, 1),
+                        st[2].rows(layer, 1),
+                        st[3].rows(layer, 1),
+                    );
+                    let (wo, ln2, w1, w2) = (
+                        st[4].rows(layer, 1),
+                        st[5].rows(layer, 1),
+                        st[6].rows(layer, 1),
+                        st[7].rows(layer, 1),
+                    );
+                    let mut h = vec![0.0; d];
+                    rmsnorm(&xr, ln1, &mut h);
+                    let mut qv = vec![0.0; hq * dd];
+                    let mut kv = vec![0.0; w];
+                    let mut vv = vec![0.0; w];
+                    matvec(&h, wq, hq * dd, &mut qv);
+                    matvec(&h, wk, w, &mut kv);
+                    matvec(&h, wv, w, &mut vv);
+                    rope_inplace(&mut qv, hq, dd, pos[bi] as i64, theta);
+                    rope_inplace(&mut kv, hkv, dd, pos[bi] as i64, theta);
 
-                let base = (layer * b + bi) * s_max * w;
-                let mut p = Partial::empty(hq, dd);
-                for t in 0..n_tok {
-                    let krow = &kd[base + t * w..base + (t + 1) * w];
-                    let vrow = &vd[base + t * w..base + (t + 1) * w];
+                    let base = (layer * b + bi) * s_max * w;
+                    let mut p = Partial::empty(hq, dd);
+                    for t in 0..n_tok {
+                        let krow = &kd[base + t * w..base + (t + 1) * w];
+                        let vrow = &vd[base + t * w..base + (t + 1) * w];
+                        for hh in 0..hq {
+                            let kvh = hh / g;
+                            let sc = dot(
+                                &qv[hh * dd..(hh + 1) * dd],
+                                &krow[kvh * dd..(kvh + 1) * dd],
+                            ) * scale;
+                            p.update_token(hh, sc, &vrow[kvh * dd..(kvh + 1) * dd]);
+                        }
+                    }
+                    // the new token attends to itself
                     for hh in 0..hq {
                         let kvh = hh / g;
-                        let sc = dot(&qv[hh * dd..(hh + 1) * dd], &krow[kvh * dd..(kvh + 1) * dd])
+                        let sc = dot(&qv[hh * dd..(hh + 1) * dd], &kv[kvh * dd..(kvh + 1) * dd])
                             * scale;
-                        p.update_token(hh, sc, &vrow[kvh * dd..(kvh + 1) * dd]);
+                        p.update_token(hh, sc, &vv[kvh * dd..(kvh + 1) * dd]);
                     }
-                }
-                // the new token attends to itself
-                for hh in 0..hq {
-                    let kvh = hh / g;
-                    let sc =
-                        dot(&qv[hh * dd..(hh + 1) * dd], &kv[kvh * dd..(kvh + 1) * dd]) * scale;
-                    p.update_token(hh, sc, &vv[kvh * dd..(kvh + 1) * dd]);
-                }
 
-                let att = p.finalize();
-                let mut proj = vec![0.0; d];
-                matvec(&att, wo, d, &mut proj);
-                for i in 0..d {
-                    xr[i] += proj[i];
-                }
-                let mut h2 = vec![0.0; d];
-                rmsnorm(&xr, ln2, &mut h2);
-                let mut mid = vec![0.0; dff];
-                matvec(&h2, w1, dff, &mut mid);
-                for v in mid.iter_mut() {
-                    *v = silu(*v);
-                }
-                let mut back = vec![0.0; d];
-                matvec(&mid, w2, d, &mut back);
-                for i in 0..d {
-                    xr[i] += back[i];
-                }
+                    let att = p.finalize();
+                    let mut proj = vec![0.0; d];
+                    matvec(&att, wo, d, &mut proj);
+                    for i in 0..d {
+                        xr[i] += proj[i];
+                    }
+                    let mut h2 = vec![0.0; d];
+                    rmsnorm(&xr, ln2, &mut h2);
+                    let mut mid = vec![0.0; dff];
+                    matvec(&h2, w1, dff, &mut mid);
+                    for v in mid.iter_mut() {
+                        *v = silu(*v);
+                    }
+                    let mut back = vec![0.0; d];
+                    matvec(&mid, w2, d, &mut back);
+                    for i in 0..d {
+                        xr[i] += back[i];
+                    }
 
+                    kbuf[layer * w..(layer + 1) * w].copy_from_slice(&kv);
+                    vbuf[layer * w..(layer + 1) * w].copy_from_slice(&vv);
+                }
+                let mut hf = vec![0.0; d];
+                rmsnorm(&xr, ln_f.data(), &mut hf);
+                let emb = embed.data();
+                for (t, lo) in lrow.iter_mut().enumerate() {
+                    *lo = dot(&hf, &emb[t * d..(t + 1) * d]);
+                }
+            });
+        }
+        // Scatter per-sequence K/V buffers into the layer-major outputs.
+        for bi in 0..b {
+            for layer in 0..l_layers {
                 let off = (layer * b + bi) * w;
-                k_new.data_mut()[off..off + w].copy_from_slice(&kv);
-                v_new.data_mut()[off..off + w].copy_from_slice(&vv);
-            }
-            let mut hf = vec![0.0; d];
-            rmsnorm(&xr, ln_f.data(), &mut hf);
-            let emb = embed.data();
-            let lrow = logits.rows_mut(bi, 1);
-            for (t, lo) in lrow.iter_mut().enumerate() {
-                *lo = dot(&hf, &emb[t * d..(t + 1) * d]);
+                k_new.data_mut()[off..off + w]
+                    .copy_from_slice(&kbufs[bi][layer * w..(layer + 1) * w]);
+                v_new.data_mut()[off..off + w]
+                    .copy_from_slice(&vbufs[bi][layer * w..(layer + 1) * w]);
             }
         }
         Ok(vec![logits, k_new, v_new])
@@ -407,6 +503,10 @@ impl InterpreterBackend {
     /// Fused causal prefill for one sequence padded to `S = max_seq`.
     /// Only the first `length` rows are computed; padded rows of the
     /// output caches stay zero (consumers only read `< length`).
+    /// Within each layer the per-position projections are independent,
+    /// and — once every position's Q/K/V exists — so is each position's
+    /// causal attention + MLP (position `t` reads `ks/vs[0..=t]` and
+    /// writes only `xs[t]`); both phases fan out across scoped threads.
     /// Returns `(k [L,S,Hkv,D], v [L,S,Hkv,D], h_last [d], logits [V])`.
     fn prefill(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
         let x_seq = ins[0].f32()?;
@@ -424,6 +524,7 @@ impl InterpreterBackend {
         let w = hkv * dd;
         let g = hq / hkv;
         let scale = s.scale();
+        let theta = s.rope_theta;
         let mut k_out = Tensor::zeros(&[l_layers, s_max, hkv, dd]);
         let mut v_out = Tensor::zeros(&[l_layers, s_max, hkv, dd]);
         let mut xs: Vec<Vec<f32>> = (0..n).map(|t| x_seq.rows(t, 1).to_vec()).collect();
@@ -441,56 +542,64 @@ impl InterpreterBackend {
                 st[7].rows(layer, 1),
             );
             // project every position first (they attend within the layer)
-            let mut qs = Vec::with_capacity(n);
-            let mut ks = Vec::with_capacity(n);
-            let mut vs = Vec::with_capacity(n);
-            let mut h = vec![0.0; d];
-            for (t, xr) in xs.iter().enumerate() {
-                rmsnorm(xr, ln1, &mut h);
-                let mut qv = vec![0.0; hq * dd];
-                let mut kv = vec![0.0; w];
-                let mut vv = vec![0.0; w];
-                matvec(&h, wq, hq * dd, &mut qv);
-                matvec(&h, wk, w, &mut kv);
-                matvec(&h, wv, w, &mut vv);
-                rope_inplace(&mut qv, hq, dd, t as i64, s.rope_theta);
-                rope_inplace(&mut kv, hkv, dd, t as i64, s.rope_theta);
-                qs.push(qv);
-                ks.push(kv);
-                vs.push(vv);
+            let mut qs: Vec<Vec<f32>> = vec![vec![0.0; hq * dd]; n];
+            let mut ks: Vec<Vec<f32>> = vec![vec![0.0; w]; n];
+            let mut vs: Vec<Vec<f32>> = vec![vec![0.0; w]; n];
+            {
+                let xs = &xs;
+                let rows: Vec<_> = qs
+                    .iter_mut()
+                    .zip(ks.iter_mut())
+                    .zip(vs.iter_mut())
+                    .map(|((qv, kv), vv)| (qv, kv, vv))
+                    .collect();
+                par::par_for_each(rows, self.threads, |t, (qv, kv, vv)| {
+                    let mut h = vec![0.0; d];
+                    rmsnorm(&xs[t], ln1, &mut h);
+                    matvec(&h, wq, hq * dd, qv);
+                    matvec(&h, wk, w, kv);
+                    matvec(&h, wv, w, vv);
+                    rope_inplace(qv, hq, dd, t as i64, theta);
+                    rope_inplace(kv, hkv, dd, t as i64, theta);
+                });
             }
-            for t in 0..n {
-                // causal attention over [0, t]
-                let mut p = Partial::empty(hq, dd);
-                for u in 0..=t {
-                    for hh in 0..hq {
-                        let kvh = hh / g;
-                        let sc = dot(
-                            &qs[t][hh * dd..(hh + 1) * dd],
-                            &ks[u][kvh * dd..(kvh + 1) * dd],
-                        ) * scale;
-                        p.update_token(hh, sc, &vs[u][kvh * dd..(kvh + 1) * dd]);
+            {
+                let (qs, ks, vs) = (&qs, &ks, &vs);
+                let rows: Vec<_> = xs.iter_mut().collect();
+                // strided: position t costs O(t), so contiguous chunks
+                // would leave the early threads idle on the triangle
+                par::par_for_each_strided(rows, self.threads, |t, xr| {
+                    // causal attention over [0, t]
+                    let mut p = Partial::empty(hq, dd);
+                    for u in 0..=t {
+                        for hh in 0..hq {
+                            let kvh = hh / g;
+                            let sc = dot(
+                                &qs[t][hh * dd..(hh + 1) * dd],
+                                &ks[u][kvh * dd..(kvh + 1) * dd],
+                            ) * scale;
+                            p.update_token(hh, sc, &vs[u][kvh * dd..(kvh + 1) * dd]);
+                        }
                     }
-                }
-                let att = p.finalize();
-                let xr = &mut xs[t];
-                let mut proj = vec![0.0; d];
-                matvec(&att, wo, d, &mut proj);
-                for i in 0..d {
-                    xr[i] += proj[i];
-                }
-                let mut h2 = vec![0.0; d];
-                rmsnorm(xr, ln2, &mut h2);
-                let mut mid = vec![0.0; dff];
-                matvec(&h2, w1, dff, &mut mid);
-                for v in mid.iter_mut() {
-                    *v = silu(*v);
-                }
-                let mut back = vec![0.0; d];
-                matvec(&mid, w2, d, &mut back);
-                for i in 0..d {
-                    xr[i] += back[i];
-                }
+                    let att = p.finalize();
+                    let mut proj = vec![0.0; d];
+                    matvec(&att, wo, d, &mut proj);
+                    for i in 0..d {
+                        xr[i] += proj[i];
+                    }
+                    let mut h2 = vec![0.0; d];
+                    rmsnorm(&xr[..], ln2, &mut h2);
+                    let mut mid = vec![0.0; dff];
+                    matvec(&h2, w1, dff, &mut mid);
+                    for v in mid.iter_mut() {
+                        *v = silu(*v);
+                    }
+                    let mut back = vec![0.0; d];
+                    matvec(&mid, w2, d, &mut back);
+                    for i in 0..d {
+                        xr[i] += back[i];
+                    }
+                });
             }
             let base = layer * s_max * w;
             for t in 0..n {
@@ -586,5 +695,36 @@ mod tests {
         let (_, be, m) = interp();
         let entry = m.entry("merge").unwrap();
         assert!(be.execute(entry, "not_an_entry", &[]).is_err());
+    }
+
+    #[test]
+    fn thread_count_never_changes_results() {
+        // One batched entry end to end at widths 1/2/8: outputs must be
+        // bit-identical (rows are disjoint; no accumulation reorder).
+        // Batch 8 so the light-entry fan gate actually goes parallel.
+        let mut spec = builtin_preset("test-tiny").unwrap();
+        spec.batch = 8;
+        let m = Manifest::synthesize(&spec).unwrap();
+        let entry = m.entry("lm_head").unwrap();
+        let (b, d, vsz) = (spec.batch, spec.d_model, spec.vocab);
+        let x = Tensor::from_vec(
+            &[b, d],
+            (0..b * d).map(|i| ((i as f32) * 0.13).sin()).collect(),
+        );
+        let ln_f = Tensor::full(&[d], 1.0);
+        let emb = Tensor::from_vec(
+            &[vsz, d],
+            (0..vsz * d).map(|i| ((i as f32) * 0.07).cos()).collect(),
+        );
+        let ops = [Operand::t(&x), Operand::t(&ln_f), Operand::t(&emb)];
+        let base = InterpreterBackend::with_threads(spec.clone(), 1)
+            .execute(entry, "lm_head", &ops)
+            .unwrap();
+        for threads in [2, 8] {
+            let outs = InterpreterBackend::with_threads(spec.clone(), threads)
+                .execute(entry, "lm_head", &ops)
+                .unwrap();
+            assert_eq!(outs[0].data(), base[0].data(), "threads={threads}");
+        }
     }
 }

@@ -19,6 +19,6 @@ pub mod interp;
 pub mod pjrt;
 
 pub use artifacts::{ArtifactEntry, Manifest, TensorSpec};
-pub use backend::{Backend, BackendKind, Operand, TensorView};
+pub use backend::{Backend, BackendKind, Operand, TensorView, WeightId};
 pub use client::Runtime;
 pub use interp::InterpreterBackend;

@@ -6,32 +6,39 @@
 //! the in-tree API stub (`vendor/xla`), which type-checks this path but
 //! errors at runtime; swap in the real crate to execute on PJRT.
 //!
-//! Known cost (ROADMAP): operands are materialized into literals per
-//! call, including the weight slices — the pre-backend design cached
-//! weight literals at engine construction (perf §L3). Restoring that
-//! here needs a safe identity for borrowed operands (e.g. a weight
-//! registration API on [`Backend`]); do that before benchmarking this
-//! path in anger.
+//! Weight operands are cached: the engine registers its long-lived
+//! weight tensors once ([`Backend::register_weights`] materializes the
+//! literal here and hands back a [`WeightId`]), and every subsequent
+//! [`Operand::Weights`] execute reuses that literal instead of copying
+//! the bytes per call — restoring the pre-backend design's
+//! weight-literal caching. Activations (plain `F32`/`I32` operands)
+//! still materialize per call, as they must.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::artifacts::Manifest;
-use super::backend::{Backend, Operand};
+use super::backend::{Backend, Operand, TensorView, WeightId};
 use crate::tensor::Tensor;
 
 /// Compiled artifact set on the PJRT CPU client.
 ///
-/// Executables are compiled lazily on first use and cached.
+/// Executables are compiled lazily on first use and cached; weight
+/// literals are cached at registration time.
 pub struct PjrtBackend {
     client: PjRtClient,
     dir: PathBuf,
     /// entry name -> HLO file name (from the manifest).
     files: HashMap<String, String>,
     exes: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+    /// Registered weight literals, keyed by the handle given out.
+    weights: Mutex<HashMap<u64, Literal>>,
+    /// Next registration handle; 0 is reserved for "unregistered".
+    next_weight_id: AtomicU64,
 }
 
 impl PjrtBackend {
@@ -43,7 +50,14 @@ impl PjrtBackend {
             .iter()
             .map(|(name, e)| (name.clone(), e.file.clone()))
             .collect();
-        Ok(Self { client, dir: manifest.dir.clone(), files, exes: Mutex::new(HashMap::new()) })
+        Ok(Self {
+            client,
+            dir: manifest.dir.clone(),
+            files,
+            exes: Mutex::new(HashMap::new()),
+            weights: Mutex::new(HashMap::new()),
+            next_weight_id: AtomicU64::new(1),
+        })
     }
 
     fn executable(&self, name: &str) -> crate::Result<Arc<PjRtLoadedExecutable>> {
@@ -89,17 +103,43 @@ impl Backend for PjrtBackend {
         Ok(())
     }
 
+    /// Materialize the weight literal once; every later execute with
+    /// this handle borrows the cached copy.
+    fn register_weights(&self, view: TensorView) -> crate::Result<WeightId> {
+        let lit = view_to_literal(view)?;
+        let id = self.next_weight_id.fetch_add(1, Ordering::Relaxed);
+        self.weights.lock().unwrap().insert(id, lit);
+        Ok(WeightId(id))
+    }
+
     fn execute(
         &self,
         entry: &super::artifacts::ArtifactEntry,
         name: &str,
         inputs: &[Operand],
     ) -> crate::Result<Vec<Tensor>> {
-        let lits: Vec<Literal> = inputs
+        // Activations materialize per call; registered weights resolve
+        // to their cached literal (guard held across the execute — the
+        // backend is single-threaded by contract).
+        let cache = self.weights.lock().unwrap();
+        let lits: Vec<Option<Literal>> = inputs
             .iter()
-            .map(operand_to_literal)
+            .map(|op| match op.weight_id() {
+                Some(id) if cache.contains_key(&id.0) => Ok(None),
+                _ => operand_to_literal(op).map(Some),
+            })
             .collect::<crate::Result<_>>()?;
-        let refs: Vec<&Literal> = lits.iter().collect();
+        let refs: Vec<&Literal> = inputs
+            .iter()
+            .zip(&lits)
+            .map(|(op, owned)| match owned {
+                Some(l) => l,
+                None => {
+                    let id = op.weight_id().expect("cache hit implies a weight id");
+                    cache.get(&id.0).expect("checked above")
+                }
+            })
+            .collect();
         let exe = self.executable(name)?;
         let result = exe
             .execute::<&Literal>(&refs)
@@ -121,17 +161,21 @@ impl Backend for PjrtBackend {
     }
 }
 
+/// Build an f32 literal from a borrowed view (single copy, raw bytes).
+fn view_to_literal(v: TensorView) -> crate::Result<Literal> {
+    let data = v.data();
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, v.shape(), bytes)
+        .map_err(|e| anyhow::anyhow!("literal from operand {:?}: {e:?}", v.shape()))
+}
+
 /// Build a literal from a borrowed operand (single copy, via raw bytes).
+/// Weights that missed the registration cache fall back to their view.
 fn operand_to_literal(op: &Operand) -> crate::Result<Literal> {
     match *op {
-        Operand::F32(v) => {
-            let data = v.data();
-            let bytes = unsafe {
-                std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
-            };
-            Literal::create_from_shape_and_untyped_data(ElementType::F32, v.shape(), bytes)
-                .map_err(|e| anyhow::anyhow!("literal from operand {:?}: {e:?}", v.shape()))
-        }
+        Operand::F32(v) | Operand::Weights { view: v, .. } => view_to_literal(v),
         Operand::I32 { shape, data } => vec_i32_literal(shape, data),
     }
 }

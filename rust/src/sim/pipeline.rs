@@ -93,7 +93,11 @@ pub fn price_step(
         } else {
             0.0
         };
-        recall_bytes_total += l.recall_blocks as f64 * block_bytes;
+        // Recall traffic is priced from the *staged* fetch lists — the
+        // bytes whose PCIe transfer was issued this step (the commit one
+        // step later is bookkeeping; the wire time is paid here, against
+        // the full-step window below).
+        recall_bytes_total += l.recall_staged_blocks as f64 * block_bytes;
 
         let stall = match method {
             Method::FullKv => 0.0,
@@ -117,8 +121,9 @@ pub fn price_step(
         prev_layer_us = t_attn + t_other + stall;
         out.step_us += t_attn + t_other + stall;
     }
-    // Scout's periodic recall is asynchronous with a full-step window;
-    // only the overflow stalls. Other methods have no recall term.
+    // Scout's periodic recall is asynchronous with a full-step window
+    // (staged at step t, committed at the same layer of step t+1); only
+    // the overflow stalls. Other methods have no recall term.
     if recall_bytes_total > 0.0 {
         let t_recall =
             recall_bytes_total / block_bytes * m.pcie_msg_overhead_us + recall_bytes_total / m.pcie_line_bw;
@@ -225,6 +230,9 @@ impl MethodSim {
         };
         let mut cpu_ratio = w.cpu_ratio0;
         let mut since_recall = 0usize;
+        // Per-layer blocks staged last step, committing this step (the
+        // coordinator reports the commit one step after the stage).
+        let mut pending_commit = 0usize;
         for _step in 0..w.steps {
             let mut stats = StepStats::new(m.n_layers, eff_batch, self.layer_ahead);
             let mut recall_now = false;
@@ -269,11 +277,22 @@ impl MethodSim {
                         l.cpu_blocks = cpu_blocks * eff_batch;
                         l.gpu_blocks = (kb - cpu_blocks.min(kb)) * eff_batch;
                         l.selected_blocks = kb * eff_batch;
+                        // Staged fetch is priced this step (full-step
+                        // window); the matching commit was staged one
+                        // step earlier — same skew as the coordinator.
+                        l.recall_blocks = pending_commit;
                         if recall_now {
-                            l.recall_blocks = cpu_blocks * eff_batch;
+                            l.recall_staged_blocks = cpu_blocks * eff_batch;
                         }
                     }
                 }
+            }
+            if self.method == Method::Scout {
+                pending_commit = if recall_now {
+                    ((kb as f64 * cpu_ratio).round() as usize) * eff_batch
+                } else {
+                    0
+                };
             }
             let mut priced = price_step(self.method, &stats, m, block_bytes, w.block_size);
             // queueing stretch for capacity-bound FullKV

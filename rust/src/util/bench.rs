@@ -24,8 +24,19 @@ impl BenchResult {
     }
 }
 
-/// Run `f` `iters` times after `warmup` unmeasured runs.
+/// Smoke mode: when `SCOUT_BENCH_SMOKE` is set (`make bench-smoke`),
+/// [`bench`] clamps to a single measured iteration with no warmup so
+/// every bench target still *runs* — exercising its whole code path —
+/// without paying for statistics. Perf assertions in benches should be
+/// skipped under smoke (the numbers are meaningless at n=1).
+pub fn smoke() -> bool {
+    std::env::var_os("SCOUT_BENCH_SMOKE").is_some()
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs (one iteration,
+/// no warmup, under [`smoke`]).
 pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    let (warmup, iters) = if smoke() { (0, 1) } else { (warmup, iters) };
     for _ in 0..warmup {
         f();
     }

@@ -1,11 +1,13 @@
 //! In-tree substrates for the offline build environment (the vendored
 //! crate universe is exactly the `xla` stub + `anyhow` shim): a JSON
-//! parser/writer, a seeded PRNG, a tiny bench timer, and the NaN-aware
+//! parser/writer, a seeded PRNG, a tiny bench timer, scoped fork-join
+//! helpers ([`par`]) for the numerics plane, and the NaN-aware
 //! [`argmax`] shared by every greedy-sampling path.
 
 pub mod argmax;
 pub mod bench;
 pub mod json;
+pub mod par;
 pub mod rng;
 
 pub use argmax::argmax;

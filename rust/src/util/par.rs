@@ -1,0 +1,149 @@
+//! Scoped fork-join helpers for the numerics plane.
+//!
+//! The offline crate universe has no rayon, so data-parallel loops are
+//! built on `std::thread::scope`: split a work list into contiguous
+//! chunks, run one chunk per scoped thread, join at the end of the call.
+//! Threads are spawned per call — cheap next to the matvec/attention
+//! work they carry, and it keeps every parallel region self-contained
+//! (no global pool to configure, poison, or leak between tests).
+//!
+//! Determinism: callers hand out *disjoint* work items (typically one
+//! batch row each), so results are bit-identical to the sequential
+//! order regardless of thread count. Parity tests run unchanged.
+
+/// Default worker count for data-parallel loops: the machine's available
+/// parallelism, capped so tiny-shape tests do not drown in spawn
+/// overhead.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// Run `f(index, item)` over every item, splitting the list into
+/// contiguous chunks across at most `threads` scoped threads.
+/// `index` is the item's position in the original list. With `threads
+/// <= 1` (or a single item) the loop runs inline on the caller's
+/// thread — the sequential path stays allocation- and spawn-free.
+pub fn par_for_each<T, F>(items: Vec<T>, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        for (i, item) in items.into_iter().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let mut chunks: Vec<(usize, Vec<T>)> = Vec::with_capacity(threads);
+    let mut iter = items.into_iter();
+    let mut base = 0;
+    loop {
+        let batch: Vec<T> = iter.by_ref().take(chunk).collect();
+        if batch.is_empty() {
+            break;
+        }
+        let len = batch.len();
+        chunks.push((base, batch));
+        base += len;
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        for (base, batch) in chunks {
+            s.spawn(move || {
+                for (j, item) in batch.into_iter().enumerate() {
+                    f(base + j, item);
+                }
+            });
+        }
+    });
+}
+
+/// Like [`par_for_each`], but deals items round-robin (`index %
+/// threads`) instead of in contiguous chunks. Use when per-item cost
+/// grows with the index (e.g. causal prefill attention, where position
+/// `t` attends over `[0..=t]`): contiguous chunks would hand the last
+/// thread ~2x the mean work, while striding balances the triangle.
+pub fn par_for_each_strided<T, F>(items: Vec<T>, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        for (i, item) in items.into_iter().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, T)>> =
+        (0..threads).map(|_| Vec::with_capacity(n.div_ceil(threads))).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        buckets[i % threads].push((i, item));
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        for bucket in buckets {
+            s.spawn(move || {
+                for (i, item) in bucket {
+                    f(i, item);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn indices_cover_every_item_once() {
+        for threads in [1, 2, 3, 8] {
+            let mut out = vec![0usize; 17];
+            let items: Vec<&mut usize> = out.iter_mut().collect();
+            par_for_each(items, threads, |i, slot| *slot = i + 1);
+            let got: Vec<usize> = out.iter().map(|&v| v - 1).collect();
+            assert_eq!(got, (0..17).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let hits = AtomicUsize::new(0);
+        par_for_each((0..100).collect::<Vec<usize>>(), 4, |i, item| {
+            assert_eq!(i, item);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn empty_and_single_item_are_inline() {
+        par_for_each(Vec::<usize>::new(), 8, |_, _| panic!("no items"));
+        let mut v = vec![0];
+        let items: Vec<&mut i32> = v.iter_mut().collect();
+        par_for_each(items, 8, |_, slot| *slot = 7);
+        assert_eq!(v, vec![7]);
+    }
+
+    #[test]
+    fn strided_indices_cover_every_item_once() {
+        for threads in [1, 3, 8] {
+            let mut out = vec![0usize; 17];
+            let items: Vec<&mut usize> = out.iter_mut().collect();
+            par_for_each_strided(items, threads, |i, slot| *slot = i + 1);
+            let got: Vec<usize> = out.iter().map(|&v| v - 1).collect();
+            assert_eq!(got, (0..17).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}
