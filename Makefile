@@ -10,7 +10,7 @@
 PRESETS ?= test-tiny
 ARTIFACTS_DIR := artifacts
 
-.PHONY: all build test bench bench-smoke clippy fmt artifacts clean
+.PHONY: all build test bench bench-smoke bench-baseline clippy fmt artifacts clean
 
 all: build
 
@@ -28,6 +28,16 @@ bench: build
 # Keeps benches compiling AND running in CI so they can't silently rot.
 bench-smoke: build
 	SCOUT_BENCH_SMOKE=1 cargo bench
+
+# Record the perf baseline: full (statistical) runs of the hot-path
+# kernel A/B bench and the worker-group scaling sweep, leaving
+# BENCH_hotpath.json / BENCH_worker_groups.json at the repo root
+# (machine-readable rows: kernel, level, size, ns/iter, GB/s). On AVX2
+# hardware hotpath_micro also asserts the >= 2x matvec/attend_blocks
+# kernel speedup over the scalar baseline.
+bench-baseline: build
+	cargo bench --bench hotpath_micro
+	cargo bench --bench worker_group_scaling
 
 clippy:
 	cargo clippy --workspace --all-targets -- -D warnings

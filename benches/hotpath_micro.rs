@@ -1,7 +1,18 @@
-//! Hot-path microbenchmarks (perf §L3): the coordinator-side operations
-//! that sit on the decode critical path, measured in isolation with the
-//! in-tree bench harness. Runs on the interpreter backend out of the box
-//! (`make artifacts` + `--features pjrt` to measure the PJRT path).
+//! Hot-path microbenchmarks (perf §L3), two planes:
+//!
+//! 1. **Kernel plane A/B** — every `util::simd` kernel measured at both
+//!    levels (`portable` = the seed's scalar loops bit-for-bit, `avx2`
+//!    when the machine has it). This is the PR-over-PR perf trajectory:
+//!    rows land in `BENCH_hotpath.json` at the repo root (override with
+//!    `SCOUT_BENCH_HOTPATH_JSON`), and on AVX2 hardware the run *asserts* the
+//!    `matvec` / attend-blocks kernels hold a >= 2x speedup over the
+//!    pre-kernel-plane scalar baseline.
+//! 2. **Coordinator ops** — the decode-critical operations measured in
+//!    situ on the live stack (interpreter backend out of the box;
+//!    `make artifacts` + `--features pjrt` to measure the PJRT path).
+//!
+//! `make bench-baseline` runs this and `worker_group_scaling` and leaves
+//! both JSON baselines at the repo root.
 
 use scoutattention::config::RunConfig;
 use scoutattention::engines::Partial;
@@ -9,10 +20,176 @@ use scoutattention::harness::Stack;
 use scoutattention::kvcache::SeqKvCache;
 use scoutattention::sparse::{score_blocks_native, select_topk};
 use scoutattention::tensor::Tensor;
-use scoutattention::util::bench::bench;
-use scoutattention::util::Rng64;
+use scoutattention::util::bench::{bench, smoke, BenchResult};
+use scoutattention::util::rope::RopeTable;
+use scoutattention::util::simd::{self, Level};
+use scoutattention::util::{Json, Rng64};
+
+/// One machine-readable kernel measurement.
+struct KernelRow {
+    kernel: &'static str,
+    level: &'static str,
+    size: String,
+    ns_per_iter: f64,
+    gb_per_s: f64,
+}
+
+impl KernelRow {
+    fn new(
+        kernel: &'static str,
+        level: Level,
+        size: String,
+        bytes: usize,
+        r: &BenchResult,
+    ) -> Self {
+        let ns = r.mean_us * 1e3;
+        let gbps = if r.mean_us > 0.0 { bytes as f64 / (r.mean_us * 1e-6) / 1e9 } else { 0.0 };
+        Self { kernel, level: level.name(), size, ns_per_iter: ns, gb_per_s: gbps }
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("kernel", Json::str(self.kernel)),
+            ("level", Json::str(self.level)),
+            ("size", Json::str(self.size.clone())),
+            ("ns_per_iter", Json::num(self.ns_per_iter)),
+            ("gb_per_s", Json::num(self.gb_per_s)),
+        ])
+    }
+}
+
+fn levels() -> Vec<Level> {
+    if simd::avx2_available() {
+        vec![Level::Portable, Level::Avx2]
+    } else {
+        vec![Level::Portable]
+    }
+}
+
+fn rand_vec(rng: &mut Rng64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.f32() - 0.5).collect()
+}
+
+/// ns/iter of `kernel` at `level` from the collected rows.
+fn ns_of(rows: &[KernelRow], kernel: &str, level: Level) -> Option<f64> {
+    rows.iter().find(|r| r.kernel == kernel && r.level == level.name()).map(|r| r.ns_per_iter)
+}
+
+fn kernel_plane(rows: &mut Vec<KernelRow>) {
+    let mut rng = Rng64::new(42);
+
+    // matvec: a QKV-projection-shaped tile (d_model 256 -> 256).
+    let (m, n) = (256usize, 256usize);
+    let x = rand_vec(&mut rng, m);
+    let w = rand_vec(&mut rng, m * n);
+    let mut out = vec![0.0f32; n];
+    for lv in levels() {
+        let r = bench("matvec", 50, 4000, || {
+            simd::matvec_with(lv, &x, &w, n, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!("  [{}] {}", lv.name(), r.report());
+        rows.push(KernelRow::new("matvec", lv, format!("{m}x{n}"), 4 * (m * n + m + n), &r));
+    }
+
+    // dot: lm-head-row-shaped.
+    let nn = 4096usize;
+    let a = rand_vec(&mut rng, nn);
+    let b = rand_vec(&mut rng, nn);
+    for lv in levels() {
+        let r = bench("dot", 100, 20000, || {
+            std::hint::black_box(simd::dot_with(lv, &a, &b));
+        });
+        println!("  [{}] {}", lv.name(), r.report());
+        rows.push(KernelRow::new("dot", lv, format!("{nn}"), 8 * nn, &r));
+    }
+
+    // axpy: the matvec/partial-accumulate inner step.
+    let mut y = vec![0.0f32; nn];
+    for lv in levels() {
+        let r = bench("axpy", 100, 20000, || {
+            simd::axpy_with(lv, 0.37, &a, &mut y);
+            std::hint::black_box(&y);
+        });
+        println!("  [{}] {}", lv.name(), r.report());
+        rows.push(KernelRow::new("axpy", lv, format!("{nn}"), 12 * nn, &r));
+    }
+
+    // digest score: one Quest head-row.
+    let dn = 1024usize;
+    let lo = rand_vec(&mut rng, dn);
+    let hi = rand_vec(&mut rng, dn);
+    let qd = rand_vec(&mut rng, dn);
+    for lv in levels() {
+        let r = bench("digest_score", 100, 20000, || {
+            std::hint::black_box(simd::digest_score_with(lv, &qd, &lo, &hi));
+        });
+        println!("  [{}] {}", lv.name(), r.report());
+        rows.push(KernelRow::new("digest_score", lv, format!("{dn}"), 12 * dn, &r));
+    }
+
+    // attend_blocks kernel: 4 complete blocks x 16 tokens, GQA 8/2,
+    // head_dim 64 — the CPU worker's per-job shape.
+    let (hq, hkv, dd, bs, blocks) = (8usize, 2usize, 64usize, 16usize, 4usize);
+    let wtok = hkv * dd;
+    let q = rand_vec(&mut rng, hq * dd);
+    let kslabs: Vec<Vec<f32>> = (0..blocks).map(|_| rand_vec(&mut rng, bs * wtok)).collect();
+    let vslabs: Vec<Vec<f32>> = (0..blocks).map(|_| rand_vec(&mut rng, bs * wtok)).collect();
+    let mut scores = vec![0.0f32; bs];
+    let bytes = blocks * bs * wtok * 2 * 4;
+    for lv in levels() {
+        let r = bench("attend_blocks", 20, 2000, || {
+            let mut p = Partial::empty(hq, dd);
+            for (ks, vs) in kslabs.iter().zip(&vslabs) {
+                simd::softmax_accum_with(
+                    lv, &q, ks, vs, None, bs, hq, hkv, dd, 0.125, &mut p.acc, &mut p.m,
+                    &mut p.l, &mut scores,
+                );
+            }
+            std::hint::black_box(&p);
+        });
+        println!("  [{}] {}", lv.name(), r.report());
+        rows.push(
+            KernelRow::new("attend_blocks", lv, format!("{blocks}x{bs}x{hq}x{dd}"), bytes, &r),
+        );
+    }
+
+    // RoPE: cached frequency table vs the seed's per-head powf loop.
+    let (heads, d) = (8usize, 128usize);
+    let table = RopeTable::new(10000.0, d);
+    let mut xrope = rand_vec(&mut rng, heads * d);
+    let r = bench("rope_table", 50, 10000, || {
+        table.apply(&mut xrope, heads, d, 1234);
+        std::hint::black_box(&xrope);
+    });
+    println!("  [table]    {}", r.report());
+    let rope_bytes = 8 * heads * d;
+    rows.push(KernelRow::new("rope_table", simd::level(), format!("{heads}x{d}"), rope_bytes, &r));
+    let theta: f64 = 10000.0;
+    let r = bench("rope_powf (seed)", 50, 10000, || {
+        let half = d / 2;
+        for head in 0..heads {
+            let row = &mut xrope[head * d..(head + 1) * d];
+            for i in 0..half {
+                let freq = theta.powf(-(i as f64) / half as f64);
+                let ang = 1234f64 * freq;
+                let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
+                let (x1, x2) = (row[i], row[i + half]);
+                row[i] = x1 * cos - x2 * sin;
+                row[i + half] = x1 * sin + x2 * cos;
+            }
+        }
+        std::hint::black_box(&xrope);
+    });
+    println!("  [powf]     {}", r.report());
+    rows.push(KernelRow::new("rope_powf", simd::level(), format!("{heads}x{d}"), rope_bytes, &r));
+}
 
 fn main() -> scoutattention::Result<()> {
+    println!("kernel plane (simd level: {}):", simd::level().name());
+    let mut rows: Vec<KernelRow> = Vec::new();
+    kernel_plane(&mut rows);
+
     let cfg = RunConfig::for_preset("test-tiny");
     let stack = Stack::load(&cfg)?;
     let spec = stack.gpu.spec.clone();
@@ -56,7 +233,11 @@ fn main() -> scoutattention::Result<()> {
         cache.gather_blocks(0, &blocks, kb, &mut kbuf, &mut vbuf, &mut mbuf);
     }));
     results.push(bench("cpu attend_blocks x4 (worker job)", 10, 500, || {
-        std::hint::black_box(stack.native.attend_blocks(&q, &cache, 0, &blocks[..4.min(blocks.len())]));
+        std::hint::black_box(stack.native.attend_blocks(
+            &q,
+            &cache.layer_slabs(0),
+            &blocks[..4.min(blocks.len())],
+        ));
     }));
     let mut pa = Partial::empty(hq, d);
     pa.update_token(0, 0.3, &vec![1.0; d]);
@@ -92,6 +273,40 @@ fn main() -> scoutattention::Result<()> {
     println!("\nhot-path microbenchmarks ({}):", spec.name);
     for r in &results {
         println!("  {}", r.report());
+    }
+
+    // Machine-readable baseline at the repo root.
+    let json = Json::obj(vec![
+        ("bench", Json::str("hotpath_micro")),
+        ("simd_level", Json::str(simd::level().name())),
+        ("smoke", Json::Bool(smoke())),
+        ("rows", Json::Arr(rows.iter().map(|r| r.json()).collect())),
+    ]);
+    let path = std::env::var("SCOUT_BENCH_HOTPATH_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json")
+        });
+    std::fs::write(&path, json.to_string())?;
+    println!("\nwrote {} kernel rows to {}", rows.len(), path.display());
+
+    if smoke() {
+        println!("smoke mode: skipping the kernel speedup assertions (n=1 timings)");
+        return Ok(());
+    }
+    if simd::avx2_available() {
+        for kernel in ["matvec", "attend_blocks"] {
+            let p = ns_of(&rows, kernel, Level::Portable).expect("portable row");
+            let v = ns_of(&rows, kernel, Level::Avx2).expect("avx2 row");
+            let speedup = p / v;
+            println!("{kernel}: portable {p:.0} ns -> avx2 {v:.0} ns ({speedup:.2}x)");
+            assert!(
+                speedup >= 2.0,
+                "{kernel}: avx2 kernel must be >= 2x the scalar baseline, got {speedup:.2}x"
+            );
+        }
+    } else {
+        println!("no AVX2 on this machine: portable fallback selected; speedup gate skipped");
     }
     Ok(())
 }

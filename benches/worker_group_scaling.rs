@@ -20,6 +20,7 @@ use scoutattention::model::spec::builtin_preset;
 use scoutattention::model::{ModelSpec, Weights};
 use scoutattention::runtime::Runtime;
 use scoutattention::util::bench::smoke;
+use scoutattention::util::Json;
 use scoutattention::workload::{LengthMix, WorkloadGen};
 
 const DECODE_TOKENS: usize = 16;
@@ -95,6 +96,7 @@ fn main() {
     ];
     let mut single_group = 0.0;
     let mut per_seq = 0.0;
+    let mut rows: Vec<Json> = Vec::new();
     for &(batch, groups, tpg) in arms {
         let sps = run_arm(batch, groups, tpg);
         let eff_groups = if groups == 0 { batch } else { groups };
@@ -104,6 +106,13 @@ fn main() {
              \"total_threads\":{},\"decode_steps_per_s\":{sps:.3}}}",
             eff_groups * tpg
         );
+        rows.push(Json::obj(vec![
+            ("batch", Json::num(batch as f64)),
+            ("worker_groups", Json::num(eff_groups as f64)),
+            ("threads_per_group", Json::num(tpg as f64)),
+            ("total_threads", Json::num((eff_groups * tpg) as f64)),
+            ("decode_steps_per_s", Json::num(sps)),
+        ]));
         if (batch, groups, tpg) == (4, 1, 1) {
             single_group = sps;
         }
@@ -111,6 +120,19 @@ fn main() {
             per_seq = sps;
         }
     }
+    // Machine-readable baseline at the repo root.
+    let json = Json::obj(vec![
+        ("bench", Json::str("worker_group_scaling")),
+        ("smoke", Json::Bool(smoke())),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = std::env::var("SCOUT_BENCH_WG_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_worker_groups.json")
+        });
+    std::fs::write(&path, json.to_string()).expect("write bench json");
+    println!("wrote scaling rows to {}", path.display());
     if smoke() {
         println!("smoke mode: skipping the scaling assertion (n=1 timings)");
         return;

@@ -39,16 +39,15 @@ impl FullKvScheduler {
         let mut vc = Tensor::zeros(&[l, b, s_max, spec.n_kv_heads, spec.head_dim]);
         let seq_w = s_max * w;
         for (s, seq) in seqs.iter().enumerate() {
-            let cache = seq.cache.read().unwrap();
-            let len = cache.len();
+            let len = seq.cache.len();
             for layer in 0..l {
-                // contiguous [len, Hkv, D] prefix of the layer
+                // contiguous [len, Hkv, D] prefix of the layer (per-layer
+                // shard read lock only)
                 if len > 0 {
+                    let view = seq.cache.layer(layer);
                     let off = (layer * b + s) * seq_w;
-                    kc.data_mut()[off..off + len * w]
-                        .copy_from_slice(cache.k_rows(layer, 0, len));
-                    vc.data_mut()[off..off + len * w]
-                        .copy_from_slice(cache.v_rows(layer, 0, len));
+                    kc.data_mut()[off..off + len * w].copy_from_slice(view.k_rows(0, len));
+                    vc.data_mut()[off..off + len * w].copy_from_slice(view.v_rows(0, len));
                 }
                 stats.layers[layer].dense_tokens += len + 1;
             }

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use crate::coordinator::{admission, gather, Batch, DecodeScheduler, SeqState, StepStats};
 use crate::engines::gpu::BatchPartial;
 use crate::engines::{GpuEngine, NativeEngine};
-use crate::sparse::{score_blocks_native, select_topk};
+use crate::sparse::{score_blocks_slabs, select_topk};
 
 pub struct HgcaScheduler {
     pub gpu: Arc<GpuEngine>,
@@ -75,13 +75,16 @@ impl HgcaScheduler {
             // (no pipelining possible — the real query just materialized).
             let mut cpu_bp = BatchPartial::empty(b, hq, d);
             let mut windows: Vec<Vec<usize>> = Vec::with_capacity(n);
+            let nb = spec.n_blocks();
             for (s, seq) in seqs.iter_mut().enumerate() {
-                let cache = seq.cache.read().unwrap();
-                let full = cache.full_blocks();
+                let full = seq.cache.full_blocks();
                 let window = self.window(full);
                 let qrow = &q2.rows(s, 1)[..hq * d];
-                let scores =
-                    score_blocks_native(qrow, &cache.digests, i, full, hq, hkv, d);
+                let view = seq.cache.layer(i);
+                let scores = {
+                    let (lo, hi) = view.digests();
+                    score_blocks_slabs(qrow, lo, hi, nb, full, hq, hkv, d)
+                };
                 // offloaded = not in window; CPU budget = k_blocks - window
                 let budget = spec.k_blocks.saturating_sub(window.len());
                 let mut masked = scores.clone();
@@ -89,8 +92,8 @@ impl HgcaScheduler {
                     masked[wblk] = f32::NEG_INFINITY;
                 }
                 let sel = select_topk(&masked, budget, &[]);
-                let partial = self.native.attend_blocks(qrow, &cache, i, &sel.blocks);
-                drop(cache);
+                let partial = self.native.attend_blocks(qrow, &view, &sel.blocks);
+                drop(view);
                 cpu_bp.set_row(s, &partial);
                 stats.layers[i].cpu_blocks += sel.blocks.len();
                 stats.layers[i].gpu_blocks += window.len();

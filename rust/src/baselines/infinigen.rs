@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use crate::coordinator::{admission, gather, Batch, DecodeScheduler, SeqState, StepStats};
 use crate::engines::{GpuEngine, NativeEngine};
-use crate::sparse::{score_blocks_native, select_topk};
+use crate::sparse::{score_blocks_slabs, select_topk};
 use crate::tensor::Tensor;
 
 pub struct InfinigenScheduler {
@@ -56,12 +56,15 @@ impl InfinigenScheduler {
     ) {
         let spec = &self.gpu.spec;
         let (hq, hkv, d) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
+        let nb = spec.n_blocks();
         for (s, seq) in seqs.iter_mut().enumerate() {
-            let cache = seq.cache.read().unwrap();
-            let full = cache.full_blocks();
+            let full = seq.cache.full_blocks();
             let qrow = &q.rows(s, 1)[..hq * d];
-            let scores = score_blocks_native(qrow, &cache.digests, layer, full, hq, hkv, d);
-            drop(cache);
+            let scores = {
+                let view = seq.cache.layer(layer);
+                let (lo, hi) = view.digests();
+                score_blocks_slabs(qrow, lo, hi, nb, full, hq, hkv, d)
+            };
             let pins = admission::pins(self.pin_sink, self.pin_recent, full);
             let sel = select_topk(&scores, spec.k_blocks, &pins);
             // blocks not already on the GPU must cross PCIe *now* (the

@@ -5,7 +5,7 @@
 //! handoff).
 
 use crate::engines::{GpuEngine, NativeEngine};
-use crate::sparse::{score_blocks_native, select_topk};
+use crate::sparse::{score_blocks_slabs, select_topk};
 use crate::tensor::Tensor;
 
 use super::batch::{Batch, SeqState};
@@ -54,21 +54,21 @@ pub fn prefill_request(
     }
     let (k, v, h_last, _logits) = gpu.prefill(&x_seq, n)?;
 
-    {
-        let mut cache = seq.cache.write().unwrap();
-        for layer in 0..spec.n_layers {
-            cache.load_prefill_layer(layer, k.rows(layer, 1), v.rows(layer, 1), n);
-        }
-        cache.finish_prefill(n);
+    for layer in 0..spec.n_layers {
+        seq.cache.load_prefill_layer(layer, k.rows(layer, 1), v.rows(layer, 1), n);
     }
+    seq.cache.finish_prefill(n);
 
-    let cache_arc = seq.cache.clone();
-    let cache = cache_arc.read().unwrap();
-    let full = cache.full_blocks();
+    let full = seq.cache.full_blocks();
+    let nb = spec.n_blocks();
     let (hq, hkv, d) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
     for layer in 0..spec.n_layers {
         let q = native.qpred(h_last.data(), layer, (n as i64) - 1);
-        let scores = score_blocks_native(&q, &cache.digests, layer, full, hq, hkv, d);
+        let scores = {
+            let view = seq.cache.layer(layer);
+            let (lo, hi) = view.digests();
+            score_blocks_slabs(&q, lo, hi, nb, full, hq, hkv, d)
+        };
         let ranked = select_topk(
             &scores,
             seq.resident[layer].capacity(),
@@ -77,7 +77,6 @@ pub fn prefill_request(
         seq.resident[layer].refresh(&ranked.blocks);
         seq.scores_mut(layer).clone_from(&scores);
     }
-    drop(cache);
     batch.activate(seq);
     Ok(())
 }

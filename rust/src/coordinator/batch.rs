@@ -3,9 +3,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use std::sync::RwLock;
-
-use crate::kvcache::{ResidentSet, SeqKvCache};
+use crate::kvcache::{ResidentSet, ShardedKvCache};
 use crate::model::ModelSpec;
 
 use super::request::{RequestOutput, RequestSpec};
@@ -13,10 +11,12 @@ use super::request::{RequestOutput, RequestSpec};
 /// Per-sequence decode state.
 pub struct SeqState {
     pub id: u64,
-    /// Shared so the CPU worker pool can read complete blocks while the
-    /// leader thread drives the GPU engine (complete blocks are immutable;
-    /// appends only touch the tail).
-    pub cache: Arc<RwLock<SeqKvCache>>,
+    /// Shared so the CPU worker groups can read complete blocks while
+    /// the leader thread drives the GPU engine. The store is sharded by
+    /// layer group ([`ShardedKvCache`]): a worker's block-attention read
+    /// on layer `i+1`, the gather on layer `i`, and end-of-step appends
+    /// lock different shards and never contend.
+    pub cache: Arc<ShardedKvCache>,
     /// GPU resident set per layer (established after prefill, refreshed
     /// by periodic recall only).
     pub resident: Vec<ResidentSet>,
@@ -40,7 +40,7 @@ impl SeqState {
         let nb = spec.n_blocks();
         Self {
             id: req.id,
-            cache: Arc::new(RwLock::new(SeqKvCache::new(spec))),
+            cache: Arc::new(ShardedKvCache::new(spec)),
             resident: (0..spec.n_layers).map(|_| ResidentSet::new(nb, budget_blocks)).collect(),
             selected: vec![Vec::new(); spec.n_layers],
             scores: vec![Vec::new(); spec.n_layers],
@@ -53,15 +53,13 @@ impl SeqState {
     }
 
     pub fn done(&self) -> bool {
-        if self.generated.len() >= self.max_new_tokens {
-            return true;
-        }
-        let cache = self.cache.read().unwrap();
-        cache.len() >= cache.spec().max_seq
+        self.generated.len() >= self.max_new_tokens
+            || self.cache.len() >= self.cache.spec().max_seq
     }
 
     pub fn pos(&self) -> i32 {
-        self.cache.read().unwrap().len() as i32
+        // lock-free: the store keeps the token count in an atomic
+        self.cache.len() as i32
     }
 
     /// Latest digest scores for a layer (empty before first selection).

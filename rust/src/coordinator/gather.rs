@@ -1,7 +1,18 @@
 //! Shared gather/assembly helpers used by Scout and the baseline
 //! schedulers: materializing selected blocks and the tail window into the
 //! artifact operand layout. Per-sequence gathers write disjoint operand
-//! slices, so they fan out across scoped threads (`util::par`).
+//! slices, so they fan out across scoped threads (`util::par`); each row
+//! holds only its own sequence's *layer-shard* read lock
+//! (`ShardedKvCache::layer`), so gathers never contend with worker reads
+//! or appends on other layers.
+//!
+//! The `*_into` variants write into caller-owned operand tensors — the
+//! Scout scheduler reuses one set across all steps, and
+//! [`gather_selected_into`] reads each sequence's selected list in
+//! place, so steady-state gathers allocate no operand buffers and no
+//! block-list clones (only the per-call row-index `Vec`, a few dozen
+//! bytes). The allocating wrappers remain for the baselines and
+//! one-shot callers.
 
 use crate::engines::GpuEngine;
 use crate::tensor::Tensor;
@@ -10,20 +21,26 @@ use crate::util::par;
 use super::batch::SeqState;
 
 /// Gather each sequence's block list (`lists[s]`, up to `kb` entries)
-/// into `sparse_attn` operands `[B, kb, bs, Hkv, D]` + mask `[B, kb, bs]`.
-pub fn gather_block_lists(
+/// into caller-owned `sparse_attn` operands `[B, kb, bs, Hkv, D]` + mask
+/// `[B, kb, bs]`. Pad rows (beyond `seqs.len()`) are fully masked.
+pub fn gather_block_lists_into(
     gpu: &GpuEngine,
     seqs: &[SeqState],
     layer: usize,
     lists: impl Fn(usize, &SeqState) -> Vec<usize> + Sync,
-) -> (Tensor, Tensor, Tensor) {
+    k: &mut Tensor,
+    v: &mut Tensor,
+    m: &mut Tensor,
+) {
     let spec = &gpu.spec;
     let (kb, bs) = (spec.k_blocks, spec.block_size);
     let w = spec.n_kv_heads * spec.head_dim;
     let blk_w = bs * w;
-    let mut k = Tensor::zeros(&[spec.batch, kb, bs, spec.n_kv_heads, spec.head_dim]);
-    let mut v = Tensor::zeros(&[spec.batch, kb, bs, spec.n_kv_heads, spec.head_dim]);
-    let mut m = Tensor::zeros(&[spec.batch, kb, bs]);
+    debug_assert_eq!(k.len(), spec.batch * kb * blk_w);
+    debug_assert_eq!(m.len(), spec.batch * kb * bs);
+    // Zero the mask up front: rows covered below overwrite their slice;
+    // stale K/V bytes in pad rows are benign once masked out.
+    m.data_mut().fill(0.0);
     {
         let rows: Vec<_> = k
             .data_mut()
@@ -35,27 +52,82 @@ pub fn gather_block_lists(
             .collect();
         par::par_for_each(rows, par::default_threads(), |s, (kr, vr, mr, seq)| {
             let blocks = lists(s, seq);
-            let cache = seq.cache.read().unwrap();
-            cache.gather_blocks(layer, &blocks, kb, kr, vr, mr);
+            seq.cache.layer(layer).gather_blocks(&blocks, kb, kr, vr, mr);
         });
     }
+}
+
+/// [`gather_block_lists_into`] specialized to each sequence's own
+/// `selected[layer]` list, read in place — the Scout hot path, with no
+/// per-sequence `Vec` clone (the closure-based variant exists for
+/// schedulers whose block lists live outside `SeqState`, e.g. HGCA's
+/// windows).
+pub fn gather_selected_into(
+    gpu: &GpuEngine,
+    seqs: &[SeqState],
+    layer: usize,
+    k: &mut Tensor,
+    v: &mut Tensor,
+    m: &mut Tensor,
+) {
+    let spec = &gpu.spec;
+    let (kb, bs) = (spec.k_blocks, spec.block_size);
+    let w = spec.n_kv_heads * spec.head_dim;
+    let blk_w = bs * w;
+    debug_assert_eq!(k.len(), spec.batch * kb * blk_w);
+    debug_assert_eq!(m.len(), spec.batch * kb * bs);
+    m.data_mut().fill(0.0);
+    {
+        let rows: Vec<_> = k
+            .data_mut()
+            .chunks_mut(kb * blk_w)
+            .zip(v.data_mut().chunks_mut(kb * blk_w))
+            .zip(m.data_mut().chunks_mut(kb * bs))
+            .zip(seqs.iter())
+            .map(|(((kr, vr), mr), seq)| (kr, vr, mr, seq))
+            .collect();
+        par::par_for_each(rows, par::default_threads(), |_, (kr, vr, mr, seq)| {
+            let blocks = &seq.selected[layer];
+            seq.cache.layer(layer).gather_blocks(blocks, kb, kr, vr, mr);
+        });
+    }
+}
+
+/// Allocating wrapper over [`gather_block_lists_into`].
+pub fn gather_block_lists(
+    gpu: &GpuEngine,
+    seqs: &[SeqState],
+    layer: usize,
+    lists: impl Fn(usize, &SeqState) -> Vec<usize> + Sync,
+) -> (Tensor, Tensor, Tensor) {
+    let spec = &gpu.spec;
+    let (kb, bs) = (spec.k_blocks, spec.block_size);
+    let mut k = Tensor::zeros(&[spec.batch, kb, bs, spec.n_kv_heads, spec.head_dim]);
+    let mut v = Tensor::zeros(&[spec.batch, kb, bs, spec.n_kv_heads, spec.head_dim]);
+    let mut m = Tensor::zeros(&[spec.batch, kb, bs]);
+    gather_block_lists_into(gpu, seqs, layer, lists, &mut k, &mut v, &mut m);
     (k, v, m)
 }
 
-/// Gather tail window + current token into `tail_attn` operands.
-pub fn gather_tail(
+/// Gather tail window + current token into caller-owned `tail_attn`
+/// operands. Pad rows are fully masked.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_tail_into(
     gpu: &GpuEngine,
     seqs: &[SeqState],
     layer: usize,
     k_new: &Tensor,
     v_new: &Tensor,
-) -> (Tensor, Tensor, Tensor) {
+    k: &mut Tensor,
+    v: &mut Tensor,
+    m: &mut Tensor,
+) {
     let spec = &gpu.spec;
     let bs = spec.block_size;
     let w = spec.n_kv_heads * spec.head_dim;
-    let mut k = Tensor::zeros(&[spec.batch, 1, bs, spec.n_kv_heads, spec.head_dim]);
-    let mut v = Tensor::zeros(&[spec.batch, 1, bs, spec.n_kv_heads, spec.head_dim]);
-    let mut m = Tensor::zeros(&[spec.batch, 1, bs]);
+    debug_assert_eq!(k.len(), spec.batch * bs * w);
+    debug_assert_eq!(m.len(), spec.batch * bs);
+    m.data_mut().fill(0.0);
     {
         let rows: Vec<_> = k
             .data_mut()
@@ -66,18 +138,35 @@ pub fn gather_tail(
             .map(|(((kr, vr), mr), seq)| (kr, vr, mr, seq))
             .collect();
         par::par_for_each(rows, par::default_threads(), |s, (ks, vs, ms, seq)| {
-            let cache = seq.cache.read().unwrap();
-            cache.gather_tail(layer, ks, vs, ms);
-            let t = cache.tail_len();
+            let view = seq.cache.layer(layer);
+            view.gather_tail(ks, vs, ms);
+            let t = view.tail_len();
+            drop(view);
             ks[t * w..(t + 1) * w].copy_from_slice(&k_new.rows(s, 1)[..w]);
             vs[t * w..(t + 1) * w].copy_from_slice(&v_new.rows(s, 1)[..w]);
             ms[t] = 1.0;
         });
     }
+}
+
+/// Allocating wrapper over [`gather_tail_into`].
+pub fn gather_tail(
+    gpu: &GpuEngine,
+    seqs: &[SeqState],
+    layer: usize,
+    k_new: &Tensor,
+    v_new: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let spec = &gpu.spec;
+    let mut k = Tensor::zeros(&[spec.batch, 1, spec.block_size, spec.n_kv_heads, spec.head_dim]);
+    let mut v = Tensor::zeros(&[spec.batch, 1, spec.block_size, spec.n_kv_heads, spec.head_dim]);
+    let mut m = Tensor::zeros(&[spec.batch, 1, spec.block_size]);
+    gather_tail_into(gpu, seqs, layer, k_new, v_new, &mut k, &mut v, &mut m);
     (k, v, m)
 }
 
 /// Greedy-sample + append the step's K/V into every live sequence.
+/// Appends lock one layer shard at a time; no sequence-wide lock exists.
 pub fn sample_and_append(
     seqs: &mut [SeqState],
     logits: &Tensor,
@@ -89,12 +178,10 @@ pub fn sample_and_append(
         // all-NaN logits (a numerically-dead sequence) fall back to token
         // 0 by policy; util::argmax is NaN-skipping and tie-deterministic.
         let tok = crate::util::argmax(logits.rows(s, 1)).unwrap_or(0) as u32;
-        let mut cache = seq.cache.write().unwrap();
         for (i, (kn, vn)) in k_news.iter().zip(v_news).enumerate() {
-            cache.append_layer(i, &kn.rows(s, 1)[..kv_width], &vn.rows(s, 1)[..kv_width]);
+            seq.cache.append_layer(i, &kn.rows(s, 1)[..kv_width], &vn.rows(s, 1)[..kv_width]);
         }
-        cache.advance();
-        drop(cache);
+        seq.cache.advance();
         seq.generated.push(tok);
         seq.last_tok = tok;
     }

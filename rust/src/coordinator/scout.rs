@@ -35,14 +35,14 @@ use std::sync::Arc;
 use crate::config::ScoutConfig;
 use crate::engines::gpu::BatchPartial;
 use crate::engines::{GpuEngine, NativeEngine};
-use crate::sparse::{score_blocks_native, select_topk, TopkSelection};
+use crate::sparse::{score_blocks_slabs, select_topk, TopkSelection};
 use crate::tensor::Tensor;
 use crate::util::par;
 
 use super::batch::{Batch, SeqState};
 use super::recall::RecallController;
 use super::stats::StepStats;
-use super::worker_group::WorkerGroups;
+use super::worker_group::{JobResult, WorkerGroups};
 use super::DecodeScheduler;
 
 pub struct ScoutScheduler {
@@ -53,6 +53,16 @@ pub struct ScoutScheduler {
     pool: WorkerGroups,
     /// Scoped-thread width for the in-step scoring fan-out.
     par_threads: usize,
+    /// Reusable gather operands + CPU batch partial + collect buffer:
+    /// steady-state gathers and merges allocate nothing.
+    gather_k: Tensor,
+    gather_v: Tensor,
+    gather_m: Tensor,
+    tail_k: Tensor,
+    tail_v: Tensor,
+    tail_m: Tensor,
+    cpu_bp: BatchPartial,
+    results: Vec<JobResult>,
 }
 
 impl ScoutScheduler {
@@ -64,7 +74,8 @@ impl ScoutScheduler {
     ) -> Self {
         // One worker group per batch slot (§4) unless the config folds
         // slots together; slot s maps to group s % n_groups.
-        let tile = gpu.spec.batch;
+        let spec = gpu.spec.clone();
+        let tile = spec.batch;
         let n_groups = if cfg.worker_groups == 0 {
             tile
         } else {
@@ -72,7 +83,24 @@ impl ScoutScheduler {
         };
         let pool = WorkerGroups::new(native.clone(), n_groups, cfg.threads_per_group);
         let par_threads = par::default_threads();
-        Self { gpu, native, cfg, recall, pool, par_threads }
+        let (kb, bs, hkv, dd, hq) =
+            (spec.k_blocks, spec.block_size, spec.n_kv_heads, spec.head_dim, spec.n_q_heads);
+        Self {
+            gpu,
+            native,
+            cfg,
+            recall,
+            pool,
+            par_threads,
+            gather_k: Tensor::zeros(&[tile, kb, bs, hkv, dd]),
+            gather_v: Tensor::zeros(&[tile, kb, bs, hkv, dd]),
+            gather_m: Tensor::zeros(&[tile, kb, bs]),
+            tail_k: Tensor::zeros(&[tile, 1, bs, hkv, dd]),
+            tail_v: Tensor::zeros(&[tile, 1, bs, hkv, dd]),
+            tail_m: Tensor::zeros(&[tile, 1, bs]),
+            cpu_bp: BatchPartial::empty(tile, hq, dd),
+            results: Vec::new(),
+        }
     }
 
     /// The worker-group plane (tests / benches introspection).
@@ -111,21 +139,23 @@ impl ScoutScheduler {
     ) {
         let spec = &self.gpu.spec;
         let (hq, hkv, d) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
-        let kb = spec.k_blocks;
+        let (kb, nb) = (spec.k_blocks, spec.n_blocks());
         let (pin_sink, pin_recent) = (self.cfg.pin_sink, self.cfg.pin_recent);
 
-        // Parallel phase: digest scoring + top-k per sequence.
+        // Parallel phase: digest scoring + top-k per sequence, each row
+        // holding only its own sequence's layer-shard read lock.
         let mut sels: Vec<Option<TopkSelection>> = (0..seqs.len()).map(|_| None).collect();
         {
             let items: Vec<(&mut Option<TopkSelection>, &SeqState)> =
                 sels.iter_mut().zip(seqs.iter()).collect();
             par::par_for_each(items, self.par_threads, |s, (slot, seq)| {
-                let cache = seq.cache.read().unwrap();
-                let full = cache.full_blocks();
+                let full = seq.cache.full_blocks();
                 let qrow = &q.rows(s, 1)[..hq * d];
-                let scores =
-                    score_blocks_native(qrow, &cache.digests, layer, full, hq, hkv, d);
-                drop(cache);
+                let scores = {
+                    let view = seq.cache.layer(layer);
+                    let (lo, hi) = view.digests();
+                    score_blocks_slabs(qrow, lo, hi, nb, full, hq, hkv, d)
+                };
                 let pins = super::admission::pins(pin_sink, pin_recent, full);
                 *slot = Some(select_topk(&scores, kb, &pins));
             });
@@ -201,26 +231,44 @@ impl ScoutScheduler {
             }
 
             // line 10: GPU-side attention over resident∩selected + tail.
-            let (ks, vs, ms) =
-                super::gather::gather_block_lists(&self.gpu, seqs, i, |_, seq| {
-                    seq.selected[i].clone()
-                });
-            let p_gpu = self.gpu.sparse_attn(&q, &ks, &vs, &ms)?;
-            let (kt, vt, mt) = super::gather::gather_tail(&self.gpu, seqs, i, &k_new, &v_new);
-            let p_tail = self.gpu.tail_attn(&q, &kt, &vt, &mt)?;
+            // Operand tensors are scheduler-owned and reused, and the
+            // selected lists are read in place: steady-state gathers
+            // allocate no operand buffers and no block-list clones.
+            super::gather::gather_selected_into(
+                &self.gpu,
+                seqs,
+                i,
+                &mut self.gather_k,
+                &mut self.gather_v,
+                &mut self.gather_m,
+            );
+            let p_gpu =
+                self.gpu.sparse_attn(&q, &self.gather_k, &self.gather_v, &self.gather_m)?;
+            super::gather::gather_tail_into(
+                &self.gpu,
+                seqs,
+                i,
+                &k_new,
+                &v_new,
+                &mut self.tail_k,
+                &mut self.tail_v,
+                &mut self.tail_m,
+            );
+            let p_tail = self.gpu.tail_attn(&q, &self.tail_k, &self.tail_v, &self.tail_m)?;
             let mut merged = self.gpu.merge(&p_gpu, &p_tail)?;
 
             // lines 11-12: fold in the CPU partials pre-computed one
             // layer ahead (or just now in the -PC arm), collected from
-            // each slot's own worker group.
-            let results = self.pool.collect_layer(i);
-            if !results.is_empty() {
-                let mut cpu_bp =
-                    BatchPartial::empty(b_tile, spec.n_q_heads, spec.head_dim);
-                for r in results {
-                    cpu_bp.set_row(r.key.0, &r.partial);
+            // each slot's own worker group into the reused buffer; the
+            // CPU-side batch partial is reset in place, never
+            // reallocated.
+            self.pool.collect_layer_into(i, &mut self.results);
+            if !self.results.is_empty() {
+                self.cpu_bp.reset();
+                for r in &self.results {
+                    self.cpu_bp.set_row(r.key.0, &r.partial);
                 }
-                merged = self.gpu.merge(&merged, &cpu_bp)?;
+                merged = self.gpu.merge(&merged, &self.cpu_bp)?;
             }
 
             x = self.gpu.post_attn(&x, &merged, i)?;
@@ -234,7 +282,7 @@ impl ScoutScheduler {
             // prices the staged bytes against that window.
             for seq in seqs.iter_mut() {
                 if self.recall.tick(&mut seq.recall_in, i) {
-                    let full = seq.cache.read().unwrap().full_blocks();
+                    let full = seq.cache.full_blocks();
                     let scores = seq.scores(i).to_vec();
                     if scores.is_empty() {
                         continue;

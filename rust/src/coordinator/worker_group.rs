@@ -15,10 +15,10 @@
 //! the default of one thread per group there is no contention at all.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex};
 
 use crate::engines::{NativeEngine, Partial};
-use crate::kvcache::SeqKvCache;
+use crate::kvcache::ShardedKvCache;
 
 /// Key identifying a pre-computation job: (sequence slot, layer).
 pub type JobKey = (usize, usize);
@@ -27,7 +27,7 @@ struct Job {
     key: JobKey,
     /// Predicted (or real, if `predicted_query=false`) query `[Hq*D]`.
     q: Vec<f32>,
-    cache: Arc<RwLock<SeqKvCache>>,
+    cache: Arc<ShardedKvCache>,
     blocks: Vec<usize>,
 }
 
@@ -70,9 +70,10 @@ impl WorkerGroup {
                         Ok(j) => j,
                         Err(_) => return,
                     };
-                    let cache = job.cache.read().unwrap();
-                    let partial = engine.attend_blocks(&job.q, &cache, job.key.1, &job.blocks);
-                    drop(cache);
+                    // lock only the job layer's shard for the read
+                    let view = job.cache.layer(job.key.1);
+                    let partial = engine.attend_blocks(&job.q, &view, &job.blocks);
+                    drop(view);
                     let _ = tx_done.send(JobResult {
                         key: job.key,
                         partial,
@@ -179,7 +180,7 @@ impl WorkerGroups {
         &mut self,
         key: JobKey,
         q: Vec<f32>,
-        cache: Arc<RwLock<SeqKvCache>>,
+        cache: Arc<ShardedKvCache>,
         blocks: Vec<usize>,
     ) {
         if blocks.is_empty() {
@@ -203,10 +204,17 @@ impl WorkerGroups {
     /// deadlocks, panics on interleaving, or crosses groups.
     pub fn collect_layer(&mut self, layer: usize) -> Vec<JobResult> {
         let mut out = Vec::new();
-        for group in &mut self.groups {
-            group.collect_layer(layer, &mut out);
-        }
+        self.collect_layer_into(layer, &mut out);
         out
+    }
+
+    /// [`collect_layer`](Self::collect_layer) into a caller-owned buffer
+    /// (cleared first) — the scheduler reuses one across steps.
+    pub fn collect_layer_into(&mut self, layer: usize, out: &mut Vec<JobResult>) {
+        out.clear();
+        for group in &mut self.groups {
+            group.collect_layer(layer, out);
+        }
     }
 }
 
@@ -229,21 +237,18 @@ mod tests {
         spec
     }
 
-    fn filled_cache(spec: &crate::model::ModelSpec, tokens: usize, salt: usize) -> Arc<RwLock<SeqKvCache>> {
-        let cache = Arc::new(RwLock::new(SeqKvCache::new(spec)));
-        {
-            let mut c = cache.write().unwrap();
-            let w = spec.n_kv_heads * spec.head_dim;
-            for t in 0..tokens {
-                for l in 0..spec.n_layers {
-                    let k: Vec<f32> =
-                        (0..w).map(|i| ((t + l + i + salt) as f32).sin()).collect();
-                    let v: Vec<f32> =
-                        (0..w).map(|i| ((t * 2 + l + i + salt) as f32).cos()).collect();
-                    c.append_layer(l, &k, &v);
-                }
-                c.advance();
+    fn filled_cache(spec: &crate::model::ModelSpec, tokens: usize, salt: usize) -> Arc<ShardedKvCache> {
+        let cache = Arc::new(ShardedKvCache::new(spec));
+        let w = spec.n_kv_heads * spec.head_dim;
+        for t in 0..tokens {
+            for l in 0..spec.n_layers {
+                let k: Vec<f32> =
+                    (0..w).map(|i| ((t + l + i + salt) as f32).sin()).collect();
+                let v: Vec<f32> =
+                    (0..w).map(|i| ((t * 2 + l + i + salt) as f32).cos()).collect();
+                cache.append_layer(l, &k, &v);
             }
+            cache.advance();
         }
         cache
     }
@@ -261,8 +266,8 @@ mod tests {
         let mut results = pool.collect_layer(1);
         assert_eq!(results.len(), 2);
         results.sort_by_key(|r| r.key.0);
-        let inline0 = engine.attend_blocks(&q, &cache.read().unwrap(), 1, &[0, 2]);
-        let inline1 = engine.attend_blocks(&q, &cache.read().unwrap(), 1, &[1, 3]);
+        let inline0 = engine.attend_blocks(&q, &cache.layer(1), &[0, 2]);
+        let inline1 = engine.attend_blocks(&q, &cache.layer(1), &[1, 3]);
         assert_eq!(results[0].partial.finalize(), inline0.finalize());
         assert_eq!(results[1].partial.finalize(), inline1.finalize());
         assert_eq!(pool.outstanding(), 0);
@@ -290,7 +295,7 @@ mod tests {
         assert_eq!(r5.len(), 1);
         assert_eq!(r5[0].key, (0, 5));
         assert_eq!(pool.outstanding(), 0);
-        let inline5 = engine.attend_blocks(&q, &cache.read().unwrap(), 5, &[0]);
+        let inline5 = engine.attend_blocks(&q, &cache.layer(5), &[0]);
         assert_eq!(r5[0].partial.finalize(), inline5.finalize());
     }
 
@@ -323,10 +328,8 @@ mod tests {
             assert_eq!(results[1].key, (1, layer));
             assert_eq!(results[0].blocks, slow.len());
             assert_eq!(results[1].blocks, fast.len());
-            let inline0 =
-                engine.attend_blocks(&q0, &cache0.read().unwrap(), layer, &slow);
-            let inline1 =
-                engine.attend_blocks(&q1, &cache1.read().unwrap(), layer, &fast);
+            let inline0 = engine.attend_blocks(&q0, &cache0.layer(layer), &slow);
+            let inline1 = engine.attend_blocks(&q1, &cache1.layer(layer), &fast);
             assert_eq!(results[0].partial.finalize(), inline0.finalize(), "layer {layer}");
             assert_eq!(results[1].partial.finalize(), inline1.finalize(), "layer {layer}");
         }
@@ -357,7 +360,7 @@ mod tests {
     fn empty_block_list_is_not_spawned() {
         let spec = PROXY_MODELS[0].1();
         let engine = Arc::new(NativeEngine::from_seed(&spec, 1));
-        let cache = Arc::new(RwLock::new(SeqKvCache::new(&spec)));
+        let cache = Arc::new(ShardedKvCache::new(&spec));
         let mut pool = WorkerGroups::new(engine, 1, 1);
         pool.spawn((0, 0), vec![], cache, vec![]);
         assert_eq!(pool.outstanding(), 0);

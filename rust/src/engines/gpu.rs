@@ -33,6 +33,15 @@ impl BatchPartial {
         }
     }
 
+    /// Reset to the merge identity in place (steady-state reuse: the
+    /// scheduler keeps one CPU-side batch partial per step instead of
+    /// allocating one per layer).
+    pub fn reset(&mut self) {
+        self.acc.data_mut().fill(0.0);
+        self.m.data_mut().fill(-1e30);
+        self.l.data_mut().fill(0.0);
+    }
+
     /// Overwrite one sequence's row from a per-sequence partial.
     pub fn set_row(&mut self, row: usize, p: &crate::engines::Partial) {
         let hd = p.hq * p.d;

@@ -8,38 +8,34 @@
 //! artifacts were not lowered for, and to cross-check the XLA plane.
 
 use crate::engines::partial::Partial;
-use crate::kvcache::SeqKvCache;
+use crate::kvcache::{BlockSlabs, SeqKvCache};
 use crate::model::{ModelSpec, Weights};
+use crate::util::rope::RopeTable;
+use crate::util::simd;
 
 /// Pure-rust engine bound to one spec + weights.
 pub struct NativeEngine {
     pub spec: ModelSpec,
     pub weights: Weights,
+    /// Cached RoPE frequencies (no per-token `powf`).
+    rope: RopeTable,
 }
 
-/// x [m] @ w [m, n] -> out [n], accumulating in f32.
+/// Block attention needs a scores scratch of `tokens` floats; slabs up
+/// to this size use the stack.
+const SCORES_STACK: usize = 64;
+
+/// x [m] @ w [m, n] -> out [n], accumulating in f32 on the SIMD kernel
+/// plane (`util::simd`): runtime-dispatched AVX2+FMA tiles with a
+/// portable fallback bit-identical to the seed's scalar loop.
+#[inline]
 pub fn matvec(x: &[f32], w: &[f32], n: usize, out: &mut [f32]) {
-    let m = x.len();
-    debug_assert_eq!(w.len(), m * n);
-    debug_assert_eq!(out.len(), n);
-    out.fill(0.0);
-    // row-major w: out[j] += x[i] * w[i*n + j]; iterate i-outer so the
-    // inner loop is a contiguous axpy that LLVM auto-vectorizes.
-    for i in 0..m {
-        let xi = x[i];
-        if xi == 0.0 {
-            continue;
-        }
-        let row = &w[i * n..(i + 1) * n];
-        for (o, &wij) in out.iter_mut().zip(row) {
-            *o += xi * wij;
-        }
-    }
+    simd::matvec(x, w, n, out)
 }
 
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    simd::dot(a, b)
 }
 
 pub fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32]) {
@@ -58,25 +54,17 @@ pub fn silu(x: f32) -> f32 {
 }
 
 /// Rotate-half RoPE applied in place to `[H, D]` at position `pos`
-/// (bit-identical formulation to `model.py::rope`).
+/// (bit-identical formulation to `model.py::rope`). Convenience wrapper
+/// that builds a throwaway [`RopeTable`]; hot paths hold a cached table
+/// instead (the engines do, via their constructors).
 pub fn rope_inplace(x: &mut [f32], h: usize, d: usize, pos: i64, theta: f64) {
-    let half = d / 2;
-    for head in 0..h {
-        let row = &mut x[head * d..(head + 1) * d];
-        for i in 0..half {
-            let freq = theta.powf(-(i as f64) / half as f64);
-            let ang = pos as f64 * freq;
-            let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
-            let (x1, x2) = (row[i], row[i + half]);
-            row[i] = x1 * cos - x2 * sin;
-            row[i + half] = x1 * sin + x2 * cos;
-        }
-    }
+    RopeTable::new(theta, d).apply(x, h, d, pos);
 }
 
 impl NativeEngine {
     pub fn new(spec: ModelSpec, weights: Weights) -> Self {
-        Self { spec, weights }
+        let rope = RopeTable::new(spec.rope_theta, spec.head_dim);
+        Self { spec, weights, rope }
     }
 
     pub fn from_seed(spec: &ModelSpec, seed: u64) -> Self {
@@ -103,8 +91,8 @@ impl NativeEngine {
         matvec(&h, self.weights.layer_wq(layer), self.hq_d(), &mut q);
         matvec(&h, self.weights.layer_wk(layer), self.hkv_d(), &mut k);
         matvec(&h, self.weights.layer_wv(layer), self.hkv_d(), &mut v);
-        rope_inplace(&mut q, self.spec.n_q_heads, self.spec.head_dim, pos, self.spec.rope_theta);
-        rope_inplace(&mut k, self.spec.n_kv_heads, self.spec.head_dim, pos, self.spec.rope_theta);
+        self.rope.apply(&mut q, self.spec.n_q_heads, self.spec.head_dim, pos);
+        self.rope.apply(&mut k, self.spec.n_kv_heads, self.spec.head_dim, pos);
         (q, k, v)
     }
 
@@ -116,43 +104,56 @@ impl NativeEngine {
         rmsnorm(x, self.weights.layer_ln1(layer_next), &mut h);
         let mut q = vec![0.0; self.hq_d()];
         matvec(&h, self.weights.layer_wq(layer_next), self.hq_d(), &mut q);
-        rope_inplace(&mut q, self.spec.n_q_heads, self.spec.head_dim, pos, self.spec.rope_theta);
+        self.rope.apply(&mut q, self.spec.n_q_heads, self.spec.head_dim, pos);
         q
+    }
+
+    /// Accumulate one KV slab into `p` via the kernel plane's tiled
+    /// softmax-accumulate (stack scratch for typical block sizes).
+    fn accum_slab(
+        &self,
+        q: &[f32],
+        k_slab: &[f32],
+        v_slab: &[f32],
+        tokens: usize,
+        p: &mut Partial,
+    ) {
+        let (hq, hkv, dd) = (self.spec.n_q_heads, self.spec.n_kv_heads, self.spec.head_dim);
+        let scale = self.spec.scale();
+        let mut sbuf = [0.0f32; SCORES_STACK];
+        let mut heap = Vec::new();
+        let scores: &mut [f32] = if tokens <= SCORES_STACK {
+            &mut sbuf
+        } else {
+            heap.resize(tokens, 0.0);
+            &mut heap
+        };
+        simd::softmax_accum(
+            q, k_slab, v_slab, None, tokens, hq, hkv, dd, scale, &mut p.acc, &mut p.m, &mut p.l,
+            scores,
+        );
     }
 
     /// Attention partial over a KV slab `[tokens, Hkv, D]` (contiguous,
     /// zero-copy from the cache). The CPU worker hot path.
     pub fn attend_slab(&self, q: &[f32], k_slab: &[f32], v_slab: &[f32], tokens: usize) -> Partial {
-        let (hq, hkv, dd) = (self.spec.n_q_heads, self.spec.n_kv_heads, self.spec.head_dim);
-        let g = hq / hkv;
-        let scale = self.spec.scale();
-        let w = hkv * dd;
-        let mut p = Partial::empty(hq, dd);
-        for t in 0..tokens {
-            let krow = &k_slab[t * w..(t + 1) * w];
-            let vrow = &v_slab[t * w..(t + 1) * w];
-            for h in 0..hq {
-                let kvh = h / g;
-                let s = dot(&q[h * dd..(h + 1) * dd], &krow[kvh * dd..(kvh + 1) * dd]) * scale;
-                p.update_token(h, s, &vrow[kvh * dd..(kvh + 1) * dd]);
-            }
-        }
+        let mut p = Partial::empty(self.spec.n_q_heads, self.spec.head_dim);
+        self.accum_slab(q, k_slab, v_slab, tokens, &mut p);
         p
     }
 
-    /// CPU-side attention over a set of complete blocks (near-data, §3.2).
-    pub fn attend_blocks(
-        &self,
-        q: &[f32],
-        cache: &SeqKvCache,
-        layer: usize,
-        blocks: &[usize],
-    ) -> Partial {
+    /// CPU-side attention over a set of complete blocks (near-data,
+    /// §3.2). `slabs` is either a monolithic cache layer
+    /// (`SeqKvCache::layer_slabs`) or a sharded-store `LayerView` — the
+    /// worker holds only that layer's shard lock while it computes.
+    /// Slab-by-slab accumulation into one partial IS the LSE merge of
+    /// per-block partials, with one rescale per block instead of two
+    /// exps per token.
+    pub fn attend_blocks(&self, q: &[f32], slabs: &impl BlockSlabs, blocks: &[usize]) -> Partial {
         let bs = self.spec.block_size;
         let mut p = Partial::empty(self.spec.n_q_heads, self.spec.head_dim);
         for &b in blocks {
-            let part = self.attend_slab(q, cache.block_k(layer, b), cache.block_v(layer, b), bs);
-            p.merge(&part);
+            self.accum_slab(q, slabs.block_k(b), slabs.block_v(b), bs, &mut p);
         }
         p
     }
@@ -168,15 +169,13 @@ impl NativeEngine {
         v_new: &[f32],
     ) -> Partial {
         let tail = cache.tail_len();
-        let mut p = if tail > 0 {
+        let mut p = Partial::empty(self.spec.n_q_heads, self.spec.head_dim);
+        if tail > 0 {
             let k = cache.block_k(layer, cache.full_blocks());
             let v = cache.block_v(layer, cache.full_blocks());
-            self.attend_slab(q, k, v, tail)
-        } else {
-            Partial::empty(self.spec.n_q_heads, self.spec.head_dim)
-        };
-        let selfp = self.attend_slab(q, k_new, v_new, 1);
-        p.merge(&selfp);
+            self.accum_slab(q, k, v, tail, &mut p);
+        }
+        self.accum_slab(q, k_new, v_new, 1, &mut p);
         p
     }
 
@@ -235,7 +234,7 @@ impl NativeEngine {
             // full blocks + tail + self
             let mut p = Partial::empty(self.spec.n_q_heads, self.spec.head_dim);
             for b in 0..cache.full_blocks() {
-                p.merge(&self.attend_slab(&q, cache.block_k(layer, b), cache.block_v(layer, b), bs));
+                self.accum_slab(&q, cache.block_k(layer, b), cache.block_v(layer, b), bs, &mut p);
             }
             p.merge(&self.attend_tail(&q, cache, layer, &k_new, &v_new));
             self.post_attn(&mut x, &p, layer);
@@ -342,7 +341,7 @@ mod tests {
             cache.advance();
         }
         let q: Vec<f32> = (0..spec.n_q_heads * spec.head_dim).map(|i| (i as f32 * 0.1).sin()).collect();
-        let p_blocks = e.attend_blocks(&q, &cache, 1, &[0, 1, 2]);
+        let p_blocks = e.attend_blocks(&q, &cache.layer_slabs(1), &[0, 1, 2]);
         // union slab: 24 contiguous tokens of layer 1
         let kall: Vec<f32> = (0..3).flat_map(|b| cache.block_k(1, b).to_vec()).collect();
         let vall: Vec<f32> = (0..3).flat_map(|b| cache.block_v(1, b).to_vec()).collect();

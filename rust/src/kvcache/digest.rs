@@ -38,27 +38,12 @@ impl DigestStore {
     /// Recompute one block's digest from its K slab `[bs, Hkv*D]`.
     pub fn rebuild_block(&mut self, layer: usize, block: usize, k_slab: &[f32]) {
         debug_assert_eq!(k_slab.len() % self.w, 0);
-        let bs = k_slab.len() / self.w;
-        let lo = self.kmin[layer].rows_mut(block, 1);
-        lo.fill(f32::INFINITY);
-        for t in 0..bs {
-            for i in 0..self.w {
-                let x = k_slab[t * self.w + i];
-                if x < lo[i] {
-                    lo[i] = x;
-                }
-            }
-        }
-        let hi = self.kmax[layer].rows_mut(block, 1);
-        hi.fill(f32::NEG_INFINITY);
-        for t in 0..bs {
-            for i in 0..self.w {
-                let x = k_slab[t * self.w + i];
-                if x > hi[i] {
-                    hi[i] = x;
-                }
-            }
-        }
+        minmax_into(
+            k_slab,
+            self.w,
+            self.kmin[layer].rows_mut(block, 1),
+            self.kmax[layer].rows_mut(block, 1),
+        );
     }
 
     /// (kmin, kmax) slabs of one block, each `[Hkv*D]`.
@@ -73,6 +58,34 @@ impl DigestStore {
 
     pub fn n_blocks(&self) -> usize {
         self.nb
+    }
+}
+
+/// Channel-wise min/max of a `[bs, w]` slab into `lo`/`hi` rows of width
+/// `w`. Shared by [`DigestStore`] and the sharded store's per-shard
+/// digest maintenance.
+pub(crate) fn minmax_into(slab: &[f32], w: usize, lo: &mut [f32], hi: &mut [f32]) {
+    debug_assert_eq!(slab.len() % w.max(1), 0);
+    debug_assert_eq!(lo.len(), w);
+    debug_assert_eq!(hi.len(), w);
+    let bs = if w == 0 { 0 } else { slab.len() / w };
+    lo.fill(f32::INFINITY);
+    for t in 0..bs {
+        for (i, lo_i) in lo.iter_mut().enumerate() {
+            let x = slab[t * w + i];
+            if x < *lo_i {
+                *lo_i = x;
+            }
+        }
+    }
+    hi.fill(f32::NEG_INFINITY);
+    for t in 0..bs {
+        for (i, hi_i) in hi.iter_mut().enumerate() {
+            let x = slab[t * w + i];
+            if x > *hi_i {
+                *hi_i = x;
+            }
+        }
     }
 }
 

@@ -13,11 +13,23 @@
 mod digest;
 mod resident;
 mod seq;
+mod store;
 
 pub use digest::DigestStore;
 pub use resident::ResidentSet;
-pub use seq::SeqKvCache;
+pub use seq::{LayerSlabs, SeqKvCache};
+pub use store::{LayerView, ShardedKvCache};
 
 /// Index of a KV block within one sequence's cache (position-major:
 /// block `b` covers tokens `[b*bs, (b+1)*bs)`).
 pub type BlockId = usize;
+
+/// Borrowed access to one layer's contiguous `[bs, Hkv, D]` block
+/// slabs — the contract between the CPU attention worker
+/// (`NativeEngine::attend_blocks`) and whichever store backs the
+/// sequence: the monolithic [`SeqKvCache`] (via
+/// [`SeqKvCache::layer_slabs`]) or a sharded [`LayerView`].
+pub trait BlockSlabs {
+    fn block_k(&self, block: usize) -> &[f32];
+    fn block_v(&self, block: usize) -> &[f32];
+}

@@ -72,10 +72,11 @@ impl SeqKvCache {
     /// Finish a prefill load: set length and (re)build all digests.
     pub fn finish_prefill(&mut self, new_len: usize) {
         self.len = new_len;
+        let bs = self.spec.block_size;
         for layer in 0..self.spec.n_layers {
-            for b in 0..self.full_blocks() {
-                let k = self.block_k(layer, b).to_vec();
-                self.digests.rebuild_block(layer, b, &k);
+            for b in 0..self.len / bs {
+                // borrow k and digests as disjoint fields: no temporary
+                self.digests.rebuild_block(layer, b, self.k[layer].rows(b * bs, bs));
             }
         }
     }
@@ -95,11 +96,12 @@ impl SeqKvCache {
     /// digest of any block that just completed.
     pub fn advance(&mut self) {
         self.len += 1;
-        if self.len % self.spec.block_size == 0 {
-            let b = self.len / self.spec.block_size - 1;
+        let bs = self.spec.block_size;
+        if self.len % bs == 0 {
+            let b = self.len / bs - 1;
             for layer in 0..self.spec.n_layers {
-                let k = self.block_k(layer, b).to_vec();
-                self.digests.rebuild_block(layer, b, &k);
+                // borrow k and digests as disjoint fields: no temporary
+                self.digests.rebuild_block(layer, b, self.k[layer].rows(b * bs, bs));
             }
         }
     }
@@ -118,6 +120,18 @@ impl SeqKvCache {
     pub fn block_k(&self, layer: usize, block: usize) -> &[f32] {
         let bs = self.spec.block_size;
         self.k[layer].rows(block * bs, bs)
+    }
+
+    /// One layer's block slabs as a [`BlockSlabs`] view (the engine-side
+    /// block-attention contract shared with the sharded store).
+    ///
+    /// [`BlockSlabs`]: super::BlockSlabs
+    pub fn layer_slabs(&self, layer: usize) -> LayerSlabs<'_> {
+        LayerSlabs {
+            k: &self.k[layer],
+            v: &self.v[layer],
+            bs: self.spec.block_size,
+        }
     }
 
     pub fn block_v(&self, layer: usize, block: usize) -> &[f32] {
@@ -191,6 +205,23 @@ impl SeqKvCache {
         k_out[..tail * w].copy_from_slice(self.k[layer].rows(start, tail));
         v_out[..tail * w].copy_from_slice(self.v[layer].rows(start, tail));
         mask_out[..tail].fill(1.0);
+    }
+}
+
+/// Borrowed `[bs, Hkv, D]` block slabs of one (monolithic) layer.
+pub struct LayerSlabs<'a> {
+    k: &'a Tensor,
+    v: &'a Tensor,
+    bs: usize,
+}
+
+impl super::BlockSlabs for LayerSlabs<'_> {
+    fn block_k(&self, block: usize) -> &[f32] {
+        self.k.rows(block * self.bs, self.bs)
+    }
+
+    fn block_v(&self, block: usize) -> &[f32] {
+        self.v.rows(block * self.bs, self.bs)
     }
 }
 

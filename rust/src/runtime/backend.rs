@@ -221,6 +221,14 @@ pub trait Backend {
         name: &str,
         inputs: &[Operand],
     ) -> crate::Result<Vec<Tensor>>;
+
+    /// Scratch-arena high-water mark, when the backend has one: total
+    /// fresh scratch-buffer allocations so far. A steady-state decode
+    /// loop must leave this flat — the zero-alloc regression tests pin
+    /// exactly that. `None` for backends without a scratch arena.
+    fn scratch_allocations(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// Which backend a run should use.

@@ -84,6 +84,16 @@ impl Runtime {
         Ok(Self::interpreter(Manifest::synthesize(spec)?))
     }
 
+    /// [`Runtime::for_spec`] with an explicit interpreter thread width
+    /// (`1` = fully sequential — the deterministic arm for scaling
+    /// baselines and the zero-alloc regression tests).
+    pub fn for_spec_with_threads(spec: &ModelSpec, threads: usize) -> crate::Result<Self> {
+        let manifest = Manifest::synthesize(spec)?;
+        let backend =
+            Box::new(InterpreterBackend::with_threads(manifest.config.clone(), threads));
+        Ok(Self { manifest, backend, counters: Counters::default() })
+    }
+
     fn interpreter(manifest: Manifest) -> Self {
         let backend = Box::new(InterpreterBackend::new(manifest.config.clone()));
         Self { manifest, backend, counters: Counters::default() }
@@ -103,6 +113,12 @@ impl Runtime {
     /// Short label of the active backend ("interpreter" / "pjrt").
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Scratch-arena high-water mark of the active backend (see
+    /// [`Backend::scratch_allocations`]); `None` when it has no arena.
+    pub fn scratch_allocations(&self) -> Option<usize> {
+        self.backend.scratch_allocations()
     }
 
     /// Eagerly prepare every entry (PJRT compiles its executables here so

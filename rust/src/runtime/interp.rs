@@ -17,22 +17,37 @@
 //! bit-identical at any thread count, which is what keeps the parity
 //! suite meaningful.
 //!
+//! Numerics run on the SIMD kernel plane (`util::simd`): matvec/dot and
+//! the attention inner loops dispatch to AVX2+FMA tiles when the
+//! hardware has them, with a portable path bit-identical to the seed's
+//! scalar loops. Row temporaries come from a scratch [`Arena`], so a
+//! steady-state decode step performs **zero heap allocations inside the
+//! rows** — pinned by [`Backend::scratch_allocations`] regression tests.
+//! RoPE frequencies are precomputed once per backend ([`RopeTable`]).
+//!
 //! Shapes are validated upstream by [`crate::runtime::Runtime::execute`]
 //! against the manifest; evaluators here may index operands positionally.
 
 use super::artifacts::ArtifactEntry;
 use super::backend::{Backend, Operand};
-use crate::engines::native::{dot, matvec, rmsnorm, rope_inplace, silu};
-use crate::engines::partial::Partial;
+use crate::engines::native::{rmsnorm, silu};
+use crate::engines::partial::NEG_INF;
 use crate::model::ModelSpec;
 use crate::tensor::Tensor;
+use crate::util::arena::Arena;
 use crate::util::par;
+use crate::util::rope::RopeTable;
+use crate::util::simd::{self, dot, matvec};
 
 /// Interpreter over one model spec (taken from the manifest's config).
 pub struct InterpreterBackend {
     spec: ModelSpec,
     /// Scoped-thread width for batched entries.
     threads: usize,
+    /// Precomputed RoPE frequencies (no per-token `powf`).
+    rope: RopeTable,
+    /// Reusable row scratch; flat after the first step of a workload.
+    scratch: Arena,
 }
 
 impl InterpreterBackend {
@@ -43,7 +58,8 @@ impl InterpreterBackend {
     /// Explicit thread width (benches / scaling studies; `1` forces the
     /// sequential path everywhere).
     pub fn with_threads(spec: ModelSpec, threads: usize) -> Self {
-        Self { spec, threads: threads.max(1) }
+        let rope = RopeTable::new(spec.rope_theta, spec.head_dim);
+        Self { spec, threads: threads.max(1), rope, scratch: Arena::new() }
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -93,6 +109,10 @@ impl Backend for InterpreterBackend {
             other => anyhow::bail!("interpreter: no evaluator for entry {other:?}"),
         }
     }
+
+    fn scratch_allocations(&self) -> Option<usize> {
+        Some(self.scratch.allocations())
+    }
 }
 
 impl InterpreterBackend {
@@ -105,11 +125,12 @@ impl InterpreterBackend {
         let s = &self.spec;
         let (b, d) = (x.shape()[0], s.d_model);
         let (hq, hkv, dd) = (s.n_q_heads, s.n_kv_heads, s.head_dim);
-        let theta = s.rope_theta;
         let mut q = Tensor::zeros(&[b, hq, dd]);
         let mut k = Tensor::zeros(&[b, hkv, dd]);
         let mut v = Tensor::zeros(&[b, hkv, dd]);
         {
+            let scratch = &self.scratch;
+            let rope = &self.rope;
             let rows: Vec<_> = q
                 .data_mut()
                 .chunks_mut(hq * dd)
@@ -118,13 +139,13 @@ impl InterpreterBackend {
                 .map(|((qr, kr), vr)| (qr, kr, vr))
                 .collect();
             par::par_for_each(rows, self.fan(b), |r, (qr, kr, vr)| {
-                let mut h = vec![0.0; d];
+                let mut h = scratch.lease(d);
                 rmsnorm(x.rows(r, 1), ln1.data(), &mut h);
                 matvec(&h, wq.data(), hq * dd, qr);
                 matvec(&h, wk.data(), hkv * dd, kr);
                 matvec(&h, wv.data(), hkv * dd, vr);
-                rope_inplace(qr, hq, dd, pos[r] as i64, theta);
-                rope_inplace(kr, hkv, dd, pos[r] as i64, theta);
+                rope.apply(qr, hq, dd, pos[r] as i64);
+                rope.apply(kr, hkv, dd, pos[r] as i64);
             });
         }
         Ok(vec![q, k, v])
@@ -138,15 +159,16 @@ impl InterpreterBackend {
         let s = &self.spec;
         let (b, d) = (x.shape()[0], s.d_model);
         let (hq, dd) = (s.n_q_heads, s.head_dim);
-        let theta = s.rope_theta;
         let mut q = Tensor::zeros(&[b, hq, dd]);
         {
+            let scratch = &self.scratch;
+            let rope = &self.rope;
             let rows: Vec<_> = q.data_mut().chunks_mut(hq * dd).collect();
             par::par_for_each(rows, self.fan(b), |r, qr| {
-                let mut h = vec![0.0; d];
+                let mut h = scratch.lease(d);
                 rmsnorm(x.rows(r, 1), ln1.data(), &mut h);
                 matvec(&h, wq.data(), hq * dd, qr);
-                rope_inplace(qr, hq, dd, pos[r] as i64, theta);
+                rope.apply(qr, hq, dd, pos[r] as i64);
             });
         }
         Ok(vec![q])
@@ -192,8 +214,8 @@ impl InterpreterBackend {
     }
 
     /// Quest block scores: `q [B,Hq,D], kmin/kmax [B,nb,Hkv,D]` ->
-    /// `[B,nb]`; same per-channel operation order as
-    /// `sparse::score_blocks_native`.
+    /// `[B,nb]`; same per-head operation order as
+    /// `sparse::score_blocks_slabs` (both run `simd::digest_score`).
     fn block_scores(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
         let (q, kmin, kmax) = (ins[0].f32()?, ins[1].f32()?, ins[2].f32()?);
         let (b, hq, dd) = (q.shape()[0], q.shape()[1], q.shape()[2]);
@@ -211,10 +233,11 @@ impl InterpreterBackend {
                     let mut sc = 0.0f32;
                     for h in 0..hq {
                         let kvh = h / g;
-                        for c in 0..dd {
-                            let qv = qrow[h * dd + c];
-                            sc += (qv * lo[kvh * dd + c]).max(qv * hi[kvh * dd + c]);
-                        }
+                        sc += simd::digest_score(
+                            &qrow[h * dd..(h + 1) * dd],
+                            &lo[kvh * dd..(kvh + 1) * dd],
+                            &hi[kvh * dd..(kvh + 1) * dd],
+                        );
                     }
                     *o = sc;
                 }
@@ -225,20 +248,22 @@ impl InterpreterBackend {
 
     /// Masked block attention partial (`sparse_attn` and its `tail_attn`
     /// instantiation): `q [B,Hq,D], k/v [B,slots,bs,Hkv,D], mask
-    /// [B,slots,bs]` -> `(acc, m, l)`. Per-slot partials are LSE-merged,
-    /// mirroring `NativeEngine::attend_blocks`; a fully-masked slot is
-    /// the merge identity.
+    /// [B,slots,bs]` -> `(acc, m, l)`. Each slot's slab is accumulated
+    /// into the row's running partial by the kernel plane's tiled
+    /// softmax-accumulate — numerically the per-slot LSE merge,
+    /// mirroring `NativeEngine::attend_blocks`; a fully-masked slot
+    /// leaves the state untouched (the merge identity).
     fn masked_attn(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
         let (q, k, v, mask) = (ins[0].f32()?, ins[1].f32()?, ins[2].f32()?, ins[3].f32()?);
         let (b, hq, dd) = (q.shape()[0], q.shape()[1], q.shape()[2]);
         let (slots, bs, hkv) = (k.shape()[1], k.shape()[2], k.shape()[3]);
-        let g = hq / hkv;
         let w = hkv * dd;
         let scale = self.spec.scale();
         let mut acc = Tensor::zeros(&[b, hq, dd]);
         let mut m = Tensor::zeros(&[b, hq]);
         let mut l = Tensor::zeros(&[b, hq]);
         {
+            let scratch = &self.scratch;
             let rows: Vec<_> = acc
                 .data_mut()
                 .chunks_mut(hq * dd)
@@ -247,35 +272,31 @@ impl InterpreterBackend {
                 .map(|((ar, mr), lr)| (ar, mr, lr))
                 .collect();
             par::par_for_each(rows, self.fan(b), |bi, (ar, mr, lr)| {
+                mr.fill(NEG_INF);
                 let qrow = q.rows(bi, 1);
-                let mut p = Partial::empty(hq, dd);
+                let mut scores = scratch.lease(bs);
                 for slot in 0..slots {
                     let base = (bi * slots + slot) * bs * w;
                     let kslab = &k.data()[base..base + bs * w];
                     let vslab = &v.data()[base..base + bs * w];
                     let mrow =
                         &mask.data()[(bi * slots + slot) * bs..(bi * slots + slot + 1) * bs];
-                    let mut ps = Partial::empty(hq, dd);
-                    for t in 0..bs {
-                        if mrow[t] <= 0.0 {
-                            continue;
-                        }
-                        let krow = &kslab[t * w..(t + 1) * w];
-                        let vrow = &vslab[t * w..(t + 1) * w];
-                        for h in 0..hq {
-                            let kvh = h / g;
-                            let sc = dot(
-                                &qrow[h * dd..(h + 1) * dd],
-                                &krow[kvh * dd..(kvh + 1) * dd],
-                            ) * scale;
-                            ps.update_token(h, sc, &vrow[kvh * dd..(kvh + 1) * dd]);
-                        }
-                    }
-                    p.merge(&ps);
+                    simd::softmax_accum(
+                        qrow,
+                        kslab,
+                        vslab,
+                        Some(mrow),
+                        bs,
+                        hq,
+                        hkv,
+                        dd,
+                        scale,
+                        ar,
+                        mr,
+                        lr,
+                        &mut scores,
+                    );
                 }
-                ar.copy_from_slice(&p.acc);
-                mr.copy_from_slice(&p.m);
-                lr.copy_from_slice(&p.l);
             });
         }
         Ok(vec![acc, m, l])
@@ -314,31 +335,33 @@ impl InterpreterBackend {
         let (hq, dd) = (s.n_q_heads, s.head_dim);
         let mut out = Tensor::zeros(&[b, d]);
         {
+            let scratch = &self.scratch;
             let rows: Vec<_> = out.data_mut().chunks_mut(d).collect();
             par::par_for_each(rows, self.fan(b), |r, orow| {
                 let accr = acc.rows(r, 1);
                 let lr = l.rows(r, 1);
-                let mut att = vec![0.0; hq * dd];
+                let mut att = scratch.lease(hq * dd);
                 for hh in 0..hq {
                     let denom = lr[hh].max(1e-30);
                     for c in 0..dd {
                         att[hh * dd + c] = accr[hh * dd + c] / denom;
                     }
                 }
-                let mut xr = x.rows(r, 1).to_vec();
-                let mut proj = vec![0.0; d];
+                let mut xr = scratch.lease(d);
+                xr.copy_from_slice(x.rows(r, 1));
+                let mut proj = scratch.lease(d);
                 matvec(&att, wo.data(), d, &mut proj);
                 for i in 0..d {
                     xr[i] += proj[i];
                 }
-                let mut h = vec![0.0; d];
+                let mut h = scratch.lease(d);
                 rmsnorm(&xr, ln2.data(), &mut h);
-                let mut mid = vec![0.0; dff];
+                let mut mid = scratch.lease(dff);
                 matvec(&h, w1.data(), dff, &mut mid);
                 for v in mid.iter_mut() {
                     *v = silu(*v);
                 }
-                let mut back = vec![0.0; d];
+                let mut back = scratch.lease(d);
                 matvec(&mid, w2.data(), d, &mut back);
                 for i in 0..d {
                     xr[i] += back[i];
@@ -357,9 +380,10 @@ impl InterpreterBackend {
         let mut logits = Tensor::zeros(&[b, vsz]);
         let emb = embed.data();
         {
+            let scratch = &self.scratch;
             let rows: Vec<_> = logits.data_mut().chunks_mut(vsz).collect();
             par::par_for_each(rows, self.fan(b), |r, lrow| {
-                let mut h = vec![0.0; d];
+                let mut h = scratch.lease(d);
                 rmsnorm(x.rows(r, 1), ln_f.data(), &mut h);
                 for (t, lo) in lrow.iter_mut().enumerate() {
                     *lo = dot(&h, &emb[t * d..(t + 1) * d]);
@@ -372,8 +396,10 @@ impl InterpreterBackend {
     /// Fused full-attention decode step (FullKV baseline / oracle):
     /// attention over the first `pos[b]` cache rows plus the new token.
     /// Sequences are independent, so each batch row runs on its own
-    /// scoped thread (per-row K/V lands in a local buffer and is
-    /// scattered into the layer-major outputs afterwards).
+    /// scoped thread (per-row K/V lands in a leased buffer and is
+    /// scattered into the layer-major outputs afterwards). Attention
+    /// runs the kernel plane's softmax-accumulate over the contiguous
+    /// cache prefix; all row temporaries are arena leases.
     /// Returns `(logits [B,V], k_new [L,B,Hkv,D], v_new [L,B,Hkv,D])`.
     fn decode_full(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
         let x = ins[0].f32()?;
@@ -390,17 +416,17 @@ impl InterpreterBackend {
         let (hq, hkv, dd, d, dff, vsz) =
             (s.n_q_heads, s.n_kv_heads, s.head_dim, s.d_model, s.d_ff, s.vocab);
         let w = hkv * dd;
-        let g = hq / hkv;
         let scale = s.scale();
-        let theta = s.rope_theta;
         let mut logits = Tensor::zeros(&[b, vsz]);
         let mut k_new = Tensor::zeros(&[l_layers, b, hkv, dd]);
         let mut v_new = Tensor::zeros(&[l_layers, b, hkv, dd]);
         let (kd, vd) = (kcache.data(), vcache.data());
-        let mut kbufs: Vec<Vec<f32>> = vec![vec![0.0; l_layers * w]; b];
-        let mut vbufs: Vec<Vec<f32>> = vec![vec![0.0; l_layers * w]; b];
+        let mut kbufs: Vec<_> = (0..b).map(|_| self.scratch.lease(l_layers * w)).collect();
+        let mut vbufs: Vec<_> = (0..b).map(|_| self.scratch.lease(l_layers * w)).collect();
         {
             let st = &st;
+            let scratch = &self.scratch;
+            let rope = &self.rope;
             let rows: Vec<_> = logits
                 .data_mut()
                 .chunks_mut(vsz)
@@ -409,8 +435,22 @@ impl InterpreterBackend {
                 .map(|((lrow, kb), vb)| (lrow, kb, vb))
                 .collect();
             par::par_for_each(rows, self.threads, |bi, (lrow, kbuf, vbuf)| {
-                let mut xr = x.rows(bi, 1).to_vec();
+                let mut xr = scratch.lease(d);
+                xr.copy_from_slice(x.rows(bi, 1));
                 let n_tok = (pos[bi].max(0) as usize).min(s_max);
+                let mut h = scratch.lease(d);
+                let mut qv = scratch.lease(hq * dd);
+                let mut kv = scratch.lease(w);
+                let mut vv = scratch.lease(w);
+                let mut accb = scratch.lease(hq * dd);
+                let mut mb = scratch.lease(hq);
+                let mut lb = scratch.lease(hq);
+                let mut att = scratch.lease(hq * dd);
+                let mut proj = scratch.lease(d);
+                let mut h2 = scratch.lease(d);
+                let mut mid = scratch.lease(dff);
+                let mut back = scratch.lease(d);
+                let mut scores = scratch.lease(s_max.max(1));
                 for layer in 0..l_layers {
                     let (ln1, wq, wk, wv) = (
                         st[0].rows(layer, 1),
@@ -424,53 +464,53 @@ impl InterpreterBackend {
                         st[6].rows(layer, 1),
                         st[7].rows(layer, 1),
                     );
-                    let mut h = vec![0.0; d];
                     rmsnorm(&xr, ln1, &mut h);
-                    let mut qv = vec![0.0; hq * dd];
-                    let mut kv = vec![0.0; w];
-                    let mut vv = vec![0.0; w];
                     matvec(&h, wq, hq * dd, &mut qv);
                     matvec(&h, wk, w, &mut kv);
                     matvec(&h, wv, w, &mut vv);
-                    rope_inplace(&mut qv, hq, dd, pos[bi] as i64, theta);
-                    rope_inplace(&mut kv, hkv, dd, pos[bi] as i64, theta);
+                    rope.apply(&mut qv, hq, dd, pos[bi] as i64);
+                    rope.apply(&mut kv, hkv, dd, pos[bi] as i64);
 
                     let base = (layer * b + bi) * s_max * w;
-                    let mut p = Partial::empty(hq, dd);
-                    for t in 0..n_tok {
-                        let krow = &kd[base + t * w..base + (t + 1) * w];
-                        let vrow = &vd[base + t * w..base + (t + 1) * w];
-                        for hh in 0..hq {
-                            let kvh = hh / g;
-                            let sc = dot(
-                                &qv[hh * dd..(hh + 1) * dd],
-                                &krow[kvh * dd..(kvh + 1) * dd],
-                            ) * scale;
-                            p.update_token(hh, sc, &vrow[kvh * dd..(kvh + 1) * dd]);
+                    accb.fill(0.0);
+                    mb.fill(NEG_INF);
+                    lb.fill(0.0);
+                    simd::softmax_accum(
+                        &qv,
+                        &kd[base..base + n_tok * w],
+                        &vd[base..base + n_tok * w],
+                        None,
+                        n_tok,
+                        hq,
+                        hkv,
+                        dd,
+                        scale,
+                        &mut accb,
+                        &mut mb,
+                        &mut lb,
+                        &mut scores,
+                    );
+                    // the new token attends to itself
+                    simd::softmax_accum(
+                        &qv, &kv, &vv, None, 1, hq, hkv, dd, scale, &mut accb, &mut mb,
+                        &mut lb, &mut scores,
+                    );
+
+                    for hh in 0..hq {
+                        let denom = lb[hh].max(1e-30);
+                        for c in 0..dd {
+                            att[hh * dd + c] = accb[hh * dd + c] / denom;
                         }
                     }
-                    // the new token attends to itself
-                    for hh in 0..hq {
-                        let kvh = hh / g;
-                        let sc = dot(&qv[hh * dd..(hh + 1) * dd], &kv[kvh * dd..(kvh + 1) * dd])
-                            * scale;
-                        p.update_token(hh, sc, &vv[kvh * dd..(kvh + 1) * dd]);
-                    }
-
-                    let att = p.finalize();
-                    let mut proj = vec![0.0; d];
                     matvec(&att, wo, d, &mut proj);
                     for i in 0..d {
                         xr[i] += proj[i];
                     }
-                    let mut h2 = vec![0.0; d];
                     rmsnorm(&xr, ln2, &mut h2);
-                    let mut mid = vec![0.0; dff];
                     matvec(&h2, w1, dff, &mut mid);
                     for v in mid.iter_mut() {
                         *v = silu(*v);
                     }
-                    let mut back = vec![0.0; d];
                     matvec(&mid, w2, d, &mut back);
                     for i in 0..d {
                         xr[i] += back[i];
@@ -479,11 +519,10 @@ impl InterpreterBackend {
                     kbuf[layer * w..(layer + 1) * w].copy_from_slice(&kv);
                     vbuf[layer * w..(layer + 1) * w].copy_from_slice(&vv);
                 }
-                let mut hf = vec![0.0; d];
-                rmsnorm(&xr, ln_f.data(), &mut hf);
+                rmsnorm(&xr, ln_f.data(), &mut h);
                 let emb = embed.data();
                 for (t, lo) in lrow.iter_mut().enumerate() {
-                    *lo = dot(&hf, &emb[t * d..(t + 1) * d]);
+                    *lo = dot(&h, &emb[t * d..(t + 1) * d]);
                 }
             });
         }
@@ -503,10 +542,12 @@ impl InterpreterBackend {
     /// Fused causal prefill for one sequence padded to `S = max_seq`.
     /// Only the first `length` rows are computed; padded rows of the
     /// output caches stay zero (consumers only read `< length`).
-    /// Within each layer the per-position projections are independent,
-    /// and — once every position's Q/K/V exists — so is each position's
-    /// causal attention + MLP (position `t` reads `ks/vs[0..=t]` and
-    /// writes only `xs[t]`); both phases fan out across scoped threads.
+    /// Within each layer the per-position projections are independent —
+    /// they write straight into the `[L,S,Hkv,D]` output slabs — and,
+    /// once every position's Q/K/V exists, each position's causal
+    /// attention runs the kernel plane's softmax-accumulate over the
+    /// contiguous `[0..=t]` prefix of those slabs; both phases fan out
+    /// across scoped threads.
     /// Returns `(k [L,S,Hkv,D], v [L,S,Hkv,D], h_last [d], logits [V])`.
     fn prefill(&self, ins: &[Operand]) -> crate::Result<Vec<Tensor>> {
         let x_seq = ins[0].f32()?;
@@ -522,12 +563,11 @@ impl InterpreterBackend {
         let (hq, hkv, dd, d, dff, vsz, l_layers) =
             (s.n_q_heads, s.n_kv_heads, s.head_dim, s.d_model, s.d_ff, s.vocab, s.n_layers);
         let w = hkv * dd;
-        let g = hq / hkv;
         let scale = s.scale();
-        let theta = s.rope_theta;
         let mut k_out = Tensor::zeros(&[l_layers, s_max, hkv, dd]);
         let mut v_out = Tensor::zeros(&[l_layers, s_max, hkv, dd]);
         let mut xs: Vec<Vec<f32>> = (0..n).map(|t| x_seq.rows(t, 1).to_vec()).collect();
+        let mut qflat = vec![0.0f32; n * hq * dd];
         for layer in 0..l_layers {
             let (ln1, wq, wk, wv) = (
                 st[0].rows(layer, 1),
@@ -541,70 +581,89 @@ impl InterpreterBackend {
                 st[6].rows(layer, 1),
                 st[7].rows(layer, 1),
             );
-            // project every position first (they attend within the layer)
-            let mut qs: Vec<Vec<f32>> = vec![vec![0.0; hq * dd]; n];
-            let mut ks: Vec<Vec<f32>> = vec![vec![0.0; w]; n];
-            let mut vs: Vec<Vec<f32>> = vec![vec![0.0; w]; n];
+            let base = layer * s_max * w;
             {
+                // project every position straight into the output slabs
+                // (they attend within the layer)
+                let kl = &mut k_out.data_mut()[base..base + n * w];
+                let vl = &mut v_out.data_mut()[base..base + n * w];
                 let xs = &xs;
-                let rows: Vec<_> = qs
-                    .iter_mut()
-                    .zip(ks.iter_mut())
-                    .zip(vs.iter_mut())
+                let scratch = &self.scratch;
+                let rope = &self.rope;
+                let rows: Vec<_> = qflat
+                    .chunks_mut(hq * dd)
+                    .zip(kl.chunks_mut(w))
+                    .zip(vl.chunks_mut(w))
                     .map(|((qv, kv), vv)| (qv, kv, vv))
                     .collect();
                 par::par_for_each(rows, self.threads, |t, (qv, kv, vv)| {
-                    let mut h = vec![0.0; d];
+                    let mut h = scratch.lease(d);
                     rmsnorm(&xs[t], ln1, &mut h);
                     matvec(&h, wq, hq * dd, qv);
                     matvec(&h, wk, w, kv);
                     matvec(&h, wv, w, vv);
-                    rope_inplace(qv, hq, dd, t as i64, theta);
-                    rope_inplace(kv, hkv, dd, t as i64, theta);
+                    rope.apply(qv, hq, dd, t as i64);
+                    rope.apply(kv, hkv, dd, t as i64);
                 });
             }
             {
-                let (qs, ks, vs) = (&qs, &ks, &vs);
+                let kl = &k_out.data()[base..base + n * w];
+                let vl = &v_out.data()[base..base + n * w];
+                let qflat = &qflat;
+                let scratch = &self.scratch;
                 let rows: Vec<_> = xs.iter_mut().collect();
                 // strided: position t costs O(t), so contiguous chunks
                 // would leave the early threads idle on the triangle
                 par::par_for_each_strided(rows, self.threads, |t, xr| {
-                    // causal attention over [0, t]
-                    let mut p = Partial::empty(hq, dd);
-                    for u in 0..=t {
-                        for hh in 0..hq {
-                            let kvh = hh / g;
-                            let sc = dot(
-                                &qs[t][hh * dd..(hh + 1) * dd],
-                                &ks[u][kvh * dd..(kvh + 1) * dd],
-                            ) * scale;
-                            p.update_token(hh, sc, &vs[u][kvh * dd..(kvh + 1) * dd]);
+                    // causal attention over the contiguous [0, t] prefix
+                    let mut accb = scratch.lease(hq * dd);
+                    let mut mb = scratch.lease(hq);
+                    let mut lb = scratch.lease(hq);
+                    // s_max-sized (not n-sized): arena classes are keyed
+                    // by exact length, so a per-prompt-length lease would
+                    // park a new class per distinct request length.
+                    let mut scores = scratch.lease(s_max.max(1));
+                    mb.fill(NEG_INF);
+                    simd::softmax_accum(
+                        &qflat[t * hq * dd..(t + 1) * hq * dd],
+                        &kl[..(t + 1) * w],
+                        &vl[..(t + 1) * w],
+                        None,
+                        t + 1,
+                        hq,
+                        hkv,
+                        dd,
+                        scale,
+                        &mut accb,
+                        &mut mb,
+                        &mut lb,
+                        &mut scores,
+                    );
+                    let mut att = scratch.lease(hq * dd);
+                    for hh in 0..hq {
+                        let denom = lb[hh].max(1e-30);
+                        for c in 0..dd {
+                            att[hh * dd + c] = accb[hh * dd + c] / denom;
                         }
                     }
-                    let att = p.finalize();
-                    let mut proj = vec![0.0; d];
+                    let mut proj = scratch.lease(d);
                     matvec(&att, wo, d, &mut proj);
                     for i in 0..d {
                         xr[i] += proj[i];
                     }
-                    let mut h2 = vec![0.0; d];
+                    let mut h2 = scratch.lease(d);
                     rmsnorm(&xr[..], ln2, &mut h2);
-                    let mut mid = vec![0.0; dff];
+                    let mut mid = scratch.lease(dff);
                     matvec(&h2, w1, dff, &mut mid);
                     for v in mid.iter_mut() {
                         *v = silu(*v);
                     }
-                    let mut back = vec![0.0; d];
+                    let mut back = scratch.lease(d);
                     matvec(&mid, w2, d, &mut back);
                     for i in 0..d {
                         xr[i] += back[i];
                     }
                 });
-            }
-            let base = layer * s_max * w;
-            for t in 0..n {
-                k_out.data_mut()[base + t * w..base + (t + 1) * w].copy_from_slice(&ks[t]);
-                v_out.data_mut()[base + t * w..base + (t + 1) * w].copy_from_slice(&vs[t]);
             }
         }
         let h_last = if n > 0 { xs[n - 1].clone() } else { vec![0.0; d] };
@@ -726,5 +785,61 @@ mod tests {
                 .unwrap();
             assert_eq!(outs[0].data(), base[0].data(), "threads={threads}");
         }
+    }
+
+    #[test]
+    fn steady_state_rows_do_not_grow_the_arena() {
+        // Interpreter rows must be allocation-free once the arena is
+        // warm: repeated executes of the row-bearing entries may not
+        // grow the scratch high-water mark after the first call.
+        // threads=1 keeps lease concurrency deterministic.
+        let spec = builtin_preset("test-tiny").unwrap();
+        let m = Manifest::synthesize(&spec).unwrap();
+        let be = InterpreterBackend::with_threads(spec.clone(), 1);
+        let (b, d) = (spec.batch, spec.d_model);
+        let (hq, hkv, dd) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
+        let (kb, bs, vsz) = (spec.k_blocks, spec.block_size, spec.vocab);
+        let x = Tensor::full(&[b, d], 0.1);
+        let ln = Tensor::full(&[d], 1.0);
+        let wq = Tensor::full(&[d, hq * dd], 0.01);
+        let wk = Tensor::full(&[d, hkv * dd], 0.01);
+        let wv = Tensor::full(&[d, hkv * dd], 0.01);
+        let pos_shape = [b];
+        let pos: Vec<i32> = vec![5; b];
+        let pre = m.entry("layer_pre_attn").unwrap();
+        let pre_ops = [
+            Operand::t(&x),
+            Operand::t(&ln),
+            Operand::t(&wq),
+            Operand::t(&wk),
+            Operand::t(&wv),
+            Operand::I32 { shape: &pos_shape, data: &pos },
+        ];
+        let q = Tensor::full(&[b, hq, dd], 0.2);
+        let kg = Tensor::full(&[b, kb, bs, hkv, dd], 0.3);
+        let vg = kg.clone();
+        let mask = Tensor::full(&[b, kb, bs], 1.0);
+        let attn = m.entry("sparse_attn").unwrap();
+        let attn_ops =
+            [Operand::t(&q), Operand::t(&kg), Operand::t(&vg), Operand::t(&mask)];
+        let emb = Tensor::full(&[vsz, d], 0.02);
+        let lm = m.entry("lm_head").unwrap();
+        let lm_ops = [Operand::t(&x), Operand::t(&ln), Operand::t(&emb)];
+        // warm the arena once
+        be.execute(pre, "layer_pre_attn", &pre_ops).unwrap();
+        be.execute(attn, "sparse_attn", &attn_ops).unwrap();
+        be.execute(lm, "lm_head", &lm_ops).unwrap();
+        let warm = be.scratch_allocations().unwrap();
+        assert!(warm > 0, "arena should have populated classes");
+        for _ in 0..4 {
+            be.execute(pre, "layer_pre_attn", &pre_ops).unwrap();
+            be.execute(attn, "sparse_attn", &attn_ops).unwrap();
+            be.execute(lm, "lm_head", &lm_ops).unwrap();
+        }
+        assert_eq!(
+            be.scratch_allocations().unwrap(),
+            warm,
+            "steady-state interpreter rows must not allocate scratch"
+        );
     }
 }

@@ -10,4 +10,4 @@ pub mod locality;
 pub mod topk;
 
 pub use locality::{CpuRatioSeries, LocalityTracker};
-pub use topk::{score_blocks_native, select_topk, TopkSelection};
+pub use topk::{score_blocks_native, score_blocks_slabs, select_topk, TopkSelection};

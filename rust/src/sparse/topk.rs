@@ -13,10 +13,11 @@ pub struct TopkSelection {
 
 /// Native Quest scores: `score[b] = sum_h sum_d max(q*kmin, q*kmax)`.
 ///
-/// Mirrors the `block_scores` L1 kernel bit-for-bit (same operation
-/// order per channel) — parity is enforced by the integration test
-/// against the XLA artifact. `q` is `[Hq, D]`, digests are `[Hkv*D]`
-/// per block; GQA maps query head `h` to kv head `h / (Hq/Hkv)`.
+/// Same per-head operation order as the `block_scores` L1 kernel —
+/// parity is enforced by the integration test against the backend
+/// entry. `q` is `[Hq, D]`, digests are `[Hkv*D]` per block; GQA maps
+/// query head `h` to kv head `h / (Hq/Hkv)`. The per-head channel sum
+/// runs on the SIMD kernel plane (`util::simd::digest_score`).
 pub fn score_blocks_native(
     q: &[f32],
     digests: &DigestStore,
@@ -26,20 +27,40 @@ pub fn score_blocks_native(
     hkv: usize,
     d: usize,
 ) -> Vec<f32> {
+    let (kmin, kmax) = digests.layer(layer);
+    score_blocks_slabs(q, kmin.data(), kmax.data(), digests.n_blocks(), n_full_blocks, hq, hkv, d)
+}
+
+/// [`score_blocks_native`] over borrowed dense digest slabs
+/// (`[nb, Hkv*D]` kmin/kmax) — the form the sharded store's
+/// `LayerView::digests` hands out without constructing a `DigestStore`.
+#[allow(clippy::too_many_arguments)]
+pub fn score_blocks_slabs(
+    q: &[f32],
+    kmin: &[f32],
+    kmax: &[f32],
+    n_blocks: usize,
+    n_full_blocks: usize,
+    hq: usize,
+    hkv: usize,
+    d: usize,
+) -> Vec<f32> {
     debug_assert_eq!(q.len(), hq * d);
     let g = hq / hkv;
-    let mut scores = vec![f32::NEG_INFINITY; digests.n_blocks()];
+    let w = hkv * d;
+    debug_assert!(kmin.len() >= n_blocks * w && kmax.len() >= n_blocks * w);
+    let mut scores = vec![f32::NEG_INFINITY; n_blocks];
     for (b, score) in scores.iter_mut().enumerate().take(n_full_blocks) {
-        let (lo, hi) = digests.block(layer, b);
+        let lo = &kmin[b * w..(b + 1) * w];
+        let hi = &kmax[b * w..(b + 1) * w];
         let mut s = 0.0f32;
         for h in 0..hq {
             let kvh = h / g;
-            let qrow = &q[h * d..(h + 1) * d];
-            let lorow = &lo[kvh * d..(kvh + 1) * d];
-            let hirow = &hi[kvh * d..(kvh + 1) * d];
-            for i in 0..d {
-                s += (qrow[i] * lorow[i]).max(qrow[i] * hirow[i]);
-            }
+            s += crate::util::simd::digest_score(
+                &q[h * d..(h + 1) * d],
+                &lo[kvh * d..(kvh + 1) * d],
+                &hi[kvh * d..(kvh + 1) * d],
+            );
         }
         *score = s;
     }

@@ -51,7 +51,7 @@ pub fn tab1_query_similarity(seed: u64, out: &mut dyn Write) -> crate::Result<()
                 // full attention to advance the layer faithfully
                 let mut p = engine.attend_tail(&q_real, &cache, layer, &k_new, &v_new);
                 for b in 0..cache.full_blocks() {
-                    p.merge(&engine.attend_blocks(&q_real, &cache, layer, &[b]));
+                    p.merge(&engine.attend_blocks(&q_real, &cache.layer_slabs(layer), &[b]));
                 }
                 engine.post_attn(&mut xi, &p, layer);
                 kn.push(k_new);

@@ -1,14 +1,19 @@
 //! In-tree substrates for the offline build environment (the vendored
 //! crate universe is exactly the `xla` stub + `anyhow` shim): a JSON
 //! parser/writer, a seeded PRNG, a tiny bench timer, scoped fork-join
-//! helpers ([`par`]) for the numerics plane, and the NaN-aware
-//! [`argmax`] shared by every greedy-sampling path.
+//! helpers ([`par`]) for the numerics plane, the runtime-dispatched
+//! [`simd`] kernel plane with its [`rope`] frequency table and
+//! zero-alloc [`arena`] scratch pool, and the NaN-aware [`argmax`]
+//! shared by every greedy-sampling path.
 
+pub mod arena;
 pub mod argmax;
 pub mod bench;
 pub mod json;
 pub mod par;
 pub mod rng;
+pub mod rope;
+pub mod simd;
 
 pub use argmax::argmax;
 pub use json::Json;

@@ -1,0 +1,105 @@
+//! Precomputed rotary-embedding frequency table.
+//!
+//! The seed's `rope_inplace` recomputed `theta.powf(-i/half)` for every
+//! head of every token — `powf` is by far the most expensive scalar op
+//! on the QKV path. The frequencies depend only on `(theta, head_dim)`,
+//! so both engines build one [`RopeTable`] at construction and reuse it
+//! for every (head, position). The table stores the *identical* `f64`
+//! `powf` values the seed computed, so applying it is bit-identical to
+//! the original loop.
+
+/// Cached per-channel RoPE frequencies for one head dimension.
+#[derive(Debug, Clone)]
+pub struct RopeTable {
+    head_dim: usize,
+    /// `freqs[i] = theta^(-i / half)` for `i in 0..half`.
+    freqs: Vec<f64>,
+}
+
+impl RopeTable {
+    pub fn new(theta: f64, head_dim: usize) -> Self {
+        let half = head_dim / 2;
+        let freqs =
+            (0..half).map(|i| theta.powf(-(i as f64) / half.max(1) as f64)).collect();
+        Self { head_dim, freqs }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Rotate-half RoPE applied in place to `x [h, d]` at position
+    /// `pos`; bit-identical to the seed's `rope_inplace` (and to
+    /// `model.py::rope`). `d` must equal the table's `head_dim`.
+    pub fn apply(&self, x: &mut [f32], h: usize, d: usize, pos: i64) {
+        debug_assert_eq!(d, self.head_dim, "rope table built for a different head_dim");
+        let half = d / 2;
+        for head in 0..h {
+            let row = &mut x[head * d..(head + 1) * d];
+            for (i, &freq) in self.freqs.iter().enumerate().take(half) {
+                let ang = pos as f64 * freq;
+                let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
+                let (x1, x2) = (row[i], row[i + half]);
+                row[i] = x1 * cos - x2 * sin;
+                row[i + half] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The seed's per-call loop, verbatim (powf per head per channel).
+    fn rope_seed(x: &mut [f32], h: usize, d: usize, pos: i64, theta: f64) {
+        let half = d / 2;
+        for head in 0..h {
+            let row = &mut x[head * d..(head + 1) * d];
+            for i in 0..half {
+                let freq = theta.powf(-(i as f64) / half as f64);
+                let ang = pos as f64 * freq;
+                let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
+                let (x1, x2) = (row[i], row[i + half]);
+                row[i] = x1 * cos - x2 * sin;
+                row[i + half] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+
+    #[test]
+    fn table_is_bit_identical_to_seed_loop() {
+        let (h, d) = (3usize, 16usize);
+        let table = RopeTable::new(10000.0, d);
+        for pos in [0i64, 1, 17, 4095] {
+            let mut a: Vec<f32> = (0..h * d).map(|i| ((i as f32) * 0.37).sin()).collect();
+            let mut b = a.clone();
+            table.apply(&mut a, h, d, pos);
+            rope_seed(&mut b, h, d, pos, 10000.0);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "pos={pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let d = 32;
+        let table = RopeTable::new(10000.0, d);
+        let mut x: Vec<f32> = (0..2 * d).map(|i| (i as f32).sin()).collect();
+        let before: f32 = x.iter().map(|v| v * v).sum();
+        table.apply(&mut x, 2, d, 1234);
+        let after: f32 = x.iter().map(|v| v * v).sum();
+        assert!((before - after).abs() / before < 1e-5);
+    }
+
+    #[test]
+    fn degenerate_dims_are_safe() {
+        let t = RopeTable::new(10000.0, 0);
+        t.apply(&mut [], 0, 0, 5);
+        let t1 = RopeTable::new(10000.0, 1);
+        let mut x = [1.0f32];
+        t1.apply(&mut x, 1, 1, 3); // half == 0: no rotation
+        assert_eq!(x[0], 1.0);
+    }
+}

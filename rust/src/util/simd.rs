@@ -1,0 +1,862 @@
+//! SIMD kernel plane: the f32 primitives every decode-critical loop sits
+//! on — tiled `matvec`, `dot`, fused `axpy`, digest scoring, and the
+//! tiled softmax-accumulate behind block attention.
+//!
+//! Two implementations per kernel, selected once per process:
+//!
+//! - **Portable**: scalar loops that are *bit-identical* to the seed's
+//!   reference math (`engines/native.rs` pre-kernel-plane). This is the
+//!   correctness anchor: the equivalence suite pins the portable path
+//!   against verbatim copies of the old loops, and every other level is
+//!   only required to agree within float tolerance.
+//! - **Avx2**: 8-wide AVX2+FMA tiles compiled via `#[target_feature]`
+//!   (so they vectorize regardless of the crate's baseline target-cpu)
+//!   and gated at runtime by `is_x86_feature_detected!`. FMA contraction
+//!   and tiled softmax reordering change rounding, hence tolerance — not
+//!   bit equality — against Portable.
+//!
+//! Dispatch is cached in a `OnceLock`; `SCOUT_SIMD=portable` (or `avx2`)
+//! overrides detection, which is how CI runs the whole suite on the
+//! portable plane. Benches and the equivalence tests bypass the cache
+//! with the `*_with(level, ..)` variants to measure/compare both paths
+//! in one process.
+
+use std::sync::OnceLock;
+
+/// Merge-identity max score; equals `engines::partial::NEG_INF`.
+const NEG_INF: f32 = -1e30;
+
+/// Kernel implementation level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Scalar reference loops (bit-identical to the pre-kernel-plane math).
+    Portable,
+    /// 8-wide AVX2 + FMA tiles (x86_64 only, runtime-detected).
+    Avx2,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Portable => "portable",
+            Level::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Whether the AVX2+FMA path can run on this machine (cached: the
+/// guarded dispatch arms consult this on every kernel call).
+pub fn avx2_available() -> bool {
+    static AVAIL: OnceLock<bool> = OnceLock::new();
+    *AVAIL.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// The process-wide kernel level: `SCOUT_SIMD` env override (`portable`
+/// or `avx2`) when valid for this machine, else hardware detection.
+pub fn level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        if let Ok(v) = std::env::var("SCOUT_SIMD") {
+            match v.as_str() {
+                "portable" | "scalar" | "0" => return Level::Portable,
+                "avx2" if avx2_available() => return Level::Avx2,
+                _ => {}
+            }
+        }
+        if avx2_available() {
+            Level::Avx2
+        } else {
+            Level::Portable
+        }
+    })
+}
+
+// ---------------------------------------------------------------- dot --
+
+/// `a . b`, sequential accumulation (bit-identical to the seed's
+/// `iter().zip().map().sum()` loop).
+fn dot_portable(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// Dot product at an explicit level. Requesting [`Level::Avx2`] on a
+/// machine without AVX2+FMA (possible only via the explicit `_with`
+/// API — [`level`] never hands it out) falls back to Portable instead
+/// of executing unsupported instructions.
+pub fn dot_with(level: Level, a: &[f32], b: &[f32]) -> f32 {
+    match level {
+        Level::Portable => dot_portable(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 if avx2_available() => unsafe { x86::dot(a, b) },
+        Level::Avx2 => dot_portable(a, b),
+    }
+}
+
+/// Dot product at the process-wide level.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_with(level(), a, b)
+}
+
+// --------------------------------------------------------------- axpy --
+
+/// `y += a * x` (the contiguous inner step of `matvec` and the partial
+/// accumulate), element order identical to the seed loop.
+fn axpy_portable(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+pub fn axpy_with(level: Level, a: f32, x: &[f32], y: &mut [f32]) {
+    match level {
+        Level::Portable => axpy_portable(a, x, y),
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 if avx2_available() => unsafe { x86::axpy(a, x, y) },
+        Level::Avx2 => axpy_portable(a, x, y),
+    }
+}
+
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    axpy_with(level(), a, x, y)
+}
+
+// ------------------------------------------------------------- matvec --
+
+/// `x [m] @ w [m, n] -> out [n]` at an explicit level. Row-major `w`;
+/// i-outer so the inner step is a contiguous axpy. The `xi == 0.0` skip
+/// is kept on every level: besides being a win for sparse activations it
+/// keeps the portable path bit-identical to the seed (adding `0.0 * w`
+/// would flip a `-0.0` accumulator to `+0.0`).
+pub fn matvec_with(level: Level, x: &[f32], w: &[f32], n: usize, out: &mut [f32]) {
+    let m = x.len();
+    debug_assert_eq!(w.len(), m * n);
+    debug_assert_eq!(out.len(), n);
+    out.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        axpy_with(level, xi, &w[i * n..(i + 1) * n], out);
+    }
+}
+
+#[inline]
+pub fn matvec(x: &[f32], w: &[f32], n: usize, out: &mut [f32]) {
+    matvec_with(level(), x, w, n, out)
+}
+
+// -------------------------------------------------------------- scale --
+
+/// `y *= a` (partial-accumulator rescale in the tiled softmax).
+fn scale_portable(y: &mut [f32], a: f32) {
+    for yi in y.iter_mut() {
+        *yi *= a;
+    }
+}
+
+pub fn scale_with(level: Level, y: &mut [f32], a: f32) {
+    match level {
+        Level::Portable => scale_portable(y, a),
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 if avx2_available() => unsafe { x86::scale(y, a) },
+        Level::Avx2 => scale_portable(y, a),
+    }
+}
+
+// ------------------------------------------------------- digest score --
+
+/// One head-row of the Quest digest score:
+/// `sum_i max(q[i]*lo[i], q[i]*hi[i])`. Sequential accumulation —
+/// bit-identical per head to the seed's `score_blocks_native` loop.
+fn digest_score_portable(q: &[f32], lo: &[f32], hi: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for ((qv, lv), hv) in q.iter().zip(lo).zip(hi) {
+        s += (qv * lv).max(qv * hv);
+    }
+    s
+}
+
+pub fn digest_score_with(level: Level, q: &[f32], lo: &[f32], hi: &[f32]) -> f32 {
+    match level {
+        Level::Portable => digest_score_portable(q, lo, hi),
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 if avx2_available() => unsafe { x86::digest_score(q, lo, hi) },
+        Level::Avx2 => digest_score_portable(q, lo, hi),
+    }
+}
+
+#[inline]
+pub fn digest_score(q: &[f32], lo: &[f32], hi: &[f32]) -> f32 {
+    digest_score_with(level(), q, lo, hi)
+}
+
+// --------------------------------------------------- softmax-accumulate --
+
+/// Accumulate one KV slab into a running `(acc, m, l)` attention partial
+/// (the FlashAttention online-softmax state; see `engines/partial.rs`).
+///
+/// - `q` is `[hq * dd]`, `k_slab`/`v_slab` are `[tokens, hkv * dd]`
+///   row-major, `mask` (if present) is `[tokens]` with `> 0.0` = valid.
+/// - `acc [hq*dd]`, `m [hq]`, `l [hq]` are updated in place; the caller
+///   initializes them to the merge identity (`0, NEG_INF, 0`) or to a
+///   previous slab's partial — accumulating slab-by-slab is numerically
+///   the LSE merge of per-slab partials.
+/// - `scores` is caller-owned scratch of at least `tokens` floats (only
+///   the tiled level touches it; sizing it once per row keeps the hot
+///   path allocation-free).
+///
+/// Portable runs the seed's exact t-outer/h-inner per-token online
+/// update (bit-identical to `Partial::update_token` sequencing). Avx2
+/// tiles per head: one vectorized score pass over the slab, one max,
+/// one rescale of the accumulator, then a vectorized weighted-V
+/// accumulate — `exp` count drops from 2 to ~1 per (token, head).
+#[allow(clippy::too_many_arguments)]
+pub fn softmax_accum_with(
+    level: Level,
+    q: &[f32],
+    k_slab: &[f32],
+    v_slab: &[f32],
+    mask: Option<&[f32]>,
+    tokens: usize,
+    hq: usize,
+    hkv: usize,
+    dd: usize,
+    scale: f32,
+    acc: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+    scores: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), hq * dd);
+    debug_assert!(k_slab.len() >= tokens * hkv * dd);
+    debug_assert!(v_slab.len() >= tokens * hkv * dd);
+    debug_assert_eq!(acc.len(), hq * dd);
+    debug_assert_eq!(m.len(), hq);
+    debug_assert_eq!(l.len(), hq);
+    if tokens == 0 || hq == 0 {
+        return;
+    }
+    match level {
+        Level::Portable => {
+            softmax_accum_portable(q, k_slab, v_slab, mask, tokens, hq, hkv, dd, scale, acc, m, l)
+        }
+        Level::Avx2 => {
+            debug_assert!(scores.len() >= tokens, "scores scratch too small");
+            softmax_accum_tiled(
+                level, q, k_slab, v_slab, mask, tokens, hq, hkv, dd, scale, acc, m, l, scores,
+            )
+        }
+    }
+}
+
+/// Process-wide-level variant; see [`softmax_accum_with`].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn softmax_accum(
+    q: &[f32],
+    k_slab: &[f32],
+    v_slab: &[f32],
+    mask: Option<&[f32]>,
+    tokens: usize,
+    hq: usize,
+    hkv: usize,
+    dd: usize,
+    scale: f32,
+    acc: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+    scores: &mut [f32],
+) {
+    softmax_accum_with(
+        level(),
+        q,
+        k_slab,
+        v_slab,
+        mask,
+        tokens,
+        hq,
+        hkv,
+        dd,
+        scale,
+        acc,
+        m,
+        l,
+        scores,
+    )
+}
+
+/// The seed's per-token online-softmax update, verbatim sequencing.
+#[allow(clippy::too_many_arguments)]
+fn softmax_accum_portable(
+    q: &[f32],
+    k_slab: &[f32],
+    v_slab: &[f32],
+    mask: Option<&[f32]>,
+    tokens: usize,
+    hq: usize,
+    hkv: usize,
+    dd: usize,
+    scale: f32,
+    acc: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+) {
+    let g = hq / hkv;
+    let w = hkv * dd;
+    for t in 0..tokens {
+        if let Some(ms) = mask {
+            if ms[t] <= 0.0 {
+                continue;
+            }
+        }
+        let krow = &k_slab[t * w..(t + 1) * w];
+        let vrow = &v_slab[t * w..(t + 1) * w];
+        for h in 0..hq {
+            let kvh = h / g;
+            let s = dot_portable(&q[h * dd..(h + 1) * dd], &krow[kvh * dd..(kvh + 1) * dd])
+                * scale;
+            let m_new = m[h].max(s);
+            let alpha = (m[h] - m_new).exp();
+            let p = (s - m_new).exp();
+            let ah = &mut acc[h * dd..(h + 1) * dd];
+            for (ai, &vi) in ah.iter_mut().zip(&vrow[kvh * dd..(kvh + 1) * dd]) {
+                *ai = *ai * alpha + p * vi;
+            }
+            l[h] = l[h] * alpha + p;
+            m[h] = m_new;
+        }
+    }
+}
+
+/// Tiled head-outer accumulate: one score pass, one rescale, one
+/// weighted-V pass per head. `level` selects the vector primitives.
+#[allow(clippy::too_many_arguments)]
+fn softmax_accum_tiled(
+    level: Level,
+    q: &[f32],
+    k_slab: &[f32],
+    v_slab: &[f32],
+    mask: Option<&[f32]>,
+    tokens: usize,
+    hq: usize,
+    hkv: usize,
+    dd: usize,
+    scale: f32,
+    acc: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+    scores: &mut [f32],
+) {
+    let g = hq / hkv;
+    let w = hkv * dd;
+    for h in 0..hq {
+        let kvh = h / g;
+        let qh = &q[h * dd..(h + 1) * dd];
+        let mut m_blk = NEG_INF;
+        for t in 0..tokens {
+            let masked = match mask {
+                Some(ms) => ms[t] <= 0.0,
+                None => false,
+            };
+            let s = if masked {
+                NEG_INF
+            } else {
+                dot_with(level, qh, &k_slab[t * w + kvh * dd..t * w + (kvh + 1) * dd]) * scale
+            };
+            scores[t] = s;
+            if s > m_blk {
+                m_blk = s;
+            }
+        }
+        if m_blk <= NEG_INF {
+            continue; // every token masked: the merge identity
+        }
+        let m_new = m[h].max(m_blk);
+        let alpha = (m[h] - m_new).exp();
+        let ah = &mut acc[h * dd..(h + 1) * dd];
+        if alpha != 1.0 {
+            scale_with(level, ah, alpha);
+        }
+        let mut l_acc = l[h] * alpha;
+        for t in 0..tokens {
+            let s = scores[t];
+            if s <= NEG_INF {
+                continue;
+            }
+            let p = (s - m_new).exp();
+            axpy_with(level, p, &v_slab[t * w + kvh * dd..t * w + (kvh + 1) * dd], ah);
+            l_acc += p;
+        }
+        l[h] = l_acc;
+        m[h] = m_new;
+    }
+}
+
+// --------------------------------------------------------- AVX2 tiles --
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps(v, 1);
+        let lo = _mm256_castps256_ps128(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 8)),
+                _mm256_loadu_ps(bp.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let va = _mm256_set1_ps(a);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let yv = _mm256_fmadd_ps(va, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            _mm256_storeu_ps(yp.add(i), yv);
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) += a * *xp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scale(y: &mut [f32], a: f32) {
+        let n = y.len();
+        let va = _mm256_set1_ps(a);
+        let yp = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(yp.add(i), _mm256_mul_ps(va, _mm256_loadu_ps(yp.add(i))));
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) *= a;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn digest_score(q: &[f32], lo: &[f32], hi: &[f32]) -> f32 {
+        debug_assert_eq!(q.len(), lo.len());
+        debug_assert_eq!(q.len(), hi.len());
+        let n = q.len();
+        let qp = q.as_ptr();
+        let lp = lo.as_ptr();
+        let hp = hi.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let qv = _mm256_loadu_ps(qp.add(i));
+            let a = _mm256_mul_ps(qv, _mm256_loadu_ps(lp.add(i)));
+            let b = _mm256_mul_ps(qv, _mm256_loadu_ps(hp.add(i)));
+            acc = _mm256_add_ps(acc, _mm256_max_ps(a, b));
+            i += 8;
+        }
+        let mut s = hsum256(acc);
+        while i < n {
+            let qv = *qp.add(i);
+            s += (qv * *lp.add(i)).max(qv * *hp.add(i));
+            i += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    /// Lengths exercising tails: empty, sub-lane, one lane, lane+1,
+    /// two-lane unroll boundary, odd primes, and a long run.
+    const LENS: &[usize] = &[0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 33, 100, 257];
+
+    fn rand_vec(rng: &mut Rng64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    fn close(a: f32, b: f32, rel: f32) -> bool {
+        (a - b).abs() <= rel * a.abs().max(b.abs()).max(1.0)
+    }
+
+    // ---- portable == the seed's scalar loops, bitwise ----
+
+    #[test]
+    fn portable_dot_bit_identical_to_seed_loop() {
+        let mut rng = Rng64::new(1);
+        for &n in LENS {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let seed: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert_eq!(dot_with(Level::Portable, &a, &b).to_bits(), seed.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn portable_matvec_bit_identical_to_seed_loop() {
+        let mut rng = Rng64::new(2);
+        for &(m, n) in &[(0usize, 4usize), (1, 1), (3, 7), (8, 16), (17, 33), (64, 100)] {
+            let mut x = rand_vec(&mut rng, m);
+            if m > 2 {
+                x[1] = 0.0; // exercise the zero-skip
+            }
+            let w = rand_vec(&mut rng, m * n);
+            // the seed's loop, verbatim
+            let mut want = vec![0.0f32; n];
+            for i in 0..m {
+                let xi = x[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &w[i * n..(i + 1) * n];
+                for (o, &wij) in want.iter_mut().zip(row) {
+                    *o += xi * wij;
+                }
+            }
+            let mut got = vec![9.0f32; n];
+            matvec_with(Level::Portable, &x, &w, n, &mut got);
+            for (g, e) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), e.to_bits(), "m={m} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn portable_digest_score_bit_identical_to_seed_loop() {
+        let mut rng = Rng64::new(3);
+        for &n in LENS {
+            let q = rand_vec(&mut rng, n);
+            let lo = rand_vec(&mut rng, n);
+            let hi = rand_vec(&mut rng, n);
+            let mut seed = 0.0f32;
+            for i in 0..n {
+                seed += (q[i] * lo[i]).max(q[i] * hi[i]);
+            }
+            let got = digest_score_with(Level::Portable, &q, &lo, &hi);
+            assert_eq!(got.to_bits(), seed.to_bits(), "n={n}");
+        }
+    }
+
+    // ---- avx2 == portable within tolerance ----
+
+    #[test]
+    fn avx2_dot_matches_portable() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Rng64::new(4);
+        for &n in LENS {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let p = dot_with(Level::Portable, &a, &b);
+            let v = dot_with(Level::Avx2, &a, &b);
+            assert!(close(p, v, 1e-5), "n={n}: {p} vs {v}");
+        }
+    }
+
+    #[test]
+    fn avx2_axpy_and_scale_match_portable() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Rng64::new(5);
+        for &n in LENS {
+            let x = rand_vec(&mut rng, n);
+            let mut yp = rand_vec(&mut rng, n);
+            let mut yv = yp.clone();
+            axpy_with(Level::Portable, 0.37, &x, &mut yp);
+            axpy_with(Level::Avx2, 0.37, &x, &mut yv);
+            for (p, v) in yp.iter().zip(&yv) {
+                assert!(close(*p, *v, 1e-5), "axpy n={n}: {p} vs {v}");
+            }
+            scale_with(Level::Portable, &mut yp, -1.7);
+            scale_with(Level::Avx2, &mut yv, -1.7);
+            for (p, v) in yp.iter().zip(&yv) {
+                assert!(close(*p, *v, 1e-5), "scale n={n}: {p} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_matvec_matches_portable() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Rng64::new(6);
+        for &(m, n) in &[(1usize, 1usize), (3, 7), (8, 16), (17, 33), (64, 100), (96, 8)] {
+            let x = rand_vec(&mut rng, m);
+            let w = rand_vec(&mut rng, m * n);
+            let mut op = vec![0.0f32; n];
+            let mut ov = vec![0.0f32; n];
+            matvec_with(Level::Portable, &x, &w, n, &mut op);
+            matvec_with(Level::Avx2, &x, &w, n, &mut ov);
+            for (p, v) in op.iter().zip(&ov) {
+                assert!(close(*p, *v, 1e-5), "m={m} n={n}: {p} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_digest_score_matches_portable() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Rng64::new(7);
+        for &n in LENS {
+            let q = rand_vec(&mut rng, n);
+            let lo = rand_vec(&mut rng, n);
+            let hi = rand_vec(&mut rng, n);
+            let p = digest_score_with(Level::Portable, &q, &lo, &hi);
+            let v = digest_score_with(Level::Avx2, &q, &lo, &hi);
+            assert!(close(p, v, 1e-5), "n={n}: {p} vs {v}");
+        }
+    }
+
+    // ---- softmax-accumulate ----
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_softmax(
+        level: Level,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        mask: Option<&[f32]>,
+        tokens: usize,
+        hq: usize,
+        hkv: usize,
+        dd: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut acc = vec![0.0f32; hq * dd];
+        let mut m = vec![NEG_INF; hq];
+        let mut l = vec![0.0f32; hq];
+        let mut scratch = vec![0.0f32; tokens.max(1)];
+        softmax_accum_with(
+            level, q, k, v, mask, tokens, hq, hkv, dd, 0.25, &mut acc, &mut m, &mut l,
+            &mut scratch,
+        );
+        (acc, m, l)
+    }
+
+    #[test]
+    fn portable_softmax_bit_identical_to_update_token_loop() {
+        // The seed's Partial::update_token sequencing, verbatim.
+        let (hq, hkv, dd) = (4usize, 2usize, 8usize);
+        let (g, w) = (hq / hkv, hkv * dd);
+        let mut rng = Rng64::new(8);
+        for &tokens in &[1usize, 2, 5, 8, 13] {
+            let q = rand_vec(&mut rng, hq * dd);
+            let k = rand_vec(&mut rng, tokens * w);
+            let v = rand_vec(&mut rng, tokens * w);
+            let mut p = crate::engines::Partial::empty(hq, dd);
+            for t in 0..tokens {
+                let krow = &k[t * w..(t + 1) * w];
+                let vrow = &v[t * w..(t + 1) * w];
+                for h in 0..hq {
+                    let kvh = h / g;
+                    let s = krow[kvh * dd..(kvh + 1) * dd]
+                        .iter()
+                        .zip(&q[h * dd..(h + 1) * dd])
+                        .map(|(x, y)| x * y)
+                        .sum::<f32>()
+                        * 0.25;
+                    p.update_token(h, s, &vrow[kvh * dd..(kvh + 1) * dd]);
+                }
+            }
+            let (acc, m, l) = run_softmax(Level::Portable, &q, &k, &v, None, tokens, hq, hkv, dd);
+            // NOTE update_token computes dot(v-row, q) here; zip order in
+            // the seed is dot(q, k) — multiplication commutes bitwise.
+            for (a, b) in acc.iter().zip(&p.acc) {
+                assert_eq!(a.to_bits(), b.to_bits(), "acc tokens={tokens}");
+            }
+            for (a, b) in m.iter().zip(&p.m) {
+                assert_eq!(a.to_bits(), b.to_bits(), "m tokens={tokens}");
+            }
+            for (a, b) in l.iter().zip(&p.l) {
+                assert_eq!(a.to_bits(), b.to_bits(), "l tokens={tokens}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_softmax_matches_portable() {
+        let (hq, hkv, dd) = (4usize, 2usize, 12usize);
+        let w = hkv * dd;
+        let mut rng = Rng64::new(9);
+        for &tokens in &[1usize, 3, 8, 16, 17] {
+            let q = rand_vec(&mut rng, hq * dd);
+            let k = rand_vec(&mut rng, tokens * w);
+            let v = rand_vec(&mut rng, tokens * w);
+            // mask out a couple of tokens
+            let mut mask = vec![1.0f32; tokens];
+            if tokens > 2 {
+                mask[1] = 0.0;
+            }
+            for msk in [None, Some(&mask[..])] {
+                let (ap, mp, lp) =
+                    run_softmax(Level::Portable, &q, &k, &v, msk, tokens, hq, hkv, dd);
+                // The tiled algorithm itself (portable primitives): must
+                // agree with the per-token order within tolerance.
+                let mut acc = vec![0.0f32; hq * dd];
+                let mut m = vec![NEG_INF; hq];
+                let mut l = vec![0.0f32; hq];
+                let mut scratch = vec![0.0f32; tokens];
+                softmax_accum_tiled(
+                    Level::Portable,
+                    &q,
+                    &k,
+                    &v,
+                    msk,
+                    tokens,
+                    hq,
+                    hkv,
+                    dd,
+                    0.25,
+                    &mut acc,
+                    &mut m,
+                    &mut l,
+                    &mut scratch,
+                );
+                for (a, b) in acc.iter().zip(&ap) {
+                    assert!(close(*a, *b, 1e-5), "tiled acc: {a} vs {b}");
+                }
+                for (a, b) in l.iter().zip(&lp) {
+                    assert!(close(*a, *b, 1e-5), "tiled l: {a} vs {b}");
+                }
+                for (a, b) in m.iter().zip(&mp) {
+                    assert!(close(*a, *b, 1e-5), "tiled m: {a} vs {b}");
+                }
+                if avx2_available() {
+                    let (av, mv, lv) =
+                        run_softmax(Level::Avx2, &q, &k, &v, msk, tokens, hq, hkv, dd);
+                    for (a, b) in av.iter().zip(&ap) {
+                        assert!(close(*a, *b, 1e-5), "avx2 acc: {a} vs {b}");
+                    }
+                    for (a, b) in lv.iter().zip(&lp) {
+                        assert!(close(*a, *b, 1e-5), "avx2 l: {a} vs {b}");
+                    }
+                    for (a, b) in mv.iter().zip(&mp) {
+                        assert!(close(*a, *b, 1e-5), "avx2 m: {a} vs {b}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fully_masked_slab_is_identity_on_every_level() {
+        let (hq, hkv, dd, tokens) = (2usize, 1usize, 4usize, 6usize);
+        let w = hkv * dd;
+        let mut rng = Rng64::new(10);
+        let q = rand_vec(&mut rng, hq * dd);
+        let k = rand_vec(&mut rng, tokens * w);
+        let v = rand_vec(&mut rng, tokens * w);
+        let mask = vec![0.0f32; tokens];
+        let levels: &[Level] = if avx2_available() {
+            &[Level::Portable, Level::Avx2]
+        } else {
+            &[Level::Portable]
+        };
+        for &lv in levels {
+            let (acc, m, l) =
+                run_softmax(lv, &q, &k, &v, Some(&mask), tokens, hq, hkv, dd);
+            assert!(acc.iter().all(|&x| x == 0.0), "{lv:?} acc");
+            assert!(l.iter().all(|&x| x == 0.0), "{lv:?} l");
+            assert!(m.iter().all(|&x| x <= NEG_INF), "{lv:?} m");
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        let mut out: Vec<f32> = vec![];
+        matvec_with(Level::Portable, &[], &[], 0, &mut out);
+        assert_eq!(dot_with(Level::Portable, &[], &[]), 0.0);
+        if avx2_available() {
+            assert_eq!(dot_with(Level::Avx2, &[], &[]), 0.0);
+            let mut y: Vec<f32> = vec![];
+            axpy_with(Level::Avx2, 1.0, &[], &mut y);
+            scale_with(Level::Avx2, &mut y, 2.0);
+        }
+        // tokens == 0 slab is a no-op on any level
+        let mut acc = vec![0.0f32; 4];
+        let mut m = vec![NEG_INF; 1];
+        let mut l = vec![0.0f32; 1];
+        let mut scratch = vec![0.0f32; 1];
+        softmax_accum_with(
+            level(),
+            &[0.0; 4],
+            &[],
+            &[],
+            None,
+            0,
+            1,
+            1,
+            4,
+            1.0,
+            &mut acc,
+            &mut m,
+            &mut l,
+            &mut scratch,
+        );
+        assert!(l[0] == 0.0 && m[0] <= NEG_INF);
+    }
+
+    #[test]
+    fn level_reports_a_valid_name() {
+        let lv = level();
+        assert!(lv == Level::Portable || lv == Level::Avx2);
+        assert!(!lv.name().is_empty());
+    }
+}

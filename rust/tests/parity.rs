@@ -96,7 +96,7 @@ fn sparse_attn_artifact_matches_native_blocks() {
     let p = stack.gpu.sparse_attn(&q, &k, &v, &m).unwrap();
     for s in 0..b {
         let qrow = &q.rows(s, 1)[..spec.n_q_heads * d];
-        let pn = stack.native.attend_blocks(qrow, &cache, 1, &blocks);
+        let pn = stack.native.attend_blocks(qrow, &cache.layer_slabs(1), &blocks);
         common::assert_close(p.acc.rows(s, 1), &pn.acc, 5e-4, 1e-5, "acc");
         common::assert_close(p.l.rows(s, 1), &pn.l, 5e-4, 1e-6, "l");
         common::assert_close(p.m.rows(s, 1), &pn.m, 5e-4, 1e-5, "m");
@@ -336,7 +336,7 @@ fn interpreter_partials_match_native_on_seeded_tiny_spec() {
     let p_sparse = gpu.sparse_attn(&q, &k, &v, &m).unwrap();
     for s in 0..b {
         let qrow = &q.rows(s, 1)[..hq * d];
-        let pn = native.attend_blocks(qrow, &cache, 1, &blocks);
+        let pn = native.attend_blocks(qrow, &cache.layer_slabs(1), &blocks);
         common::assert_close(p_sparse.acc.rows(s, 1), &pn.acc, 1e-5, 1e-6, "interp sparse acc");
         common::assert_close(p_sparse.m.rows(s, 1), &pn.m, 1e-5, 1e-6, "interp sparse m");
         common::assert_close(p_sparse.l.rows(s, 1), &pn.l, 1e-5, 1e-6, "interp sparse l");

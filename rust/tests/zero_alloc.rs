@@ -1,0 +1,62 @@
+//! Steady-state allocation regression for the decode hot path.
+//!
+//! The interpreter backend's row temporaries come from a size-classed
+//! scratch arena (`util::arena`): the first steps of a workload populate
+//! the classes, and every later decode step must check the same sizes
+//! back out with zero fresh allocations. The arena's high-water counter
+//! (`Runtime::scratch_allocations`) makes that a hard assertion — if a
+//! row regresses to `vec![0.0; ..]`-per-step (or a lease size starts
+//! varying per step), the counter moves and this test fails.
+//!
+//! Runs the full Scout scheduler (worker groups, staged recall, gathers,
+//! merges) on a single-threaded interpreter so lease concurrency — and
+//! therefore the counter — is deterministic.
+
+use std::sync::Arc;
+
+use scoutattention::config::{RecallPolicy, ScoutConfig};
+use scoutattention::coordinator::{Batch, DecodeScheduler, RecallController, ScoutScheduler};
+use scoutattention::engines::{GpuEngine, NativeEngine};
+use scoutattention::model::spec::builtin_preset;
+use scoutattention::model::Weights;
+use scoutattention::runtime::Runtime;
+use scoutattention::workload::{LengthMix, WorkloadGen};
+
+#[test]
+fn steady_state_decode_keeps_the_scratch_arena_flat() {
+    let spec = builtin_preset("test-tiny").unwrap();
+    let rt = Arc::new(Runtime::for_spec_with_threads(&spec, 1).unwrap());
+    let weights = Weights::generate(&spec, 7, 1.0);
+    let gpu = Arc::new(GpuEngine::new(rt.clone(), weights.clone()).unwrap());
+    let native = Arc::new(NativeEngine::new(spec.clone(), weights));
+    let cfg = ScoutConfig {
+        recall: RecallPolicy::Fixed { interval: 2 },
+        ..ScoutConfig::default()
+    };
+    let recall = RecallController::new(&cfg, spec.n_layers, None);
+    let mut sched = ScoutScheduler::new(gpu, native, cfg, recall);
+
+    let mut batch = Batch::new(spec.clone(), 2, 2);
+    let mut gen =
+        WorkloadGen::new(3, spec.vocab, LengthMix::Fixed(spec.block_size * 3 + 2), 64);
+    for req in (&mut gen).take(2) {
+        sched.admit(&mut batch, &req).expect("prefill");
+    }
+
+    // Warm: a few decode steps populate every scratch size class
+    // (crossing at least one block boundary along the way).
+    for _ in 0..3 {
+        sched.step(&mut batch).expect("warmup step");
+    }
+    let warm = rt.scratch_allocations().expect("interpreter backend has an arena");
+    assert!(warm > 0, "decode should have populated scratch classes");
+
+    for _ in 0..5 {
+        sched.step(&mut batch).expect("steady step");
+    }
+    assert_eq!(
+        rt.scratch_allocations().unwrap(),
+        warm,
+        "steady-state decode must not allocate interpreter row scratch"
+    );
+}
