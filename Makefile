@@ -10,7 +10,7 @@
 PRESETS ?= test-tiny
 ARTIFACTS_DIR := artifacts
 
-.PHONY: all build test bench bench-smoke bench-baseline clippy fmt artifacts clean
+.PHONY: all build test bench bench-smoke bench-baseline bench-serve clippy fmt artifacts clean
 
 all: build
 
@@ -38,6 +38,12 @@ bench-smoke: build
 bench-baseline: build
 	cargo bench --bench hotpath_micro
 	cargo bench --bench worker_group_scaling
+
+# Serving-plane scaling: requests/s + TTFT p50/p99 vs replica count,
+# written to BENCH_serve.json. On a >=4-core host the 4-replica arm
+# asserts >= 2x the single-replica requests/s.
+bench-serve: build
+	cargo bench --bench serve_throughput
 
 clippy:
 	cargo clippy --workspace --all-targets -- -D warnings

@@ -1,0 +1,123 @@
+//! Serving-plane scaling: aggregate decode requests/s and TTFT of the
+//! engine pool as the replica count grows.
+//!
+//! Each arm starts a fresh pool (`max_batch = 1` per replica, so a
+//! replica serves exactly one request at a time and the arm isolates
+//! *replica-level* parallelism), submits a fixed request stream through
+//! the router, and waits for every output. Requests/s and TTFT p50/p99
+//! come from the pool's own telemetry — the same numbers `{"stats":
+//! true}` serves in production.
+//!
+//! Writes BENCH_serve.json at the repo root (rows: replicas, requests/s,
+//! ttft p50/p99 us, tokens/s). On a host with >= 4 cores the 4-replica
+//! arm must deliver >= 2x the single-replica requests/s.
+
+use scoutattention::config::RunConfig;
+use scoutattention::serve::{EnginePool, StreamHandle, Submission};
+use scoutattention::util::bench::smoke;
+use scoutattention::util::Json;
+
+const PROMPT_LEN: usize = 64;
+
+fn prompt(salt: u32) -> Vec<u32> {
+    (0..PROMPT_LEN as u32).map(|i| 1 + (i * 13 + salt * 5) % 255).collect()
+}
+
+struct ArmResult {
+    replicas: usize,
+    requests: usize,
+    requests_per_s: f64,
+    tokens_per_s: f64,
+    ttft_p50_us: f64,
+    ttft_p99_us: f64,
+}
+
+fn run_arm(replicas: usize, n_req: usize, new_tokens: usize) -> ArmResult {
+    let mut cfg = RunConfig::for_preset("test-tiny");
+    cfg.server.replicas = replicas;
+    cfg.server.max_batch = 1; // one request per replica at a time
+    cfg.server.queue_depth = n_req.max(1);
+    let pool = EnginePool::start(cfg).expect("pool start");
+
+    let t0 = std::time::Instant::now();
+    let handles: Vec<StreamHandle> = (0..n_req)
+        .map(|i| pool.submit(Submission::new(prompt(i as u32), new_tokens)))
+        .collect();
+    for h in handles {
+        h.wait().expect("request completed");
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let stats = pool.stats();
+    let ttft = stats.get("ttft_us").expect("ttft in stats");
+    let out = ArmResult {
+        replicas,
+        requests: n_req,
+        requests_per_s: n_req as f64 / wall_s,
+        tokens_per_s: (n_req * new_tokens) as f64 / wall_s,
+        ttft_p50_us: ttft.req_f64("p50").unwrap_or(0.0),
+        ttft_p99_us: ttft.req_f64("p99").unwrap_or(0.0),
+    };
+    pool.shutdown().expect("pool shutdown");
+    out
+}
+
+fn main() {
+    println!("serve_throughput — engine-pool scaling on the interpreter backend");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (n_req, new_tokens, arms): (usize, usize, &[usize]) =
+        if smoke() { (2, 2, &[1, 2]) } else { (12, 12, &[1, 2, 4]) };
+
+    let mut rows = Vec::new();
+    let mut by_replicas: Vec<(usize, f64)> = Vec::new();
+    for &r in arms {
+        let a = run_arm(r, n_req, new_tokens);
+        println!(
+            "{{\"bench\":\"serve_throughput\",\"replicas\":{},\"requests\":{},\
+             \"requests_per_s\":{:.3},\"tokens_per_s\":{:.1},\
+             \"ttft_p50_us\":{:.0},\"ttft_p99_us\":{:.0}}}",
+            a.replicas, a.requests, a.requests_per_s, a.tokens_per_s, a.ttft_p50_us, a.ttft_p99_us
+        );
+        by_replicas.push((a.replicas, a.requests_per_s));
+        rows.push(Json::obj(vec![
+            ("replicas", Json::num(a.replicas as f64)),
+            ("requests", Json::num(a.requests as f64)),
+            ("requests_per_s", Json::num(a.requests_per_s)),
+            ("tokens_per_s", Json::num(a.tokens_per_s)),
+            ("ttft_p50_us", Json::num(a.ttft_p50_us)),
+            ("ttft_p99_us", Json::num(a.ttft_p99_us)),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("serve_throughput")),
+        ("smoke", Json::Bool(smoke())),
+        ("cores", Json::num(cores as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = std::env::var("SCOUT_BENCH_SERVE_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serve.json")
+        });
+    std::fs::write(&path, json.to_string()).expect("write bench json");
+    println!("wrote serve scaling rows to {}", path.display());
+
+    if smoke() {
+        println!("smoke mode: skipping the scaling assertion (n=1 timings)");
+        return;
+    }
+    let rps = |r: usize| by_replicas.iter().find(|(n, _)| *n == r).map(|(_, v)| *v);
+    if let (Some(r1), Some(r4)) = (rps(1), rps(4)) {
+        println!("replicas 1 -> 4: {r1:.2} -> {r4:.2} req/s ({:.2}x)", r4 / r1);
+        if cores >= 4 {
+            assert!(
+                r4 >= 2.0 * r1,
+                "4 replicas must deliver >= 2x the single-replica requests/s \
+                 on a >=4-core host: {r4:.2} vs {r1:.2}"
+            );
+        } else {
+            println!("only {cores} cores: scaling assertion skipped");
+        }
+    }
+}

@@ -1,86 +1,85 @@
-//! End-to-end serving driver (EXPERIMENTS.md §E2E): load the ~29M-param
-//! `serve-20m` model, prefill a batch of long-context requests through
-//! the AOT prefill artifact, decode a few hundred steps per request
-//! through the full router -> batcher -> ScoutScheduler -> engines stack,
-//! and report latency/throughput plus accuracy vs the FullKV oracle on
-//! the same stream.
+//! End-to-end serving driver for the multi-replica plane: start an
+//! [`EnginePool`], submit a mixed-length stream of *streaming* requests
+//! through the router (the RAG + CoT bimodal mix the paper's intro
+//! motivates), report per-request TTFT/queueing/latency, and dump the
+//! pool telemetry snapshot — the same JSON `{"stats": true}` serves —
+//! on exit.
 //!
 //!     cargo run --release --example serve_longcontext [--quick]
 
-use scoutattention::config::{Method, RunConfig};
-use scoutattention::harness::{self, Stack};
-use scoutattention::metrics::Histogram;
+use scoutattention::config::RunConfig;
+use scoutattention::serve::{EnginePool, StreamHandle, Submission};
 use scoutattention::workload::{LengthMix, WorkloadGen};
 
 fn main() -> scoutattention::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let preset = if quick { "test-tiny" } else { "serve-20m" };
-    let cfg = RunConfig::for_preset(preset);
-    let stack = Stack::load(&cfg)?;
-    let spec = stack.gpu.spec.clone();
-    let (n_req, new_tokens) = if quick { (4, 16) } else { (4, 128) };
-    let prompt_len = spec.max_seq - new_tokens - 2;
+    let mut cfg = RunConfig::for_preset(preset);
+    cfg.server.replicas = 2;
+    let (n_req, new_tokens) = if quick { (6, 8) } else { (8, 64) };
 
-    println!("== ScoutAttention end-to-end serving run ==");
+    let pool = EnginePool::start(cfg.clone())?;
+    let spec = pool.spec().clone();
+    let mix = LengthMix::Bimodal {
+        short: spec.max_seq / 8,
+        long: spec.max_seq - new_tokens - spec.max_seq / 8,
+        p_long: 0.4,
+    };
+
+    println!("== ScoutAttention multi-replica serving run ==");
     println!(
-        "model {}: {:.1}M params, {} layers, ctx {}, budget {} tokens, batch tile {}",
+        "model {}: {:.1}M params, {} layers, ctx {}, {} replicas ({} routing)",
         spec.name,
         spec.param_count() as f64 / 1e6,
         spec.n_layers,
         spec.max_seq,
-        spec.k_blocks * spec.block_size,
-        spec.batch,
+        pool.replica_count(),
+        cfg.server.policy.label(),
     );
-    println!("workload: {n_req} requests x {prompt_len}-token prompts x {new_tokens} new tokens");
+    println!("workload: {n_req} streaming requests, bimodal prompt mix, {new_tokens} new tokens");
 
-    let mk_reqs = |seed: u64| {
-        let mut gen =
-            WorkloadGen::new(seed, spec.vocab, LengthMix::Fixed(prompt_len), new_tokens);
-        gen.take(n_req)
-    };
-
-    // --- Scout run (the system under test) ---
+    let mut gen = WorkloadGen::new(cfg.seed, spec.vocab, mix, new_tokens);
     let t0 = std::time::Instant::now();
-    let scout = harness::run_method(&stack, Method::Scout, mk_reqs(cfg.seed), 100_000, None)?;
-    let scout_wall = t0.elapsed();
+    let handles: Vec<(usize, StreamHandle)> = gen
+        .take(n_req)
+        .into_iter()
+        .map(|r| {
+            let len = r.prompt.len();
+            let sub = Submission::new(r.prompt, r.max_new_tokens)
+                .streaming()
+                .with_session(format!("user-{}", r.id % 3));
+            (len, pool.submit(sub))
+        })
+        .collect();
 
-    let mut step_hist = Histogram::new();
-    for s in &scout.stats {
-        step_hist.record(s.wall_us as f64 / 1000.0); // ms
+    println!(
+        "\n{:>4} {:>8} {:>8} {:>10} {:>10} {:>10}",
+        "req", "replica", "prompt", "ttft ms", "queue ms", "decode ms"
+    );
+    let mut tokens_total = 0usize;
+    for (prompt_len, h) in handles {
+        let replica = h.replica;
+        let out = h.wait()?; // validates stream/final parity as it drains
+        tokens_total += out.generated.len();
+        println!(
+            "{:>4} {:>8} {:>8} {:>10.1} {:>10.1} {:>10.1}",
+            out.id,
+            replica.map(|r| r.to_string()).unwrap_or_else(|| "-".into()),
+            prompt_len,
+            out.ttft_us as f64 / 1e3,
+            out.queue_us as f64 / 1e3,
+            out.decode_wall_us as f64 / 1e3,
+        );
     }
-    let toks: usize = scout.outputs.iter().map(|o| o.generated.len()).sum();
-    println!("\n-- scout (numerics plane, 1-core CPU testbed) --");
-    println!("decode steps          : {}", scout.stats.len());
-    println!("tokens generated      : {toks}");
-    println!("wall time             : {:.1}s (incl. prefill)", scout_wall.as_secs_f64());
-    println!("decode throughput     : {:.2} tok/s wall", scout.wall_throughput_tps());
+    let wall = t0.elapsed().as_secs_f64();
     println!(
-        "step latency ms       : mean {:.1}  p50 {:.1}  p95 {:.1}",
-        step_hist.mean(),
-        step_hist.quantile(0.5),
-        step_hist.quantile(0.95)
-    );
-    println!("mean CPU compute ratio: {:.1}%", scout.mean_cpu_ratio() * 100.0);
-    let recall: usize = scout.stats.iter().map(|s| s.recall_blocks()).sum();
-    println!(
-        "recall volume         : {recall} blocks ({} KiB)",
-        recall * spec.kv_block_bytes() / 1024
+        "\n{tokens_total} tokens in {wall:.1}s -> {:.1} tok/s aggregate",
+        tokens_total as f64 / wall
     );
 
-    // --- FullKV oracle on the identical stream ---
-    let oracle = harness::run_method(&stack, Method::FullKv, mk_reqs(cfg.seed), 100_000, None)?;
-    let agree = harness::token_agreement(&scout, &oracle);
-    println!("\n-- accuracy vs FullKV oracle (identical prompts/seeds) --");
-    println!(
-        "token agreement       : {:.1}%  (paper: accuracy within ~2.1%)",
-        agree * 100.0
-    );
-    println!("oracle wall           : {:.1}s", oracle.wall_us as f64 / 1e6);
-
-    // --- artifact-call profile (perf §L3) ---
-    println!("\n-- top artifact calls by cumulative time --");
-    for (name, n, dt) in stack.rt.counters.snapshot().into_iter().take(6) {
-        println!("  {name:<18} x{n:<7} {:>9.1} ms", dt.as_secs_f64() * 1e3);
-    }
+    // Pool telemetry on exit (the `{"stats": true}` snapshot).
+    let stats = pool.stats();
+    println!("\n-- pool stats --\n{}", stats.to_string());
+    pool.shutdown()?;
     Ok(())
 }

@@ -11,6 +11,7 @@ mod scout;
 mod validate;
 
 pub use crate::runtime::BackendKind;
+pub use crate::serve::RoutePolicy;
 pub use scout::{RecallPolicy, ScoutConfig};
 
 use crate::sim::timing::DeviceModel;
@@ -60,15 +61,30 @@ impl std::str::FromStr for Method {
 pub struct ServerConfig {
     /// TCP listen address for `scout serve`.
     pub listen: String,
-    /// Max requests admitted into one continuous batch.
+    /// Max requests admitted into one replica's continuous batch.
     pub max_batch: usize,
-    /// Queue capacity before admission pushes back.
+    /// Per-replica admission queue capacity; a full queue rejects with a
+    /// structured `overloaded` error instead of buffering.
     pub queue_depth: usize,
+    /// Engine replicas in the pool (each owns a full execution stack).
+    pub replicas: usize,
+    /// Router placement policy across replicas.
+    pub policy: RoutePolicy,
+    /// Pool-wide cap on reserved in-flight tokens (prompt + max_new over
+    /// queued and live requests); exceeding it rejects with backpressure.
+    pub token_budget: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { listen: "127.0.0.1:7411".into(), max_batch: 64, queue_depth: 256 }
+        Self {
+            listen: "127.0.0.1:7411".into(),
+            max_batch: 64,
+            queue_depth: 256,
+            replicas: 1,
+            policy: RoutePolicy::LeastLoaded,
+            token_budget: 1 << 22,
+        }
     }
 }
 
@@ -84,6 +100,18 @@ impl ServerConfig {
         if let Some(v) = j.get("queue_depth") {
             c.queue_depth = v.as_usize().unwrap_or(c.queue_depth);
         }
+        if let Some(v) = j.get("replicas") {
+            c.replicas = v.as_usize().unwrap_or(c.replicas);
+        }
+        if let Some(v) = j.get("policy") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("server.policy must be a string"))?;
+            c.policy = s.parse()?;
+        }
+        if let Some(v) = j.get("token_budget") {
+            c.token_budget = v.as_usize().unwrap_or(c.token_budget);
+        }
         Ok(c)
     }
 
@@ -92,6 +120,9 @@ impl ServerConfig {
             ("listen", Json::str(self.listen.clone())),
             ("max_batch", Json::num(self.max_batch as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("policy", Json::str(self.policy.label())),
+            ("token_budget", Json::num(self.token_budget as f64)),
         ])
     }
 }
@@ -227,6 +258,33 @@ mod tests {
         assert_eq!(cfg.backend, BackendKind::Pjrt);
         assert!(RunConfig::from_json(
             &Json::parse("{\"preset\":\"p\",\"backend\":\"bogus\"}").unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn server_config_roundtrips_pool_knobs() {
+        let mut cfg = RunConfig::for_preset("test-tiny");
+        cfg.server.replicas = 4;
+        cfg.server.policy = RoutePolicy::SessionAffinity;
+        cfg.server.token_budget = 4096;
+        let text = cfg.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.server.replicas, 4);
+        assert_eq!(back.server.policy, RoutePolicy::SessionAffinity);
+        assert_eq!(back.server.token_budget, 4096);
+        // defaults when absent
+        let d = RunConfig::from_json(&Json::parse("{\"preset\":\"p\"}").unwrap()).unwrap();
+        assert_eq!(d.server.replicas, 1);
+        assert_eq!(d.server.policy, RoutePolicy::LeastLoaded);
+        // bad policy string is an error, not a silent default
+        assert!(RunConfig::from_json(
+            &Json::parse("{\"preset\":\"p\",\"server\":{\"policy\":\"bogus\"}}").unwrap()
+        )
+        .is_err());
+        // ...and so is a non-string policy value
+        assert!(RunConfig::from_json(
+            &Json::parse("{\"preset\":\"p\",\"server\":{\"policy\":1}}").unwrap()
         )
         .is_err());
     }

@@ -17,6 +17,9 @@ impl RunConfig {
             anyhow::ensure!(interval >= 1, "recall interval >= 1");
         }
         anyhow::ensure!(self.server.max_batch >= 1, "max_batch >= 1");
+        anyhow::ensure!(self.server.replicas >= 1, "replicas >= 1");
+        anyhow::ensure!(self.server.queue_depth >= 1, "queue_depth >= 1");
+        anyhow::ensure!(self.server.token_budget >= 1, "token_budget >= 1");
         self.device.validate()?;
         Ok(())
     }
@@ -42,6 +45,19 @@ mod tests {
     fn zero_recall_interval_rejected() {
         let mut c = RunConfig::for_preset("x");
         c.scout.recall = RecallPolicy::Fixed { interval: 0 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn zero_replicas_and_queue_rejected() {
+        let mut c = RunConfig::for_preset("x");
+        c.server.replicas = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::for_preset("x");
+        c.server.queue_depth = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::for_preset("x");
+        c.server.token_budget = 0;
         assert!(c.validate().is_err());
     }
 }

@@ -77,6 +77,11 @@ impl SeqState {
             generated: self.generated.clone(),
             steps: self.generated.len(),
             decode_wall_us: self.t_start.elapsed().as_micros() as u64,
+            // Arrival-relative deltas need every stamp on one monotonic
+            // clock; only the serving plane has that (it overwrites these
+            // from its own per-request tracking). Offline runs report 0.
+            queue_us: 0,
+            ttft_us: 0,
         }
     }
 }

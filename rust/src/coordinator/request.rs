@@ -30,6 +30,13 @@ pub struct RequestOutput {
     pub steps: usize,
     /// Wall-clock decode time, us (numerics plane).
     pub decode_wall_us: u64,
+    /// Arrival -> admission delay, us. Filled by the serving plane
+    /// (`serve::pool`), which owns the shared monotonic timeline; 0 on
+    /// offline harness runs, where no such timeline exists.
+    pub queue_us: u64,
+    /// Arrival -> first generated token, us — the serving plane's TTFT.
+    /// Filled like `queue_us`; 0 offline.
+    pub ttft_us: u64,
 }
 
 #[cfg(test)]

@@ -48,6 +48,14 @@ pub struct StepStats {
     /// Numerics-plane wall time of the step, us (profiling only; the
     /// paper figures use the timing plane).
     pub wall_us: u64,
+    /// Requests admitted (prefilled + activated) just before this step —
+    /// filled by the offline harness loop, not the schedulers
+    /// (`ServingRun::total_admitted` consumes it).
+    pub admitted: usize,
+    /// Requests still waiting in the batch queue after this step
+    /// (`ServingRun::peak_queue_depth` consumes it; the serve plane
+    /// reports queue depth through its own telemetry gauges instead).
+    pub queue_depth: usize,
 }
 
 impl StepStats {
@@ -57,6 +65,8 @@ impl StepStats {
             live_seqs,
             layer_ahead,
             wall_us: 0,
+            admitted: 0,
+            queue_depth: 0,
         }
     }
 

@@ -92,6 +92,17 @@ impl ServingRun {
         if self.wall_us == 0 { 0.0 } else { toks as f64 / self.wall_us as f64 * 1e6 }
     }
 
+    /// Total requests admitted over the run (Σ `StepStats::admitted`).
+    pub fn total_admitted(&self) -> usize {
+        self.stats.iter().map(|s| s.admitted).sum()
+    }
+
+    /// Peak batch-queue depth observed after any step (continuous
+    /// batching beyond the admission cap shows up here).
+    pub fn peak_queue_depth(&self) -> usize {
+        self.stats.iter().map(|s| s.queue_depth).max().unwrap_or(0)
+    }
+
     /// Mean measured CPU compute ratio (Fig. 6 metric).
     pub fn mean_cpu_ratio(&self) -> f64 {
         if self.stats.is_empty() {
@@ -131,13 +142,18 @@ pub fn run_serving(
     let mut stats = Vec::new();
     let mut steps = 0;
     while !batch.idle() && steps < max_steps {
+        let mut admitted = 0;
         for req in batch.admissible() {
             scheduler.admit(batch, &req)?;
+            admitted += 1;
         }
         if batch.live() == 0 {
             break;
         }
-        stats.push(scheduler.step(batch)?);
+        let mut st = scheduler.step(batch)?;
+        st.admitted = admitted;
+        st.queue_depth = batch.queue.len();
+        stats.push(st);
         batch.reap();
         steps += 1;
     }

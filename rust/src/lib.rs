@@ -34,6 +34,7 @@ pub mod kvcache;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod server;
 pub mod sim;
 pub mod sparse;

@@ -21,7 +21,7 @@ use scoutattention::sim::{trace, timing::DeviceModel};
 use scoutattention::workload::{LengthMix, WorkloadGen};
 
 const USAGE: &str = "usage: scout [--config F] [--preset P] [--artifacts-dir D] [--method M] <cmd>
-  serve
+  serve [--replicas N] [--route least_loaded|round_robin|session_affinity]
   run   [--requests N] [--prompt-len N] [--new-tokens N]
   sim   [--seq-len N] [--batch N] [--steps N]
   trace
@@ -88,9 +88,18 @@ fn load_config(args: &Args) -> scoutattention::Result<RunConfig> {
 
 fn main() -> scoutattention::Result<()> {
     let args = Args::parse()?;
-    let cfg = load_config(&args)?;
+    let mut cfg = load_config(&args)?;
     match args.cmd.as_str() {
-        "serve" => scoutattention::server::serve(cfg)?,
+        "serve" => {
+            if let Some(r) = args.get("replicas") {
+                cfg.server.replicas = r.parse()?;
+            }
+            if let Some(p) = args.get("route") {
+                cfg.server.policy = p.parse()?;
+            }
+            cfg.validate()?;
+            scoutattention::server::serve(cfg)?
+        }
         "run" => {
             let requests = args.get_usize("requests", 8)?;
             let new_tokens = args.get_usize("new-tokens", 32)?;
@@ -105,6 +114,11 @@ fn main() -> scoutattention::Result<()> {
             let run = harness::run_method(&stack, cfg.method, reqs, 10_000, None)?;
             println!("method           : {}", cfg.method.label());
             println!("requests         : {}", run.outputs.len());
+            println!(
+                "admitted         : {} (peak queue depth {})",
+                run.total_admitted(),
+                run.peak_queue_depth()
+            );
             println!(
                 "tokens generated : {}",
                 run.outputs.iter().map(|o| o.generated.len()).sum::<usize>()

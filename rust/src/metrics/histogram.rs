@@ -59,6 +59,23 @@ impl Histogram {
         self.sum
     }
 
+    /// Fold another histogram into this one (pool-level aggregation of
+    /// per-replica latency series). Both sides share the fixed log2
+    /// bucket layout, so merging is exact at bucket granularity.
+    pub fn merge(&mut self, other: &Histogram) {
+        debug_assert_eq!(self.buckets.len(), other.buckets.len());
+        debug_assert_eq!(self.base, other.base);
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.count > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+
     /// Approximate quantile (bucket geometric midpoint).
     pub fn quantile(&self, q: f64) -> f64 {
         if self.count == 0 {
@@ -103,6 +120,24 @@ mod tests {
         let p99 = h.quantile(0.99);
         assert!(p50 <= p99);
         assert!(p50 > 100.0 && p50 < 1000.0, "p50={p50}");
+    }
+
+    #[test]
+    fn merge_combines_counts_and_extremes() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(1.0);
+        a.record(2.0);
+        b.record(100.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 100.0);
+        assert!((a.sum() - 103.0).abs() < 1e-9);
+        // merging an empty histogram is a no-op
+        let before = a.count();
+        a.merge(&Histogram::new());
+        assert_eq!(a.count(), before);
     }
 
     #[test]

@@ -1,0 +1,29 @@
+//! The multi-replica serving plane.
+//!
+//! Scales the front-end past one engine thread (the regime where serving
+//! machinery, not kernels, bottlenecks KV-offloaded inference):
+//!
+//! - [`pool`] — [`EnginePool`]: N replica threads, each owning its own
+//!   execution stack, scheduler, and continuous batch (PJRT stacks are
+//!   non-`Send`, so stacks never cross threads). Admission control and
+//!   graceful drain live here.
+//! - [`router`] — pluggable placement: least-loaded (reserved in-flight
+//!   tokens), round-robin, session-affinity.
+//! - [`stream`] — per-request event channels: incremental token events
+//!   plus exactly one terminal `Done` / `Rejected` / `Failed`.
+//! - [`telemetry`] — per-replica gauges + latency histograms aggregated
+//!   into the `{"stats": true}` control response.
+//!
+//! The TCP JSON-lines front-end in [`crate::server`] is a thin shell over
+//! this module; tests, benches, and examples drive [`EnginePool`]
+//! in-process through the same submit/stream API.
+
+pub mod pool;
+pub mod router;
+pub mod stream;
+pub mod telemetry;
+
+pub use pool::{EnginePool, Submission};
+pub use router::{RoutePolicy, Router};
+pub use stream::{RejectCode, Rejection, StreamEvent, StreamHandle};
+pub use telemetry::{PoolTelemetry, ReplicaTelemetry};

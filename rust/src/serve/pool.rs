@@ -1,0 +1,607 @@
+//! The engine pool: N replica threads, each owning a full execution
+//! [`Stack`] (runtime + engines + scheduler + continuous batch).
+//!
+//! Replica ownership model: PJRT stacks are non-`Send`, so a replica's
+//! stack is constructed *inside* its thread and never crosses it. The
+//! pool talks to replicas exclusively through a bounded job channel; the
+//! channel IS the admission queue — replicas pull new work only while
+//! their batch has room, so a full channel means the replica is saturated
+//! and `submit` answers with a structured rejection instead of buffering.
+//!
+//! Lifecycle: [`EnginePool::start`] spawns replicas and blocks until each
+//! reports ready (or fails); [`EnginePool::shutdown`] stops admitting,
+//! lets every live sequence decode to completion, then joins the threads.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::config::RunConfig;
+use crate::coordinator::RequestSpec;
+use crate::harness::Stack;
+use crate::model::ModelSpec;
+use crate::util::{clock, Json};
+
+use super::router::Router;
+use super::stream::{EventSender, RejectCode, Rejection, StreamEvent, StreamHandle};
+use super::telemetry::{pool_stats_json, PoolTelemetry, ReplicaTelemetry};
+
+/// One request as submitted to the pool (wire- and in-process clients).
+#[derive(Debug, Clone)]
+pub struct Submission {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Publish tokens incrementally (one event per decode step) instead
+    /// of only the final output.
+    pub stream: bool,
+    /// Session-affinity routing key.
+    pub session: Option<String>,
+    /// Arrival stamp on the [`clock`] timeline; 0 = stamp at submit.
+    pub arrival_us: u64,
+}
+
+impl Submission {
+    pub fn new(prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Self { prompt, max_new_tokens, stream: false, session: None, arrival_us: 0 }
+    }
+
+    pub fn streaming(mut self) -> Self {
+        self.stream = true;
+        self
+    }
+
+    pub fn with_session(mut self, key: impl Into<String>) -> Self {
+        self.session = Some(key.into());
+        self
+    }
+
+    /// Reserved token footprint used by admission control and routing.
+    /// Saturating: wire values are untrusted until validated.
+    fn cost(&self) -> usize {
+        self.prompt.len().saturating_add(self.max_new_tokens)
+    }
+}
+
+/// Internal: one unit of work handed to a replica thread.
+struct ServeJob {
+    spec: RequestSpec,
+    stream: bool,
+    events: EventSender,
+    cost: usize,
+}
+
+/// Multi-replica serving plane. See the module docs for the ownership
+/// and backpressure contracts.
+pub struct EnginePool {
+    cfg: RunConfig,
+    spec: ModelSpec,
+    router: Router,
+    tel: Vec<Arc<ReplicaTelemetry>>,
+    pool_tel: Arc<PoolTelemetry>,
+    /// `None` once draining — dropping the senders is what tells the
+    /// replica loops to finish up and exit.
+    senders: Mutex<Option<Vec<SyncSender<ServeJob>>>>,
+    /// Per-replica cancellation sets ([`EnginePool::cancel`]): ids whose
+    /// client is gone; the owning replica evicts them between steps.
+    cancels: Vec<Arc<Mutex<HashSet<u64>>>>,
+    joins: Mutex<Vec<JoinHandle<()>>>,
+    draining: AtomicBool,
+    next_id: AtomicU64,
+    started: std::time::Instant,
+}
+
+impl EnginePool {
+    /// Spawn `cfg.server.replicas` engine threads and wait until every
+    /// one has loaded its stack (fails fast if any replica cannot).
+    pub fn start(cfg: RunConfig) -> crate::Result<Self> {
+        cfg.validate()?;
+        let n = cfg.server.replicas.max(1);
+        let pool_tel = Arc::new(PoolTelemetry::default());
+        let mut senders = Vec::with_capacity(n);
+        let mut cancels = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
+        let mut tel = Vec::with_capacity(n);
+        let mut readiness = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx_job, rx_job) = sync_channel::<ServeJob>(cfg.server.queue_depth.max(1));
+            let (tx_ready, rx_ready) = channel::<Result<ModelSpec, String>>();
+            let t = Arc::new(ReplicaTelemetry::default());
+            let cancel: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+            let replica_cfg = cfg.clone();
+            let replica_tel = t.clone();
+            let replica_pool_tel = pool_tel.clone();
+            let replica_cancel = cancel.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("scout-replica-{i}"))
+                .spawn(move || {
+                    replica_loop(
+                        replica_cfg,
+                        rx_job,
+                        replica_tel,
+                        replica_pool_tel,
+                        replica_cancel,
+                        tx_ready,
+                    )
+                })
+                .map_err(|e| anyhow::anyhow!("spawn replica {i}: {e}"))?;
+            senders.push(tx_job);
+            cancels.push(cancel);
+            joins.push(join);
+            tel.push(t);
+            readiness.push(rx_ready);
+        }
+        let mut spec = None;
+        let mut first_err: Option<String> = None;
+        for (i, rx) in readiness.into_iter().enumerate() {
+            let outcome = match rx.recv() {
+                Ok(Ok(s)) => {
+                    spec = Some(s);
+                    None
+                }
+                Ok(Err(e)) => Some(format!("replica {i}: {e}")),
+                Err(_) => Some(format!("replica {i} died on load")),
+            };
+            if first_err.is_none() {
+                first_err = outcome;
+            }
+        }
+        if let Some(e) = first_err {
+            drop(senders); // unblocks the healthy replicas
+            for j in joins {
+                let _ = j.join();
+            }
+            anyhow::bail!("engine pool failed to start: {e}");
+        }
+        let spec = spec.expect("at least one replica reported ready");
+        let router = Router::new(cfg.server.policy, tel.clone());
+        Ok(Self {
+            cfg,
+            spec,
+            router,
+            tel,
+            pool_tel,
+            senders: Mutex::new(Some(senders)),
+            cancels,
+            joins: Mutex::new(joins),
+            draining: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            started: std::time::Instant::now(),
+        })
+    }
+
+    /// Model shape served by every replica (for wire-boundary validation).
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.tel.len()
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Submit a request. Never blocks and never fails at the call site:
+    /// admission refusals arrive as a [`StreamEvent::Rejected`] terminal
+    /// event on the returned handle, so every client path handles
+    /// success and rejection through the same stream.
+    pub fn submit(&self, sub: Submission) -> StreamHandle {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.pool_tel.submitted.fetch_add(1, Ordering::Relaxed);
+        let arrival_us = if sub.arrival_us == 0 { clock::now_us() } else { sub.arrival_us };
+        let (tx, rx) = channel::<StreamEvent>();
+
+        if let Err(reason) = self.validate(&sub) {
+            return self.reject(id, tx, rx, RejectCode::Invalid, reason, 0);
+        }
+        if self.is_draining() {
+            // A drain is terminal for this process (there is no undrain),
+            // so retrying here can never help: retry_after_ms stays 0.
+            let reason = "pool is draining; not admitting new requests".to_string();
+            return self.reject(id, tx, rx, RejectCode::Draining, reason, 0);
+        }
+        // Reserve against the pool-wide budget atomically (fetch_add +
+        // check + undo) so concurrent submitters cannot all slip past
+        // the cap; the owning replica releases the reservation at the
+        // request's terminal event.
+        let cost = sub.cost();
+        let inflight = self.pool_tel.inflight_tokens.fetch_add(cost, Ordering::Relaxed);
+        if inflight + cost > self.cfg.server.token_budget {
+            self.pool_tel.inflight_tokens.fetch_sub(cost, Ordering::Relaxed);
+            let reason = format!(
+                "token budget exhausted: {inflight} in flight + {cost} requested > {}",
+                self.cfg.server.token_budget
+            );
+            let retry = self.retry_after_ms();
+            return self.reject(id, tx, rx, RejectCode::Overloaded, reason, retry);
+        }
+
+        let replica = self.router.pick(sub.session.as_deref());
+        let sender = match &*self.senders.lock().unwrap() {
+            Some(s) => s[replica].clone(),
+            None => {
+                self.pool_tel.inflight_tokens.fetch_sub(cost, Ordering::Relaxed);
+                let reason = "pool is shut down".to_string();
+                return self.reject(id, tx, rx, RejectCode::Draining, reason, 0);
+            }
+        };
+        let job = ServeJob {
+            spec: RequestSpec {
+                id,
+                prompt: sub.prompt,
+                max_new_tokens: sub.max_new_tokens,
+                arrival_us,
+            },
+            stream: sub.stream,
+            events: tx.clone(),
+            cost,
+        };
+        // Count as queued *before* sending: the replica decrements on
+        // admission, and incrementing afterwards could go negative.
+        let t = &self.tel[replica];
+        t.queued.fetch_add(1, Ordering::Relaxed);
+        t.queued_tokens.fetch_add(cost, Ordering::Relaxed);
+        match sender.try_send(job) {
+            Ok(()) => StreamHandle::new(id, Some(replica), rx),
+            Err(err) => {
+                t.queued.fetch_sub(1, Ordering::Relaxed);
+                t.queued_tokens.fetch_sub(cost, Ordering::Relaxed);
+                self.pool_tel.inflight_tokens.fetch_sub(cost, Ordering::Relaxed);
+                let (code, reason, retry) = match err {
+                    TrySendError::Full(_) => (
+                        RejectCode::Overloaded,
+                        format!(
+                            "replica {replica} queue full ({} waiting)",
+                            self.cfg.server.queue_depth
+                        ),
+                        self.retry_after_ms(),
+                    ),
+                    TrySendError::Disconnected(_) => {
+                        (RejectCode::Draining, format!("replica {replica} is gone"), 0)
+                    }
+                };
+                self.reject(id, tx, rx, code, reason, retry)
+            }
+        }
+    }
+
+    /// Cancel a placed request whose client is gone (connection hangup).
+    /// Best-effort: the owning replica evicts it between decode steps,
+    /// freeing its batch slot and token-budget reservation instead of
+    /// decoding for a dead client. No-op for unplaced (rejected) handles.
+    pub fn cancel(&self, handle: &StreamHandle) {
+        if let Some(replica) = handle.replica {
+            // Stale ids (a cancel racing the request's own terminal)
+            // are purged by the replica: on each terminal event, and in
+            // bulk whenever its job channel is observed empty.
+            self.cancels[replica].lock().unwrap().insert(handle.id);
+        }
+    }
+
+    /// `{"stats": true}` body: pool + per-replica telemetry.
+    pub fn stats(&self) -> Json {
+        pool_stats_json(
+            &self.pool_tel,
+            &self.tel,
+            self.started.elapsed().as_secs_f64(),
+            self.is_draining(),
+        )
+    }
+
+    /// Stop admitting new requests. Live sequences keep decoding.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        drop(self.senders.lock().unwrap().take());
+    }
+
+    /// Graceful shutdown: drain, let replicas finish every accepted
+    /// request, join the threads. Idempotent, and safe to race: the
+    /// join-handle lock is held across the joins, so a concurrent
+    /// caller blocks until the drain actually completed instead of
+    /// seeing an empty handle list and declaring victory early.
+    pub fn shutdown(&self) -> crate::Result<()> {
+        self.begin_drain();
+        let mut joins = self.joins.lock().unwrap();
+        let mut panicked = 0usize;
+        for j in joins.drain(..) {
+            if j.join().is_err() {
+                panicked += 1;
+            }
+        }
+        anyhow::ensure!(panicked == 0, "{panicked} replica thread(s) panicked during drain");
+        Ok(())
+    }
+
+    fn validate(&self, sub: &Submission) -> Result<(), String> {
+        if sub.prompt.is_empty() {
+            return Err("prompt must be non-empty".to_string());
+        }
+        if sub.max_new_tokens == 0 {
+            return Err("max_new_tokens must be >= 1".to_string());
+        }
+        let s = &self.spec;
+        // Bound each term before summing: wire values are untrusted and
+        // an unchecked `len + max_new` could overflow usize (panicking
+        // in debug, silently bypassing this gate in release).
+        if sub.max_new_tokens > s.max_seq
+            || sub.prompt.len() > s.max_seq
+            || sub.prompt.len() + sub.max_new_tokens > s.max_seq
+        {
+            return Err(format!(
+                "context overflow: prompt ({}) + max_new_tokens ({}) > model context {}",
+                sub.prompt.len(),
+                sub.max_new_tokens,
+                s.max_seq
+            ));
+        }
+        if let Some(&bad) = sub.prompt.iter().find(|&&t| t as usize >= s.vocab) {
+            return Err(format!("token id {bad} out of vocab ({})", s.vocab));
+        }
+        Ok(())
+    }
+
+    fn reject(
+        &self,
+        id: u64,
+        tx: EventSender,
+        rx: Receiver<StreamEvent>,
+        code: RejectCode,
+        reason: String,
+        retry_after_ms: u64,
+    ) -> StreamHandle {
+        self.pool_tel.note_reject(code);
+        let _ = tx.send(StreamEvent::Rejected(Rejection { id, code, reason, retry_after_ms }));
+        StreamHandle::new(id, None, rx)
+    }
+
+    /// Backoff hint scaled by how much work already waits ahead.
+    fn retry_after_ms(&self) -> u64 {
+        let depth: usize = self.tel.iter().map(|t| t.depth()).sum();
+        (10 * (depth as u64 + 1)).min(2000)
+    }
+}
+
+/// Per-request bookkeeping inside a replica thread. All timing stamps
+/// live on the shared [`clock`] timeline (arrival was stamped there at
+/// the wire boundary), so queue delay and TTFT are real deltas.
+struct Track {
+    events: EventSender,
+    stream: bool,
+    /// Tokens already published on the stream.
+    cursor: usize,
+    cost: usize,
+    arrival_us: u64,
+    /// Arrival -> admission, us (set when the replica admits).
+    queue_us: u64,
+    /// Arrival -> first generated token, us (set at first publish).
+    ttft_us: u64,
+}
+
+/// The replica engine loop: owns stack + scheduler + batch; pulls jobs
+/// from the bounded channel only while the batch has room (the channel
+/// is the queue); publishes stream events; exits once the pool dropped
+/// its sender AND all accepted work finished (drain semantics).
+fn replica_loop(
+    cfg: RunConfig,
+    rx: Receiver<ServeJob>,
+    tel: Arc<ReplicaTelemetry>,
+    pool_tel: Arc<PoolTelemetry>,
+    cancels: Arc<Mutex<HashSet<u64>>>,
+    ready: std::sync::mpsc::Sender<Result<ModelSpec, String>>,
+) {
+    let release = |cost: usize| {
+        pool_tel.inflight_tokens.fetch_sub(cost, Ordering::Relaxed);
+    };
+    let stack = match Stack::load(&cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            // Refuse anything that still lands in the queue until the
+            // pool notices and drops the sender.
+            while let Ok(job) = rx.recv() {
+                release(job.cost);
+                let _ = job.events.send(StreamEvent::Failed {
+                    id: job.spec.id,
+                    error: "replica failed to load its stack".to_string(),
+                });
+            }
+            return;
+        }
+    };
+    let _ = ready.send(Ok(stack.gpu.spec.clone()));
+    let mut sched = stack.scheduler(cfg.method, None);
+    let mut batch = stack.batch();
+    let mut tracks: HashMap<u64, Track> = HashMap::new();
+    let max_live = cfg.server.max_batch;
+    let mut open = true;
+
+    let accept = |batch: &mut crate::coordinator::Batch,
+                  tracks: &mut HashMap<u64, Track>,
+                  job: ServeJob| {
+        tracks.insert(
+            job.spec.id,
+            Track {
+                events: job.events,
+                stream: job.stream,
+                cursor: 0,
+                cost: job.cost,
+                arrival_us: job.spec.arrival_us,
+                queue_us: 0,
+                ttft_us: 0,
+            },
+        );
+        batch.enqueue(job.spec);
+    };
+
+    loop {
+        if open && batch.idle() {
+            match rx.recv() {
+                Ok(job) => accept(&mut batch, &mut tracks, job),
+                Err(_) => open = false,
+            }
+        }
+        // `chan_empty`: the pull phase proved the job channel holds
+        // nothing — every submitted request for this replica is now in
+        // `tracks`, so a cancel id matching neither is stale (its
+        // request already terminated) and safe to purge.
+        let mut chan_empty = !open;
+        while open && batch.live() + batch.queue.len() < max_live {
+            match rx.try_recv() {
+                Ok(job) => accept(&mut batch, &mut tracks, job),
+                Err(TryRecvError::Empty) => {
+                    chan_empty = true;
+                    break;
+                }
+                Err(TryRecvError::Disconnected) => {
+                    open = false;
+                    chan_empty = true;
+                    break;
+                }
+            }
+        }
+        // Evict cancelled requests (client hung up): free queued entries
+        // and live batch slots, releasing their reservations, instead of
+        // decoding for dead clients. Ids not yet pulled from the channel
+        // stay in the set and are caught on a later pass.
+        {
+            let mut g = cancels.lock().unwrap();
+            if !g.is_empty() {
+                if chan_empty {
+                    // Nothing in flight: ids matching no track already
+                    // terminated (cancel raced completion) — purge them.
+                    g.retain(|id| tracks.contains_key(id));
+                }
+                let ids: Vec<u64> =
+                    g.iter().copied().filter(|id| tracks.contains_key(id)).collect();
+                for id in ids {
+                    g.remove(&id);
+                    let t = tracks.remove(&id).expect("cancel id was tracked");
+                    let before = batch.queue.len();
+                    batch.queue.retain(|r| r.id != id);
+                    if batch.queue.len() < before {
+                        tel.queued.fetch_sub(1, Ordering::Relaxed);
+                        tel.queued_tokens.fetch_sub(t.cost, Ordering::Relaxed);
+                    } else if let Some(pos) = batch.seqs.iter().position(|s| s.id == id) {
+                        batch.seqs.swap_remove(pos);
+                        tel.live_seqs.fetch_sub(1, Ordering::Relaxed);
+                        tel.live_tokens.fetch_sub(t.cost, Ordering::Relaxed);
+                    }
+                    release(t.cost);
+                    tel.cancelled.fetch_add(1, Ordering::Relaxed);
+                    let _ = t.events.send(StreamEvent::Failed {
+                        id,
+                        error: "cancelled: client disconnected".to_string(),
+                    });
+                }
+            }
+        }
+        if !open && batch.idle() {
+            break;
+        }
+
+        // Admission: prefill + activate whatever fits in the batch.
+        for req in batch.admissible() {
+            let id = req.id;
+            let cost = tracks.get(&id).map(|t| t.cost).unwrap_or(0);
+            tel.queued.fetch_sub(1, Ordering::Relaxed);
+            tel.queued_tokens.fetch_sub(cost, Ordering::Relaxed);
+            match sched.admit(&mut batch, &req) {
+                Ok(()) => {
+                    tel.admitted.fetch_add(1, Ordering::Relaxed);
+                    tel.live_seqs.fetch_add(1, Ordering::Relaxed);
+                    tel.live_tokens.fetch_add(cost, Ordering::Relaxed);
+                    if let Some(t) = tracks.get_mut(&id) {
+                        t.queue_us = clock::now_us().saturating_sub(t.arrival_us);
+                        tel.queue_wait_us.lock().unwrap().record(t.queue_us as f64);
+                    }
+                }
+                Err(e) => {
+                    tel.failed.fetch_add(1, Ordering::Relaxed);
+                    release(cost);
+                    cancels.lock().unwrap().remove(&id);
+                    if let Some(t) = tracks.remove(&id) {
+                        let _ = t
+                            .events
+                            .send(StreamEvent::Failed { id, error: format!("admit: {e:#}") });
+                    }
+                }
+            }
+        }
+
+        if batch.live() == 0 {
+            continue;
+        }
+
+        // One decode step over the whole continuous batch.
+        let t0 = std::time::Instant::now();
+        match sched.step(&mut batch) {
+            Ok(_stats) => {}
+            Err(e) => {
+                // A step error poisons every live sequence: terminate
+                // them all; the replica itself stays up.
+                let msg = format!("decode step: {e:#}");
+                let mut freed = 0usize;
+                for s in std::mem::take(&mut batch.seqs) {
+                    freed += 1;
+                    cancels.lock().unwrap().remove(&s.id);
+                    if let Some(t) = tracks.remove(&s.id) {
+                        tel.live_tokens.fetch_sub(t.cost, Ordering::Relaxed);
+                        release(t.cost);
+                        let _ = t
+                            .events
+                            .send(StreamEvent::Failed { id: s.id, error: msg.clone() });
+                    }
+                }
+                tel.live_seqs.fetch_sub(freed, Ordering::Relaxed);
+                tel.failed.fetch_add(freed as u64, Ordering::Relaxed);
+                continue;
+            }
+        }
+        tel.steps.fetch_add(1, Ordering::Relaxed);
+        tel.busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+
+        // Publish: stamp TTFT, stream any newly generated tokens.
+        let now_us = clock::now_us();
+        let mut step_tokens = 0u64;
+        for s in &batch.seqs {
+            let Some(t) = tracks.get_mut(&s.id) else { continue };
+            if t.cursor == 0 && !s.generated.is_empty() {
+                t.ttft_us = now_us.saturating_sub(t.arrival_us);
+                tel.ttft_us.lock().unwrap().record(t.ttft_us as f64);
+            }
+            let new = &s.generated[t.cursor.min(s.generated.len())..];
+            step_tokens += new.len() as u64;
+            if t.stream {
+                for (k, &tok) in new.iter().enumerate() {
+                    let _ = t.events.send(StreamEvent::Token {
+                        id: s.id,
+                        token: tok,
+                        step: t.cursor + k + 1,
+                    });
+                }
+            }
+            t.cursor = s.generated.len();
+        }
+        tel.tokens_out.fetch_add(step_tokens, Ordering::Relaxed);
+
+        // Reap finished sequences and answer their clients, filling the
+        // serve-plane timing fields from this replica's own tracking.
+        batch.reap();
+        for mut out in batch.finished.drain(..) {
+            tel.finished.fetch_add(1, Ordering::Relaxed);
+            tel.live_seqs.fetch_sub(1, Ordering::Relaxed);
+            if let Some(t) = tracks.remove(&out.id) {
+                tel.live_tokens.fetch_sub(t.cost, Ordering::Relaxed);
+                release(t.cost);
+                // A cancel that raced normal completion must not linger.
+                cancels.lock().unwrap().remove(&out.id);
+                out.queue_us = t.queue_us;
+                out.ttft_us = t.ttft_us;
+                let _ = t.events.send(StreamEvent::Done(out));
+            }
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Request router: places submissions onto replicas under a pluggable
+//! policy. Placement is advisory — admission control (bounded queues +
+//! token budget) still has the final word at the chosen replica.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::telemetry::ReplicaTelemetry;
+
+/// Placement policy across the engine pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Argmin over replicas of reserved in-flight tokens (queued + live) —
+    /// the default; balances mixed-length traffic better than counts.
+    #[default]
+    LeastLoaded,
+    /// Strict rotation, ignoring load.
+    RoundRobin,
+    /// Hash the request's session key onto a fixed replica so one
+    /// conversation keeps hitting the same engine (KV reuse locality);
+    /// sessionless requests fall back to least-loaded.
+    SessionAffinity,
+}
+
+impl RoutePolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::LeastLoaded => "least_loaded",
+            RoutePolicy::RoundRobin => "round_robin",
+            RoutePolicy::SessionAffinity => "session_affinity",
+        }
+    }
+}
+
+impl std::str::FromStr for RoutePolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "least_loaded" | "leastloaded" | "load" => Ok(RoutePolicy::LeastLoaded),
+            "round_robin" | "roundrobin" | "rr" => Ok(RoutePolicy::RoundRobin),
+            "session_affinity" | "session" | "affinity" => Ok(RoutePolicy::SessionAffinity),
+            other => anyhow::bail!("unknown route policy {other:?}"),
+        }
+    }
+}
+
+/// Stateful placement over a fixed replica set.
+pub struct Router {
+    policy: RoutePolicy,
+    replicas: Vec<Arc<ReplicaTelemetry>>,
+    rr_next: AtomicUsize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, replicas: Vec<Arc<ReplicaTelemetry>>) -> Self {
+        assert!(!replicas.is_empty(), "router needs at least one replica");
+        Self { policy, replicas, rr_next: AtomicUsize::new(0) }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Choose a replica index for a request carrying `session`.
+    pub fn pick(&self, session: Option<&str>) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => self.round_robin(),
+            RoutePolicy::LeastLoaded => self.least_loaded(),
+            RoutePolicy::SessionAffinity => match session {
+                Some(key) => (fnv1a(key.as_bytes()) as usize) % self.replicas.len(),
+                None => self.least_loaded(),
+            },
+        }
+    }
+
+    fn round_robin(&self) -> usize {
+        self.rr_next.fetch_add(1, Ordering::Relaxed) % self.replicas.len()
+    }
+
+    fn least_loaded(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_load = usize::MAX;
+        for (i, r) in self.replicas.iter().enumerate() {
+            // Tie-break on queue depth so an idle replica with equal
+            // reserved tokens still wins.
+            let load = r.load_tokens().saturating_mul(1024) + r.depth();
+            if load < best_load {
+                best = i;
+                best_load = load;
+            }
+        }
+        best
+    }
+}
+
+/// FNV-1a, the classic tiny stable hash (no std::hash — RandomState
+/// would re-place sessions across process restarts).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn replicas(n: usize) -> Vec<Arc<ReplicaTelemetry>> {
+        (0..n).map(|_| Arc::new(ReplicaTelemetry::default())).collect()
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [RoutePolicy::LeastLoaded, RoutePolicy::RoundRobin, RoutePolicy::SessionAffinity] {
+            let back: RoutePolicy = p.label().parse().unwrap();
+            assert_eq!(back, p);
+        }
+        assert_eq!("rr".parse::<RoutePolicy>().unwrap(), RoutePolicy::RoundRobin);
+        assert!("bogus".parse::<RoutePolicy>().is_err());
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let r = Router::new(RoutePolicy::RoundRobin, replicas(3));
+        assert_eq!(
+            (0..6).map(|_| r.pick(None)).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn least_loaded_prefers_light_replica() {
+        let reps = replicas(3);
+        reps[0].live_tokens.store(500, Ordering::Relaxed);
+        reps[1].live_tokens.store(20, Ordering::Relaxed);
+        reps[2].live_tokens.store(300, Ordering::Relaxed);
+        let r = Router::new(RoutePolicy::LeastLoaded, reps);
+        assert_eq!(r.pick(None), 1);
+    }
+
+    #[test]
+    fn session_affinity_is_sticky_and_spreads() {
+        let r = Router::new(RoutePolicy::SessionAffinity, replicas(4));
+        let a = r.pick(Some("user-a"));
+        for _ in 0..5 {
+            assert_eq!(r.pick(Some("user-a")), a);
+        }
+        // distinct keys should not all collapse onto one replica
+        let picks: std::collections::HashSet<usize> =
+            (0..32).map(|i| r.pick(Some(&format!("user-{i}")))).collect();
+        assert!(picks.len() > 1, "affinity hash degenerate: {picks:?}");
+    }
+}

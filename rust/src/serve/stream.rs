@@ -1,0 +1,187 @@
+//! Per-request streaming output: the channel contract between a replica
+//! engine thread and the client that submitted the request.
+//!
+//! Every submission gets its own event channel. Replicas publish one
+//! [`StreamEvent::Token`] per decode step as soon as the token exists
+//! (streaming requests only) and always terminate the stream with exactly
+//! one terminal event: `Done`, `Rejected`, or `Failed`. The channel is
+//! unbounded on purpose — a slow client must never stall the replica's
+//! whole continuous batch, and the event count is bounded by
+//! `max_new_tokens + 1` anyway.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use crate::coordinator::RequestOutput;
+
+/// Why a request was refused before reaching a replica batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectCode {
+    /// The request can never succeed (context overflow, zero budget).
+    Invalid,
+    /// Backpressure: queues or the token budget are full; retry later.
+    Overloaded,
+    /// The pool is draining and admits nothing new.
+    Draining,
+}
+
+impl RejectCode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectCode::Invalid => "invalid",
+            RejectCode::Overloaded => "overloaded",
+            RejectCode::Draining => "draining",
+        }
+    }
+}
+
+/// Structured admission refusal (the backpressure contract: a client is
+/// always answered, never buffered without bound or hung up on).
+#[derive(Debug, Clone)]
+pub struct Rejection {
+    pub id: u64,
+    pub code: RejectCode,
+    pub reason: String,
+    /// Suggested client backoff. 0 for `Invalid` and `Draining` —
+    /// retrying against this endpoint cannot help in either case.
+    pub retry_after_ms: u64,
+}
+
+/// One event on a request's output stream.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// A newly decoded token (published per step for streaming requests).
+    Token { id: u64, token: u32, step: usize },
+    /// Terminal: the request completed; full output attached.
+    Done(RequestOutput),
+    /// Terminal: refused by admission control.
+    Rejected(Rejection),
+    /// Terminal: the owning replica hit an engine error.
+    Failed { id: u64, error: String },
+}
+
+pub(crate) type EventSender = Sender<StreamEvent>;
+
+/// Client-side handle to one submitted request.
+pub struct StreamHandle {
+    /// Pool-assigned request id (echoed in every event).
+    pub id: u64,
+    /// Replica the router placed the request on (`None` if rejected
+    /// before placement).
+    pub replica: Option<usize>,
+    rx: Receiver<StreamEvent>,
+}
+
+impl StreamHandle {
+    pub(crate) fn new(id: u64, replica: Option<usize>, rx: Receiver<StreamEvent>) -> Self {
+        Self { id, replica, rx }
+    }
+
+    /// Next event; `None` once the stream is closed (after a terminal
+    /// event, or if the replica died without one).
+    pub fn recv(&self) -> Option<StreamEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Like [`recv`](Self::recv) but bounded — tests use this so a
+    /// regression hangs a timeout, not the suite.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<StreamEvent> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => Some(ev),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
+    /// Drain the stream to its terminal event and return the completed
+    /// output. Token events are checked against the final output so a
+    /// streaming-order bug cannot pass silently.
+    pub fn wait(self) -> crate::Result<RequestOutput> {
+        let mut streamed: Vec<u32> = Vec::new();
+        while let Some(ev) = self.recv() {
+            match ev {
+                StreamEvent::Token { token, .. } => streamed.push(token),
+                StreamEvent::Done(out) => {
+                    if !streamed.is_empty() {
+                        anyhow::ensure!(
+                            streamed == out.generated,
+                            "stream/final divergence for request {}",
+                            out.id
+                        );
+                    }
+                    return Ok(out);
+                }
+                StreamEvent::Rejected(r) => {
+                    anyhow::bail!(
+                        "request {} rejected ({}): {} (retry_after_ms {})",
+                        r.id,
+                        r.code.label(),
+                        r.reason,
+                        r.retry_after_ms
+                    )
+                }
+                StreamEvent::Failed { id, error } => {
+                    anyhow::bail!("request {id} failed on replica: {error}")
+                }
+            }
+        }
+        anyhow::bail!("request {}: stream closed without a terminal event", self.id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn wait_collects_tokens_and_checks_order() {
+        let (tx, rx) = channel();
+        let h = StreamHandle::new(1, Some(0), rx);
+        tx.send(StreamEvent::Token { id: 1, token: 5, step: 1 }).unwrap();
+        tx.send(StreamEvent::Token { id: 1, token: 9, step: 2 }).unwrap();
+        tx.send(StreamEvent::Done(RequestOutput {
+            id: 1,
+            generated: vec![5, 9],
+            steps: 2,
+            decode_wall_us: 1,
+            queue_us: 0,
+            ttft_us: 0,
+        }))
+        .unwrap();
+        let out = h.wait().unwrap();
+        assert_eq!(out.generated, vec![5, 9]);
+    }
+
+    #[test]
+    fn wait_surfaces_rejection() {
+        let (tx, rx) = channel();
+        let h = StreamHandle::new(2, None, rx);
+        tx.send(StreamEvent::Rejected(Rejection {
+            id: 2,
+            code: RejectCode::Overloaded,
+            reason: "queue full".into(),
+            retry_after_ms: 20,
+        }))
+        .unwrap();
+        let err = h.wait().unwrap_err().to_string();
+        assert!(err.contains("overloaded"), "{err}");
+        assert!(err.contains("retry_after_ms 20"), "{err}");
+    }
+
+    #[test]
+    fn wait_flags_stream_divergence() {
+        let (tx, rx) = channel();
+        let h = StreamHandle::new(3, Some(0), rx);
+        tx.send(StreamEvent::Token { id: 3, token: 5, step: 1 }).unwrap();
+        tx.send(StreamEvent::Done(RequestOutput {
+            id: 3,
+            generated: vec![6],
+            steps: 1,
+            decode_wall_us: 1,
+            queue_us: 0,
+            ttft_us: 0,
+        }))
+        .unwrap();
+        assert!(h.wait().is_err());
+    }
+}

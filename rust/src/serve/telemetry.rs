@@ -1,0 +1,223 @@
+//! Serving-plane telemetry: lock-free per-replica gauges/counters plus
+//! latency histograms, aggregated into the `{"stats": true}` control
+//! response.
+//!
+//! Replicas own the hot updates (atomic adds on their own cache line —
+//! no cross-replica contention); the router reads the gauges for
+//! least-loaded placement; the pool snapshots everything on demand.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::Histogram;
+use crate::util::Json;
+
+/// One replica's live gauges and lifetime counters.
+#[derive(Default)]
+pub struct ReplicaTelemetry {
+    /// Requests submitted to this replica but not yet admitted into its
+    /// batch (bounded channel + replica-local queue).
+    pub queued: AtomicUsize,
+    /// Reserved tokens (prompt + max_new) of those queued requests.
+    pub queued_tokens: AtomicUsize,
+    /// Sequences live in the replica's continuous batch.
+    pub live_seqs: AtomicUsize,
+    /// Reserved tokens of the live sequences.
+    pub live_tokens: AtomicUsize,
+    /// Lifetime: requests admitted (prefilled + activated).
+    pub admitted: AtomicU64,
+    /// Lifetime: requests completed.
+    pub finished: AtomicU64,
+    /// Lifetime: requests terminated by an engine error.
+    pub failed: AtomicU64,
+    /// Lifetime: requests evicted because their client disconnected.
+    pub cancelled: AtomicU64,
+    /// Lifetime: tokens generated.
+    pub tokens_out: AtomicU64,
+    /// Lifetime: decode steps executed.
+    pub steps: AtomicU64,
+    /// Lifetime: wall time spent inside decode steps, us.
+    pub busy_us: AtomicU64,
+    /// Arrival -> first token, us.
+    pub ttft_us: Mutex<Histogram>,
+    /// Arrival -> admission, us.
+    pub queue_wait_us: Mutex<Histogram>,
+}
+
+impl ReplicaTelemetry {
+    /// Routing load metric: reserved tokens queued + live. Reserved (not
+    /// current-KV) tokens make placement stable under decode progress.
+    pub fn load_tokens(&self) -> usize {
+        self.queued_tokens.load(Ordering::Relaxed) + self.live_tokens.load(Ordering::Relaxed)
+    }
+
+    /// Requests that would sit in front of a new submission.
+    pub fn depth(&self) -> usize {
+        self.queued.load(Ordering::Relaxed) + self.live_seqs.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self, replica: usize, uptime_s: f64) -> Json {
+        let tokens_out = self.tokens_out.load(Ordering::Relaxed);
+        Json::obj(vec![
+            ("replica", Json::num(replica as f64)),
+            ("queue_depth", Json::num(self.queued.load(Ordering::Relaxed) as f64)),
+            ("queued_tokens", Json::num(self.queued_tokens.load(Ordering::Relaxed) as f64)),
+            ("live_seqs", Json::num(self.live_seqs.load(Ordering::Relaxed) as f64)),
+            ("live_tokens", Json::num(self.live_tokens.load(Ordering::Relaxed) as f64)),
+            ("admitted", Json::num(self.admitted.load(Ordering::Relaxed) as f64)),
+            ("finished", Json::num(self.finished.load(Ordering::Relaxed) as f64)),
+            ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
+            ("cancelled", Json::num(self.cancelled.load(Ordering::Relaxed) as f64)),
+            ("steps", Json::num(self.steps.load(Ordering::Relaxed) as f64)),
+            ("tokens_out", Json::num(tokens_out as f64)),
+            (
+                "tokens_per_s",
+                Json::num(if uptime_s > 0.0 { tokens_out as f64 / uptime_s } else { 0.0 }),
+            ),
+            ("busy_us", Json::num(self.busy_us.load(Ordering::Relaxed) as f64)),
+            ("ttft_us", hist_json(&self.ttft_us.lock().unwrap())),
+            ("queue_wait_us", hist_json(&self.queue_wait_us.lock().unwrap())),
+        ])
+    }
+}
+
+/// Pool-level admission counters.
+#[derive(Default)]
+pub struct PoolTelemetry {
+    pub submitted: AtomicU64,
+    pub rejected_invalid: AtomicU64,
+    pub rejected_overloaded: AtomicU64,
+    pub rejected_draining: AtomicU64,
+    /// Reserved in-flight tokens across the whole pool — the
+    /// `token_budget` gate. Reserved atomically (`fetch_add` + check +
+    /// undo) at submit so concurrent submitters cannot all slip past
+    /// the cap, released by the owning replica at each request's
+    /// terminal event.
+    pub inflight_tokens: AtomicUsize,
+}
+
+impl PoolTelemetry {
+    pub fn note_reject(&self, code: super::stream::RejectCode) {
+        use super::stream::RejectCode;
+        let c = match code {
+            RejectCode::Invalid => &self.rejected_invalid,
+            RejectCode::Overloaded => &self.rejected_overloaded,
+            RejectCode::Draining => &self.rejected_draining,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected_invalid.load(Ordering::Relaxed)
+            + self.rejected_overloaded.load(Ordering::Relaxed)
+            + self.rejected_draining.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency-histogram summary (us).
+pub fn hist_json(h: &Histogram) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count() as f64)),
+        ("mean", Json::num(h.mean())),
+        ("p50", Json::num(h.quantile(0.5))),
+        ("p99", Json::num(h.quantile(0.99))),
+        ("max", Json::num(h.max())),
+    ])
+}
+
+/// Assemble the full `{"stats": true}` response body.
+pub fn pool_stats_json(
+    pool: &PoolTelemetry,
+    replicas: &[std::sync::Arc<ReplicaTelemetry>],
+    uptime_s: f64,
+    draining: bool,
+) -> Json {
+    let mut ttft = Histogram::new();
+    let mut queue_wait = Histogram::new();
+    let mut rows = Vec::with_capacity(replicas.len());
+    let (mut depth, mut live, mut inflight, mut tokens_out) = (0usize, 0usize, 0usize, 0u64);
+    let mut cancelled = 0u64;
+    for (i, r) in replicas.iter().enumerate() {
+        rows.push(r.snapshot(i, uptime_s));
+        ttft.merge(&r.ttft_us.lock().unwrap());
+        queue_wait.merge(&r.queue_wait_us.lock().unwrap());
+        depth += r.queued.load(Ordering::Relaxed);
+        live += r.live_seqs.load(Ordering::Relaxed);
+        inflight += r.load_tokens();
+        tokens_out += r.tokens_out.load(Ordering::Relaxed);
+        cancelled += r.cancelled.load(Ordering::Relaxed);
+    }
+    Json::obj(vec![
+        ("uptime_s", Json::num(uptime_s)),
+        ("draining", Json::Bool(draining)),
+        ("replica_count", Json::num(replicas.len() as f64)),
+        ("submitted", Json::num(pool.submitted.load(Ordering::Relaxed) as f64)),
+        ("rejected", Json::num(pool.rejected_total() as f64)),
+        (
+            "rejected_by",
+            Json::obj(vec![
+                ("invalid", Json::num(pool.rejected_invalid.load(Ordering::Relaxed) as f64)),
+                (
+                    "overloaded",
+                    Json::num(pool.rejected_overloaded.load(Ordering::Relaxed) as f64),
+                ),
+                ("draining", Json::num(pool.rejected_draining.load(Ordering::Relaxed) as f64)),
+            ]),
+        ),
+        ("cancelled", Json::num(cancelled as f64)),
+        ("queue_depth", Json::num(depth as f64)),
+        ("live_seqs", Json::num(live as f64)),
+        ("inflight_tokens", Json::num(inflight as f64)),
+        ("tokens_out", Json::num(tokens_out as f64)),
+        (
+            "tokens_per_s",
+            Json::num(if uptime_s > 0.0 { tokens_out as f64 / uptime_s } else { 0.0 }),
+        ),
+        ("ttft_us", hist_json(&ttft)),
+        ("queue_wait_us", hist_json(&queue_wait)),
+        ("replicas", Json::Arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::stream::RejectCode;
+    use std::sync::Arc;
+
+    #[test]
+    fn snapshot_reports_rates_and_depths() {
+        let t = ReplicaTelemetry::default();
+        t.queued.store(2, Ordering::Relaxed);
+        t.queued_tokens.store(64, Ordering::Relaxed);
+        t.live_seqs.store(1, Ordering::Relaxed);
+        t.live_tokens.store(40, Ordering::Relaxed);
+        t.tokens_out.store(100, Ordering::Relaxed);
+        assert_eq!(t.load_tokens(), 104);
+        assert_eq!(t.depth(), 3);
+        let j = t.snapshot(0, 2.0);
+        assert_eq!(j.req_usize("queue_depth").unwrap(), 2);
+        assert!((j.req_f64("tokens_per_s").unwrap() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pool_stats_aggregate() {
+        let pool = PoolTelemetry::default();
+        pool.submitted.store(5, Ordering::Relaxed);
+        pool.note_reject(RejectCode::Overloaded);
+        pool.note_reject(RejectCode::Invalid);
+        let a = Arc::new(ReplicaTelemetry::default());
+        let b = Arc::new(ReplicaTelemetry::default());
+        a.tokens_out.store(30, Ordering::Relaxed);
+        b.tokens_out.store(70, Ordering::Relaxed);
+        a.queued.store(1, Ordering::Relaxed);
+        a.ttft_us.lock().unwrap().record(1000.0);
+        b.ttft_us.lock().unwrap().record(3000.0);
+        let j = pool_stats_json(&pool, &[a, b], 1.0, false);
+        assert_eq!(j.req_usize("rejected").unwrap(), 2);
+        assert_eq!(j.req_usize("queue_depth").unwrap(), 1);
+        assert_eq!(j.req_usize("tokens_out").unwrap(), 100);
+        assert_eq!(j.get("replicas").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("ttft_us").unwrap().req_usize("count").unwrap(), 2);
+    }
+}

@@ -1,18 +1,60 @@
 //! Wire protocol types (JSON-lines, via the in-tree JSON codec).
+//!
+//! Data plane (one JSON object per line):
+//!   -> {"prompt": [..], "max_new_tokens": 16, "stream": true, "session": "u1"}
+//!   <- {"id": 0, "token": 17, "step": 1}            (streaming only, per step)
+//!   <- {"id": 0, "generated": [..], "steps": 16, "decode_wall_us": ..,
+//!       "queue_us": .., "ttft_us": ..}              (terminal)
+//!   <- {"id": 0, "error": "...", "code": "overloaded", "retry_after_ms": 40}
+//!
+//! Control plane:
+//!   -> {"stats": true}      <- pool + per-replica telemetry snapshot
+//!   -> {"shutdown": true}   <- {"ok": true, "drained": true} after drain
 
 use crate::coordinator::{RequestOutput, RequestSpec};
-use crate::util::Json;
+use crate::serve::{Rejection, Submission};
+use crate::util::{clock, Json};
 
-/// Client -> server.
+/// Client -> server inference request.
 #[derive(Debug, Clone)]
 pub struct IncomingRequest {
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
+    pub stream: bool,
+    pub session: Option<String>,
+    /// Monotonic arrival stamp ([`clock::now_us`]) taken at parse time —
+    /// the wire boundary — so queueing delay and TTFT are measurable.
+    pub arrival_us: u64,
+}
+
+/// One parsed wire line.
+#[derive(Debug, Clone)]
+pub enum WireMsg {
+    Request(IncomingRequest),
+    Stats,
+    Shutdown,
+}
+
+impl WireMsg {
+    pub fn parse(line: &str) -> crate::Result<Self> {
+        let j = Json::parse(line)?;
+        // Control keys only count on lines that are not inference
+        // requests — a stray client-side flag riding along with a
+        // "prompt" must not shadow (or worse, drain) the data plane.
+        if j.get("prompt").is_none() {
+            if j.get("stats").and_then(|v| v.as_bool()).unwrap_or(false) {
+                return Ok(WireMsg::Stats);
+            }
+            if j.get("shutdown").and_then(|v| v.as_bool()).unwrap_or(false) {
+                return Ok(WireMsg::Shutdown);
+            }
+        }
+        Ok(WireMsg::Request(IncomingRequest::from_json(&j)?))
+    }
 }
 
 impl IncomingRequest {
-    pub fn parse(line: &str) -> crate::Result<Self> {
-        let j = Json::parse(line)?;
+    fn from_json(j: &Json) -> crate::Result<Self> {
         let prompt = j
             .req("prompt")?
             .as_arr()
@@ -21,26 +63,79 @@ impl IncomingRequest {
             .map(|v| v.as_u64().map(|x| x as u32).ok_or_else(|| anyhow::anyhow!("bad token id")))
             .collect::<crate::Result<Vec<u32>>>()?;
         anyhow::ensure!(!prompt.is_empty(), "prompt must be non-empty");
-        let max_new_tokens =
-            j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
-        Ok(Self { prompt, max_new_tokens })
+        let max_new_tokens = j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
+        let stream = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+        let session = j.get("session").and_then(|v| v.as_str()).map(|s| s.to_string());
+        Ok(Self { prompt, max_new_tokens, stream, session, arrival_us: clock::now_us() })
     }
 
+    /// Bridge for embedders driving a raw scheduler without the pool
+    /// (the pool path goes through [`Self::into_submission`]). Carries
+    /// the wire-boundary arrival stamp so queueing delay stays
+    /// measurable on either path.
     pub fn into_spec(self, id: u64) -> RequestSpec {
-        RequestSpec { id, prompt: self.prompt, max_new_tokens: self.max_new_tokens, arrival_us: 0 }
+        RequestSpec {
+            id,
+            prompt: self.prompt,
+            max_new_tokens: self.max_new_tokens,
+            arrival_us: self.arrival_us,
+        }
+    }
+
+    /// Convert into a pool submission (the pool assigns the id).
+    pub fn into_submission(self) -> Submission {
+        Submission {
+            prompt: self.prompt,
+            max_new_tokens: self.max_new_tokens,
+            stream: self.stream,
+            session: self.session,
+            arrival_us: self.arrival_us,
+        }
     }
 }
 
-/// Server -> client.
+/// Server -> client terminal output.
 pub fn output_to_json(out: &RequestOutput) -> Json {
     Json::obj(vec![
         ("id", Json::num(out.id as f64)),
         ("generated", Json::arr_u32(&out.generated)),
         ("steps", Json::num(out.steps as f64)),
         ("decode_wall_us", Json::num(out.decode_wall_us as f64)),
+        ("queue_us", Json::num(out.queue_us as f64)),
+        ("ttft_us", Json::num(out.ttft_us as f64)),
     ])
 }
 
+/// Server -> client incremental token (streaming requests).
+pub fn token_to_json(id: u64, token: u32, step: usize) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("token", Json::num(token as f64)),
+        ("step", Json::num(step as f64)),
+    ])
+}
+
+/// Server -> client structured admission refusal.
+pub fn rejection_to_json(r: &Rejection) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(r.id as f64)),
+        ("error", Json::str(r.reason.clone())),
+        ("code", Json::str(r.code.label())),
+        ("retry_after_ms", Json::num(r.retry_after_ms as f64)),
+    ])
+}
+
+/// Server -> client terminal engine failure for a specific request
+/// (keeps the `id` so multiplexing clients can correlate it).
+pub fn failed_to_json(id: u64, msg: &str) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("error", Json::str(msg)),
+        ("code", Json::str("failed")),
+    ])
+}
+
+/// Line-level error (unparseable input — there is no request id yet).
 pub fn error_to_json(msg: &str) -> Json {
     Json::obj(vec![("error", Json::str(msg))])
 }
@@ -48,29 +143,114 @@ pub fn error_to_json(msg: &str) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::RejectCode;
+
+    fn parse_req(line: &str) -> crate::Result<IncomingRequest> {
+        match WireMsg::parse(line)? {
+            WireMsg::Request(r) => Ok(r),
+            other => anyhow::bail!("expected a request, got {other:?}"),
+        }
+    }
 
     #[test]
-    fn parses_with_defaults() {
-        let r = IncomingRequest::parse("{\"prompt\":[1,2]}").unwrap();
+    fn parses_with_defaults_and_stamps_arrival() {
+        let r = parse_req("{\"prompt\":[1,2]}").unwrap();
         assert_eq!(r.max_new_tokens, 32);
         assert_eq!(r.prompt, vec![1, 2]);
+        assert!(!r.stream);
+        assert!(r.session.is_none());
+        assert!(r.arrival_us > 0, "arrival must be stamped from the monotonic clock");
         let spec = r.into_spec(5);
         assert_eq!(spec.id, 5);
+        assert!(spec.arrival_us > 0);
+    }
+
+    #[test]
+    fn parses_stream_and_session() {
+        let r = parse_req(
+            "{\"prompt\":[3],\"max_new_tokens\":2,\"stream\":true,\"session\":\"u-7\"}",
+        )
+        .unwrap();
+        assert!(r.stream);
+        assert_eq!(r.session.as_deref(), Some("u-7"));
+        let sub = r.into_submission();
+        assert!(sub.stream);
+        assert_eq!(sub.session.as_deref(), Some("u-7"));
+        assert!(sub.arrival_us > 0);
     }
 
     #[test]
     fn rejects_empty_or_malformed() {
-        assert!(IncomingRequest::parse("{\"prompt\":[]}").is_err());
-        assert!(IncomingRequest::parse("{}").is_err());
-        assert!(IncomingRequest::parse("not json").is_err());
+        assert!(parse_req("{\"prompt\":[]}").is_err());
+        assert!(parse_req("{}").is_err());
+        assert!(parse_req("not json").is_err());
+    }
+
+    #[test]
+    fn control_messages_parse() {
+        assert!(matches!(WireMsg::parse("{\"stats\":true}").unwrap(), WireMsg::Stats));
+        assert!(matches!(WireMsg::parse("{\"shutdown\":true}").unwrap(), WireMsg::Shutdown));
+        assert!(matches!(
+            WireMsg::parse("{\"prompt\":[1]}").unwrap(),
+            WireMsg::Request(_)
+        ));
+        // stats:false is not a control message
+        assert!(WireMsg::parse("{\"stats\":false}").is_err());
+        // a control flag riding along with a prompt never shadows the
+        // request (a stray shutdown:true must not drain the pool)
+        assert!(matches!(
+            WireMsg::parse("{\"prompt\":[1],\"stats\":true}").unwrap(),
+            WireMsg::Request(_)
+        ));
+        assert!(matches!(
+            WireMsg::parse("{\"prompt\":[1],\"shutdown\":true}").unwrap(),
+            WireMsg::Request(_)
+        ));
     }
 
     #[test]
     fn output_json_shape() {
-        let out = RequestOutput { id: 3, generated: vec![7, 8], steps: 2, decode_wall_us: 10 };
+        let out = RequestOutput {
+            id: 3,
+            generated: vec![7, 8],
+            steps: 2,
+            decode_wall_us: 10,
+            queue_us: 4,
+            ttft_us: 9,
+        };
         let j = output_to_json(&out);
         let text = j.to_string();
         assert!(text.contains("\"id\":3"));
         assert!(text.contains("\"generated\":[7,8]"));
+        assert!(text.contains("\"queue_us\":4"));
+        assert!(text.contains("\"ttft_us\":9"));
+    }
+
+    #[test]
+    fn rejection_json_shape() {
+        let j = rejection_to_json(&Rejection {
+            id: 9,
+            code: RejectCode::Overloaded,
+            reason: "queue full".into(),
+            retry_after_ms: 30,
+        });
+        let text = j.to_string();
+        assert!(text.contains("\"code\":\"overloaded\""));
+        assert!(text.contains("\"retry_after_ms\":30"));
+        assert!(text.contains("\"error\":\"queue full\""));
+    }
+
+    #[test]
+    fn failed_json_keeps_request_id() {
+        let text = failed_to_json(7, "decode step: boom").to_string();
+        assert!(text.contains("\"id\":7"));
+        assert!(text.contains("\"code\":\"failed\""));
+    }
+
+    #[test]
+    fn token_json_shape() {
+        let text = token_to_json(2, 99, 4).to_string();
+        assert!(text.contains("\"token\":99"));
+        assert!(text.contains("\"step\":4"));
     }
 }

@@ -1,147 +1,146 @@
-//! Serving front-end: a threaded TCP listener speaking JSON-lines,
-//! feeding a dedicated engine thread that owns the execution stack
-//! (interpreter by default; PJRT stacks are non-Send, so ownership stays
-//! on this one thread either way).
+//! Serving front-end: a threaded TCP listener speaking JSON-lines on top
+//! of the multi-replica engine pool ([`crate::serve`]).
 //!
-//! Protocol (one JSON object per line):
-//!   -> {"prompt": [1,2,3], "max_new_tokens": 16}
-//!   <- {"id": 0, "generated": [...], "steps": 16, "decode_wall_us": ...}
-//!
-//! The engine thread runs the continuous-batching loop: drain admissions,
-//! prefill, decode step, reap, publish outputs. Python is nowhere on this
-//! path — the binary serves directly from the AOT artifacts. (The offline
-//! crate universe has no tokio; connection handling is thread-per-conn
-//! over std::net, which is plenty for the evaluation workloads.)
+//! One connection handler thread per client; each parsed request is
+//! submitted to the pool and its stream events are written back as
+//! JSON lines (incremental `{"id","token","step"}` records when the
+//! request asked for `"stream": true`, always a terminal output /
+//! rejection line). Control lines: `{"stats": true}` returns the pool
+//! telemetry snapshot; `{"shutdown": true}` drains the pool (stop
+//! admitting, finish live sequences, join replicas) and then stops the
+//! listener. Python is nowhere on this path — the binary serves directly
+//! from the execution stacks. (The offline crate universe has no tokio;
+//! connection handling is thread-per-conn over std::net.)
 
 pub mod api;
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::Arc;
 
 use crate::config::RunConfig;
-use crate::coordinator::{RequestOutput, RequestSpec};
-use crate::harness::Stack;
+use crate::serve::{EnginePool, StreamEvent};
 
-/// Engine-thread loop: owns scheduler + batch; processes until `rx`
-/// disconnects.
-fn engine_loop(
-    cfg: RunConfig,
-    rx: Receiver<RequestSpec>,
-    tx_out: Sender<RequestOutput>,
-) -> crate::Result<()> {
-    let stack = Stack::load(&cfg)?;
-    let mut sched = stack.scheduler(cfg.method, None);
-    let mut batch = stack.batch();
-    loop {
-        // Block when fully idle; otherwise drain whatever queued up.
-        if batch.idle() {
-            match rx.recv() {
-                Ok(r) => batch.enqueue(r),
-                Err(_) => return Ok(()), // shutdown
-            }
-        }
-        while let Ok(r) = rx.try_recv() {
-            batch.enqueue(r);
-        }
-        for req in batch.admissible() {
-            sched.admit(&mut batch, &req)?;
-        }
-        if batch.live() > 0 {
-            sched.step(&mut batch)?;
-            batch.reap();
-        }
-        for out in batch.finished.drain(..) {
-            let _ = tx_out.send(out);
-        }
-    }
-}
-
-type Waiters = Arc<Mutex<HashMap<u64, SyncSender<RequestOutput>>>>;
-
-fn handle_conn(
-    sock: TcpStream,
-    tx_req: SyncSender<RequestSpec>,
-    waiters: Waiters,
-    next_id: Arc<AtomicU64>,
-) {
-    let peer = sock.peer_addr().ok();
-    let reader = BufReader::new(sock.try_clone().expect("clone socket"));
+fn handle_conn(sock: TcpStream, pool: Arc<EnginePool>) {
+    let reader = BufReader::new(match sock.try_clone() {
+        Ok(r) => r,
+        Err(_) => return,
+    });
     let mut w = sock;
     for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        match api::IncomingRequest::parse(&line) {
-            Ok(inc) => {
-                let id = next_id.fetch_add(1, Ordering::SeqCst);
-                let (txo, rxo) = sync_channel::<RequestOutput>(1);
-                waiters.lock().unwrap().insert(id, txo);
-                if tx_req.send(inc.into_spec(id)).is_err() {
-                    break;
-                }
-                match rxo.recv() {
-                    Ok(out) => {
-                        let resp = api::output_to_json(&out).to_string();
-                        if writeln!(w, "{resp}").is_err() {
-                            break;
-                        }
-                    }
-                    Err(_) => break,
-                }
-            }
+        let msg = match api::WireMsg::parse(&line) {
+            Ok(m) => m,
             Err(e) => {
                 let _ = writeln!(w, "{}", api::error_to_json(&e.to_string()).to_string());
+                continue;
+            }
+        };
+        match msg {
+            api::WireMsg::Stats => {
+                if writeln!(w, "{}", pool.stats().to_string()).is_err() {
+                    break;
+                }
+            }
+            api::WireMsg::Shutdown => {
+                let drained = pool.shutdown().is_ok();
+                let reply = crate::util::Json::obj(vec![
+                    ("ok", crate::util::Json::Bool(true)),
+                    ("drained", crate::util::Json::Bool(drained)),
+                ]);
+                let _ = writeln!(w, "{}", reply.to_string());
+                // Wake the accept loop so it observes the drain and
+                // exits. A wildcard bind address is not connectable on
+                // every platform — substitute the matching loopback.
+                if let Ok(mut addr) = w.local_addr() {
+                    if addr.ip().is_unspecified() {
+                        let loopback: std::net::IpAddr = match addr.ip() {
+                            std::net::IpAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                            std::net::IpAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+                        };
+                        addr.set_ip(loopback);
+                    }
+                    let _ = TcpStream::connect(addr);
+                }
+                break;
+            }
+            api::WireMsg::Request(inc) => {
+                let streaming = inc.stream;
+                let handle = pool.submit(inc.into_submission());
+                let mut hup = false;
+                let mut terminated = false;
+                while let Some(ev) = handle.recv() {
+                    let (text, terminal) = match &ev {
+                        StreamEvent::Token { id, token, step } => {
+                            if !streaming {
+                                continue;
+                            }
+                            (api::token_to_json(*id, *token, *step).to_string(), false)
+                        }
+                        StreamEvent::Done(out) => (api::output_to_json(out).to_string(), true),
+                        StreamEvent::Rejected(r) => (api::rejection_to_json(r).to_string(), true),
+                        StreamEvent::Failed { id, error } => {
+                            (api::failed_to_json(*id, error).to_string(), true)
+                        }
+                    };
+                    if writeln!(w, "{text}").is_err() {
+                        hup = true;
+                        break;
+                    }
+                    if terminal {
+                        terminated = true;
+                        break;
+                    }
+                }
+                if hup {
+                    // Client is gone mid-request: cancel so the replica
+                    // frees the batch slot and token reservation instead
+                    // of decoding for a dead connection.
+                    pool.cancel(&handle);
+                    break;
+                }
+                // Wire contract: every request gets exactly one terminal
+                // line. If the stream died without one (replica panic),
+                // tell the client instead of leaving it hanging.
+                if !terminated {
+                    let j = api::failed_to_json(
+                        handle.id,
+                        "stream closed without a terminal event",
+                    );
+                    let _ = writeln!(w, "{}", j.to_string());
+                }
             }
         }
     }
-    let _ = peer;
 }
 
-/// Run the server until the listener errors (or forever).
+/// Run the server until a `{"shutdown": true}` control request drains the
+/// pool (or the listener errors).
 pub fn serve(cfg: RunConfig) -> crate::Result<()> {
     let listener = TcpListener::bind(&cfg.server.listen)
         .map_err(|e| anyhow::anyhow!("bind {}: {e}", cfg.server.listen))?;
+    let pool = Arc::new(EnginePool::start(cfg.clone())?);
     eprintln!(
-        "scout: serving {} ({}) on {}",
+        "scout: serving {} ({}) on {} — {} replica(s), {} routing",
         cfg.preset,
         cfg.method.label(),
-        cfg.server.listen
+        cfg.server.listen,
+        pool.replica_count(),
+        cfg.server.policy.label(),
     );
 
-    let (tx_req, rx_req) = sync_channel::<RequestSpec>(cfg.server.queue_depth);
-    let (tx_out, rx_out) = mpsc::channel::<RequestOutput>();
-    let engine_cfg = cfg.clone();
-    std::thread::spawn(move || {
-        if let Err(e) = engine_loop(engine_cfg, rx_req, tx_out) {
-            eprintln!("engine thread error: {e:#}");
-        }
-    });
-
-    // Route outputs to per-request response channels.
-    let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
-    {
-        let waiters = waiters.clone();
-        std::thread::spawn(move || {
-            while let Ok(out) = rx_out.recv() {
-                if let Some(tx) = waiters.lock().unwrap().remove(&out.id) {
-                    let _ = tx.send(out);
-                }
-            }
-        });
-    }
-
-    let next_id = Arc::new(AtomicU64::new(0));
     for sock in listener.incoming() {
+        if pool.is_draining() {
+            break;
+        }
         let Ok(sock) = sock else { continue };
-        let tx_req = tx_req.clone();
-        let waiters = waiters.clone();
-        let next_id = next_id.clone();
-        std::thread::spawn(move || handle_conn(sock, tx_req, waiters, next_id));
+        let pool = pool.clone();
+        std::thread::spawn(move || handle_conn(sock, pool));
     }
+    pool.shutdown()?;
+    eprintln!("scout: drained and stopped");
     Ok(())
 }

@@ -1,0 +1,37 @@
+//! Process-wide monotonic clock for the serving plane.
+//!
+//! Arrival stamps, queueing delay, and time-to-first-token all need to be
+//! deltas on ONE monotonic timeline shared by the wire boundary, the
+//! router, and every replica thread. `Instant` can't be serialized into a
+//! `RequestSpec`, so the serving plane speaks microseconds since a lazily
+//! pinned process epoch instead.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process epoch (pinned on first use).
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process epoch. Never returns 0: the serving
+/// plane uses `0` as "unstamped" (offline harness runs, workload-clock
+/// arrivals), so the first caller still gets a distinguishable stamp.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64 + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_and_nonzero() {
+        let a = now_us();
+        let b = now_us();
+        assert!(a >= 1);
+        assert!(b >= a);
+    }
+}

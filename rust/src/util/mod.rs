@@ -9,6 +9,7 @@
 pub mod arena;
 pub mod argmax;
 pub mod bench;
+pub mod clock;
 pub mod json;
 pub mod par;
 pub mod rng;

@@ -126,13 +126,25 @@ fn ablation_arms_run_and_record_modes() {
 fn continuous_batching_admits_beyond_tile() {
     let stack = common::stack();
     let spec = stack.gpu.spec.clone();
-    // 2x the batch tile: forces chunked steps + queueing
-    let reqs = requests(&stack, spec.batch * 2 + 1, spec.block_size * 4, 4);
-    let run = harness::run_method(&stack, Method::Scout, reqs, 2000, None).unwrap();
-    assert_eq!(run.outputs.len(), spec.batch * 2 + 1);
+    // 2x the batch tile, with an admission cap below the request count:
+    // forces chunked steps + real queueing between steps.
+    let n_req = spec.batch * 2 + 1;
+    let mut cfg = stack.cfg.clone();
+    cfg.server.max_batch = 2;
+    let stack_capped = Stack {
+        cfg,
+        rt: stack.rt.clone(),
+        gpu: stack.gpu.clone(),
+        native: stack.native.clone(),
+    };
+    let reqs = requests(&stack, n_req, spec.block_size * 4, 4);
+    let run = harness::run_method(&stack_capped, Method::Scout, reqs, 2000, None).unwrap();
+    assert_eq!(run.outputs.len(), n_req);
     for o in &run.outputs {
         assert_eq!(o.generated.len(), 4);
     }
+    assert_eq!(run.total_admitted(), n_req, "every request admitted exactly once");
+    assert!(run.peak_queue_depth() > 0, "admission cap must make queueing observable");
 }
 
 #[test]

@@ -1,58 +1,364 @@
-//! Server integration: spin the JSON-lines TCP server on the test-tiny
-//! preset (interpreter backend — no artifacts required) and drive it from
-//! a client socket — the full python-free request path (admission ->
-//! prefill -> scout decode -> response).
+//! Serving-plane integration: the multi-replica engine pool driven both
+//! in-process (submit/stream API) and over the JSON-lines TCP front-end
+//! (test-tiny preset, interpreter backend — no artifacts required).
+//!
+//! Covers the serving contracts: concurrent multi-client decode across
+//! replicas, streaming order + parity with the single-shot path,
+//! bounded + observable backpressure, wire-boundary validation, and
+//! graceful drain.
 
 mod common;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
-use scoutattention::config::RunConfig;
+use scoutattention::config::{Method, RunConfig};
+use scoutattention::coordinator::{RequestOutput, RequestSpec};
+use scoutattention::harness;
+use scoutattention::serve::{EnginePool, RejectCode, StreamEvent, StreamHandle, Submission};
 use scoutattention::util::Json;
+
+const WAIT: Duration = Duration::from_secs(120);
+
+fn pool_cfg() -> RunConfig {
+    RunConfig::for_preset(common::PRESET)
+}
+
+/// Drain a handle with a timeout so a regression fails instead of
+/// hanging the suite. Returns the terminal event.
+fn wait_terminal(h: &StreamHandle) -> StreamEvent {
+    loop {
+        match h.recv_timeout(WAIT) {
+            Some(ev @ StreamEvent::Done(_))
+            | Some(ev @ StreamEvent::Rejected(_))
+            | Some(ev @ StreamEvent::Failed { .. }) => return ev,
+            Some(StreamEvent::Token { .. }) => continue,
+            None => panic!("stream closed without a terminal event"),
+        }
+    }
+}
+
+fn expect_done(ev: StreamEvent) -> RequestOutput {
+    match ev {
+        StreamEvent::Done(out) => out,
+        other => panic!("expected Done, got {other:?}"),
+    }
+}
+
+/// Deterministic prompt in test-tiny vocab (256), avoiding pad token 0.
+fn prompt(len: usize, salt: u32) -> Vec<u32> {
+    (0..len as u32).map(|i| 1 + (i * 31 + salt * 7) % 255).collect()
+}
+
+#[test]
+fn pool_multi_replica_matches_single_shot() {
+    let mut cfg = pool_cfg();
+    cfg.server.replicas = 2;
+    cfg.server.max_batch = 2;
+    let pool = EnginePool::start(cfg.clone()).expect("pool start");
+    assert_eq!(pool.replica_count(), 2);
+
+    // Mixed-length prompts, half streaming, submitted concurrently.
+    let prompts: Vec<Vec<u32>> = (0..6).map(|i| prompt(32 + 16 * (i % 3), i as u32)).collect();
+    let new_tokens = 6usize;
+    let handles: Vec<StreamHandle> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut sub = Submission::new(p.clone(), new_tokens);
+            if i % 2 == 0 {
+                sub = sub.streaming();
+            }
+            pool.submit(sub)
+        })
+        .collect();
+    let mut outputs: Vec<RequestOutput> =
+        handles.iter().map(|h| expect_done(wait_terminal(h))).collect();
+    outputs.sort_by_key(|o| o.id);
+    assert_eq!(outputs.len(), 6);
+    for (i, o) in outputs.iter().enumerate() {
+        assert_eq!(o.id, i as u64, "pool ids are assigned in submit order");
+        assert_eq!(o.generated.len(), new_tokens);
+        assert!(o.ttft_us > 0, "TTFT must be measurable through the pool");
+    }
+
+    // Single-shot reference: each request decoded alone on a fresh batch.
+    let stack = harness::Stack::load(&cfg).expect("reference stack");
+    for (i, p) in prompts.iter().enumerate() {
+        let reqs = vec![RequestSpec::new(0, p.clone(), new_tokens)];
+        let reference = harness::run_method(&stack, Method::Scout, reqs, 1000, None).unwrap();
+        assert_eq!(
+            outputs[i].generated, reference.outputs[0].generated,
+            "request {i}: pooled decode must match the single-shot path"
+        );
+    }
+    pool.shutdown().expect("shutdown");
+}
+
+#[test]
+fn streaming_orders_tokens_and_matches_non_streaming() {
+    let mut cfg = pool_cfg();
+    cfg.server.replicas = 1;
+    let pool = EnginePool::start(cfg).expect("pool start");
+    let p = prompt(48, 3);
+
+    let h = pool.submit(Submission::new(p.clone(), 8).streaming());
+    let mut streamed = Vec::new();
+    let mut steps = Vec::new();
+    let final_out;
+    loop {
+        match h.recv_timeout(WAIT).expect("stream event") {
+            StreamEvent::Token { token, step, .. } => {
+                streamed.push(token);
+                steps.push(step);
+            }
+            StreamEvent::Done(out) => {
+                final_out = out;
+                break;
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert_eq!(steps, (1..=8).collect::<Vec<_>>(), "tokens must arrive in step order");
+    assert_eq!(streamed, final_out.generated, "streamed tokens must equal the final output");
+
+    let out2 = expect_done(wait_terminal(&pool.submit(Submission::new(p, 8))));
+    assert_eq!(
+        out2.generated, final_out.generated,
+        "streaming and non-streaming paths must be byte-identical"
+    );
+    pool.shutdown().expect("shutdown");
+}
+
+#[test]
+fn backpressure_is_bounded_and_observable() {
+    let mut cfg = pool_cfg();
+    cfg.server.replicas = 1;
+    cfg.server.max_batch = 1;
+    cfg.server.queue_depth = 1;
+    let pool = EnginePool::start(cfg).expect("pool start");
+
+    // A saturates the single batch slot; wait for its first token so it
+    // is live (and the bounded channel is empty again). Its decode
+    // budget is large enough that it cannot finish while this thread
+    // submits B/C and snapshots stats, even under heavy CI preemption.
+    let a = pool.submit(Submission::new(prompt(32, 1), 200).streaming());
+    match a.recv_timeout(WAIT) {
+        Some(StreamEvent::Token { .. }) => {}
+        other => panic!("expected first token from A, got {other:?}"),
+    }
+    // B fills the queue_depth=1 channel; C must be rejected, structured.
+    let b = pool.submit(Submission::new(prompt(32, 2), 2));
+    let c = pool.submit(Submission::new(prompt(32, 3), 2));
+    match wait_terminal(&c) {
+        StreamEvent::Rejected(r) => {
+            assert_eq!(r.code, RejectCode::Overloaded);
+            assert!(r.retry_after_ms > 0, "backpressure must carry a retry hint");
+            assert!(r.reason.contains("queue full"), "{}", r.reason);
+        }
+        other => panic!("expected C rejected, got {other:?}"),
+    }
+
+    // Queue depth and rejects are visible in the stats snapshot.
+    let stats = pool.stats();
+    assert!(stats.req_usize("rejected").unwrap() >= 1);
+    assert!(
+        stats.get("rejected_by").unwrap().req_usize("overloaded").unwrap() >= 1,
+        "rejects must be classified"
+    );
+    assert_eq!(stats.req_usize("queue_depth").unwrap(), 1, "B still queued");
+
+    // Nothing hangs: A and B both complete.
+    expect_done(wait_terminal(&a));
+    expect_done(wait_terminal(&b));
+    pool.shutdown().expect("shutdown");
+}
+
+#[test]
+fn cancellation_frees_the_batch_slot() {
+    let mut cfg = pool_cfg();
+    cfg.server.replicas = 1;
+    cfg.server.max_batch = 1;
+    let pool = EnginePool::start(cfg).expect("pool start");
+
+    // A would hold the only slot for 200 steps; cancel it after the
+    // first token and B must still complete promptly.
+    let a = pool.submit(Submission::new(prompt(32, 1), 200).streaming());
+    match a.recv_timeout(WAIT) {
+        Some(StreamEvent::Token { .. }) => {}
+        other => panic!("expected first token from A, got {other:?}"),
+    }
+    pool.cancel(&a);
+    let b = pool.submit(Submission::new(prompt(32, 2), 2));
+    let out = expect_done(wait_terminal(&b));
+    assert_eq!(out.generated.len(), 2);
+    // A's stream ends with a terminal event, not a silent drop.
+    match wait_terminal(&a) {
+        StreamEvent::Failed { error, .. } => assert!(error.contains("cancelled"), "{error}"),
+        other => panic!("expected A cancelled, got {other:?}"),
+    }
+    let stats = pool.stats();
+    assert!(stats.req_usize("cancelled").unwrap() >= 1);
+    pool.shutdown().expect("shutdown");
+}
+
+#[test]
+fn token_budget_rejects_before_queueing() {
+    let mut cfg = pool_cfg();
+    cfg.server.token_budget = 8;
+    let pool = EnginePool::start(cfg).expect("pool start");
+    let h = pool.submit(Submission::new(prompt(16, 1), 4)); // cost 20 > 8
+    match wait_terminal(&h) {
+        StreamEvent::Rejected(r) => {
+            assert_eq!(r.code, RejectCode::Overloaded);
+            assert!(r.reason.contains("token budget"), "{}", r.reason);
+        }
+        other => panic!("expected budget rejection, got {other:?}"),
+    }
+    pool.shutdown().expect("shutdown");
+}
+
+#[test]
+fn wire_validation_rejects_impossible_requests() {
+    let pool = EnginePool::start(pool_cfg()).expect("pool start");
+    let max_seq = pool.spec().max_seq;
+
+    // context overflow: can never be served
+    let h = pool.submit(Submission::new(prompt(max_seq, 1), 8));
+    match wait_terminal(&h) {
+        StreamEvent::Rejected(r) => {
+            assert_eq!(r.code, RejectCode::Invalid);
+            assert!(r.reason.contains("context overflow"), "{}", r.reason);
+            assert_eq!(r.retry_after_ms, 0, "retrying an invalid request cannot help");
+        }
+        other => panic!("expected invalid rejection, got {other:?}"),
+    }
+    // zero decode budget
+    let h = pool.submit(Submission::new(prompt(8, 1), 0));
+    match wait_terminal(&h) {
+        StreamEvent::Rejected(r) => assert_eq!(r.code, RejectCode::Invalid),
+        other => panic!("expected invalid rejection, got {other:?}"),
+    }
+    // absurd decode budget must reject cleanly, not overflow the
+    // context arithmetic
+    let h = pool.submit(Submission::new(prompt(8, 1), usize::MAX));
+    match wait_terminal(&h) {
+        StreamEvent::Rejected(r) => assert_eq!(r.code, RejectCode::Invalid),
+        other => panic!("expected invalid rejection, got {other:?}"),
+    }
+    // out-of-vocab token id
+    let h = pool.submit(Submission::new(vec![9999], 2));
+    match wait_terminal(&h) {
+        StreamEvent::Rejected(r) => {
+            assert_eq!(r.code, RejectCode::Invalid);
+            assert!(r.reason.contains("vocab"), "{}", r.reason);
+        }
+        other => panic!("expected invalid rejection, got {other:?}"),
+    }
+    let stats = pool.stats();
+    assert!(stats.get("rejected_by").unwrap().req_usize("invalid").unwrap() >= 3);
+    pool.shutdown().expect("shutdown");
+}
+
+#[test]
+fn drain_finishes_accepted_work_then_refuses() {
+    let mut cfg = pool_cfg();
+    cfg.server.replicas = 2;
+    let pool = EnginePool::start(cfg).expect("pool start");
+    let handles: Vec<StreamHandle> =
+        (0..4).map(|i| pool.submit(Submission::new(prompt(32, i), 5))).collect();
+    // Drain immediately: everything accepted must still complete.
+    pool.shutdown().expect("shutdown");
+    for h in &handles {
+        let out = expect_done(wait_terminal(h));
+        assert_eq!(out.generated.len(), 5);
+    }
+    let late = pool.submit(Submission::new(prompt(8, 9), 2));
+    match wait_terminal(&late) {
+        StreamEvent::Rejected(r) => assert_eq!(r.code, RejectCode::Draining),
+        other => panic!("expected draining rejection, got {other:?}"),
+    }
+}
 
 #[test]
 fn serve_roundtrip_over_tcp() {
-    let mut cfg = RunConfig::for_preset(common::PRESET);
-    cfg.server.listen = "127.0.0.1:17411".to_string();
-    std::thread::spawn(move || {
-        let _ = scoutattention::server::serve(cfg);
-    });
+    let mut cfg = pool_cfg();
+    cfg.server.listen = "127.0.0.1:17431".to_string();
+    cfg.server.replicas = 2;
+    let server = std::thread::spawn(move || scoutattention::server::serve(cfg));
 
-    // wait for the listener (engine loads artifacts lazily, bind is fast)
     let mut sock = None;
     for _ in 0..100 {
-        match TcpStream::connect("127.0.0.1:17411") {
+        match TcpStream::connect("127.0.0.1:17431") {
             Ok(s) => {
                 sock = Some(s);
                 break;
             }
-            Err(_) => std::thread::sleep(std::time::Duration::from_millis(100)),
+            Err(_) => std::thread::sleep(Duration::from_millis(100)),
         }
     }
     let sock = sock.expect("server did not come up");
     let mut reader = BufReader::new(sock.try_clone().unwrap());
     let mut w = sock;
+    let read_json = |reader: &mut BufReader<TcpStream>| -> Json {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(&line).unwrap_or_else(|e| panic!("bad json {line:?}: {e}"))
+    };
 
     // malformed line gets an error object, not a hangup
     writeln!(w, "this is not json").unwrap();
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    assert!(Json::parse(&line).unwrap().get("error").is_some(), "{line}");
+    assert!(read_json(&mut reader).get("error").is_some());
 
-    // real request
+    // non-streaming request: one terminal line with timing fields
     writeln!(w, "{{\"prompt\":[5,6,7,8,9,10,11,12], \"max_new_tokens\": 4}}").unwrap();
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    let j = Json::parse(&line).unwrap();
-    let gen = j.req("generated").unwrap().as_arr().unwrap();
-    assert_eq!(gen.len(), 4, "{line}");
+    let j = read_json(&mut reader);
+    assert_eq!(j.req("generated").unwrap().as_arr().unwrap().len(), 4);
     assert_eq!(j.req_usize("steps").unwrap(), 4);
+    assert!(j.req_usize("ttft_us").unwrap() > 0, "{j:?}");
 
-    // second request on the same connection (engine keeps serving)
-    writeln!(w, "{{\"prompt\":[1,2,3,4], \"max_new_tokens\": 2}}").unwrap();
-    let mut line2 = String::new();
-    reader.read_line(&mut line2).unwrap();
-    let j2 = Json::parse(&line2).unwrap();
-    assert_eq!(j2.req("generated").unwrap().as_arr().unwrap().len(), 2);
+    // streaming request: per-step token lines, then the terminal line
+    writeln!(w, "{{\"prompt\":[1,2,3,4], \"max_new_tokens\": 3, \"stream\": true}}").unwrap();
+    let mut tokens = Vec::new();
+    let terminal = loop {
+        let j = read_json(&mut reader);
+        if let Some(t) = j.get("token") {
+            assert_eq!(j.req_usize("step").unwrap(), tokens.len() + 1, "step order");
+            tokens.push(t.as_u64().unwrap() as u32);
+        } else {
+            break j;
+        }
+    };
+    assert_eq!(tokens.len(), 3);
+    let final_gen: Vec<u32> = terminal
+        .req("generated")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_u64().unwrap() as u32)
+        .collect();
+    assert_eq!(tokens, final_gen);
+
+    // over-context request is refused with a structured error
+    let long: Vec<String> = (0..400).map(|i| (1 + i % 200).to_string()).collect();
+    writeln!(w, "{{\"prompt\":[{}], \"max_new_tokens\": 4}}", long.join(",")).unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.req_str("code").unwrap(), "invalid", "{j:?}");
+    assert!(j.get("error").is_some());
+
+    // stats control request
+    writeln!(w, "{{\"stats\": true}}").unwrap();
+    let stats = read_json(&mut reader);
+    assert_eq!(stats.req_usize("replica_count").unwrap(), 2);
+    assert!(stats.get("replicas").unwrap().as_arr().unwrap().len() == 2);
+    assert!(stats.req_usize("tokens_out").unwrap() >= 7);
+    assert!(stats.get("ttft_us").unwrap().get("p50").is_some());
+
+    // graceful shutdown: drain + listener exit
+    writeln!(w, "{{\"shutdown\": true}}").unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+    server.join().unwrap().expect("serve() returns cleanly after drain");
 }
