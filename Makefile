@@ -10,7 +10,7 @@
 PRESETS ?= test-tiny
 ARTIFACTS_DIR := artifacts
 
-.PHONY: all build test bench bench-smoke bench-baseline bench-serve clippy fmt artifacts clean
+.PHONY: all build test bench bench-smoke bench-baseline bench-serve bench-prefill clippy fmt artifacts clean
 
 all: build
 
@@ -44,6 +44,14 @@ bench-baseline: build
 # asserts >= 2x the single-replica requests/s.
 bench-serve: build
 	cargo bench --bench serve_throughput
+
+# Prefill interference: decode inter-token p50/p99 with a concurrent
+# long admission — inline vs chunked vs disaggregated (role-split pool
+# with KV handoff) — written to BENCH_prefill.json. Full runs assert
+# chunked/disaggregated stay within 2x of the no-prefill baseline while
+# inline does not.
+bench-prefill: build
+	cargo bench --bench prefill_interference
 
 clippy:
 	cargo clippy --workspace --all-targets -- -D warnings

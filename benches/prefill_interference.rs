@@ -1,0 +1,244 @@
+//! Prefill interference on decode inter-token latency: inline vs
+//! chunked vs disaggregated.
+//!
+//! The scenario the refactor exists for: live streaming decodes share a
+//! pool with one long-prompt admission. Four arms measure the decode
+//! streams' inter-token gaps while the admission runs:
+//!
+//! - `baseline`  — no concurrent prefill (the latency floor);
+//! - `inline`    — `prefill_chunk` >= prompt: the seed's whole-prompt
+//!   prefill between decode steps (stalls every co-batched decode);
+//! - `chunked`   — small chunks interleaved on one mixed replica;
+//! - `disagg`    — 1 prefill + 2 decode replicas: the admission
+//!   prefills elsewhere and arrives via KV handoff.
+//!
+//! Writes BENCH_prefill.json (rows: arm, gap p50/p99 us, ratio to
+//! baseline). Full runs assert the acceptance contract: chunked and
+//! disaggregated keep decode p99 within 2x of the no-prefill baseline,
+//! while inline measurably does not. Under `--quick` /
+//! SCOUT_BENCH_SMOKE the bench only exercises the paths (n=1-scale
+//! timings are meaningless).
+
+use std::time::{Duration, Instant};
+
+use scoutattention::config::{ReplicaRole, RunConfig};
+use scoutattention::serve::{EnginePool, StreamEvent, StreamHandle, Submission};
+use scoutattention::util::bench::smoke;
+use scoutattention::util::Json;
+
+const WAIT: Duration = Duration::from_secs(300);
+
+fn prompt(len: usize, salt: u32) -> Vec<u32> {
+    (0..len as u32).map(|i| 1 + (i * 13 + salt * 5) % 255).collect()
+}
+
+struct Arm {
+    name: &'static str,
+    replicas: usize,
+    roles: Vec<ReplicaRole>,
+    prefill_chunk: usize,
+    with_prefill: bool,
+}
+
+struct ArmResult {
+    name: &'static str,
+    gaps: usize,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p) as usize]
+}
+
+/// Wait for the first Token event (the stream is live in the batch).
+fn first_token(h: &StreamHandle) {
+    loop {
+        match h.recv_timeout(WAIT) {
+            Some(StreamEvent::Token { .. }) => return,
+            Some(StreamEvent::Done(_)) => panic!("decode stream finished before measurement"),
+            Some(other) => panic!("unexpected event {other:?}"),
+            None => panic!("decode stream stalled"),
+        }
+    }
+}
+
+/// Drain a decode stream to completion, stamping each token's arrival.
+fn collect_token_times(h: &StreamHandle) -> Vec<Instant> {
+    let mut times = Vec::new();
+    loop {
+        match h.recv_timeout(WAIT) {
+            Some(StreamEvent::Token { .. }) => times.push(Instant::now()),
+            Some(StreamEvent::Done(_)) => return times,
+            Some(other) => panic!("unexpected event {other:?}"),
+            None => panic!("decode stream stalled"),
+        }
+    }
+}
+
+fn run_arm(arm: &Arm, decode_tokens: usize, prefill_len: usize) -> ArmResult {
+    let mut cfg = RunConfig::for_preset("test-tiny");
+    cfg.server.replicas = arm.replicas;
+    cfg.server.roles = arm.roles.clone();
+    cfg.server.max_batch = 4;
+    cfg.scout.prefill_chunk = arm.prefill_chunk;
+    let pool = EnginePool::start(cfg).expect("pool start");
+
+    // Two streaming decodes saturate the batch tile (test-tiny B = 2).
+    let decodes: Vec<StreamHandle> = (0..2)
+        .map(|i| pool.submit(Submission::new(prompt(16, i), decode_tokens).streaming()))
+        .collect();
+    for h in &decodes {
+        first_token(h);
+    }
+
+    // The interfering long admissions (measurement starts at submit).
+    // Two back-to-back so the inline arm's whole-prompt stalls are a
+    // robust fraction of the sampled gaps, not a single outlier.
+    let t_interfere = Instant::now();
+    let prefills: Vec<StreamHandle> = if arm.with_prefill {
+        (0..2).map(|i| pool.submit(Submission::new(prompt(prefill_len, 9 + i), 1))).collect()
+    } else {
+        Vec::new()
+    };
+
+    let mut gaps_us: Vec<f64> = Vec::new();
+    std::thread::scope(|s| {
+        // Move each handle into its collector (mpsc receivers are !Sync).
+        let stamps: Vec<_> = decodes
+            .into_iter()
+            .map(|h| s.spawn(move || collect_token_times(&h)))
+            .collect();
+        for j in stamps {
+            let times = j.join().expect("collector thread");
+            // Gaps entirely after the interfering submission (baseline
+            // uses the same cutoff so the arms sample the same regime).
+            for w in times.windows(2) {
+                if w[0] >= t_interfere {
+                    gaps_us.push(w[1].duration_since(w[0]).as_secs_f64() * 1e6);
+                }
+            }
+        }
+    });
+    for h in prefills {
+        h.wait().expect("interfering admission completed");
+    }
+    pool.shutdown().expect("shutdown");
+
+    gaps_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ArmResult {
+        name: arm.name,
+        gaps: gaps_us.len(),
+        p50_us: percentile(&gaps_us, 0.5),
+        p99_us: percentile(&gaps_us, 0.99),
+    }
+}
+
+fn main() {
+    let quick = smoke() || std::env::args().any(|a| a == "--quick");
+    println!("prefill_interference — decode inter-token latency under a long admission");
+    let (decode_tokens, prefill_len) = if quick { (16, 48) } else { (40, 200) };
+
+    let arms = [
+        Arm {
+            name: "baseline",
+            replicas: 1,
+            roles: vec![],
+            prefill_chunk: 2,
+            with_prefill: false,
+        },
+        Arm {
+            name: "inline",
+            replicas: 1,
+            roles: vec![],
+            prefill_chunk: 1 << 30,
+            with_prefill: true,
+        },
+        Arm {
+            name: "chunked",
+            replicas: 1,
+            roles: vec![],
+            prefill_chunk: 2,
+            with_prefill: true,
+        },
+        Arm {
+            name: "disagg",
+            replicas: 3,
+            roles: vec![ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Decode],
+            prefill_chunk: 2,
+            with_prefill: true,
+        },
+    ];
+
+    let mut results = Vec::new();
+    for arm in &arms {
+        let r = run_arm(arm, decode_tokens, prefill_len);
+        println!(
+            "{:<10} gaps {:>4}  inter-token p50 {:>9.1} us  p99 {:>9.1} us",
+            r.name, r.gaps, r.p50_us, r.p99_us
+        );
+        results.push(r);
+    }
+    let p99_of = |name: &str| {
+        results.iter().find(|r| r.name == name).map(|r| r.p99_us).unwrap_or(0.0)
+    };
+    let baseline = p99_of("baseline").max(1.0);
+
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("arm", Json::str(r.name)),
+                ("gaps", Json::num(r.gaps as f64)),
+                ("inter_token_p50_us", Json::num(r.p50_us)),
+                ("inter_token_p99_us", Json::num(r.p99_us)),
+                ("p99_vs_baseline", Json::num(r.p99_us / baseline)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::str("prefill_interference")),
+        ("quick", Json::Bool(quick)),
+        ("decode_tokens", Json::num(decode_tokens as f64)),
+        ("prefill_len", Json::num(prefill_len as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = std::env::var("SCOUT_BENCH_PREFILL_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_prefill.json")
+        });
+    std::fs::write(&path, json.to_string()).expect("write bench json");
+    println!("wrote prefill interference rows to {}", path.display());
+
+    if quick {
+        println!("quick/smoke mode: skipping interference assertions");
+        return;
+    }
+    let (inline, chunked, disagg) = (p99_of("inline"), p99_of("chunked"), p99_of("disagg"));
+    println!(
+        "p99 vs baseline: inline {:.2}x, chunked {:.2}x, disagg {:.2}x",
+        inline / baseline,
+        chunked / baseline,
+        disagg / baseline
+    );
+    assert!(
+        chunked <= 2.0 * baseline,
+        "chunked prefill must keep decode p99 within 2x of the no-prefill baseline \
+         ({chunked:.1}us vs {baseline:.1}us)"
+    );
+    assert!(
+        disagg <= 2.0 * baseline,
+        "disaggregated prefill must keep decode p99 within 2x of the no-prefill baseline \
+         ({disagg:.1}us vs {baseline:.1}us)"
+    );
+    assert!(
+        inline > 2.0 * baseline,
+        "inline whole-prompt prefill should measurably blow decode p99 \
+         ({inline:.1}us vs {baseline:.1}us) — if this fails, the interference scenario \
+         is too small to matter on this host"
+    );
+}

@@ -2,18 +2,21 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{admission, gather, Batch, DecodeScheduler, StepStats};
+use crate::coordinator::{gather, Batch, DecodeScheduler, StepStats};
 use crate::engines::{GpuEngine, NativeEngine};
 use crate::tensor::Tensor;
 
 pub struct FullKvScheduler {
     pub gpu: Arc<GpuEngine>,
     pub native: Arc<NativeEngine>,
+    /// Prompt tokens per resumable prefill chunk (see
+    /// `coordinator::prefill`).
+    pub prefill_chunk: usize,
 }
 
 impl FullKvScheduler {
     pub fn new(gpu: Arc<GpuEngine>, native: Arc<NativeEngine>) -> Self {
-        Self { gpu, native }
+        Self { gpu, native, prefill_chunk: crate::coordinator::DEFAULT_PREFILL_CHUNK }
     }
 
     fn step_chunk(
@@ -73,18 +76,36 @@ impl FullKvScheduler {
 }
 
 impl DecodeScheduler for FullKvScheduler {
-    fn admit(&mut self, batch: &mut Batch, req: &crate::coordinator::RequestSpec) -> crate::Result<()> {
-        // Dense attention ignores residency, but shares the admission
-        // path so every method decodes from identical prefill state.
-        let spec = self.gpu.spec.clone();
-        admission::prefill_request(
-            &self.gpu,
-            &self.native,
-            batch,
+    // Dense attention ignores residency, but shares the admission path
+    // so every method decodes from identical prefill state.
+    fn begin_prefill(
+        &self,
+        req: &crate::coordinator::RequestSpec,
+        budget_blocks: usize,
+    ) -> crate::Result<crate::coordinator::PrefillState> {
+        crate::coordinator::PrefillState::begin(
+            &self.gpu.spec,
             req,
-            true,
-            1,
-            vec![usize::MAX; spec.n_layers],
+            budget_blocks,
+            self.prefill_chunk,
+        )
+    }
+
+    fn prefill_step(&mut self, st: &mut crate::coordinator::PrefillState) -> crate::Result<bool> {
+        st.advance(&self.gpu)
+    }
+
+    fn finish_prefill(
+        &mut self,
+        st: crate::coordinator::PrefillState,
+    ) -> crate::Result<crate::coordinator::SeqState> {
+        st.finish(
+            &self.native,
+            crate::coordinator::PrefillParams {
+                pin_sink: true,
+                pin_recent: 1,
+                recall_countdowns: vec![usize::MAX; self.gpu.spec.n_layers],
+            },
         )
     }
 

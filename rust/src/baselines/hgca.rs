@@ -22,12 +22,19 @@ pub struct HgcaScheduler {
     /// Complete blocks kept on the GPU as the sliding window (HGCA keeps
     /// ~25% of tokens; configured as blocks out of the k_blocks budget).
     pub window_blocks: usize,
+    /// Prompt tokens per resumable prefill chunk.
+    pub prefill_chunk: usize,
 }
 
 impl HgcaScheduler {
     pub fn new(gpu: Arc<GpuEngine>, native: Arc<NativeEngine>) -> Self {
         let window_blocks = (gpu.spec.k_blocks / 4).max(1);
-        Self { gpu, native, window_blocks }
+        Self {
+            gpu,
+            native,
+            window_blocks,
+            prefill_chunk: crate::coordinator::DEFAULT_PREFILL_CHUNK,
+        }
     }
 
     pub fn prefill_request(
@@ -44,6 +51,7 @@ impl HgcaScheduler {
             true,
             self.window_blocks,
             vec![usize::MAX; spec.n_layers],
+            self.prefill_chunk,
         )
     }
 
@@ -123,8 +131,35 @@ impl HgcaScheduler {
 }
 
 impl DecodeScheduler for HgcaScheduler {
-    fn admit(&mut self, batch: &mut Batch, req: &crate::coordinator::RequestSpec) -> crate::Result<()> {
-        self.prefill_request(batch, req)
+    fn begin_prefill(
+        &self,
+        req: &crate::coordinator::RequestSpec,
+        budget_blocks: usize,
+    ) -> crate::Result<crate::coordinator::PrefillState> {
+        crate::coordinator::PrefillState::begin(
+            &self.gpu.spec,
+            req,
+            budget_blocks,
+            self.prefill_chunk,
+        )
+    }
+
+    fn prefill_step(&mut self, st: &mut crate::coordinator::PrefillState) -> crate::Result<bool> {
+        st.advance(&self.gpu)
+    }
+
+    fn finish_prefill(
+        &mut self,
+        st: crate::coordinator::PrefillState,
+    ) -> crate::Result<SeqState> {
+        st.finish(
+            &self.native,
+            crate::coordinator::PrefillParams {
+                pin_sink: true,
+                pin_recent: self.window_blocks,
+                recall_countdowns: vec![usize::MAX; self.gpu.spec.n_layers],
+            },
+        )
     }
 
     fn step(&mut self, batch: &mut Batch) -> crate::Result<StepStats> {

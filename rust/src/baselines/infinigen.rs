@@ -21,11 +21,19 @@ pub struct InfinigenScheduler {
     /// Keep the sink block pinned like the other methods (fair config).
     pub pin_sink: bool,
     pub pin_recent: usize,
+    /// Prompt tokens per resumable prefill chunk.
+    pub prefill_chunk: usize,
 }
 
 impl InfinigenScheduler {
     pub fn new(gpu: Arc<GpuEngine>, native: Arc<NativeEngine>) -> Self {
-        Self { gpu, native, pin_sink: true, pin_recent: 1 }
+        Self {
+            gpu,
+            native,
+            pin_sink: true,
+            pin_recent: 1,
+            prefill_chunk: crate::coordinator::DEFAULT_PREFILL_CHUNK,
+        }
     }
 
     pub fn prefill_request(
@@ -42,6 +50,7 @@ impl InfinigenScheduler {
             self.pin_sink,
             self.pin_recent,
             vec![usize::MAX; spec.n_layers], // no periodic recall
+            self.prefill_chunk,
         )
     }
 
@@ -122,8 +131,35 @@ impl InfinigenScheduler {
 }
 
 impl DecodeScheduler for InfinigenScheduler {
-    fn admit(&mut self, batch: &mut Batch, req: &crate::coordinator::RequestSpec) -> crate::Result<()> {
-        self.prefill_request(batch, req)
+    fn begin_prefill(
+        &self,
+        req: &crate::coordinator::RequestSpec,
+        budget_blocks: usize,
+    ) -> crate::Result<crate::coordinator::PrefillState> {
+        crate::coordinator::PrefillState::begin(
+            &self.gpu.spec,
+            req,
+            budget_blocks,
+            self.prefill_chunk,
+        )
+    }
+
+    fn prefill_step(&mut self, st: &mut crate::coordinator::PrefillState) -> crate::Result<bool> {
+        st.advance(&self.gpu)
+    }
+
+    fn finish_prefill(
+        &mut self,
+        st: crate::coordinator::PrefillState,
+    ) -> crate::Result<SeqState> {
+        st.finish(
+            &self.native,
+            crate::coordinator::PrefillParams {
+                pin_sink: self.pin_sink,
+                pin_recent: self.pin_recent,
+                recall_countdowns: vec![usize::MAX; self.gpu.spec.n_layers],
+            },
+        )
     }
 
     fn step(&mut self, batch: &mut Batch) -> crate::Result<StepStats> {

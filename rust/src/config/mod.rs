@@ -11,7 +11,7 @@ mod scout;
 mod validate;
 
 pub use crate::runtime::BackendKind;
-pub use crate::serve::RoutePolicy;
+pub use crate::serve::{ReplicaRole, RoutePolicy};
 pub use scout::{RecallPolicy, ScoutConfig};
 
 use crate::sim::timing::DeviceModel;
@@ -73,6 +73,12 @@ pub struct ServerConfig {
     /// Pool-wide cap on reserved in-flight tokens (prompt + max_new over
     /// queued and live requests); exceeding it rejects with backpressure.
     pub token_budget: usize,
+    /// Prefill/decode role per replica. Empty (the default) = every
+    /// replica is `mixed` (admits + decodes, no handoffs — the
+    /// pre-disaggregation behavior). When set, the length must equal
+    /// `replicas`, with at least one prefill-capable and one
+    /// decode-capable entry.
+    pub roles: Vec<ReplicaRole>,
 }
 
 impl Default for ServerConfig {
@@ -84,6 +90,7 @@ impl Default for ServerConfig {
             replicas: 1,
             policy: RoutePolicy::LeastLoaded,
             token_budget: 1 << 22,
+            roles: Vec::new(),
         }
     }
 }
@@ -112,6 +119,19 @@ impl ServerConfig {
         if let Some(v) = j.get("token_budget") {
             c.token_budget = v.as_usize().unwrap_or(c.token_budget);
         }
+        if let Some(v) = j.get("roles") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("server.roles must be an array of strings"))?;
+            c.roles = arr
+                .iter()
+                .map(|r| {
+                    r.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("server.roles entries must be strings"))?
+                        .parse::<ReplicaRole>()
+                })
+                .collect::<crate::Result<Vec<_>>>()?;
+        }
         Ok(c)
     }
 
@@ -123,6 +143,7 @@ impl ServerConfig {
             ("replicas", Json::num(self.replicas as f64)),
             ("policy", Json::str(self.policy.label())),
             ("token_budget", Json::num(self.token_budget as f64)),
+            ("roles", Json::Arr(self.roles.iter().map(|r| Json::str(r.label())).collect())),
         ])
     }
 }
@@ -285,6 +306,31 @@ mod tests {
         // ...and so is a non-string policy value
         assert!(RunConfig::from_json(
             &Json::parse("{\"preset\":\"p\",\"server\":{\"policy\":1}}").unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn server_roles_roundtrip_and_reject_bad_entries() {
+        let mut cfg = RunConfig::for_preset("test-tiny");
+        cfg.server.replicas = 3;
+        cfg.server.roles =
+            vec![ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Mixed];
+        let text = cfg.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.server.roles, cfg.server.roles);
+        back.validate().unwrap();
+        // default: empty mask
+        let d = RunConfig::from_json(&Json::parse("{\"preset\":\"p\"}").unwrap()).unwrap();
+        assert!(d.server.roles.is_empty());
+        // bad role string is an error, not a silent default
+        assert!(RunConfig::from_json(
+            &Json::parse("{\"preset\":\"p\",\"server\":{\"roles\":[\"bogus\"]}}").unwrap()
+        )
+        .is_err());
+        // non-array roles is an error
+        assert!(RunConfig::from_json(
+            &Json::parse("{\"preset\":\"p\",\"server\":{\"roles\":\"prefill\"}}").unwrap()
         )
         .is_err());
     }

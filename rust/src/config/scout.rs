@@ -74,6 +74,12 @@ pub struct ScoutConfig {
     /// Worker threads inside each group — §4's threads-per-sequence
     /// knob. Total CPU threads = groups × threads_per_group.
     pub threads_per_group: usize,
+    /// Prompt tokens per resumable prefill chunk: the engine loop
+    /// interleaves at most one chunk between decode steps, bounding the
+    /// inter-token stall a long admission imposes on live decodes.
+    /// Chunking is numerically exact; a value >= the prompt length
+    /// degenerates to the seed's inline whole-prompt prefill.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ScoutConfig {
@@ -87,6 +93,7 @@ impl Default for ScoutConfig {
             recall: RecallPolicy::default(),
             worker_groups: 0,
             threads_per_group: 1,
+            prefill_chunk: crate::coordinator::DEFAULT_PREFILL_CHUNK,
         }
     }
 }
@@ -118,6 +125,9 @@ impl ScoutConfig {
         if let Some(v) = j.get("threads_per_group") {
             c.threads_per_group = v.as_usize().unwrap_or(c.threads_per_group);
         }
+        if let Some(v) = j.get("prefill_chunk") {
+            c.prefill_chunk = v.as_usize().unwrap_or(c.prefill_chunk);
+        }
         // Legacy knob from the shared-pool era: *total* CPU threads. Map
         // it onto the sharded shape that preserves the thread budget:
         // that many single-thread groups (the scheduler caps groups at
@@ -140,6 +150,7 @@ impl ScoutConfig {
             ("recall", self.recall.to_json()),
             ("worker_groups", Json::num(self.worker_groups as f64)),
             ("threads_per_group", Json::num(self.threads_per_group as f64)),
+            ("prefill_chunk", Json::num(self.prefill_chunk as f64)),
         ])
     }
 }
@@ -173,6 +184,16 @@ mod tests {
         assert!(c.layer_ahead && c.predicted_query);
         assert_eq!(c.worker_groups, 0, "default: one group per batch slot");
         assert_eq!(c.threads_per_group, 1);
+        assert_eq!(c.prefill_chunk, 512, "chunked prefill on by default");
+    }
+
+    #[test]
+    fn prefill_chunk_roundtrips() {
+        let c =
+            ScoutConfig::from_json(&Json::parse("{\"prefill_chunk\":64}").unwrap()).unwrap();
+        assert_eq!(c.prefill_chunk, 64);
+        let back = ScoutConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.prefill_chunk, 64);
     }
 
     #[test]

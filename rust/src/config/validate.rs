@@ -16,10 +16,27 @@ impl RunConfig {
         if let super::RecallPolicy::Fixed { interval } = self.scout.recall {
             anyhow::ensure!(interval >= 1, "recall interval >= 1");
         }
+        anyhow::ensure!(self.scout.prefill_chunk >= 1, "prefill_chunk >= 1");
         anyhow::ensure!(self.server.max_batch >= 1, "max_batch >= 1");
         anyhow::ensure!(self.server.replicas >= 1, "replicas >= 1");
         anyhow::ensure!(self.server.queue_depth >= 1, "queue_depth >= 1");
         anyhow::ensure!(self.server.token_budget >= 1, "token_budget >= 1");
+        if !self.server.roles.is_empty() {
+            anyhow::ensure!(
+                self.server.roles.len() == self.server.replicas,
+                "server.roles has {} entries but replicas = {}",
+                self.server.roles.len(),
+                self.server.replicas
+            );
+            anyhow::ensure!(
+                self.server.roles.iter().any(|r| r.can_prefill()),
+                "server.roles needs at least one prefill-capable (prefill/mixed) replica"
+            );
+            anyhow::ensure!(
+                self.server.roles.iter().any(|r| r.can_decode()),
+                "server.roles needs at least one decode-capable (decode/mixed) replica"
+            );
+        }
         self.device.validate()?;
         Ok(())
     }
@@ -27,7 +44,7 @@ impl RunConfig {
 
 #[cfg(test)]
 mod tests {
-    use crate::config::{RecallPolicy, RunConfig};
+    use crate::config::{RecallPolicy, ReplicaRole, RunConfig};
 
     #[test]
     fn default_config_validates() {
@@ -45,6 +62,41 @@ mod tests {
     fn zero_recall_interval_rejected() {
         let mut c = RunConfig::for_preset("x");
         c.scout.recall = RecallPolicy::Fixed { interval: 0 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn role_mask_must_match_replicas_and_cover_both_stages() {
+        // wrong length
+        let mut c = RunConfig::for_preset("x");
+        c.server.replicas = 2;
+        c.server.roles = vec![ReplicaRole::Mixed];
+        assert!(c.validate().is_err());
+        // no decode-capable replica
+        let mut c = RunConfig::for_preset("x");
+        c.server.replicas = 2;
+        c.server.roles = vec![ReplicaRole::Prefill, ReplicaRole::Prefill];
+        assert!(c.validate().is_err());
+        // no prefill-capable replica
+        let mut c = RunConfig::for_preset("x");
+        c.server.replicas = 2;
+        c.server.roles = vec![ReplicaRole::Decode, ReplicaRole::Decode];
+        assert!(c.validate().is_err());
+        // a proper split validates
+        let mut c = RunConfig::for_preset("x");
+        c.server.replicas = 3;
+        c.server.roles = vec![ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Decode];
+        c.validate().unwrap();
+        // empty mask (all mixed) validates at any replica count
+        let mut c = RunConfig::for_preset("x");
+        c.server.replicas = 5;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn zero_prefill_chunk_rejected() {
+        let mut c = RunConfig::for_preset("x");
+        c.scout.prefill_chunk = 0;
         assert!(c.validate().is_err());
     }
 

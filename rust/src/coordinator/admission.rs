@@ -1,14 +1,15 @@
 //! Admission path: prefill an accepted request and initialize its decode
-//! state. Shared by Scout and every baseline (the paper evaluates decode
-//! instances of a PD-disaggregated deployment; prefill runs once on
-//! admission, standing in for the disaggregated prefill cluster's KV
-//! handoff).
+//! state. Shared by Scout and every baseline. The heavy lifting lives in
+//! [`super::prefill::PrefillState`] (resumable chunked prefill — the
+//! serving plane interleaves chunks between decode steps and can hand
+//! the finished sequence to another replica); this module keeps the
+//! shared pin policy and the one-call convenience wrapper the offline
+//! harness uses.
 
 use crate::engines::{GpuEngine, NativeEngine};
-use crate::sparse::{score_blocks_slabs, select_topk};
-use crate::tensor::Tensor;
 
-use super::batch::{Batch, SeqState};
+use super::batch::Batch;
+use super::prefill::{PrefillParams, PrefillState};
 use super::request::RequestSpec;
 
 /// Pinned blocks policy (sink + recent), shared across schedulers.
@@ -28,10 +29,12 @@ pub fn pins(pin_sink: bool, pin_recent: usize, full_blocks: usize) -> Vec<usize>
     pins
 }
 
-/// Prefill `req` through the fused prefill artifact, load the KV cache,
-/// initialize per-layer resident sets from digest scores against the
-/// last hidden state (the blocks "identified after the prefill phase"),
-/// and activate the sequence.
+/// Prefill `req` (in `chunk_tokens`-sized resumable chunks), initialize
+/// per-layer resident sets from digest scores against the last hidden
+/// state (the blocks "identified after the prefill phase"), and activate
+/// the sequence. One-call wrapper over [`PrefillState`] for the offline
+/// harness; the serving plane drives the same state chunk by chunk.
+#[allow(clippy::too_many_arguments)]
 pub fn prefill_request(
     gpu: &GpuEngine,
     native: &NativeEngine,
@@ -40,45 +43,15 @@ pub fn prefill_request(
     pin_sink: bool,
     pin_recent: usize,
     recall_countdowns: Vec<usize>,
+    chunk_tokens: usize,
 ) -> crate::Result<()> {
-    let spec = gpu.spec.clone();
-    let s_max = spec.max_seq;
-    anyhow::ensure!(!req.prompt.is_empty(), "empty prompt (request {})", req.id);
-    let n = req.prompt.len().min(s_max - 1);
-    let mut seq = SeqState::new(&spec, req, batch.budget_blocks);
-    seq.recall_in = recall_countdowns;
-
-    let mut x_seq = Tensor::zeros(&[s_max, spec.d_model]);
-    for (t, &tok) in req.prompt.iter().take(n).enumerate() {
-        x_seq.rows_mut(t, 1).copy_from_slice(gpu.weights.embed_token(tok));
-    }
-    let (k, v, h_last, _logits) = gpu.prefill(&x_seq, n)?;
-
-    for layer in 0..spec.n_layers {
-        seq.cache.load_prefill_layer(layer, k.rows(layer, 1), v.rows(layer, 1), n);
-    }
-    seq.cache.finish_prefill(n);
-
-    let full = seq.cache.full_blocks();
-    let nb = spec.n_blocks();
-    let (hq, hkv, d) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
-    for layer in 0..spec.n_layers {
-        let q = native.qpred(h_last.data(), layer, (n as i64) - 1);
-        let scores = {
-            let view = seq.cache.layer(layer);
-            let (lo, hi) = view.digests();
-            score_blocks_slabs(&q, lo, hi, nb, full, hq, hkv, d)
-        };
-        let ranked = select_topk(
-            &scores,
-            seq.resident[layer].capacity(),
-            &pins(pin_sink, pin_recent, full),
-        );
-        seq.resident[layer].refresh(&ranked.blocks);
-        seq.scores_mut(layer).clone_from(&scores);
-    }
-    batch.activate(seq);
-    Ok(())
+    let mut st = PrefillState::begin(&gpu.spec, req, batch.budget_blocks, chunk_tokens)?;
+    while !st.advance(gpu)? {}
+    let seq = st.finish(
+        native,
+        PrefillParams { pin_sink, pin_recent, recall_countdowns },
+    )?;
+    batch.activate(seq)
 }
 
 #[cfg(test)]

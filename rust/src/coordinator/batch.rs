@@ -3,7 +3,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::kvcache::{ResidentSet, ShardedKvCache};
+use crate::kvcache::{KvSeqExport, ResidentSet, ShardedKvCache};
 use crate::model::ModelSpec;
 
 use super::request::{RequestOutput, RequestSpec};
@@ -84,6 +84,65 @@ impl SeqState {
             ttft_us: 0,
         }
     }
+
+    /// Detach this sequence into a migratable bundle: the KV store's
+    /// exported shards + digests plus every piece of decode state the
+    /// destination scheduler needs (resident sets, selections, scores,
+    /// recall countdowns). Everything moves — slab contents are never
+    /// copied when the cache `Arc` is unique (always true for a freshly
+    /// prefilled sequence that has not decoded yet).
+    pub fn into_handoff(self) -> SeqHandoff {
+        SeqHandoff {
+            id: self.id,
+            export: ShardedKvCache::export_seq(self.cache),
+            resident: self.resident,
+            selected: self.selected,
+            scores: self.scores,
+            recall_in: self.recall_in,
+            last_tok: self.last_tok,
+            generated: self.generated,
+            max_new_tokens: self.max_new_tokens,
+        }
+    }
+
+    /// Rebuild a live sequence from a handoff on the receiving replica.
+    /// `decode_wall_us` restarts here: the destination is where decoding
+    /// actually happens.
+    pub fn from_handoff(h: SeqHandoff) -> Self {
+        Self {
+            id: h.id,
+            cache: Arc::new(ShardedKvCache::import_seq(h.export)),
+            resident: h.resident,
+            selected: h.selected,
+            scores: h.scores,
+            recall_in: h.recall_in,
+            last_tok: h.last_tok,
+            generated: h.generated,
+            max_new_tokens: h.max_new_tokens,
+            t_start: std::time::Instant::now(),
+        }
+    }
+}
+
+/// A prefilled sequence packed for migration between replica stacks
+/// (the PD-disaggregation KV handoff). See [`SeqState::into_handoff`].
+pub struct SeqHandoff {
+    pub id: u64,
+    pub export: KvSeqExport,
+    pub resident: Vec<ResidentSet>,
+    pub selected: Vec<Vec<usize>>,
+    pub scores: Vec<Vec<f32>>,
+    pub recall_in: Vec<usize>,
+    pub last_tok: u32,
+    pub generated: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+impl SeqHandoff {
+    /// Bytes a real cross-device migration would move (KV + digests).
+    pub fn payload_bytes(&self) -> usize {
+        self.export.payload_bytes()
+    }
 }
 
 /// A continuous batch: live sequences + waiting queue.
@@ -125,9 +184,20 @@ impl Batch {
         out
     }
 
-    pub fn activate(&mut self, seq: SeqState) {
-        assert!(self.seqs.len() < self.max_live);
+    /// Activate a prefilled sequence into the live set. Errors (instead
+    /// of panicking the replica thread) when the batch is already at
+    /// `max_live` — admission racing a config edge must surface through
+    /// the admit-failure path, not kill the engine loop.
+    pub fn activate(&mut self, seq: SeqState) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.seqs.len() < self.max_live,
+            "batch full: {} live >= max_live {} (request {})",
+            self.seqs.len(),
+            self.max_live,
+            seq.id
+        );
         self.seqs.push(seq);
+        Ok(())
     }
 
     /// Remove finished sequences, recording their outputs.
@@ -174,10 +244,21 @@ mod tests {
         let adm = b.admissible();
         assert_eq!(adm.len(), 2);
         for r in &adm {
-            b.activate(SeqState::new(&b.spec.clone(), r, 4));
+            b.activate(SeqState::new(&b.spec.clone(), r, 4)).unwrap();
         }
         assert!(b.admissible().is_empty());
         assert_eq!(b.queue.len(), 3);
+    }
+
+    #[test]
+    fn activate_over_capacity_errors_instead_of_panicking() {
+        let mut b = Batch::new(spec(), 4, 1);
+        let r0 = RequestSpec::new(0, vec![1], 4);
+        let r1 = RequestSpec::new(1, vec![1], 4);
+        b.activate(SeqState::new(&b.spec.clone(), &r0, 4)).unwrap();
+        let err = b.activate(SeqState::new(&b.spec.clone(), &r1, 4)).unwrap_err();
+        assert!(err.to_string().contains("batch full"), "{err}");
+        assert_eq!(b.live(), 1);
     }
 
     #[test]
@@ -185,7 +266,7 @@ mod tests {
         let mut b = Batch::new(spec(), 4, 4);
         let r = RequestSpec::new(1, vec![1], 0); // 0 new tokens -> done
         let s = SeqState::new(&b.spec.clone(), &r, 4);
-        b.activate(s);
+        b.activate(s).unwrap();
         b.reap();
         assert_eq!(b.live(), 0);
         assert_eq!(b.finished.len(), 1);

@@ -21,13 +21,15 @@
 pub mod admission;
 pub mod batch;
 pub mod gather;
+pub mod prefill;
 pub mod recall;
 pub mod request;
 pub mod scout;
 pub mod stats;
 pub mod worker_group;
 
-pub use batch::{Batch, SeqState};
+pub use batch::{Batch, SeqHandoff, SeqState};
+pub use prefill::{PrefillParams, PrefillState, DEFAULT_PREFILL_CHUNK};
 pub use recall::RecallController;
 pub use request::{RequestOutput, RequestSpec};
 pub use scout::ScoutScheduler;
@@ -35,13 +37,42 @@ pub use stats::{LayerStats, StepStats};
 pub use worker_group::WorkerGroups;
 
 /// A decode scheduler: admits requests and advances a batch by one token.
+///
+/// Admission is a *resumable* three-phase protocol so an engine loop can
+/// interleave bounded prefill chunks between decode steps (and a serving
+/// plane can hand the finished sequence to a different replica):
+/// [`begin_prefill`](Self::begin_prefill) →
+/// [`prefill_step`](Self::prefill_step)⁺ →
+/// [`finish_prefill`](Self::finish_prefill). The provided
+/// [`admit`](Self::admit) runs all three back-to-back — the offline
+/// harness path, numerically identical to chunked interleaving.
 pub trait DecodeScheduler {
     /// Run one decode step over every live sequence in the batch,
     /// appending one generated token per sequence.
     fn step(&mut self, batch: &mut Batch) -> crate::Result<StepStats>;
 
-    /// Prefill + activate one admitted request (PD-disaggregation stand-in).
-    fn admit(&mut self, batch: &mut Batch, req: &RequestSpec) -> crate::Result<()>;
+    /// Start a resumable prefill for an accepted request (chunk size
+    /// comes from the scheduler's configuration).
+    fn begin_prefill(
+        &self,
+        req: &RequestSpec,
+        budget_blocks: usize,
+    ) -> crate::Result<PrefillState>;
+
+    /// Advance the prefill by at most one chunk; `true` once complete.
+    fn prefill_step(&mut self, st: &mut PrefillState) -> crate::Result<bool>;
+
+    /// Finalize a completed prefill into a ready-to-decode sequence
+    /// (resident sets, recall countdowns — this scheduler's policy).
+    fn finish_prefill(&mut self, st: PrefillState) -> crate::Result<SeqState>;
+
+    /// Prefill + activate one admitted request in one call.
+    fn admit(&mut self, batch: &mut Batch, req: &RequestSpec) -> crate::Result<()> {
+        let mut st = self.begin_prefill(req, batch.budget_blocks)?;
+        while !self.prefill_step(&mut st)? {}
+        let seq = self.finish_prefill(st)?;
+        batch.activate(seq)
+    }
 
     /// Human-readable method name (for reports).
     fn name(&self) -> &'static str;

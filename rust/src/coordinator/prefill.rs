@@ -1,0 +1,244 @@
+//! Chunked, resumable prefill: the admission-side half of prefill/decode
+//! disaggregation.
+//!
+//! The seed admitted a request by running the *fused whole-prompt*
+//! prefill artifact inline — a 32k-token admission would stall every
+//! co-batched decode on the replica for the full quadratic prefill. A
+//! [`PrefillState`] instead advances at most `chunk_tokens` prompt
+//! positions per [`advance`](PrefillState::advance) call, so an engine
+//! loop can interleave one chunk between decode steps and bound the
+//! inter-token latency it imposes on live users.
+//!
+//! Chunking is **exact**, not approximate: prefill positions only depend
+//! on each other through the KV cache, so chunk `i` computes, layer by
+//! layer, the same projections (`layer_pre_attn` on a variable `[T, d]`
+//! tile), the same per-position causal attention (one kernel-plane
+//! softmax-accumulate over the contiguous `[0..=t]` K/V prefix, read
+//! straight from the sequence's sharded store), and the same epilogue
+//! (`layer_post_attn`) as the fused prefill row — operand for operand,
+//! kernel for kernel. The equivalence suite pins the resulting cache,
+//! digests, and final hidden state *bitwise* against `GpuEngine::prefill`.
+//!
+//! Variable tiles need a tile-flexible backend (the interpreter; see
+//! `Runtime::execute_tile`). On a shape-locked backend (PJRT artifacts)
+//! `advance` falls back to the fused whole-prompt entry in one call —
+//! identical behavior to the seed.
+
+use crate::engines::gpu::BatchPartial;
+use crate::engines::{GpuEngine, NativeEngine};
+use crate::model::ModelSpec;
+use crate::sparse::{score_blocks_slabs, select_topk};
+use crate::tensor::Tensor;
+use crate::util::arena::Arena;
+use crate::util::{par, simd};
+
+use super::admission::pins;
+use super::batch::SeqState;
+use super::request::RequestSpec;
+
+/// Default prompt tokens processed per [`PrefillState::advance`] call.
+pub const DEFAULT_PREFILL_CHUNK: usize = 512;
+
+/// Scheduler-specific finalization knobs (pin policy + recall
+/// countdowns) applied when a completed prefill becomes a live sequence.
+pub struct PrefillParams {
+    pub pin_sink: bool,
+    pub pin_recent: usize,
+    pub recall_countdowns: Vec<usize>,
+}
+
+/// A resumable, chunk-at-a-time prefill of one admitted request.
+pub struct PrefillState {
+    seq: SeqState,
+    prompt: Vec<u32>,
+    /// Prompt tokens that will be loaded (prompt truncated to context).
+    total: usize,
+    done: usize,
+    chunk_tokens: usize,
+    /// Final position's post-all-layers hidden state (valid once
+    /// `done == total`); feeds resident-set initialization.
+    h_last: Vec<f32>,
+    /// Row scratch for the per-position attention (same size-class
+    /// strategy as the interpreter's fused prefill row: `max_seq`-sized
+    /// leases, so chunk after chunk reuses one buffer per thread
+    /// instead of allocating per position).
+    scratch: Arena,
+}
+
+impl PrefillState {
+    /// Start a prefill for `req`. `chunk_tokens` bounds the work per
+    /// `advance` call (clamped to >= 1).
+    pub fn begin(
+        spec: &ModelSpec,
+        req: &RequestSpec,
+        budget_blocks: usize,
+        chunk_tokens: usize,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt (request {})", req.id);
+        let total = req.prompt.len().min(spec.max_seq - 1);
+        Ok(Self {
+            seq: SeqState::new(spec, req, budget_blocks),
+            prompt: req.prompt.clone(),
+            total,
+            done: 0,
+            chunk_tokens: chunk_tokens.max(1),
+            h_last: Vec::new(),
+            scratch: Arena::new(),
+        })
+    }
+
+    /// The final position's post-all-layers hidden state (empty until
+    /// the prefill completes) — the input to resident-set selection.
+    pub fn h_last(&self) -> &[f32] {
+        &self.h_last
+    }
+
+    pub fn id(&self) -> u64 {
+        self.seq.id
+    }
+
+    /// Prompt tokens already prefilled into the KV cache.
+    pub fn done_tokens(&self) -> usize {
+        self.done
+    }
+
+    /// Prompt tokens this prefill will load in total.
+    pub fn total_tokens(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.done >= self.total
+    }
+
+    /// Process up to `chunk_tokens` further prompt positions through all
+    /// layers. Returns `true` once the whole prompt is in the cache.
+    pub fn advance(&mut self, gpu: &GpuEngine) -> crate::Result<bool> {
+        if self.is_complete() {
+            return Ok(true);
+        }
+        if !gpu.tile_flexible() {
+            // Shape-locked backend: one "chunk" is the fused whole-prompt
+            // artifact (the seed's admission path, unchanged).
+            return self.advance_fused(gpu);
+        }
+        let spec = &gpu.spec;
+        let (hq, hkv, dd) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
+        let scale = spec.scale();
+        let start = self.done;
+        let end = (start + self.chunk_tokens).min(self.total);
+        let tlen = end - start;
+
+        let mut x = gpu.embed_tokens(&self.prompt[start..end]);
+        let pos: Vec<i32> = (start..end).map(|p| p as i32).collect();
+        let mut partial = BatchPartial::empty(tlen, hq, dd);
+        for layer in 0..spec.n_layers {
+            let (q, k_new, v_new) = gpu.pre_attn_tile(&x, layer, &pos)?;
+            self.seq.cache.load_prefill_rows(layer, start, k_new.data(), v_new.data(), tlen);
+            // Per-position causal attention over the contiguous [0..=t]
+            // prefix, read from the rows just written — one kernel call
+            // per position, exactly the fused prefill row's shape.
+            // Positions are independent; fan them out strided (position
+            // t costs O(t), so contiguous chunks would leave the early
+            // threads idle on the triangle).
+            partial.reset();
+            {
+                let view = self.seq.cache.layer(layer);
+                let rows: Vec<_> = partial
+                    .acc
+                    .data_mut()
+                    .chunks_mut(hq * dd)
+                    .zip(partial.m.data_mut().chunks_mut(hq))
+                    .zip(partial.l.data_mut().chunks_mut(hq))
+                    .map(|((ar, mr), lr)| (ar, mr, lr))
+                    .collect();
+                let (view, q, scratch) = (&view, &q, &self.scratch);
+                let s_max = spec.max_seq;
+                par::par_for_each_strided(rows, par::default_threads(), |t, (ar, mr, lr)| {
+                    let prefix = start + t + 1;
+                    let mut scores = scratch.lease(s_max);
+                    simd::softmax_accum(
+                        &q.rows(t, 1)[..hq * dd],
+                        view.k_rows(0, prefix),
+                        view.v_rows(0, prefix),
+                        None,
+                        prefix,
+                        hq,
+                        hkv,
+                        dd,
+                        scale,
+                        ar,
+                        mr,
+                        lr,
+                        &mut scores,
+                    );
+                });
+            }
+            x = gpu.post_attn_tile(&x, &partial, layer)?;
+        }
+        if end == self.total {
+            self.h_last = x.rows(tlen - 1, 1).to_vec();
+        }
+        self.done = end;
+        Ok(self.is_complete())
+    }
+
+    /// Fused whole-prompt fallback for shape-locked backends.
+    fn advance_fused(&mut self, gpu: &GpuEngine) -> crate::Result<bool> {
+        let spec = &gpu.spec;
+        let n = self.total;
+        let mut x_seq = Tensor::zeros(&[spec.max_seq, spec.d_model]);
+        for (t, &tok) in self.prompt.iter().take(n).enumerate() {
+            x_seq.rows_mut(t, 1).copy_from_slice(gpu.weights.embed_token(tok));
+        }
+        let (k, v, h_last, _logits) = gpu.prefill(&x_seq, n)?;
+        for layer in 0..spec.n_layers {
+            self.seq.cache.load_prefill_layer(layer, k.rows(layer, 1), v.rows(layer, 1), n);
+        }
+        self.h_last = h_last.data().to_vec();
+        self.done = n;
+        Ok(true)
+    }
+
+    /// Complete the admission: publish the cache length + digests,
+    /// initialize the per-layer resident sets from digest scores against
+    /// the final hidden state (the blocks "identified after the prefill
+    /// phase"), and hand back the ready-to-decode [`SeqState`].
+    pub fn finish(
+        mut self,
+        native: &NativeEngine,
+        params: PrefillParams,
+    ) -> crate::Result<SeqState> {
+        anyhow::ensure!(
+            self.is_complete(),
+            "finish called with {}/{} tokens prefilled (request {})",
+            self.done,
+            self.total,
+            self.seq.id
+        );
+        let n = self.total;
+        self.seq.cache.finish_prefill(n);
+        self.seq.recall_in = params.recall_countdowns;
+
+        let spec = self.seq.cache.spec().clone();
+        let full = self.seq.cache.full_blocks();
+        let nb = spec.n_blocks();
+        let (hq, hkv, d) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
+        for layer in 0..spec.n_layers {
+            let q = native.qpred(&self.h_last, layer, (n as i64) - 1);
+            let scores = {
+                let view = self.seq.cache.layer(layer);
+                let (lo, hi) = view.digests();
+                score_blocks_slabs(&q, lo, hi, nb, full, hq, hkv, d)
+            };
+            let ranked = select_topk(
+                &scores,
+                self.seq.resident[layer].capacity(),
+                &pins(params.pin_sink, params.pin_recent, full),
+            );
+            self.seq.resident[layer].refresh(&ranked.blocks);
+            self.seq.scores_mut(layer).clone_from(&scores);
+        }
+        Ok(self.seq)
+    }
+}

@@ -317,13 +317,33 @@ impl ScoutScheduler {
             self.cfg.pin_sink,
             self.cfg.pin_recent,
             self.recall.init_countdowns(),
+            self.cfg.prefill_chunk,
         )
     }
 }
 
 impl DecodeScheduler for ScoutScheduler {
-    fn admit(&mut self, batch: &mut Batch, req: &super::request::RequestSpec) -> crate::Result<()> {
-        self.prefill_request(batch, req)
+    fn begin_prefill(
+        &self,
+        req: &super::request::RequestSpec,
+        budget_blocks: usize,
+    ) -> crate::Result<super::PrefillState> {
+        super::PrefillState::begin(&self.gpu.spec, req, budget_blocks, self.cfg.prefill_chunk)
+    }
+
+    fn prefill_step(&mut self, st: &mut super::PrefillState) -> crate::Result<bool> {
+        st.advance(&self.gpu)
+    }
+
+    fn finish_prefill(&mut self, st: super::PrefillState) -> crate::Result<SeqState> {
+        st.finish(
+            &self.native,
+            super::PrefillParams {
+                pin_sink: self.cfg.pin_sink,
+                pin_recent: self.cfg.pin_recent,
+                recall_countdowns: self.recall.init_countdowns(),
+            },
+        )
     }
 
     fn step(&mut self, batch: &mut Batch) -> crate::Result<StepStats> {

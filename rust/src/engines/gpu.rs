@@ -174,24 +174,53 @@ impl GpuEngine {
         layer: usize,
         pos: &[i32],
     ) -> crate::Result<(Tensor, Tensor, Tensor)> {
+        self.pre_attn_at(x, layer, pos, None)
+    }
+
+    /// [`Self::pre_attn`] at a variable row tile (`x` is `[T, d]` for any
+    /// `T`) — the chunked-prefill path. Requires a tile-flexible backend
+    /// ([`Self::tile_flexible`]).
+    pub fn pre_attn_tile(
+        &self,
+        x: &Tensor,
+        layer: usize,
+        pos: &[i32],
+    ) -> crate::Result<(Tensor, Tensor, Tensor)> {
+        self.pre_attn_at(x, layer, pos, Some(x.shape()[0]))
+    }
+
+    fn pre_attn_at(
+        &self,
+        x: &Tensor,
+        layer: usize,
+        pos: &[i32],
+        tile: Option<usize>,
+    ) -> crate::Result<(Tensor, Tensor, Tensor)> {
         let s = &self.shapes;
         let w = &self.weights;
         let pos_shape = [pos.len()];
-        let mut outs = self.rt.execute(
-            "layer_pre_attn",
-            &[
-                Operand::t(x),
-                Operand::weights(self.reg.ln1[layer], &s.ln, w.layer_ln1(layer)),
-                Operand::weights(self.reg.wq[layer], &s.wq, w.layer_wq(layer)),
-                Operand::weights(self.reg.wk[layer], &s.wkv, w.layer_wk(layer)),
-                Operand::weights(self.reg.wv[layer], &s.wkv, w.layer_wv(layer)),
-                Operand::I32 { shape: &pos_shape, data: pos },
-            ],
-        )?;
+        let ops = [
+            Operand::t(x),
+            Operand::weights(self.reg.ln1[layer], &s.ln, w.layer_ln1(layer)),
+            Operand::weights(self.reg.wq[layer], &s.wq, w.layer_wq(layer)),
+            Operand::weights(self.reg.wk[layer], &s.wkv, w.layer_wk(layer)),
+            Operand::weights(self.reg.wv[layer], &s.wkv, w.layer_wv(layer)),
+            Operand::I32 { shape: &pos_shape, data: pos },
+        ];
+        let mut outs = match tile {
+            Some(t) => self.rt.execute_tile("layer_pre_attn", &ops, t)?,
+            None => self.rt.execute("layer_pre_attn", &ops)?,
+        };
         let v = outs.pop().unwrap();
         let k = outs.pop().unwrap();
         let q = outs.pop().unwrap();
         Ok((q, k, v))
+    }
+
+    /// Whether the runtime accepts variable row tiles (chunked prefill);
+    /// shape-locked backends fall back to the fused whole-prompt path.
+    pub fn tile_flexible(&self) -> bool {
+        self.rt.tile_flexible()
     }
 
     /// Predicted query for layer `layer_next` from the current input.
@@ -264,20 +293,41 @@ impl GpuEngine {
         p: &BatchPartial,
         layer: usize,
     ) -> crate::Result<Tensor> {
+        self.post_attn_at(x, p, layer, None)
+    }
+
+    /// [`Self::post_attn`] at a variable row tile (chunked prefill).
+    pub fn post_attn_tile(
+        &self,
+        x: &Tensor,
+        p: &BatchPartial,
+        layer: usize,
+    ) -> crate::Result<Tensor> {
+        self.post_attn_at(x, p, layer, Some(x.shape()[0]))
+    }
+
+    fn post_attn_at(
+        &self,
+        x: &Tensor,
+        p: &BatchPartial,
+        layer: usize,
+        tile: Option<usize>,
+    ) -> crate::Result<Tensor> {
         let s = &self.shapes;
         let w = &self.weights;
-        let mut outs = self.rt.execute(
-            "layer_post_attn",
-            &[
-                Operand::t(x),
-                Operand::t(&p.acc),
-                Operand::t(&p.l),
-                Operand::weights(self.reg.wo[layer], &s.wo, w.layer_wo(layer)),
-                Operand::weights(self.reg.ln2[layer], &s.ln, w.layer_ln2(layer)),
-                Operand::weights(self.reg.w1[layer], &s.w1, w.layer_w1(layer)),
-                Operand::weights(self.reg.w2[layer], &s.w2, w.layer_w2(layer)),
-            ],
-        )?;
+        let ops = [
+            Operand::t(x),
+            Operand::t(&p.acc),
+            Operand::t(&p.l),
+            Operand::weights(self.reg.wo[layer], &s.wo, w.layer_wo(layer)),
+            Operand::weights(self.reg.ln2[layer], &s.ln, w.layer_ln2(layer)),
+            Operand::weights(self.reg.w1[layer], &s.w1, w.layer_w1(layer)),
+            Operand::weights(self.reg.w2[layer], &s.w2, w.layer_w2(layer)),
+        ];
+        let mut outs = match tile {
+            Some(t) => self.rt.execute_tile("layer_post_attn", &ops, t)?,
+            None => self.rt.execute("layer_post_attn", &ops)?,
+        };
         Ok(outs.pop().unwrap())
     }
 

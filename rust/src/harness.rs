@@ -45,12 +45,23 @@ impl Stack {
         method: Method,
         profile: Option<&CpuRatioSeries>,
     ) -> Box<dyn DecodeScheduler> {
+        let chunk = self.cfg.scout.prefill_chunk;
         match method {
-            Method::FullKv => Box::new(FullKvScheduler::new(self.gpu.clone(), self.native.clone())),
-            Method::Infinigen => {
-                Box::new(InfinigenScheduler::new(self.gpu.clone(), self.native.clone()))
+            Method::FullKv => {
+                let mut s = FullKvScheduler::new(self.gpu.clone(), self.native.clone());
+                s.prefill_chunk = chunk;
+                Box::new(s)
             }
-            Method::Hgca => Box::new(HgcaScheduler::new(self.gpu.clone(), self.native.clone())),
+            Method::Infinigen => {
+                let mut s = InfinigenScheduler::new(self.gpu.clone(), self.native.clone());
+                s.prefill_chunk = chunk;
+                Box::new(s)
+            }
+            Method::Hgca => {
+                let mut s = HgcaScheduler::new(self.gpu.clone(), self.native.clone());
+                s.prefill_chunk = chunk;
+                Box::new(s)
+            }
             Method::Scout => {
                 let recall = RecallController::new(
                     &self.cfg.scout,

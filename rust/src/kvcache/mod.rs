@@ -18,7 +18,7 @@ mod store;
 pub use digest::DigestStore;
 pub use resident::ResidentSet;
 pub use seq::{LayerSlabs, SeqKvCache};
-pub use store::{LayerView, ShardedKvCache};
+pub use store::{KvSeqExport, LayerView, ShardedKvCache};
 
 /// Index of a KV block within one sequence's cache (position-major:
 /// block `b` covers tokens `[b*bs, (b+1)*bs)`).

@@ -22,7 +22,7 @@
 //! [`SeqKvCache`]: super::SeqKvCache
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{RwLock, RwLockReadGuard};
+use std::sync::{Arc, RwLock, RwLockReadGuard};
 
 use crate::model::ModelSpec;
 use crate::tensor::Tensor;
@@ -150,13 +150,28 @@ impl ShardedKvCache {
     /// Bulk-load prefill K/V for one layer (`[S, Hkv, D]`, first
     /// `new_len` rows valid). Mirrors `SeqKvCache::load_prefill_layer`.
     pub fn load_prefill_layer(&self, layer: usize, k: &[f32], v: &[f32], new_len: usize) {
+        self.load_prefill_rows(layer, 0, k, v, new_len);
+    }
+
+    /// Bulk-load `tokens` rows of prefill K/V for one layer at token
+    /// offset `start` — the chunked-prefill path writes each chunk's
+    /// K/V as it is computed; `finish_prefill` publishes the length and
+    /// digests once every chunk has landed.
+    pub fn load_prefill_rows(
+        &self,
+        layer: usize,
+        start: usize,
+        k: &[f32],
+        v: &[f32],
+        tokens: usize,
+    ) {
         let w = self.tok_w();
-        assert!(new_len <= self.spec.max_seq);
-        assert!(k.len() >= new_len * w && v.len() >= new_len * w);
+        assert!(start + tokens <= self.spec.max_seq);
+        assert!(k.len() >= tokens * w && v.len() >= tokens * w);
         let (sid, local) = self.shard_of(layer);
         let mut shard = self.shards[sid].write().unwrap();
-        shard.k[local].rows_mut(0, new_len).copy_from_slice(&k[..new_len * w]);
-        shard.v[local].rows_mut(0, new_len).copy_from_slice(&v[..new_len * w]);
+        shard.k[local].rows_mut(start, tokens).copy_from_slice(&k[..tokens * w]);
+        shard.v[local].rows_mut(start, tokens).copy_from_slice(&v[..tokens * w]);
     }
 
     /// Finish a prefill load: set length and (re)build all digests.
@@ -214,6 +229,93 @@ impl ShardedKvCache {
         }
     }
 
+    /// Detach this sequence's whole KV state for migration to another
+    /// replica stack (prefill/decode disaggregation handoff). When the
+    /// caller holds the only reference — the normal case: a freshly
+    /// prefilled sequence has never spawned CPU jobs — the per-layer
+    /// K/V slabs and digest tensors are *moved* out of the shard locks
+    /// with zero slab copies. A shared cache (defensive fallback) is
+    /// deep-copied under its read locks and flagged `copied`.
+    pub fn export_seq(cache: Arc<Self>) -> KvSeqExport {
+        match Arc::try_unwrap(cache) {
+            Ok(owned) => {
+                let ShardedKvCache { spec, n_shards, len, shards } = owned;
+                let n_layers = spec.n_layers;
+                let mut layers: Vec<Option<LayerKvExport>> = (0..n_layers).map(|_| None).collect();
+                for (sid, lock) in shards.into_iter().enumerate() {
+                    let shard = lock.into_inner().unwrap();
+                    let zipped = shard
+                        .k
+                        .into_iter()
+                        .zip(shard.v)
+                        .zip(shard.kmin)
+                        .zip(shard.kmax)
+                        .enumerate();
+                    for (local, (((k, v), kmin), kmax)) in zipped {
+                        layers[sid + local * n_shards] =
+                            Some(LayerKvExport { k, v, kmin, kmax });
+                    }
+                }
+                KvSeqExport {
+                    spec,
+                    len: len.into_inner(),
+                    layers: layers.into_iter().map(|l| l.expect("every layer exported")).collect(),
+                    copied: false,
+                }
+            }
+            Err(shared) => {
+                let spec = shared.spec.clone();
+                let layers = (0..spec.n_layers)
+                    .map(|layer| {
+                        let (sid, local) = shared.shard_of(layer);
+                        let shard = shared.shards[sid].read().unwrap();
+                        LayerKvExport {
+                            k: shard.k[local].clone(),
+                            v: shard.v[local].clone(),
+                            kmin: shard.kmin[local].clone(),
+                            kmax: shard.kmax[local].clone(),
+                        }
+                    })
+                    .collect();
+                KvSeqExport { spec, len: shared.len(), layers, copied: true }
+            }
+        }
+    }
+
+    /// Reassemble an exported sequence into a fresh store (the receiving
+    /// replica's side of the handoff). Tensors are moved back into the
+    /// shard layout — re-sharding to a different `n_shards` is still
+    /// zero-copy because the unit of ownership is the per-layer tensor.
+    pub fn import_seq(export: KvSeqExport) -> Self {
+        Self::import_seq_with(export, DEFAULT_SHARDS)
+    }
+
+    /// [`Self::import_seq`] with an explicit target shard count.
+    pub fn import_seq_with(export: KvSeqExport, n_shards: usize) -> Self {
+        let KvSeqExport { spec, len, layers, .. } = export;
+        assert_eq!(layers.len(), spec.n_layers, "export layer count");
+        let n_shards = n_shards.clamp(1, spec.n_layers.max(1));
+        let mut shards: Vec<Shard> = (0..n_shards)
+            .map(|_| Shard { k: Vec::new(), v: Vec::new(), kmin: Vec::new(), kmax: Vec::new() })
+            .collect();
+        // Layers arrive in ascending order, so pushes land at ascending
+        // local indices within each shard (layer l -> shard l % n at
+        // local l / n).
+        for (layer, lx) in layers.into_iter().enumerate() {
+            let shard = &mut shards[layer % n_shards];
+            shard.k.push(lx.k);
+            shard.v.push(lx.v);
+            shard.kmin.push(lx.kmin);
+            shard.kmax.push(lx.kmax);
+        }
+        Self {
+            spec,
+            n_shards,
+            len: AtomicUsize::new(len),
+            shards: shards.into_iter().map(RwLock::new).collect(),
+        }
+    }
+
     /// Overwrite one complete block's K/V (workload construction) and
     /// rebuild its digest.
     pub fn overwrite_block(&self, layer: usize, block: usize, k: &[f32], v: &[f32]) {
@@ -227,6 +329,56 @@ impl ShardedKvCache {
         shard.k[local].rows_mut(block * bs, bs).copy_from_slice(k);
         shard.v[local].rows_mut(block * bs, bs).copy_from_slice(v);
         shard.rebuild_digest(local, block, bs, w);
+    }
+}
+
+/// One layer's K/V slabs + digest tensors, detached from a store.
+struct LayerKvExport {
+    k: Tensor,
+    v: Tensor,
+    kmin: Tensor,
+    kmax: Tensor,
+}
+
+/// A sequence's full KV state detached from its owning store — the unit
+/// of prefill→decode KV handoff between replica stacks. Produced by
+/// [`ShardedKvCache::export_seq`], consumed by
+/// [`ShardedKvCache::import_seq`]; holds the per-layer tensors by move,
+/// so a handoff never copies slab contents (unless `copied` says the
+/// export had to fall back).
+pub struct KvSeqExport {
+    spec: ModelSpec,
+    len: usize,
+    layers: Vec<LayerKvExport>,
+    /// Whether the export had to deep-copy (the cache was still shared).
+    pub copied: bool,
+}
+
+impl KvSeqExport {
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Valid tokens carried by the export.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes a real cross-device handoff would move: the valid K/V rows
+    /// of every layer plus the full per-block digest slabs (the resident
+    /// set and scheduler state ride along in [`SeqHandoff`] and are
+    /// negligible next to the slabs).
+    ///
+    /// [`SeqHandoff`]: crate::coordinator::SeqHandoff
+    pub fn payload_bytes(&self) -> usize {
+        let w = self.spec.n_kv_heads * self.spec.head_dim;
+        let kv = 2 * self.len * w * 4;
+        let digests = 2 * self.spec.n_blocks() * w * 4;
+        self.spec.n_layers * (kv + digests)
     }
 }
 
@@ -553,6 +705,85 @@ mod tests {
             }
         });
         assert_eq!(store.len(), spec.max_seq);
+    }
+
+    #[test]
+    fn export_import_roundtrip_is_byte_identical() {
+        let spec = tiny_spec();
+        for (from_shards, to_shards) in [(2, 2), (2, 4), (5, 1)] {
+            let (_, sharded) = fill_both(&spec, 21, from_shards);
+            let reference = fill_both(&spec, 21, from_shards).1;
+            let export = ShardedKvCache::export_seq(Arc::new(sharded));
+            assert!(!export.copied, "unique Arc must move, not copy");
+            assert_eq!(export.len(), 21);
+            assert!(export.payload_bytes() > 0);
+            let back = ShardedKvCache::import_seq_with(export, to_shards);
+            assert_eq!(back.len(), reference.len());
+            assert_eq!(back.full_blocks(), reference.full_blocks());
+            for l in 0..spec.n_layers {
+                let a = back.layer(l);
+                let b = reference.layer(l);
+                assert_eq!(a.k_rows(0, 21), b.k_rows(0, 21), "k l={l}");
+                assert_eq!(a.v_rows(0, 21), b.v_rows(0, 21), "v l={l}");
+                assert_eq!(a.digests(), b.digests(), "digests l={l}");
+            }
+            // the imported store keeps working: appends + digests land
+            let (k, v) = tok_kv(&spec, 21, 0);
+            back.append_layer(0, &k, &v);
+        }
+    }
+
+    #[test]
+    fn export_of_shared_cache_falls_back_to_copy() {
+        let spec = tiny_spec();
+        let (_, sharded) = fill_both(&spec, 9, 2);
+        let arc = Arc::new(sharded);
+        let extra = arc.clone();
+        let export = ShardedKvCache::export_seq(arc);
+        assert!(export.copied, "shared cache must be deep-copied");
+        let back = ShardedKvCache::import_seq(export);
+        for l in 0..spec.n_layers {
+            assert_eq!(back.layer(l).k_rows(0, 9), extra.layer(l).k_rows(0, 9));
+        }
+    }
+
+    #[test]
+    fn load_prefill_rows_matches_bulk_load() {
+        let spec = tiny_spec();
+        let w = spec.n_kv_heads * spec.head_dim;
+        let n = 19;
+        let bulk = ShardedKvCache::with_shards(&spec, 2);
+        let chunked = ShardedKvCache::with_shards(&spec, 2);
+        for l in 0..spec.n_layers {
+            let mut k = vec![0.0; n * w];
+            let mut v = vec![0.0; n * w];
+            for t in 0..n {
+                let (kt, vt) = tok_kv(&spec, t, l);
+                k[t * w..(t + 1) * w].copy_from_slice(&kt);
+                v[t * w..(t + 1) * w].copy_from_slice(&vt);
+            }
+            bulk.load_prefill_layer(l, &k, &v, n);
+            // chunk boundaries 0..7, 7..14, 14..19
+            for start in (0..n).step_by(7) {
+                let end = (start + 7).min(n);
+                chunked.load_prefill_rows(
+                    l,
+                    start,
+                    &k[start * w..end * w],
+                    &v[start * w..end * w],
+                    end - start,
+                );
+            }
+        }
+        bulk.finish_prefill(n);
+        chunked.finish_prefill(n);
+        for l in 0..spec.n_layers {
+            let a = bulk.layer(l);
+            let b = chunked.layer(l);
+            assert_eq!(a.k_rows(0, n), b.k_rows(0, n));
+            assert_eq!(a.v_rows(0, n), b.v_rows(0, n));
+            assert_eq!(a.digests(), b.digests());
+        }
     }
 
     #[test]

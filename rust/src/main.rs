@@ -22,6 +22,7 @@ use scoutattention::workload::{LengthMix, WorkloadGen};
 
 const USAGE: &str = "usage: scout [--config F] [--preset P] [--artifacts-dir D] [--method M] <cmd>
   serve [--replicas N] [--route least_loaded|round_robin|session_affinity]
+        [--roles prefill,decode,...] [--prefill-chunk N]
   run   [--requests N] [--prompt-len N] [--new-tokens N]
   sim   [--seq-len N] [--batch N] [--steps N]
   trace
@@ -96,6 +97,15 @@ fn main() -> scoutattention::Result<()> {
             }
             if let Some(p) = args.get("route") {
                 cfg.server.policy = p.parse()?;
+            }
+            if let Some(r) = args.get("roles") {
+                cfg.server.roles = r
+                    .split(',')
+                    .map(|s| s.trim().parse())
+                    .collect::<scoutattention::Result<Vec<_>>>()?;
+            }
+            if let Some(c) = args.get("prefill-chunk") {
+                cfg.scout.prefill_chunk = c.parse()?;
             }
             cfg.validate()?;
             scoutattention::server::serve(cfg)?

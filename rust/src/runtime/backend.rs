@@ -229,6 +229,16 @@ pub trait Backend {
     fn scratch_allocations(&self) -> Option<usize> {
         None
     }
+
+    /// Whether row-wise entries accept a *variable* leading tile
+    /// ([`crate::runtime::Runtime::execute_tile`]). The interpreter
+    /// derives the row count from the operands and is not shape-locked;
+    /// AOT/PJRT executables are compiled for the manifest shapes and
+    /// must answer `false` (callers then fall back to fixed-tile
+    /// execution, e.g. whole-prompt fused prefill).
+    fn tile_flexible(&self) -> bool {
+        false
+    }
 }
 
 /// Which backend a run should use.

@@ -136,12 +136,69 @@ impl Runtime {
         self.backend.register_weights(view)
     }
 
+    /// Whether the active backend accepts variable leading tiles on
+    /// row-wise entries (see [`Runtime::execute_tile`]).
+    pub fn tile_flexible(&self) -> bool {
+        self.backend.tile_flexible()
+    }
+
     /// Execute entry `name` on the given operands; returns the entry's
     /// output tensors in manifest order. Operands are borrowed, so the
     /// interpreter path never copies them; the PJRT path materializes
     /// literals per call (see `runtime/pjrt.rs` on caching).
     pub fn execute(&self, name: &str, inputs: &[Operand]) -> crate::Result<Vec<Tensor>> {
+        self.execute_at(name, inputs, None)
+    }
+
+    /// Execute a *row-wise* entry at a variable leading tile of `tile`
+    /// rows instead of the manifest's batch tile (chunked prefill rides
+    /// variable tiles through the interpreter; AOT artifacts are
+    /// shape-locked — callers must check [`Runtime::tile_flexible`]).
+    ///
+    /// Validation substitutes `tile` for the manifest batch dimension
+    /// wherever an operand/output spec leads with it. Only entries whose
+    /// every batch-sized leading axis is a row axis are eligible — the
+    /// allowlist below keeps a coincidental dimension match (e.g.
+    /// `decode_full`'s `[L, B, ...]` cache when `L == B`) from slipping
+    /// through.
+    pub fn execute_tile(
+        &self,
+        name: &str,
+        inputs: &[Operand],
+        tile: usize,
+    ) -> crate::Result<Vec<Tensor>> {
+        anyhow::ensure!(tile >= 1, "{name}: tile must be >= 1");
+        anyhow::ensure!(
+            matches!(name, "layer_pre_attn" | "layer_post_attn" | "qpred" | "lm_head"),
+            "{name} is not a row-wise entry; variable tiles are not supported"
+        );
+        anyhow::ensure!(
+            self.backend.tile_flexible(),
+            "backend {} is shape-locked; cannot run {name} at tile {tile}",
+            self.backend.name()
+        );
+        self.execute_at(name, inputs, Some(tile))
+    }
+
+    fn execute_at(
+        &self,
+        name: &str,
+        inputs: &[Operand],
+        tile: Option<usize>,
+    ) -> crate::Result<Vec<Tensor>> {
         let entry = self.manifest.entry(name)?;
+        let batch = self.manifest.config.batch;
+        // Under a tile override, a spec shape leading with the manifest
+        // batch dimension expects `tile` rows there instead.
+        let expect = |spec_shape: &[usize]| -> Vec<usize> {
+            let mut s = spec_shape.to_vec();
+            if let Some(t) = tile {
+                if s.first() == Some(&batch) {
+                    s[0] = t;
+                }
+            }
+            s
+        };
         anyhow::ensure!(
             inputs.len() == entry.inputs.len(),
             "{name}: got {} operands, manifest says {}",
@@ -156,12 +213,13 @@ impl Runtime {
                 op.dtype(),
                 spec.dtype
             );
+            let want = expect(&spec.shape);
             anyhow::ensure!(
-                op.shape() == spec.shape.as_slice(),
-                "{name} operand {i} ({}): shape {:?} != manifest {:?}",
+                op.shape() == want.as_slice(),
+                "{name} operand {i} ({}): shape {:?} != expected {:?}",
                 spec.name,
                 op.shape(),
-                spec.shape
+                want
             );
             // Shape can be caller-supplied for raw-slice operands, so
             // also enforce that the data really has that many elements
@@ -173,12 +231,12 @@ impl Runtime {
                 Operand::Weights { view, .. } => view.data().len(),
                 Operand::I32 { data, .. } => data.len(),
             };
+            let volume: usize = want.iter().product();
             anyhow::ensure!(
-                elems == spec.volume(),
-                "{name} operand {i} ({}): data has {elems} elements, shape {:?} needs {}",
+                elems == volume,
+                "{name} operand {i} ({}): data has {elems} elements, shape {want:?} needs \
+                 {volume}",
                 spec.name,
-                spec.shape,
-                spec.volume()
             );
         }
         // Lazy per-entry setup (PJRT compile) happens outside the timed
@@ -193,11 +251,12 @@ impl Runtime {
             entry.outputs.len()
         );
         for (i, (out, spec)) in outs.iter().zip(&entry.outputs).enumerate() {
+            let want = expect(&spec.shape);
             anyhow::ensure!(
-                out.shape() == spec.shape.as_slice(),
-                "{name} output {i}: shape {:?} != manifest {:?}",
+                out.shape() == want.as_slice(),
+                "{name} output {i}: shape {:?} != expected {:?}",
                 out.shape(),
-                spec.shape
+                want
             );
         }
         self.counters.record_exec(name, t0.elapsed());
@@ -291,6 +350,35 @@ mod tests {
             )
             .unwrap_err();
         assert!(err.to_string().contains("elements"), "{err}");
+    }
+
+    #[test]
+    fn execute_tile_rides_variable_tiles_on_row_wise_entries() {
+        let rt = Runtime::load("artifacts", "test-tiny").unwrap();
+        let spec = rt.manifest.config.clone();
+        assert!(rt.tile_flexible(), "interpreter is not shape-locked");
+        let d = spec.d_model;
+        let ln_f = Tensor::full(&[d], 1.0);
+        let emb = Tensor::full(&[spec.vocab, d], 0.01);
+        for tile in [1usize, 3, 7] {
+            let x = Tensor::full(&[tile, d], 0.25);
+            let outs = rt
+                .execute_tile(
+                    "lm_head",
+                    &[Operand::t(&x), Operand::t(&ln_f), Operand::t(&emb)],
+                    tile,
+                )
+                .unwrap();
+            assert_eq!(outs[0].shape(), &[tile, spec.vocab]);
+        }
+        // wrong tile vs operands still fails loudly
+        let x = Tensor::full(&[3, d], 0.25);
+        assert!(rt
+            .execute_tile("lm_head", &[Operand::t(&x), Operand::t(&ln_f), Operand::t(&emb)], 4)
+            .is_err());
+        // non-row-wise entries are refused outright
+        assert!(rt.execute_tile("decode_full", &[], 2).is_err());
+        assert!(rt.execute_tile("sparse_attn", &[], 2).is_err());
     }
 
     #[test]

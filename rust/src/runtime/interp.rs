@@ -113,6 +113,12 @@ impl Backend for InterpreterBackend {
     fn scratch_allocations(&self) -> Option<usize> {
         Some(self.scratch.allocations())
     }
+
+    /// Every row-wise evaluator above reads its row count from the
+    /// operands, so variable tiles ride through unchanged.
+    fn tile_flexible(&self) -> bool {
+        true
+    }
 }
 
 impl InterpreterBackend {

@@ -8,7 +8,10 @@
 //!   non-`Send`, so stacks never cross threads). Admission control and
 //!   graceful drain live here.
 //! - [`router`] — pluggable placement: least-loaded (reserved in-flight
-//!   tokens), round-robin, session-affinity.
+//!   tokens), round-robin, session-affinity — applied in two stages
+//!   under prefill/decode disaggregation (replica role masks: admission
+//!   goes to a prefill-capable replica, the finished sequence to a
+//!   decode-capable one via zero-copy KV handoff).
 //! - [`stream`] — per-request event channels: incremental token events
 //!   plus exactly one terminal `Done` / `Rejected` / `Failed`.
 //! - [`telemetry`] — per-replica gauges + latency histograms aggregated
@@ -24,6 +27,6 @@ pub mod stream;
 pub mod telemetry;
 
 pub use pool::{EnginePool, Submission};
-pub use router::{RoutePolicy, Router};
+pub use router::{ReplicaRole, RoutePolicy, Router};
 pub use stream::{RejectCode, Rejection, StreamEvent, StreamHandle};
 pub use telemetry::{PoolTelemetry, ReplicaTelemetry};

@@ -5,26 +5,60 @@
 //! stack is constructed *inside* its thread and never crosses it. The
 //! pool talks to replicas exclusively through a bounded job channel; the
 //! channel IS the admission queue — replicas pull new work only while
-//! their batch has room, so a full channel means the replica is saturated
-//! and `submit` answers with a structured rejection instead of buffering.
+//! they have room, so a full channel means the replica is saturated and
+//! `submit` answers with a structured rejection instead of buffering.
+//!
+//! **Prefill/decode disaggregation.** A request's life is staged:
+//!
+//! ```text
+//! queued ──► prefilling@replica ──► (handoff) ──► decoding@replica ──► done
+//!            one chunk per loop        KV export/import, zero-copy
+//!            iteration, interleaved    within the process
+//!            with decode steps
+//! ```
+//!
+//! The router places admissions on *prefill-capable* replicas (stage 1);
+//! each replica advances at most one `prefill_chunk`-sized chunk of its
+//! active prefill between decode steps, so a long admission never stalls
+//! co-batched decodes for a whole prompt. When a *prefill-only* replica
+//! completes a prefill, the sequence — KV shards, digests, resident
+//! sets, scheduler state — is handed to the least-loaded
+//! *decode-capable* replica over an unbounded handoff channel
+//! ([`SeqState::into_handoff`] moves the slabs; nothing is copied).
+//! Replicas that can decode keep their own admissions (the KV is
+//! already local), so all-`mixed` pools (the default) never hand off
+//! and behave byte-for-byte like the pre-disaggregation pool.
+//!
+//! Cancellation is a shared per-request [`AtomicBool`] that travels with
+//! the request's tracking state (including across handoffs): whichever
+//! replica owns the request observes the flag between steps and evicts
+//! it with a [`StreamEvent::Cancelled`] terminal — no cancel routing,
+//! no stale-id bookkeeping.
 //!
 //! Lifecycle: [`EnginePool::start`] spawns replicas and blocks until each
 //! reports ready (or fails); [`EnginePool::shutdown`] stops admitting,
-//! lets every live sequence decode to completion, then joins the threads.
+//! lets every accepted request finish (prefills complete and hand off;
+//! decodes run to completion), then joins the threads. A replica drops
+//! its handoff senders as soon as it can no longer produce handoffs, so
+//! the receivers' disconnects propagate and the drain cannot cycle.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+    TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
-use crate::coordinator::RequestSpec;
+use crate::coordinator::{DecodeScheduler, PrefillState, RequestSpec, SeqHandoff, SeqState};
 use crate::harness::Stack;
 use crate::model::ModelSpec;
 use crate::util::{clock, Json};
 
-use super::router::Router;
+use super::router::{ReplicaRole, Router};
 use super::stream::{EventSender, RejectCode, Rejection, StreamEvent, StreamHandle};
 use super::telemetry::{pool_stats_json, PoolTelemetry, ReplicaTelemetry};
 
@@ -64,12 +98,27 @@ impl Submission {
     }
 }
 
-/// Internal: one unit of work handed to a replica thread.
+/// Internal: one unit of admission work handed to a replica thread.
 struct ServeJob {
     spec: RequestSpec,
     stream: bool,
     events: EventSender,
     cost: usize,
+    session: Option<String>,
+    cancel: Arc<AtomicBool>,
+}
+
+/// Internal: a prefilled sequence migrating to a decode replica, with
+/// everything the destination needs to keep serving the client.
+struct HandoffMsg {
+    seq: SeqHandoff,
+    stream: bool,
+    events: EventSender,
+    cancel: Arc<AtomicBool>,
+    cost: usize,
+    arrival_us: u64,
+    queue_us: u64,
+    sent: Instant,
 }
 
 /// Multi-replica serving plane. See the module docs for the ownership
@@ -77,19 +126,17 @@ struct ServeJob {
 pub struct EnginePool {
     cfg: RunConfig,
     spec: ModelSpec,
-    router: Router,
+    router: Arc<Router>,
+    roles: Vec<ReplicaRole>,
     tel: Vec<Arc<ReplicaTelemetry>>,
     pool_tel: Arc<PoolTelemetry>,
     /// `None` once draining — dropping the senders is what tells the
     /// replica loops to finish up and exit.
     senders: Mutex<Option<Vec<SyncSender<ServeJob>>>>,
-    /// Per-replica cancellation sets ([`EnginePool::cancel`]): ids whose
-    /// client is gone; the owning replica evicts them between steps.
-    cancels: Vec<Arc<Mutex<HashSet<u64>>>>,
     joins: Mutex<Vec<JoinHandle<()>>>,
     draining: AtomicBool,
     next_id: AtomicU64,
-    started: std::time::Instant,
+    started: Instant,
 }
 
 impl EnginePool {
@@ -98,40 +145,54 @@ impl EnginePool {
     pub fn start(cfg: RunConfig) -> crate::Result<Self> {
         cfg.validate()?;
         let n = cfg.server.replicas.max(1);
+        let roles: Vec<ReplicaRole> = if cfg.server.roles.is_empty() {
+            vec![ReplicaRole::Mixed; n]
+        } else {
+            cfg.server.roles.clone()
+        };
         let pool_tel = Arc::new(PoolTelemetry::default());
-        let mut senders = Vec::with_capacity(n);
-        let mut cancels = Vec::with_capacity(n);
+        let tel: Vec<Arc<ReplicaTelemetry>> =
+            (0..n).map(|_| Arc::new(ReplicaTelemetry::default())).collect();
+        let router = Arc::new(Router::new(cfg.server.policy, tel.clone(), roles.clone()));
+
+        // All channels exist before any thread spawns, so every replica
+        // can hold senders to every handoff receiver.
+        let mut job_txs = Vec::with_capacity(n);
+        let mut job_rxs = Vec::with_capacity(n);
+        let mut handoff_txs: Vec<Sender<HandoffMsg>> = Vec::with_capacity(n);
+        let mut handoff_rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = sync_channel::<ServeJob>(cfg.server.queue_depth.max(1));
+            job_txs.push(tx);
+            job_rxs.push(rx);
+            let (htx, hrx) = channel::<HandoffMsg>();
+            handoff_txs.push(htx);
+            handoff_rxs.push(hrx);
+        }
+
         let mut joins = Vec::with_capacity(n);
-        let mut tel = Vec::with_capacity(n);
         let mut readiness = Vec::with_capacity(n);
-        for i in 0..n {
-            let (tx_job, rx_job) = sync_channel::<ServeJob>(cfg.server.queue_depth.max(1));
+        for (i, (rx_job, rx_handoff)) in job_rxs.into_iter().zip(handoff_rxs).enumerate() {
             let (tx_ready, rx_ready) = channel::<Result<ModelSpec, String>>();
-            let t = Arc::new(ReplicaTelemetry::default());
-            let cancel: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
-            let replica_cfg = cfg.clone();
-            let replica_tel = t.clone();
-            let replica_pool_tel = pool_tel.clone();
-            let replica_cancel = cancel.clone();
+            let ctx = ReplicaCtx {
+                cfg: cfg.clone(),
+                role: roles[i],
+                router: router.clone(),
+                tel: tel[i].clone(),
+                pool_tel: pool_tel.clone(),
+                handoff_txs: handoff_txs.clone(),
+            };
             let join = std::thread::Builder::new()
                 .name(format!("scout-replica-{i}"))
-                .spawn(move || {
-                    replica_loop(
-                        replica_cfg,
-                        rx_job,
-                        replica_tel,
-                        replica_pool_tel,
-                        replica_cancel,
-                        tx_ready,
-                    )
-                })
+                .spawn(move || replica_loop(ctx, rx_job, rx_handoff, tx_ready))
                 .map_err(|e| anyhow::anyhow!("spawn replica {i}: {e}"))?;
-            senders.push(tx_job);
-            cancels.push(cancel);
             joins.push(join);
-            tel.push(t);
             readiness.push(rx_ready);
         }
+        // The pool keeps no handoff senders: receivers must disconnect
+        // once every *replica* has dropped its clones during drain.
+        drop(handoff_txs);
+
         let mut spec = None;
         let mut first_err: Option<String> = None;
         for (i, rx) in readiness.into_iter().enumerate() {
@@ -148,26 +209,25 @@ impl EnginePool {
             }
         }
         if let Some(e) = first_err {
-            drop(senders); // unblocks the healthy replicas
+            drop(job_txs); // unblocks the healthy replicas
             for j in joins {
                 let _ = j.join();
             }
             anyhow::bail!("engine pool failed to start: {e}");
         }
         let spec = spec.expect("at least one replica reported ready");
-        let router = Router::new(cfg.server.policy, tel.clone());
         Ok(Self {
             cfg,
             spec,
             router,
+            roles,
             tel,
             pool_tel,
-            senders: Mutex::new(Some(senders)),
-            cancels,
+            senders: Mutex::new(Some(job_txs)),
             joins: Mutex::new(joins),
             draining: AtomicBool::new(false),
             next_id: AtomicU64::new(0),
-            started: std::time::Instant::now(),
+            started: Instant::now(),
         })
     }
 
@@ -178,6 +238,11 @@ impl EnginePool {
 
     pub fn replica_count(&self) -> usize {
         self.tel.len()
+    }
+
+    /// Effective role of each replica (all `mixed` unless configured).
+    pub fn roles(&self) -> &[ReplicaRole] {
+        &self.roles
     }
 
     pub fn is_draining(&self) -> bool {
@@ -193,15 +258,16 @@ impl EnginePool {
         self.pool_tel.submitted.fetch_add(1, Ordering::Relaxed);
         let arrival_us = if sub.arrival_us == 0 { clock::now_us() } else { sub.arrival_us };
         let (tx, rx) = channel::<StreamEvent>();
+        let cancel = Arc::new(AtomicBool::new(false));
 
         if let Err(reason) = self.validate(&sub) {
-            return self.reject(id, tx, rx, RejectCode::Invalid, reason, 0);
+            return self.reject(id, tx, rx, cancel, RejectCode::Invalid, reason, 0);
         }
         if self.is_draining() {
             // A drain is terminal for this process (there is no undrain),
             // so retrying here can never help: retry_after_ms stays 0.
             let reason = "pool is draining; not admitting new requests".to_string();
-            return self.reject(id, tx, rx, RejectCode::Draining, reason, 0);
+            return self.reject(id, tx, rx, cancel, RejectCode::Draining, reason, 0);
         }
         // Reserve against the pool-wide budget atomically (fetch_add +
         // check + undo) so concurrent submitters cannot all slip past
@@ -216,16 +282,21 @@ impl EnginePool {
                 self.cfg.server.token_budget
             );
             let retry = self.retry_after_ms();
-            return self.reject(id, tx, rx, RejectCode::Overloaded, reason, retry);
+            return self.reject(id, tx, rx, cancel, RejectCode::Overloaded, reason, retry);
         }
 
-        let replica = self.router.pick(sub.session.as_deref());
+        // Stage-1 placement: a prefill-capable replica.
+        let Some(replica) = self.router.pick_prefill(sub.session.as_deref()) else {
+            self.pool_tel.inflight_tokens.fetch_sub(cost, Ordering::Relaxed);
+            let reason = "no prefill-capable replica available".to_string();
+            return self.reject(id, tx, rx, cancel, RejectCode::Overloaded, reason, 0);
+        };
         let sender = match &*self.senders.lock().unwrap() {
             Some(s) => s[replica].clone(),
             None => {
                 self.pool_tel.inflight_tokens.fetch_sub(cost, Ordering::Relaxed);
                 let reason = "pool is shut down".to_string();
-                return self.reject(id, tx, rx, RejectCode::Draining, reason, 0);
+                return self.reject(id, tx, rx, cancel, RejectCode::Draining, reason, 0);
             }
         };
         let job = ServeJob {
@@ -238,14 +309,17 @@ impl EnginePool {
             stream: sub.stream,
             events: tx.clone(),
             cost,
+            session: sub.session,
+            cancel: cancel.clone(),
         };
-        // Count as queued *before* sending: the replica decrements on
-        // admission, and incrementing afterwards could go negative.
+        // Count as queued *before* sending: the replica decrements when
+        // the prefill starts, and incrementing afterwards could go
+        // negative.
         let t = &self.tel[replica];
         t.queued.fetch_add(1, Ordering::Relaxed);
         t.queued_tokens.fetch_add(cost, Ordering::Relaxed);
         match sender.try_send(job) {
-            Ok(()) => StreamHandle::new(id, Some(replica), rx),
+            Ok(()) => StreamHandle::new(id, Some(replica), rx, cancel),
             Err(err) => {
                 t.queued.fetch_sub(1, Ordering::Relaxed);
                 t.queued_tokens.fetch_sub(cost, Ordering::Relaxed);
@@ -263,21 +337,20 @@ impl EnginePool {
                         (RejectCode::Draining, format!("replica {replica} is gone"), 0)
                     }
                 };
-                self.reject(id, tx, rx, code, reason, retry)
+                self.reject(id, tx, rx, cancel, code, reason, retry)
             }
         }
     }
 
     /// Cancel a placed request whose client is gone (connection hangup).
-    /// Best-effort: the owning replica evicts it between decode steps,
-    /// freeing its batch slot and token-budget reservation instead of
-    /// decoding for a dead client. No-op for unplaced (rejected) handles.
+    /// Best-effort: the owning replica — wherever the request currently
+    /// lives, including after a prefill→decode handoff — observes the
+    /// shared flag between steps and evicts it, freeing its slot and
+    /// token-budget reservation instead of decoding for a dead client.
+    /// No-op for unplaced (rejected) handles.
     pub fn cancel(&self, handle: &StreamHandle) {
-        if let Some(replica) = handle.replica {
-            // Stale ids (a cancel racing the request's own terminal)
-            // are purged by the replica: on each terminal event, and in
-            // bulk whenever its job channel is observed empty.
-            self.cancels[replica].lock().unwrap().insert(handle.id);
+        if handle.replica.is_some() {
+            handle.request_cancel();
         }
     }
 
@@ -286,14 +359,19 @@ impl EnginePool {
         pool_stats_json(
             &self.pool_tel,
             &self.tel,
+            &self.roles,
             self.started.elapsed().as_secs_f64(),
             self.is_draining(),
         )
     }
 
-    /// Stop admitting new requests. Live sequences keep decoding.
+    /// Stop admitting new requests. Live sequences keep decoding, and
+    /// in-flight prefills still complete and hand off.
     pub fn begin_drain(&self) {
         self.draining.store(true, Ordering::SeqCst);
+        for t in &self.tel {
+            t.draining.store(true, Ordering::Relaxed);
+        }
         drop(self.senders.lock().unwrap().take());
     }
 
@@ -343,18 +421,20 @@ impl EnginePool {
         Ok(())
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn reject(
         &self,
         id: u64,
         tx: EventSender,
         rx: Receiver<StreamEvent>,
+        cancel: Arc<AtomicBool>,
         code: RejectCode,
         reason: String,
         retry_after_ms: u64,
     ) -> StreamHandle {
         self.pool_tel.note_reject(code);
         let _ = tx.send(StreamEvent::Rejected(Rejection { id, code, reason, retry_after_ms }));
-        StreamHandle::new(id, None, rx)
+        StreamHandle::new(id, None, rx, cancel)
     }
 
     /// Backoff hint scaled by how much work already waits ahead.
@@ -366,7 +446,9 @@ impl EnginePool {
 
 /// Per-request bookkeeping inside a replica thread. All timing stamps
 /// live on the shared [`clock`] timeline (arrival was stamped there at
-/// the wire boundary), so queue delay and TTFT are real deltas.
+/// the wire boundary), so queue delay and TTFT are real deltas. A track
+/// follows its request across replicas: a handoff moves it wholesale to
+/// the decode replica.
 struct Track {
     events: EventSender,
     stream: bool,
@@ -374,24 +456,73 @@ struct Track {
     cursor: usize,
     cost: usize,
     arrival_us: u64,
-    /// Arrival -> admission, us (set when the replica admits).
+    /// Arrival -> prefill complete, us.
     queue_us: u64,
     /// Arrival -> first generated token, us (set at first publish).
     ttft_us: u64,
+    /// Shared client-disconnect flag (see [`EnginePool::cancel`]).
+    cancel: Arc<AtomicBool>,
+    /// Session key, for stage-2 (decode) placement affinity.
+    session: Option<String>,
 }
 
-/// The replica engine loop: owns stack + scheduler + batch; pulls jobs
-/// from the bounded channel only while the batch has room (the channel
-/// is the queue); publishes stream events; exits once the pool dropped
-/// its sender AND all accepted work finished (drain semantics).
-fn replica_loop(
+impl Track {
+    fn from_job(job: &ServeJob) -> Self {
+        Self {
+            events: job.events.clone(),
+            stream: job.stream,
+            cursor: 0,
+            cost: job.cost,
+            arrival_us: job.spec.arrival_us,
+            queue_us: 0,
+            ttft_us: 0,
+            cancel: job.cancel.clone(),
+            session: job.session.clone(),
+        }
+    }
+}
+
+/// Admit one pulled job into a replica's local tracking + wait queue
+/// (the single point of accept-time bookkeeping for every intake path).
+fn accept(tracks: &mut HashMap<u64, Track>, wait_q: &mut VecDeque<ServeJob>, job: ServeJob) {
+    tracks.insert(job.spec.id, Track::from_job(&job));
+    wait_q.push_back(job);
+}
+
+/// Everything a replica thread is born with.
+struct ReplicaCtx {
     cfg: RunConfig,
-    rx: Receiver<ServeJob>,
+    role: ReplicaRole,
+    router: Arc<Router>,
     tel: Arc<ReplicaTelemetry>,
     pool_tel: Arc<PoolTelemetry>,
-    cancels: Arc<Mutex<HashSet<u64>>>,
-    ready: std::sync::mpsc::Sender<Result<ModelSpec, String>>,
+    /// Senders to every replica's handoff channel. Only prefill-role
+    /// replicas ever dispatch handoffs (a decode-capable replica always
+    /// activates its own prefills locally), so everyone else drops
+    /// these at thread start — the senders still alive for any handoff
+    /// channel are exactly the prefill-role replicas', making the
+    /// drain-time disconnect cascade acyclic by construction.
+    handoff_txs: Vec<Sender<HandoffMsg>>,
+}
+
+/// How long an otherwise-idle replica in a disaggregated pool waits on
+/// its job channel before polling the handoff channel.
+const IDLE_POLL: Duration = Duration::from_millis(1);
+
+/// The replica engine loop. Owns stack + scheduler + batch; per
+/// iteration it pulls admissions while it has room, evicts cancelled
+/// requests, advances at most one chunk of the active prefill, routes
+/// finished prefills (activate locally or hand off), imports arriving
+/// handoffs, and runs one decode step over the continuous batch. Exits
+/// once the pool dropped its job sender, every peer dropped its handoff
+/// senders, and all accepted work finished (drain semantics).
+fn replica_loop(
+    ctx: ReplicaCtx,
+    rx_job: Receiver<ServeJob>,
+    rx_handoff: Receiver<HandoffMsg>,
+    ready: Sender<Result<ModelSpec, String>>,
 ) {
+    let ReplicaCtx { cfg, role, router, tel, pool_tel, handoff_txs } = ctx;
     let release = |cost: usize| {
         pool_tel.inflight_tokens.fetch_sub(cost, Ordering::Relaxed);
     };
@@ -399,144 +530,292 @@ fn replica_loop(
         Ok(s) => s,
         Err(e) => {
             let _ = ready.send(Err(format!("{e:#}")));
-            // Refuse anything that still lands in the queue until the
-            // pool notices and drops the sender.
-            while let Ok(job) = rx.recv() {
-                release(job.cost);
-                let _ = job.events.send(StreamEvent::Failed {
-                    id: job.spec.id,
-                    error: "replica failed to load its stack".to_string(),
-                });
+            drop(handoff_txs);
+            // Refuse anything that still lands in the queues until the
+            // pool notices and drops the senders.
+            loop {
+                let (done_jobs, done_handoffs) = (
+                    drain_refuse_jobs(&rx_job, &release),
+                    drain_refuse_handoffs(&rx_handoff, &release),
+                );
+                if done_jobs && done_handoffs {
+                    return;
+                }
+                std::thread::sleep(IDLE_POLL);
             }
-            return;
         }
     };
     let _ = ready.send(Ok(stack.gpu.spec.clone()));
     let mut sched = stack.scheduler(cfg.method, None);
     let mut batch = stack.batch();
-    let mut tracks: HashMap<u64, Track> = HashMap::new();
     let max_live = cfg.server.max_batch;
-    let mut open = true;
+    let disagg = router.disaggregated();
 
-    let accept = |batch: &mut crate::coordinator::Batch,
-                  tracks: &mut HashMap<u64, Track>,
-                  job: ServeJob| {
-        tracks.insert(
-            job.spec.id,
-            Track {
-                events: job.events,
-                stream: job.stream,
-                cursor: 0,
-                cost: job.cost,
-                arrival_us: job.spec.arrival_us,
-                queue_us: 0,
-                ttft_us: 0,
-            },
-        );
-        batch.enqueue(job.spec);
-    };
+    let mut tracks: HashMap<u64, Track> = HashMap::new();
+    let mut wait_q: VecDeque<ServeJob> = VecDeque::new();
+    let mut active: Option<PrefillState> = None;
+    let mut ready_q: VecDeque<SeqState> = VecDeque::new();
+    let mut open = true;
+    let mut handoffs_open = true;
+    // Held only while this replica can still produce handoffs: only a
+    // prefill-role replica ever does (decode-capable replicas keep
+    // their own admissions), and it releases the senders once drained.
+    let mut handoff_txs =
+        if role == ReplicaRole::Prefill { Some(handoff_txs) } else { None };
 
     loop {
-        if open && batch.idle() {
-            match rx.recv() {
-                Ok(job) => accept(&mut batch, &mut tracks, job),
-                Err(_) => open = false,
-            }
-        }
-        // `chan_empty`: the pull phase proved the job channel holds
-        // nothing — every submitted request for this replica is now in
-        // `tracks`, so a cancel id matching neither is stale (its
-        // request already terminated) and safe to purge.
-        let mut chan_empty = !open;
-        while open && batch.live() + batch.queue.len() < max_live {
-            match rx.try_recv() {
-                Ok(job) => accept(&mut batch, &mut tracks, job),
-                Err(TryRecvError::Empty) => {
-                    chan_empty = true;
-                    break;
-                }
+        // --- Intake: pull admissions while there is room to work on
+        // them. Role enforcement is the router's job; anything that
+        // lands here is served.
+        while open
+            && wait_q.len() + usize::from(active.is_some()) + ready_q.len() + batch.live()
+                < max_live
+        {
+            match rx_job.try_recv() {
+                Ok(job) => accept(&mut tracks, &mut wait_q, job),
+                Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     open = false;
-                    chan_empty = true;
                     break;
                 }
             }
         }
-        // Evict cancelled requests (client hung up): free queued entries
-        // and live batch slots, releasing their reservations, instead of
-        // decoding for dead clients. Ids not yet pulled from the channel
-        // stay in the set and are caught on a later pass.
-        {
-            let mut g = cancels.lock().unwrap();
-            if !g.is_empty() {
-                if chan_empty {
-                    // Nothing in flight: ids matching no track already
-                    // terminated (cancel raced completion) — purge them.
-                    g.retain(|id| tracks.contains_key(id));
-                }
-                let ids: Vec<u64> =
-                    g.iter().copied().filter(|id| tracks.contains_key(id)).collect();
-                for id in ids {
-                    g.remove(&id);
-                    let t = tracks.remove(&id).expect("cancel id was tracked");
-                    let before = batch.queue.len();
-                    batch.queue.retain(|r| r.id != id);
-                    if batch.queue.len() < before {
-                        tel.queued.fetch_sub(1, Ordering::Relaxed);
-                        tel.queued_tokens.fetch_sub(t.cost, Ordering::Relaxed);
-                    } else if let Some(pos) = batch.seqs.iter().position(|s| s.id == id) {
-                        batch.seqs.swap_remove(pos);
-                        tel.live_seqs.fetch_sub(1, Ordering::Relaxed);
-                        tel.live_tokens.fetch_sub(t.cost, Ordering::Relaxed);
-                    }
-                    release(t.cost);
-                    tel.cancelled.fetch_add(1, Ordering::Relaxed);
-                    let _ = t.events.send(StreamEvent::Failed {
-                        id,
-                        error: "cancelled: client disconnected".to_string(),
-                    });
+        // --- Intake: arriving handoffs (unbounded channel — import
+        // immediately, activate as slots free up).
+        while handoffs_open {
+            match rx_handoff.try_recv() {
+                Ok(msg) => import_handoff(msg, &tel, &mut tracks, &mut ready_q),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    handoffs_open = false;
+                    break;
                 }
             }
         }
-        if !open && batch.idle() {
-            break;
+
+        // --- Cancellation: evict any owned request whose client hung
+        // up, wherever it is in the lifecycle.
+        let cancelled: Vec<u64> = tracks
+            .iter()
+            .filter(|(_, t)| t.cancel.load(Ordering::Acquire))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in cancelled {
+            if let Some(pos) = wait_q.iter().position(|j| j.spec.id == id) {
+                let job = wait_q.remove(pos).expect("position is in range");
+                tel.queued.fetch_sub(1, Ordering::Relaxed);
+                tel.queued_tokens.fetch_sub(job.cost, Ordering::Relaxed);
+            } else if active.as_ref().is_some_and(|p| p.id() == id) {
+                let st = active.take().expect("checked above");
+                let cost = tracks.get(&id).map(|t| t.cost).unwrap_or(0);
+                tel.prefilling.fetch_sub(1, Ordering::Relaxed);
+                tel.prefill_tokens.fetch_sub(cost, Ordering::Relaxed);
+                drop(st);
+            } else if let Some(pos) = ready_q.iter().position(|s| s.id == id) {
+                let seq = ready_q.remove(pos).expect("position is in range");
+                tel.live_seqs.fetch_sub(1, Ordering::Relaxed);
+                tel.live_tokens.fetch_sub(
+                    tracks.get(&id).map(|t| t.cost).unwrap_or(0),
+                    Ordering::Relaxed,
+                );
+                drop(seq);
+            } else if let Some(pos) = batch.seqs.iter().position(|s| s.id == id) {
+                batch.seqs.swap_remove(pos);
+                tel.live_seqs.fetch_sub(1, Ordering::Relaxed);
+                tel.live_tokens.fetch_sub(
+                    tracks.get(&id).map(|t| t.cost).unwrap_or(0),
+                    Ordering::Relaxed,
+                );
+            } else {
+                // Unreachable by the lockstep invariant (every tracked
+                // request sits in exactly one of the four places above;
+                // handoff/fail/reap remove the track in the same step).
+                // Kept as pure defense: never double-terminate.
+                continue;
+            }
+            let t = tracks.remove(&id).expect("cancelled id was tracked");
+            release(t.cost);
+            tel.cancelled.fetch_add(1, Ordering::Relaxed);
+            let _ = t.events.send(StreamEvent::Cancelled { id });
         }
 
-        // Admission: prefill + activate whatever fits in the batch.
-        for req in batch.admissible() {
-            let id = req.id;
-            let cost = tracks.get(&id).map(|t| t.cost).unwrap_or(0);
-            tel.queued.fetch_sub(1, Ordering::Relaxed);
-            tel.queued_tokens.fetch_sub(cost, Ordering::Relaxed);
-            match sched.admit(&mut batch, &req) {
-                Ok(()) => {
-                    tel.admitted.fetch_add(1, Ordering::Relaxed);
-                    tel.live_seqs.fetch_add(1, Ordering::Relaxed);
-                    tel.live_tokens.fetch_add(cost, Ordering::Relaxed);
-                    if let Some(t) = tracks.get_mut(&id) {
-                        t.queue_us = clock::now_us().saturating_sub(t.arrival_us);
-                        tel.queue_wait_us.lock().unwrap().record(t.queue_us as f64);
+        // --- Idle: wait for new input; exit once drained. Which source
+        // to block on depends on what can actually arrive here:
+        // all-mixed pools and prefill-role replicas never receive
+        // handoffs (blocking job recv, zero idle CPU); decode-role
+        // replicas never receive admissions (blocking handoff recv —
+        // the router routes jobs only to prefill-capable replicas);
+        // only a *mixed* replica in a role-split pool must watch both
+        // channels, at a 1ms poll.
+        let has_work =
+            active.is_some() || !wait_q.is_empty() || !ready_q.is_empty() || batch.live() > 0;
+        if !has_work {
+            if open && (!disagg || role == ReplicaRole::Prefill) {
+                match rx_job.recv() {
+                    Ok(job) => accept(&mut tracks, &mut wait_q, job),
+                    Err(_) => open = false,
+                }
+            } else if open && role == ReplicaRole::Mixed {
+                match rx_job.recv_timeout(IDLE_POLL) {
+                    Ok(job) => accept(&mut tracks, &mut wait_q, job),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => open = false,
+                }
+            } else if open && handoffs_open {
+                // Decode-role replica: a handoff (or the drain-time
+                // disconnect cascade) is the only thing that can wake
+                // it; the job channel's own disconnect is observed by
+                // the intake `try_recv` on the next iteration.
+                match rx_handoff.recv() {
+                    Ok(msg) => import_handoff(msg, &tel, &mut tracks, &mut ready_q),
+                    Err(_) => handoffs_open = false,
+                }
+            } else if handoffs_open {
+                // No more admissions anywhere for this replica; it can
+                // no longer produce handoffs either — drop the senders
+                // so peers' receivers can disconnect, then wait for
+                // stragglers routed here.
+                handoff_txs = None;
+                match rx_handoff.recv() {
+                    Ok(msg) => import_handoff(msg, &tel, &mut tracks, &mut ready_q),
+                    Err(_) => handoffs_open = false,
+                }
+            } else if open {
+                // Handoff plane closed (drain underway) but the job
+                // channel has not been observed disconnected yet —
+                // block on it so nothing buffered is ever stranded.
+                match rx_job.recv() {
+                    Ok(job) => accept(&mut tracks, &mut wait_q, job),
+                    Err(_) => open = false,
+                }
+            } else {
+                break;
+            }
+            continue;
+        }
+
+        // --- Prefill plane: start the next admission, advance at most
+        // one chunk, then route the finished sequence.
+        if active.is_none() {
+            if let Some(job) = wait_q.pop_front() {
+                tel.queued.fetch_sub(1, Ordering::Relaxed);
+                tel.queued_tokens.fetch_sub(job.cost, Ordering::Relaxed);
+                match sched.begin_prefill(&job.spec, batch.budget_blocks) {
+                    Ok(st) => {
+                        tel.prefilling.fetch_add(1, Ordering::Relaxed);
+                        tel.prefill_tokens.fetch_add(job.cost, Ordering::Relaxed);
+                        active = Some(st);
+                    }
+                    Err(e) => {
+                        fail_request(
+                            &tel,
+                            &mut tracks,
+                            job.spec.id,
+                            &format!("admit: {e:#}"),
+                            &release,
+                        );
+                    }
+                }
+            }
+        }
+        if let Some(st) = active.as_mut() {
+            match sched.prefill_step(st) {
+                Ok(false) => {
+                    tel.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(true) => {
+                    tel.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+                    let st = active.take().expect("checked above");
+                    let id = st.id();
+                    let cost = tracks.get(&id).map(|t| t.cost).unwrap_or(0);
+                    tel.prefilling.fetch_sub(1, Ordering::Relaxed);
+                    tel.prefill_tokens.fetch_sub(cost, Ordering::Relaxed);
+                    match sched.finish_prefill(st) {
+                        Ok(seq) => {
+                            tel.admitted.fetch_add(1, Ordering::Relaxed);
+                            if let Some(t) = tracks.get_mut(&id) {
+                                t.queue_us = clock::now_us().saturating_sub(t.arrival_us);
+                                tel.queue_wait_us.lock().unwrap().record(t.queue_us as f64);
+                            }
+                            // Stage-2 placement: a prefill-role replica
+                            // hands the sequence to a decode-capable
+                            // one; any replica that can decode keeps
+                            // its own admissions (all-mixed pools never
+                            // hand off — pre-disaggregation behavior).
+                            if role.can_decode() {
+                                tel.live_seqs.fetch_add(1, Ordering::Relaxed);
+                                tel.live_tokens.fetch_add(cost, Ordering::Relaxed);
+                                ready_q.push_back(seq);
+                            } else {
+                                let session =
+                                    tracks.get(&id).and_then(|t| t.session.as_deref());
+                                match router.pick_decode(session) {
+                                    Some(dest) => dispatch_handoff(
+                                        seq,
+                                        dest,
+                                        &tel,
+                                        &mut tracks,
+                                        handoff_txs.as_deref(),
+                                        &release,
+                                    ),
+                                    None => fail_request(
+                                        &tel,
+                                        &mut tracks,
+                                        id,
+                                        "no decode-capable replica for handoff",
+                                        &release,
+                                    ),
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            fail_request(
+                                &tel,
+                                &mut tracks,
+                                id,
+                                &format!("admit: {e:#}"),
+                                &release,
+                            );
+                        }
                     }
                 }
                 Err(e) => {
-                    tel.failed.fetch_add(1, Ordering::Relaxed);
-                    release(cost);
-                    cancels.lock().unwrap().remove(&id);
-                    if let Some(t) = tracks.remove(&id) {
-                        let _ = t
-                            .events
-                            .send(StreamEvent::Failed { id, error: format!("admit: {e:#}") });
-                    }
+                    let st = active.take().expect("checked above");
+                    let id = st.id();
+                    let cost = tracks.get(&id).map(|t| t.cost).unwrap_or(0);
+                    tel.prefilling.fetch_sub(1, Ordering::Relaxed);
+                    tel.prefill_tokens.fetch_sub(cost, Ordering::Relaxed);
+                    fail_request(&tel, &mut tracks, id, &format!("admit: {e:#}"), &release);
                 }
             }
+        }
+
+        // --- Activate ready sequences while the batch has room.
+        while batch.live() < max_live {
+            let Some(seq) = ready_q.pop_front() else { break };
+            let id = seq.id;
+            if let Err(e) = batch.activate(seq) {
+                tel.live_seqs.fetch_sub(1, Ordering::Relaxed);
+                tel.live_tokens.fetch_sub(
+                    tracks.get(&id).map(|t| t.cost).unwrap_or(0),
+                    Ordering::Relaxed,
+                );
+                fail_request(&tel, &mut tracks, id, &format!("activate: {e:#}"), &release);
+            }
+        }
+
+        // Once this replica can produce no further handoffs, release the
+        // senders so peers can finish draining.
+        if !open && wait_q.is_empty() && active.is_none() && handoff_txs.is_some() {
+            handoff_txs = None;
         }
 
         if batch.live() == 0 {
             continue;
         }
 
-        // One decode step over the whole continuous batch.
-        let t0 = std::time::Instant::now();
+        // --- One decode step over the whole continuous batch.
+        let t0 = Instant::now();
         match sched.step(&mut batch) {
             Ok(_stats) => {}
             Err(e) => {
@@ -546,7 +825,6 @@ fn replica_loop(
                 let mut freed = 0usize;
                 for s in std::mem::take(&mut batch.seqs) {
                     freed += 1;
-                    cancels.lock().unwrap().remove(&s.id);
                     if let Some(t) = tracks.remove(&s.id) {
                         tel.live_tokens.fetch_sub(t.cost, Ordering::Relaxed);
                         release(t.cost);
@@ -563,7 +841,7 @@ fn replica_loop(
         tel.steps.fetch_add(1, Ordering::Relaxed);
         tel.busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
 
-        // Publish: stamp TTFT, stream any newly generated tokens.
+        // --- Publish: stamp TTFT, stream any newly generated tokens.
         let now_us = clock::now_us();
         let mut step_tokens = 0u64;
         for s in &batch.seqs {
@@ -587,8 +865,8 @@ fn replica_loop(
         }
         tel.tokens_out.fetch_add(step_tokens, Ordering::Relaxed);
 
-        // Reap finished sequences and answer their clients, filling the
-        // serve-plane timing fields from this replica's own tracking.
+        // --- Reap finished sequences and answer their clients, filling
+        // the serve-plane timing fields from this replica's tracking.
         batch.reap();
         for mut out in batch.finished.drain(..) {
             tel.finished.fetch_add(1, Ordering::Relaxed);
@@ -596,12 +874,138 @@ fn replica_loop(
             if let Some(t) = tracks.remove(&out.id) {
                 tel.live_tokens.fetch_sub(t.cost, Ordering::Relaxed);
                 release(t.cost);
-                // A cancel that raced normal completion must not linger.
-                cancels.lock().unwrap().remove(&out.id);
                 out.queue_us = t.queue_us;
                 out.ttft_us = t.ttft_us;
                 let _ = t.events.send(StreamEvent::Done(out));
             }
+        }
+    }
+}
+
+/// Terminate a tracked request with a `Failed` event, releasing its
+/// pool-budget reservation.
+fn fail_request(
+    tel: &ReplicaTelemetry,
+    tracks: &mut HashMap<u64, Track>,
+    id: u64,
+    error: &str,
+    release: &impl Fn(usize),
+) {
+    tel.failed.fetch_add(1, Ordering::Relaxed);
+    if let Some(t) = tracks.remove(&id) {
+        release(t.cost);
+        let _ = t.events.send(StreamEvent::Failed { id, error: error.to_string() });
+    }
+}
+
+/// Source side of a handoff: pack the sequence (moving its KV shards)
+/// and send it, with its track, to the destination replica.
+fn dispatch_handoff(
+    seq: SeqState,
+    dest: usize,
+    tel: &ReplicaTelemetry,
+    tracks: &mut HashMap<u64, Track>,
+    handoff_txs: Option<&[Sender<HandoffMsg>]>,
+    release: &impl Fn(usize),
+) {
+    let id = seq.id;
+    let Some(track) = tracks.remove(&id) else { return };
+    let Some(txs) = handoff_txs else {
+        // Unreachable by construction (senders are only dropped once no
+        // prefill can be active), but never strand a client on a bug.
+        release(track.cost);
+        let _ = track
+            .events
+            .send(StreamEvent::Failed { id, error: "handoff plane closed".to_string() });
+        return;
+    };
+    let msg = HandoffMsg {
+        seq: seq.into_handoff(),
+        stream: track.stream,
+        events: track.events.clone(),
+        cancel: track.cancel.clone(),
+        cost: track.cost,
+        arrival_us: track.arrival_us,
+        queue_us: track.queue_us,
+        sent: Instant::now(),
+    };
+    if txs[dest].send(msg).is_ok() {
+        tel.handoffs_out.fetch_add(1, Ordering::Relaxed);
+    } else {
+        // Destination died (replica panic): fail rather than hang.
+        release(track.cost);
+        tel.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = track.events.send(StreamEvent::Failed {
+            id,
+            error: format!("handoff to dead replica {dest}"),
+        });
+    }
+}
+
+/// Destination side of a handoff: import the KV export into a fresh
+/// store, rebuild the sequence, and queue it for activation.
+fn import_handoff(
+    msg: HandoffMsg,
+    tel: &ReplicaTelemetry,
+    tracks: &mut HashMap<u64, Track>,
+    ready_q: &mut VecDeque<SeqState>,
+) {
+    let bytes = msg.seq.payload_bytes() as u64;
+    tel.handoffs_in.fetch_add(1, Ordering::Relaxed);
+    tel.handoff_bytes_in.fetch_add(bytes, Ordering::Relaxed);
+    tel.handoff_us.lock().unwrap().record(msg.sent.elapsed().as_micros() as f64);
+    let seq = SeqState::from_handoff(msg.seq);
+    tracks.insert(
+        seq.id,
+        Track {
+            events: msg.events,
+            stream: msg.stream,
+            cursor: 0,
+            cost: msg.cost,
+            arrival_us: msg.arrival_us,
+            queue_us: msg.queue_us,
+            ttft_us: 0,
+            cancel: msg.cancel,
+            session: None,
+        },
+    );
+    tel.live_seqs.fetch_add(1, Ordering::Relaxed);
+    tel.live_tokens.fetch_add(msg.cost, Ordering::Relaxed);
+    ready_q.push_back(seq);
+}
+
+/// Failed-to-load replica: refuse one channel's buffered jobs. Returns
+/// `true` once the channel is disconnected and empty.
+fn drain_refuse_jobs(rx: &Receiver<ServeJob>, release: &impl Fn(usize)) -> bool {
+    loop {
+        match rx.try_recv() {
+            Ok(job) => {
+                release(job.cost);
+                let _ = job.events.send(StreamEvent::Failed {
+                    id: job.spec.id,
+                    error: "replica failed to load its stack".to_string(),
+                });
+            }
+            Err(TryRecvError::Empty) => return false,
+            Err(TryRecvError::Disconnected) => return true,
+        }
+    }
+}
+
+/// Failed-to-load replica: refuse any handoffs routed here.
+fn drain_refuse_handoffs(rx: &Receiver<HandoffMsg>, release: &impl Fn(usize)) -> bool {
+    loop {
+        match rx.try_recv() {
+            Ok(msg) => {
+                release(msg.cost);
+                let id = msg.seq.id;
+                let _ = msg.events.send(StreamEvent::Failed {
+                    id,
+                    error: "replica failed to load its stack".to_string(),
+                });
+            }
+            Err(TryRecvError::Empty) => return false,
+            Err(TryRecvError::Disconnected) => return true,
         }
     }
 }

@@ -1,11 +1,66 @@
-//! Request router: places submissions onto replicas under a pluggable
-//! policy. Placement is advisory — admission control (bounded queues +
-//! token budget) still has the final word at the chosen replica.
+//! Request router: places work onto replicas under a pluggable policy.
+//!
+//! Placement is **two-stage** under prefill/decode disaggregation: an
+//! admission first lands on a *prefill-capable* replica
+//! ([`Router::pick_prefill`]); once its prompt is in the KV cache the
+//! finished sequence is handed to a *decode-capable* replica
+//! ([`Router::pick_decode`]). With the default all-[`Mixed`] role mask
+//! both stages resolve to the same replica set and stage two always
+//! picks the prefilling replica itself — exactly the single-stage
+//! behavior before disaggregation.
+//!
+//! Placement is advisory — admission control (bounded queues + token
+//! budget) still has the final word at the chosen replica.
+//!
+//! [`Mixed`]: ReplicaRole::Mixed
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use super::telemetry::ReplicaTelemetry;
+
+/// What work a replica accepts (the disaggregation role mask).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplicaRole {
+    /// Prefills admissions, decodes nothing: every finished prefill is
+    /// handed off.
+    Prefill,
+    /// Decodes handed-off sequences, admits nothing directly.
+    Decode,
+    /// Both (the default — preserves pre-disaggregation behavior).
+    #[default]
+    Mixed,
+}
+
+impl ReplicaRole {
+    pub fn can_prefill(&self) -> bool {
+        matches!(self, ReplicaRole::Prefill | ReplicaRole::Mixed)
+    }
+
+    pub fn can_decode(&self) -> bool {
+        matches!(self, ReplicaRole::Decode | ReplicaRole::Mixed)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReplicaRole::Prefill => "prefill",
+            ReplicaRole::Decode => "decode",
+            ReplicaRole::Mixed => "mixed",
+        }
+    }
+}
+
+impl std::str::FromStr for ReplicaRole {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "prefill" => Ok(ReplicaRole::Prefill),
+            "decode" => Ok(ReplicaRole::Decode),
+            "mixed" | "both" => Ok(ReplicaRole::Mixed),
+            other => anyhow::bail!("unknown replica role {other:?}"),
+        }
+    }
+}
 
 /// Placement policy across the engine pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -44,43 +99,104 @@ impl std::str::FromStr for RoutePolicy {
     }
 }
 
+/// The two placement stages of a request's lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Stage {
+    Prefill,
+    Decode,
+}
+
 /// Stateful placement over a fixed replica set.
 pub struct Router {
     policy: RoutePolicy,
     replicas: Vec<Arc<ReplicaTelemetry>>,
+    roles: Vec<ReplicaRole>,
     rr_next: AtomicUsize,
 }
 
 impl Router {
-    pub fn new(policy: RoutePolicy, replicas: Vec<Arc<ReplicaTelemetry>>) -> Self {
+    pub fn new(
+        policy: RoutePolicy,
+        replicas: Vec<Arc<ReplicaTelemetry>>,
+        roles: Vec<ReplicaRole>,
+    ) -> Self {
         assert!(!replicas.is_empty(), "router needs at least one replica");
-        Self { policy, replicas, rr_next: AtomicUsize::new(0) }
+        assert_eq!(replicas.len(), roles.len(), "one role per replica");
+        Self { policy, replicas, roles, rr_next: AtomicUsize::new(0) }
     }
 
     pub fn policy(&self) -> RoutePolicy {
         self.policy
     }
 
-    /// Choose a replica index for a request carrying `session`.
-    pub fn pick(&self, session: Option<&str>) -> usize {
-        match self.policy {
-            RoutePolicy::RoundRobin => self.round_robin(),
-            RoutePolicy::LeastLoaded => self.least_loaded(),
-            RoutePolicy::SessionAffinity => match session {
-                Some(key) => (fnv1a(key.as_bytes()) as usize) % self.replicas.len(),
-                None => self.least_loaded(),
-            },
+    pub fn roles(&self) -> &[ReplicaRole] {
+        &self.roles
+    }
+
+    /// Whether the pool actually separates roles. All-`Mixed` pools skip
+    /// stage-two placement entirely (each replica keeps its own
+    /// admissions — pre-disaggregation behavior, byte for byte).
+    pub fn disaggregated(&self) -> bool {
+        self.roles.iter().any(|r| *r != ReplicaRole::Mixed)
+    }
+
+    /// Stage 1: choose a replica to *prefill* a new admission. `None`
+    /// only when no replica can prefill at all (prevented by config
+    /// validation).
+    pub fn pick_prefill(&self, session: Option<&str>) -> Option<usize> {
+        self.pick(Stage::Prefill, session)
+    }
+
+    /// Stage 2: choose a replica to *decode* a prefilled sequence.
+    /// Affinity hashes over the full replica set (stable under role
+    /// reconfiguration); a hash landing on a draining or non-decode
+    /// replica falls back to the least-loaded eligible one — a session
+    /// must never hang or land on a prefill-only replica.
+    pub fn pick_decode(&self, session: Option<&str>) -> Option<usize> {
+        self.pick(Stage::Decode, session)
+    }
+
+    fn pick(&self, stage: Stage, session: Option<&str>) -> Option<usize> {
+        let can = |i: usize| match stage {
+            Stage::Prefill => self.roles[i].can_prefill(),
+            Stage::Decode => self.roles[i].can_decode(),
+        };
+        let live = |i: usize| !self.replicas[i].draining.load(Ordering::Relaxed);
+        // Draining replicas are skipped while any capable live replica
+        // exists; accepted work must still land somewhere when the whole
+        // pool is draining, so the role-capable set is the fallback.
+        let mut eligible: Vec<usize> =
+            (0..self.replicas.len()).filter(|&i| can(i) && live(i)).collect();
+        if eligible.is_empty() {
+            eligible = (0..self.replicas.len()).filter(|&i| can(i)).collect();
         }
+        if eligible.is_empty() {
+            return None;
+        }
+        Some(match self.policy {
+            RoutePolicy::RoundRobin => {
+                eligible[self.rr_next.fetch_add(1, Ordering::Relaxed) % eligible.len()]
+            }
+            RoutePolicy::LeastLoaded => self.least_loaded(&eligible),
+            RoutePolicy::SessionAffinity => match session {
+                Some(key) => {
+                    let affine = (fnv1a(key.as_bytes()) as usize) % self.replicas.len();
+                    if eligible.contains(&affine) {
+                        affine
+                    } else {
+                        self.least_loaded(&eligible)
+                    }
+                }
+                None => self.least_loaded(&eligible),
+            },
+        })
     }
 
-    fn round_robin(&self) -> usize {
-        self.rr_next.fetch_add(1, Ordering::Relaxed) % self.replicas.len()
-    }
-
-    fn least_loaded(&self) -> usize {
-        let mut best = 0usize;
+    fn least_loaded(&self, candidates: &[usize]) -> usize {
+        let mut best = candidates[0];
         let mut best_load = usize::MAX;
-        for (i, r) in self.replicas.iter().enumerate() {
+        for &i in candidates {
+            let r = &self.replicas[i];
             // Tie-break on queue depth so an idle replica with equal
             // reserved tokens still wins.
             let load = r.load_tokens().saturating_mul(1024) + r.depth();
@@ -112,6 +228,10 @@ mod tests {
         (0..n).map(|_| Arc::new(ReplicaTelemetry::default())).collect()
     }
 
+    fn mixed(n: usize) -> Vec<ReplicaRole> {
+        vec![ReplicaRole::Mixed; n]
+    }
+
     #[test]
     fn policy_parse_roundtrip() {
         for p in [RoutePolicy::LeastLoaded, RoutePolicy::RoundRobin, RoutePolicy::SessionAffinity] {
@@ -123,10 +243,22 @@ mod tests {
     }
 
     #[test]
+    fn role_parse_roundtrip() {
+        for r in [ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Mixed] {
+            let back: ReplicaRole = r.label().parse().unwrap();
+            assert_eq!(back, r);
+        }
+        assert!("bogus".parse::<ReplicaRole>().is_err());
+        assert!(ReplicaRole::Mixed.can_prefill() && ReplicaRole::Mixed.can_decode());
+        assert!(ReplicaRole::Prefill.can_prefill() && !ReplicaRole::Prefill.can_decode());
+        assert!(!ReplicaRole::Decode.can_prefill() && ReplicaRole::Decode.can_decode());
+    }
+
+    #[test]
     fn round_robin_rotates() {
-        let r = Router::new(RoutePolicy::RoundRobin, replicas(3));
+        let r = Router::new(RoutePolicy::RoundRobin, replicas(3), mixed(3));
         assert_eq!(
-            (0..6).map(|_| r.pick(None)).collect::<Vec<_>>(),
+            (0..6).map(|_| r.pick_prefill(None).unwrap()).collect::<Vec<_>>(),
             vec![0, 1, 2, 0, 1, 2]
         );
     }
@@ -137,20 +269,97 @@ mod tests {
         reps[0].live_tokens.store(500, Ordering::Relaxed);
         reps[1].live_tokens.store(20, Ordering::Relaxed);
         reps[2].live_tokens.store(300, Ordering::Relaxed);
-        let r = Router::new(RoutePolicy::LeastLoaded, reps);
-        assert_eq!(r.pick(None), 1);
+        let r = Router::new(RoutePolicy::LeastLoaded, reps, mixed(3));
+        assert_eq!(r.pick_prefill(None), Some(1));
+        assert_eq!(r.pick_decode(None), Some(1));
     }
 
     #[test]
     fn session_affinity_is_sticky_and_spreads() {
-        let r = Router::new(RoutePolicy::SessionAffinity, replicas(4));
-        let a = r.pick(Some("user-a"));
+        let r = Router::new(RoutePolicy::SessionAffinity, replicas(4), mixed(4));
+        let a = r.pick_decode(Some("user-a")).unwrap();
         for _ in 0..5 {
-            assert_eq!(r.pick(Some("user-a")), a);
+            assert_eq!(r.pick_decode(Some("user-a")), Some(a));
         }
         // distinct keys should not all collapse onto one replica
-        let picks: std::collections::HashSet<usize> =
-            (0..32).map(|i| r.pick(Some(&format!("user-{i}")))).collect();
+        let picks: std::collections::HashSet<usize> = (0..32)
+            .map(|i| r.pick_decode(Some(&format!("user-{i}"))).unwrap())
+            .collect();
         assert!(picks.len() > 1, "affinity hash degenerate: {picks:?}");
+    }
+
+    #[test]
+    fn roles_gate_each_stage() {
+        let roles = vec![ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Decode];
+        let r = Router::new(RoutePolicy::LeastLoaded, replicas(3), roles);
+        assert!(r.disaggregated());
+        // admissions only ever land on the prefill replica
+        for _ in 0..4 {
+            assert_eq!(r.pick_prefill(None), Some(0));
+        }
+        // decode placement never lands on the prefill-only replica
+        for _ in 0..4 {
+            assert_ne!(r.pick_decode(None), Some(0));
+        }
+        let all_mixed = Router::new(RoutePolicy::LeastLoaded, replicas(2), mixed(2));
+        assert!(!all_mixed.disaggregated());
+    }
+
+    #[test]
+    fn affinity_falls_back_off_role_masked_replicas() {
+        // Find a session whose affine replica (hash % 4) is index 0,
+        // then mask 0 prefill-only: decode placement must fall back to
+        // a decode-capable replica — never 0, never None.
+        let session = (0..256)
+            .map(|i| format!("s-{i}"))
+            .find(|s| (fnv1a(s.as_bytes()) as usize) % 4 == 0)
+            .expect("some session hashes to replica 0");
+        let roles = vec![
+            ReplicaRole::Prefill,
+            ReplicaRole::Decode,
+            ReplicaRole::Mixed,
+            ReplicaRole::Decode,
+        ];
+        let r = Router::new(RoutePolicy::SessionAffinity, replicas(4), roles);
+        for _ in 0..8 {
+            let pick = r.pick_decode(Some(&session)).expect("must not hang");
+            assert_ne!(pick, 0, "fell onto the prefill-only replica");
+        }
+        // ...and a session affine to a decode-capable replica sticks.
+        let sticky = (0..256)
+            .map(|i| format!("t-{i}"))
+            .find(|s| (fnv1a(s.as_bytes()) as usize) % 4 == 1)
+            .unwrap();
+        assert_eq!(r.pick_decode(Some(&sticky)), Some(1));
+    }
+
+    #[test]
+    fn affinity_falls_back_off_draining_replicas() {
+        let reps = replicas(3);
+        let session = (0..256)
+            .map(|i| format!("d-{i}"))
+            .find(|s| (fnv1a(s.as_bytes()) as usize) % 3 == 2)
+            .unwrap();
+        let r = Router::new(RoutePolicy::SessionAffinity, reps.clone(), mixed(3));
+        assert_eq!(r.pick_decode(Some(&session)), Some(2));
+        reps[2].draining.store(true, Ordering::Relaxed);
+        for _ in 0..8 {
+            let pick = r.pick_decode(Some(&session)).expect("must not hang");
+            assert_ne!(pick, 2, "landed on a draining replica");
+            assert_eq!(r.pick_prefill(Some(&session)).map(|p| p == 2), Some(false));
+        }
+        // every capable replica draining: accepted work must still land
+        for rep in &reps {
+            rep.draining.store(true, Ordering::Relaxed);
+        }
+        assert!(r.pick_decode(Some(&session)).is_some(), "drain must not strand handoffs");
+    }
+
+    #[test]
+    fn no_capable_replica_yields_none() {
+        let roles = vec![ReplicaRole::Decode, ReplicaRole::Decode];
+        let r = Router::new(RoutePolicy::LeastLoaded, replicas(2), roles);
+        assert_eq!(r.pick_prefill(None), None, "nothing can prefill");
+        assert!(r.pick_decode(None).is_some());
     }
 }

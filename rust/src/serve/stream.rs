@@ -9,7 +9,9 @@
 //! whole continuous batch, and the event count is bounded by
 //! `max_new_tokens + 1` anyway.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::RequestOutput;
@@ -56,6 +58,11 @@ pub enum StreamEvent {
     Done(RequestOutput),
     /// Terminal: refused by admission control.
     Rejected(Rejection),
+    /// Terminal: evicted because the client asked for cancellation
+    /// (connection hangup). Distinct from [`StreamEvent::Failed`] so
+    /// clients and telemetry can tell an intentional cancel from a real
+    /// fault.
+    Cancelled { id: u64 },
     /// Terminal: the owning replica hit an engine error.
     Failed { id: u64, error: String },
 }
@@ -66,15 +73,34 @@ pub(crate) type EventSender = Sender<StreamEvent>;
 pub struct StreamHandle {
     /// Pool-assigned request id (echoed in every event).
     pub id: u64,
-    /// Replica the router placed the request on (`None` if rejected
-    /// before placement).
+    /// Replica the router placed the request on for *prefill* (`None`
+    /// if rejected before placement; the sequence may decode elsewhere
+    /// under disaggregated roles).
     pub replica: Option<usize>,
     rx: Receiver<StreamEvent>,
+    /// Shared cancellation flag: travels with the request's tracking
+    /// state across replicas (including prefill→decode handoff), so a
+    /// cancel needs no routing — whichever replica owns the request
+    /// observes the flag between steps and evicts it.
+    cancel: Arc<AtomicBool>,
 }
 
 impl StreamHandle {
-    pub(crate) fn new(id: u64, replica: Option<usize>, rx: Receiver<StreamEvent>) -> Self {
-        Self { id, replica, rx }
+    pub(crate) fn new(
+        id: u64,
+        replica: Option<usize>,
+        rx: Receiver<StreamEvent>,
+        cancel: Arc<AtomicBool>,
+    ) -> Self {
+        Self { id, replica, rx, cancel }
+    }
+
+    /// Request cancellation (best-effort; the owning replica evicts the
+    /// request between steps). Prefer [`EnginePool::cancel`].
+    ///
+    /// [`EnginePool::cancel`]: super::EnginePool::cancel
+    pub(crate) fn request_cancel(&self) {
+        self.cancel.store(true, Ordering::Release);
     }
 
     /// Next event; `None` once the stream is closed (after a terminal
@@ -119,6 +145,9 @@ impl StreamHandle {
                         r.retry_after_ms
                     )
                 }
+                StreamEvent::Cancelled { id } => {
+                    anyhow::bail!("request {id} cancelled: client disconnected")
+                }
                 StreamEvent::Failed { id, error } => {
                     anyhow::bail!("request {id} failed on replica: {error}")
                 }
@@ -133,10 +162,14 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
+    fn handle(id: u64, replica: Option<usize>, rx: Receiver<StreamEvent>) -> StreamHandle {
+        StreamHandle::new(id, replica, rx, Arc::new(AtomicBool::new(false)))
+    }
+
     #[test]
     fn wait_collects_tokens_and_checks_order() {
         let (tx, rx) = channel();
-        let h = StreamHandle::new(1, Some(0), rx);
+        let h = handle(1, Some(0), rx);
         tx.send(StreamEvent::Token { id: 1, token: 5, step: 1 }).unwrap();
         tx.send(StreamEvent::Token { id: 1, token: 9, step: 2 }).unwrap();
         tx.send(StreamEvent::Done(RequestOutput {
@@ -155,7 +188,7 @@ mod tests {
     #[test]
     fn wait_surfaces_rejection() {
         let (tx, rx) = channel();
-        let h = StreamHandle::new(2, None, rx);
+        let h = handle(2, None, rx);
         tx.send(StreamEvent::Rejected(Rejection {
             id: 2,
             code: RejectCode::Overloaded,
@@ -171,7 +204,7 @@ mod tests {
     #[test]
     fn wait_flags_stream_divergence() {
         let (tx, rx) = channel();
-        let h = StreamHandle::new(3, Some(0), rx);
+        let h = handle(3, Some(0), rx);
         tx.send(StreamEvent::Token { id: 3, token: 5, step: 1 }).unwrap();
         tx.send(StreamEvent::Done(RequestOutput {
             id: 3,

@@ -6,26 +6,43 @@
 //! no cross-replica contention); the router reads the gauges for
 //! least-loaded placement; the pool snapshots everything on demand.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::metrics::Histogram;
 use crate::util::Json;
 
+use super::router::ReplicaRole;
+
 /// One replica's live gauges and lifetime counters.
 #[derive(Default)]
 pub struct ReplicaTelemetry {
-    /// Requests submitted to this replica but not yet admitted into its
-    /// batch (bounded channel + replica-local queue).
+    /// Requests submitted to this replica but not yet started prefilling
+    /// (bounded channel + replica-local wait queue).
     pub queued: AtomicUsize,
     /// Reserved tokens (prompt + max_new) of those queued requests.
     pub queued_tokens: AtomicUsize,
+    /// Requests currently in (chunked) prefill on this replica.
+    pub prefilling: AtomicUsize,
+    /// Reserved tokens of the prefilling requests.
+    pub prefill_tokens: AtomicUsize,
     /// Sequences live in the replica's continuous batch.
     pub live_seqs: AtomicUsize,
     /// Reserved tokens of the live sequences.
     pub live_tokens: AtomicUsize,
-    /// Lifetime: requests admitted (prefilled + activated).
+    /// This replica is no longer accepting new admissions (pool drain;
+    /// the router skips draining replicas while alternatives exist).
+    pub draining: AtomicBool,
+    /// Lifetime: requests admitted (prefill completed).
     pub admitted: AtomicU64,
+    /// Lifetime: prefill chunks executed.
+    pub prefill_chunks: AtomicU64,
+    /// Lifetime: prefilled sequences handed off to another replica.
+    pub handoffs_out: AtomicU64,
+    /// Lifetime: sequences imported from another replica's prefill.
+    pub handoffs_in: AtomicU64,
+    /// Lifetime: KV payload bytes imported via handoff.
+    pub handoff_bytes_in: AtomicU64,
     /// Lifetime: requests completed.
     pub finished: AtomicU64,
     /// Lifetime: requests terminated by an engine error.
@@ -40,31 +57,45 @@ pub struct ReplicaTelemetry {
     pub busy_us: AtomicU64,
     /// Arrival -> first token, us.
     pub ttft_us: Mutex<Histogram>,
-    /// Arrival -> admission, us.
+    /// Arrival -> prefill complete, us.
     pub queue_wait_us: Mutex<Histogram>,
+    /// Handoff dispatch -> imported on this replica, us.
+    pub handoff_us: Mutex<Histogram>,
 }
 
 impl ReplicaTelemetry {
-    /// Routing load metric: reserved tokens queued + live. Reserved (not
-    /// current-KV) tokens make placement stable under decode progress.
+    /// Routing load metric: reserved tokens queued + prefilling + live.
+    /// Reserved (not current-KV) tokens make placement stable under
+    /// decode progress.
     pub fn load_tokens(&self) -> usize {
-        self.queued_tokens.load(Ordering::Relaxed) + self.live_tokens.load(Ordering::Relaxed)
+        self.queued_tokens.load(Ordering::Relaxed)
+            + self.prefill_tokens.load(Ordering::Relaxed)
+            + self.live_tokens.load(Ordering::Relaxed)
     }
 
     /// Requests that would sit in front of a new submission.
     pub fn depth(&self) -> usize {
-        self.queued.load(Ordering::Relaxed) + self.live_seqs.load(Ordering::Relaxed)
+        self.queued.load(Ordering::Relaxed)
+            + self.prefilling.load(Ordering::Relaxed)
+            + self.live_seqs.load(Ordering::Relaxed)
     }
 
-    pub fn snapshot(&self, replica: usize, uptime_s: f64) -> Json {
+    pub fn snapshot(&self, replica: usize, role: ReplicaRole, uptime_s: f64) -> Json {
         let tokens_out = self.tokens_out.load(Ordering::Relaxed);
         Json::obj(vec![
             ("replica", Json::num(replica as f64)),
+            ("role", Json::str(role.label())),
             ("queue_depth", Json::num(self.queued.load(Ordering::Relaxed) as f64)),
             ("queued_tokens", Json::num(self.queued_tokens.load(Ordering::Relaxed) as f64)),
+            ("prefilling", Json::num(self.prefilling.load(Ordering::Relaxed) as f64)),
+            ("prefill_tokens", Json::num(self.prefill_tokens.load(Ordering::Relaxed) as f64)),
             ("live_seqs", Json::num(self.live_seqs.load(Ordering::Relaxed) as f64)),
             ("live_tokens", Json::num(self.live_tokens.load(Ordering::Relaxed) as f64)),
             ("admitted", Json::num(self.admitted.load(Ordering::Relaxed) as f64)),
+            ("prefill_chunks", Json::num(self.prefill_chunks.load(Ordering::Relaxed) as f64)),
+            ("handoffs_out", Json::num(self.handoffs_out.load(Ordering::Relaxed) as f64)),
+            ("handoffs_in", Json::num(self.handoffs_in.load(Ordering::Relaxed) as f64)),
+            ("handoff_bytes_in", Json::num(self.handoff_bytes_in.load(Ordering::Relaxed) as f64)),
             ("finished", Json::num(self.finished.load(Ordering::Relaxed) as f64)),
             ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
             ("cancelled", Json::num(self.cancelled.load(Ordering::Relaxed) as f64)),
@@ -77,6 +108,7 @@ impl ReplicaTelemetry {
             ("busy_us", Json::num(self.busy_us.load(Ordering::Relaxed) as f64)),
             ("ttft_us", hist_json(&self.ttft_us.lock().unwrap())),
             ("queue_wait_us", hist_json(&self.queue_wait_us.lock().unwrap())),
+            ("handoff_us", hist_json(&self.handoff_us.lock().unwrap())),
         ])
     }
 }
@@ -129,28 +161,39 @@ pub fn hist_json(h: &Histogram) -> Json {
 pub fn pool_stats_json(
     pool: &PoolTelemetry,
     replicas: &[std::sync::Arc<ReplicaTelemetry>],
+    roles: &[ReplicaRole],
     uptime_s: f64,
     draining: bool,
 ) -> Json {
     let mut ttft = Histogram::new();
     let mut queue_wait = Histogram::new();
+    let mut handoff = Histogram::new();
     let mut rows = Vec::with_capacity(replicas.len());
     let (mut depth, mut live, mut inflight, mut tokens_out) = (0usize, 0usize, 0usize, 0u64);
-    let mut cancelled = 0u64;
+    let (mut cancelled, mut handoffs, mut handoff_bytes) = (0u64, 0u64, 0u64);
+    let mut prefilling = 0usize;
     for (i, r) in replicas.iter().enumerate() {
-        rows.push(r.snapshot(i, uptime_s));
+        let role = roles.get(i).copied().unwrap_or_default();
+        rows.push(r.snapshot(i, role, uptime_s));
         ttft.merge(&r.ttft_us.lock().unwrap());
         queue_wait.merge(&r.queue_wait_us.lock().unwrap());
+        handoff.merge(&r.handoff_us.lock().unwrap());
         depth += r.queued.load(Ordering::Relaxed);
+        prefilling += r.prefilling.load(Ordering::Relaxed);
         live += r.live_seqs.load(Ordering::Relaxed);
         inflight += r.load_tokens();
         tokens_out += r.tokens_out.load(Ordering::Relaxed);
         cancelled += r.cancelled.load(Ordering::Relaxed);
+        handoffs += r.handoffs_in.load(Ordering::Relaxed);
+        handoff_bytes += r.handoff_bytes_in.load(Ordering::Relaxed);
     }
     Json::obj(vec![
         ("uptime_s", Json::num(uptime_s)),
         ("draining", Json::Bool(draining)),
+        // Which kernel tier produced these numbers (bench provenance).
+        ("simd_level", Json::str(crate::util::simd::level().name())),
         ("replica_count", Json::num(replicas.len() as f64)),
+        ("roles", Json::Arr(roles.iter().map(|r| Json::str(r.label())).collect())),
         ("submitted", Json::num(pool.submitted.load(Ordering::Relaxed) as f64)),
         ("rejected", Json::num(pool.rejected_total() as f64)),
         (
@@ -166,6 +209,7 @@ pub fn pool_stats_json(
         ),
         ("cancelled", Json::num(cancelled as f64)),
         ("queue_depth", Json::num(depth as f64)),
+        ("prefilling", Json::num(prefilling as f64)),
         ("live_seqs", Json::num(live as f64)),
         ("inflight_tokens", Json::num(inflight as f64)),
         ("tokens_out", Json::num(tokens_out as f64)),
@@ -173,6 +217,9 @@ pub fn pool_stats_json(
             "tokens_per_s",
             Json::num(if uptime_s > 0.0 { tokens_out as f64 / uptime_s } else { 0.0 }),
         ),
+        ("handoffs", Json::num(handoffs as f64)),
+        ("handoff_bytes", Json::num(handoff_bytes as f64)),
+        ("handoff_us", hist_json(&handoff)),
         ("ttft_us", hist_json(&ttft)),
         ("queue_wait_us", hist_json(&queue_wait)),
         ("replicas", Json::Arr(rows)),
@@ -190,13 +237,17 @@ mod tests {
         let t = ReplicaTelemetry::default();
         t.queued.store(2, Ordering::Relaxed);
         t.queued_tokens.store(64, Ordering::Relaxed);
+        t.prefilling.store(1, Ordering::Relaxed);
+        t.prefill_tokens.store(16, Ordering::Relaxed);
         t.live_seqs.store(1, Ordering::Relaxed);
         t.live_tokens.store(40, Ordering::Relaxed);
         t.tokens_out.store(100, Ordering::Relaxed);
-        assert_eq!(t.load_tokens(), 104);
-        assert_eq!(t.depth(), 3);
-        let j = t.snapshot(0, 2.0);
+        assert_eq!(t.load_tokens(), 120, "queued + prefilling + live tokens");
+        assert_eq!(t.depth(), 4);
+        let j = t.snapshot(0, ReplicaRole::Mixed, 2.0);
         assert_eq!(j.req_usize("queue_depth").unwrap(), 2);
+        assert_eq!(j.req_usize("prefilling").unwrap(), 1);
+        assert_eq!(j.req_str("role").unwrap(), "mixed");
         assert!((j.req_f64("tokens_per_s").unwrap() - 50.0).abs() < 1e-9);
     }
 
@@ -211,12 +262,31 @@ mod tests {
         a.tokens_out.store(30, Ordering::Relaxed);
         b.tokens_out.store(70, Ordering::Relaxed);
         a.queued.store(1, Ordering::Relaxed);
+        a.handoffs_out.store(2, Ordering::Relaxed);
+        b.handoffs_in.store(2, Ordering::Relaxed);
+        b.handoff_bytes_in.store(4096, Ordering::Relaxed);
+        b.handoff_us.lock().unwrap().record(500.0);
         a.ttft_us.lock().unwrap().record(1000.0);
         b.ttft_us.lock().unwrap().record(3000.0);
-        let j = pool_stats_json(&pool, &[a, b], 1.0, false);
+        let roles = [ReplicaRole::Prefill, ReplicaRole::Decode];
+        let j = pool_stats_json(&pool, &[a, b], &roles, 1.0, false);
         assert_eq!(j.req_usize("rejected").unwrap(), 2);
         assert_eq!(j.req_usize("queue_depth").unwrap(), 1);
         assert_eq!(j.req_usize("tokens_out").unwrap(), 100);
+        assert_eq!(j.req_usize("handoffs").unwrap(), 2);
+        assert_eq!(j.req_usize("handoff_bytes").unwrap(), 4096);
+        assert_eq!(j.get("handoff_us").unwrap().req_usize("count").unwrap(), 1);
+        let role_labels: Vec<String> = j
+            .get("roles")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(role_labels, vec!["prefill", "decode"]);
+        let level = j.req_str("simd_level").unwrap();
+        assert!(level == "portable" || level == "avx2", "{level}");
         assert_eq!(j.get("replicas").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(j.get("ttft_us").unwrap().req_usize("count").unwrap(), 2);
     }

@@ -135,6 +135,18 @@ pub fn failed_to_json(id: u64, msg: &str) -> Json {
     ])
 }
 
+/// Server -> client terminal for a client-requested cancellation —
+/// `code: "cancelled"`, distinct from `"failed"` so multiplexing
+/// clients and log scrapers can tell an intentional cancel from a
+/// fault.
+pub fn cancelled_to_json(id: u64) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("error", Json::str("cancelled: client disconnected")),
+        ("code", Json::str("cancelled")),
+    ])
+}
+
 /// Line-level error (unparseable input — there is no request id yet).
 pub fn error_to_json(msg: &str) -> Json {
     Json::obj(vec![("error", Json::str(msg))])

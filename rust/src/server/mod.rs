@@ -82,6 +82,9 @@ fn handle_conn(sock: TcpStream, pool: Arc<EnginePool>) {
                         }
                         StreamEvent::Done(out) => (api::output_to_json(out).to_string(), true),
                         StreamEvent::Rejected(r) => (api::rejection_to_json(r).to_string(), true),
+                        StreamEvent::Cancelled { id } => {
+                            (api::cancelled_to_json(*id).to_string(), true)
+                        }
                         StreamEvent::Failed { id, error } => {
                             (api::failed_to_json(*id, error).to_string(), true)
                         }

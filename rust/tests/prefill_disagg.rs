@@ -1,0 +1,241 @@
+//! Prefill/decode disaggregation integration suite.
+//!
+//! Pins the three contracts of the staged prefill plane:
+//!
+//! 1. **Chunked prefill is exact**: a `PrefillState` advanced in chunks
+//!    of any size leaves the KV cache, digests, and final hidden state
+//!    *bitwise identical* to the fused whole-prompt prefill artifact,
+//!    and end-to-end generation is byte-identical across chunk sizes.
+//! 2. **KV handoff is lossless**: `export_seq`/`import_seq` roundtrips
+//!    a prefilled sequence without changing a byte, and a role-split
+//!    pool (prefill replica + decode replicas, KV migrating between
+//!    stacks) produces exactly the single-replica outputs.
+//! 3. **Cancellation during prefill** frees the request with the
+//!    distinct `Cancelled` terminal.
+
+mod common;
+
+use std::time::Duration;
+
+use scoutattention::config::{Method, ReplicaRole, RunConfig};
+use scoutattention::coordinator::{PrefillParams, PrefillState, RequestSpec};
+use scoutattention::harness;
+use scoutattention::kvcache::ShardedKvCache;
+use scoutattention::serve::{EnginePool, StreamEvent, StreamHandle, Submission};
+use scoutattention::tensor::Tensor;
+
+const WAIT: Duration = Duration::from_secs(120);
+
+/// Deterministic prompt in test-tiny vocab (256), avoiding pad token 0.
+fn prompt(len: usize, salt: u32) -> Vec<u32> {
+    (0..len as u32).map(|i| 1 + (i * 29 + salt * 11) % 255).collect()
+}
+
+#[test]
+fn chunked_prefill_is_bitwise_identical_to_fused() {
+    let stack = common::stack();
+    let spec = stack.gpu.spec.clone();
+    let n = spec.max_seq / 2 + 3; // crosses several block boundaries
+    let req = RequestSpec::new(7, prompt(n, 1), 4);
+
+    // Fused reference: the whole-prompt artifact, loaded the seed's way.
+    let mut x_seq = Tensor::zeros(&[spec.max_seq, spec.d_model]);
+    for (t, &tok) in req.prompt.iter().take(n).enumerate() {
+        x_seq.rows_mut(t, 1).copy_from_slice(stack.gpu.weights.embed_token(tok));
+    }
+    let (k, v, h_last, _logits) = stack.gpu.prefill(&x_seq, n).unwrap();
+    let reference = ShardedKvCache::new(&spec);
+    for layer in 0..spec.n_layers {
+        reference.load_prefill_layer(layer, k.rows(layer, 1), v.rows(layer, 1), n);
+    }
+    reference.finish_prefill(n);
+    let mut residents: Vec<Vec<Vec<usize>>> = Vec::new();
+    for chunk in [1, 3, 64, usize::MAX] {
+        let mut st = PrefillState::begin(&spec, &req, spec.k_blocks, chunk).unwrap();
+        let mut calls = 1;
+        while !st.advance(&stack.gpu).unwrap() {
+            calls += 1;
+        }
+        if chunk >= n {
+            assert_eq!(calls, 1, "one advance() call must finish a whole-prompt chunk");
+        } else {
+            assert_eq!(calls, n.div_ceil(chunk), "chunk accounting (chunk={chunk})");
+        }
+        // The K/V bit-parity below pins each layer's *input*; the final
+        // hidden state (last layer's epilogue output, which seeds
+        // resident-set selection) must be pinned explicitly too.
+        assert_eq!(st.h_last(), h_last.data(), "h_last bits (chunk={chunk})");
+        let seq = st
+            .finish(
+                &stack.native,
+                PrefillParams {
+                    pin_sink: true,
+                    pin_recent: 1,
+                    recall_countdowns: vec![usize::MAX; spec.n_layers],
+                },
+            )
+            .unwrap();
+        assert_eq!(seq.cache.len(), n, "chunk={chunk}");
+        for layer in 0..spec.n_layers {
+            let a = seq.cache.layer(layer);
+            let b = reference.layer(layer);
+            assert_eq!(a.k_rows(0, n), b.k_rows(0, n), "k bits, layer {layer} chunk {chunk}");
+            assert_eq!(a.v_rows(0, n), b.v_rows(0, n), "v bits, layer {layer} chunk {chunk}");
+            assert_eq!(a.digests(), b.digests(), "digests, layer {layer} chunk {chunk}");
+        }
+        // Resident-set initialization (digest scores against the final
+        // hidden state) must be chunk-invariant too.
+        let res: Vec<Vec<usize>> =
+            (0..spec.n_layers).map(|l| seq.resident[l].iter().collect()).collect();
+        assert!(res.iter().all(|r| !r.is_empty()), "resident sets initialized");
+        residents.push(res);
+    }
+    for (i, r) in residents.iter().enumerate().skip(1) {
+        assert_eq!(r, &residents[0], "resident sets diverge across chunk sizes (arm {i})");
+    }
+}
+
+#[test]
+fn generation_is_byte_identical_across_chunk_sizes() {
+    let base_cfg = RunConfig::for_preset(common::PRESET);
+    let stack = harness::Stack::load(&base_cfg).unwrap();
+    let spec = stack.gpu.spec.clone();
+    let reqs = |salt: u32| {
+        vec![
+            RequestSpec::new(0, prompt(spec.max_seq / 2, salt), 6),
+            RequestSpec::new(1, prompt(17, salt + 1), 6),
+        ]
+    };
+    // Inline whole-prompt arm (chunk >= prompt) is the pre-refactor
+    // behavior; every chunked arm must match it byte for byte.
+    let mut reference = None;
+    for chunk in [usize::MAX, 512, 16, 5] {
+        let mut cfg = base_cfg.clone();
+        cfg.scout.prefill_chunk = chunk;
+        let stack = harness::Stack::load(&cfg).unwrap();
+        let run = harness::run_method(&stack, Method::Scout, reqs(3), 1000, None).unwrap();
+        let toks: Vec<Vec<u32>> = run.outputs.iter().map(|o| o.generated.clone()).collect();
+        match &reference {
+            None => reference = Some(toks),
+            Some(want) => {
+                assert_eq!(&toks, want, "chunk={chunk} diverged from inline prefill")
+            }
+        }
+    }
+}
+
+#[test]
+fn role_split_pool_matches_single_shot_outputs() {
+    // 1 prefill-only + 2 decode-only replicas: every admission prefills
+    // on replica 0 and migrates (export/import) to a decode replica.
+    let mut cfg = RunConfig::for_preset(common::PRESET);
+    cfg.server.replicas = 3;
+    cfg.server.roles =
+        vec![ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Decode];
+    cfg.scout.prefill_chunk = 16;
+    let pool = EnginePool::start(cfg.clone()).expect("pool start");
+
+    let prompts: Vec<Vec<u32>> = (0..5).map(|i| prompt(24 + 16 * (i % 3), i as u32)).collect();
+    let new_tokens = 5usize;
+    let handles: Vec<StreamHandle> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut sub = Submission::new(p.clone(), new_tokens);
+            if i % 2 == 0 {
+                sub = sub.streaming();
+            }
+            pool.submit(sub)
+        })
+        .collect();
+    let mut outputs: Vec<_> = handles
+        .into_iter()
+        .map(|h| {
+            // wait() also validates streamed tokens == final output
+            h.wait().expect("request completed through the handoff plane")
+        })
+        .collect();
+    outputs.sort_by_key(|o| o.id);
+
+    // Telemetry must show the disaggregated flow actually happened.
+    let stats = pool.stats();
+    assert_eq!(stats.req_usize("handoffs").unwrap(), prompts.len(), "every request migrated");
+    assert!(stats.req_usize("handoff_bytes").unwrap() > 0);
+    let reps = stats.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(reps[0].req_usize("handoffs_out").unwrap(), prompts.len());
+    assert_eq!(reps[0].req_usize("steps").unwrap(), 0, "prefill replica never decodes");
+    assert!(reps[0].req_usize("prefill_chunks").unwrap() >= prompts.len());
+    assert_eq!(
+        reps[1].req_usize("handoffs_in").unwrap() + reps[2].req_usize("handoffs_in").unwrap(),
+        prompts.len()
+    );
+    pool.shutdown().expect("shutdown");
+
+    // Byte parity with the single-shot path (one mixed replica, no
+    // handoffs, same numerics plane).
+    let single = harness::Stack::load(&RunConfig::for_preset(common::PRESET)).unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        let reqs = vec![RequestSpec::new(0, p.clone(), new_tokens)];
+        let reference = harness::run_method(&single, Method::Scout, reqs, 1000, None).unwrap();
+        assert_eq!(
+            outputs[i].generated, reference.outputs[0].generated,
+            "request {i}: disaggregated decode must match the single-shot path"
+        );
+    }
+}
+
+#[test]
+fn session_affinity_with_roles_never_lands_on_prefill_only_replica() {
+    let mut cfg = RunConfig::for_preset(common::PRESET);
+    cfg.server.replicas = 3;
+    cfg.server.roles =
+        vec![ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Decode];
+    cfg.server.policy = "session_affinity".parse().unwrap();
+    let pool = EnginePool::start(cfg).expect("pool start");
+    // Whatever each session hashes to, every request must complete: the
+    // router falls back off role-masked replicas instead of hanging.
+    let handles: Vec<StreamHandle> = (0..6)
+        .map(|i| {
+            pool.submit(
+                Submission::new(prompt(16, i), 3).with_session(format!("sess-{i}")),
+            )
+        })
+        .collect();
+    for h in handles {
+        let out = h.wait().expect("affine request completed");
+        assert_eq!(out.generated.len(), 3);
+    }
+    pool.shutdown().expect("shutdown");
+}
+
+#[test]
+fn cancellation_during_chunked_prefill_is_distinct_and_frees_budget() {
+    let mut cfg = RunConfig::for_preset(common::PRESET);
+    cfg.server.replicas = 1;
+    cfg.scout.prefill_chunk = 1; // many chunks: a wide cancel window
+    let pool = EnginePool::start(cfg).expect("pool start");
+    let spec = pool.spec().clone();
+
+    let h = pool.submit(Submission::new(prompt(spec.max_seq / 2, 1), 8).streaming());
+    pool.cancel(&h);
+    let terminal = loop {
+        match h.recv_timeout(WAIT) {
+            Some(StreamEvent::Token { .. }) => continue,
+            Some(ev) => break ev,
+            None => panic!("stream closed without a terminal event"),
+        }
+    };
+    match terminal {
+        // The cancel may land during prefill (no tokens ever published)
+        // or after completion if the tiny prompt raced through — both
+        // must answer the client; mid-prefill it must be `Cancelled`.
+        StreamEvent::Cancelled { id } => assert_eq!(id, h.id),
+        StreamEvent::Done(_) => {}
+        other => panic!("expected Cancelled or Done, got {other:?}"),
+    }
+    // Either way the reservation is released: a full-budget submission
+    // still fits afterwards.
+    let h2 = pool.submit(Submission::new(prompt(16, 2), 2));
+    assert_eq!(h2.wait().expect("pool still serves").generated.len(), 2);
+    pool.shutdown().expect("shutdown");
+}

@@ -32,6 +32,7 @@ fn wait_terminal(h: &StreamHandle) -> StreamEvent {
         match h.recv_timeout(WAIT) {
             Some(ev @ StreamEvent::Done(_))
             | Some(ev @ StreamEvent::Rejected(_))
+            | Some(ev @ StreamEvent::Cancelled { .. })
             | Some(ev @ StreamEvent::Failed { .. }) => return ev,
             Some(StreamEvent::Token { .. }) => continue,
             None => panic!("stream closed without a terminal event"),
@@ -193,13 +194,19 @@ fn cancellation_frees_the_batch_slot() {
     let b = pool.submit(Submission::new(prompt(32, 2), 2));
     let out = expect_done(wait_terminal(&b));
     assert_eq!(out.generated.len(), 2);
-    // A's stream ends with a terminal event, not a silent drop.
+    // A's stream ends with the *distinct* cancellation terminal (not a
+    // Failed): clients and telemetry can tell a hangup from a fault.
     match wait_terminal(&a) {
-        StreamEvent::Failed { error, .. } => assert!(error.contains("cancelled"), "{error}"),
+        StreamEvent::Cancelled { id } => assert_eq!(id, a.id),
         other => panic!("expected A cancelled, got {other:?}"),
     }
     let stats = pool.stats();
     assert!(stats.req_usize("cancelled").unwrap() >= 1);
+    assert_eq!(
+        stats.get("replicas").unwrap().as_arr().unwrap()[0].req_usize("failed").unwrap(),
+        0,
+        "cancellation must not count as a failure"
+    );
     pool.shutdown().expect("shutdown");
 }
 
