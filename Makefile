@@ -10,7 +10,7 @@
 PRESETS ?= test-tiny
 ARTIFACTS_DIR := artifacts
 
-.PHONY: all build test bench bench-smoke bench-baseline bench-serve bench-prefill clippy fmt artifacts clean
+.PHONY: all build test bench bench-smoke bench-baseline bench-serve bench-prefill audit clippy fmt artifacts clean
 
 all: build
 
@@ -52,6 +52,15 @@ bench-serve: build
 # inline does not.
 bench-prefill: build
 	cargo bench --bench prefill_interference
+
+# Concurrency-invariant lint: SAFETY comments on every unsafe, ordering
+# justifications on every explicit Ordering, no lock guards held across
+# blocking calls, no unwrap/expect in hot paths. Runs its seeded-bug
+# self-test first so the linter itself can't silently rot. The python
+# mirror (tools/audit.py) runs the same checks without a toolchain.
+audit:
+	cargo xtask audit --self-test
+	cargo xtask audit
 
 clippy:
 	cargo clippy --workspace --all-targets -- -D warnings

@@ -163,6 +163,8 @@ impl ScoutScheduler {
 
         // Sequential epilogue: commit staged recall, partition, spawn.
         for (s, (seq, sel)) in seqs.iter_mut().zip(sels).enumerate() {
+            // audit: allow(expect): the fan-out above writes every slot
+            // exactly once (one closure per sequence, indexes disjoint).
             let sel = sel.expect("selection computed for every sequence");
             let fetched = seq.resident[layer].commit_staged();
             stats.layers[layer].recall_blocks += fetched;

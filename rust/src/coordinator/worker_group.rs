@@ -114,6 +114,9 @@ impl WorkerGroup {
             }
         }
         while got < expected {
+            // audit: allow(expect): a hung-up worker group means a worker
+            // thread panicked; propagating the panic here is the designed
+            // failure mode (the coordinator cannot make progress anyway).
             let r = self.rx_done.recv().expect("cpu worker group hung up");
             if r.key.1 == layer {
                 out.push(r);
@@ -189,6 +192,9 @@ impl WorkerGroups {
         let g = self.group_of(key.0);
         let group = &mut self.groups[g];
         group.note_spawn(key.1);
+        // audit: allow(expect): send fails only if every worker in the
+        // group is gone (panicked); propagating is the designed failure
+        // mode — see collect().
         group.tx.send(Job { key, q, cache, blocks }).expect("cpu worker group hung up");
     }
 

@@ -108,6 +108,11 @@ impl ShardedKvCache {
     }
 
     pub fn len(&self) -> usize {
+        // ordering: Acquire pairs with the Release stores in
+        // `finish_prefill`/`advance` — a reader that observes length N
+        // also observes the K/V rows for tokens < N, because every row
+        // write happens-before its publishing len store (all layers are
+        // appended, then `advance` bumps len).
         self.len.load(Ordering::Acquire)
     }
 
@@ -176,6 +181,10 @@ impl ShardedKvCache {
 
     /// Finish a prefill load: set length and (re)build all digests.
     pub fn finish_prefill(&self, new_len: usize) {
+        // ordering: Release publishes every `load_prefill_rows` write
+        // that happened-before this call; pairs with the Acquire in
+        // `len()` so concurrent readers snapshotting the new length see
+        // the loaded rows.
         self.len.store(new_len, Ordering::Release);
         let bs = self.spec.block_size;
         let (w, full) = (self.tok_w(), new_len / bs);
@@ -215,6 +224,9 @@ impl ShardedKvCache {
     /// later step), and worker-group reads never consult digests.
     pub fn advance(&self) {
         let len = self.len() + 1;
+        // ordering: Release publishes this step's `append_layer` row
+        // writes (all layers append before the single `advance`); pairs
+        // with the Acquire in `len()`.
         self.len.store(len, Ordering::Release);
         let bs = self.spec.block_size;
         if len % bs == 0 {
@@ -259,6 +271,9 @@ impl ShardedKvCache {
                 KvSeqExport {
                     spec,
                     len: len.into_inner(),
+                    // audit: allow(expect): the loop above writes every
+                    // index in 0..n_layers exactly once (sid + local *
+                    // n_shards enumerates the layer partition).
                     layers: layers.into_iter().map(|l| l.expect("every layer exported")).collect(),
                     copied: false,
                 }

@@ -25,6 +25,11 @@
 //!   paper's published device ratios (PCIe curve, HBM bw, 20x GPU/CPU
 //!   gap) to regenerate the evaluation figures.
 
+// Every pointer dereference / intrinsic call inside an `unsafe fn` must
+// sit in its own `unsafe {}` block with a `// SAFETY:` comment; enforced
+// together with `cargo xtask audit` (see DESIGN.md §Correctness tooling).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

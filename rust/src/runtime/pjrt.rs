@@ -107,6 +107,8 @@ impl Backend for PjrtBackend {
     /// this handle borrows the cached copy.
     fn register_weights(&self, view: TensorView) -> crate::Result<WeightId> {
         let lit = view_to_literal(view)?;
+        // ordering: pure id allocator — uniqueness comes from fetch_add's
+        // RMW atomicity; no other memory is published under this counter.
         let id = self.next_weight_id.fetch_add(1, Ordering::Relaxed);
         self.weights.lock().unwrap().insert(id, lit);
         Ok(WeightId(id))
@@ -164,6 +166,9 @@ impl Backend for PjrtBackend {
 /// Build an f32 literal from a borrowed view (single copy, raw bytes).
 fn view_to_literal(v: TensorView) -> crate::Result<Literal> {
     let data = v.data();
+    // SAFETY: pointer/length come from a live `&[f32]` borrowed for this
+    // scope; f32 -> u8 reinterpretation yields no invalid values,
+    // `size_of_val` gives the exact byte length, and u8 alignment is 1.
     let bytes = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
     };
@@ -188,6 +193,9 @@ pub fn tensor_to_literal(t: &Tensor) -> crate::Result<Literal> {
 
 /// Build an i32 literal (positions, lengths).
 pub fn vec_i32_literal(shape: &[usize], data: &[i32]) -> crate::Result<Literal> {
+    // SAFETY: pointer/length come from a live `&[i32]` borrowed for this
+    // scope; i32 -> u8 reinterpretation yields no invalid values,
+    // `size_of_val` gives the exact byte length, and u8 alignment is 1.
     let bytes = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
     };

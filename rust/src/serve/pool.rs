@@ -215,6 +215,9 @@ impl EnginePool {
             }
             anyhow::bail!("engine pool failed to start: {e}");
         }
+        // audit: allow(expect): the error branch above bails when any
+        // replica failed, so reaching here means every ready_rx reported
+        // Ok and `spec` was set.
         let spec = spec.expect("at least one replica reported ready");
         Ok(Self {
             cfg,
@@ -246,7 +249,13 @@ impl EnginePool {
     }
 
     pub fn is_draining(&self) -> bool {
-        self.draining.load(Ordering::SeqCst)
+        // ordering: Acquire pairs with the Release store in `begin_drain`
+        // (was SeqCst — overstrength flagged by `cargo xtask audit`: no
+        // site relies on a single total order across this flag and any
+        // other atomic). The flag is advisory at admission; the
+        // authoritative gate is the `senders` mutex, whose `take()` in
+        // `begin_drain` makes late submitters see `None` and reject.
+        self.draining.load(Ordering::Acquire)
     }
 
     /// Submit a request. Never blocks and never fails at the call site:
@@ -254,7 +263,11 @@ impl EnginePool {
     /// event on the returned handle, so every client path handles
     /// success and rejection through the same stream.
     pub fn submit(&self, sub: Submission) -> StreamHandle {
-        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        // ordering: pure id allocator — uniqueness needs only fetch_add's
+        // RMW atomicity (was SeqCst — overstrength flagged by `cargo
+        // xtask audit`; nothing is published under the id).
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // ordering: lifetime statistics counter.
         self.pool_tel.submitted.fetch_add(1, Ordering::Relaxed);
         let arrival_us = if sub.arrival_us == 0 { clock::now_us() } else { sub.arrival_us };
         let (tx, rx) = channel::<StreamEvent>();
@@ -273,6 +286,13 @@ impl EnginePool {
         // check + undo) so concurrent submitters cannot all slip past
         // the cap; the owning replica releases the reservation at the
         // request's terminal event.
+        //
+        // ordering: Relaxed is sufficient for the whole reserve/undo
+        // protocol — correctness rests on the RMW total order that every
+        // atomic carries per-object: the fetch_adds of concurrent
+        // submitters serialize, so at most `budget` tokens' worth of
+        // reservations can observe a passing check. No other memory is
+        // published under this counter.
         let cost = sub.cost();
         let inflight = self.pool_tel.inflight_tokens.fetch_add(cost, Ordering::Relaxed);
         if inflight + cost > self.cfg.server.token_budget {
@@ -287,6 +307,7 @@ impl EnginePool {
 
         // Stage-1 placement: a prefill-capable replica.
         let Some(replica) = self.router.pick_prefill(sub.session.as_deref()) else {
+            // ordering: undo of the Relaxed reservation above.
             self.pool_tel.inflight_tokens.fetch_sub(cost, Ordering::Relaxed);
             let reason = "no prefill-capable replica available".to_string();
             return self.reject(id, tx, rx, cancel, RejectCode::Overloaded, reason, 0);
@@ -294,6 +315,7 @@ impl EnginePool {
         let sender = match &*self.senders.lock().unwrap() {
             Some(s) => s[replica].clone(),
             None => {
+                // ordering: undo of the Relaxed reservation above.
                 self.pool_tel.inflight_tokens.fetch_sub(cost, Ordering::Relaxed);
                 let reason = "pool is shut down".to_string();
                 return self.reject(id, tx, rx, cancel, RejectCode::Draining, reason, 0);
@@ -315,6 +337,10 @@ impl EnginePool {
         // Count as queued *before* sending: the replica decrements when
         // the prefill starts, and incrementing afterwards could go
         // negative.
+        //
+        // ordering: queue gauges are Relaxed — the channel send/recv pair
+        // already gives the replica a happens-before edge over these
+        // increments, and gauge readers are advisory (router, stats).
         let t = &self.tel[replica];
         t.queued.fetch_add(1, Ordering::Relaxed);
         t.queued_tokens.fetch_add(cost, Ordering::Relaxed);
@@ -368,7 +394,13 @@ impl EnginePool {
     /// Stop admitting new requests. Live sequences keep decoding, and
     /// in-flight prefills still complete and hand off.
     pub fn begin_drain(&self) {
-        self.draining.store(true, Ordering::SeqCst);
+        // ordering: Release pairs with the Acquire in `is_draining` (was
+        // SeqCst — overstrength flagged by `cargo xtask audit`, see
+        // `is_draining`). The per-replica flags below are Relaxed: they
+        // only steer the router away, and admission correctness is
+        // carried by dropping the senders, which disconnects the
+        // channels (a synchronizing operation on its own).
+        self.draining.store(true, Ordering::Release);
         for t in &self.tel {
             t.draining.store(true, Ordering::Relaxed);
         }
@@ -524,6 +556,10 @@ fn replica_loop(
 ) {
     let ReplicaCtx { cfg, role, router, tel, pool_tel, handoff_txs } = ctx;
     let release = |cost: usize| {
+        // ordering: Relaxed undo of the admission side's Relaxed
+        // reservation — both sides are RMWs on the same atomic, so they
+        // participate in its per-object modification order and the budget
+        // can never under-release (see the reserve protocol in submit()).
         pool_tel.inflight_tokens.fetch_sub(cost, Ordering::Relaxed);
     };
     let stack = match Stack::load(&cfg) {
@@ -564,6 +600,14 @@ fn replica_loop(
         if role == ReplicaRole::Prefill { Some(handoff_txs) } else { None };
 
     loop {
+        // ordering: every telemetry counter/gauge touched in this loop
+        // body is Relaxed on purpose — all are written by this single
+        // replica thread and read by snapshot()/JSON dumps, which
+        // tolerate a torn cut; cross-thread synchronization happens
+        // through the channels and the token-budget RMWs, never through
+        // these statistics. The one flag with a real pairing (`cancel`)
+        // is called out at its site below.
+        //
         // --- Intake: pull admissions while there is room to work on
         // them. Role enforcement is the router's job; anything that
         // lands here is served.
@@ -595,6 +639,9 @@ fn replica_loop(
 
         // --- Cancellation: evict any owned request whose client hung
         // up, wherever it is in the lifecycle.
+        // ordering: Acquire pairs with StreamHandle::request_cancel's
+        // Release store — whatever the cancelling thread wrote before
+        // raising the flag is visible here before we evict and answer.
         let cancelled: Vec<u64> = tracks
             .iter()
             .filter(|(_, t)| t.cancel.load(Ordering::Acquire))
@@ -602,16 +649,22 @@ fn replica_loop(
             .collect();
         for id in cancelled {
             if let Some(pos) = wait_q.iter().position(|j| j.spec.id == id) {
+                // audit: allow(expect): `pos` came from position() on this
+                // same queue with no intervening mutation.
                 let job = wait_q.remove(pos).expect("position is in range");
                 tel.queued.fetch_sub(1, Ordering::Relaxed);
                 tel.queued_tokens.fetch_sub(job.cost, Ordering::Relaxed);
             } else if active.as_ref().is_some_and(|p| p.id() == id) {
+                // audit: allow(expect): is_some_and guard on the same
+                // branch proves `active` is Some.
                 let st = active.take().expect("checked above");
                 let cost = tracks.get(&id).map(|t| t.cost).unwrap_or(0);
                 tel.prefilling.fetch_sub(1, Ordering::Relaxed);
                 tel.prefill_tokens.fetch_sub(cost, Ordering::Relaxed);
                 drop(st);
             } else if let Some(pos) = ready_q.iter().position(|s| s.id == id) {
+                // audit: allow(expect): `pos` came from position() on this
+                // same queue with no intervening mutation.
                 let seq = ready_q.remove(pos).expect("position is in range");
                 tel.live_seqs.fetch_sub(1, Ordering::Relaxed);
                 tel.live_tokens.fetch_sub(
@@ -633,6 +686,8 @@ fn replica_loop(
                 // Kept as pure defense: never double-terminate.
                 continue;
             }
+            // audit: allow(expect): `id` was collected from `tracks` keys
+            // this iteration and nothing between removes entries.
             let t = tracks.remove(&id).expect("cancelled id was tracked");
             release(t.cost);
             tel.cancelled.fetch_add(1, Ordering::Relaxed);
@@ -725,6 +780,8 @@ fn replica_loop(
                 }
                 Ok(true) => {
                     tel.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+                    // audit: allow(expect): this arm only runs inside
+                    // `if let Some(st) = active.as_mut()`.
                     let st = active.take().expect("checked above");
                     let id = st.id();
                     let cost = tracks.get(&id).map(|t| t.cost).unwrap_or(0);
@@ -780,6 +837,8 @@ fn replica_loop(
                     }
                 }
                 Err(e) => {
+                    // audit: allow(expect): this arm only runs inside
+                    // `if let Some(st) = active.as_mut()`.
                     let st = active.take().expect("checked above");
                     let id = st.id();
                     let cost = tracks.get(&id).map(|t| t.cost).unwrap_or(0);
@@ -891,6 +950,8 @@ fn fail_request(
     error: &str,
     release: &impl Fn(usize),
 ) {
+    // ordering: Relaxed statistics counter (single replica-thread writer;
+    // readers snapshot without needing a consistent cut).
     tel.failed.fetch_add(1, Ordering::Relaxed);
     if let Some(t) = tracks.remove(&id) {
         release(t.cost);
@@ -908,6 +969,9 @@ fn dispatch_handoff(
     handoff_txs: Option<&[Sender<HandoffMsg>]>,
     release: &impl Fn(usize),
 ) {
+    // ordering: the handoff counters below are Relaxed statistics; the
+    // sequence payload itself is synchronized by the channel send, not
+    // by these atomics.
     let id = seq.id;
     let Some(track) = tracks.remove(&id) else { return };
     let Some(txs) = handoff_txs else {
@@ -950,6 +1014,9 @@ fn import_handoff(
     tracks: &mut HashMap<u64, Track>,
     ready_q: &mut VecDeque<SeqState>,
 ) {
+    // ordering: handoff gauges/counters are Relaxed statistics; the KV
+    // payload and track state arrived through the channel, which already
+    // provides the happens-before edge from the sending replica.
     let bytes = msg.seq.payload_bytes() as u64;
     tel.handoffs_in.fetch_add(1, Ordering::Relaxed);
     tel.handoff_bytes_in.fetch_add(bytes, Ordering::Relaxed);

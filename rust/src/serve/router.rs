@@ -161,6 +161,9 @@ impl Router {
             Stage::Prefill => self.roles[i].can_prefill(),
             Stage::Decode => self.roles[i].can_decode(),
         };
+        // ordering: advisory routing hint only — a stale read just routes
+        // one more request to a replica that is draining, and admission
+        // is re-checked under the pool's senders mutex.
         let live = |i: usize| !self.replicas[i].draining.load(Ordering::Relaxed);
         // Draining replicas are skipped while any capable live replica
         // exists; accepted work must still land somewhere when the whole
@@ -175,6 +178,8 @@ impl Router {
         }
         Some(match self.policy {
             RoutePolicy::RoundRobin => {
+                // ordering: pure round-robin cursor — fairness needs only
+                // the fetch_add's RMW atomicity, not inter-thread order.
                 eligible[self.rr_next.fetch_add(1, Ordering::Relaxed) % eligible.len()]
             }
             RoutePolicy::LeastLoaded => self.least_loaded(&eligible),

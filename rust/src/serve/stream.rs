@@ -100,6 +100,10 @@ impl StreamHandle {
     ///
     /// [`EnginePool::cancel`]: super::EnginePool::cancel
     pub(crate) fn request_cancel(&self) {
+        // ordering: Release pairs with the replica loop's Acquire load of
+        // this flag — everything the cancelling thread wrote before the
+        // store (e.g. its reason for cancelling) is visible to the
+        // replica when it observes `true` and emits `Cancelled`.
         self.cancel.store(true, Ordering::Release);
     }
 

@@ -68,6 +68,9 @@ impl ReplicaTelemetry {
     /// Reserved (not current-KV) tokens make placement stable under
     /// decode progress.
     pub fn load_tokens(&self) -> usize {
+        // ordering: monotonic gauges read for a routing heuristic — a
+        // stale or torn-across-gauges read only skews placement for one
+        // request; no memory is published under these counters.
         self.queued_tokens.load(Ordering::Relaxed)
             + self.prefill_tokens.load(Ordering::Relaxed)
             + self.live_tokens.load(Ordering::Relaxed)
@@ -75,12 +78,17 @@ impl ReplicaTelemetry {
 
     /// Requests that would sit in front of a new submission.
     pub fn depth(&self) -> usize {
+        // ordering: routing heuristic like `load_tokens` — staleness is
+        // benign, so Relaxed gauge reads suffice.
         self.queued.load(Ordering::Relaxed)
             + self.prefilling.load(Ordering::Relaxed)
             + self.live_seqs.load(Ordering::Relaxed)
     }
 
     pub fn snapshot(&self, replica: usize, role: ReplicaRole, uptime_s: f64) -> Json {
+        // ordering: statistics snapshot — every load here is a Relaxed
+        // read of an independently-updated gauge/counter; the snapshot is
+        // not required to be a consistent cut across them.
         let tokens_out = self.tokens_out.load(Ordering::Relaxed);
         Json::obj(vec![
             ("replica", Json::num(replica as f64)),
@@ -136,10 +144,12 @@ impl PoolTelemetry {
             RejectCode::Overloaded => &self.rejected_overloaded,
             RejectCode::Draining => &self.rejected_draining,
         };
+        // ordering: pure lifetime counter; totals are read by stats only.
         c.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn rejected_total(&self) -> u64 {
+        // ordering: statistics read of independent Relaxed counters.
         self.rejected_invalid.load(Ordering::Relaxed)
             + self.rejected_overloaded.load(Ordering::Relaxed)
             + self.rejected_draining.load(Ordering::Relaxed)
@@ -165,6 +175,9 @@ pub fn pool_stats_json(
     uptime_s: f64,
     draining: bool,
 ) -> Json {
+    // ordering: whole-pool statistics snapshot — all atomic loads below
+    // are Relaxed reads of independent gauges/counters; the report is
+    // advisory and needs no consistent cut (see ReplicaTelemetry docs).
     let mut ttft = Histogram::new();
     let mut queue_wait = Histogram::new();
     let mut handoff = Histogram::new();

@@ -84,6 +84,11 @@ impl Tensor {
 
     /// Raw byte view (for building XLA literals without a copy).
     pub fn as_bytes(&self) -> &[u8] {
+        // SAFETY: the pointer and length come from a live `Vec<f32>`
+        // borrowed for the returned lifetime; f32 -> u8 reinterpretation
+        // cannot produce invalid values (u8 has no invalid bit patterns),
+        // the byte length is exactly `len * size_of::<f32>()`, and u8's
+        // alignment (1) is trivially satisfied.
         unsafe {
             std::slice::from_raw_parts(
                 self.data.as_ptr() as *const u8,

@@ -47,6 +47,9 @@ impl Arena {
                 buf
             }
             None => {
+                // ordering: pure statistics counter — readers only ever
+                // compare totals after joining the threads that bumped it,
+                // so the join's happens-before edge does the ordering.
                 self.grown.fetch_add(1, Ordering::Relaxed);
                 vec![0.0; len]
             }
@@ -57,6 +60,7 @@ impl Arena {
     /// Number of fresh buffer allocations so far. Flat across iterations
     /// == the leased paths run allocation-free at steady state.
     pub fn allocations(&self) -> usize {
+        // ordering: statistics read; see the Relaxed fetch_add in `lease`.
         self.grown.load(Ordering::Relaxed)
     }
 }

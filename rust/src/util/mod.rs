@@ -3,8 +3,10 @@
 //! parser/writer, a seeded PRNG, a tiny bench timer, scoped fork-join
 //! helpers ([`par`]) for the numerics plane, the runtime-dispatched
 //! [`simd`] kernel plane with its [`rope`] frequency table and
-//! zero-alloc [`arena`] scratch pool, and the NaN-aware [`argmax`]
-//! shared by every greedy-sampling path.
+//! zero-alloc [`arena`] scratch pool, the NaN-aware [`argmax`] shared
+//! by every greedy-sampling path, and the [`sched`]
+//! schedule-permutation explorer that model-checks the repo's small
+//! concurrent protocols (the offline stand-in for `loom`).
 
 pub mod arena;
 pub mod argmax;
@@ -14,6 +16,7 @@ pub mod json;
 pub mod par;
 pub mod rng;
 pub mod rope;
+pub mod sched;
 pub mod simd;
 
 pub use argmax::argmax;

@@ -1,0 +1,318 @@
+//! Schedule-permutation harness: exhaustive model checking of small
+//! concurrent protocols under sequential consistency.
+//!
+//! The vendored crate universe has no `loom`, so this is the in-tree
+//! substitute sized to what the repo's protocols actually need: each
+//! "thread" is a fixed list of *atomic steps* (closures over a shared
+//! model state `S`), and [`Explorer::explore`] runs a depth-first search
+//! over **every interleaving** of those steps, checking a user invariant
+//! after each one. The state is `Clone` so branches are independent; a
+//! step that cannot proceed returns [`Step::Blocked`] and its (cloned)
+//! state is discarded, so blocked steps may be written naturally —
+//! partial mutation before bailing out is invisible.
+//!
+//! What this checks — and what it cannot: the search is over *schedules*
+//! of sequentially-consistent atomic steps. It finds ordering bugs in
+//! protocol logic (publish-before-init, lost wakeups, double-release,
+//! deadlock), which is where the serve/kvcache planes' risk lives. It
+//! cannot find weak-memory reorderings *within* one step; those are the
+//! domain of the `// ordering:` justifications enforced by `cargo xtask
+//! audit` and of the TSan CI lane.
+//!
+//! Deadlock is detected structurally: if some thread still has steps
+//! left but every remaining thread is blocked, the schedule that led
+//! there is reported as a [`Violation`] with its full trace.
+
+/// Outcome of attempting one atomic step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// The step executed; the thread's program counter advances.
+    Ran,
+    /// The step cannot proceed under the current state (e.g. a recv on
+    /// an empty channel). The thread stays at the same program counter
+    /// and any mutation the closure made is discarded.
+    Blocked,
+}
+
+/// A counterexample: the exact schedule that broke the protocol.
+#[derive(Debug)]
+pub struct Violation {
+    /// Thread indices in execution order up to the failure.
+    pub schedule: Vec<usize>,
+    /// What went wrong (invariant message, or a deadlock report).
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "schedule {:?}: {}", self.schedule, self.message)
+    }
+}
+
+/// Exploration summary for a passing run.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Stats {
+    /// Complete schedules (all threads ran to completion) explored.
+    pub schedules: usize,
+    /// Total steps executed across all branches.
+    pub steps: usize,
+    /// True if the search stopped at the schedule cap rather than
+    /// exhausting the space — a passing-but-truncated run proves less.
+    pub truncated: bool,
+}
+
+/// One atomic step of a model thread.
+pub type StepFn<S> = Box<dyn Fn(&mut S) -> Step>;
+/// An invariant / final-state check.
+pub type CheckFn<S> = Box<dyn Fn(&S) -> Result<(), String>>;
+
+/// Exhaustive interleaving explorer over threads of atomic steps.
+pub struct Explorer<S: Clone> {
+    threads: Vec<Vec<StepFn<S>>>,
+    invariant: Option<CheckFn<S>>,
+    final_check: Option<CheckFn<S>>,
+    max_schedules: usize,
+}
+
+impl<S: Clone> Default for Explorer<S> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<S: Clone> Explorer<S> {
+    pub fn new() -> Self {
+        // The protocols modeled in-tree stay well under 10^4 schedules;
+        // the cap only guards against an accidentally exponential model.
+        Self { threads: Vec::new(), invariant: None, final_check: None, max_schedules: 1_000_000 }
+    }
+
+    /// Add a thread as an ordered list of atomic steps. Returns the
+    /// thread's index (used in [`Violation::schedule`] traces).
+    pub fn thread(&mut self, steps: Vec<StepFn<S>>) -> usize {
+        self.threads.push(steps);
+        self.threads.len() - 1
+    }
+
+    /// Invariant checked after **every** step of every schedule.
+    pub fn invariant(&mut self, f: impl Fn(&S) -> Result<(), String> + 'static) {
+        self.invariant = Some(Box::new(f));
+    }
+
+    /// Check run once per **complete** schedule (all threads finished).
+    pub fn final_check(&mut self, f: impl Fn(&S) -> Result<(), String> + 'static) {
+        self.final_check = Some(Box::new(f));
+    }
+
+    /// Cap on complete schedules before the search stops (sets
+    /// [`Stats::truncated`]).
+    pub fn max_schedules(&mut self, cap: usize) {
+        self.max_schedules = cap;
+    }
+
+    /// Run the search from `initial`. `Ok(stats)` means every
+    /// interleaving satisfied the invariant and reached completion;
+    /// `Err(violation)` carries the first failing schedule found.
+    pub fn explore(&self, initial: S) -> Result<Stats, Violation> {
+        let mut stats = Stats::default();
+        let mut pcs = vec![0usize; self.threads.len()];
+        let mut trace = Vec::new();
+        self.dfs(&initial, &mut pcs, &mut trace, &mut stats)?;
+        Ok(stats)
+    }
+
+    fn dfs(
+        &self,
+        state: &S,
+        pcs: &mut [usize],
+        trace: &mut Vec<usize>,
+        stats: &mut Stats,
+    ) -> Result<(), Violation> {
+        if stats.schedules >= self.max_schedules {
+            stats.truncated = true;
+            return Ok(());
+        }
+        let pending: Vec<usize> = (0..self.threads.len())
+            .filter(|&t| pcs[t] < self.threads[t].len())
+            .collect();
+        if pending.is_empty() {
+            stats.schedules += 1;
+            if let Some(check) = &self.final_check {
+                if let Err(message) = check(state) {
+                    return Err(Violation { schedule: trace.clone(), message });
+                }
+            }
+            return Ok(());
+        }
+        let mut any_ran = false;
+        for &t in &pending {
+            let mut branch = state.clone();
+            match (self.threads[t][pcs[t]])(&mut branch) {
+                Step::Blocked => continue,
+                Step::Ran => {
+                    any_ran = true;
+                    stats.steps += 1;
+                    trace.push(t);
+                    if let Some(check) = &self.invariant {
+                        if let Err(message) = check(&branch) {
+                            let v = Violation { schedule: trace.clone(), message };
+                            trace.pop();
+                            return Err(v);
+                        }
+                    }
+                    pcs[t] += 1;
+                    let r = self.dfs(&branch, pcs, trace, stats);
+                    pcs[t] -= 1;
+                    trace.pop();
+                    r?;
+                }
+            }
+        }
+        if !any_ran {
+            return Err(Violation {
+                schedule: trace.clone(),
+                message: format!(
+                    "deadlock: threads {pending:?} all blocked with steps remaining"
+                ),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Box a step closure (reads nicer at call sites than `Box::new`).
+pub fn step<S>(f: impl Fn(&mut S) -> Step + 'static) -> StepFn<S> {
+    Box::new(f)
+}
+
+/// Box a step that always runs (for plain mutations).
+pub fn run<S>(f: impl Fn(&mut S) + 'static) -> StepFn<S> {
+    Box::new(move |s| {
+        f(s);
+        Step::Ran
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_all_interleavings() {
+        // Two threads of two steps each: C(4,2) = 6 schedules.
+        let mut ex: Explorer<Vec<u8>> = Explorer::new();
+        ex.thread(vec![run(|s| s.push(b'a')), run(|s| s.push(b'b'))]);
+        ex.thread(vec![run(|s| s.push(b'x')), run(|s| s.push(b'y'))]);
+        let stats = ex.explore(Vec::new()).unwrap();
+        assert_eq!(stats.schedules, 6);
+        assert!(!stats.truncated);
+    }
+
+    #[derive(Clone, Default)]
+    struct PubState {
+        data: u32,
+        published: bool,
+        observed_torn: bool,
+    }
+
+    #[test]
+    fn seeded_publish_before_write_bug_is_caught() {
+        // Writer publishes the flag BEFORE filling the payload — the
+        // classic bug the kvcache len protocol exists to prevent. The
+        // explorer must find the schedule where the reader runs between
+        // the two writer steps.
+        let mut ex: Explorer<PubState> = Explorer::new();
+        ex.thread(vec![run(|s| s.published = true), run(|s| s.data = 7)]);
+        ex.thread(vec![run(|s| {
+            if s.published && s.data != 7 {
+                s.observed_torn = true;
+            }
+        })]);
+        ex.invariant(|s| {
+            if s.observed_torn {
+                Err("reader observed published-but-unwritten payload".into())
+            } else {
+                Ok(())
+            }
+        });
+        let v = ex.explore(PubState::default()).unwrap_err();
+        assert_eq!(v.schedule, vec![0, 1], "minimal counterexample comes first in DFS");
+    }
+
+    #[test]
+    fn correct_write_then_publish_passes() {
+        let mut ex: Explorer<PubState> = Explorer::new();
+        ex.thread(vec![run(|s| s.data = 7), run(|s| s.published = true)]);
+        ex.thread(vec![run(|s| {
+            if s.published && s.data != 7 {
+                s.observed_torn = true;
+            }
+        })]);
+        ex.invariant(|s| {
+            if s.observed_torn {
+                Err("torn read".into())
+            } else {
+                Ok(())
+            }
+        });
+        let stats = ex.explore(PubState::default()).unwrap();
+        assert_eq!(stats.schedules, 3);
+    }
+
+    #[test]
+    fn deadlock_is_reported_with_trace() {
+        // Consumer waits for an item no producer ever sends.
+        let mut ex: Explorer<u32> = Explorer::new();
+        ex.thread(vec![step(|s: &mut u32| if *s > 0 { Step::Ran } else { Step::Blocked })]);
+        ex.thread(vec![run(|_| {})]);
+        let v = ex.explore(0).unwrap_err();
+        assert!(v.message.contains("deadlock"), "{v}");
+        assert_eq!(v.schedule, vec![1], "thread 1 ran; thread 0 then stuck");
+    }
+
+    #[test]
+    fn blocked_steps_retry_and_discard_partial_mutation() {
+        #[derive(Clone, Default)]
+        struct Chan {
+            item: Option<u32>,
+            got: Option<u32>,
+            scratch: u32,
+        }
+        let mut ex: Explorer<Chan> = Explorer::new();
+        ex.thread(vec![run(|s: &mut Chan| s.item = Some(9))]);
+        ex.thread(vec![step(|s: &mut Chan| {
+            // Mutation before blocking must be invisible in schedules
+            // where this step blocks (the branch clone is discarded).
+            s.scratch += 1;
+            match s.item.take() {
+                Some(v) => {
+                    s.got = Some(v);
+                    Step::Ran
+                }
+                None => Step::Blocked,
+            }
+        })]);
+        ex.final_check(|s| {
+            if s.got == Some(9) && s.scratch == 1 {
+                Ok(())
+            } else {
+                Err(format!("got {:?}, scratch {}", s.got, s.scratch))
+            }
+        });
+        let stats = ex.explore(Chan::default()).unwrap();
+        // Only one completing order exists (produce, then consume).
+        assert_eq!(stats.schedules, 1);
+    }
+
+    #[test]
+    fn schedule_cap_truncates_instead_of_hanging() {
+        let mut ex: Explorer<()> = Explorer::new();
+        for _ in 0..6 {
+            ex.thread(vec![run(|_| {}), run(|_| {})]);
+        }
+        ex.max_schedules(100);
+        let stats = ex.explore(()).unwrap();
+        assert!(stats.truncated);
+        assert_eq!(stats.schedules, 100);
+    }
+}

@@ -100,6 +100,8 @@ pub fn dot_with(level: Level, a: &[f32], b: &[f32]) -> f32 {
     match level {
         Level::Portable => dot_portable(a, b),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: the `avx2_available()` guard proves the target-feature
+        // contract of `x86::dot` (AVX2+FMA present) on this machine.
         Level::Avx2 if avx2_available() => unsafe { x86::dot(a, b) },
         Level::Avx2 => dot_portable(a, b),
     }
@@ -125,6 +127,8 @@ pub fn axpy_with(level: Level, a: f32, x: &[f32], y: &mut [f32]) {
     match level {
         Level::Portable => axpy_portable(a, x, y),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: the `avx2_available()` guard proves the target-feature
+        // contract of `x86::axpy` (AVX2+FMA present) on this machine.
         Level::Avx2 if avx2_available() => unsafe { x86::axpy(a, x, y) },
         Level::Avx2 => axpy_portable(a, x, y),
     }
@@ -173,6 +177,8 @@ pub fn scale_with(level: Level, y: &mut [f32], a: f32) {
     match level {
         Level::Portable => scale_portable(y, a),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: the `avx2_available()` guard proves the target-feature
+        // contract of `x86::scale` (AVX2+FMA present) on this machine.
         Level::Avx2 if avx2_available() => unsafe { x86::scale(y, a) },
         Level::Avx2 => scale_portable(y, a),
     }
@@ -195,6 +201,8 @@ pub fn digest_score_with(level: Level, q: &[f32], lo: &[f32], hi: &[f32]) -> f32
     match level {
         Level::Portable => digest_score_portable(q, lo, hi),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: the `avx2_available()` guard proves the target-feature
+        // contract of `x86::digest_score` (AVX2+FMA present).
         Level::Avx2 if avx2_available() => unsafe { x86::digest_score(q, lo, hi) },
         Level::Avx2 => digest_score_portable(q, lo, hi),
     }
@@ -413,81 +421,118 @@ fn softmax_accum_tiled(
 mod x86 {
     use core::arch::x86_64::*;
 
+    // SAFETY: caller guarantees AVX2 is available (all callers are
+    // themselves `target_feature(avx2)` fns reached via the
+    // `avx2_available()` dispatch guard).
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn hsum256(v: __m256) -> f32 {
-        let hi = _mm256_extractf128_ps(v, 1);
-        let lo = _mm256_castps256_ps128(v);
-        let s = _mm_add_ps(lo, hi);
-        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
-        _mm_cvtss_f32(s)
+        // SAFETY: register-only lane shuffles/adds; no memory access.
+        unsafe {
+            let hi = _mm256_extractf128_ps(v, 1);
+            let lo = _mm256_castps256_ps128(v);
+            let s = _mm_add_ps(lo, hi);
+            let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+            let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+            _mm_cvtss_f32(s)
+        }
     }
 
+    // SAFETY: caller guarantees AVX2+FMA are available; the `_with`
+    // dispatchers in the parent module check `avx2_available()` before
+    // selecting this path. `a.len()` must equal `b.len()` (debug-asserted;
+    // both callers pass equal-length slices).
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
         let n = a.len();
         let ap = a.as_ptr();
         let bp = b.as_ptr();
-        let mut acc0 = _mm256_setzero_ps();
-        let mut acc1 = _mm256_setzero_ps();
-        let mut i = 0usize;
-        while i + 16 <= n {
-            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
-            acc1 = _mm256_fmadd_ps(
-                _mm256_loadu_ps(ap.add(i + 8)),
-                _mm256_loadu_ps(bp.add(i + 8)),
-                acc1,
-            );
-            i += 16;
+        // SAFETY: every `ap.add(i)` / `bp.add(i)` access is bounds-guarded
+        // — vector loads by `i + LANES <= n`, scalar tail reads by
+        // `i < n` — and `_mm256_loadu_ps` tolerates unaligned addresses.
+        unsafe {
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 16 <= n {
+                acc0 =
+                    _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+                acc1 = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(ap.add(i + 8)),
+                    _mm256_loadu_ps(bp.add(i + 8)),
+                    acc1,
+                );
+                i += 16;
+            }
+            if i + 8 <= n {
+                acc0 =
+                    _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+                i += 8;
+            }
+            let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+            while i < n {
+                s += *ap.add(i) * *bp.add(i);
+                i += 1;
+            }
+            s
         }
-        if i + 8 <= n {
-            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
-            i += 8;
-        }
-        let mut s = hsum256(_mm256_add_ps(acc0, acc1));
-        while i < n {
-            s += *ap.add(i) * *bp.add(i);
-            i += 1;
-        }
-        s
     }
 
+    // SAFETY: caller guarantees AVX2+FMA are available (dispatch-guarded
+    // by `avx2_available()`); `x.len()` must equal `y.len()`
+    // (debug-asserted; callers slice both from the same row geometry).
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), y.len());
         let n = x.len();
-        let va = _mm256_set1_ps(a);
         let xp = x.as_ptr();
         let yp = y.as_mut_ptr();
-        let mut i = 0usize;
-        while i + 8 <= n {
-            let yv = _mm256_fmadd_ps(va, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
-            _mm256_storeu_ps(yp.add(i), yv);
-            i += 8;
-        }
-        while i < n {
-            *yp.add(i) += a * *xp.add(i);
-            i += 1;
+        // SAFETY: all accesses through `xp.add(i)` / `yp.add(i)` are
+        // bounds-guarded (vector ops by `i + 8 <= n`, scalar tail by
+        // `i < n`); `x` and `y` are distinct slices (`&`/`&mut` aliasing
+        // rules), and unaligned load/store intrinsics are used.
+        unsafe {
+            let va = _mm256_set1_ps(a);
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let yv =
+                    _mm256_fmadd_ps(va, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+                _mm256_storeu_ps(yp.add(i), yv);
+                i += 8;
+            }
+            while i < n {
+                *yp.add(i) += a * *xp.add(i);
+                i += 1;
+            }
         }
     }
 
+    // SAFETY: caller guarantees AVX2+FMA are available (dispatch-guarded
+    // by `avx2_available()`).
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn scale(y: &mut [f32], a: f32) {
         let n = y.len();
-        let va = _mm256_set1_ps(a);
         let yp = y.as_mut_ptr();
-        let mut i = 0usize;
-        while i + 8 <= n {
-            _mm256_storeu_ps(yp.add(i), _mm256_mul_ps(va, _mm256_loadu_ps(yp.add(i))));
-            i += 8;
-        }
-        while i < n {
-            *yp.add(i) *= a;
-            i += 1;
+        // SAFETY: every `yp.add(i)` access is bounds-guarded (vector ops
+        // by `i + 8 <= n`, scalar tail by `i < n`); unaligned
+        // load/store intrinsics are used.
+        unsafe {
+            let va = _mm256_set1_ps(a);
+            let mut i = 0usize;
+            while i + 8 <= n {
+                _mm256_storeu_ps(yp.add(i), _mm256_mul_ps(va, _mm256_loadu_ps(yp.add(i))));
+                i += 8;
+            }
+            while i < n {
+                *yp.add(i) *= a;
+                i += 1;
+            }
         }
     }
 
+    // SAFETY: caller guarantees AVX2+FMA are available (dispatch-guarded
+    // by `avx2_available()`); `q`, `lo`, `hi` must share a length
+    // (debug-asserted; callers pass per-head digest rows of one geometry).
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn digest_score(q: &[f32], lo: &[f32], hi: &[f32]) -> f32 {
         debug_assert_eq!(q.len(), lo.len());
@@ -496,22 +541,27 @@ mod x86 {
         let qp = q.as_ptr();
         let lp = lo.as_ptr();
         let hp = hi.as_ptr();
-        let mut acc = _mm256_setzero_ps();
-        let mut i = 0usize;
-        while i + 8 <= n {
-            let qv = _mm256_loadu_ps(qp.add(i));
-            let a = _mm256_mul_ps(qv, _mm256_loadu_ps(lp.add(i)));
-            let b = _mm256_mul_ps(qv, _mm256_loadu_ps(hp.add(i)));
-            acc = _mm256_add_ps(acc, _mm256_max_ps(a, b));
-            i += 8;
+        // SAFETY: every pointer access is bounds-guarded (vector loads by
+        // `i + 8 <= n`, scalar tail reads by `i < n`) against the shared
+        // length `n`; unaligned load intrinsics are used.
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let qv = _mm256_loadu_ps(qp.add(i));
+                let a = _mm256_mul_ps(qv, _mm256_loadu_ps(lp.add(i)));
+                let b = _mm256_mul_ps(qv, _mm256_loadu_ps(hp.add(i)));
+                acc = _mm256_add_ps(acc, _mm256_max_ps(a, b));
+                i += 8;
+            }
+            let mut s = hsum256(acc);
+            while i < n {
+                let qv = *qp.add(i);
+                s += (qv * *lp.add(i)).max(qv * *hp.add(i));
+                i += 1;
+            }
+            s
         }
-        let mut s = hsum256(acc);
-        while i < n {
-            let qv = *qp.add(i);
-            s += (qv * *lp.add(i)).max(qv * *hp.add(i));
-            i += 1;
-        }
-        s
     }
 }
 

@@ -1,0 +1,204 @@
+//! Concurrency regression suite for the serving plane's channel and
+//! flag disciplines, against the *real* `EnginePool` (the abstract
+//! schedule-exploration of the same protocols lives in
+//! `model_protocols.rs`).
+//!
+//! Pins three contracts:
+//!
+//! 1. **Handoff-channel drop discipline**: decode-role replicas park in
+//!    a blocking `recv` on their handoff channel; the only thing that
+//!    can wake an idle one is the disconnect cascade that starts when
+//!    prefill-role replicas drop their senders at drain. A pool shut
+//!    down with replicas parked like this must join, not hang.
+//! 2. **Cancellation across handoff**: the request's `Arc<AtomicBool>`
+//!    cancel flag travels with its track through the handoff channel,
+//!    so a cancel raised while the sequence migrates prefill→decode is
+//!    observed by whichever replica owns it — exactly one terminal
+//!    event, budget freed, pool still drains.
+//! 3. **Drain under concurrent submitters**: begin_drain racing a
+//!    burst of submissions never strands a client (every handle gets a
+//!    terminal event) and never wedges the join.
+//!
+//! Every blocking wait is bounded so a regression fails the suite
+//! instead of hanging it.
+
+mod common;
+
+use std::time::Duration;
+
+use scoutattention::config::{ReplicaRole, RunConfig};
+use scoutattention::serve::{EnginePool, StreamEvent, StreamHandle, Submission};
+
+const WAIT: Duration = Duration::from_secs(120);
+
+fn pool_cfg() -> RunConfig {
+    RunConfig::for_preset(common::PRESET)
+}
+
+/// Deterministic prompt in test-tiny vocab (256), avoiding pad token 0.
+fn prompt(len: usize, salt: u32) -> Vec<u32> {
+    (0..len as u32).map(|i| 1 + (i * 37 + salt * 13) % 255).collect()
+}
+
+fn wait_terminal(h: &StreamHandle) -> StreamEvent {
+    loop {
+        match h.recv_timeout(WAIT) {
+            Some(StreamEvent::Token { .. }) => continue,
+            Some(ev) => return ev,
+            None => panic!("stream closed without a terminal event"),
+        }
+    }
+}
+
+/// Run a closure on another thread with a deadline: the harness for
+/// asserting "this must not deadlock". `join` on a wedged pool would
+/// hang the suite; this converts the hang into a test failure.
+fn must_finish_within(what: &str, limit: Duration, f: impl FnOnce() + Send + 'static) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(limit) {
+        Ok(()) => {
+            t.join().expect("worker panicked");
+        }
+        Err(_) => panic!("{what}: did not finish within {limit:?} (deadlock?)"),
+    }
+}
+
+/// An idle role-split pool has every decode replica parked in a
+/// blocking handoff `recv` with nothing in flight. Shutdown must wake
+/// them purely via the sender-drop disconnect cascade.
+#[test]
+fn idle_decode_replicas_wake_on_sender_drop() {
+    let mut cfg = pool_cfg();
+    cfg.server.replicas = 3;
+    cfg.server.roles =
+        vec![ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Decode];
+    let pool = EnginePool::start(cfg).expect("pool start");
+    // Give the decode replicas time to reach the parked recv (they park
+    // immediately, but don't let a slow spawn mask a wakeup bug).
+    std::thread::sleep(Duration::from_millis(50));
+    must_finish_within("idle role-split shutdown", WAIT, move || {
+        pool.shutdown().expect("clean join");
+    });
+}
+
+/// Same discipline under load: requests mid-flight through the handoff
+/// plane when the drain starts. Every accepted request must still reach
+/// its terminal event and the join must complete.
+#[test]
+fn drain_with_inflight_handoffs_joins_and_answers_everyone() {
+    let mut cfg = pool_cfg();
+    cfg.server.replicas = 3;
+    cfg.server.roles =
+        vec![ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Decode];
+    cfg.scout.prefill_chunk = 4; // several chunks: wide in-flight window
+    let pool = EnginePool::start(cfg).expect("pool start");
+    let handles: Vec<StreamHandle> = (0..6)
+        .map(|i| pool.submit(Submission::new(prompt(24, i), 4)))
+        .collect();
+    pool.begin_drain();
+    for h in &handles {
+        match wait_terminal(h) {
+            StreamEvent::Done(_) | StreamEvent::Rejected(_) => {}
+            other => panic!("drain must complete or reject, got {other:?}"),
+        }
+    }
+    must_finish_within("drain with in-flight handoffs", WAIT, move || {
+        pool.shutdown().expect("clean join");
+    });
+}
+
+/// The cancel flag is shared state that crosses the handoff channel
+/// inside the track: cancelling at staggered points around the
+/// prefill→decode migration must always yield exactly one terminal
+/// event per request, and the pool must still drain to zero inflight
+/// tokens (every reservation released exactly once).
+#[test]
+fn cancel_is_observed_across_handoff() {
+    let mut cfg = pool_cfg();
+    cfg.server.replicas = 2;
+    cfg.server.roles = vec![ReplicaRole::Prefill, ReplicaRole::Decode];
+    cfg.scout.prefill_chunk = 1; // many chunks: cancels land at many
+                                 // points of the migration window
+    let pool = EnginePool::start(cfg).expect("pool start");
+
+    let n = 8usize;
+    let handles: Vec<StreamHandle> = (0..n)
+        .map(|i| pool.submit(Submission::new(prompt(20, i as u32), 6).streaming()))
+        .collect();
+    // Stagger the cancels so they land before, during, and after the
+    // handoff for different requests.
+    for (i, h) in handles.iter().enumerate() {
+        std::thread::sleep(Duration::from_millis(2 * i as u64));
+        pool.cancel(h);
+    }
+    let mut terminals = 0usize;
+    for h in &handles {
+        match wait_terminal(h) {
+            // Any terminal is legal depending on where the cancel
+            // landed; what is illegal is a second one or none.
+            StreamEvent::Cancelled { .. }
+            | StreamEvent::Done(_)
+            | StreamEvent::Rejected(_) => terminals += 1,
+            StreamEvent::Failed { id, error } => {
+                panic!("request {id} failed instead of cancelling: {error}")
+            }
+            StreamEvent::Token { .. } => unreachable!(),
+        }
+        // The stream must be closed after its terminal: a second
+        // terminal event would mean a double-termination bug.
+        assert!(
+            h.recv_timeout(Duration::from_millis(20)).is_none(),
+            "event after terminal"
+        );
+    }
+    assert_eq!(terminals, n);
+    pool.shutdown().expect("clean join");
+    // All reservations released: the drained pool reports zero inflight.
+    let stats = pool.stats();
+    let inflight = stats.req_usize("inflight_tokens").expect("inflight_tokens in stats");
+    assert_eq!(
+        inflight,
+        0,
+        "cancel across handoff leaked budget: {}",
+        stats.to_string()
+    );
+}
+
+/// begin_drain racing a submission burst from another thread: late
+/// submissions reject (never hang), accepted ones complete, the join
+/// finishes.
+#[test]
+fn drain_racing_submitters_strands_no_client() {
+    let mut cfg = pool_cfg();
+    cfg.server.replicas = 2;
+    let pool = std::sync::Arc::new(EnginePool::start(cfg).expect("pool start"));
+
+    let p2 = pool.clone();
+    let submitter = std::thread::spawn(move || {
+        let mut handles = Vec::new();
+        for i in 0..16 {
+            handles.push(p2.submit(Submission::new(prompt(12, 100 + i), 3)));
+            if i == 4 {
+                // Mid-burst yield widens the race window around drain.
+                std::thread::yield_now();
+            }
+        }
+        handles
+    });
+    pool.begin_drain();
+    let handles = submitter.join().expect("submitter panicked");
+    for h in &handles {
+        match wait_terminal(h) {
+            StreamEvent::Done(_) | StreamEvent::Rejected(_) => {}
+            other => panic!("expected Done or Rejected, got {other:?}"),
+        }
+    }
+    let p3 = pool.clone();
+    must_finish_within("drain racing submitters", WAIT, move || {
+        p3.shutdown().expect("clean join");
+    });
+}

@@ -1,0 +1,381 @@
+//! Schedule-exploring model tests for the repo's three core concurrent
+//! protocols, driven by the in-tree [`sched`] permutation explorer (the
+//! offline stand-in for `loom` — every sequentially-consistent
+//! interleaving of the modeled steps is executed and checked).
+//!
+//! 1. **Double-buffered resident-set refresh** (kvcache::resident):
+//!    driven against the *real* `ResidentSet` — a recall tick staging a
+//!    re-rank concurrently with a decode step must never change the set
+//!    visible to attention except at the commit boundary, and the
+//!    committed set must always be one whole plan, never a blend.
+//! 2. **Sharded-store length publication** (kvcache::store): the
+//!    write-rows-then-Release-len protocol, modeled abstractly; the
+//!    seeded publish-first reversal proves the explorer finds the torn
+//!    read that the real store's Release/Acquire pair prevents.
+//! 3. **Serve-pool handoff + cancellation lifecycle** (serve::pool): a
+//!    request migrating prefill→decode while the client concurrently
+//!    cancels must get exactly one terminal event and exactly one
+//!    budget release on every schedule; the seeded drop-discipline bug
+//!    (source never dropping its handoff sender) must be reported as a
+//!    deadlock.
+//!
+//! [`sched`]: scoutattention::util::sched
+
+use scoutattention::kvcache::ResidentSet;
+use scoutattention::util::sched::{run, step, Explorer, Step};
+
+// ---------------------------------------------------------------------
+// Protocol 1: double-buffered ResidentSet stage/commit (real type).
+// ---------------------------------------------------------------------
+
+#[derive(Clone)]
+struct RecallState {
+    rs: ResidentSet,
+    /// Visible set recorded by the decode thread *before* its commit.
+    pre_commit_view: Option<Vec<usize>>,
+    /// Blocks reported fetched by the commit.
+    fetched: Option<usize>,
+    /// Visible set recorded by the decode thread *after* its commit.
+    post_commit_view: Option<Vec<usize>>,
+}
+
+fn visible(rs: &ResidentSet) -> Vec<usize> {
+    rs.iter().collect()
+}
+
+/// A recall tick staging concurrently with a decode step's
+/// observe→commit→observe never perturbs the pre-commit view, and the
+/// post-commit view is exactly the staged plan iff the stage landed
+/// before the commit — on every interleaving.
+#[test]
+fn staged_recall_is_invisible_until_commit_under_all_schedules() {
+    let initial = {
+        let mut rs = ResidentSet::new(16, 3);
+        rs.refresh(&[0, 1, 2]);
+        RecallState {
+            rs,
+            pre_commit_view: None,
+            fetched: None,
+            post_commit_view: None,
+        }
+    };
+
+    let mut ex: Explorer<RecallState> = Explorer::new();
+    // Recall thread: one asynchronous tick re-ranking to {0, 5, 6}.
+    ex.thread(vec![run(|s: &mut RecallState| {
+        let fetch = s.rs.stage(&[0, 5, 6]);
+        assert_eq!(fetch, 2, "5 and 6 are the PCIe fetches");
+    })]);
+    // Decode thread: observe (attention partition), hit the commit
+    // boundary, observe again.
+    ex.thread(vec![
+        run(|s: &mut RecallState| s.pre_commit_view = Some(visible(&s.rs))),
+        run(|s: &mut RecallState| s.fetched = Some(s.rs.commit_staged())),
+        run(|s: &mut RecallState| s.post_commit_view = Some(visible(&s.rs))),
+    ]);
+    ex.invariant(|s| {
+        // Staging alone must never alter what attention can see.
+        if let Some(v) = &s.pre_commit_view {
+            if s.fetched.is_none() && *v != vec![0, 1, 2] {
+                return Err(format!("pre-commit view perturbed: {v:?}"));
+            }
+        }
+        Ok(())
+    });
+    ex.final_check(|s| {
+        let fetched = s.fetched.unwrap();
+        let post = s.post_commit_view.clone().unwrap();
+        // The commit either saw the staged plan (stage ≤ commit in this
+        // schedule) and flipped wholesale, or saw nothing and was a
+        // no-op. `fetched` must agree with the view — a mismatch means
+        // the timing plane counted I/O the numerics plane didn't get.
+        match (fetched, post.as_slice()) {
+            (2, [0, 5, 6]) | (0, [0, 1, 2]) => Ok(()),
+            other => Err(format!("torn commit: {other:?}")),
+        }
+    });
+    let stats = ex.explore(initial).expect("all schedules hold");
+    // 1-step recall thread into a 3-step decode thread: 4 interleavings.
+    assert_eq!(stats.schedules, 4);
+}
+
+/// Two recall ticks racing one commit: the visible set is always one
+/// whole plan (initial, first ranking, or second ranking), never a
+/// blend of two plans — restaging replaces, it does not merge.
+#[test]
+fn restaging_never_blends_plans_under_all_schedules() {
+    let initial = {
+        let mut rs = ResidentSet::new(16, 2);
+        rs.refresh(&[0, 1]);
+        RecallState {
+            rs,
+            pre_commit_view: None,
+            fetched: None,
+            post_commit_view: None,
+        }
+    };
+    let mut ex: Explorer<RecallState> = Explorer::new();
+    ex.thread(vec![
+        run(|s: &mut RecallState| {
+            s.rs.stage(&[2, 3]);
+        }),
+        run(|s: &mut RecallState| {
+            s.rs.stage(&[0, 4]);
+        }),
+    ]);
+    ex.thread(vec![run(|s: &mut RecallState| {
+        s.fetched = Some(s.rs.commit_staged());
+    })]);
+    ex.invariant(|s| {
+        let v = visible(&s.rs);
+        match v.as_slice() {
+            [0, 1] | [2, 3] | [0, 4] => Ok(()),
+            blend => Err(format!("blended resident set {blend:?}")),
+        }
+    });
+    let stats = ex.explore(initial).expect("all schedules hold");
+    assert_eq!(stats.schedules, 3);
+}
+
+// ---------------------------------------------------------------------
+// Protocol 2: sharded-store length publication (abstract model).
+// ---------------------------------------------------------------------
+
+/// Abstraction of `kvcache::store`'s decode-visibility protocol: row
+/// payloads are written first, then `len` is published with a Release
+/// store; readers Acquire-load `len` and touch only rows `< len`.
+#[derive(Clone, Default)]
+struct LenState {
+    /// Rows whose K/V payload writes have completed.
+    rows_written: usize,
+    /// The published length (the Acquire/Release atomic in the real
+    /// store).
+    len: usize,
+    /// Set when a reader dereferenced a row the writer had not filled.
+    torn_read: bool,
+}
+
+fn reader_steps(ex: &mut Explorer<LenState>) {
+    ex.thread(vec![run(|s: &mut LenState| {
+        // One atomic model step = Acquire-load len, then read rows < len
+        // (in the real store the Acquire edge makes those rows' payload
+        // writes visible — under SC the model just checks the count).
+        if s.len > s.rows_written {
+            s.torn_read = true;
+        }
+    })]);
+}
+
+fn torn_read_invariant(ex: &mut Explorer<LenState>) {
+    ex.invariant(|s| {
+        if s.torn_read {
+            Err(format!(
+                "reader observed len {} with only {} rows written",
+                s.len, s.rows_written
+            ))
+        } else {
+            Ok(())
+        }
+    });
+}
+
+/// The real protocol (write rows, then publish len) holds on every
+/// interleaving of a two-row append against a concurrent reader.
+#[test]
+fn write_then_publish_len_holds_under_all_schedules() {
+    let mut ex: Explorer<LenState> = Explorer::new();
+    ex.thread(vec![
+        run(|s: &mut LenState| s.rows_written = 1),
+        run(|s: &mut LenState| s.rows_written = 2),
+        run(|s: &mut LenState| s.len = 2),
+    ]);
+    reader_steps(&mut ex);
+    torn_read_invariant(&mut ex);
+    let stats = ex.explore(LenState::default()).expect("protocol holds");
+    assert_eq!(stats.schedules, 4);
+}
+
+/// Seeded reversal: publishing len before the payload writes (what the
+/// store would do if `advance` stored `len` Relaxed-early, or stored it
+/// before the row copies) is caught, with the minimal counterexample
+/// schedule reported.
+#[test]
+fn publish_before_write_reversal_is_caught() {
+    let mut ex: Explorer<LenState> = Explorer::new();
+    ex.thread(vec![
+        run(|s: &mut LenState| s.len = 2), // BUG: published first
+        run(|s: &mut LenState| s.rows_written = 1),
+        run(|s: &mut LenState| s.rows_written = 2),
+    ]);
+    reader_steps(&mut ex);
+    torn_read_invariant(&mut ex);
+    let v = ex.explore(LenState::default()).expect_err("reversal must be caught");
+    assert_eq!(
+        v.schedule,
+        vec![0, 0, 1],
+        "first counterexample in DFS order: publish, one row written, then the reader"
+    );
+    assert!(v.message.contains("len 2"), "{v}");
+}
+
+// ---------------------------------------------------------------------
+// Protocol 3: serve-pool handoff + cancellation lifecycle.
+// ---------------------------------------------------------------------
+
+/// Where the request's track (events sender + budget reservation) lives.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Loc {
+    /// Tracked by the prefill-role source replica.
+    Source,
+    /// In flight on the handoff channel.
+    Channel,
+    /// Tracked by the decode-role destination replica.
+    Dest,
+    /// Terminated — track removed, client answered.
+    Gone,
+}
+
+#[derive(Clone)]
+struct HandoffState {
+    loc: Loc,
+    /// The shared `Arc<AtomicBool>` cancel flag (travels with the track).
+    cancel: bool,
+    /// Terminal events emitted to the client (must end at exactly 1).
+    terminals: usize,
+    /// Budget releases (must end at exactly 1 — double release corrupts
+    /// the pool token budget; zero leaks it).
+    releases: usize,
+    /// Handoff senders still held by the source replica.
+    sender_alive: bool,
+}
+
+fn handoff_initial() -> HandoffState {
+    HandoffState {
+        loc: Loc::Source,
+        cancel: false,
+        terminals: 0,
+        releases: 0,
+        sender_alive: true,
+    }
+}
+
+fn lifecycle_invariants(ex: &mut Explorer<HandoffState>) {
+    ex.invariant(|s| {
+        if s.terminals > 1 {
+            return Err("client answered twice".into());
+        }
+        if s.releases > 1 {
+            return Err("budget reservation released twice".into());
+        }
+        if s.loc == Loc::Gone && s.terminals != s.releases {
+            return Err(format!(
+                "terminated with terminals {} != releases {}",
+                s.terminals, s.releases
+            ));
+        }
+        Ok(())
+    });
+    ex.final_check(|s| {
+        if s.loc != Loc::Gone {
+            return Err(format!("request stranded at {:?}", s.loc));
+        }
+        if s.terminals != 1 || s.releases != 1 {
+            return Err(format!(
+                "lifecycle ended with terminals {} releases {}",
+                s.terminals, s.releases
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The full lifecycle — source checks cancel then hands off, dest
+/// imports then checks cancel then finishes, client cancels at an
+/// arbitrary point — yields exactly one terminal event and exactly one
+/// budget release on EVERY schedule, and the source's sender drop lets
+/// the blocked destination terminate (no deadlock in any interleaving).
+#[test]
+fn handoff_cancel_lifecycle_holds_under_all_schedules() {
+    let mut ex: Explorer<HandoffState> = Explorer::new();
+
+    // Client thread: raise the shared cancel flag (at any point).
+    ex.thread(vec![run(|s: &mut HandoffState| s.cancel = true)]);
+
+    // Source (prefill-role) replica: the pool.rs eviction sweep runs
+    // before the routing step, so cancel-while-owned terminates here;
+    // otherwise the track moves onto the channel. Either way the
+    // replica then drops its handoff senders (drain discipline).
+    ex.thread(vec![
+        run(|s: &mut HandoffState| {
+            if s.loc == Loc::Source {
+                if s.cancel {
+                    s.terminals += 1; // Cancelled
+                    s.releases += 1;
+                    s.loc = Loc::Gone;
+                } else {
+                    s.loc = Loc::Channel; // dispatch_handoff
+                }
+            }
+        }),
+        run(|s: &mut HandoffState| s.sender_alive = false),
+    ]);
+
+    // Destination (decode-role) replica: blocking recv on the handoff
+    // channel — wakes for a message OR for the disconnect cascade; then
+    // its own cancel sweep / completion path.
+    ex.thread(vec![
+        step(|s: &mut HandoffState| {
+            if s.loc == Loc::Channel {
+                s.loc = Loc::Dest; // import_handoff
+                Step::Ran
+            } else if !s.sender_alive {
+                Step::Ran // recv -> Disconnected: wake, nothing to import
+            } else {
+                Step::Blocked // parked in recv
+            }
+        }),
+        run(|s: &mut HandoffState| {
+            if s.loc == Loc::Dest {
+                // The cancel flag traveled with the track across the
+                // channel: the dest's sweep observes the same flag the
+                // client raised.
+                s.terminals += 1; // Cancelled or Done
+                s.releases += 1;
+                s.loc = Loc::Gone;
+            }
+        }),
+    ]);
+
+    lifecycle_invariants(&mut ex);
+    let stats = ex.explore(handoff_initial()).expect("lifecycle holds");
+    assert!(stats.schedules > 1, "the race must actually branch");
+}
+
+/// Seeded drop-discipline bug: if the source replica never drops its
+/// handoff sender after routing elsewhere (here: after terminating the
+/// request locally), a decode replica parked in `recv` can never wake —
+/// the explorer must report the deadlock schedule.
+#[test]
+fn missing_sender_drop_is_reported_as_deadlock() {
+    let mut ex: Explorer<HandoffState> = Explorer::new();
+    // Source terminates the request locally and — the seeded bug —
+    // keeps its sender forever.
+    ex.thread(vec![run(|s: &mut HandoffState| {
+        s.terminals += 1;
+        s.releases += 1;
+        s.loc = Loc::Gone;
+    })]);
+    // Destination parked in a blocking handoff recv.
+    ex.thread(vec![step(|s: &mut HandoffState| {
+        if s.loc == Loc::Channel {
+            s.loc = Loc::Dest;
+            Step::Ran
+        } else if !s.sender_alive {
+            Step::Ran
+        } else {
+            Step::Blocked
+        }
+    })]);
+    let v = ex.explore(handoff_initial()).expect_err("must deadlock");
+    assert!(v.message.contains("deadlock"), "{v}");
+}

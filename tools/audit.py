@@ -1,0 +1,545 @@
+#!/usr/bin/env python3
+"""Reference mirror of `cargo xtask audit` (see xtask/src/).
+
+The xtask crate is the canonical implementation — CI runs it. This
+mirror exists so the audit can also run in environments without a Rust
+toolchain (the offline authoring container, pre-commit hooks on minimal
+machines). Rule semantics are kept line-for-line equivalent with
+xtask/src/{scan,audit}.rs; `--self-test` runs the same fixture table.
+
+Usage: tools/audit.py [--root DIR] [--self-test]
+Exit: 0 clean, 1 violations, 2 usage/IO error.
+"""
+
+import os
+import sys
+
+ORDERING_VARIANTS = {"Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"}
+BLOCKING_CALLS = [".send(", ".try_send(", ".execute(", "export_seq(", "import_seq("]
+GUARD_CALLS = [".lock()", ".read()", ".write()", ".layer("]
+POISON_IDIOMS = (".lock()", ".read()", ".write()", ".into_inner()")
+
+
+def is_ident(ch):
+    return ch.isalnum() or ch == "_"
+
+
+class Source:
+    """Masked view of a Rust source file (strings/comments blanked)."""
+
+    def __init__(self, path, text):
+        self.path = path
+        self.text = text
+        self._mask()
+        self._depth_and_lines()
+        self._find_test_spans()
+
+    # -- pass 1: masking ------------------------------------------------
+    def _mask(self):
+        t = self.text
+        n = len(t)
+        masked = list(t)
+        comments = []  # (line, pos, text, trailing)
+        line = 1
+        line_has_code = False
+        i = 0
+        while i < n:
+            c = t[i]
+            if c == "\n":
+                line += 1
+                line_has_code = False
+                i += 1
+            elif c == "/" and t[i + 1 : i + 2] == "/":
+                start = i
+                while i < n and t[i] != "\n":
+                    masked[i] = " "
+                    i += 1
+                comments.append((line, start, t[start:i], line_has_code))
+            elif c == "/" and t[i + 1 : i + 2] == "*":
+                start, start_line, trailing = i, line, line_has_code
+                nest = 1
+                masked[i] = masked[i + 1] = " "
+                i += 2
+                while i < n and nest > 0:
+                    if t[i : i + 2] == "/*":
+                        nest += 1
+                        masked[i] = masked[i + 1] = " "
+                        i += 2
+                    elif t[i : i + 2] == "*/":
+                        nest -= 1
+                        masked[i] = masked[i + 1] = " "
+                        i += 2
+                    else:
+                        if t[i] == "\n":
+                            line += 1
+                        else:
+                            masked[i] = " "
+                        i += 1
+                comments.append((start_line, start, t[start:i], trailing))
+            elif c == '"':
+                line_has_code = True
+                masked[i] = " "
+                i += 1
+                while i < n:
+                    if t[i] == "\\" and i + 1 < n:
+                        masked[i] = " "
+                        if t[i + 1] != "\n":
+                            masked[i + 1] = " "
+                        else:
+                            line += 1
+                        i += 2
+                    elif t[i] == '"':
+                        masked[i] = " "
+                        i += 1
+                        break
+                    else:
+                        if t[i] == "\n":
+                            line += 1
+                        else:
+                            masked[i] = " "
+                        i += 1
+            elif c == "r" and self._raw_hashes(t, i) is not None:
+                line_has_code = True
+                hashes = self._raw_hashes(t, i)
+                open_len = 1 + hashes + 1
+                for k in range(open_len):
+                    masked[i + k] = " "
+                i += open_len
+                close = '"' + "#" * hashes
+                while i < n:
+                    if t[i : i + len(close)] == close:
+                        for k in range(len(close)):
+                            masked[i + k] = " "
+                        i += len(close)
+                        break
+                    if t[i] == "\n":
+                        line += 1
+                    else:
+                        masked[i] = " "
+                    i += 1
+            elif c == "'":
+                line_has_code = True
+                if t[i + 1 : i + 2] == "\\":
+                    masked[i] = " "
+                    i += 1
+                    while i < n and t[i] != "'":
+                        masked[i] = " "
+                        i += 1
+                    if i < n:
+                        masked[i] = " "
+                        i += 1
+                elif t[i + 2 : i + 3] == "'" and t[i + 1 : i + 2] != "'":
+                    masked[i] = masked[i + 1] = masked[i + 2] = " "
+                    i += 3
+                else:
+                    i += 1  # lifetime
+            else:
+                if c not in " \t\r":
+                    line_has_code = True
+                i += 1
+        self.masked = "".join(masked)
+        self.comments = comments
+
+    @staticmethod
+    def _raw_hashes(t, i):
+        if i > 0 and is_ident(t[i - 1]):
+            return None
+        j = i + 1
+        hashes = 0
+        while j < len(t) and t[j] == "#":
+            hashes += 1
+            j += 1
+        return hashes if j < len(t) and t[j] == '"' else None
+
+    # -- pass 2: depth + line starts ------------------------------------
+    def _depth_and_lines(self):
+        self.line_starts = [0]
+        depth = []
+        cur = 0
+        for j, b in enumerate(self.masked):
+            depth.append(cur)
+            if b == "\n":
+                self.line_starts.append(j + 1)
+            elif b == "{":
+                cur += 1
+            elif b == "}":
+                cur = max(0, cur - 1)
+        depth.append(cur)
+        self.depth = depth
+
+    def line_of(self, pos):
+        import bisect
+
+        return bisect.bisect_right(self.line_starts, pos)
+
+    def masked_line(self, line):
+        start = self.line_starts[line - 1]
+        end = (
+            self.line_starts[line] - 1
+            if line < len(self.line_starts)
+            else len(self.masked)
+        )
+        return self.masked[start : max(end, start)]
+
+    def num_lines(self):
+        return len(self.line_starts)
+
+    def in_test(self, pos):
+        return any(s <= pos < e for s, e in self.test_spans)
+
+    def block_end(self, pos):
+        d = self.depth[pos]
+        for j in range(pos + 1, len(self.depth)):
+            if self.depth[j] < d:
+                return j
+        return len(self.text)
+
+    def annotated(self, site_line, pred):
+        if any(pred(c[2]) for c in self.comments if c[0] == site_line):
+            return True
+        l = site_line
+        while l > 1:
+            l -= 1
+            code = self.masked_line(l).strip()
+            line_comments = [c for c in self.comments if c[0] == l]
+            if not code and line_comments:
+                if any(pred(c[2]) for c in line_comments):
+                    return True
+                continue
+            if code.startswith("#[") or code.startswith("#!["):
+                continue
+            return False
+        return False
+
+    def _find_test_spans(self):
+        spans = []
+        needle = "#[cfg(test)]"
+        frm = 0
+        while True:
+            attr = self.masked.find(needle, frm)
+            if attr < 0:
+                break
+            frm = attr + len(needle)
+            brace = self.masked.find("{", attr + len(needle))
+            if brace < 0:
+                continue
+            between = self.masked[attr + len(needle) : brace]
+            if "mod" not in between.split():
+                continue
+            d = self.depth[brace]
+            end = len(self.text)
+            for j in range(brace + 1, len(self.depth)):
+                if self.depth[j] == d:
+                    end = j
+                    break
+            spans.append((attr, end))
+            frm = end
+        self.test_spans = spans
+
+
+def word_positions(hay, word):
+    out = []
+    frm = 0
+    while True:
+        pos = hay.find(word, frm)
+        if pos < 0:
+            return out
+        frm = pos + len(word)
+        before_ok = pos == 0 or not is_ident(hay[pos - 1])
+        after = pos + len(word)
+        after_ok = after >= len(hay) or not is_ident(hay[after])
+        if before_ok and after_ok:
+            out.append(pos)
+
+
+def in_guarded_dirs(path):
+    return any(d in path for d in ("coordinator/", "kvcache/", "serve/"))
+
+
+def in_hot_path(path):
+    return in_guarded_dirs(path) or path.endswith(
+        ("tensor.rs", "util/simd.rs", "util/arena.rs", "util/par.rs")
+    )
+
+
+def check_unsafe(src, out):
+    for pos in word_positions(src.masked, "unsafe"):
+        if src.in_test(pos):
+            continue
+        line = src.line_of(pos)
+        if not src.annotated(line, lambda c: "SAFETY:" in c or "# Safety" in c):
+            out.append((src.path, line, "unsafe-safety", "`unsafe` without `// SAFETY:`"))
+
+
+def check_ordering(src, out):
+    intervals = [
+        (c[1], src.block_end(c[1]), c[0])
+        for c in src.comments
+        if "ordering:" in c[2].lower()
+    ]
+    frm = 0
+    while True:
+        pos = src.masked.find("Ordering::", frm)
+        if pos < 0:
+            return
+        frm = pos + len("Ordering::")
+        rest = src.masked[pos + len("Ordering::") :]
+        variant = ""
+        for ch in rest:
+            if ch.isalnum():
+                variant += ch
+            else:
+                break
+        if variant not in ORDERING_VARIANTS or src.in_test(pos):
+            continue
+        line = src.line_of(pos)
+        covered = any(
+            cline == line or (start < pos < end) for start, end, cline in intervals
+        )
+        if not covered:
+            out.append(
+                (src.path, line, "ordering-note",
+                 f"Ordering::{variant} without `// ordering:` justification")
+            )
+
+
+def guard_binding(content):
+    lets = word_positions(content, "let")
+    if not lets:
+        return None
+    let_pos = lets[0]
+    rest = content[let_pos + 3 :].lstrip()
+    if rest.startswith("mut "):
+        rest = rest[4:].lstrip()
+    name = ""
+    for ch in rest:
+        if is_ident(ch):
+            name += ch
+        else:
+            break
+    if not name:
+        return None
+    after_name = rest[len(name) :].lstrip()
+    if not after_name.startswith("="):
+        return None
+    rhs = after_name[1:]
+    call_positions = [rhs.find(c) for c in GUARD_CALLS if rhs.find(c) >= 0]
+    if not call_positions:
+        return None
+    prefix = rhs[: min(call_positions)]
+    for kw in ("match", "if", "loop", "while"):
+        if word_positions(prefix, kw):
+            return None
+    return name, let_pos
+
+
+def check_lock_across(src, out):
+    guards = []  # (name, depth, line)
+    for line in range(1, src.num_lines() + 1):
+        start = src.line_starts[line - 1]
+        if src.in_test(start):
+            continue
+        content = src.masked_line(line)
+
+        for dpos in word_positions(content, "drop"):
+            rest = content[dpos + 4 :]
+            if rest.startswith("("):
+                name = ""
+                for ch in rest[1:]:
+                    if is_ident(ch):
+                        name += ch
+                    else:
+                        break
+                guards = [g for g in guards if g[0] != name]
+
+        for call in BLOCKING_CALLS:
+            cfrm = 0
+            while True:
+                cpos = content.find(call, cfrm)
+                if cpos < 0:
+                    break
+                cfrm = cpos + len(call)
+                if not call.startswith(".") and cpos > 0 and is_ident(content[cpos - 1]):
+                    continue
+                cur_depth = src.depth[start + cpos]
+                for g in guards:
+                    if cur_depth >= g[1]:
+                        if not src.annotated(
+                            line, lambda c: "audit: allow(lock_across" in c
+                        ):
+                            out.append(
+                                (src.path, line, "lock-across",
+                                 f"blocking call `{call.strip('.(')}` while guard "
+                                 f"`{g[0]}` (line {g[2]}) is live")
+                            )
+
+        gb = guard_binding(content)
+        if gb:
+            name, let_pos = gb
+            guards = [g for g in guards if g[0] != name]
+            guards.append((name, src.depth[start + let_pos], line))
+
+        eol = (
+            src.line_starts[line] if line < len(src.line_starts) else len(src.masked)
+        )
+        end_depth = src.depth[min(eol, len(src.depth) - 1)]
+        guards = [g for g in guards if g[1] <= end_depth]
+
+
+def check_unwrap(src, out):
+    for needle in (".unwrap()", ".expect("):
+        frm = 0
+        while True:
+            pos = src.masked.find(needle, frm)
+            if pos < 0:
+                break
+            frm = pos + len(needle)
+            if src.in_test(pos):
+                continue
+            before = src.masked[:pos].rstrip()
+            if before.endswith(POISON_IDIOMS):
+                continue
+            line = src.line_of(pos)
+            if not src.annotated(
+                line,
+                lambda c: "audit: allow(unwrap" in c or "audit: allow(expect" in c,
+            ):
+                out.append(
+                    (src.path, line, "unwrap-hot",
+                     f"`{needle.strip('.(')}` in a hot-path module")
+                )
+
+
+def check_lib_attrs(src, out):
+    if src.path.endswith("rust/src/lib.rs") and (
+        "#![deny(unsafe_op_in_unsafe_fn)]" not in src.masked
+    ):
+        out.append((src.path, 1, "deny-attr",
+                    "crate root must carry #![deny(unsafe_op_in_unsafe_fn)]"))
+
+
+def audit_source(src):
+    out = []
+    check_unsafe(src, out)
+    check_ordering(src, out)
+    if in_guarded_dirs(src.path):
+        check_lock_across(src, out)
+    if in_hot_path(src.path):
+        check_unwrap(src, out)
+    out.sort(key=lambda v: v[1])
+    return out
+
+
+# -- self-test fixtures (mirrors xtask/src/selftest.rs) -----------------
+
+FIXTURES = [
+    ("bare_unsafe_block_fails", "rust/src/util/x.rs",
+     "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n", ["unsafe-safety"]),
+    ("commented_unsafe_block_passes", "rust/src/util/x.rs",
+     "pub fn f(p: *const u8) -> u8 {\n    // SAFETY: caller contract\n    unsafe { *p }\n}\n", []),
+    ("safety_above_target_feature_passes", "rust/src/util/x.rs",
+     "// SAFETY: caller checks avx2\n#[target_feature(enable = \"avx2\")]\nunsafe fn f() {}\n", []),
+    ("unannotated_relaxed_fails", "rust/src/util/x.rs",
+     "use std::sync::atomic::{AtomicUsize, Ordering};\npub fn f(a: &AtomicUsize) -> usize {\n    a.load(Ordering::Relaxed)\n}\n", ["ordering-note"]),
+    ("trailing_ordering_comment_passes", "rust/src/util/x.rs",
+     "use std::sync::atomic::{AtomicUsize, Ordering};\npub fn f(a: &AtomicUsize) -> usize {\n    a.load(Ordering::Relaxed) // ordering: pure counter\n}\n", []),
+    ("block_scoped_ordering_comment_covers_cluster", "rust/src/util/x.rs",
+     "use std::sync::atomic::{AtomicUsize, Ordering};\npub fn f(a: &AtomicUsize) -> usize {\n    // ordering: both loads are monotonic gauges\n    let x = a.load(Ordering::Relaxed);\n    x + a.load(Ordering::Relaxed)\n}\n", []),
+    ("ordering_comment_does_not_leak_past_block", "rust/src/util/x.rs",
+     "use std::sync::atomic::{AtomicUsize, Ordering};\npub fn f(a: &AtomicUsize) -> usize {\n    // ordering: covers this fn only\n    a.load(Ordering::Relaxed)\n}\npub fn g(a: &AtomicUsize) -> usize {\n    a.load(Ordering::Relaxed)\n}\n", ["ordering-note"]),
+    ("seqcst_needs_note_too", "rust/src/util/x.rs",
+     "use std::sync::atomic::{AtomicUsize, Ordering};\npub fn f(a: &AtomicUsize) -> usize {\n    a.load(Ordering::SeqCst)\n}\n", ["ordering-note"]),
+    ("cmp_ordering_is_not_atomic", "rust/src/util/x.rs",
+     "use std::cmp::Ordering;\npub fn f(a: i32) -> Ordering {\n    if a < 0 { Ordering::Less } else { Ordering::Greater }\n}\n", []),
+    ("lock_across_send_fails", "rust/src/serve/x.rs",
+     "pub fn f(m: &std::sync::Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {\n    let g = m.lock().unwrap();\n    tx.send(*g).ok();\n}\n", ["lock-across"]),
+    ("drop_before_send_passes", "rust/src/serve/x.rs",
+     "pub fn f(m: &std::sync::Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {\n    let g = m.lock().unwrap();\n    let v = *g;\n    drop(g);\n    tx.send(v).ok();\n}\n", []),
+    ("scope_before_send_passes", "rust/src/serve/x.rs",
+     "pub fn f(m: &std::sync::Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {\n    let v = {\n        let g = m.lock().unwrap();\n        *g\n    };\n    tx.send(v).ok();\n}\n", []),
+    ("view_guard_across_export_fails", "rust/src/kvcache/x.rs",
+     "pub fn f(store: &crate::kvcache::ShardedKvCache) {\n    let view = store.layer(0);\n    store.export_seq(7);\n}\n", ["lock-across"]),
+    ("scrutinee_temporary_not_tracked", "rust/src/coordinator/x.rs",
+     "pub fn f(rx: &std::sync::Mutex<std::sync::mpsc::Receiver<u32>>, tx: &std::sync::mpsc::Sender<u32>) {\n    let job = match rx.lock().unwrap().recv() { Ok(j) => j, Err(_) => return };\n    tx.send(job).ok();\n}\n", []),
+    ("lock_across_outside_guarded_dirs_ignored", "rust/src/runtime/x.rs",
+     "pub fn f(m: &std::sync::Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {\n    let g = m.lock().unwrap();\n    tx.send(*g).ok();\n}\n", []),
+    ("hot_path_unwrap_fails", "rust/src/serve/x.rs",
+     "pub fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n", ["unwrap-hot"]),
+    ("hot_path_expect_fails", "rust/src/kvcache/x.rs",
+     "pub fn f(v: Option<u32>) -> u32 {\n    v.expect(\"always set\")\n}\n", ["unwrap-hot"]),
+    ("poison_idiom_allowed", "rust/src/serve/x.rs",
+     "pub fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n", []),
+    ("annotated_expect_allowed", "rust/src/serve/x.rs",
+     "pub fn f(v: Option<u32>) -> u32 {\n    // audit: allow(expect): populated by constructor\n    v.expect(\"set in new()\")\n}\n", []),
+    ("cfg_test_mod_exempt", "rust/src/serve/x.rs",
+     "pub fn ok() {}\n#[cfg(test)]\nmod tests {\n    use std::sync::atomic::{AtomicUsize, Ordering};\n    fn f(a: &AtomicUsize, v: Option<u32>) -> u32 {\n        a.load(Ordering::SeqCst);\n        unsafe { std::hint::unreachable_unchecked() };\n        v.unwrap()\n    }\n}\n", []),
+    ("string_and_comment_tokens_ignored", "rust/src/serve/x.rs",
+     "// this comment mentions unsafe and Ordering::Relaxed\npub fn f() -> &'static str {\n    \"unsafe { Ordering::Relaxed }.unwrap()\"\n}\n", []),
+]
+
+
+def run_fixtures():
+    failures = []
+    for name, path, source, expect in FIXTURES:
+        got = [v[2] for v in audit_source(Source(path, source))]
+        if got != expect:
+            failures.append(f"{name}: expected {expect}, got {got}")
+    return failures
+
+
+def main(argv):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    self_test = False
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--root":
+            i += 1
+            root = argv[i]
+        elif argv[i] == "--self-test":
+            self_test = True
+        else:
+            print(f"unknown argument: {argv[i]}", file=sys.stderr)
+            return 2
+        i += 1
+
+    if self_test:
+        failures = run_fixtures()
+        if failures:
+            for f in failures:
+                print(f"audit self-test FAIL: {f}", file=sys.stderr)
+            return 1
+        print(f"audit self-test: {len(FIXTURES)} fixtures passed")
+        return 0
+
+    files = []
+    for sub in ("rust/src", "xtask/src"):
+        d = os.path.join(root, sub)
+        if not os.path.isdir(d):
+            print(f"audit: missing source dir {d}", file=sys.stderr)
+            return 2
+        for dirpath, _, names in os.walk(d):
+            for nm in sorted(names):
+                if nm.endswith(".rs"):
+                    files.append(os.path.join(dirpath, nm))
+    files.sort()
+
+    violations = []
+    for path in files:
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        rel = os.path.relpath(path, root).replace("\\", "/")
+        src = Source(rel, text)
+        violations.extend(audit_source(src))
+        check_lib_attrs(src, violations)
+
+    if not violations:
+        print(f"audit: {len(files)} files clean")
+        return 0
+    for p, line, rule, msg in violations:
+        print(f"{p}:{line}: [{rule}] {msg}")
+    print(f"audit: {len(violations)} violation(s) across {len(files)} files")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

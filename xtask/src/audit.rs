@@ -1,0 +1,329 @@
+//! The audit rules: repo-wide concurrency/correctness invariants.
+//!
+//! Four rules, all operating on the masked view built by [`crate::scan`]:
+//!
+//! 1. **unsafe-safety** — every `unsafe` keyword (block, fn, impl, trait)
+//!    carries a `// SAFETY:` comment on its line or in the contiguous
+//!    comment/attribute block above it (doc `# Safety` sections count).
+//! 2. **ordering-note** — every `Ordering::{Relaxed,Acquire,Release,
+//!    AcqRel,SeqCst}` site carries an `// ordering:` justification: a
+//!    trailing comment on the same line, or a standalone `// ordering:`
+//!    comment earlier in the same brace block (coverage runs from the
+//!    comment to the end of its enclosing block, so one comment can
+//!    justify a cluster of related sites — e.g. a telemetry snapshot).
+//! 3. **lock-across** — in `coordinator/`, `kvcache/`, and `serve/`, no
+//!    *named* lock/view guard (`let g = ….lock()/.read()/.write()/
+//!    .layer(…)`) is live across a blocking boundary: channel `.send(` /
+//!    `.try_send(`, `Backend::execute`, or `export_seq`/`import_seq`.
+//!    Guards die at `drop(g)`, at rebinding, or when their brace block
+//!    closes. Escape hatch: `// audit: allow(lock_across): reason`.
+//! 4. **unwrap-hot** — no `.unwrap()` / `.expect(` in non-test hot-path
+//!    modules (`coordinator/`, `kvcache/`, `serve/`, `tensor.rs`,
+//!    `util/{simd,arena,par}.rs`). The lock-poisoning idiom
+//!    (`.lock().unwrap()` etc.) is allowed by default — a poisoned lock
+//!    means a sibling thread already panicked, and propagating beats
+//!    limping on with torn state. Escape hatch:
+//!    `// audit: allow(unwrap): reason`.
+//!
+//! Plus a one-shot workspace check: `rust/src/lib.rs` must carry
+//! `#![deny(unsafe_op_in_unsafe_fn)]` (**deny-attr**).
+//!
+//! Everything inside `#[cfg(test)] mod` blocks is exempt from all rules.
+
+use crate::scan::Source;
+
+#[derive(Debug)]
+pub struct Violation {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+const ORDERING_VARIANTS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+const BLOCKING_CALLS: [&str; 5] =
+    [".send(", ".try_send(", ".execute(", "export_seq(", "import_seq("];
+const GUARD_CALLS: [&str; 4] = [".lock()", ".read()", ".write()", ".layer("];
+const POISON_IDIOMS: [&str; 4] = [".lock()", ".read()", ".write()", ".into_inner()"];
+
+/// Directories whose files are subject to the lock-across rule.
+fn in_guarded_dirs(path: &str) -> bool {
+    ["coordinator/", "kvcache/", "serve/"].iter().any(|d| path.contains(d))
+}
+
+/// Files subject to the unwrap/expect ban.
+fn in_hot_path(path: &str) -> bool {
+    in_guarded_dirs(path)
+        || path.ends_with("tensor.rs")
+        || path.ends_with("util/simd.rs")
+        || path.ends_with("util/arena.rs")
+        || path.ends_with("util/par.rs")
+}
+
+pub fn audit_source(src: &Source) -> Vec<Violation> {
+    let mut out = Vec::new();
+    check_unsafe(src, &mut out);
+    check_ordering(src, &mut out);
+    if in_guarded_dirs(&src.path) {
+        check_lock_across(src, &mut out);
+    }
+    if in_hot_path(&src.path) {
+        check_unwrap(src, &mut out);
+    }
+    out.sort_by_key(|v| v.line);
+    out
+}
+
+/// Workspace-level check: the library crate root must deny implicit
+/// unsafe inside `unsafe fn` bodies, so every dereference/call site gets
+/// its own `unsafe {}` block and therefore its own SAFETY comment.
+pub fn check_lib_attrs(src: &Source, out: &mut Vec<Violation>) {
+    if src.path.ends_with("rust/src/lib.rs")
+        && !src.masked.contains("#![deny(unsafe_op_in_unsafe_fn)]")
+    {
+        out.push(Violation {
+            path: src.path.clone(),
+            line: 1,
+            rule: "deny-attr",
+            msg: "crate root must carry #![deny(unsafe_op_in_unsafe_fn)]".into(),
+        });
+    }
+}
+
+/// Occurrences of `word` in `hay` at identifier boundaries.
+fn word_positions(hay: &str, word: &str) -> Vec<usize> {
+    let bytes = hay.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find(word) {
+        let pos = from + rel;
+        from = pos + word.len();
+        let before_ok = pos == 0 || !is_ident_byte(bytes[pos - 1]);
+        let after = pos + word.len();
+        let after_ok = after >= bytes.len() || !is_ident_byte(bytes[after]);
+        if before_ok && after_ok {
+            out.push(pos);
+        }
+    }
+    out
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn check_unsafe(src: &Source, out: &mut Vec<Violation>) {
+    for pos in word_positions(&src.masked, "unsafe") {
+        if src.in_test(pos) {
+            continue;
+        }
+        let line = src.line_of(pos);
+        let ok = src.annotated(line, |c| c.contains("SAFETY:") || c.contains("# Safety"));
+        if !ok {
+            out.push(Violation {
+                path: src.path.clone(),
+                line,
+                rule: "unsafe-safety",
+                msg: "`unsafe` without a `// SAFETY:` comment on the site or the \
+                      comment block above it"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn check_ordering(src: &Source, out: &mut Vec<Violation>) {
+    // Coverage intervals: an `// ordering:` comment covers from its own
+    // position to the end of its enclosing brace block.
+    let intervals: Vec<(usize, usize, usize)> = src
+        .comments
+        .iter()
+        .filter(|c| c.text.to_lowercase().contains("ordering:"))
+        .map(|c| (c.pos, src.block_end(c.pos), c.line))
+        .collect();
+
+    let mut from = 0;
+    while let Some(rel) = src.masked[from..].find("Ordering::") {
+        let pos = from + rel;
+        from = pos + "Ordering::".len();
+        let rest = &src.masked[pos + "Ordering::".len()..];
+        let variant: String = rest.chars().take_while(|ch| ch.is_ascii_alphanumeric()).collect();
+        if !ORDERING_VARIANTS.contains(&variant.as_str()) {
+            continue; // e.g. cmp::Ordering::Less
+        }
+        if src.in_test(pos) {
+            continue;
+        }
+        let line = src.line_of(pos);
+        let covered = intervals
+            .iter()
+            .any(|&(start, end, cline)| cline == line || (start < pos && pos < end));
+        if !covered {
+            out.push(Violation {
+                path: src.path.clone(),
+                line,
+                rule: "ordering-note",
+                msg: format!(
+                    "Ordering::{variant} without an `// ordering:` justification \
+                     (same line, or a standalone comment earlier in this block)"
+                ),
+            });
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Guard {
+    name: String,
+    depth: u32,
+    line: usize,
+}
+
+fn check_lock_across(src: &Source, out: &mut Vec<Violation>) {
+    let mut guards: Vec<Guard> = Vec::new();
+    for line in 1..=src.num_lines() {
+        let start = src.line_starts[line - 1];
+        if src.in_test(start) {
+            continue;
+        }
+        let content = src.masked_line(line).to_string();
+
+        // 1. `drop(name)` kills the guard.
+        for dpos in word_positions(&content, "drop") {
+            let rest = &content[dpos + 4..];
+            if let Some(inner) = rest.strip_prefix('(') {
+                let name: String =
+                    inner.chars().take_while(|ch| ch.is_ascii_alphanumeric() || *ch == '_').collect();
+                guards.retain(|g| g.name != name);
+            }
+        }
+
+        // 2. Blocking calls while a guard is live.
+        for call in BLOCKING_CALLS {
+            let mut cfrom = 0;
+            while let Some(rel) = content[cfrom..].find(call) {
+                let cpos = cfrom + rel;
+                cfrom = cpos + call.len();
+                // `export_seq(` / `import_seq(` must sit at an ident
+                // boundary (a leading `.` in the needle handles the rest).
+                if !call.starts_with('.') {
+                    let b = content.as_bytes();
+                    if cpos > 0 && is_ident_byte(b[cpos - 1]) {
+                        continue;
+                    }
+                }
+                let abs = start + cpos;
+                let cur_depth = src.depth[abs];
+                for g in &guards {
+                    if cur_depth >= g.depth {
+                        let allowed =
+                            src.annotated(line, |c| c.contains("audit: allow(lock_across"));
+                        if !allowed {
+                            out.push(Violation {
+                                path: src.path.clone(),
+                                line,
+                                rule: "lock-across",
+                                msg: format!(
+                                    "blocking call `{}` while guard `{}` (line {}) is live; \
+                                     drop or scope the guard first",
+                                    call.trim_start_matches('.').trim_end_matches('('),
+                                    g.name,
+                                    g.line
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        // 3. New guard bindings: `let [mut] name = <expr with guard call>`.
+        if let Some((name, let_pos)) = guard_binding(&content) {
+            guards.retain(|g| g.name != name);
+            guards.push(Guard { name, depth: src.depth[start + let_pos], line });
+        }
+
+        // 4. Guards whose block closed on this line die.
+        let eol = src.line_starts.get(line).copied().unwrap_or(src.masked.len());
+        let end_depth = src.depth[eol.min(src.depth.len() - 1)];
+        guards.retain(|g| g.depth <= end_depth);
+    }
+}
+
+/// If the masked line binds a named guard, return (name, byte pos of
+/// `let` in the line). The RHS must *start* with the guard expression —
+/// a `match`/`if` between `=` and the guard call means the guard is a
+/// scrutinee temporary, which this pass does not track.
+fn guard_binding(content: &str) -> Option<(String, usize)> {
+    let let_pos = word_positions(content, "let").into_iter().next()?;
+    let after_let = &content[let_pos + 3..];
+    let mut rest = after_let.trim_start();
+    if let Some(stripped) = rest.strip_prefix("mut ") {
+        rest = stripped.trim_start();
+    }
+    let name: String = rest.chars().take_while(|ch| ch.is_ascii_alphanumeric() || *ch == '_').collect();
+    if name.is_empty() {
+        return None;
+    }
+    let after_name = rest[name.len()..].trim_start();
+    let rhs = after_name.strip_prefix('=')?;
+    let call_pos = GUARD_CALLS.iter().filter_map(|c| rhs.find(c)).min()?;
+    let prefix = &rhs[..call_pos];
+    for kw in ["match", "if", "loop", "while"] {
+        if word_positions(prefix, kw).first().is_some() {
+            return None;
+        }
+    }
+    Some((name, let_pos))
+}
+
+fn check_unwrap(src: &Source, out: &mut Vec<Violation>) {
+    for needle in [".unwrap()", ".expect("] {
+        let mut from = 0;
+        while let Some(rel) = src.masked[from..].find(needle) {
+            let pos = from + rel;
+            from = pos + needle.len();
+            if src.in_test(pos) {
+                continue;
+            }
+            // Poison-propagation idiom: `.lock().unwrap()` and friends.
+            let before = src.masked[..pos].trim_end();
+            if POISON_IDIOMS.iter().any(|idiom| before.ends_with(idiom)) {
+                continue;
+            }
+            let line = src.line_of(pos);
+            let allowed = src.annotated(line, |c| {
+                c.contains("audit: allow(unwrap") || c.contains("audit: allow(expect")
+            });
+            if !allowed {
+                out.push(Violation {
+                    path: src.path.clone(),
+                    line,
+                    rule: "unwrap-hot",
+                    msg: format!(
+                        "`{}` in a hot-path module; return an error, or annotate \
+                         `// audit: allow(unwrap): reason` if unreachable by construction",
+                        needle.trim_start_matches('.').trim_end_matches('(')
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::selftest;
+
+    #[test]
+    fn fixtures_all_pass() {
+        let failures = selftest::run_fixtures();
+        assert!(failures.is_empty(), "self-test failures:\n{}", failures.join("\n"));
+    }
+}

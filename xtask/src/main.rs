@@ -1,0 +1,150 @@
+//! `cargo xtask` — repo automation. One subcommand today:
+//!
+//! ```text
+//! cargo xtask audit [--root <dir>] [--self-test]
+//! ```
+//!
+//! `audit` lints `rust/src` and `xtask/src` for the concurrency
+//! invariants documented in DESIGN.md §Correctness tooling (SAFETY
+//! comments on unsafe, ordering justifications on atomics, no lock
+//! guards across blocking boundaries, no hot-path unwrap/expect).
+//! Exit status: 0 clean, 1 violations found, 2 usage/IO error.
+//!
+//! `--self-test` runs the seeded-violation fixtures instead of the real
+//! tree: the audit must fail on a bare unsafe block, an unannotated
+//! Relaxed, a lock held across a send, and a hot-path unwrap. CI runs
+//! the self-test first so a silently-broken linter cannot green-light
+//! the tree.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+mod audit;
+mod scan;
+mod selftest;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd = None;
+    let mut root = default_root();
+    let mut self_test = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                i += 1;
+                let Some(dir) = args.get(i) else {
+                    eprintln!("--root requires a path");
+                    return ExitCode::from(2);
+                };
+                root = PathBuf::from(dir);
+            }
+            "--self-test" => self_test = true,
+            a if !a.starts_with('-') && cmd.is_none() => cmd = Some(a.to_string()),
+            other => {
+                eprintln!("unknown argument: {other}");
+                return ExitCode::from(2);
+            }
+        }
+        i += 1;
+    }
+
+    match cmd.as_deref() {
+        Some("audit") => {
+            if self_test {
+                run_self_test()
+            } else {
+                run_audit(&root)
+            }
+        }
+        Some(other) => {
+            eprintln!("unknown command: {other}\nusage: cargo xtask audit [--root <dir>] [--self-test]");
+            ExitCode::from(2)
+        }
+        None => {
+            eprintln!("usage: cargo xtask audit [--root <dir>] [--self-test]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// The workspace root: xtask always lives one level below it.
+fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().map(Path::to_path_buf).unwrap_or_default()
+}
+
+fn run_self_test() -> ExitCode {
+    let failures = selftest::run_fixtures();
+    if failures.is_empty() {
+        println!("audit self-test: {} fixtures passed", selftest::fixture_count());
+        ExitCode::SUCCESS
+    } else {
+        for f in &failures {
+            eprintln!("audit self-test FAIL: {f}");
+        }
+        eprintln!(
+            "audit self-test: {}/{} fixtures failed",
+            failures.len(),
+            selftest::fixture_count()
+        );
+        ExitCode::FAILURE
+    }
+}
+
+fn run_audit(root: &Path) -> ExitCode {
+    let mut files = Vec::new();
+    for sub in ["rust/src", "xtask/src"] {
+        let dir = root.join(sub);
+        if !dir.is_dir() {
+            eprintln!("audit: missing source dir {}", dir.display());
+            return ExitCode::from(2);
+        }
+        collect_rs(&dir, &mut files);
+    }
+    files.sort();
+
+    let mut violations = Vec::new();
+    let mut scanned = 0usize;
+    for path in &files {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("audit: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = scan::Source::scan(&rel, &text);
+        violations.extend(audit::audit_source(&src));
+        audit::check_lib_attrs(&src, &mut violations);
+        scanned += 1;
+    }
+
+    if violations.is_empty() {
+        println!("audit: {scanned} files clean");
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            println!("{v}");
+        }
+        println!("audit: {} violation(s) across {scanned} files", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}

@@ -1,0 +1,461 @@
+//! Comment- and string-aware source scanning for the audit pass.
+//!
+//! The offline crate universe cannot vendor `syn`, so the audit works on
+//! a **masked** view of each source file: every byte inside a string
+//! literal or comment is blanked to a space (newlines preserved, so byte
+//! offsets and line numbers are identical to the original). Token
+//! searches on the masked text therefore cannot be fooled by `"unsafe"`
+//! inside a string or `Ordering::Relaxed` inside a doc comment.
+//! Comments themselves are recorded separately with line / byte-offset /
+//! trailing metadata, because the audit rules are *about* comments: a
+//! `// SAFETY:` or `// ordering:` annotation either sits on the site's
+//! own line or in the contiguous comment/attribute block above it.
+//!
+//! The scanner also precomputes:
+//! - a per-byte brace-depth array (`depth[i]` = depth *before* byte `i`),
+//!   used for `// ordering:` coverage intervals (a standalone ordering
+//!   comment covers every atomic site from its line to the end of its
+//!   enclosing brace block) and for lock-guard liveness;
+//! - `#[cfg(test)] mod` spans, which every rule skips.
+//!
+//! Known limitations (accepted for a token-level pass): temporaries in a
+//! `match` scrutinee (`match rx.lock().unwrap().recv() { .. }`) extend
+//! the guard's life to the end of the match but are not tracked — only
+//! *named* `let` guard bindings are; macro-generated code is not
+//! expanded.
+
+/// A single `//` or `/* */` comment, with enough metadata to apply the
+/// adjacency rules.
+#[derive(Debug)]
+pub struct Comment {
+    /// 1-based line of the comment's first byte.
+    pub line: usize,
+    /// Byte offset of the comment opener.
+    pub pos: usize,
+    /// Full original text of the comment (including delimiters).
+    pub text: String,
+    /// True when code precedes the comment on its line (a trailing
+    /// comment annotates the statement it shares a line with).
+    pub trailing: bool,
+}
+
+/// A scanned source file.
+pub struct Source {
+    /// Repo-relative display path.
+    pub path: String,
+    /// Original text.
+    pub text: String,
+    /// Same length as `text`, with string/comment bytes blanked.
+    pub masked: String,
+    pub comments: Vec<Comment>,
+    /// Byte offset of each line start; `line_starts[0] == 0`.
+    pub line_starts: Vec<usize>,
+    /// `depth[i]` = brace depth before byte `i`; length `text.len() + 1`.
+    pub depth: Vec<u32>,
+    /// Byte ranges of `#[cfg(test)] mod … { … }` items.
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+impl Source {
+    pub fn scan(path: &str, text: &str) -> Source {
+        // Pass 1: mask strings and comments, record comments.
+        let bytes = text.as_bytes();
+        let n = bytes.len();
+        let mut masked = bytes.to_vec();
+        let mut comments = Vec::new();
+        let mut line = 1usize;
+        let mut line_has_code = false;
+
+        let mut i = 0;
+        while i < n {
+            match bytes[i] {
+                b'\n' => {
+                    line += 1;
+                    line_has_code = false;
+                    i += 1;
+                }
+                b'/' if i + 1 < n && bytes[i + 1] == b'/' => {
+                    let start = i;
+                    while i < n && bytes[i] != b'\n' {
+                        masked[i] = b' ';
+                        i += 1;
+                    }
+                    comments.push(Comment {
+                        line,
+                        pos: start,
+                        text: text[start..i].to_string(),
+                        trailing: line_has_code,
+                    });
+                }
+                b'/' if i + 1 < n && bytes[i + 1] == b'*' => {
+                    let start = i;
+                    let start_line = line;
+                    let trailing = line_has_code;
+                    let mut nest = 1;
+                    masked[i] = b' ';
+                    masked[i + 1] = b' ';
+                    i += 2;
+                    while i < n && nest > 0 {
+                        if bytes[i] == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                            nest += 1;
+                            masked[i] = b' ';
+                            masked[i + 1] = b' ';
+                            i += 2;
+                        } else if bytes[i] == b'*' && i + 1 < n && bytes[i + 1] == b'/' {
+                            nest -= 1;
+                            masked[i] = b' ';
+                            masked[i + 1] = b' ';
+                            i += 2;
+                        } else {
+                            if bytes[i] == b'\n' {
+                                line += 1;
+                            } else {
+                                masked[i] = b' ';
+                            }
+                            i += 1;
+                        }
+                    }
+                    comments.push(Comment {
+                        line: start_line,
+                        pos: start,
+                        text: text[start..i.min(n)].to_string(),
+                        trailing,
+                    });
+                }
+                b'"' => {
+                    line_has_code = true;
+                    masked[i] = b' ';
+                    i += 1;
+                    while i < n {
+                        if bytes[i] == b'\\' && i + 1 < n {
+                            masked[i] = b' ';
+                            if bytes[i + 1] != b'\n' {
+                                masked[i + 1] = b' ';
+                            } else {
+                                line += 1;
+                            }
+                            i += 2;
+                        } else if bytes[i] == b'"' {
+                            masked[i] = b' ';
+                            i += 1;
+                            break;
+                        } else {
+                            if bytes[i] == b'\n' {
+                                line += 1;
+                            } else {
+                                masked[i] = b' ';
+                            }
+                            i += 1;
+                        }
+                    }
+                }
+                b'r' if raw_string_hashes(bytes, i).is_some() => {
+                    line_has_code = true;
+                    let hashes = raw_string_hashes(bytes, i).unwrap();
+                    let open_len = 1 + hashes + 1; // r##"
+                    for k in 0..open_len {
+                        masked[i + k] = b' ';
+                    }
+                    i += open_len;
+                    while i < n {
+                        if bytes[i] == b'"' && has_hashes(bytes, i + 1, hashes) {
+                            for k in 0..=hashes {
+                                masked[i + k] = b' ';
+                            }
+                            i += 1 + hashes;
+                            break;
+                        }
+                        if bytes[i] == b'\n' {
+                            line += 1;
+                        } else {
+                            masked[i] = b' ';
+                        }
+                        i += 1;
+                    }
+                }
+                b'\'' => {
+                    line_has_code = true;
+                    // Distinguish lifetimes (`'a`) from char literals
+                    // (`'x'`, `'\n'`).
+                    if i + 1 < n && bytes[i + 1] == b'\\' {
+                        masked[i] = b' ';
+                        i += 1;
+                        while i < n && bytes[i] != b'\'' {
+                            masked[i] = b' ';
+                            i += 1;
+                        }
+                        if i < n {
+                            masked[i] = b' ';
+                            i += 1;
+                        }
+                    } else if char_literal_len(bytes, i).is_some() {
+                        let len = char_literal_len(bytes, i).unwrap();
+                        for k in 0..len {
+                            masked[i + k] = b' ';
+                        }
+                        i += len;
+                    } else {
+                        // Lifetime: leave as-is.
+                        i += 1;
+                    }
+                }
+                b' ' | b'\t' | b'\r' => {
+                    i += 1;
+                }
+                _ => {
+                    line_has_code = true;
+                    i += 1;
+                }
+            }
+        }
+
+        // Pass 2: line starts and brace depth over the masked bytes.
+        let mut line_starts = vec![0usize];
+        let mut depth = Vec::with_capacity(n + 1);
+        let mut cur: u32 = 0;
+        for (j, &b) in masked.iter().enumerate() {
+            depth.push(cur);
+            match b {
+                b'\n' => line_starts.push(j + 1),
+                b'{' => cur += 1,
+                b'}' => cur = cur.saturating_sub(1),
+                _ => {}
+            }
+        }
+        depth.push(cur);
+
+        let masked = String::from_utf8(masked).expect("masking replaces whole bytes with ASCII");
+        let mut src = Source {
+            path: path.to_string(),
+            text: text.to_string(),
+            masked,
+            comments,
+            line_starts,
+            depth,
+            test_spans: Vec::new(),
+        };
+        src.test_spans = src.find_test_spans();
+        src
+    }
+
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, pos: usize) -> usize {
+        match self.line_starts.binary_search(&pos) {
+            Ok(idx) => idx + 1,
+            Err(idx) => idx,
+        }
+    }
+
+    /// Masked content of a 1-based line (without trailing newline).
+    pub fn masked_line(&self, line: usize) -> &str {
+        let start = self.line_starts[line - 1];
+        let end = self
+            .line_starts
+            .get(line)
+            .map(|&e| e.saturating_sub(1))
+            .unwrap_or(self.masked.len());
+        &self.masked[start..end.max(start)]
+    }
+
+    pub fn num_lines(&self) -> usize {
+        self.line_starts.len()
+    }
+
+    /// Whether a byte offset falls inside a `#[cfg(test)] mod` block.
+    pub fn in_test(&self, pos: usize) -> bool {
+        self.test_spans.iter().any(|&(s, e)| pos >= s && pos < e)
+    }
+
+    /// End of the brace block enclosing `pos`: the first offset after
+    /// `pos` whose depth drops below `depth[pos]` (file end if none).
+    pub fn block_end(&self, pos: usize) -> usize {
+        let d = self.depth[pos];
+        for j in pos + 1..self.depth.len() {
+            if self.depth[j] < d {
+                return j;
+            }
+        }
+        self.text.len()
+    }
+
+    /// Comments on the given 1-based line.
+    pub fn comments_on_line(&self, line: usize) -> impl Iterator<Item = &Comment> {
+        self.comments.iter().filter(move |c| c.line == line)
+    }
+
+    /// True when a comment matching `pred` sits on the site's own line or
+    /// in the contiguous comment/attribute block immediately above it.
+    /// Blank lines and code lines terminate the upward walk; attribute
+    /// lines (`#[…]`) are skipped so `// SAFETY:` above
+    /// `#[target_feature]` still reaches the `unsafe fn`.
+    pub fn annotated(&self, site_line: usize, pred: impl Fn(&str) -> bool) -> bool {
+        if self.comments_on_line(site_line).any(|c| pred(&c.text)) {
+            return true;
+        }
+        let mut l = site_line;
+        while l > 1 {
+            l -= 1;
+            let code_empty = self.masked_line(l).trim().is_empty();
+            let line_comments: Vec<&Comment> =
+                self.comments.iter().filter(|c| c.line == l).collect();
+            if code_empty && !line_comments.is_empty() {
+                // Comment-only line.
+                if line_comments.iter().any(|c| pred(&c.text)) {
+                    return true;
+                }
+                continue;
+            }
+            let code = self.masked_line(l).trim();
+            if code.starts_with("#[") || code.starts_with("#![") {
+                continue;
+            }
+            return false; // blank line or plain code: block ends
+        }
+        false
+    }
+
+    fn find_test_spans(&self) -> Vec<(usize, usize)> {
+        let mut spans = Vec::new();
+        let needle = "#[cfg(test)]";
+        let mut from = 0;
+        while let Some(rel) = self.masked[from..].find(needle) {
+            let attr_pos = from + rel;
+            from = attr_pos + needle.len();
+            // Only a following `mod … {` item forms a skip span; a
+            // `#[cfg(test)] use …` line does not.
+            let rest = &self.masked[attr_pos + needle.len()..];
+            let Some(brace_rel) = rest.find('{') else { continue };
+            let between = &rest[..brace_rel];
+            if !between.split_whitespace().any(|t| t == "mod") {
+                continue;
+            }
+            let open = attr_pos + needle.len() + brace_rel;
+            let end = self.block_after_open(open);
+            spans.push((attr_pos, end));
+            from = end;
+        }
+        spans
+    }
+
+    /// Offset just past the `}` matching the `{` at `open`.
+    fn block_after_open(&self, open: usize) -> usize {
+        let d = self.depth[open];
+        for j in open + 1..self.depth.len() {
+            if self.depth[j] == d {
+                return j;
+            }
+        }
+        self.text.len()
+    }
+}
+
+/// If `bytes[i..]` opens a raw string (`r"`, `r#"`, …) starting at the
+/// `r`, return the number of hashes.
+fn raw_string_hashes(bytes: &[u8], i: usize) -> Option<usize> {
+    // `r` must not be the tail of an identifier.
+    if i > 0 && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_') {
+        return None;
+    }
+    let mut j = i + 1;
+    let mut hashes = 0;
+    while j < bytes.len() && bytes[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < bytes.len() && bytes[j] == b'"' {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+fn has_hashes(bytes: &[u8], from: usize, count: usize) -> bool {
+    if from + count > bytes.len() {
+        return false;
+    }
+    bytes[from..from + count].iter().all(|&b| b == b'#')
+}
+
+/// Length of a plain (non-escaped) char literal at `i` (the opening
+/// quote), or None if this is a lifetime. Handles multi-byte UTF-8 chars.
+fn char_literal_len(bytes: &[u8], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    if j >= bytes.len() || bytes[j] == b'\'' {
+        return None;
+    }
+    // Advance one UTF-8 scalar.
+    j += 1;
+    while j < bytes.len() && (bytes[j] & 0xC0) == 0x80 {
+        j += 1;
+    }
+    if j < bytes.len() && bytes[j] == b'\'' {
+        Some(j + 1 - i)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_strings_and_comments() {
+        let src = Source::scan("t.rs", "let a = \"unsafe\"; // unsafe\nunsafe {}\n");
+        assert!(!src.masked[..src.line_starts[1]].contains("unsafe"));
+        assert!(src.masked[src.line_starts[1]..].contains("unsafe"));
+        assert_eq!(src.comments.len(), 1);
+        assert!(src.comments[0].trailing);
+    }
+
+    #[test]
+    fn depth_tracks_braces_not_strings() {
+        let src = Source::scan("t.rs", "fn f() { let s = \"{{{\"; }\n");
+        assert_eq!(*src.depth.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn cfg_test_mod_span_found() {
+        let text = "fn a() {}\n#[cfg(test)]\nmod tests {\n  fn b() {}\n}\nfn c() {}\n";
+        let src = Source::scan("t.rs", text);
+        assert_eq!(src.test_spans.len(), 1);
+        let b_pos = text.find("fn b").unwrap();
+        let c_pos = text.find("fn c").unwrap();
+        assert!(src.in_test(b_pos));
+        assert!(!src.in_test(c_pos));
+    }
+
+    #[test]
+    fn annotated_walks_over_attributes() {
+        let text = "// SAFETY: fine\n#[target_feature(enable = \"avx2\")]\nunsafe fn f() {}\n";
+        let src = Source::scan("t.rs", text);
+        assert!(src.annotated(3, |c| c.contains("SAFETY:")));
+        assert!(!src.annotated(3, |c| c.contains("ordering:")));
+    }
+
+    #[test]
+    fn blank_line_breaks_annotation_block() {
+        let text = "// SAFETY: stale\n\nunsafe fn f() {}\n";
+        let src = Source::scan("t.rs", text);
+        assert!(!src.annotated(3, |c| c.contains("SAFETY:")));
+    }
+
+    #[test]
+    fn lifetimes_do_not_eat_source() {
+        let src = Source::scan("t.rs", "fn f<'a>(x: &'a str) -> &'a str { x }\nunsafe {}\n");
+        assert!(src.masked.contains("unsafe"));
+    }
+
+    #[test]
+    fn raw_strings_masked() {
+        let src = Source::scan("t.rs", "let s = r#\"unsafe { Ordering::Relaxed }\"#;\n");
+        assert!(!src.masked.contains("unsafe"));
+        assert!(!src.masked.contains("Ordering"));
+    }
+
+    #[test]
+    fn char_literal_with_brace_does_not_break_depth() {
+        let src = Source::scan("t.rs", "fn f() { let c = '{'; }\n");
+        assert_eq!(*src.depth.last().unwrap(), 0);
+    }
+}

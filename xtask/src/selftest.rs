@@ -1,0 +1,168 @@
+//! Seeded-violation fixtures: the audit must *demonstrably fail* on a
+//! bare unsafe block, an unannotated Relaxed, a lock held across a send,
+//! and a hot-path unwrap — and must stay quiet on the annotated/scoped
+//! versions of the same code. `cargo xtask audit --self-test` runs these
+//! (CI does, before trusting the clean run on the real tree), and the
+//! crate's unit tests run the same table.
+
+use crate::audit::audit_source;
+use crate::scan::Source;
+
+struct Fixture {
+    name: &'static str,
+    /// Synthetic repo-relative path — chosen to opt in/out of the
+    /// path-scoped rules.
+    path: &'static str,
+    source: &'static str,
+    /// Exact multiset of rules expected to fire, in line order.
+    expect: &'static [&'static str],
+}
+
+const FIXTURES: &[Fixture] = &[
+    Fixture {
+        name: "bare_unsafe_block_fails",
+        path: "rust/src/util/x.rs",
+        source: "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+        expect: &["unsafe-safety"],
+    },
+    Fixture {
+        name: "commented_unsafe_block_passes",
+        path: "rust/src/util/x.rs",
+        source: "pub fn f(p: *const u8) -> u8 {\n    // SAFETY: caller contract\n    unsafe { *p }\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "safety_above_target_feature_passes",
+        path: "rust/src/util/x.rs",
+        source: "// SAFETY: caller checks avx2\n#[target_feature(enable = \"avx2\")]\nunsafe fn f() {}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "unannotated_relaxed_fails",
+        path: "rust/src/util/x.rs",
+        source: "use std::sync::atomic::{AtomicUsize, Ordering};\npub fn f(a: &AtomicUsize) -> usize {\n    a.load(Ordering::Relaxed)\n}\n",
+        expect: &["ordering-note"],
+    },
+    Fixture {
+        name: "trailing_ordering_comment_passes",
+        path: "rust/src/util/x.rs",
+        source: "use std::sync::atomic::{AtomicUsize, Ordering};\npub fn f(a: &AtomicUsize) -> usize {\n    a.load(Ordering::Relaxed) // ordering: pure counter\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "block_scoped_ordering_comment_covers_cluster",
+        path: "rust/src/util/x.rs",
+        source: "use std::sync::atomic::{AtomicUsize, Ordering};\npub fn f(a: &AtomicUsize) -> usize {\n    // ordering: both loads are monotonic gauges\n    let x = a.load(Ordering::Relaxed);\n    x + a.load(Ordering::Relaxed)\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "ordering_comment_does_not_leak_past_block",
+        path: "rust/src/util/x.rs",
+        source: "use std::sync::atomic::{AtomicUsize, Ordering};\npub fn f(a: &AtomicUsize) -> usize {\n    // ordering: covers this fn only\n    a.load(Ordering::Relaxed)\n}\npub fn g(a: &AtomicUsize) -> usize {\n    a.load(Ordering::Relaxed)\n}\n",
+        expect: &["ordering-note"],
+    },
+    Fixture {
+        name: "seqcst_needs_note_too",
+        path: "rust/src/util/x.rs",
+        source: "use std::sync::atomic::{AtomicUsize, Ordering};\npub fn f(a: &AtomicUsize) -> usize {\n    a.load(Ordering::SeqCst)\n}\n",
+        expect: &["ordering-note"],
+    },
+    Fixture {
+        name: "cmp_ordering_is_not_atomic",
+        path: "rust/src/util/x.rs",
+        source: "use std::cmp::Ordering;\npub fn f(a: i32) -> Ordering {\n    if a < 0 { Ordering::Less } else { Ordering::Greater }\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "lock_across_send_fails",
+        path: "rust/src/serve/x.rs",
+        source: "pub fn f(m: &std::sync::Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {\n    let g = m.lock().unwrap();\n    tx.send(*g).ok();\n}\n",
+        expect: &["lock-across"],
+    },
+    Fixture {
+        name: "drop_before_send_passes",
+        path: "rust/src/serve/x.rs",
+        source: "pub fn f(m: &std::sync::Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {\n    let g = m.lock().unwrap();\n    let v = *g;\n    drop(g);\n    tx.send(v).ok();\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "scope_before_send_passes",
+        path: "rust/src/serve/x.rs",
+        source: "pub fn f(m: &std::sync::Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {\n    let v = {\n        let g = m.lock().unwrap();\n        *g\n    };\n    tx.send(v).ok();\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "view_guard_across_export_fails",
+        path: "rust/src/kvcache/x.rs",
+        source: "pub fn f(store: &crate::kvcache::ShardedKvCache) {\n    let view = store.layer(0);\n    store.export_seq(7);\n}\n",
+        expect: &["lock-across"],
+    },
+    Fixture {
+        name: "scrutinee_temporary_not_tracked",
+        path: "rust/src/coordinator/x.rs",
+        source: "pub fn f(rx: &std::sync::Mutex<std::sync::mpsc::Receiver<u32>>, tx: &std::sync::mpsc::Sender<u32>) {\n    let job = match rx.lock().unwrap().recv() { Ok(j) => j, Err(_) => return };\n    tx.send(job).ok();\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "lock_across_outside_guarded_dirs_ignored",
+        path: "rust/src/runtime/x.rs",
+        source: "pub fn f(m: &std::sync::Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {\n    let g = m.lock().unwrap();\n    tx.send(*g).ok();\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "hot_path_unwrap_fails",
+        path: "rust/src/serve/x.rs",
+        source: "pub fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n",
+        expect: &["unwrap-hot"],
+    },
+    Fixture {
+        name: "hot_path_expect_fails",
+        path: "rust/src/kvcache/x.rs",
+        source: "pub fn f(v: Option<u32>) -> u32 {\n    v.expect(\"always set\")\n}\n",
+        expect: &["unwrap-hot"],
+    },
+    Fixture {
+        name: "poison_idiom_allowed",
+        path: "rust/src/serve/x.rs",
+        source: "pub fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "annotated_expect_allowed",
+        path: "rust/src/serve/x.rs",
+        source: "pub fn f(v: Option<u32>) -> u32 {\n    // audit: allow(expect): populated by constructor\n    v.expect(\"set in new()\")\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "cfg_test_mod_exempt",
+        path: "rust/src/serve/x.rs",
+        source: "pub fn ok() {}\n#[cfg(test)]\nmod tests {\n    use std::sync::atomic::{AtomicUsize, Ordering};\n    fn f(a: &AtomicUsize, v: Option<u32>) -> u32 {\n        a.load(Ordering::SeqCst);\n        unsafe { std::hint::unreachable_unchecked() };\n        v.unwrap()\n    }\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "string_and_comment_tokens_ignored",
+        path: "rust/src/serve/x.rs",
+        source: "// this comment mentions unsafe and Ordering::Relaxed\npub fn f() -> &'static str {\n    \"unsafe { Ordering::Relaxed }.unwrap()\"\n}\n",
+        expect: &[],
+    },
+];
+
+/// Run every fixture; return human-readable failure lines (empty = pass).
+pub fn run_fixtures() -> Vec<String> {
+    let mut failures = Vec::new();
+    for fx in FIXTURES {
+        let src = Source::scan(fx.path, fx.source);
+        let got: Vec<&'static str> = audit_source(&src).iter().map(|v| v.rule).collect();
+        if got != fx.expect {
+            failures.push(format!(
+                "{}: expected {:?}, got {:?}",
+                fx.name, fx.expect, got
+            ));
+        }
+    }
+    failures
+}
+
+pub fn fixture_count() -> usize {
+    FIXTURES.len()
+}
