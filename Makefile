@@ -10,7 +10,7 @@
 PRESETS ?= test-tiny
 ARTIFACTS_DIR := artifacts
 
-.PHONY: all build test bench bench-smoke bench-baseline bench-serve bench-prefill audit clippy fmt artifacts clean
+.PHONY: all build test bench bench-smoke bench-baseline bench-serve bench-prefill bench-prefix audit clippy fmt artifacts clean
 
 all: build
 
@@ -52,6 +52,13 @@ bench-serve: build
 # inline does not.
 bench-prefill: build
 	cargo bench --bench prefill_interference
+
+# Cross-request prefix reuse: TTFT at 0/50/90% shared-system-prompt
+# traffic on the serve-20m preset, written to BENCH_prefix.json. Full
+# runs assert TTFT drops monotonically with the hit rate and the
+# 90%-hit arm is at most half the 0%-hit TTFT.
+bench-prefix: build
+	cargo bench --bench prefix_reuse
 
 # Concurrency-invariant lint: SAFETY comments on every unsafe, ordering
 # justifications on every explicit Ordering, no lock guards held across

@@ -1,0 +1,208 @@
+//! Cross-request prefix reuse: TTFT under shared-system-prompt traffic.
+//!
+//! The scenario the prefix cache exists for: production chat traffic
+//! re-prefills the same long system prompt on (almost) every request,
+//! so prefill compute dominates time-to-first-token. Three arms replay
+//! the same request count with 0%, 50%, and 90% of requests sharing a
+//! long block-aligned system prefix (the rest are fully unique); the
+//! pool is seeded by one warm-up request per arm. TTFT is measured per
+//! request from submit to first streamed token.
+//!
+//! Writes BENCH_prefix.json (rows: share_pct, ttft mean/p50 us, pool
+//! counters). Full runs assert the acceptance contract: TTFT drops
+//! monotonically with the hit rate, and the 90%-hit arm lands at or
+//! under 0.5x the 0%-hit arm. Under `--quick` / SCOUT_BENCH_SMOKE the
+//! bench only exercises the paths on the tiny preset (n=1-scale timings
+//! are meaningless, so no assertions).
+
+use std::time::{Duration, Instant};
+
+use scoutattention::config::RunConfig;
+use scoutattention::serve::{EnginePool, StreamEvent, StreamHandle, Submission};
+use scoutattention::util::bench::smoke;
+use scoutattention::util::Json;
+
+const WAIT: Duration = Duration::from_secs(300);
+
+fn prompt(len: usize, salt: u32) -> Vec<u32> {
+    (0..len as u32).map(|i| 1 + (i * 13 + salt * 5) % 255).collect()
+}
+
+struct ArmResult {
+    share_pct: usize,
+    requests: usize,
+    ttft_mean_us: f64,
+    ttft_p50_us: f64,
+    hits: u64,
+    published: u64,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p) as usize]
+}
+
+/// Submit one streaming request and return its TTFT (submit -> first
+/// token), draining the stream to completion before returning so arms
+/// never overlap.
+fn timed_request(pool: &EnginePool, prompt: Vec<u32>, new_tokens: usize) -> f64 {
+    let t0 = Instant::now();
+    let h = pool.submit(Submission::new(prompt, new_tokens).streaming());
+    let mut ttft = None;
+    loop {
+        match h.recv_timeout(WAIT) {
+            Some(StreamEvent::Token { .. }) => {
+                ttft.get_or_insert_with(|| t0.elapsed().as_secs_f64() * 1e6);
+            }
+            Some(StreamEvent::Done(_)) => {
+                return ttft.expect("request produced no token before Done")
+            }
+            Some(other) => panic!("unexpected event {other:?}"),
+            None => panic!("stream stalled"),
+        }
+    }
+}
+
+fn drain(h: StreamHandle) {
+    h.wait().expect("warm-up request completed");
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_arm(
+    preset: &str,
+    share_pct: usize,
+    n_requests: usize,
+    prefix_blocks: usize,
+    tail_len: usize,
+    new_tokens: usize,
+    cache_blocks: usize,
+    prefill_chunk: usize,
+) -> ArmResult {
+    let mut cfg = RunConfig::for_preset(preset);
+    cfg.server.replicas = 1;
+    cfg.server.max_batch = 2;
+    cfg.scout.prefill_chunk = prefill_chunk;
+    cfg.scout.prefix_cache_blocks = cache_blocks;
+    let pool = EnginePool::start(cfg).expect("pool start");
+    let bs = pool.spec().block_size;
+    let shared = prompt(prefix_blocks * bs, 7);
+
+    // Seed the pool so the arm's hit fraction is realized from request
+    // 0 (steady-state traffic, not a cold start).
+    let mut warm = shared.clone();
+    warm.extend(prompt(tail_len, 999));
+    drain(pool.submit(Submission::new(warm, new_tokens)));
+
+    let mut ttfts: Vec<f64> = Vec::new();
+    for i in 0..n_requests {
+        // First `share_pct`% of every 100-request stripe shares the
+        // system prefix; deterministic and exact for n_requests <= 100.
+        let hits_prefix = i * 100 < share_pct * n_requests;
+        let p = if hits_prefix {
+            let mut p = shared.clone();
+            p.extend(prompt(tail_len, 100 + i as u32)); // unique tail
+            p
+        } else {
+            prompt(prefix_blocks * bs + tail_len, 500 + i as u32)
+        };
+        ttfts.push(timed_request(&pool, p, new_tokens));
+    }
+
+    let stats = pool.stats();
+    let pfx = stats.get("prefix").expect("prefix counters in stats");
+    let result = ArmResult {
+        share_pct,
+        requests: n_requests,
+        ttft_mean_us: ttfts.iter().sum::<f64>() / ttfts.len() as f64,
+        ttft_p50_us: {
+            let mut s = ttfts.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            percentile(&s, 0.5)
+        },
+        hits: pfx.req_usize("hits").unwrap_or(0) as u64,
+        published: pfx.req_usize("published").unwrap_or(0) as u64,
+    };
+    pool.shutdown().expect("shutdown");
+    result
+}
+
+fn main() {
+    let quick = smoke() || std::env::args().any(|a| a == "--quick");
+    println!("prefix_reuse — TTFT vs shared-system-prompt hit rate");
+    // Full mode: a ~1920-token shared system prompt on the serve-20m
+    // preset (60 blocks of 32); quick mode shrinks to test-tiny just to
+    // exercise probe/import/publish end to end.
+    let (preset, n_requests, prefix_blocks, tail_len, cache_blocks, prefill_chunk) =
+        if quick { ("test-tiny", 4, 8, 16, 64, 16) } else { ("serve-20m", 10, 60, 32, 1024, 256) };
+    let new_tokens = 2;
+
+    let mut results = Vec::new();
+    for share_pct in [0usize, 50, 90] {
+        let r = run_arm(
+            preset,
+            share_pct,
+            n_requests,
+            prefix_blocks,
+            tail_len,
+            new_tokens,
+            cache_blocks,
+            prefill_chunk,
+        );
+        println!(
+            "share {:>3}%  requests {:>3}  ttft mean {:>10.1} us  p50 {:>10.1} us  \
+             pool hits {:>4} published {:>4}",
+            r.share_pct, r.requests, r.ttft_mean_us, r.ttft_p50_us, r.hits, r.published
+        );
+        results.push(r);
+    }
+
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("share_pct", Json::num(r.share_pct as f64)),
+                ("requests", Json::num(r.requests as f64)),
+                ("ttft_mean_us", Json::num(r.ttft_mean_us)),
+                ("ttft_p50_us", Json::num(r.ttft_p50_us)),
+                ("pool_hits", Json::num(r.hits as f64)),
+                ("pool_published", Json::num(r.published as f64)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::str("prefix_reuse")),
+        ("quick", Json::Bool(quick)),
+        ("preset", Json::str(preset)),
+        ("prefix_blocks", Json::num(prefix_blocks as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = std::env::var("SCOUT_BENCH_PREFIX_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_prefix.json")
+        });
+    std::fs::write(&path, json.to_string()).expect("write bench json");
+    println!("wrote prefix reuse rows to {}", path.display());
+
+    if quick {
+        println!("quick/smoke mode: skipping TTFT assertions");
+        return;
+    }
+    let (t0, t50, t90) =
+        (results[0].ttft_mean_us, results[1].ttft_mean_us, results[2].ttft_mean_us);
+    println!("ttft vs 0%-hit: 50% {:.2}x, 90% {:.2}x", t50 / t0, t90 / t0);
+    assert!(results[1].hits > 0 && results[2].hits > 0, "hit arms must actually hit");
+    assert!(
+        t50 < t0 && t90 < t50,
+        "TTFT must drop monotonically with the hit rate \
+         (0%: {t0:.1}us, 50%: {t50:.1}us, 90%: {t90:.1}us)"
+    );
+    assert!(
+        t90 <= 0.5 * t0,
+        "90%-hit TTFT must be at most half the 0%-hit TTFT \
+         ({t90:.1}us vs {t0:.1}us) — if this fails, imports are not skipping \
+         prefill compute"
+    );
+}

@@ -44,13 +44,18 @@ impl FullKvScheduler {
         for (s, seq) in seqs.iter().enumerate() {
             let len = seq.cache.len();
             for layer in 0..l {
-                // contiguous [len, Hkv, D] prefix of the layer (per-layer
-                // shard read lock only)
+                // [len, Hkv, D] prefix of the layer, walked block by
+                // block (per-layer shard read lock only) — blocks are no
+                // longer one contiguous slab under refcounted storage.
                 if len > 0 {
                     let view = seq.cache.layer(layer);
                     let off = (layer * b + s) * seq_w;
-                    kc.data_mut()[off..off + len * w].copy_from_slice(view.k_rows(0, len));
-                    vc.data_mut()[off..off + len * w].copy_from_slice(view.v_rows(0, len));
+                    view.copy_rows_into(
+                        0,
+                        len,
+                        &mut kc.data_mut()[off..off + len * w],
+                        &mut vc.data_mut()[off..off + len * w],
+                    );
                 }
                 stats.layers[layer].dense_tokens += len + 1;
             }

@@ -80,6 +80,12 @@ pub struct ScoutConfig {
     /// Chunking is numerically exact; a value >= the prompt length
     /// degenerates to the seed's inline whole-prompt prefill.
     pub prefill_chunk: usize,
+    /// Capacity of the cross-request prefix cache, in chunks (one chunk
+    /// = one KV block per layer; the chunk size IS the model's block
+    /// size, so there is no separate knob to keep consistent). `0`
+    /// (default) disables prefix reuse entirely — no pool is built and
+    /// admission behaves exactly as before.
+    pub prefix_cache_blocks: usize,
 }
 
 impl Default for ScoutConfig {
@@ -94,6 +100,7 @@ impl Default for ScoutConfig {
             worker_groups: 0,
             threads_per_group: 1,
             prefill_chunk: crate::coordinator::DEFAULT_PREFILL_CHUNK,
+            prefix_cache_blocks: 0,
         }
     }
 }
@@ -128,6 +135,9 @@ impl ScoutConfig {
         if let Some(v) = j.get("prefill_chunk") {
             c.prefill_chunk = v.as_usize().unwrap_or(c.prefill_chunk);
         }
+        if let Some(v) = j.get("prefix_cache_blocks") {
+            c.prefix_cache_blocks = v.as_usize().unwrap_or(c.prefix_cache_blocks);
+        }
         // Legacy knob from the shared-pool era: *total* CPU threads. Map
         // it onto the sharded shape that preserves the thread budget:
         // that many single-thread groups (the scheduler caps groups at
@@ -151,6 +161,7 @@ impl ScoutConfig {
             ("worker_groups", Json::num(self.worker_groups as f64)),
             ("threads_per_group", Json::num(self.threads_per_group as f64)),
             ("prefill_chunk", Json::num(self.prefill_chunk as f64)),
+            ("prefix_cache_blocks", Json::num(self.prefix_cache_blocks as f64)),
         ])
     }
 }
@@ -194,6 +205,16 @@ mod tests {
         assert_eq!(c.prefill_chunk, 64);
         let back = ScoutConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.prefill_chunk, 64);
+    }
+
+    #[test]
+    fn prefix_cache_defaults_off_and_roundtrips() {
+        assert_eq!(ScoutConfig::default().prefix_cache_blocks, 0, "reuse is opt-in");
+        let c = ScoutConfig::from_json(&Json::parse("{\"prefix_cache_blocks\":256}").unwrap())
+            .unwrap();
+        assert_eq!(c.prefix_cache_blocks, 256);
+        let back = ScoutConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.prefix_cache_blocks, 256);
     }
 
     #[test]

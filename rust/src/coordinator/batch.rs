@@ -107,11 +107,14 @@ impl SeqState {
 
     /// Rebuild a live sequence from a handoff on the receiving replica.
     /// `decode_wall_us` restarts here: the destination is where decoding
-    /// actually happens.
-    pub fn from_handoff(h: SeqHandoff) -> Self {
-        Self {
+    /// actually happens. The export is validated structurally before
+    /// re-sharding; a malformed handoff returns a structured error for
+    /// the replica loop to fail the request with, instead of panicking
+    /// inside the shard locks.
+    pub fn from_handoff(h: SeqHandoff) -> crate::Result<Self> {
+        Ok(Self {
             id: h.id,
-            cache: Arc::new(ShardedKvCache::import_seq(h.export)),
+            cache: Arc::new(ShardedKvCache::import_seq(h.export)?),
             resident: h.resident,
             selected: h.selected,
             scores: h.scores,
@@ -120,7 +123,7 @@ impl SeqState {
             generated: h.generated,
             max_new_tokens: h.max_new_tokens,
             t_start: std::time::Instant::now(),
-        }
+        })
     }
 }
 

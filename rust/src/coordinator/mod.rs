@@ -62,6 +62,12 @@ pub trait DecodeScheduler {
     /// Advance the prefill by at most one chunk; `true` once complete.
     fn prefill_step(&mut self, st: &mut PrefillState) -> crate::Result<bool>;
 
+    /// Attach a cross-request prefix pool to this scheduler's admission
+    /// path: later `begin_prefill`s probe it before computing each
+    /// block-aligned chunk and publish the blocks they compute. Default
+    /// is a no-op — baseline schedulers admit without prefix reuse.
+    fn attach_prefix_pool(&mut self, _pool: std::sync::Arc<crate::kvcache::PrefixPool>) {}
+
     /// Finalize a completed prefill into a ready-to-decode sequence
     /// (resident sets, recall countdowns — this scheduler's policy).
     fn finish_prefill(&mut self, st: PrefillState) -> crate::Result<SeqState>;

@@ -24,8 +24,11 @@
 //! `advance` falls back to the fused whole-prompt entry in one call —
 //! identical behavior to the seed.
 
+use std::sync::Arc;
+
 use crate::engines::gpu::BatchPartial;
 use crate::engines::{GpuEngine, NativeEngine};
+use crate::kvcache::{chain_hash, PrefixPool, CHAIN_SEED};
 use crate::model::ModelSpec;
 use crate::sparse::{score_blocks_slabs, select_topk};
 use crate::tensor::Tensor;
@@ -63,6 +66,19 @@ pub struct PrefillState {
     /// leases, so chunk after chunk reuses one buffer per thread
     /// instead of allocating per position).
     scratch: Arena,
+    /// Cross-request prefix cache, when the serving config enables it.
+    pool: Option<Arc<PrefixPool>>,
+    /// Running chained chunk hash over blocks `[0, hashed_upto/bs)`;
+    /// commits to the entire token prefix (see `kvcache::prefix`).
+    chain: u64,
+    /// Token frontier (multiple of the block size) up to which blocks
+    /// have been hashed — imported on a pool hit, or published after
+    /// local compute.
+    hashed_upto: usize,
+    /// Set on the first pool miss: later chunks of this prompt cannot
+    /// be resident (a publisher publishes every prefix chunk), so stop
+    /// probing and just compute + publish.
+    probe_missed: bool,
 }
 
 impl PrefillState {
@@ -84,7 +100,20 @@ impl PrefillState {
             chunk_tokens: chunk_tokens.max(1),
             h_last: Vec::new(),
             scratch: Arena::new(),
+            pool: None,
+            chain: CHAIN_SEED,
+            hashed_upto: 0,
+            probe_missed: false,
         })
+    }
+
+    /// Attach a cross-request prefix pool: subsequent `advance` calls
+    /// probe it before computing each block-aligned chunk (hit →
+    /// import, skip the compute) and publish every block they do
+    /// compute. Must be called before the first `advance`.
+    pub fn attach_pool(&mut self, pool: Arc<PrefixPool>) {
+        debug_assert_eq!(self.done, 0, "attach_pool after prefill started");
+        self.pool = Some(pool);
     }
 
     /// The final position's post-all-layers hidden state (empty until
@@ -119,8 +148,18 @@ impl PrefillState {
         }
         if !gpu.tile_flexible() {
             // Shape-locked backend: one "chunk" is the fused whole-prompt
-            // artifact (the seed's admission path, unchanged).
+            // artifact (the seed's admission path, unchanged). The
+            // prefix pool is a chunked-path feature — the fused artifact
+            // computes the whole prompt in one call, so there is no
+            // per-block seam to import at.
             return self.advance_fused(gpu);
+        }
+        self.import_cached_prefix();
+        if self.is_complete() {
+            // Unreachable by construction (the final chunk is never
+            // imported, so compute below always has work) — kept as a
+            // safety net if the import guard ever changes.
+            return Ok(true);
         }
         let spec = &gpu.spec;
         let (hq, hkv, dd) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
@@ -154,24 +193,37 @@ impl PrefillState {
                     .collect();
                 let (view, q, scratch) = (&view, &q, &self.scratch);
                 let s_max = spec.max_seq;
+                let bs = spec.block_size;
                 par::par_for_each_strided(rows, par::default_threads(), |t, (ar, mr, lr)| {
                     let prefix = start + t + 1;
                     let mut scores = scratch.lease(s_max);
-                    simd::softmax_accum(
-                        &q.rows(t, 1)[..hq * dd],
-                        view.k_rows(0, prefix),
-                        view.v_rows(0, prefix),
-                        None,
-                        prefix,
-                        hq,
-                        hkv,
-                        dd,
-                        scale,
-                        ar,
-                        mr,
-                        lr,
-                        &mut scores,
-                    );
+                    // One softmax-accumulate per KV block: block slabs
+                    // are independently owned, so the [0..=t] prefix is
+                    // walked block by block. The online-softmax merge
+                    // makes the segmented accumulation bitwise equal to
+                    // the interpreter's fused prefill row, which
+                    // segments at the same boundaries (see
+                    // `Interpreter::prefill`).
+                    let mut seg = 0;
+                    while seg < prefix {
+                        let seg_len = bs.min(prefix - seg);
+                        simd::softmax_accum(
+                            &q.rows(t, 1)[..hq * dd],
+                            view.k_rows(seg, seg_len),
+                            view.v_rows(seg, seg_len),
+                            None,
+                            seg_len,
+                            hq,
+                            hkv,
+                            dd,
+                            scale,
+                            ar,
+                            mr,
+                            lr,
+                            &mut scores,
+                        );
+                        seg += seg_len;
+                    }
                 });
             }
             x = gpu.post_attn_tile(&x, &partial, layer)?;
@@ -180,7 +232,56 @@ impl PrefillState {
             self.h_last = x.rows(tlen - 1, 1).to_vec();
         }
         self.done = end;
+        self.publish_computed_blocks();
         Ok(self.is_complete())
+    }
+
+    /// Import every still-unmet block-aligned chunk that the pool holds
+    /// for this prompt's prefix: advance `done` past each hit without
+    /// executing it. Stops at the first miss (later chunks chain-hash
+    /// through the missing one, so they cannot be resident), at the
+    /// block whose import would complete the prefill (the final chunk
+    /// is always computed so `finish` sees a real last hidden state),
+    /// or at a block-misaligned frontier. No cache or pool guard is
+    /// held across the probe/import pair.
+    fn import_cached_prefix(&mut self) {
+        let Some(pool) = self.pool.clone() else { return };
+        let bs = self.seq.cache.spec().block_size;
+        while !self.probe_missed
+            && self.hashed_upto == self.done
+            && self.done % bs == 0
+            && self.done + bs < self.total
+        {
+            let key = chain_hash(self.chain, &self.prompt[self.done..self.done + bs]);
+            match pool.probe(key) {
+                Some(layers) => {
+                    self.seq.cache.import_shared_block(self.done / bs, &layers);
+                    self.chain = key;
+                    self.done += bs;
+                    self.hashed_upto = self.done;
+                }
+                None => {
+                    self.probe_missed = true;
+                }
+            }
+        }
+    }
+
+    /// Publish every complete block computed since the last call:
+    /// seal its digests, hand refcounted clones of all layers to the
+    /// pool under the block's chained chunk hash. Imported blocks are
+    /// already past `hashed_upto`, so only locally-computed blocks are
+    /// published (a re-publish would be a byte-identical no-op anyway).
+    fn publish_computed_blocks(&mut self) {
+        let Some(pool) = self.pool.clone() else { return };
+        let bs = self.seq.cache.spec().block_size;
+        while self.hashed_upto + bs <= self.done {
+            let block = self.hashed_upto / bs;
+            let key = chain_hash(self.chain, &self.prompt[self.hashed_upto..self.hashed_upto + bs]);
+            pool.publish(key, self.seq.cache.share_block(block));
+            self.chain = key;
+            self.hashed_upto += bs;
+        }
     }
 
     /// Fused whole-prompt fallback for shape-locked backends.

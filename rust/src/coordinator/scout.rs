@@ -35,6 +35,7 @@ use std::sync::Arc;
 use crate::config::ScoutConfig;
 use crate::engines::gpu::BatchPartial;
 use crate::engines::{GpuEngine, NativeEngine};
+use crate::kvcache::PrefixPool;
 use crate::sparse::{score_blocks_slabs, select_topk, TopkSelection};
 use crate::tensor::Tensor;
 use crate::util::par;
@@ -63,6 +64,11 @@ pub struct ScoutScheduler {
     tail_m: Tensor,
     cpu_bp: BatchPartial,
     results: Vec<JobResult>,
+    /// Cross-request prefix cache for the admission path. Auto-created
+    /// from `cfg.prefix_cache_blocks` (offline harness runs); the serve
+    /// plane replaces it via `attach_prefix_pool` so telemetry and the
+    /// router observe the same instance.
+    prefix_pool: Option<Arc<PrefixPool>>,
 }
 
 impl ScoutScheduler {
@@ -85,6 +91,8 @@ impl ScoutScheduler {
         let par_threads = par::default_threads();
         let (kb, bs, hkv, dd, hq) =
             (spec.k_blocks, spec.block_size, spec.n_kv_heads, spec.head_dim, spec.n_q_heads);
+        let prefix_pool =
+            (cfg.prefix_cache_blocks > 0).then(|| Arc::new(PrefixPool::new(cfg.prefix_cache_blocks)));
         Self {
             gpu,
             native,
@@ -100,12 +108,18 @@ impl ScoutScheduler {
             tail_m: Tensor::zeros(&[tile, 1, bs]),
             cpu_bp: BatchPartial::empty(tile, hq, dd),
             results: Vec::new(),
+            prefix_pool,
         }
     }
 
     /// The worker-group plane (tests / benches introspection).
     pub fn worker_groups(&self) -> &WorkerGroups {
         &self.pool
+    }
+
+    /// The attached cross-request prefix pool, if reuse is enabled.
+    pub fn prefix_pool(&self) -> Option<&Arc<PrefixPool>> {
+        self.prefix_pool.as_ref()
     }
 
     /// Whether CPU pre-computation runs one layer ahead. Requires the
@@ -330,7 +344,16 @@ impl DecodeScheduler for ScoutScheduler {
         req: &super::request::RequestSpec,
         budget_blocks: usize,
     ) -> crate::Result<super::PrefillState> {
-        super::PrefillState::begin(&self.gpu.spec, req, budget_blocks, self.cfg.prefill_chunk)
+        let mut st =
+            super::PrefillState::begin(&self.gpu.spec, req, budget_blocks, self.cfg.prefill_chunk)?;
+        if let Some(pool) = &self.prefix_pool {
+            st.attach_pool(pool.clone());
+        }
+        Ok(st)
+    }
+
+    fn attach_prefix_pool(&mut self, pool: Arc<PrefixPool>) {
+        self.prefix_pool = Some(pool);
     }
 
     fn prefill_step(&mut self, st: &mut super::PrefillState) -> crate::Result<bool> {

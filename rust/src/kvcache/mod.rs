@@ -11,14 +11,16 @@
 //! gather operation that materializes resident blocks for the GPU engine.
 
 mod digest;
+mod prefix;
 mod resident;
 mod seq;
 mod store;
 
 pub use digest::DigestStore;
+pub use prefix::{chain_hash, first_chunk_key, PrefixPool, PrefixPoolStats, CHAIN_SEED};
 pub use resident::ResidentSet;
 pub use seq::{LayerSlabs, SeqKvCache};
-pub use store::{KvSeqExport, LayerView, ShardedKvCache};
+pub use store::{KvBlock, KvSeqExport, LayerView, ShardedKvCache};
 
 /// Index of a KV block within one sequence's cache (position-major:
 /// block `b` covers tokens `[b*bs, (b+1)*bs)`).

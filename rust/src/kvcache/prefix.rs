@@ -1,0 +1,345 @@
+//! Cross-request prefix cache: content-addressed KV blocks shared by
+//! refcount.
+//!
+//! Production chat traffic re-prefills the same long system prompts on
+//! every request, so prefill compute — not decode — dominates TTFT
+//! under realistic load. The [`PrefixPool`] removes that work: prompts
+//! are hashed in fixed token *chunks* (chunk size = the KV block size,
+//! so one chunk is exactly one complete block per layer), and each
+//! complete, fully-computed block is published under the *chained* hash
+//! of every token up to and including its chunk. A later request walks
+//! its own prompt chunk by chunk, recomputes the chain, and imports
+//! every block it finds — skipping the chunk's projection + attention
+//! entirely — until the first miss, after which it computes (and
+//! publishes) as normal.
+//!
+//! **Chained hashing.** `key_i = fnv1a(key_{i-1} ‖ chunk_i tokens)`,
+//! seeded with the FNV-1a offset basis. Chaining means a chunk's key
+//! commits to the *entire* prefix, not just the chunk's own tokens —
+//! required for correctness, since causal attention makes a block's K/V
+//! bytes a function of every earlier token. Two prompts that share the
+//! first `n` chunks map to the same first `n` keys and then diverge
+//! permanently. FNV is not collision-resistant; for a single-process
+//! DRAM pool fed by trusted tokenized prompts that trade-off matches
+//! the session-affinity hash already used by the router.
+//!
+//! **Refcount lifecycle.** A published entry holds one `Arc` clone per
+//! layer of the block ([`KvBlock`]); importing sequences hold further
+//! clones. Eviction (LRU by probe/publish tick, bounded by the
+//! configured capacity) only removes entries whose blocks the pool
+//! *alone* references — a block any live sequence still holds has
+//! `strong_count > 1` and is skipped, so an import can never observe a
+//! freed block. Writes on the store side go through `Arc::make_mut`
+//! copy-on-write, so a sequence diverging after a shared prefix never
+//! mutates pool-held bytes.
+//!
+//! Generation stays byte-identical with the pool on or off: imported
+//! blocks are the exact slabs a cold computation produced (pinned by
+//! `rust/tests/prefill_disagg.rs` and `rust/tests/concurrency.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::store::KvBlock;
+
+/// FNV-1a offset basis — the root of every chunk-hash chain.
+pub const CHAIN_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Extend a chunk-hash chain over one chunk's tokens: feeds the
+/// previous key's bytes, then each token's LE bytes, through FNV-1a.
+/// Start from [`CHAIN_SEED`]; the result commits to the whole prefix.
+pub fn chain_hash(prev: u64, tokens: &[u32]) -> u64 {
+    let mut h = prev;
+    let mut mix = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    };
+    for b in prev.to_le_bytes() {
+        mix(b);
+    }
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            mix(b);
+        }
+    }
+    h
+}
+
+/// Hash of the first chunk of a prompt, if it has one — the router's
+/// prefix-locality hint ([`crate::serve::Router`]). `chunk` is the KV
+/// block size of the serving spec.
+pub fn first_chunk_key(prompt: &[u32], chunk: usize) -> Option<u64> {
+    if chunk == 0 || prompt.len() < chunk {
+        return None;
+    }
+    Some(chain_hash(CHAIN_SEED, &prompt[..chunk]))
+}
+
+/// One cached chunk: the block for every layer, plus its LRU stamp.
+struct Entry {
+    /// `[n_layers]` refcounted blocks (sealed digests travel inside).
+    layers: Vec<Arc<KvBlock>>,
+    tick: u64,
+}
+
+struct Inner {
+    map: HashMap<u64, Entry>,
+    /// Monotone logical clock bumped by every probe hit and publish.
+    tick: u64,
+}
+
+/// Point-in-time counter snapshot for telemetry / `{"stats":true}`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixPoolStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub published: u64,
+    pub evicted: u64,
+    /// Entries currently resident (chunks, not bytes).
+    pub entries: u64,
+}
+
+/// Capacity-bounded, LRU-evicting map from chained chunk hash to the
+/// published per-layer KV blocks of that chunk. One pool per replica
+/// stack; shared between the prefill path (probe/publish), telemetry
+/// (stats), and the router (contains → locality hint).
+///
+/// All methods take `&self` and complete without calling out while the
+/// internal mutex is held, so callers may invoke them from any thread —
+/// but callers must not hold *their own* shard or scheduler guards
+/// across `probe`/`publish` (enforced by `cargo xtask audit`).
+pub struct PrefixPool {
+    inner: Mutex<Inner>,
+    /// Max resident entries; eviction keeps `map.len()` at or under
+    /// this unless every LRU candidate is still held by a live
+    /// sequence (those are never evicted, so the pool can transiently
+    /// overshoot).
+    capacity: usize,
+    // Counters are monotone statistics, read only by telemetry.
+    // ordering: Relaxed — no reader infers other memory from them.
+    hits: AtomicU64,
+    misses: AtomicU64,
+    published: AtomicU64,
+    evicted: AtomicU64,
+}
+
+impl PrefixPool {
+    /// `capacity` = max cached chunks (each chunk holds `n_layers`
+    /// blocks). A capacity of 0 is legal but useless; the config layer
+    /// treats 0 as "disabled" and never constructs a pool.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            published: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look up a chunk by its chained hash. A hit refreshes the entry's
+    /// LRU stamp and returns `Arc` clones of every layer's block — the
+    /// caller now holds references, so the entry cannot be evicted out
+    /// from under it (eviction skips entries with outstanding clones).
+    pub fn probe(&self, key: u64) -> Option<Vec<Arc<KvBlock>>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(&key) {
+            Some(entry) => {
+                entry.tick = tick;
+                let layers = entry.layers.iter().map(Arc::clone).collect();
+                drop(inner);
+                // ordering: Relaxed — statistics only (see field doc).
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(layers)
+            }
+            None => {
+                drop(inner);
+                // ordering: Relaxed — statistics only (see field doc).
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Read-only membership test (no LRU refresh, no counter bumps) —
+    /// the router's locality hint must not perturb eviction order or
+    /// hit-rate telemetry.
+    pub fn contains(&self, key: u64) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&key)
+    }
+
+    /// Publish one computed chunk's per-layer blocks under `key`, then
+    /// evict LRU-oldest unreferenced entries until within capacity.
+    /// Re-publishing an existing key refreshes its stamp and keeps the
+    /// incumbent blocks (they are byte-identical by construction —
+    /// same chained key ⇒ same token prefix ⇒ same deterministic K/V).
+    pub fn publish(&self, key: u64, layers: Vec<Arc<KvBlock>>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                e.get_mut().tick = tick;
+                return;
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(Entry { layers, tick });
+            }
+        }
+        let mut evicted = 0u64;
+        while inner.map.len() > self.capacity {
+            // LRU among evictable entries only: a block some live
+            // sequence (or an in-flight probe) still references has
+            // strong_count > 1 on at least one layer and must stay.
+            // The just-published entry is exempt too — when every older
+            // entry is live it would be the sole candidate, and evicting
+            // the chunk we were just asked to cache defeats the publish;
+            // the pool overshoots instead.
+            let victim = inner
+                .map
+                .iter()
+                .filter(|(k, e)| {
+                    **k != key && e.layers.iter().all(|b| Arc::strong_count(b) == 1)
+                })
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| *k);
+            let Some(victim) = victim else {
+                break; // everything resident is live — overshoot
+            };
+            inner.map.remove(&victim);
+            evicted += 1;
+        }
+        drop(inner);
+        // ordering: Relaxed — statistics only (see field doc).
+        self.published.fetch_add(1, Ordering::Relaxed);
+        if evicted > 0 {
+            // ordering: Relaxed — statistics only (see field doc).
+            self.evicted.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    pub fn stats(&self) -> PrefixPoolStats {
+        // ordering: Relaxed — independent monotone counters; a snapshot
+        // taken mid-update is still a valid (slightly stale) reading.
+        PrefixPoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            published: self.published.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            entries: self.inner.lock().unwrap().map.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blockset(n_layers: usize, fill: f32) -> Vec<Arc<KvBlock>> {
+        (0..n_layers)
+            .map(|_| {
+                Arc::new(KvBlock {
+                    k: vec![fill; 8],
+                    v: vec![-fill; 8],
+                    kmin: vec![fill; 2],
+                    kmax: vec![fill; 2],
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chain_hash_commits_to_whole_prefix() {
+        let a1 = chain_hash(CHAIN_SEED, &[1, 2, 3]);
+        let a2 = chain_hash(a1, &[4, 5, 6]);
+        // Same tokens, same chain -> same keys.
+        assert_eq!(a1, chain_hash(CHAIN_SEED, &[1, 2, 3]));
+        assert_eq!(a2, chain_hash(chain_hash(CHAIN_SEED, &[1, 2, 3]), &[4, 5, 6]));
+        // Different first chunk -> second key differs even when the
+        // second chunk's tokens match.
+        let b1 = chain_hash(CHAIN_SEED, &[9, 2, 3]);
+        assert_ne!(a1, b1);
+        assert_ne!(a2, chain_hash(b1, &[4, 5, 6]));
+        // Chunk boundaries matter: [1,2,3]+[4] != [1,2]+[3,4] chains.
+        let c = chain_hash(chain_hash(CHAIN_SEED, &[1, 2]), &[3, 4]);
+        assert_ne!(chain_hash(a1, &[4]), c);
+    }
+
+    #[test]
+    fn first_chunk_key_requires_a_full_chunk() {
+        assert_eq!(first_chunk_key(&[1, 2, 3], 4), None);
+        assert_eq!(first_chunk_key(&[], 4), None);
+        assert_eq!(first_chunk_key(&[1, 2, 3], 0), None);
+        let k = first_chunk_key(&[1, 2, 3, 4, 5], 4);
+        assert_eq!(k, Some(chain_hash(CHAIN_SEED, &[1, 2, 3, 4])));
+    }
+
+    #[test]
+    fn probe_publish_roundtrip_and_counters() {
+        let pool = PrefixPool::new(8);
+        assert!(pool.probe(42).is_none());
+        pool.publish(42, blockset(3, 1.0));
+        assert!(pool.contains(42));
+        let got = pool.probe(42).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].k()[0], 1.0);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.published, s.evicted, s.entries), (1, 1, 1, 0, 1));
+    }
+
+    #[test]
+    fn republish_keeps_incumbent_blocks() {
+        let pool = PrefixPool::new(8);
+        pool.publish(7, blockset(2, 1.0));
+        pool.publish(7, blockset(2, 2.0));
+        assert_eq!(pool.probe(7).unwrap()[0].k()[0], 1.0);
+        assert_eq!(pool.stats().entries, 1);
+    }
+
+    #[test]
+    fn lru_eviction_skips_entries_held_by_live_sequences() {
+        let pool = PrefixPool::new(2);
+        pool.publish(1, blockset(2, 1.0));
+        pool.publish(2, blockset(2, 2.0));
+        // A live sequence imports entry 1 (holds Arc clones), then a
+        // third publish overflows capacity: entry 1 is LRU-oldest but
+        // referenced, so entry 2 must be the victim.
+        let held = pool.probe(1).unwrap();
+        pool.publish(3, blockset(2, 3.0));
+        assert!(pool.contains(1), "held entry was evicted");
+        assert!(pool.contains(3));
+        assert!(!pool.contains(2), "unreferenced LRU entry survived");
+        assert_eq!(pool.stats().evicted, 1);
+        // Once the holder drops, entry 1 becomes evictable again.
+        drop(held);
+        pool.publish(4, blockset(2, 4.0));
+        assert!(!pool.contains(1));
+        assert_eq!(pool.stats().evicted, 2);
+    }
+
+    #[test]
+    fn pool_overshoots_rather_than_evicting_live_entries() {
+        let pool = PrefixPool::new(1);
+        pool.publish(1, blockset(1, 1.0));
+        let a = pool.probe(1).unwrap();
+        pool.publish(2, blockset(1, 2.0));
+        let b = pool.probe(2).unwrap();
+        pool.publish(3, blockset(1, 3.0));
+        let c = pool.probe(3).unwrap();
+        // Every entry is held by a live "sequence": nothing evictable.
+        assert_eq!(pool.stats().entries, 3);
+        assert_eq!(pool.stats().evicted, 0);
+        drop((a, b, c));
+        pool.publish(4, blockset(1, 4.0));
+        assert_eq!(pool.stats().entries, 1);
+    }
+}

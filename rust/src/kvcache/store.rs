@@ -1,5 +1,6 @@
 //! Sharded per-sequence KV block store: the DRAM pool split into
-//! per-layer-group `RwLock` shards.
+//! per-layer-group `RwLock` shards, with refcounted copy-on-write
+//! blocks.
 //!
 //! The monolithic `RwLock<SeqKvCache>` made every touch of a sequence's
 //! cache — a worker group's block-attention read on layer `i+1`, the
@@ -11,6 +12,22 @@
 //! different shards, so the layer-`i` / layer-`i+1` pipeline overlap
 //! never shares a lock) and keeps the token count in an atomic so
 //! `len`/`full_blocks`/`tail_len` take no lock at all.
+//!
+//! **Block ownership.** Storage inside a shard is one [`Arc<KvBlock>`]
+//! per (layer, block) — all blocks are allocated zero-filled at
+//! construction, so the steady-state decode path never allocates. The
+//! `Arc` refcount is the sharing mechanism behind cross-request prefix
+//! reuse: the prefix pool ([`super::prefix::PrefixPool`]) holds clones
+//! of published blocks, an importing sequence holds clones of cached
+//! ones, and every write path goes through `Arc::make_mut` — free when
+//! the block is uniquely owned (the normal decode case) and a
+//! copy-on-write clone on first write to a shared block, so divergence
+//! after a shared prefix can never corrupt another sequence's (or the
+//! pool's) copy. Each block carries its own sealed `kmin`/`kmax`
+//! digest so sparse block selection works identically on imported
+//! blocks; the shard additionally keeps dense per-layer `[nb, Hkv*D]`
+//! digest slabs (refreshed from the per-block values) because digest
+//! scoring wants one contiguous operand.
 //!
 //! Per-layer digests live *inside* the owning shard: digest scoring for
 //! layer `l` and block reads of layer `l` share one read lock, while
@@ -33,26 +50,73 @@ use super::BlockSlabs;
 /// Default shard count (clamped to the layer count).
 const DEFAULT_SHARDS: usize = 8;
 
-/// One shard's storage: the K/V tensors and digests of the layers it
-/// owns (layer `l` lives in shard `l % n_shards` at local index
+/// One `[bs, Hkv, D]` block of one layer's K/V, plus its sealed digest.
+///
+/// Blocks are the refcounted sharing unit of the store: the prefix pool
+/// and every importing sequence hold `Arc` clones of the same payload,
+/// and writers clone-on-write via `Arc::make_mut`. The carried
+/// `kmin`/`kmax` travel with the block so an importer can refresh its
+/// dense digest slab without recomputing (byte-identical anyway —
+/// min/max is deterministic over identical bytes — but copying avoids a
+/// needless CoW of the shared payload).
+#[derive(Clone)]
+pub struct KvBlock {
+    pub(crate) k: Vec<f32>,    // [bs, Hkv, D]
+    pub(crate) v: Vec<f32>,    // [bs, Hkv, D]
+    pub(crate) kmin: Vec<f32>, // [Hkv*D], sealed by `rebuild_digest`
+    pub(crate) kmax: Vec<f32>, // [Hkv*D]
+}
+
+impl KvBlock {
+    fn zeroed(bs: usize, w: usize) -> Self {
+        Self {
+            k: vec![0.0; bs * w],
+            v: vec![0.0; bs * w],
+            kmin: vec![f32::INFINITY; w],
+            kmax: vec![f32::NEG_INFINITY; w],
+        }
+    }
+
+    /// K slab `[bs, Hkv, D]` (read-only; writes go through the store).
+    pub fn k(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Sealed digest `(kmin, kmax)`, each `[Hkv*D]`.
+    pub fn digest(&self) -> (&[f32], &[f32]) {
+        (&self.kmin, &self.kmax)
+    }
+}
+
+/// One shard's storage: the blocks and dense digest slabs of the layers
+/// it owns (layer `l` lives in shard `l % n_shards` at local index
 /// `l / n_shards`).
 struct Shard {
-    k: Vec<Tensor>,    // per owned layer [S_max, Hkv, D]
-    v: Vec<Tensor>,    // per owned layer [S_max, Hkv, D]
+    /// Per owned layer: `nb` refcounted blocks (eagerly allocated).
+    blocks: Vec<Vec<Arc<KvBlock>>>,
     kmin: Vec<Tensor>, // per owned layer [nb, Hkv*D]
     kmax: Vec<Tensor>, // per owned layer [nb, Hkv*D]
 }
 
 impl Shard {
-    /// Rebuild the digest of one owned layer's complete block from its
-    /// K slab (disjoint-field borrows; no temporaries).
+    /// Seal one owned layer's complete block digest and refresh the
+    /// dense slab row. A uniquely-owned block is sealed in place from
+    /// its K slab; a shared block is always already sealed (sealing
+    /// happens before publication and exports carry sealed blocks), so
+    /// its stored digest is copied — byte-identical to recomputing.
     fn rebuild_digest(&mut self, local: usize, block: usize, bs: usize, w: usize) {
-        minmax_into(
-            self.k[local].rows(block * bs, bs),
-            w,
-            self.kmin[local].rows_mut(block, 1),
-            self.kmax[local].rows_mut(block, 1),
-        );
+        let arc = &mut self.blocks[local][block];
+        if let Some(b) = Arc::get_mut(arc) {
+            let KvBlock { k, kmin, kmax, .. } = b;
+            minmax_into(&k[..bs * w], w, kmin, kmax);
+        }
+        let arc = &self.blocks[local][block];
+        self.kmin[local].rows_mut(block, 1).copy_from_slice(&arc.kmin);
+        self.kmax[local].rows_mut(block, 1).copy_from_slice(&arc.kmax);
     }
 }
 
@@ -79,16 +143,17 @@ impl ShardedKvCache {
     /// to monolithic locking, useful as a contention baseline.
     pub fn with_shards(spec: &ModelSpec, n_shards: usize) -> Self {
         let n_shards = n_shards.clamp(1, spec.n_layers.max(1));
-        let per = [spec.max_seq, spec.n_kv_heads, spec.head_dim];
         let nb = spec.n_blocks();
+        let bs = spec.block_size;
         let w = spec.n_kv_heads * spec.head_dim;
         let shards = (0..n_shards)
             .map(|s| {
                 // layers s, s + n_shards, s + 2*n_shards, ...
                 let owned = (s..spec.n_layers).step_by(n_shards).count();
                 RwLock::new(Shard {
-                    k: (0..owned).map(|_| Tensor::zeros(&per)).collect(),
-                    v: (0..owned).map(|_| Tensor::zeros(&per)).collect(),
+                    blocks: (0..owned)
+                        .map(|_| (0..nb).map(|_| Arc::new(KvBlock::zeroed(bs, w))).collect())
+                        .collect(),
                     kmin: (0..owned).map(|_| Tensor::full(&[nb, w], f32::INFINITY)).collect(),
                     kmax: (0..owned)
                         .map(|_| Tensor::full(&[nb, w], f32::NEG_INFINITY))
@@ -161,7 +226,9 @@ impl ShardedKvCache {
     /// Bulk-load `tokens` rows of prefill K/V for one layer at token
     /// offset `start` — the chunked-prefill path writes each chunk's
     /// K/V as it is computed; `finish_prefill` publishes the length and
-    /// digests once every chunk has landed.
+    /// digests once every chunk has landed. Spans block boundaries;
+    /// each touched block is written through `Arc::make_mut`
+    /// (copy-on-write if it happens to be shared).
     pub fn load_prefill_rows(
         &self,
         layer: usize,
@@ -171,12 +238,21 @@ impl ShardedKvCache {
         tokens: usize,
     ) {
         let w = self.tok_w();
+        let bs = self.spec.block_size;
         assert!(start + tokens <= self.spec.max_seq);
         assert!(k.len() >= tokens * w && v.len() >= tokens * w);
         let (sid, local) = self.shard_of(layer);
         let mut shard = self.shards[sid].write().unwrap();
-        shard.k[local].rows_mut(start, tokens).copy_from_slice(&k[..tokens * w]);
-        shard.v[local].rows_mut(start, tokens).copy_from_slice(&v[..tokens * w]);
+        let mut done = 0;
+        while done < tokens {
+            let t = start + done;
+            let (b, off) = (t / bs, t % bs);
+            let take = (bs - off).min(tokens - done);
+            let blk = Arc::make_mut(&mut shard.blocks[local][b]);
+            blk.k[off * w..(off + take) * w].copy_from_slice(&k[done * w..(done + take) * w]);
+            blk.v[off * w..(off + take) * w].copy_from_slice(&v[done * w..(done + take) * w]);
+            done += take;
+        }
     }
 
     /// Finish a prefill load: set length and (re)build all digests.
@@ -201,16 +277,22 @@ impl ShardedKvCache {
 
     /// Append one token's K/V for one layer at the current length.
     /// Call for every layer, then [`advance`](Self::advance) once.
+    /// The tail block is uniquely owned by construction (only complete
+    /// blocks are ever published or imported), so the `make_mut` here
+    /// never clones in steady-state decode — zero allocations.
     pub fn append_layer(&self, layer: usize, k_new: &[f32], v_new: &[f32]) {
         let w = self.tok_w();
         assert_eq!(k_new.len(), w, "k_new width");
         assert_eq!(v_new.len(), w, "v_new width");
         let len = self.len();
         assert!(len < self.spec.max_seq, "KV cache overflow");
+        let bs = self.spec.block_size;
+        let (b, off) = (len / bs, len % bs);
         let (sid, local) = self.shard_of(layer);
         let mut shard = self.shards[sid].write().unwrap();
-        shard.k[local].rows_mut(len, 1).copy_from_slice(k_new);
-        shard.v[local].rows_mut(len, 1).copy_from_slice(v_new);
+        let blk = Arc::make_mut(&mut shard.blocks[local][b]);
+        blk.k[off * w..(off + 1) * w].copy_from_slice(k_new);
+        blk.v[off * w..(off + 1) * w].copy_from_slice(v_new);
     }
 
     /// Advance the token count after all layers appended; finalizes the
@@ -241,13 +323,56 @@ impl ShardedKvCache {
         }
     }
 
+    /// Seal one complete block's digests and hand out refcounted clones
+    /// of it across all layers — the source side of a prefix-pool
+    /// publish. Independent of the published `len` (the chunked-prefill
+    /// path publishes blocks before `finish_prefill` runs); the caller
+    /// asserts the block's rows have been loaded. Takes each owning
+    /// shard's write lock one layer at a time and holds no lock across
+    /// the return, so the caller can pass the clones to the pool
+    /// without a guard in scope.
+    pub fn share_block(&self, block: usize) -> Vec<Arc<KvBlock>> {
+        assert!(block < self.spec.n_blocks(), "share_block: block out of range");
+        let bs = self.spec.block_size;
+        let w = self.tok_w();
+        (0..self.spec.n_layers)
+            .map(|layer| {
+                let (sid, local) = self.shard_of(layer);
+                let mut shard = self.shards[sid].write().unwrap();
+                shard.rebuild_digest(local, block, bs, w);
+                Arc::clone(&shard.blocks[local][block])
+            })
+            .collect()
+    }
+
+    /// Adopt a pool-cached block for every layer — the import side of a
+    /// prefix-cache hit. The sequence's pre-allocated zero block is
+    /// replaced by a refcount clone of the shared payload (no slab
+    /// copy), and the dense digest slab rows are refreshed from the
+    /// blocks' sealed digests so scoring sees exactly the values a cold
+    /// computation would have produced.
+    pub fn import_shared_block(&self, block: usize, layers: &[Arc<KvBlock>]) {
+        assert_eq!(layers.len(), self.spec.n_layers, "import_shared_block: layer count");
+        assert!(block < self.spec.n_blocks(), "import_shared_block: block out of range");
+        for (layer, arc) in layers.iter().enumerate() {
+            let (sid, local) = self.shard_of(layer);
+            let mut shard = self.shards[sid].write().unwrap();
+            shard.blocks[local][block] = Arc::clone(arc);
+            shard.kmin[local].rows_mut(block, 1).copy_from_slice(&arc.kmin);
+            shard.kmax[local].rows_mut(block, 1).copy_from_slice(&arc.kmax);
+        }
+    }
+
     /// Detach this sequence's whole KV state for migration to another
-    /// replica stack (prefill/decode disaggregation handoff). When the
+    /// replica stack (prefill/decode disaggregation handoff). Block
+    /// payloads move by refcount either way — an `Arc` clone, never a
+    /// slab copy; blocks still shared with a prefix pool stay shared
+    /// (the importer's first divergent write copies-on-write). When the
     /// caller holds the only reference — the normal case: a freshly
     /// prefilled sequence has never spawned CPU jobs — the per-layer
-    /// K/V slabs and digest tensors are *moved* out of the shard locks
-    /// with zero slab copies. A shared cache (defensive fallback) is
-    /// deep-copied under its read locks and flagged `copied`.
+    /// block vectors and digest tensors are *moved* out of the shard
+    /// locks; a shared cache (defensive fallback) clones refcounts and
+    /// digest tensors under its read locks and is flagged `copied`.
     pub fn export_seq(cache: Arc<Self>) -> KvSeqExport {
         match Arc::try_unwrap(cache) {
             Ok(owned) => {
@@ -256,16 +381,11 @@ impl ShardedKvCache {
                 let mut layers: Vec<Option<LayerKvExport>> = (0..n_layers).map(|_| None).collect();
                 for (sid, lock) in shards.into_iter().enumerate() {
                     let shard = lock.into_inner().unwrap();
-                    let zipped = shard
-                        .k
-                        .into_iter()
-                        .zip(shard.v)
-                        .zip(shard.kmin)
-                        .zip(shard.kmax)
-                        .enumerate();
-                    for (local, (((k, v), kmin), kmax)) in zipped {
+                    let zipped =
+                        shard.blocks.into_iter().zip(shard.kmin).zip(shard.kmax).enumerate();
+                    for (local, ((blocks, kmin), kmax)) in zipped {
                         layers[sid + local * n_shards] =
-                            Some(LayerKvExport { k, v, kmin, kmax });
+                            Some(LayerKvExport { blocks, kmin, kmax });
                     }
                 }
                 KvSeqExport {
@@ -285,8 +405,7 @@ impl ShardedKvCache {
                         let (sid, local) = shared.shard_of(layer);
                         let shard = shared.shards[sid].read().unwrap();
                         LayerKvExport {
-                            k: shard.k[local].clone(),
-                            v: shard.v[local].clone(),
+                            blocks: shard.blocks[local].iter().map(Arc::clone).collect(),
                             kmin: shard.kmin[local].clone(),
                             kmax: shard.kmax[local].clone(),
                         }
@@ -298,41 +417,46 @@ impl ShardedKvCache {
     }
 
     /// Reassemble an exported sequence into a fresh store (the receiving
-    /// replica's side of the handoff). Tensors are moved back into the
-    /// shard layout — re-sharding to a different `n_shards` is still
-    /// zero-copy because the unit of ownership is the per-layer tensor.
-    pub fn import_seq(export: KvSeqExport) -> Self {
+    /// replica's side of the handoff). Block `Arc`s are moved back into
+    /// the shard layout — re-sharding to a different `n_shards` is still
+    /// zero-copy because the unit of ownership is the per-layer block
+    /// vector. The export is validated before any re-sharding happens:
+    /// a malformed handoff (wrong layer count, truncated block vectors,
+    /// mis-shaped K/V or digest payloads) returns a structured error
+    /// instead of panicking inside the shard locks.
+    pub fn import_seq(export: KvSeqExport) -> crate::Result<Self> {
         Self::import_seq_with(export, DEFAULT_SHARDS)
     }
 
     /// [`Self::import_seq`] with an explicit target shard count.
-    pub fn import_seq_with(export: KvSeqExport, n_shards: usize) -> Self {
+    pub fn import_seq_with(export: KvSeqExport, n_shards: usize) -> crate::Result<Self> {
+        export.validate()?;
         let KvSeqExport { spec, len, layers, .. } = export;
-        assert_eq!(layers.len(), spec.n_layers, "export layer count");
         let n_shards = n_shards.clamp(1, spec.n_layers.max(1));
         let mut shards: Vec<Shard> = (0..n_shards)
-            .map(|_| Shard { k: Vec::new(), v: Vec::new(), kmin: Vec::new(), kmax: Vec::new() })
+            .map(|_| Shard { blocks: Vec::new(), kmin: Vec::new(), kmax: Vec::new() })
             .collect();
         // Layers arrive in ascending order, so pushes land at ascending
         // local indices within each shard (layer l -> shard l % n at
         // local l / n).
         for (layer, lx) in layers.into_iter().enumerate() {
             let shard = &mut shards[layer % n_shards];
-            shard.k.push(lx.k);
-            shard.v.push(lx.v);
+            shard.blocks.push(lx.blocks);
             shard.kmin.push(lx.kmin);
             shard.kmax.push(lx.kmax);
         }
-        Self {
+        Ok(Self {
             spec,
             n_shards,
             len: AtomicUsize::new(len),
             shards: shards.into_iter().map(RwLock::new).collect(),
-        }
+        })
     }
 
     /// Overwrite one complete block's K/V (workload construction) and
-    /// rebuild its digest.
+    /// rebuild its digest. Copy-on-write: a block shared with a prefix
+    /// pool or another sequence is detached before the write, so the
+    /// other holders keep the original bytes.
     pub fn overwrite_block(&self, layer: usize, block: usize, k: &[f32], v: &[f32]) {
         let bs = self.spec.block_size;
         let w = self.tok_w();
@@ -341,16 +465,16 @@ impl ShardedKvCache {
         assert_eq!(v.len(), bs * w);
         let (sid, local) = self.shard_of(layer);
         let mut shard = self.shards[sid].write().unwrap();
-        shard.k[local].rows_mut(block * bs, bs).copy_from_slice(k);
-        shard.v[local].rows_mut(block * bs, bs).copy_from_slice(v);
+        let blk = Arc::make_mut(&mut shard.blocks[local][block]);
+        blk.k.copy_from_slice(k);
+        blk.v.copy_from_slice(v);
         shard.rebuild_digest(local, block, bs, w);
     }
 }
 
-/// One layer's K/V slabs + digest tensors, detached from a store.
+/// One layer's blocks + dense digest tensors, detached from a store.
 struct LayerKvExport {
-    k: Tensor,
-    v: Tensor,
+    blocks: Vec<Arc<KvBlock>>,
     kmin: Tensor,
     kmax: Tensor,
 }
@@ -358,14 +482,15 @@ struct LayerKvExport {
 /// A sequence's full KV state detached from its owning store — the unit
 /// of prefill→decode KV handoff between replica stacks. Produced by
 /// [`ShardedKvCache::export_seq`], consumed by
-/// [`ShardedKvCache::import_seq`]; holds the per-layer tensors by move,
-/// so a handoff never copies slab contents (unless `copied` says the
-/// export had to fall back).
+/// [`ShardedKvCache::import_seq`]; holds the per-layer block `Arc`s by
+/// move or refcount clone, so a handoff never copies slab contents
+/// (`copied` records whether the digest tensors had to be deep-copied
+/// because the cache was still shared at export time).
 pub struct KvSeqExport {
     spec: ModelSpec,
     len: usize,
     layers: Vec<LayerKvExport>,
-    /// Whether the export had to deep-copy (the cache was still shared).
+    /// Whether the export had to fall back to the shared-cache path.
     pub copied: bool,
 }
 
@@ -381,6 +506,59 @@ impl KvSeqExport {
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    /// Structural consistency of the export against its own spec:
+    /// per-layer block counts, per-block K/V and digest widths, and
+    /// dense digest-slab shapes must all agree before the blocks are
+    /// re-sharded into a live store. Wire- or replica-boundary damage
+    /// surfaces here as a structured error, not a panic under a lock.
+    fn validate(&self) -> crate::Result<()> {
+        let spec = &self.spec;
+        let (nb, bs) = (spec.n_blocks(), spec.block_size);
+        let w = spec.n_kv_heads * spec.head_dim;
+        anyhow::ensure!(
+            self.layers.len() == spec.n_layers,
+            "KV import: export has {} layers, spec {} expects {}",
+            self.layers.len(),
+            spec.name,
+            spec.n_layers
+        );
+        anyhow::ensure!(
+            self.len <= spec.max_seq,
+            "KV import: export len {} exceeds max_seq {}",
+            self.len,
+            spec.max_seq
+        );
+        for (layer, lx) in self.layers.iter().enumerate() {
+            anyhow::ensure!(
+                lx.blocks.len() == nb,
+                "KV import: layer {layer} has {} blocks, expected {nb}",
+                lx.blocks.len()
+            );
+            for (b, blk) in lx.blocks.iter().enumerate() {
+                anyhow::ensure!(
+                    blk.k.len() == bs * w && blk.v.len() == bs * w,
+                    "KV import: layer {layer} block {b} K/V is {}x{} floats, expected {}",
+                    blk.k.len(),
+                    blk.v.len(),
+                    bs * w
+                );
+                anyhow::ensure!(
+                    blk.kmin.len() == w && blk.kmax.len() == w,
+                    "KV import: layer {layer} block {b} digest is {}x{} floats, expected {w}",
+                    blk.kmin.len(),
+                    blk.kmax.len()
+                );
+            }
+            anyhow::ensure!(
+                lx.kmin.shape() == [nb, w] && lx.kmax.shape() == [nb, w],
+                "KV import: layer {layer} digest slab shape {:?}/{:?}, expected [{nb}, {w}]",
+                lx.kmin.shape(),
+                lx.kmax.shape()
+            );
+        }
+        Ok(())
     }
 
     /// Bytes a real cross-device handoff would move: the valid K/V rows
@@ -402,6 +580,10 @@ impl KvSeqExport {
 /// `len`-derived quantities are snapshotted at view creation; complete
 /// blocks are immutable while the view lives, and the coordinator's
 /// step structure guarantees appends never race a tail gather.
+///
+/// Storage is per-block, so contiguous row access ([`Self::k_rows`])
+/// is bounded to a single block; cross-block consumers copy out through
+/// [`Self::copy_rows_into`] or iterate [`Self::block_k`] slabs.
 pub struct LayerView<'a> {
     shard: RwLockReadGuard<'a, Shard>,
     local: usize,
@@ -420,21 +602,57 @@ impl LayerView<'_> {
     }
 
     /// Contiguous K rows `[tokens, Hkv, D]` starting at token `start`.
+    /// The range must lie within one block (block storage is not
+    /// contiguous across block boundaries) — use
+    /// [`Self::copy_rows_into`] for cross-block ranges.
     pub fn k_rows(&self, start: usize, tokens: usize) -> &[f32] {
-        self.shard.k[self.local].rows(start, tokens)
+        let (b, off) = self.single_block(start, tokens);
+        &self.shard.blocks[self.local][b].k[off * self.w..(off + tokens) * self.w]
     }
 
     pub fn v_rows(&self, start: usize, tokens: usize) -> &[f32] {
-        self.shard.v[self.local].rows(start, tokens)
+        let (b, off) = self.single_block(start, tokens);
+        &self.shard.blocks[self.local][b].v[off * self.w..(off + tokens) * self.w]
+    }
+
+    fn single_block(&self, start: usize, tokens: usize) -> (usize, usize) {
+        let b = start / self.bs;
+        assert!(
+            tokens <= self.bs - start % self.bs,
+            "rows [{start}, {start}+{tokens}) cross a block boundary (bs={})",
+            self.bs
+        );
+        (b, start % self.bs)
+    }
+
+    /// Copy `tokens` contiguous K/V rows starting at token `start` into
+    /// caller buffers, spanning block boundaries — the replacement for
+    /// whole-prefix `k_rows` reads now that blocks are independently
+    /// owned slabs.
+    pub fn copy_rows_into(&self, start: usize, tokens: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        let w = self.w;
+        assert!(k_out.len() >= tokens * w && v_out.len() >= tokens * w);
+        let mut done = 0;
+        while done < tokens {
+            let t = start + done;
+            let (b, off) = (t / self.bs, t % self.bs);
+            let take = (self.bs - off).min(tokens - done);
+            let blk = &self.shard.blocks[self.local][b];
+            k_out[done * w..(done + take) * w]
+                .copy_from_slice(&blk.k[off * w..(off + take) * w]);
+            v_out[done * w..(done + take) * w]
+                .copy_from_slice(&blk.v[off * w..(off + take) * w]);
+            done += take;
+        }
     }
 
     /// Contiguous K slab of one complete-or-partial block `[bs, Hkv, D]`.
     pub fn block_k(&self, block: usize) -> &[f32] {
-        self.shard.k[self.local].rows(block * self.bs, self.bs)
+        &self.shard.blocks[self.local][block].k
     }
 
     pub fn block_v(&self, block: usize) -> &[f32] {
-        self.shard.v[self.local].rows(block * self.bs, self.bs)
+        &self.shard.blocks[self.local][block].v
     }
 
     /// This layer's dense digest slabs `([nb, Hkv*D] kmin, kmax)` — the
@@ -491,11 +709,11 @@ impl LayerView<'_> {
 
 impl BlockSlabs for LayerView<'_> {
     fn block_k(&self, block: usize) -> &[f32] {
-        self.shard.k[self.local].rows(block * self.bs, self.bs)
+        LayerView::block_k(self, block)
     }
 
     fn block_v(&self, block: usize) -> &[f32] {
-        self.shard.v[self.local].rows(block * self.bs, self.bs)
+        LayerView::block_v(self, block)
     }
 }
 
@@ -539,9 +757,19 @@ mod tests {
         (mono, sharded)
     }
 
+    /// Cross-block contiguous copy of `[0, n)` K rows (test convenience
+    /// over `copy_rows_into`).
+    fn k_prefix(view: &LayerView<'_>, n: usize, w: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut k = vec![0.0; n * w];
+        let mut v = vec![0.0; n * w];
+        view.copy_rows_into(0, n, &mut k, &mut v);
+        (k, v)
+    }
+
     #[test]
     fn observation_equivalent_to_monolith() {
         let spec = tiny_spec();
+        let w = spec.n_kv_heads * spec.head_dim;
         for shards in [1, 2, 8] {
             let (mono, sharded) = fill_both(&spec, 21, shards);
             assert_eq!(mono.len(), sharded.len());
@@ -554,11 +782,11 @@ mod tests {
                     assert_eq!(mono.block_v(l, b), view.block_v(b), "v l={l} b={b}");
                     let (lo, hi) = mono.digests.block(l, b);
                     let (slo, shi) = view.digests();
-                    let w = spec.n_kv_heads * spec.head_dim;
                     assert_eq!(lo, &slo[b * w..(b + 1) * w], "kmin l={l} b={b}");
                     assert_eq!(hi, &shi[b * w..(b + 1) * w], "kmax l={l} b={b}");
                 }
-                assert_eq!(mono.k_rows(l, 0, mono.len()), view.k_rows(0, mono.len()));
+                let (k, _) = k_prefix(&view, mono.len(), w);
+                assert_eq!(mono.k_rows(l, 0, mono.len()), &k[..]);
             }
         }
     }
@@ -725,6 +953,7 @@ mod tests {
     #[test]
     fn export_import_roundtrip_is_byte_identical() {
         let spec = tiny_spec();
+        let w = spec.n_kv_heads * spec.head_dim;
         for (from_shards, to_shards) in [(2, 2), (2, 4), (5, 1)] {
             let (_, sharded) = fill_both(&spec, 21, from_shards);
             let reference = fill_both(&spec, 21, from_shards).1;
@@ -732,14 +961,16 @@ mod tests {
             assert!(!export.copied, "unique Arc must move, not copy");
             assert_eq!(export.len(), 21);
             assert!(export.payload_bytes() > 0);
-            let back = ShardedKvCache::import_seq_with(export, to_shards);
+            let back = ShardedKvCache::import_seq_with(export, to_shards).unwrap();
             assert_eq!(back.len(), reference.len());
             assert_eq!(back.full_blocks(), reference.full_blocks());
             for l in 0..spec.n_layers {
                 let a = back.layer(l);
                 let b = reference.layer(l);
-                assert_eq!(a.k_rows(0, 21), b.k_rows(0, 21), "k l={l}");
-                assert_eq!(a.v_rows(0, 21), b.v_rows(0, 21), "v l={l}");
+                let (ak, av) = k_prefix(&a, 21, w);
+                let (bk, bv) = k_prefix(&b, 21, w);
+                assert_eq!(ak, bk, "k l={l}");
+                assert_eq!(av, bv, "v l={l}");
                 assert_eq!(a.digests(), b.digests(), "digests l={l}");
             }
             // the imported store keeps working: appends + digests land
@@ -749,17 +980,115 @@ mod tests {
     }
 
     #[test]
-    fn export_of_shared_cache_falls_back_to_copy() {
+    fn export_of_shared_cache_shares_blocks_by_refcount() {
         let spec = tiny_spec();
+        let w = spec.n_kv_heads * spec.head_dim;
         let (_, sharded) = fill_both(&spec, 9, 2);
         let arc = Arc::new(sharded);
         let extra = arc.clone();
         let export = ShardedKvCache::export_seq(arc);
-        assert!(export.copied, "shared cache must be deep-copied");
-        let back = ShardedKvCache::import_seq(export);
+        assert!(export.copied, "shared cache must take the fallback path");
+        let back = ShardedKvCache::import_seq(export).unwrap();
         for l in 0..spec.n_layers {
-            assert_eq!(back.layer(l).k_rows(0, 9), extra.layer(l).k_rows(0, 9));
+            let a = k_prefix(&back.layer(l), 9, w).0;
+            let b = k_prefix(&extra.layer(l), 9, w).0;
+            assert_eq!(a, b);
         }
+        // The block payloads are refcount-shared, so a divergent write
+        // on the import must copy-on-write, never reach the original.
+        let bs = spec.block_size;
+        let nk = vec![5.0; bs * w];
+        let nv = vec![-5.0; bs * w];
+        back.overwrite_block(0, 0, &nk, &nv);
+        assert_eq!(back.layer(0).block_k(0), &nk[..]);
+        assert_eq!(extra.layer(0).block_k(0)[0], 0.0, "CoW leaked into the source");
+    }
+
+    #[test]
+    fn share_and_import_block_roundtrip_with_digests() {
+        let spec = tiny_spec();
+        let w = spec.n_kv_heads * spec.head_dim;
+        let (_, source) = fill_both(&spec, 16, 2);
+        let shared = source.share_block(1);
+        assert_eq!(shared.len(), spec.n_layers);
+
+        let dest = ShardedKvCache::with_shards(&spec, 3);
+        dest.import_shared_block(1, &shared);
+        for l in 0..spec.n_layers {
+            let s = source.layer(l);
+            let d = dest.layer(l);
+            assert_eq!(s.block_k(1), d.block_k(1), "k l={l}");
+            assert_eq!(s.block_v(1), d.block_v(1), "v l={l}");
+            // dense digest rows refreshed from the sealed block digest
+            let (slo, shi) = s.digests();
+            let (dlo, dhi) = d.digests();
+            assert_eq!(&slo[w..2 * w], &dlo[w..2 * w], "kmin l={l}");
+            assert_eq!(&shi[w..2 * w], &dhi[w..2 * w], "kmax l={l}");
+        }
+        // A write to the importer's shared block diverges privately.
+        // finish_prefill on the destination must keep the imported
+        // (still-shared) block's digest byte-identical.
+        dest.finish_prefill(16);
+        let (slo, _) = source.layer(2).digests();
+        let (dlo, _) = dest.layer(2).digests();
+        assert_eq!(&slo[w..2 * w], &dlo[w..2 * w]);
+    }
+
+    #[test]
+    fn append_after_import_copies_on_write_not_in_place() {
+        // Decode appends land in the (never-shared) tail block, but an
+        // overwrite of a shared complete block must detach first.
+        let spec = tiny_spec();
+        let w = spec.n_kv_heads * spec.head_dim;
+        let bs = spec.block_size;
+        let (_, source) = fill_both(&spec, 8, 2);
+        let published = source.share_block(0);
+        let nk = vec![7.0; bs * w];
+        let nv = vec![-7.0; bs * w];
+        source.overwrite_block(0, 0, &nk, &nv);
+        // The published (pool-side) copy still holds the original bytes.
+        assert_eq!(published[0].k()[0], 0.0, "publish copy mutated in place");
+        assert_eq!(source.layer(0).block_k(0), &nk[..]);
+    }
+
+    #[test]
+    fn malformed_exports_are_rejected_with_structured_errors() {
+        let spec = tiny_spec();
+        // truncated layer list
+        let (_, a) = fill_both(&spec, 9, 2);
+        let mut export = ShardedKvCache::export_seq(Arc::new(a));
+        export.layers.pop();
+        let err = ShardedKvCache::import_seq(export).unwrap_err().to_string();
+        assert!(err.contains("layers"), "{err}");
+        // truncated block vector within a layer
+        let (_, b) = fill_both(&spec, 9, 2);
+        let mut export = ShardedKvCache::export_seq(Arc::new(b));
+        export.layers[1].blocks.pop();
+        let err = ShardedKvCache::import_seq(export).unwrap_err().to_string();
+        assert!(err.contains("blocks"), "{err}");
+        // mis-shaped block payload
+        let (_, c) = fill_both(&spec, 9, 2);
+        let mut export = ShardedKvCache::export_seq(Arc::new(c));
+        export.layers[0].blocks[0] = Arc::new(KvBlock {
+            k: vec![0.0; 3],
+            v: vec![0.0; 3],
+            kmin: vec![0.0; 1],
+            kmax: vec![0.0; 1],
+        });
+        let err = ShardedKvCache::import_seq(export).unwrap_err().to_string();
+        assert!(err.contains("K/V"), "{err}");
+        // mis-shaped digest slab
+        let (_, d) = fill_both(&spec, 9, 2);
+        let mut export = ShardedKvCache::export_seq(Arc::new(d));
+        export.layers[2].kmin = Tensor::zeros(&[1, 1]);
+        let err = ShardedKvCache::import_seq(export).unwrap_err().to_string();
+        assert!(err.contains("slab"), "{err}");
+        // length beyond the spec's context
+        let (_, e) = fill_both(&spec, 9, 2);
+        let mut export = ShardedKvCache::export_seq(Arc::new(e));
+        export.len = spec.max_seq + 1;
+        let err = ShardedKvCache::import_seq(export).unwrap_err().to_string();
+        assert!(err.contains("max_seq"), "{err}");
     }
 
     #[test]
@@ -778,7 +1107,7 @@ mod tests {
                 v[t * w..(t + 1) * w].copy_from_slice(&vt);
             }
             bulk.load_prefill_layer(l, &k, &v, n);
-            // chunk boundaries 0..7, 7..14, 14..19
+            // chunk boundaries 0..7, 7..14, 14..19 (misaligned to bs=8)
             for start in (0..n).step_by(7) {
                 let end = (start + 7).min(n);
                 chunked.load_prefill_rows(
@@ -795,8 +1124,10 @@ mod tests {
         for l in 0..spec.n_layers {
             let a = bulk.layer(l);
             let b = chunked.layer(l);
-            assert_eq!(a.k_rows(0, n), b.k_rows(0, n));
-            assert_eq!(a.v_rows(0, n), b.v_rows(0, n));
+            let (ak, av) = k_prefix(&a, n, w);
+            let (bk, bv) = k_prefix(&b, n, w);
+            assert_eq!(ak, bk);
+            assert_eq!(av, bv);
             assert_eq!(a.digests(), b.digests());
         }
     }

@@ -570,6 +570,7 @@ impl InterpreterBackend {
             (s.n_q_heads, s.n_kv_heads, s.head_dim, s.d_model, s.d_ff, s.vocab, s.n_layers);
         let w = hkv * dd;
         let scale = s.scale();
+        let bs = s.block_size;
         let mut k_out = Tensor::zeros(&[l_layers, s_max, hkv, dd]);
         let mut v_out = Tensor::zeros(&[l_layers, s_max, hkv, dd]);
         let mut xs: Vec<Vec<f32>> = (0..n).map(|t| x_seq.rows(t, 1).to_vec()).collect();
@@ -630,21 +631,34 @@ impl InterpreterBackend {
                     // park a new class per distinct request length.
                     let mut scores = scratch.lease(s_max.max(1));
                     mb.fill(NEG_INF);
-                    simd::softmax_accum(
-                        &qflat[t * hq * dd..(t + 1) * hq * dd],
-                        &kl[..(t + 1) * w],
-                        &vl[..(t + 1) * w],
-                        None,
-                        t + 1,
-                        hq,
-                        hkv,
-                        dd,
-                        scale,
-                        &mut accb,
-                        &mut mb,
-                        &mut lb,
-                        &mut scores,
-                    );
+                    // One softmax-accumulate per KV-block-sized segment
+                    // of the [0, t] prefix, merged by the online
+                    // softmax. The chunked prefill path walks the
+                    // sharded store's block slabs at exactly these
+                    // boundaries, and the AVX2 kernel takes one max per
+                    // *call* — segmenting both paths identically is
+                    // what keeps chunked-vs-fused prefill bitwise equal
+                    // (pinned by the prefill_disagg equivalence suite).
+                    let mut seg = 0;
+                    while seg < t + 1 {
+                        let seg_len = bs.min(t + 1 - seg);
+                        simd::softmax_accum(
+                            &qflat[t * hq * dd..(t + 1) * hq * dd],
+                            &kl[seg * w..(seg + seg_len) * w],
+                            &vl[seg * w..(seg + seg_len) * w],
+                            None,
+                            seg_len,
+                            hq,
+                            hkv,
+                            dd,
+                            scale,
+                            &mut accb,
+                            &mut mb,
+                            &mut lb,
+                            &mut scores,
+                        );
+                        seg += seg_len;
+                    }
                     let mut att = scratch.lease(hq * dd);
                     for hh in 0..hq {
                         let denom = lb[hh].max(1e-30);

@@ -55,6 +55,7 @@ use std::time::{Duration, Instant};
 use crate::config::RunConfig;
 use crate::coordinator::{DecodeScheduler, PrefillState, RequestSpec, SeqHandoff, SeqState};
 use crate::harness::Stack;
+use crate::kvcache::{first_chunk_key, PrefixPool};
 use crate::model::ModelSpec;
 use crate::util::{clock, Json};
 
@@ -305,8 +306,16 @@ impl EnginePool {
             return self.reject(id, tx, rx, cancel, RejectCode::Overloaded, reason, retry);
         }
 
-        // Stage-1 placement: a prefill-capable replica.
-        let Some(replica) = self.router.pick_prefill(sub.session.as_deref()) else {
+        // Stage-1 placement: a prefill-capable replica, preferring one
+        // whose prefix pool already holds this prompt's first chunk
+        // (prefix reuse only pays off when the request lands where the
+        // blocks live — the hint is advisory; load and roles still win).
+        let hint = if self.cfg.scout.prefix_cache_blocks > 0 {
+            first_chunk_key(&sub.prompt, self.spec.block_size)
+        } else {
+            None
+        };
+        let Some(replica) = self.router.pick_prefill_with_hint(sub.session.as_deref(), hint) else {
             // ordering: undo of the Relaxed reservation above.
             self.pool_tel.inflight_tokens.fetch_sub(cost, Ordering::Relaxed);
             let reason = "no prefill-capable replica available".to_string();
@@ -583,6 +592,16 @@ fn replica_loop(
     };
     let _ = ready.send(Ok(stack.gpu.spec.clone()));
     let mut sched = stack.scheduler(cfg.method, None);
+    if cfg.scout.prefix_cache_blocks > 0 {
+        // One prefix pool per replica stack, shared between the
+        // scheduler's admission path (probe/publish), telemetry
+        // (`{"stats":true}` counters), and the router (locality hint
+        // via `ReplicaTelemetry::advertises`). Replaces any pool the
+        // scheduler auto-created so all three observe one instance.
+        let pool = Arc::new(PrefixPool::new(cfg.scout.prefix_cache_blocks));
+        sched.attach_prefix_pool(pool.clone());
+        *tel.prefix_pool.lock().unwrap() = Some(pool);
+    }
     let mut batch = stack.batch();
     let max_live = cfg.server.max_batch;
     let disagg = router.disaggregated();
@@ -628,7 +647,7 @@ fn replica_loop(
         // immediately, activate as slots free up).
         while handoffs_open {
             match rx_handoff.try_recv() {
-                Ok(msg) => import_handoff(msg, &tel, &mut tracks, &mut ready_q),
+                Ok(msg) => import_handoff(msg, &tel, &mut tracks, &mut ready_q, &release),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     handoffs_open = false;
@@ -1007,12 +1026,17 @@ fn dispatch_handoff(
 }
 
 /// Destination side of a handoff: import the KV export into a fresh
-/// store, rebuild the sequence, and queue it for activation.
+/// store, rebuild the sequence, and queue it for activation. A
+/// structurally invalid export (wire/replica-boundary damage) fails the
+/// request with a terminal event and releases its budget reservation —
+/// `SeqState::from_handoff` validates before touching shard locks, so a
+/// malformed handoff can no longer panic the replica thread.
 fn import_handoff(
     msg: HandoffMsg,
     tel: &ReplicaTelemetry,
     tracks: &mut HashMap<u64, Track>,
     ready_q: &mut VecDeque<SeqState>,
+    release: &impl Fn(usize),
 ) {
     // ordering: handoff gauges/counters are Relaxed statistics; the KV
     // payload and track state arrived through the channel, which already
@@ -1021,7 +1045,19 @@ fn import_handoff(
     tel.handoffs_in.fetch_add(1, Ordering::Relaxed);
     tel.handoff_bytes_in.fetch_add(bytes, Ordering::Relaxed);
     tel.handoff_us.lock().unwrap().record(msg.sent.elapsed().as_micros() as f64);
-    let seq = SeqState::from_handoff(msg.seq);
+    let id = msg.seq.id;
+    let seq = match SeqState::from_handoff(msg.seq) {
+        Ok(seq) => seq,
+        Err(e) => {
+            release(msg.cost);
+            tel.failed.fetch_add(1, Ordering::Relaxed);
+            let _ = msg.events.send(StreamEvent::Failed {
+                id,
+                error: format!("handoff import rejected: {e:#}"),
+            });
+            return;
+        }
+    };
     tracks.insert(
         seq.id,
         Track {

@@ -147,6 +147,26 @@ impl Router {
         self.pick(Stage::Prefill, session)
     }
 
+    /// [`Self::pick_prefill`] with a prefix-locality hint: `hint` is
+    /// the chained hash of the request's first prompt chunk. A replica
+    /// whose prefix pool advertises that chunk is *preferred* — the
+    /// cached blocks only save work where they live — but never
+    /// required: advertisers are filtered down from the same eligible
+    /// set as plain placement (role-capable, not draining), so a
+    /// preferred-but-draining or role-masked replica falls back to the
+    /// ordinary policy. Ties between several advertisers break
+    /// least-loaded.
+    pub fn pick_prefill_with_hint(&self, session: Option<&str>, hint: Option<u64>) -> Option<usize> {
+        if let Some(key) = hint {
+            let mut eligible = self.eligible(Stage::Prefill);
+            eligible.retain(|&i| self.replicas[i].advertises(key));
+            if !eligible.is_empty() {
+                return Some(self.least_loaded(&eligible));
+            }
+        }
+        self.pick(Stage::Prefill, session)
+    }
+
     /// Stage 2: choose a replica to *decode* a prefilled sequence.
     /// Affinity hashes over the full replica set (stable under role
     /// reconfiguration); a hash landing on a draining or non-decode
@@ -156,7 +176,8 @@ impl Router {
         self.pick(Stage::Decode, session)
     }
 
-    fn pick(&self, stage: Stage, session: Option<&str>) -> Option<usize> {
+    /// Replicas a `stage` placement may legally target right now.
+    fn eligible(&self, stage: Stage) -> Vec<usize> {
         let can = |i: usize| match stage {
             Stage::Prefill => self.roles[i].can_prefill(),
             Stage::Decode => self.roles[i].can_decode(),
@@ -173,6 +194,11 @@ impl Router {
         if eligible.is_empty() {
             eligible = (0..self.replicas.len()).filter(|&i| can(i)).collect();
         }
+        eligible
+    }
+
+    fn pick(&self, stage: Stage, session: Option<&str>) -> Option<usize> {
+        let eligible = self.eligible(stage);
         if eligible.is_empty() {
             return None;
         }
@@ -366,5 +392,79 @@ mod tests {
         let r = Router::new(RoutePolicy::LeastLoaded, replicas(2), roles);
         assert_eq!(r.pick_prefill(None), None, "nothing can prefill");
         assert!(r.pick_decode(None).is_some());
+    }
+
+    /// Give replica `i` a prefix pool advertising `key`.
+    fn advertise(reps: &[Arc<ReplicaTelemetry>], i: usize, key: u64) {
+        use crate::kvcache::PrefixPool;
+        let pool = Arc::new(PrefixPool::new(8));
+        pool.publish(key, Vec::new());
+        *reps[i].prefix_pool.lock().unwrap() = Some(pool);
+    }
+
+    #[test]
+    fn prefix_hint_prefers_advertising_replica_over_lighter_load() {
+        let reps = replicas(3);
+        // replica 2 advertises the chunk but carries MORE load than 1 —
+        // locality must still win (recomputing 2k prompt tokens costs
+        // more than the load skew).
+        reps[1].live_tokens.store(10, Ordering::Relaxed);
+        reps[2].live_tokens.store(400, Ordering::Relaxed);
+        advertise(&reps, 2, 0xfeed);
+        let r = Router::new(RoutePolicy::LeastLoaded, reps, mixed(3));
+        assert_eq!(r.pick_prefill_with_hint(None, Some(0xfeed)), Some(2));
+        // no hint, or a chunk nobody holds: plain least-loaded placement
+        assert_eq!(r.pick_prefill_with_hint(None, None), Some(1));
+        assert_eq!(r.pick_prefill_with_hint(None, Some(0xdead)), Some(1));
+    }
+
+    #[test]
+    fn prefix_hint_breaks_advertiser_ties_least_loaded() {
+        let reps = replicas(3);
+        advertise(&reps, 0, 0xfeed);
+        advertise(&reps, 2, 0xfeed);
+        reps[0].live_tokens.store(300, Ordering::Relaxed);
+        reps[2].live_tokens.store(30, Ordering::Relaxed);
+        let r = Router::new(RoutePolicy::LeastLoaded, reps, mixed(3));
+        assert_eq!(r.pick_prefill_with_hint(None, Some(0xfeed)), Some(2));
+    }
+
+    #[test]
+    fn prefix_hint_falls_back_off_draining_advertiser() {
+        let reps = replicas(3);
+        reps[1].live_tokens.store(50, Ordering::Relaxed);
+        advertise(&reps, 2, 0xfeed);
+        reps[2].draining.store(true, Ordering::Relaxed);
+        let r = Router::new(RoutePolicy::LeastLoaded, reps, mixed(3));
+        // the only advertiser is draining: hint must not pin work onto
+        // it — fall back to ordinary least-loaded over live replicas.
+        assert_eq!(r.pick_prefill_with_hint(None, Some(0xfeed)), Some(0));
+    }
+
+    #[test]
+    fn prefix_hint_falls_back_off_role_masked_advertiser() {
+        let reps = replicas(3);
+        reps[1].live_tokens.store(50, Ordering::Relaxed);
+        advertise(&reps, 2, 0xfeed);
+        let roles = vec![ReplicaRole::Mixed, ReplicaRole::Mixed, ReplicaRole::Decode];
+        let r = Router::new(RoutePolicy::LeastLoaded, reps, roles);
+        // the advertiser cannot prefill at all: the hint is void.
+        assert_eq!(r.pick_prefill_with_hint(None, Some(0xfeed)), Some(0));
+    }
+
+    #[test]
+    fn prefix_hint_defers_to_session_affinity_on_miss() {
+        // With no advertiser the hinted path must be byte-identical to
+        // pick_prefill — including the session-affinity policy.
+        let r = Router::new(RoutePolicy::SessionAffinity, replicas(4), mixed(4));
+        let session = (0..256)
+            .map(|i| format!("p-{i}"))
+            .find(|s| (fnv1a(s.as_bytes()) as usize) % 4 == 3)
+            .unwrap();
+        assert_eq!(
+            r.pick_prefill_with_hint(Some(&session), Some(0xfeed)),
+            r.pick_prefill(Some(&session)),
+        );
+        assert_eq!(r.pick_prefill_with_hint(Some(&session), None), Some(3));
     }
 }

@@ -7,8 +7,9 @@
 //! least-loaded placement; the pool snapshots everything on demand.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use crate::kvcache::{PrefixPool, PrefixPoolStats};
 use crate::metrics::Histogram;
 use crate::util::Json;
 
@@ -61,6 +62,11 @@ pub struct ReplicaTelemetry {
     pub queue_wait_us: Mutex<Histogram>,
     /// Handoff dispatch -> imported on this replica, us.
     pub handoff_us: Mutex<Histogram>,
+    /// The replica's cross-request prefix pool, registered by the
+    /// replica loop when `scout.prefix_cache_blocks > 0` (None = reuse
+    /// disabled). Cold path: set once at startup, read by stats
+    /// snapshots and the router's locality hint.
+    pub prefix_pool: Mutex<Option<Arc<PrefixPool>>>,
 }
 
 impl ReplicaTelemetry {
@@ -74,6 +80,18 @@ impl ReplicaTelemetry {
         self.queued_tokens.load(Ordering::Relaxed)
             + self.prefill_tokens.load(Ordering::Relaxed)
             + self.live_tokens.load(Ordering::Relaxed)
+    }
+
+    /// Whether this replica's prefix pool currently holds the chunk
+    /// with chained hash `key` — the router's prefix-locality probe.
+    /// Read-only on the pool (no LRU refresh, no counter noise).
+    pub fn advertises(&self, key: u64) -> bool {
+        self.prefix_pool.lock().unwrap().as_ref().is_some_and(|p| p.contains(key))
+    }
+
+    /// Prefix-pool counter snapshot, if reuse is enabled here.
+    pub fn prefix_stats(&self) -> Option<PrefixPoolStats> {
+        self.prefix_pool.lock().unwrap().as_ref().map(|p| p.stats())
     }
 
     /// Requests that would sit in front of a new submission.
@@ -117,8 +135,26 @@ impl ReplicaTelemetry {
             ("ttft_us", hist_json(&self.ttft_us.lock().unwrap())),
             ("queue_wait_us", hist_json(&self.queue_wait_us.lock().unwrap())),
             ("handoff_us", hist_json(&self.handoff_us.lock().unwrap())),
+            (
+                "prefix",
+                match self.prefix_stats() {
+                    Some(s) => prefix_stats_json(&s),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
+}
+
+/// Prefix-pool counters as a stats sub-object.
+pub fn prefix_stats_json(s: &PrefixPoolStats) -> Json {
+    Json::obj(vec![
+        ("hits", Json::num(s.hits as f64)),
+        ("misses", Json::num(s.misses as f64)),
+        ("published", Json::num(s.published as f64)),
+        ("evicted", Json::num(s.evicted as f64)),
+        ("entries", Json::num(s.entries as f64)),
+    ])
 }
 
 /// Pool-level admission counters.
@@ -185,6 +221,7 @@ pub fn pool_stats_json(
     let (mut depth, mut live, mut inflight, mut tokens_out) = (0usize, 0usize, 0usize, 0u64);
     let (mut cancelled, mut handoffs, mut handoff_bytes) = (0u64, 0u64, 0u64);
     let mut prefilling = 0usize;
+    let mut prefix_agg: Option<PrefixPoolStats> = None;
     for (i, r) in replicas.iter().enumerate() {
         let role = roles.get(i).copied().unwrap_or_default();
         rows.push(r.snapshot(i, role, uptime_s));
@@ -199,6 +236,14 @@ pub fn pool_stats_json(
         cancelled += r.cancelled.load(Ordering::Relaxed);
         handoffs += r.handoffs_in.load(Ordering::Relaxed);
         handoff_bytes += r.handoff_bytes_in.load(Ordering::Relaxed);
+        if let Some(s) = r.prefix_stats() {
+            let a = prefix_agg.get_or_insert_with(PrefixPoolStats::default);
+            a.hits += s.hits;
+            a.misses += s.misses;
+            a.published += s.published;
+            a.evicted += s.evicted;
+            a.entries += s.entries;
+        }
     }
     Json::obj(vec![
         ("uptime_s", Json::num(uptime_s)),
@@ -233,6 +278,13 @@ pub fn pool_stats_json(
         ("handoffs", Json::num(handoffs as f64)),
         ("handoff_bytes", Json::num(handoff_bytes as f64)),
         ("handoff_us", hist_json(&handoff)),
+        (
+            "prefix",
+            match &prefix_agg {
+                Some(s) => prefix_stats_json(s),
+                None => Json::Null,
+            },
+        ),
         ("ttft_us", hist_json(&ttft)),
         ("queue_wait_us", hist_json(&queue_wait)),
         ("replicas", Json::Arr(rows)),
@@ -302,5 +354,36 @@ mod tests {
         assert!(level == "portable" || level == "avx2", "{level}");
         assert_eq!(j.get("replicas").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(j.get("ttft_us").unwrap().req_usize("count").unwrap(), 2);
+        // no replica registered a prefix pool -> null, not zeros
+        assert!(matches!(j.get("prefix"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn prefix_pool_counters_surface_in_stats() {
+        let a = Arc::new(ReplicaTelemetry::default());
+        let b = Arc::new(ReplicaTelemetry::default());
+        let pool = Arc::new(PrefixPool::new(4));
+        pool.publish(11, Vec::new());
+        assert!(pool.probe(11).is_some());
+        assert!(pool.probe(99).is_none());
+        *a.prefix_pool.lock().unwrap() = Some(pool.clone());
+        assert!(a.advertises(11), "registered chunk must be advertised");
+        assert!(!a.advertises(99));
+        assert!(!b.advertises(11), "pool is per-replica");
+        let j = a.snapshot(0, ReplicaRole::Mixed, 1.0);
+        let p = j.get("prefix").unwrap();
+        assert_eq!(p.req_usize("hits").unwrap(), 1);
+        assert_eq!(p.req_usize("misses").unwrap(), 1);
+        assert_eq!(p.req_usize("published").unwrap(), 1);
+        assert_eq!(p.req_usize("entries").unwrap(), 1);
+        let agg = pool_stats_json(
+            &PoolTelemetry::default(),
+            &[a, b],
+            &[ReplicaRole::Mixed, ReplicaRole::Mixed],
+            1.0,
+            false,
+        );
+        let p = agg.get("prefix").unwrap();
+        assert_eq!(p.req_usize("hits").unwrap(), 1, "aggregated across replicas");
     }
 }

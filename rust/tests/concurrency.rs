@@ -27,6 +27,8 @@ mod common;
 use std::time::Duration;
 
 use scoutattention::config::{ReplicaRole, RunConfig};
+use scoutattention::coordinator::{PrefillParams, PrefillState, RequestSpec};
+use scoutattention::kvcache::{chain_hash, PrefixPool, CHAIN_SEED};
 use scoutattention::serve::{EnginePool, StreamEvent, StreamHandle, Submission};
 
 const WAIT: Duration = Duration::from_secs(120);
@@ -166,6 +168,112 @@ fn cancel_is_observed_across_handoff() {
         "cancel across handoff leaked budget: {}",
         stats.to_string()
     );
+}
+
+/// Copy-on-write discipline under real thread interleaving: N prefills
+/// importing the same published prefix blocks run concurrently and then
+/// diverge. A write leaking through a shared `Arc` (instead of copying)
+/// would scribble one sequence's tail into another's prefix; byte
+/// equality against N independent cold runs rules that out. Afterwards,
+/// dropping the importers must return every published block to the
+/// pool's own single hold — a higher refcount is a leak that would make
+/// those blocks permanently unevictable.
+#[test]
+fn concurrent_shared_prefix_imports_match_cold_runs_and_release_blocks() {
+    fn params(n_layers: usize) -> PrefillParams {
+        PrefillParams {
+            pin_sink: true,
+            pin_recent: 1,
+            recall_countdowns: vec![usize::MAX; n_layers],
+        }
+    }
+
+    let stack = common::stack();
+    let spec = stack.gpu.spec.clone();
+    let (bs, w) = (spec.block_size, spec.n_kv_heads * spec.head_dim);
+    let shared = prompt(4 * bs, 7); // block-aligned shared system prefix
+    let n_req = 4usize;
+    let reqs: Vec<RequestSpec> = (0..n_req)
+        .map(|i| {
+            let mut p = shared.clone();
+            p.extend(prompt(bs + i + 1, 50 + i as u32)); // divergent tails
+            RequestSpec::new(i as u64, p, 4)
+        })
+        .collect();
+
+    // Cold baselines: no pool anywhere.
+    let cold: Vec<_> = reqs
+        .iter()
+        .map(|r| {
+            let mut st = PrefillState::begin(&spec, r, spec.k_blocks, 16).unwrap();
+            while !st.advance(&stack.gpu).unwrap() {}
+            st.finish(&stack.native, params(spec.n_layers)).unwrap()
+        })
+        .collect();
+
+    // One warm run publishes the shared blocks (and is then dropped, so
+    // the pool keeps the only hold on each)...
+    let pool = std::sync::Arc::new(PrefixPool::new(64));
+    {
+        let mut st = PrefillState::begin(&spec, &reqs[0], spec.k_blocks, 16).unwrap();
+        st.attach_pool(pool.clone());
+        while !st.advance(&stack.gpu).unwrap() {}
+    }
+    assert!(pool.stats().published > 0, "warm run must publish");
+
+    // ...then every importer runs concurrently.
+    let hot: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = reqs
+            .iter()
+            .map(|r| {
+                let (gpu, native, spec, pool) =
+                    (&stack.gpu, &stack.native, &spec, pool.clone());
+                s.spawn(move || {
+                    let mut st = PrefillState::begin(spec, r, spec.k_blocks, 16).unwrap();
+                    st.attach_pool(pool);
+                    while !st.advance(gpu).unwrap() {}
+                    st.finish(native, params(spec.n_layers)).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("importer panicked")).collect()
+    });
+    assert!(
+        pool.stats().hits >= n_req as u64,
+        "every importer must hit the shared chunks: {:?}",
+        pool.stats()
+    );
+
+    for (h, c) in hot.iter().zip(&cold) {
+        let n = h.cache.len();
+        assert_eq!(n, c.cache.len(), "req {}", h.id);
+        for layer in 0..spec.n_layers {
+            let a = h.cache.layer(layer);
+            let b = c.cache.layer(layer);
+            let (mut ka, mut va) = (vec![0.0f32; n * w], vec![0.0f32; n * w]);
+            let (mut kb, mut vb) = (vec![0.0f32; n * w], vec![0.0f32; n * w]);
+            a.copy_rows_into(0, n, &mut ka, &mut va);
+            b.copy_rows_into(0, n, &mut kb, &mut vb);
+            assert_eq!(ka, kb, "k bits, req {}, layer {layer}", h.id);
+            assert_eq!(va, vb, "v bits, req {}, layer {layer}", h.id);
+            assert_eq!(a.digests(), b.digests(), "digests, req {}, layer {layer}", h.id);
+        }
+    }
+
+    // Refcounts return to baseline: pool entry (1) + our probe (1).
+    drop(hot);
+    let mut key = CHAIN_SEED;
+    for chunk in shared.chunks(bs) {
+        key = chain_hash(key, chunk);
+        let layers = pool.probe(key).expect("published chunk still resident");
+        for arc in &layers {
+            assert_eq!(
+                std::sync::Arc::strong_count(arc),
+                2,
+                "imported block leaked a refcount after its sequence dropped"
+            );
+        }
+    }
 }
 
 /// begin_drain racing a submission burst from another thread: late

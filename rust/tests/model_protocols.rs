@@ -18,6 +18,12 @@
 //!    budget release on every schedule; the seeded drop-discipline bug
 //!    (source never dropping its handoff sender) must be reported as a
 //!    deadlock.
+//! 4. **Prefix-pool publish/import/evict** (kvcache::prefix): a probe
+//!    racing capacity eviction must either miss cleanly or acquire a
+//!    block eviction can no longer touch; the two seeded bugs — evicting
+//!    a held entry, and splitting the probe's lookup from its refcount
+//!    bump — are both caught with their minimal counterexample
+//!    schedules.
 //!
 //! [`sched`]: scoutattention::util::sched
 
@@ -349,6 +355,189 @@ fn handoff_cancel_lifecycle_holds_under_all_schedules() {
     lifecycle_invariants(&mut ex);
     let stats = ex.explore(handoff_initial()).expect("lifecycle holds");
     assert!(stats.schedules > 1, "the race must actually branch");
+}
+
+// ---------------------------------------------------------------------
+// Protocol 4: prefix-pool publish / import / evict (kvcache::prefix).
+// ---------------------------------------------------------------------
+
+/// Abstraction of one `PrefixPool` entry's lifecycle. `refs` models the
+/// block `Arc`'s strong count (1 = the pool's own hold); the real pool
+/// does lookup + clone atomically under its mutex, and eviction removes
+/// an entry only when the pool's hold is the last one — in which case
+/// removal really does deallocate the blocks, which is what `freed`
+/// records.
+#[derive(Clone, Default)]
+struct PrefixState {
+    /// Entry present in the pool map.
+    resident: bool,
+    /// Strong count of the entry's blocks (0 = never published).
+    refs: usize,
+    /// The blocks were deallocated (pool dropped the last hold).
+    freed: bool,
+    /// Importer outcome: None = not probed yet, Some(hit).
+    imported: Option<bool>,
+    /// Eviction removed an entry a live sequence still held.
+    evicted_held: bool,
+    /// Buggy split-probe's stale lookup result (seeded variant only).
+    saw_hit: bool,
+    /// Importer cloned from an entry eviction had already removed.
+    stale_import: bool,
+}
+
+fn prefix_invariants(ex: &mut Explorer<PrefixState>) {
+    ex.invariant(|s| {
+        if s.evicted_held {
+            return Err("evicted a block a live sequence still holds".into());
+        }
+        if s.stale_import {
+            return Err("imported from an entry eviction already removed".into());
+        }
+        if s.imported == Some(true) && s.freed {
+            return Err("imported blocks were deallocated".into());
+        }
+        if s.resident && s.refs == 0 {
+            return Err("resident entry with no pool hold".into());
+        }
+        Ok(())
+    });
+}
+
+/// The real protocol: publish installs the entry with the pool's hold;
+/// probe (atomically, under the pool mutex) bumps the refcount on hit;
+/// eviction removes the entry only when the pool's hold is the last
+/// one. On every interleaving the importer either misses cleanly or
+/// ends up holding blocks eviction can no longer free.
+#[test]
+fn prefix_publish_import_evict_holds_under_all_schedules() {
+    let mut ex: Explorer<PrefixState> = Explorer::new();
+    // Prefill thread: publish the chunk, then a later publish overflows
+    // capacity and runs the eviction sweep with this entry as the LRU
+    // candidate.
+    ex.thread(vec![
+        run(|s: &mut PrefixState| {
+            s.resident = true;
+            s.refs = 1;
+        }),
+        run(|s: &mut PrefixState| {
+            if s.resident && s.refs == 1 {
+                s.resident = false;
+                s.refs = 0;
+                s.freed = true;
+            }
+        }),
+    ]);
+    // Importer thread: one atomic probe (lookup + Arc clone under the
+    // mutex), then a read of the imported bytes.
+    ex.thread(vec![
+        run(|s: &mut PrefixState| {
+            if s.resident {
+                s.refs += 1;
+                s.imported = Some(true);
+            } else {
+                s.imported = Some(false);
+            }
+        }),
+        run(|_s: &mut PrefixState| {
+            // Reading imported bytes after eviction freed them is the
+            // hazard; the invariant checks imported ∧ freed directly.
+        }),
+    ]);
+    prefix_invariants(&mut ex);
+    ex.final_check(|s| match (s.imported, s.resident, s.refs) {
+        // Hit: the importer's hold pinned the entry past the sweep.
+        (Some(true), true, 2) => Ok(()),
+        // Miss: probed before publish or after eviction.
+        (Some(false), true, 1) | (Some(false), false, 0) => Ok(()),
+        other => Err(format!("inconsistent end state: {other:?}")),
+    });
+    let stats = ex.explore(PrefixState::default()).expect("protocol holds");
+    // Two 2-step threads: C(4,2) = 6 interleavings.
+    assert_eq!(stats.schedules, 6);
+}
+
+/// Seeded bug: the eviction sweep drops the `strong_count == 1` guard
+/// (evicts purely by LRU order). The schedule where the importer's
+/// probe lands between publish and the sweep must be caught — the pool
+/// frees blocks a live sequence is decoding from.
+#[test]
+fn eviction_ignoring_refcounts_is_caught() {
+    let mut ex: Explorer<PrefixState> = Explorer::new();
+    ex.thread(vec![
+        run(|s: &mut PrefixState| {
+            s.resident = true;
+            s.refs = 1;
+        }),
+        run(|s: &mut PrefixState| {
+            if s.resident {
+                s.evicted_held = s.refs > 1; // BUG: no refcount guard
+                s.resident = false;
+                s.refs -= 1;
+                s.freed = s.refs == 0;
+            }
+        }),
+    ]);
+    ex.thread(vec![run(|s: &mut PrefixState| {
+        if s.resident {
+            s.refs += 1;
+            s.imported = Some(true);
+        } else {
+            s.imported = Some(false);
+        }
+    })]);
+    prefix_invariants(&mut ex);
+    let v = ex.explore(PrefixState::default()).expect_err("must be caught");
+    assert_eq!(
+        v.schedule,
+        vec![0, 1, 0],
+        "minimal counterexample: publish, probe hit, then the unguarded sweep"
+    );
+    assert!(v.message.contains("live sequence"), "{v}");
+}
+
+/// Seeded bug: the probe's map lookup and its refcount bump happen as
+/// two separate steps (check outside the pool mutex, clone later). The
+/// eviction sweep slipping between them makes the importer clone from a
+/// removed entry — the race the single-mutex probe makes impossible.
+#[test]
+fn split_probe_racing_eviction_is_caught() {
+    let mut ex: Explorer<PrefixState> = Explorer::new();
+    ex.thread(vec![
+        run(|s: &mut PrefixState| {
+            s.resident = true;
+            s.refs = 1;
+        }),
+        run(|s: &mut PrefixState| {
+            if s.resident && s.refs == 1 {
+                s.resident = false;
+                s.refs = 0;
+                s.freed = true;
+            }
+        }),
+    ]);
+    ex.thread(vec![
+        run(|s: &mut PrefixState| s.saw_hit = s.resident), // BUG: lookup only
+        run(|s: &mut PrefixState| {
+            if s.saw_hit {
+                if s.resident {
+                    s.refs += 1;
+                    s.imported = Some(true);
+                } else {
+                    s.stale_import = true; // clone of a freed entry
+                }
+            } else {
+                s.imported = Some(false);
+            }
+        }),
+    ]);
+    prefix_invariants(&mut ex);
+    let v = ex.explore(PrefixState::default()).expect_err("must be caught");
+    assert_eq!(
+        v.schedule,
+        vec![0, 1, 0, 1],
+        "minimal counterexample: publish, stale lookup, sweep frees, clone"
+    );
+    assert!(v.message.contains("already removed"), "{v}");
 }
 
 /// Seeded drop-discipline bug: if the source replica never drops its

@@ -15,12 +15,13 @@
 
 mod common;
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use scoutattention::config::{Method, ReplicaRole, RunConfig};
 use scoutattention::coordinator::{PrefillParams, PrefillState, RequestSpec};
 use scoutattention::harness;
-use scoutattention::kvcache::ShardedKvCache;
+use scoutattention::kvcache::{LayerView, PrefixPool, ShardedKvCache};
 use scoutattention::serve::{EnginePool, StreamEvent, StreamHandle, Submission};
 use scoutattention::tensor::Tensor;
 
@@ -29,6 +30,14 @@ const WAIT: Duration = Duration::from_secs(120);
 /// Deterministic prompt in test-tiny vocab (256), avoiding pad token 0.
 fn prompt(len: usize, salt: u32) -> Vec<u32> {
     (0..len as u32).map(|i| 1 + (i * 29 + salt * 11) % 255).collect()
+}
+
+/// First `n` K/V rows of a layer, walked block by block (blocks are no
+/// longer one contiguous slab under refcounted storage).
+fn kv_prefix(view: &LayerView<'_>, n: usize, w: usize) -> (Vec<f32>, Vec<f32>) {
+    let (mut k, mut v) = (vec![0.0f32; n * w], vec![0.0f32; n * w]);
+    view.copy_rows_into(0, n, &mut k, &mut v);
+    (k, v)
 }
 
 #[test]
@@ -76,11 +85,14 @@ fn chunked_prefill_is_bitwise_identical_to_fused() {
             )
             .unwrap();
         assert_eq!(seq.cache.len(), n, "chunk={chunk}");
+        let w = spec.n_kv_heads * spec.head_dim;
         for layer in 0..spec.n_layers {
             let a = seq.cache.layer(layer);
             let b = reference.layer(layer);
-            assert_eq!(a.k_rows(0, n), b.k_rows(0, n), "k bits, layer {layer} chunk {chunk}");
-            assert_eq!(a.v_rows(0, n), b.v_rows(0, n), "v bits, layer {layer} chunk {chunk}");
+            let (ka, va) = kv_prefix(&a, n, w);
+            let (kb, vb) = kv_prefix(&b, n, w);
+            assert_eq!(ka, kb, "k bits, layer {layer} chunk {chunk}");
+            assert_eq!(va, vb, "v bits, layer {layer} chunk {chunk}");
             assert_eq!(a.digests(), b.digests(), "digests, layer {layer} chunk {chunk}");
         }
         // Resident-set initialization (digest scores against the final
@@ -122,6 +134,97 @@ fn generation_is_byte_identical_across_chunk_sizes() {
             }
         }
     }
+}
+
+#[test]
+fn prefix_cache_hit_is_bitwise_identical_to_cold_prefill() {
+    let stack = common::stack();
+    let spec = stack.gpu.spec.clone();
+    let n = spec.max_seq / 2 + 3; // several full blocks + a partial tail
+    let req = RequestSpec::new(1, prompt(n, 9), 4);
+    let params = || PrefillParams {
+        pin_sink: true,
+        pin_recent: 1,
+        recall_countdowns: vec![usize::MAX; spec.n_layers],
+    };
+
+    // Cold reference: no pool attached at all.
+    let mut cold = PrefillState::begin(&spec, &req, spec.k_blocks, 16).unwrap();
+    while !cold.advance(&stack.gpu).unwrap() {}
+    let cold_h = cold.h_last().to_vec();
+    let cold_seq = cold.finish(&stack.native, params()).unwrap();
+
+    // Warm-up run publishes its full chunks into the pool...
+    let pool = Arc::new(PrefixPool::new(64));
+    let mut warm = PrefillState::begin(&spec, &req, spec.k_blocks, 16).unwrap();
+    warm.attach_pool(pool.clone());
+    while !warm.advance(&stack.gpu).unwrap() {}
+    let after_warm = pool.stats();
+    assert!(after_warm.published > 0, "warm run must publish full chunks");
+    assert_eq!(after_warm.hits, 0, "nothing to hit on a cold pool");
+
+    // ...so the second run imports them instead of computing. Everything
+    // downstream of the import must be bitwise identical to cold:
+    // generation determinism is the tentpole contract.
+    let mut hit = PrefillState::begin(&spec, &req, spec.k_blocks, 16).unwrap();
+    hit.attach_pool(pool.clone());
+    while !hit.advance(&stack.gpu).unwrap() {}
+    assert!(pool.stats().hits > 0, "second run must hit the pool");
+    assert_eq!(hit.h_last(), &cold_h[..], "h_last bits after imported prefix");
+    let hit_seq = hit.finish(&stack.native, params()).unwrap();
+
+    let w = spec.n_kv_heads * spec.head_dim;
+    for layer in 0..spec.n_layers {
+        let a = hit_seq.cache.layer(layer);
+        let b = cold_seq.cache.layer(layer);
+        let (ka, va) = kv_prefix(&a, n, w);
+        let (kb, vb) = kv_prefix(&b, n, w);
+        assert_eq!(ka, kb, "k bits, layer {layer}");
+        assert_eq!(va, vb, "v bits, layer {layer}");
+        assert_eq!(a.digests(), b.digests(), "digests, layer {layer}");
+    }
+    // Resident-set selection consumes digests + h_last only, so it must
+    // be hit-invariant too.
+    for layer in 0..spec.n_layers {
+        let a: Vec<usize> = hit_seq.resident[layer].iter().collect();
+        let b: Vec<usize> = cold_seq.resident[layer].iter().collect();
+        assert_eq!(a, b, "resident set diverged on layer {layer}");
+    }
+}
+
+#[test]
+fn prefix_cache_pool_serves_identical_bytes_and_counts_hits() {
+    // End-to-end through the serving plane: same shared system prompt
+    // submitted twice — the second request must generate byte-identical
+    // output while the pool records hits, and `{"stats":true}` surfaces
+    // the counters.
+    let mut cfg = RunConfig::for_preset(common::PRESET);
+    cfg.server.replicas = 1;
+    cfg.scout.prefill_chunk = 16;
+    cfg.scout.prefix_cache_blocks = 64;
+    let pool = EnginePool::start(cfg.clone()).expect("pool start");
+    let spec = pool.spec().clone();
+    let shared = prompt(spec.max_seq / 2, 4);
+
+    let first = pool.submit(Submission::new(shared.clone(), 5)).wait().unwrap();
+    let second = pool.submit(Submission::new(shared.clone(), 5)).wait().unwrap();
+    assert_eq!(first.generated, second.generated, "reuse changed generation bytes");
+
+    let stats = pool.stats();
+    let prefix = stats.get("prefix").expect("prefix counters in stats");
+    assert!(prefix.req_usize("hits").unwrap() > 0, "second request must hit");
+    assert!(prefix.req_usize("published").unwrap() > 0);
+    assert!(prefix.req_usize("entries").unwrap() > 0);
+    pool.shutdown().expect("shutdown");
+
+    // And the no-cache path generates the same bytes (cfg default 0).
+    let mut cold_cfg = RunConfig::for_preset(common::PRESET);
+    cold_cfg.server.replicas = 1;
+    cold_cfg.scout.prefill_chunk = 16;
+    let cold_pool = EnginePool::start(cold_cfg).expect("pool start");
+    let cold = cold_pool.submit(Submission::new(shared, 5)).wait().unwrap();
+    assert_eq!(cold.generated, first.generated, "cache on/off diverged");
+    cold_pool.shutdown().expect("shutdown");
 }
 
 #[test]

@@ -15,7 +15,10 @@ import os
 import sys
 
 ORDERING_VARIANTS = {"Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"}
-BLOCKING_CALLS = [".send(", ".try_send(", ".execute(", "export_seq(", "import_seq("]
+BLOCKING_CALLS = [
+    ".send(", ".try_send(", ".execute(", "export_seq(", "import_seq(",
+    ".probe(", ".publish(",
+]
 GUARD_CALLS = [".lock()", ".read()", ".write()", ".layer("]
 POISON_IDIOMS = (".lock()", ".read()", ".write()", ".into_inner()")
 
@@ -459,6 +462,10 @@ FIXTURES = [
      "pub fn f(m: &std::sync::Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {\n    let v = {\n        let g = m.lock().unwrap();\n        *g\n    };\n    tx.send(v).ok();\n}\n", []),
     ("view_guard_across_export_fails", "rust/src/kvcache/x.rs",
      "pub fn f(store: &crate::kvcache::ShardedKvCache) {\n    let view = store.layer(0);\n    store.export_seq(7);\n}\n", ["lock-across"]),
+    ("shard_guard_across_pool_publish_fails", "rust/src/kvcache/x.rs",
+     "pub fn f(store: &crate::kvcache::ShardedKvCache, pool: &crate::kvcache::PrefixPool) {\n    let view = store.layer(0);\n    pool.publish(7, Vec::new());\n}\n", ["lock-across"]),
+    ("scoped_guard_before_pool_probe_passes", "rust/src/kvcache/x.rs",
+     "pub fn f(store: &crate::kvcache::ShardedKvCache, pool: &crate::kvcache::PrefixPool) {\n    {\n        let view = store.layer(0);\n        let _ = view;\n    }\n    pool.probe(7);\n}\n", []),
     ("scrutinee_temporary_not_tracked", "rust/src/coordinator/x.rs",
      "pub fn f(rx: &std::sync::Mutex<std::sync::mpsc::Receiver<u32>>, tx: &std::sync::mpsc::Sender<u32>) {\n    let job = match rx.lock().unwrap().recv() { Ok(j) => j, Err(_) => return };\n    tx.send(job).ok();\n}\n", []),
     ("lock_across_outside_guarded_dirs_ignored", "rust/src/runtime/x.rs",

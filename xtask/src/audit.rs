@@ -14,7 +14,10 @@
 //! 3. **lock-across** — in `coordinator/`, `kvcache/`, and `serve/`, no
 //!    *named* lock/view guard (`let g = ….lock()/.read()/.write()/
 //!    .layer(…)`) is live across a blocking boundary: channel `.send(` /
-//!    `.try_send(`, `Backend::execute`, or `export_seq`/`import_seq`.
+//!    `.try_send(`, `Backend::execute`, `export_seq`/`import_seq`, or
+//!    the prefix-pool's `.probe(`/`.publish(` (both take the pool mutex;
+//!    entering them with a shard guard held inverts the lock order
+//!    against the publish path, which takes shard locks to seal blocks).
 //!    Guards die at `drop(g)`, at rebinding, or when their brace block
 //!    closes. Escape hatch: `// audit: allow(lock_across): reason`.
 //! 4. **unwrap-hot** — no `.unwrap()` / `.expect(` in non-test hot-path
@@ -47,8 +50,8 @@ impl std::fmt::Display for Violation {
 }
 
 const ORDERING_VARIANTS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
-const BLOCKING_CALLS: [&str; 5] =
-    [".send(", ".try_send(", ".execute(", "export_seq(", "import_seq("];
+const BLOCKING_CALLS: [&str; 7] =
+    [".send(", ".try_send(", ".execute(", "export_seq(", "import_seq(", ".probe(", ".publish("];
 const GUARD_CALLS: [&str; 4] = [".lock()", ".read()", ".write()", ".layer("];
 const POISON_IDIOMS: [&str; 4] = [".lock()", ".read()", ".write()", ".into_inner()"];
 

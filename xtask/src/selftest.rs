@@ -98,6 +98,18 @@ const FIXTURES: &[Fixture] = &[
         expect: &["lock-across"],
     },
     Fixture {
+        name: "shard_guard_across_pool_publish_fails",
+        path: "rust/src/kvcache/x.rs",
+        source: "pub fn f(store: &crate::kvcache::ShardedKvCache, pool: &crate::kvcache::PrefixPool) {\n    let view = store.layer(0);\n    pool.publish(7, Vec::new());\n}\n",
+        expect: &["lock-across"],
+    },
+    Fixture {
+        name: "scoped_guard_before_pool_probe_passes",
+        path: "rust/src/kvcache/x.rs",
+        source: "pub fn f(store: &crate::kvcache::ShardedKvCache, pool: &crate::kvcache::PrefixPool) {\n    {\n        let view = store.layer(0);\n        let _ = view;\n    }\n    pool.probe(7);\n}\n",
+        expect: &[],
+    },
+    Fixture {
         name: "scrutinee_temporary_not_tracked",
         path: "rust/src/coordinator/x.rs",
         source: "pub fn f(rx: &std::sync::Mutex<std::sync::mpsc::Receiver<u32>>, tx: &std::sync::mpsc::Sender<u32>) {\n    let job = match rx.lock().unwrap().recv() { Ok(j) => j, Err(_) => return };\n    tx.send(job).ok();\n}\n",
