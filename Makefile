@@ -10,7 +10,7 @@
 PRESETS ?= test-tiny
 ARTIFACTS_DIR := artifacts
 
-.PHONY: all build test bench bench-smoke bench-baseline bench-serve bench-prefill bench-prefix audit clippy fmt artifacts clean
+.PHONY: all build test chaos bench bench-smoke bench-baseline bench-serve bench-prefill bench-prefix audit clippy fmt artifacts clean
 
 all: build
 
@@ -19,6 +19,13 @@ build:
 
 test:
 	cargo test -q
+
+# Chaos suite: deterministic fault injection (replica panics, handoff
+# faults, KV-alloc failures, stalls) against a live pool. Single-threaded
+# because the fault registry is process-global; SCOUT_CHAOS_QUICK shrinks
+# request counts for smoke runs (unset it for the full sweep).
+chaos:
+	SCOUT_CHAOS_QUICK=1 cargo test --release --test chaos -- --test-threads=1
 
 bench: build
 	cargo bench

@@ -79,6 +79,11 @@ pub struct ServerConfig {
     /// `replicas`, with at least one prefill-capable and one
     /// decode-capable entry.
     pub roles: Vec<ReplicaRole>,
+    /// Watchdog scan interval in milliseconds. When > 0, a monitor
+    /// thread marks a replica failed (excluded from routing) if its
+    /// engine-loop heartbeat goes stale for two scan intervals while it
+    /// has work queued. `0` (the default) disables the watchdog.
+    pub watchdog_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -91,6 +96,7 @@ impl Default for ServerConfig {
             policy: RoutePolicy::LeastLoaded,
             token_budget: 1 << 22,
             roles: Vec::new(),
+            watchdog_ms: 0,
         }
     }
 }
@@ -132,6 +138,9 @@ impl ServerConfig {
                 })
                 .collect::<crate::Result<Vec<_>>>()?;
         }
+        if let Some(v) = j.get("watchdog_ms") {
+            c.watchdog_ms = v.as_u64().unwrap_or(c.watchdog_ms);
+        }
         Ok(c)
     }
 
@@ -144,6 +153,7 @@ impl ServerConfig {
             ("policy", Json::str(self.policy.label())),
             ("token_budget", Json::num(self.token_budget as f64)),
             ("roles", Json::Arr(self.roles.iter().map(|r| Json::str(r.label())).collect())),
+            ("watchdog_ms", Json::num(self.watchdog_ms as f64)),
         ])
     }
 }
@@ -294,6 +304,12 @@ mod tests {
         assert_eq!(back.server.replicas, 4);
         assert_eq!(back.server.policy, RoutePolicy::SessionAffinity);
         assert_eq!(back.server.token_budget, 4096);
+        assert_eq!(back.server.watchdog_ms, 0, "watchdog defaults off");
+        let w = RunConfig::from_json(
+            &Json::parse("{\"preset\":\"p\",\"server\":{\"watchdog_ms\":250}}").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(w.server.watchdog_ms, 250);
         // defaults when absent
         let d = RunConfig::from_json(&Json::parse("{\"preset\":\"p\"}").unwrap()).unwrap();
         assert_eq!(d.server.replicas, 1);

@@ -86,6 +86,13 @@ pub struct ScoutConfig {
     /// (default) disables prefix reuse entirely — no pool is built and
     /// admission behaves exactly as before.
     pub prefix_cache_blocks: usize,
+    /// Deterministic fault-injection spec armed when the EnginePool
+    /// starts (see `util::faults` for the grammar, e.g.
+    /// `replica.panic=once@2,handoff.send=err@nth:3`). Empty (default)
+    /// leaves the registry disarmed — the serving plane then behaves
+    /// byte-identically to a build without the registry. A non-empty
+    /// config value wins over the `SCOUT_FAULTS` env var.
+    pub faults: String,
 }
 
 impl Default for ScoutConfig {
@@ -101,6 +108,7 @@ impl Default for ScoutConfig {
             threads_per_group: 1,
             prefill_chunk: crate::coordinator::DEFAULT_PREFILL_CHUNK,
             prefix_cache_blocks: 0,
+            faults: String::new(),
         }
     }
 }
@@ -138,6 +146,9 @@ impl ScoutConfig {
         if let Some(v) = j.get("prefix_cache_blocks") {
             c.prefix_cache_blocks = v.as_usize().unwrap_or(c.prefix_cache_blocks);
         }
+        if let Some(v) = j.get("faults") {
+            c.faults = v.as_str().map(str::to_string).unwrap_or_else(|| c.faults.clone());
+        }
         // Legacy knob from the shared-pool era: *total* CPU threads. Map
         // it onto the sharded shape that preserves the thread budget:
         // that many single-thread groups (the scheduler caps groups at
@@ -162,6 +173,7 @@ impl ScoutConfig {
             ("threads_per_group", Json::num(self.threads_per_group as f64)),
             ("prefill_chunk", Json::num(self.prefill_chunk as f64)),
             ("prefix_cache_blocks", Json::num(self.prefix_cache_blocks as f64)),
+            ("faults", Json::str(self.faults.clone())),
         ])
     }
 }
@@ -215,6 +227,18 @@ mod tests {
         assert_eq!(c.prefix_cache_blocks, 256);
         let back = ScoutConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.prefix_cache_blocks, 256);
+    }
+
+    #[test]
+    fn faults_default_empty_and_roundtrip() {
+        assert!(ScoutConfig::default().faults.is_empty(), "injection is opt-in");
+        let c = ScoutConfig::from_json(
+            &Json::parse("{\"faults\":\"replica.panic=once@2\"}").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.faults, "replica.panic=once@2");
+        let back = ScoutConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.faults, "replica.panic=once@2");
     }
 
     #[test]

@@ -37,6 +37,10 @@ impl RunConfig {
                 "server.roles needs at least one decode-capable (decode/mixed) replica"
             );
         }
+        if !self.scout.faults.is_empty() {
+            crate::util::faults::parse(&self.scout.faults)
+                .map_err(|e| anyhow::anyhow!("scout.faults: {e:#}"))?;
+        }
         self.device.validate()?;
         Ok(())
     }
@@ -91,6 +95,18 @@ mod tests {
         let mut c = RunConfig::for_preset("x");
         c.server.replicas = 5;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_spec_is_validated_without_arming() {
+        let mut c = RunConfig::for_preset("x");
+        c.scout.faults = "replica.panic=once@2,handoff.send=err@nth:3".into();
+        // `parse` (not `arm`) — validating a config never arms the
+        // process-global registry, so this can't race other tests.
+        c.validate().unwrap();
+        c.scout.faults = "not-a-rule".into();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("scout.faults"), "{err}");
     }
 
     #[test]

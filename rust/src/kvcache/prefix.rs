@@ -149,7 +149,14 @@ impl PrefixPool {
     /// caller now holds references, so the entry cannot be evicted out
     /// from under it (eviction skips entries with outstanding clones).
     pub fn probe(&self, key: u64) -> Option<Vec<Arc<KvBlock>>> {
-        let mut inner = self.inner.lock().unwrap();
+        // Fault point: a forced miss — the request recomputes the chunk
+        // (and re-publishes), which is always correct, just slower.
+        if crate::util::faults::should_fire("prefix.probe", None) {
+            // ordering: Relaxed — statistics only (see field doc).
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         inner.tick += 1;
         let tick = inner.tick;
         match inner.map.get_mut(&key) {
@@ -174,7 +181,7 @@ impl PrefixPool {
     /// the router's locality hint must not perturb eviction order or
     /// hit-rate telemetry.
     pub fn contains(&self, key: u64) -> bool {
-        self.inner.lock().unwrap().map.contains_key(&key)
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).map.contains_key(&key)
     }
 
     /// Publish one computed chunk's per-layer blocks under `key`, then
@@ -183,7 +190,12 @@ impl PrefixPool {
     /// incumbent blocks (they are byte-identical by construction —
     /// same chained key ⇒ same token prefix ⇒ same deterministic K/V).
     pub fn publish(&self, key: u64, layers: Vec<Arc<KvBlock>>) {
-        let mut inner = self.inner.lock().unwrap();
+        // Fault point: drop the publish — later requests miss and
+        // recompute; correctness is unaffected.
+        if crate::util::faults::should_fire("prefix.publish", None) {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         inner.tick += 1;
         let tick = inner.tick;
         match inner.map.entry(key) {
@@ -235,7 +247,36 @@ impl PrefixPool {
             misses: self.misses.load(Ordering::Relaxed),
             published: self.published.load(Ordering::Relaxed),
             evicted: self.evicted.load(Ordering::Relaxed),
-            entries: self.inner.lock().unwrap().map.len() as u64,
+            entries: self.inner.lock().unwrap_or_else(|e| e.into_inner()).map.len() as u64,
+        }
+    }
+
+    /// Evict LRU-oldest unreferenced entries until at most `n` remain
+    /// (entries a live sequence still holds are skipped, as in
+    /// [`publish`](Self::publish) eviction). Load-shedding under memory
+    /// pressure: when KV allocation fails, the replica halves the pool
+    /// before rejecting with `retry_after_ms`, trading cached prefill
+    /// work for headroom instead of panicking.
+    pub fn shrink_to(&self, n: usize) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut evicted = 0u64;
+        while inner.map.len() > n {
+            let victim = inner
+                .map
+                .iter()
+                .filter(|(_, e)| e.layers.iter().all(|b| Arc::strong_count(b) == 1))
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| *k);
+            let Some(victim) = victim else {
+                break; // everything resident is live — nothing to shed
+            };
+            inner.map.remove(&victim);
+            evicted += 1;
+        }
+        drop(inner);
+        if evicted > 0 {
+            // ordering: Relaxed — statistics only (see field doc).
+            self.evicted.fetch_add(evicted, Ordering::Relaxed);
         }
     }
 }
@@ -324,6 +365,24 @@ mod tests {
         pool.publish(4, blockset(2, 4.0));
         assert!(!pool.contains(1));
         assert_eq!(pool.stats().evicted, 2);
+    }
+
+    #[test]
+    fn shrink_to_evicts_lru_but_never_live_entries() {
+        let pool = PrefixPool::new(8);
+        for k in 1..=4 {
+            pool.publish(k, blockset(1, k as f32));
+        }
+        let held = pool.probe(1).unwrap(); // oldest entry, but live
+        pool.shrink_to(2);
+        assert!(pool.contains(1), "live entry was shed");
+        assert!(pool.contains(4), "newest entry should survive");
+        assert!(!pool.contains(2) && !pool.contains(3));
+        assert_eq!(pool.stats().entries, 2);
+        assert_eq!(pool.stats().evicted, 2);
+        drop(held);
+        pool.shrink_to(0);
+        assert_eq!(pool.stats().entries, 0);
     }
 
     #[test]

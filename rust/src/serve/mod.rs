@@ -13,7 +13,8 @@
 //!   goes to a prefill-capable replica, the finished sequence to a
 //!   decode-capable one via zero-copy KV handoff).
 //! - [`stream`] — per-request event channels: incremental token events
-//!   plus exactly one terminal `Done` / `Rejected` / `Failed`.
+//!   plus exactly one terminal event (`Done` / `Rejected` / `Cancelled` /
+//!   `Failed` / `ReplicaLost` / `DeadlineExceeded`).
 //! - [`telemetry`] — per-replica gauges + latency histograms aggregated
 //!   into the `{"stats": true}` control response.
 //!

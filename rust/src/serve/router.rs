@@ -183,16 +183,22 @@ impl Router {
             Stage::Decode => self.roles[i].can_decode(),
         };
         // ordering: advisory routing hint only — a stale read just routes
-        // one more request to a replica that is draining, and admission
-        // is re-checked under the pool's senders mutex.
+        // one more request to a replica that is draining or was just
+        // marked failed, and admission is re-checked under the pool's
+        // senders mutex (a send to a failed replica's queue is refused
+        // when its supervisor recovers).
         let live = |i: usize| !self.replicas[i].draining.load(Ordering::Relaxed);
+        let up = |i: usize| !self.replicas[i].down.load(Ordering::Relaxed);
         // Draining replicas are skipped while any capable live replica
         // exists; accepted work must still land somewhere when the whole
-        // pool is draining, so the role-capable set is the fallback.
+        // pool is draining, so the up, role-capable set is the fallback.
+        // Failed (`down`) replicas are excluded even from that fallback:
+        // routing to a dead engine strands the request, while routing to
+        // a draining one merely gets it refused politely.
         let mut eligible: Vec<usize> =
-            (0..self.replicas.len()).filter(|&i| can(i) && live(i)).collect();
+            (0..self.replicas.len()).filter(|&i| can(i) && up(i) && live(i)).collect();
         if eligible.is_empty() {
-            eligible = (0..self.replicas.len()).filter(|&i| can(i)).collect();
+            eligible = (0..self.replicas.len()).filter(|&i| can(i) && up(i)).collect();
         }
         eligible
     }
@@ -384,6 +390,50 @@ mod tests {
             rep.draining.store(true, Ordering::Relaxed);
         }
         assert!(r.pick_decode(Some(&session)).is_some(), "drain must not strand handoffs");
+    }
+
+    #[test]
+    fn failed_replicas_are_excluded_even_from_the_draining_fallback() {
+        let reps = replicas(3);
+        reps[1].down.store(true, Ordering::Relaxed);
+        let r = Router::new(RoutePolicy::RoundRobin, reps.clone(), mixed(3));
+        for _ in 0..8 {
+            let pick = r.pick_prefill(None).expect("survivors must still place");
+            assert_ne!(pick, 1, "routed to a failed replica");
+            assert_ne!(r.pick_decode(None), Some(1));
+        }
+        // Whole pool draining: the fallback may use draining replicas
+        // but still never the failed one.
+        for rep in &reps {
+            rep.draining.store(true, Ordering::Relaxed);
+        }
+        for _ in 0..8 {
+            assert_ne!(r.pick_decode(None), Some(1), "failed replica used as drain fallback");
+        }
+        // Every replica failed: placement must refuse, not strand.
+        for rep in &reps {
+            rep.down.store(true, Ordering::Relaxed);
+        }
+        assert_eq!(r.pick_prefill(None), None);
+        // Recovery: the supervisor clears `down` and the replica is
+        // placeable again (drain flags cleared too for a clean check).
+        for rep in &reps {
+            rep.down.store(false, Ordering::Relaxed);
+            rep.draining.store(false, Ordering::Relaxed);
+        }
+        let picks: std::collections::HashSet<usize> =
+            (0..6).map(|_| r.pick_prefill(None).unwrap()).collect();
+        assert!(picks.contains(&1), "respawned replica never returned to rotation");
+    }
+
+    #[test]
+    fn prefix_hint_falls_back_off_failed_advertiser() {
+        let reps = replicas(3);
+        reps[1].live_tokens.store(50, Ordering::Relaxed);
+        advertise(&reps, 2, 0xfeed);
+        reps[2].down.store(true, Ordering::Relaxed);
+        let r = Router::new(RoutePolicy::LeastLoaded, reps, mixed(3));
+        assert_eq!(r.pick_prefill_with_hint(None, Some(0xfeed)), Some(0));
     }
 
     #[test]

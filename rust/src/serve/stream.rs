@@ -4,7 +4,8 @@
 //! Every submission gets its own event channel. Replicas publish one
 //! [`StreamEvent::Token`] per decode step as soon as the token exists
 //! (streaming requests only) and always terminate the stream with exactly
-//! one terminal event: `Done`, `Rejected`, or `Failed`. The channel is
+//! one terminal event: `Done`, `Rejected`, `Cancelled`, `Failed`,
+//! `ReplicaLost`, or `DeadlineExceeded`. The channel is
 //! unbounded on purpose — a slow client must never stall the replica's
 //! whole continuous batch, and the event count is bounded by
 //! `max_new_tokens + 1` anyway.
@@ -65,6 +66,16 @@ pub enum StreamEvent {
     Cancelled { id: u64 },
     /// Terminal: the owning replica hit an engine error.
     Failed { id: u64, error: String },
+    /// Terminal: the replica holding this request's decode state died
+    /// (panic, watchdog stall, or a handoff to a dead replica) and its
+    /// KV cache is unrecoverable. Retryable — the request itself is
+    /// fine; resubmitting replays the prompt on a surviving replica
+    /// (cheaply, via the prefix pool). Prefill-stage requests are
+    /// replayed transparently instead and never see this event.
+    ReplicaLost { id: u64, retry_after_ms: u64 },
+    /// Terminal: the request's `timeout_ms` deadline passed (checked at
+    /// admission, between prefill chunks, and between decode steps).
+    DeadlineExceeded { id: u64, elapsed_ms: u64 },
 }
 
 pub(crate) type EventSender = Sender<StreamEvent>;
@@ -154,6 +165,14 @@ impl StreamHandle {
                 }
                 StreamEvent::Failed { id, error } => {
                     anyhow::bail!("request {id} failed on replica: {error}")
+                }
+                StreamEvent::ReplicaLost { id, retry_after_ms } => {
+                    anyhow::bail!(
+                        "request {id}: replica lost, retryable (retry_after_ms {retry_after_ms})"
+                    )
+                }
+                StreamEvent::DeadlineExceeded { id, elapsed_ms } => {
+                    anyhow::bail!("request {id}: deadline exceeded after {elapsed_ms} ms")
                 }
             }
         }

@@ -34,6 +34,23 @@ pub struct ReplicaTelemetry {
     /// This replica is no longer accepting new admissions (pool drain;
     /// the router skips draining replicas while alternatives exist).
     pub draining: AtomicBool,
+    /// This replica is failed (engine panic caught by the supervisor, or
+    /// a watchdog-detected stall): the router excludes it from placement
+    /// entirely — unlike `draining` it is never a fallback target.
+    pub down: AtomicBool,
+    /// The supervisor is currently rebuilding this replica's Stack
+    /// (between catching a panic and returning it to rotation).
+    pub restarting: AtomicBool,
+    /// Monotonic-clock stamp (us) of the replica engine loop's last
+    /// iteration — the watchdog's liveness signal. 0 until first stamp.
+    pub heartbeat_us: AtomicU64,
+    /// Lifetime: times the supervisor respawned this replica's engine.
+    pub restarts: AtomicU64,
+    /// Lifetime: requests terminated because their deadline passed.
+    pub deadline_exceeded: AtomicU64,
+    /// Lifetime: fault-registry injections observed in this replica's
+    /// context (chaos-test visibility; 0 in production).
+    pub faults_injected: AtomicU64,
     /// Lifetime: requests admitted (prefill completed).
     pub admitted: AtomicU64,
     /// Lifetime: prefill chunks executed.
@@ -62,6 +79,8 @@ pub struct ReplicaTelemetry {
     pub queue_wait_us: Mutex<Histogram>,
     /// Handoff dispatch -> imported on this replica, us.
     pub handoff_us: Mutex<Histogram>,
+    /// Panic caught -> replica back in rotation, us.
+    pub restart_us: Mutex<Histogram>,
     /// The replica's cross-request prefix pool, registered by the
     /// replica loop when `scout.prefix_cache_blocks > 0` (None = reuse
     /// disabled). Cold path: set once at startup, read by stats
@@ -86,12 +105,33 @@ impl ReplicaTelemetry {
     /// with chained hash `key` — the router's prefix-locality probe.
     /// Read-only on the pool (no LRU refresh, no counter noise).
     pub fn advertises(&self, key: u64) -> bool {
-        self.prefix_pool.lock().unwrap().as_ref().is_some_and(|p| p.contains(key))
+        self.prefix_pool
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .as_ref()
+            .is_some_and(|p| p.contains(key))
     }
 
     /// Prefix-pool counter snapshot, if reuse is enabled here.
     pub fn prefix_stats(&self) -> Option<PrefixPoolStats> {
-        self.prefix_pool.lock().unwrap().as_ref().map(|p| p.stats())
+        self.prefix_pool.lock().unwrap_or_else(|e| e.into_inner()).as_ref().map(|p| p.stats())
+    }
+
+    /// Lifecycle state label for snapshots: `failed` and `restarting`
+    /// outrank `draining`, which outranks `ready`.
+    pub fn state(&self) -> &'static str {
+        // ordering: advisory state label from independent flags — a
+        // transition racing the read yields the old (still truthful)
+        // label, so Relaxed loads suffice.
+        if self.restarting.load(Ordering::Relaxed) {
+            "restarting"
+        } else if self.down.load(Ordering::Relaxed) {
+            "failed"
+        } else if self.draining.load(Ordering::Relaxed) {
+            "draining"
+        } else {
+            "ready"
+        }
     }
 
     /// Requests that would sit in front of a new submission.
@@ -111,6 +151,7 @@ impl ReplicaTelemetry {
         Json::obj(vec![
             ("replica", Json::num(replica as f64)),
             ("role", Json::str(role.label())),
+            ("state", Json::str(self.state())),
             ("queue_depth", Json::num(self.queued.load(Ordering::Relaxed) as f64)),
             ("queued_tokens", Json::num(self.queued_tokens.load(Ordering::Relaxed) as f64)),
             ("prefilling", Json::num(self.prefilling.load(Ordering::Relaxed) as f64)),
@@ -125,6 +166,12 @@ impl ReplicaTelemetry {
             ("finished", Json::num(self.finished.load(Ordering::Relaxed) as f64)),
             ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
             ("cancelled", Json::num(self.cancelled.load(Ordering::Relaxed) as f64)),
+            ("restarts", Json::num(self.restarts.load(Ordering::Relaxed) as f64)),
+            (
+                "deadline_exceeded",
+                Json::num(self.deadline_exceeded.load(Ordering::Relaxed) as f64),
+            ),
+            ("faults_injected", Json::num(self.faults_injected.load(Ordering::Relaxed) as f64)),
             ("steps", Json::num(self.steps.load(Ordering::Relaxed) as f64)),
             ("tokens_out", Json::num(tokens_out as f64)),
             (
@@ -132,9 +179,13 @@ impl ReplicaTelemetry {
                 Json::num(if uptime_s > 0.0 { tokens_out as f64 / uptime_s } else { 0.0 }),
             ),
             ("busy_us", Json::num(self.busy_us.load(Ordering::Relaxed) as f64)),
-            ("ttft_us", hist_json(&self.ttft_us.lock().unwrap())),
-            ("queue_wait_us", hist_json(&self.queue_wait_us.lock().unwrap())),
-            ("handoff_us", hist_json(&self.handoff_us.lock().unwrap())),
+            ("ttft_us", hist_json(&self.ttft_us.lock().unwrap_or_else(|e| e.into_inner()))),
+            (
+                "queue_wait_us",
+                hist_json(&self.queue_wait_us.lock().unwrap_or_else(|e| e.into_inner())),
+            ),
+            ("handoff_us", hist_json(&self.handoff_us.lock().unwrap_or_else(|e| e.into_inner()))),
+            ("restart_us", hist_json(&self.restart_us.lock().unwrap_or_else(|e| e.into_inner()))),
             (
                 "prefix",
                 match self.prefix_stats() {
@@ -220,14 +271,15 @@ pub fn pool_stats_json(
     let mut rows = Vec::with_capacity(replicas.len());
     let (mut depth, mut live, mut inflight, mut tokens_out) = (0usize, 0usize, 0usize, 0u64);
     let (mut cancelled, mut handoffs, mut handoff_bytes) = (0u64, 0u64, 0u64);
+    let (mut restarts, mut deadline_exceeded, mut failed_replicas) = (0u64, 0u64, 0usize);
     let mut prefilling = 0usize;
     let mut prefix_agg: Option<PrefixPoolStats> = None;
     for (i, r) in replicas.iter().enumerate() {
         let role = roles.get(i).copied().unwrap_or_default();
         rows.push(r.snapshot(i, role, uptime_s));
-        ttft.merge(&r.ttft_us.lock().unwrap());
-        queue_wait.merge(&r.queue_wait_us.lock().unwrap());
-        handoff.merge(&r.handoff_us.lock().unwrap());
+        ttft.merge(&r.ttft_us.lock().unwrap_or_else(|e| e.into_inner()));
+        queue_wait.merge(&r.queue_wait_us.lock().unwrap_or_else(|e| e.into_inner()));
+        handoff.merge(&r.handoff_us.lock().unwrap_or_else(|e| e.into_inner()));
         depth += r.queued.load(Ordering::Relaxed);
         prefilling += r.prefilling.load(Ordering::Relaxed);
         live += r.live_seqs.load(Ordering::Relaxed);
@@ -236,6 +288,9 @@ pub fn pool_stats_json(
         cancelled += r.cancelled.load(Ordering::Relaxed);
         handoffs += r.handoffs_in.load(Ordering::Relaxed);
         handoff_bytes += r.handoff_bytes_in.load(Ordering::Relaxed);
+        restarts += r.restarts.load(Ordering::Relaxed);
+        deadline_exceeded += r.deadline_exceeded.load(Ordering::Relaxed);
+        failed_replicas += usize::from(r.down.load(Ordering::Relaxed));
         if let Some(s) = r.prefix_stats() {
             let a = prefix_agg.get_or_insert_with(PrefixPoolStats::default);
             a.hits += s.hits;
@@ -266,6 +321,10 @@ pub fn pool_stats_json(
             ]),
         ),
         ("cancelled", Json::num(cancelled as f64)),
+        ("restarts", Json::num(restarts as f64)),
+        ("deadline_exceeded", Json::num(deadline_exceeded as f64)),
+        ("failed_replicas", Json::num(failed_replicas as f64)),
+        ("faults_injected", Json::num(crate::util::faults::injected_total() as f64)),
         ("queue_depth", Json::num(depth as f64)),
         ("prefilling", Json::num(prefilling as f64)),
         ("live_seqs", Json::num(live as f64)),
@@ -356,6 +415,39 @@ mod tests {
         assert_eq!(j.get("ttft_us").unwrap().req_usize("count").unwrap(), 2);
         // no replica registered a prefix pool -> null, not zeros
         assert!(matches!(j.get("prefix"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn state_label_precedence_and_fault_counters_surface() {
+        let t = ReplicaTelemetry::default();
+        assert_eq!(t.state(), "ready");
+        t.draining.store(true, Ordering::Relaxed);
+        assert_eq!(t.state(), "draining");
+        t.down.store(true, Ordering::Relaxed);
+        assert_eq!(t.state(), "failed", "failed outranks draining");
+        t.restarting.store(true, Ordering::Relaxed);
+        assert_eq!(t.state(), "restarting");
+        t.restarting.store(false, Ordering::Relaxed);
+        t.down.store(false, Ordering::Relaxed);
+        t.restarts.store(3, Ordering::Relaxed);
+        t.deadline_exceeded.store(2, Ordering::Relaxed);
+        t.restart_us.lock().unwrap().record(1500.0);
+        let j = t.snapshot(0, ReplicaRole::Mixed, 1.0);
+        assert_eq!(j.req_str("state").unwrap(), "draining");
+        assert_eq!(j.req_usize("restarts").unwrap(), 3);
+        assert_eq!(j.req_usize("deadline_exceeded").unwrap(), 2);
+        assert_eq!(j.get("restart_us").unwrap().req_usize("count").unwrap(), 1);
+        let agg = pool_stats_json(
+            &PoolTelemetry::default(),
+            &[Arc::new(t)],
+            &[ReplicaRole::Mixed],
+            1.0,
+            false,
+        );
+        assert_eq!(agg.req_usize("restarts").unwrap(), 3);
+        assert_eq!(agg.req_usize("deadline_exceeded").unwrap(), 2);
+        assert_eq!(agg.req_usize("failed_replicas").unwrap(), 0);
+        assert!(agg.get("faults_injected").is_some());
     }
 
     #[test]

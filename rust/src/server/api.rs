@@ -1,11 +1,23 @@
 //! Wire protocol types (JSON-lines, via the in-tree JSON codec).
 //!
 //! Data plane (one JSON object per line):
-//!   -> {"prompt": [..], "max_new_tokens": 16, "stream": true, "session": "u1"}
+//!   -> {"prompt": [..], "max_new_tokens": 16, "stream": true, "session": "u1",
+//!       "timeout_ms": 500}
 //!   <- {"id": 0, "token": 17, "step": 1}            (streaming only, per step)
 //!   <- {"id": 0, "generated": [..], "steps": 16, "decode_wall_us": ..,
 //!       "queue_us": .., "ttft_us": ..}              (terminal)
 //!   <- {"id": 0, "error": "...", "code": "overloaded", "retry_after_ms": 40}
+//!
+//! `timeout_ms` (optional, default 0 = none) is a per-request deadline
+//! measured from arrival; an expired request gets a terminal line with
+//! `code: "deadline_exceeded"`. Every request receives exactly one
+//! terminal line; besides `"overloaded"`/`"draining"`/`"invalid"`
+//! rejections, `"cancelled"`, and `"failed"`, two fault-tolerance
+//! terminals exist: `code: "replica_lost"` (the owning replica died
+//! mid-decode; retryable, carries `retry_after_ms`) and
+//! `code: "deadline_exceeded"` (carries `elapsed_ms`). Requests still
+//! in prefill when a replica dies are replayed transparently and never
+//! see `"replica_lost"`.
 //!
 //! Control plane:
 //!   -> {"stats": true}      <- pool + per-replica telemetry snapshot
@@ -25,6 +37,8 @@ pub struct IncomingRequest {
     /// Monotonic arrival stamp ([`clock::now_us`]) taken at parse time —
     /// the wire boundary — so queueing delay and TTFT are measurable.
     pub arrival_us: u64,
+    /// Per-request deadline in ms after arrival; 0 = no deadline.
+    pub timeout_ms: u64,
 }
 
 /// One parsed wire line.
@@ -66,7 +80,15 @@ impl IncomingRequest {
         let max_new_tokens = j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
         let stream = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
         let session = j.get("session").and_then(|v| v.as_str()).map(|s| s.to_string());
-        Ok(Self { prompt, max_new_tokens, stream, session, arrival_us: clock::now_us() })
+        let timeout_ms = j.get("timeout_ms").and_then(|v| v.as_u64()).unwrap_or(0);
+        Ok(Self {
+            prompt,
+            max_new_tokens,
+            stream,
+            session,
+            arrival_us: clock::now_us(),
+            timeout_ms,
+        })
     }
 
     /// Bridge for embedders driving a raw scheduler without the pool
@@ -90,6 +112,7 @@ impl IncomingRequest {
             stream: self.stream,
             session: self.session,
             arrival_us: self.arrival_us,
+            timeout_ms: self.timeout_ms,
         }
     }
 }
@@ -144,6 +167,29 @@ pub fn cancelled_to_json(id: u64) -> Json {
         ("id", Json::num(id as f64)),
         ("error", Json::str("cancelled: client disconnected")),
         ("code", Json::str("cancelled")),
+    ])
+}
+
+/// Server -> client terminal for a replica lost mid-decode. Retryable:
+/// the request itself was fine, its replica died; `code:
+/// "replica_lost"` plus an honest `retry_after_ms` lets clients
+/// distinguish this from a hard `"failed"`.
+pub fn replica_lost_to_json(id: u64, retry_after_ms: u64) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("error", Json::str("replica lost mid-decode, please retry")),
+        ("code", Json::str("replica_lost")),
+        ("retry_after_ms", Json::num(retry_after_ms as f64)),
+    ])
+}
+
+/// Server -> client terminal for an expired per-request deadline.
+pub fn deadline_exceeded_to_json(id: u64, elapsed_ms: u64) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("error", Json::str("deadline exceeded")),
+        ("code", Json::str("deadline_exceeded")),
+        ("elapsed_ms", Json::num(elapsed_ms as f64)),
     ])
 }
 
@@ -257,6 +303,28 @@ mod tests {
         let text = failed_to_json(7, "decode step: boom").to_string();
         assert!(text.contains("\"id\":7"));
         assert!(text.contains("\"code\":\"failed\""));
+    }
+
+    #[test]
+    fn parses_timeout_and_threads_it_to_submission() {
+        let r = parse_req("{\"prompt\":[1],\"timeout_ms\":250}").unwrap();
+        assert_eq!(r.timeout_ms, 250);
+        let sub = r.into_submission();
+        assert_eq!(sub.timeout_ms, 250);
+        // absent -> no deadline
+        let r = parse_req("{\"prompt\":[1]}").unwrap();
+        assert_eq!(r.timeout_ms, 0);
+    }
+
+    #[test]
+    fn fault_terminal_json_shapes() {
+        let text = replica_lost_to_json(4, 40).to_string();
+        assert!(text.contains("\"id\":4"));
+        assert!(text.contains("\"code\":\"replica_lost\""));
+        assert!(text.contains("\"retry_after_ms\":40"));
+        let text = deadline_exceeded_to_json(5, 120).to_string();
+        assert!(text.contains("\"code\":\"deadline_exceeded\""));
+        assert!(text.contains("\"elapsed_ms\":120"));
     }
 
     #[test]

@@ -88,6 +88,12 @@ fn handle_conn(sock: TcpStream, pool: Arc<EnginePool>) {
                         StreamEvent::Failed { id, error } => {
                             (api::failed_to_json(*id, error).to_string(), true)
                         }
+                        StreamEvent::ReplicaLost { id, retry_after_ms } => {
+                            (api::replica_lost_to_json(*id, *retry_after_ms).to_string(), true)
+                        }
+                        StreamEvent::DeadlineExceeded { id, elapsed_ms } => {
+                            (api::deadline_exceeded_to_json(*id, *elapsed_ms).to_string(), true)
+                        }
                     };
                     if writeln!(w, "{text}").is_err() {
                         hup = true;

@@ -1,0 +1,290 @@
+//! Deterministic fault injection for chaos testing the serving plane.
+//!
+//! A *fault point* is a named site compiled into production code (the
+//! replica loop, handoff send/recv, KV import/export, prefix
+//! probe/publish, KV allocation). Each site asks [`should_fire`] /
+//! [`fail_point`] whether an armed rule matches it; with nothing armed
+//! the check is a single `Relaxed` atomic load and a branch — no lock,
+//! no allocation — so the disarmed binary behaves byte-identically to
+//! one compiled without the registry.
+//!
+//! **Spec grammar** (config `scout.faults` or env `SCOUT_FAULTS`):
+//!
+//! ```text
+//! spec  := rule (',' rule)*
+//! rule  := point ['[' replica ']'] '=' kind '@' when
+//! when  := 'always' | N | 'nth:' K
+//! ```
+//!
+//! e.g. `replica.panic[0]=once@3,handoff.send=err@nth:2`. `N` fires on
+//! exactly the N-th matching hit (1-based) and never again; `nth:K`
+//! fires on every K-th hit; `always` fires on every hit. `kind`
+//! (`once`/`err`/`panic`/`stall`) is a documentation label — the *site*
+//! defines what firing means (the replica-loop panic point panics, the
+//! handoff-send point forces the dead-destination path, …). The
+//! optional `[replica]` filter restricts a rule to one replica index;
+//! hit counters advance only on matching calls, so a filtered rule is
+//! deterministic per replica regardless of scheduling between replicas.
+//!
+//! **Determinism.** Hit counters are per-rule and advance only when the
+//! (point, replica) pair matches, and every fault point sits at a
+//! schedule-stable place (loop iteration boundaries, per-request
+//! handoff edges), so a seeded chaos run injects at the same logical
+//! step on every execution even though wall-clock interleaving varies.
+//!
+//! The registry is process-global (chaos suites run in their own test
+//! binary and serialize tests around arm/disarm); [`disarm`] drops all
+//! rules and restores the zero-cost path. [`injected_total`] counts
+//! fired injections for telemetry (`faults_injected`).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// When a matching rule fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum When {
+    /// Every matching hit.
+    Always,
+    /// Exactly the n-th matching hit (1-based), then never again.
+    At(u64),
+    /// Every k-th matching hit (k, 2k, 3k, …).
+    Nth(u64),
+}
+
+/// One armed fault rule.
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub point: String,
+    /// Restrict to one replica index (`None` = any caller).
+    pub replica: Option<usize>,
+    /// Documentation label from the spec (`once`/`err`/`panic`/`stall`);
+    /// the fault *site* defines the actual behavior.
+    pub kind: String,
+    pub when: When,
+    /// Matching calls observed so far (advances only on match).
+    hits: u64,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+static RULES: Mutex<Vec<Rule>> = Mutex::new(Vec::new());
+
+/// Parse a fault spec without arming it (config validation).
+pub fn parse(spec: &str) -> crate::Result<Vec<Rule>> {
+    let mut rules = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (lhs, rhs) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("fault rule {part:?}: expected point=kind@when"))?;
+        let (point, replica) = match lhs.split_once('[') {
+            Some((p, idx)) => {
+                let idx = idx
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("fault rule {part:?}: unclosed '['"))?;
+                let idx: usize = idx
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault rule {part:?}: bad replica {idx:?}"))?;
+                (p, Some(idx))
+            }
+            None => (lhs, None),
+        };
+        anyhow::ensure!(!point.is_empty(), "fault rule {part:?}: empty point name");
+        let (kind, when) = rhs
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("fault rule {part:?}: expected kind@when"))?;
+        anyhow::ensure!(!kind.is_empty(), "fault rule {part:?}: empty kind");
+        let when = if when == "always" {
+            When::Always
+        } else if let Some(k) = when.strip_prefix("nth:") {
+            let k: u64 = k
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault rule {part:?}: bad nth count {k:?}"))?;
+            anyhow::ensure!(k >= 1, "fault rule {part:?}: nth count must be >= 1");
+            When::Nth(k)
+        } else {
+            let n: u64 = when
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault rule {part:?}: bad when {when:?}"))?;
+            anyhow::ensure!(n >= 1, "fault rule {part:?}: hit index is 1-based");
+            When::At(n)
+        };
+        rules.push(Rule {
+            point: point.to_string(),
+            replica,
+            kind: kind.to_string(),
+            when,
+            hits: 0,
+        });
+    }
+    Ok(rules)
+}
+
+/// Parse and install `spec`, arming the registry. An empty spec is a
+/// no-op (it never disarms an already-armed registry — disarming is
+/// always explicit via [`disarm`]).
+pub fn arm(spec: &str) -> crate::Result<()> {
+    let rules = parse(spec)?;
+    if rules.is_empty() {
+        return Ok(());
+    }
+    let mut guard = RULES.lock().unwrap_or_else(|e| e.into_inner());
+    guard.extend(rules);
+    // ordering: Release pairs with the Acquire in `armed()` — a thread
+    // that observes `true` must also observe the rules installed above
+    // (the mutex alone covers readers that take it, but the fast path
+    // reads only this flag before deciding to lock).
+    ARMED.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Drop every rule and restore the zero-cost disarmed path. The
+/// injected-total counter is monotone and survives (telemetry deltas).
+pub fn disarm() {
+    let mut guard = RULES.lock().unwrap_or_else(|e| e.into_inner());
+    guard.clear();
+    // ordering: Release for symmetry with `arm` — after this store no
+    // fault point fires, and any that raced the clear saw either the
+    // old rules (fine: they were armed) or an empty list.
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Whether any rules are armed — the zero-cost fast path.
+pub fn armed() -> bool {
+    // ordering: Acquire pairs with the Release in `arm` so a `true`
+    // observation happens-after the rules were installed.
+    ARMED.load(Ordering::Acquire)
+}
+
+/// Lifetime count of fired injections (surfaced as `faults_injected`).
+pub fn injected_total() -> u64 {
+    // ordering: monotone statistics counter.
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Ask whether the fault point `point`, called from `replica` (if the
+/// caller has an identity), should fire now. Advances the hit counter
+/// of every matching rule; returns `true` if any fired.
+pub fn should_fire(point: &str, replica: Option<usize>) -> bool {
+    if !armed() {
+        return false;
+    }
+    let mut fired = false;
+    let mut guard = RULES.lock().unwrap_or_else(|e| e.into_inner());
+    for rule in guard.iter_mut() {
+        if rule.point != point {
+            continue;
+        }
+        if let (Some(want), Some(got)) = (rule.replica, replica) {
+            if want != got {
+                continue;
+            }
+        } else if rule.replica.is_some() && replica.is_none() {
+            continue;
+        }
+        rule.hits += 1;
+        let hit = match rule.when {
+            When::Always => true,
+            When::At(n) => rule.hits == n,
+            When::Nth(k) => rule.hits % k == 0,
+        };
+        if hit {
+            fired = true;
+        }
+    }
+    drop(guard);
+    if fired {
+        // ordering: monotone statistics counter.
+        INJECTED.fetch_add(1, Ordering::Relaxed);
+    }
+    fired
+}
+
+/// [`should_fire`] as a `Result`: the idiom for error-return fault
+/// points (`faults::fail_point("kv.import", Some(i))?`).
+pub fn fail_point(point: &str, replica: Option<usize>) -> crate::Result<()> {
+    if should_fire(point, replica) {
+        anyhow::bail!("fault injected: {point}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    /// The registry is process-global; tests in this module serialize.
+    static GATE: StdMutex<()> = StdMutex::new(());
+
+    struct Armed;
+    impl Armed {
+        fn new(spec: &str) -> Self {
+            arm(spec).unwrap();
+            Armed
+        }
+    }
+    impl Drop for Armed {
+        fn drop(&mut self) {
+            disarm();
+        }
+    }
+
+    #[test]
+    fn parse_grammar_and_errors() {
+        let rules = parse("replica.panic[0]=once@3,handoff.send=err@nth:2,x.y=panic@always")
+            .unwrap();
+        assert_eq!(rules.len(), 3);
+        assert_eq!(rules[0].point, "replica.panic");
+        assert_eq!(rules[0].replica, Some(0));
+        assert_eq!(rules[0].when, When::At(3));
+        assert_eq!(rules[1].replica, None);
+        assert_eq!(rules[1].when, When::Nth(2));
+        assert_eq!(rules[2].when, When::Always);
+        assert!(parse("").unwrap().is_empty());
+        for bad in ["nope", "p=x", "p=x@zero", "p=x@nth:0", "p=x@0", "p[=x@1", "=x@1"] {
+            assert!(parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn disarmed_is_inert_and_at_fires_exactly_once() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(!should_fire("replica.panic", Some(0)), "disarmed must never fire");
+        let _armed = Armed::new("replica.panic=once@2");
+        assert!(!should_fire("replica.panic", Some(0)), "hit 1");
+        assert!(should_fire("replica.panic", Some(0)), "hit 2 fires");
+        assert!(!should_fire("replica.panic", Some(0)), "hit 3 must not re-fire");
+        assert!(!should_fire("other.point", Some(0)), "point names are exact");
+    }
+
+    #[test]
+    fn replica_filter_counts_matching_hits_only() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let _armed = Armed::new("p=err@2");
+        // replace with a filtered rule
+        disarm();
+        arm("p[1]=err@2").unwrap();
+        assert!(!should_fire("p", Some(0)), "other replica must not advance the counter");
+        assert!(!should_fire("p", Some(1)), "hit 1 for replica 1");
+        assert!(!should_fire("p", Some(0)));
+        assert!(should_fire("p", Some(1)), "hit 2 for replica 1 fires");
+        assert!(!should_fire("p", None), "filtered rule ignores anonymous callers");
+    }
+
+    #[test]
+    fn nth_fires_periodically_and_fail_point_errors() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let _armed = Armed::new("q=err@nth:2");
+        let fired: Vec<bool> = (0..6).map(|_| should_fire("q", None)).collect();
+        assert_eq!(fired, vec![false, true, false, true, false, true]);
+        let before = injected_total();
+        assert!(fail_point("q", None).is_ok(), "hit 7");
+        let err = fail_point("q", None).unwrap_err().to_string();
+        assert!(err.contains("fault injected: q"), "{err}");
+        assert!(injected_total() > before);
+    }
+}

@@ -12,6 +12,7 @@ pub mod arena;
 pub mod argmax;
 pub mod bench;
 pub mod clock;
+pub mod faults;
 pub mod json;
 pub mod par;
 pub mod rng;

@@ -1,0 +1,359 @@
+//! Chaos suite: seeded fault injection against the full serving plane.
+//!
+//! Every test here arms the process-global fault registry
+//! ([`scoutattention::util::faults`]), drives a real `EnginePool`
+//! through the induced failure, and asserts the fault-tolerance
+//! contract end to end:
+//!
+//! - every in-flight client receives **exactly one** terminal event,
+//! - the pool's `inflight_tokens` reservation returns to zero,
+//! - the pool serves at full replica count again after the supervisor
+//!   respawns the crashed engine,
+//! - requests replayed after a crash produce **byte-identical** output
+//!   to an unfaulted reference run (prefill replay is deterministic),
+//! - `replica_lost` is retryable and `deadline_exceeded` /
+//!   `overloaded` load-shed terminals carry honest hints.
+//!
+//! The registry is global, so the suite serializes through a gate
+//! mutex and disarms via RAII even on assertion panics. CI runs this
+//! binary with `--test-threads=1`; `SCOUT_CHAOS_QUICK=1` shrinks the
+//! request counts for smoke lanes.
+
+mod common;
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use scoutattention::config::{ReplicaRole, RunConfig};
+use scoutattention::serve::{EnginePool, StreamEvent, StreamHandle, Submission};
+use scoutattention::util::{clock, faults, Json};
+
+const WAIT: Duration = Duration::from_secs(120);
+
+/// Serializes tests: the fault registry is process-global state.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// RAII disarm: rules must never leak into the next test, even when an
+/// assertion in this one panics.
+struct Disarm;
+
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        faults::disarm();
+    }
+}
+
+fn armed(spec: &str) -> Disarm {
+    faults::arm(spec).expect("valid fault spec");
+    Disarm
+}
+
+fn quick() -> bool {
+    std::env::var("SCOUT_CHAOS_QUICK").is_ok()
+}
+
+/// Deterministic prompt in the test-tiny vocab (256), avoiding pad 0.
+fn prompt(len: usize, salt: u32) -> Vec<u32> {
+    (0..len as u32).map(|i| 1 + (i * 29 + salt * 11) % 255).collect()
+}
+
+fn base_cfg(replicas: usize) -> RunConfig {
+    let mut cfg = RunConfig::for_preset(common::PRESET);
+    cfg.server.replicas = replicas;
+    cfg
+}
+
+fn wait_terminal(h: &StreamHandle) -> StreamEvent {
+    loop {
+        match h.recv_timeout(WAIT) {
+            Some(StreamEvent::Token { .. }) => continue,
+            Some(ev) => return ev,
+            None => panic!("stream closed without a terminal event"),
+        }
+    }
+}
+
+/// The wire contract under fault injection: one terminal, then silence.
+fn assert_single_terminal(h: &StreamHandle) {
+    assert!(
+        h.recv_timeout(Duration::from_millis(20)).is_none(),
+        "request {}: second event after its terminal",
+        h.id
+    );
+}
+
+fn expect_done(ev: StreamEvent) -> Vec<u32> {
+    match ev {
+        StreamEvent::Done(out) => out.generated,
+        other => panic!("expected Done, got {other:?}"),
+    }
+}
+
+/// Poll `{"stats":true}` until `pred` holds (terminals are sent before
+/// some counters settle, e.g. a respawn finishes after its recovery
+/// terminals went out).
+fn settle(pool: &EnginePool, what: &str, pred: impl Fn(&Json) -> bool) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let s = pool.stats();
+        if pred(&s) {
+            return s;
+        }
+        assert!(t0.elapsed() < WAIT, "stats never settled ({what}): {}", s.to_string());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn replica_states(stats: &Json) -> Vec<String> {
+    stats
+        .get("replicas")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.req_str("state").unwrap().to_string())
+        .collect()
+}
+
+/// The acceptance scenario: a seeded engine panic on replica 0 while a
+/// fleet of requests is in flight. Every client gets exactly one
+/// terminal; completed requests match an unfaulted reference run
+/// byte-for-byte (replayed prefills included); `replica_lost` victims
+/// succeed on retry with the same bytes; reservations drain to zero;
+/// and the pool is back at full replica count ("ready" everywhere,
+/// restart counted) afterwards.
+#[test]
+fn replica_panic_failover_settles_every_client() {
+    let _g = gate();
+    let n_req = if quick() { 4 } else { 8 };
+    let new_tokens = 6;
+    let prompts: Vec<Vec<u32>> = (0..n_req).map(|i| prompt(24, i as u32)).collect();
+
+    // Reference run: same pool shape, registry disarmed. Also pins the
+    // zero-cost contract — a disarmed registry must not perturb
+    // behavior (`faults_injected` stays flat).
+    let injected_before = faults::injected_total();
+    let reference: Vec<Vec<u32>> = {
+        let pool = EnginePool::start(base_cfg(2)).expect("reference pool start");
+        let outs = prompts
+            .iter()
+            .map(|p| expect_done(wait_terminal(&pool.submit(Submission::new(p.clone(), new_tokens)))))
+            .collect();
+        pool.shutdown().expect("reference shutdown");
+        outs
+    };
+    assert_eq!(
+        faults::injected_total(),
+        injected_before,
+        "disarmed registry must inject nothing"
+    );
+
+    // Chaos run: arm through the config plumbing (`scout.faults`), the
+    // same path a chaos deployment would use. Replica 0 panics on its
+    // 3rd engine-loop iteration — mid-prefill or mid-decode depending
+    // on arrival interleaving; the contract must hold either way.
+    let _d = Disarm;
+    let mut cfg = base_cfg(2);
+    cfg.scout.faults = "replica.panic[0]=panic@3".to_string();
+    let pool = EnginePool::start(cfg).expect("chaos pool start");
+    let handles: Vec<StreamHandle> = prompts
+        .iter()
+        .map(|p| pool.submit(Submission::new(p.clone(), new_tokens).streaming()))
+        .collect();
+
+    let mut lost = Vec::new();
+    for (i, h) in handles.iter().enumerate() {
+        match wait_terminal(h) {
+            StreamEvent::Done(out) => {
+                assert_eq!(
+                    out.generated, reference[i],
+                    "request {i}: output diverged from the unfaulted reference \
+                     (prefill replay must be byte-identical)"
+                );
+            }
+            StreamEvent::ReplicaLost { id, retry_after_ms } => {
+                assert_eq!(id, h.id);
+                assert!(retry_after_ms > 0, "replica_lost must carry a retry hint");
+                lost.push(i);
+            }
+            other => panic!("request {i}: expected Done or ReplicaLost, got {other:?}"),
+        }
+        assert_single_terminal(h);
+    }
+
+    // Settlement: reservations at zero, the panic counted, replica 0
+    // respawned and every replica back in rotation.
+    let stats = settle(&pool, "post-panic recovery", |s| {
+        s.req_usize("inflight_tokens").unwrap() == 0
+            && s.req_usize("restarts").unwrap() >= 1
+            && replica_states(s).iter().all(|st| st == "ready")
+    });
+    assert_eq!(stats.req_usize("failed_replicas").unwrap(), 0, "respawn must clear `down`");
+    assert!(
+        faults::injected_total() > injected_before,
+        "the armed panic rule must have fired"
+    );
+
+    // Retryability: every replica_lost victim succeeds on resubmit,
+    // with the reference bytes.
+    for i in lost {
+        let out = expect_done(wait_terminal(
+            &pool.submit(Submission::new(prompts[i].clone(), new_tokens)),
+        ));
+        assert_eq!(out, reference[i], "request {i}: retry after replica_lost diverged");
+    }
+
+    // Full capacity: a fresh fleet completes on the respawned pool.
+    let fresh: Vec<StreamHandle> = (0..n_req)
+        .map(|i| pool.submit(Submission::new(prompt(24, 100 + i as u32), new_tokens)))
+        .collect();
+    for h in &fresh {
+        expect_done(wait_terminal(h));
+    }
+    settle(&pool, "post-retry drain", |s| s.req_usize("inflight_tokens").unwrap() == 0);
+    pool.shutdown().expect("chaos shutdown");
+}
+
+/// Deadlines answer a wedged replica: a stall fault holds the engine
+/// loop 50ms per iteration, so a 40ms deadline expires between
+/// iterations and the sweep emits `DeadlineExceeded` — and an already
+/// expired submission is refused at admission without ever reserving
+/// budget.
+#[test]
+fn deadline_exceeded_terminal_under_stall_and_at_admission() {
+    let _g = gate();
+    let _d = armed("replica.stall[0]=stall@nth:1");
+    let pool = EnginePool::start(base_cfg(1)).expect("pool start");
+
+    let h = pool.submit(Submission::new(prompt(24, 1), 50).with_timeout_ms(40));
+    match wait_terminal(&h) {
+        StreamEvent::DeadlineExceeded { id, elapsed_ms } => {
+            assert_eq!(id, h.id);
+            assert!(elapsed_ms >= 40, "elapsed {elapsed_ms}ms must cover the deadline");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert_single_terminal(&h);
+
+    // Admission gate: a submission whose deadline already passed is
+    // answered synchronously, before any reservation or placement.
+    let expired = Submission {
+        prompt: prompt(8, 2),
+        max_new_tokens: 4,
+        stream: false,
+        session: None,
+        arrival_us: clock::now_us().saturating_sub(10_000_000),
+        timeout_ms: 1,
+    };
+    let h = pool.submit(expired);
+    match wait_terminal(&h) {
+        StreamEvent::DeadlineExceeded { elapsed_ms, .. } => {
+            assert!(elapsed_ms >= 1000, "backdated by 10s, got {elapsed_ms}ms");
+        }
+        other => panic!("expected admission-time DeadlineExceeded, got {other:?}"),
+    }
+
+    let stats = settle(&pool, "deadline settlement", |s| {
+        s.req_usize("inflight_tokens").unwrap() == 0
+    });
+    // Only the engine-sweep path counts per-replica (the admission gate
+    // answers before any replica owns the request).
+    assert!(stats.req_usize("deadline_exceeded").unwrap() >= 1, "the sweep must count");
+    pool.shutdown().expect("shutdown");
+}
+
+/// A dead handoff destination (send fault) yields the retryable
+/// `ReplicaLost` terminal, and the pool keeps serving: the once-shot
+/// rule is spent, so the retry migrates cleanly.
+#[test]
+fn handoff_send_fault_is_retryable_replica_lost() {
+    let _g = gate();
+    let _d = armed("handoff.send=err@1");
+    let mut cfg = base_cfg(2);
+    cfg.server.roles = vec![ReplicaRole::Prefill, ReplicaRole::Decode];
+    let pool = EnginePool::start(cfg).expect("pool start");
+
+    let h = pool.submit(Submission::new(prompt(24, 1), 4));
+    match wait_terminal(&h) {
+        StreamEvent::ReplicaLost { id, retry_after_ms } => {
+            assert_eq!(id, h.id);
+            assert!(retry_after_ms > 0);
+        }
+        other => panic!("expected ReplicaLost, got {other:?}"),
+    }
+    assert_single_terminal(&h);
+
+    let retry = pool.submit(Submission::new(prompt(24, 1), 4));
+    expect_done(wait_terminal(&retry));
+    settle(&pool, "handoff-fault settlement", |s| {
+        s.req_usize("inflight_tokens").unwrap() == 0
+    });
+    pool.shutdown().expect("shutdown");
+}
+
+/// A refused KV import on the decode side terminates the request with
+/// a `Failed` naming the rejection, releases its reservation, and the
+/// next migration goes through.
+#[test]
+fn kv_import_fault_rejects_the_handoff() {
+    let _g = gate();
+    let _d = armed("kv.import=err@1");
+    let mut cfg = base_cfg(2);
+    cfg.server.roles = vec![ReplicaRole::Prefill, ReplicaRole::Decode];
+    let pool = EnginePool::start(cfg).expect("pool start");
+
+    let h = pool.submit(Submission::new(prompt(24, 1), 4));
+    match wait_terminal(&h) {
+        StreamEvent::Failed { id, error } => {
+            assert_eq!(id, h.id);
+            assert!(error.contains("handoff import rejected"), "{error}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    assert_single_terminal(&h);
+
+    let retry = pool.submit(Submission::new(prompt(24, 1), 4));
+    expect_done(wait_terminal(&retry));
+    settle(&pool, "import-fault settlement", |s| {
+        s.req_usize("inflight_tokens").unwrap() == 0
+    });
+    pool.shutdown().expect("shutdown");
+}
+
+/// KV allocation failure at admission degrades gracefully: the client
+/// gets a structured `overloaded` rejection naming the shed (with an
+/// honest backoff hint), not a hard failure — and the pool serves the
+/// retry.
+#[test]
+fn kv_alloc_fault_sheds_load_with_honest_backoff() {
+    let _g = gate();
+    let _d = armed("kv.alloc=err@1");
+    let pool = EnginePool::start(base_cfg(1)).expect("pool start");
+
+    let h = pool.submit(Submission::new(prompt(24, 1), 4));
+    match wait_terminal(&h) {
+        StreamEvent::Rejected(r) => {
+            assert_eq!(r.id, h.id);
+            assert_eq!(r.code, scoutattention::serve::RejectCode::Overloaded);
+            assert!(r.reason.contains("load shed"), "{}", r.reason);
+            assert!(r.retry_after_ms > 0, "shed must carry a retry hint");
+        }
+        other => panic!("expected overloaded rejection, got {other:?}"),
+    }
+    assert_single_terminal(&h);
+
+    let retry = pool.submit(Submission::new(prompt(24, 1), 4));
+    expect_done(wait_terminal(&retry));
+    let stats = settle(&pool, "shed settlement", |s| {
+        s.req_usize("inflight_tokens").unwrap() == 0
+    });
+    assert!(
+        stats.get("rejected_by").unwrap().req_usize("overloaded").unwrap() >= 1,
+        "the shed must count as an overloaded rejection"
+    );
+    pool.shutdown().expect("shutdown");
+}

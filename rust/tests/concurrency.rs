@@ -148,6 +148,12 @@ fn cancel_is_observed_across_handoff() {
             StreamEvent::Failed { id, error } => {
                 panic!("request {id} failed instead of cancelling: {error}")
             }
+            StreamEvent::ReplicaLost { id, .. } => {
+                panic!("request {id} lost its replica with no faults armed")
+            }
+            StreamEvent::DeadlineExceeded { id, .. } => {
+                panic!("request {id} hit a deadline it never set")
+            }
             StreamEvent::Token { .. } => unreachable!(),
         }
         // The stream must be closed after its terminal: a second

@@ -1,4 +1,4 @@
-//! Schedule-exploring model tests for the repo's three core concurrent
+//! Schedule-exploring model tests for the repo's core concurrent
 //! protocols, driven by the in-tree [`sched`] permutation explorer (the
 //! offline stand-in for `loom` — every sequentially-consistent
 //! interleaving of the modeled steps is executed and checked).
@@ -24,6 +24,15 @@
 //!    a held entry, and splitting the probe's lookup from its refcount
 //!    bump — are both caught with their minimal counterexample
 //!    schedules.
+//! 5. **Supervisor crash recovery vs. client cancellation**
+//!    (serve::pool): when the supervisor catches an engine panic and
+//!    re-settles the dead engine's tracks, a client concurrently
+//!    cancelling must still observe exactly one terminal event and
+//!    exactly one budget release on every schedule — decode-stage
+//!    tracks answer `ReplicaLost` immediately, prefill-stage tracks
+//!    replay through the respawned engine with their reservation kept;
+//!    the two seeded recovery bugs (answering a replayed request, and
+//!    releasing a replayed request's reservation) are both caught.
 //!
 //! [`sched`]: scoutattention::util::sched
 
@@ -538,6 +547,168 @@ fn split_probe_racing_eviction_is_caught() {
         "minimal counterexample: publish, stale lookup, sweep frees, clone"
     );
     assert!(v.message.contains("already removed"), "{v}");
+}
+
+// ---------------------------------------------------------------------
+// Protocol 5: supervisor crash recovery vs. client cancellation.
+// ---------------------------------------------------------------------
+
+/// Lifecycle stage the dead engine's track was in when the supervisor
+/// caught the panic (mirrors `serve::pool`'s `TrackStage` at the two
+/// recovery-relevant points).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum CrashStage {
+    /// Prefill in flight (or completed but not yet activated): nothing
+    /// reached the client, the track retains its request spec.
+    Prefilling,
+    /// Tokens may already have streamed; the batch state died with the
+    /// engine's Stack.
+    Decoding,
+}
+
+#[derive(Clone)]
+struct RecoverState {
+    stage: CrashStage,
+    /// The request still has a live track (supervisor or respawned
+    /// engine owns it).
+    tracked: bool,
+    /// Client raised the shared cancel flag.
+    cancel: bool,
+    /// Terminal events emitted (must end at exactly 1).
+    terminals: usize,
+    /// Token-budget releases (must end at exactly 1).
+    releases: usize,
+    /// recover_shared re-queued the request for the respawned engine.
+    requeued: bool,
+}
+
+fn recover_initial(stage: CrashStage) -> RecoverState {
+    RecoverState {
+        stage,
+        tracked: true,
+        cancel: false,
+        terminals: 0,
+        releases: 0,
+        requeued: false,
+    }
+}
+
+fn recover_invariants(ex: &mut Explorer<RecoverState>) {
+    ex.invariant(|s| {
+        if s.terminals > 1 {
+            return Err("client answered twice".into());
+        }
+        if s.releases > 1 {
+            return Err("budget reservation released twice".into());
+        }
+        if !s.tracked && s.terminals != s.releases {
+            return Err(format!(
+                "track gone with terminals {} != releases {}",
+                s.terminals, s.releases
+            ));
+        }
+        Ok(())
+    });
+    ex.final_check(|s| {
+        if s.tracked {
+            return Err("request stranded in recovery".into());
+        }
+        if s.terminals != 1 || s.releases != 1 {
+            return Err(format!(
+                "recovery ended with terminals {} releases {}",
+                s.terminals, s.releases
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The respawned engine's first iteration: eviction sweep, then serve.
+/// The cancel flag traveled with the track, so a cancel raised at ANY
+/// point before this step is observed here (Cancelled), otherwise the
+/// replayed request completes (Done) — either way one terminal, one
+/// release.
+fn respawned_engine_step(s: &mut RecoverState) {
+    if s.requeued && s.tracked {
+        s.terminals += 1;
+        s.releases += 1;
+        s.tracked = false;
+    }
+}
+
+/// Supervisor recovery racing a client cancel yields exactly one
+/// terminal and exactly one budget release on every schedule, for a
+/// track caught in either stage.
+#[test]
+fn crash_recovery_racing_cancel_holds_under_all_schedules() {
+    for stage in [CrashStage::Prefilling, CrashStage::Decoding] {
+        let mut ex: Explorer<RecoverState> = Explorer::new();
+        // Client thread: raise the shared cancel flag (at any point).
+        ex.thread(vec![run(|s: &mut RecoverState| s.cancel = true)]);
+        // Supervisor thread: recover_shared, then the respawned engine.
+        ex.thread(vec![
+            run(|s: &mut RecoverState| match s.stage {
+                // Decode-stage: answer ReplicaLost now and release — the
+                // cancel flag is moot, the track is gone either way.
+                CrashStage::Decoding => {
+                    s.terminals += 1;
+                    s.releases += 1;
+                    s.tracked = false;
+                }
+                // Prefill-stage: replay locally, reservation kept.
+                CrashStage::Prefilling => s.requeued = true,
+            }),
+            run(respawned_engine_step),
+        ]);
+        recover_invariants(&mut ex);
+        let stats = ex.explore(recover_initial(stage)).expect("recovery holds");
+        // 1-step client against the 2-step supervisor: 3 interleavings.
+        assert_eq!(stats.schedules, 3, "{stage:?}");
+    }
+}
+
+/// Seeded bug: recovery answers a prefill-stage track with
+/// `ReplicaLost` *and* re-queues it — the respawned engine answers a
+/// second time. Caught as a double terminal on every schedule.
+#[test]
+fn recovery_answering_a_replayed_request_is_caught() {
+    let mut ex: Explorer<RecoverState> = Explorer::new();
+    ex.thread(vec![run(|s: &mut RecoverState| s.cancel = true)]);
+    ex.thread(vec![
+        run(|s: &mut RecoverState| {
+            s.terminals += 1; // BUG: answered...
+            s.releases += 1;
+            s.requeued = true; // ...and replayed
+        }),
+        run(respawned_engine_step),
+    ]);
+    recover_invariants(&mut ex);
+    let v = ex
+        .explore(recover_initial(CrashStage::Prefilling))
+        .expect_err("double answer must be caught");
+    assert!(v.message.contains("answered twice"), "{v}");
+}
+
+/// Seeded bug: recovery releases the budget reservation of a track it
+/// replays. The respawned engine releases again at the terminal —
+/// caught as a double release (which would corrupt the pool's
+/// token-budget accounting).
+#[test]
+fn recovery_releasing_a_replayed_reservation_is_caught() {
+    let mut ex: Explorer<RecoverState> = Explorer::new();
+    ex.thread(vec![run(|s: &mut RecoverState| s.cancel = true)]);
+    ex.thread(vec![
+        run(|s: &mut RecoverState| {
+            s.releases += 1; // BUG: replayed tracks keep their reservation
+            s.requeued = true;
+        }),
+        run(respawned_engine_step),
+    ]);
+    recover_invariants(&mut ex);
+    let v = ex
+        .explore(recover_initial(CrashStage::Prefilling))
+        .expect_err("double release must be caught");
+    assert!(v.message.contains("released twice"), "{v}");
 }
 
 /// Seeded drop-discipline bug: if the source replica never drops its

@@ -33,7 +33,9 @@ fn wait_terminal(h: &StreamHandle) -> StreamEvent {
             Some(ev @ StreamEvent::Done(_))
             | Some(ev @ StreamEvent::Rejected(_))
             | Some(ev @ StreamEvent::Cancelled { .. })
-            | Some(ev @ StreamEvent::Failed { .. }) => return ev,
+            | Some(ev @ StreamEvent::Failed { .. })
+            | Some(ev @ StreamEvent::ReplicaLost { .. })
+            | Some(ev @ StreamEvent::DeadlineExceeded { .. }) => return ev,
             Some(StreamEvent::Token { .. }) => continue,
             None => panic!("stream closed without a terminal event"),
         }

@@ -413,6 +413,20 @@ def check_unwrap(src, out):
                 )
 
 
+def check_unwind_safety(src, out):
+    for word in ("catch_unwind", "AssertUnwindSafe"):
+        for pos in word_positions(src.masked, word):
+            if src.in_test(pos):
+                continue
+            line = src.line_of(pos)
+            if not src.annotated(line, lambda c: "unwind-safety:" in c):
+                out.append(
+                    (src.path, line, "unwind-safety",
+                     f"`{word}` without an `// unwind-safety:` comment arguing why "
+                     "state observable after the unwind is consistent")
+                )
+
+
 def check_lib_attrs(src, out):
     if src.path.endswith("rust/src/lib.rs") and (
         "#![deny(unsafe_op_in_unsafe_fn)]" not in src.masked
@@ -424,6 +438,7 @@ def check_lib_attrs(src, out):
 def audit_source(src):
     out = []
     check_unsafe(src, out)
+    check_unwind_safety(src, out)
     check_ordering(src, out)
     if in_guarded_dirs(src.path):
         check_lock_across(src, out)
@@ -480,6 +495,10 @@ FIXTURES = [
      "pub fn f(v: Option<u32>) -> u32 {\n    // audit: allow(expect): populated by constructor\n    v.expect(\"set in new()\")\n}\n", []),
     ("cfg_test_mod_exempt", "rust/src/serve/x.rs",
      "pub fn ok() {}\n#[cfg(test)]\nmod tests {\n    use std::sync::atomic::{AtomicUsize, Ordering};\n    fn f(a: &AtomicUsize, v: Option<u32>) -> u32 {\n        a.load(Ordering::SeqCst);\n        unsafe { std::hint::unreachable_unchecked() };\n        v.unwrap()\n    }\n}\n", []),
+    ("bare_catch_unwind_fails", "rust/src/serve/x.rs",
+     "pub fn f(work: fn()) {\n    let _ = std::panic::catch_unwind(work);\n}\n", ["unwind-safety"]),
+    ("annotated_catch_unwind_passes", "rust/src/serve/x.rs",
+     "pub fn f(work: fn()) {\n    // unwind-safety: work owns every value it mutates; nothing observable survives the unwind\n    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(work));\n}\n", []),
     ("string_and_comment_tokens_ignored", "rust/src/serve/x.rs",
      "// this comment mentions unsafe and Ordering::Relaxed\npub fn f() -> &'static str {\n    \"unsafe { Ordering::Relaxed }.unwrap()\"\n}\n", []),
 ]

@@ -1,6 +1,6 @@
 //! The audit rules: repo-wide concurrency/correctness invariants.
 //!
-//! Four rules, all operating on the masked view built by [`crate::scan`]:
+//! Five rules, all operating on the masked view built by [`crate::scan`]:
 //!
 //! 1. **unsafe-safety** — every `unsafe` keyword (block, fn, impl, trait)
 //!    carries a `// SAFETY:` comment on its line or in the contiguous
@@ -27,6 +27,13 @@
 //!    means a sibling thread already panicked, and propagating beats
 //!    limping on with torn state. Escape hatch:
 //!    `// audit: allow(unwrap): reason`.
+//! 5. **unwind-safety** — every `catch_unwind` / `AssertUnwindSafe` site
+//!    carries an `// unwind-safety:` comment (same line or the
+//!    contiguous comment block above) arguing why state observable
+//!    after the unwind is consistent. `AssertUnwindSafe` is a promise
+//!    the compiler cannot check — a supervisor that resumes over
+//!    half-mutated shared state turns one crash into silent corruption,
+//!    so the argument must be written down where it can be reviewed.
 //!
 //! Plus a one-shot workspace check: `rust/src/lib.rs` must carry
 //! `#![deny(unsafe_op_in_unsafe_fn)]` (**deny-attr**).
@@ -72,6 +79,7 @@ fn in_hot_path(path: &str) -> bool {
 pub fn audit_source(src: &Source) -> Vec<Violation> {
     let mut out = Vec::new();
     check_unsafe(src, &mut out);
+    check_unwind_safety(src, &mut out);
     check_ordering(src, &mut out);
     if in_guarded_dirs(&src.path) {
         check_lock_across(src, &mut out);
@@ -137,6 +145,29 @@ fn check_unsafe(src: &Source, out: &mut Vec<Violation>) {
                       comment block above it"
                     .into(),
             });
+        }
+    }
+}
+
+fn check_unwind_safety(src: &Source, out: &mut Vec<Violation>) {
+    for word in ["catch_unwind", "AssertUnwindSafe"] {
+        for pos in word_positions(&src.masked, word) {
+            if src.in_test(pos) {
+                continue;
+            }
+            let line = src.line_of(pos);
+            let ok = src.annotated(line, |c| c.contains("unwind-safety:"));
+            if !ok {
+                out.push(Violation {
+                    path: src.path.clone(),
+                    line,
+                    rule: "unwind-safety",
+                    msg: format!(
+                        "`{word}` without an `// unwind-safety:` comment arguing why \
+                         state observable after the unwind is consistent"
+                    ),
+                });
+            }
         }
     }
 }

@@ -7,14 +7,15 @@
 //! `audit` lints `rust/src` and `xtask/src` for the concurrency
 //! invariants documented in DESIGN.md §Correctness tooling (SAFETY
 //! comments on unsafe, ordering justifications on atomics, no lock
-//! guards across blocking boundaries, no hot-path unwrap/expect).
+//! guards across blocking boundaries, no hot-path unwrap/expect,
+//! unwind-safety arguments on catch_unwind/AssertUnwindSafe sites).
 //! Exit status: 0 clean, 1 violations found, 2 usage/IO error.
 //!
 //! `--self-test` runs the seeded-violation fixtures instead of the real
 //! tree: the audit must fail on a bare unsafe block, an unannotated
-//! Relaxed, a lock held across a send, and a hot-path unwrap. CI runs
-//! the self-test first so a silently-broken linter cannot green-light
-//! the tree.
+//! Relaxed, a lock held across a send, a hot-path unwrap, and a bare
+//! catch_unwind. CI runs the self-test first so a silently-broken
+//! linter cannot green-light the tree.
 #![deny(unsafe_op_in_unsafe_fn)]
 
 mod audit;

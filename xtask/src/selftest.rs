@@ -1,9 +1,9 @@
 //! Seeded-violation fixtures: the audit must *demonstrably fail* on a
 //! bare unsafe block, an unannotated Relaxed, a lock held across a send,
-//! and a hot-path unwrap — and must stay quiet on the annotated/scoped
-//! versions of the same code. `cargo xtask audit --self-test` runs these
-//! (CI does, before trusting the clean run on the real tree), and the
-//! crate's unit tests run the same table.
+//! a hot-path unwrap, and a bare catch_unwind — and must stay quiet on
+//! the annotated/scoped versions of the same code. `cargo xtask audit
+//! --self-test` runs these (CI does, before trusting the clean run on
+//! the real tree), and the crate's unit tests run the same table.
 
 use crate::audit::audit_source;
 use crate::scan::Source;
@@ -149,6 +149,18 @@ const FIXTURES: &[Fixture] = &[
         name: "cfg_test_mod_exempt",
         path: "rust/src/serve/x.rs",
         source: "pub fn ok() {}\n#[cfg(test)]\nmod tests {\n    use std::sync::atomic::{AtomicUsize, Ordering};\n    fn f(a: &AtomicUsize, v: Option<u32>) -> u32 {\n        a.load(Ordering::SeqCst);\n        unsafe { std::hint::unreachable_unchecked() };\n        v.unwrap()\n    }\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "bare_catch_unwind_fails",
+        path: "rust/src/serve/x.rs",
+        source: "pub fn f(work: fn()) {\n    let _ = std::panic::catch_unwind(work);\n}\n",
+        expect: &["unwind-safety"],
+    },
+    Fixture {
+        name: "annotated_catch_unwind_passes",
+        path: "rust/src/serve/x.rs",
+        source: "pub fn f(work: fn()) {\n    // unwind-safety: work owns every value it mutates; nothing observable survives the unwind\n    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(work));\n}\n",
         expect: &[],
     },
     Fixture {
