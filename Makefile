@@ -10,7 +10,7 @@
 PRESETS ?= test-tiny
 ARTIFACTS_DIR := artifacts
 
-.PHONY: all build test chaos bench bench-smoke bench-baseline bench-serve bench-prefill bench-prefix audit clippy fmt artifacts clean
+.PHONY: all build test chaos bench bench-smoke bench-baseline bench-serve bench-prefill bench-prefix bench-tier audit clippy fmt artifacts clean
 
 all: build
 
@@ -66,6 +66,13 @@ bench-prefill: build
 # 90%-hit arm is at most half the 0%-hit TTFT.
 bench-prefix: build
 	cargo bench --bench prefix_reuse
+
+# Session-tier suspend/resume: TTFT of resuming an 8k/32k-token session
+# vs. re-prefilling its full history (bench-32k preset), written to
+# BENCH_tier.json. Full runs assert resume TTFT is strictly below the
+# re-prefill TTFT at every history length.
+bench-tier: build
+	cargo bench --bench tier_resume
 
 # Concurrency-invariant lint: SAFETY comments on every unsafe, ordering
 # justifications on every explicit Ordering, no lock guards held across

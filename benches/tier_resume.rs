@@ -1,0 +1,178 @@
+//! Session-tier suspend/resume: TTFT of resuming a long conversation
+//! vs. re-prefilling its full history.
+//!
+//! The scenario the tier exists for: a multi-turn client returns after
+//! its request finished, holding a history of H tokens. Without the
+//! tier the serving plane re-prefills all H tokens before the first new
+//! token; with it, an exact-match resume rebuilds the sequence from the
+//! suspended KV blocks and decodes immediately. Two history lengths
+//! (8k and 32k on the long-context `bench-32k` preset) each run two
+//! arms against a tier-enabled pool:
+//!
+//! - **resume**: same `session_id`, prompt == stored history — the tier
+//!   restores the blocks (DRAM-resident here; spill-device timings live
+//!   in the tier's own histograms) and the request goes straight to
+//!   decode.
+//! - **reprefill**: identical prompt, no session key — the full-history
+//!   prefill every stateless server pays. The prefix cache is disabled
+//!   so this arm is a true cold prefill.
+//!
+//! TTFT is measured submit → first streamed token. Writes
+//! BENCH_tier.json (rows: history_tokens, both TTFTs, speedup, tier
+//! counters). Full runs assert the acceptance contract: resume TTFT is
+//! strictly below re-prefill TTFT at every length. Under `--quick` /
+//! SCOUT_BENCH_SMOKE the bench shrinks to test-tiny lengths and only
+//! exercises the paths (no assertions — n=1 timings are meaningless).
+
+use std::time::{Duration, Instant};
+
+use scoutattention::config::RunConfig;
+use scoutattention::serve::{EnginePool, StreamEvent, Submission};
+use scoutattention::util::bench::smoke;
+use scoutattention::util::Json;
+
+const WAIT: Duration = Duration::from_secs(900);
+
+fn prompt(len: usize, salt: u32) -> Vec<u32> {
+    (0..len as u32).map(|i| 1 + (i * 13 + salt * 5) % 255).collect()
+}
+
+struct Row {
+    history_tokens: usize,
+    ttft_resume_us: f64,
+    ttft_reprefill_us: f64,
+    resumed: u64,
+    suspended: u64,
+}
+
+/// Submit one streaming request and return its TTFT in microseconds,
+/// draining the stream to completion so phases never overlap.
+fn timed_request(pool: &EnginePool, sub: Submission) -> f64 {
+    let t0 = Instant::now();
+    let h = pool.submit(sub.streaming());
+    let mut ttft = None;
+    loop {
+        match h.recv_timeout(WAIT) {
+            Some(StreamEvent::Token { .. }) => {
+                ttft.get_or_insert_with(|| t0.elapsed().as_secs_f64() * 1e6);
+            }
+            Some(StreamEvent::Done(_)) => {
+                return ttft.expect("request produced no token before Done")
+            }
+            Some(other) => panic!("unexpected event {other:?}"),
+            None => panic!("stream stalled"),
+        }
+    }
+}
+
+fn run_length(preset: &str, history_tokens: usize, dram_blocks: usize) -> Row {
+    let setup_new = 8usize;
+    let new_tokens = 4usize;
+    let mut cfg = RunConfig::for_preset(preset);
+    cfg.server.replicas = 1;
+    cfg.scout.tier_dram_blocks = dram_blocks;
+    cfg.scout.prefix_cache_blocks = 0; // reprefill arm must be cold
+    let pool = EnginePool::start(cfg).expect("pool start");
+
+    // Establish the session: one finished turn whose history lands at
+    // exactly `history_tokens` (prompt + generated).
+    let p = prompt(history_tokens - setup_new, history_tokens as u32);
+    let out = pool
+        .submit(Submission::new(p.clone(), setup_new).with_session_id("bench"))
+        .wait()
+        .expect("setup turn");
+    let mut history = p;
+    history.extend_from_slice(&out.generated);
+    assert_eq!(history.len(), history_tokens);
+
+    // Arm order matters: the keyless re-prefill first (it never touches
+    // the tier), then the resume (which consumes the session).
+    let ttft_reprefill_us =
+        timed_request(&pool, Submission::new(history.clone(), new_tokens));
+    let ttft_resume_us =
+        timed_request(&pool, Submission::new(history, new_tokens).with_session_id("bench"));
+
+    let tier = pool.stats().get("tier").expect("tier stats").clone();
+    let row = Row {
+        history_tokens,
+        ttft_resume_us,
+        ttft_reprefill_us,
+        resumed: tier.req_usize("resumed").unwrap_or(0) as u64,
+        suspended: tier.req_usize("suspended").unwrap_or(0) as u64,
+    };
+    pool.shutdown().expect("shutdown");
+    row
+}
+
+fn main() {
+    let quick = smoke() || std::env::args().any(|a| a == "--quick");
+    println!("tier_resume — session resume vs. full-history re-prefill TTFT");
+    // Full mode: 8k and 32k histories on the long-context preset; quick
+    // mode shrinks to test-tiny just to exercise suspend/resume e2e.
+    let (preset, lengths, dram_blocks) = if quick {
+        ("test-tiny", vec![64usize, 128], 64)
+    } else {
+        ("bench-32k", vec![8192usize, 32768], 4096)
+    };
+
+    let mut rows = Vec::new();
+    for &h in &lengths {
+        let r = run_length(preset, h, dram_blocks);
+        println!(
+            "history {:>6}  resume ttft {:>12.1} us  reprefill ttft {:>12.1} us  \
+             ({:.1}x)  resumed {} suspended {}",
+            r.history_tokens,
+            r.ttft_resume_us,
+            r.ttft_reprefill_us,
+            r.ttft_reprefill_us / r.ttft_resume_us,
+            r.resumed,
+            r.suspended
+        );
+        rows.push(r);
+    }
+
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("history_tokens", Json::num(r.history_tokens as f64)),
+                ("ttft_resume_us", Json::num(r.ttft_resume_us)),
+                ("ttft_reprefill_us", Json::num(r.ttft_reprefill_us)),
+                ("speedup", Json::num(r.ttft_reprefill_us / r.ttft_resume_us)),
+                ("tier_resumed", Json::num(r.resumed as f64)),
+                ("tier_suspended", Json::num(r.suspended as f64)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::str("tier_resume")),
+        ("quick", Json::Bool(quick)),
+        ("preset", Json::str(preset)),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let path = std::env::var("SCOUT_BENCH_TIER_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_tier.json")
+        });
+    std::fs::write(&path, json.to_string()).expect("write bench json");
+    println!("wrote tier resume rows to {}", path.display());
+
+    for r in &rows {
+        assert!(r.resumed >= 1, "the resume arm must actually resume");
+    }
+    if quick {
+        println!("quick/smoke mode: skipping TTFT assertions");
+        return;
+    }
+    for r in &rows {
+        assert!(
+            r.ttft_resume_us < r.ttft_reprefill_us,
+            "resume must beat re-prefill at {} tokens \
+             (resume {:.1}us, reprefill {:.1}us)",
+            r.history_tokens,
+            r.ttft_resume_us,
+            r.ttft_reprefill_us
+        );
+    }
+}

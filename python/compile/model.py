@@ -93,6 +93,13 @@ PRESETS: dict[str, ModelConfig] = {
         n_kv_heads=2, head_dim=32, d_ff=1024, vocab=4096, max_seq=4096,
         block_size=32, k_blocks=64, batch=4,
     ),
+    # Long-context session-tier bench: 8k/32k histories on the test-tiny
+    # core (resume-vs-reprefill TTFT, not model quality).
+    "bench-32k": ModelConfig(
+        name="bench-32k", n_layers=2, d_model=128, n_q_heads=4, n_kv_heads=2,
+        head_dim=32, d_ff=256, vocab=256, max_seq=33024, block_size=32,
+        k_blocks=32, batch=2,
+    ),
 }
 
 

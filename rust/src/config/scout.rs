@@ -86,6 +86,23 @@ pub struct ScoutConfig {
     /// (default) disables prefix reuse entirely — no pool is built and
     /// admission behaves exactly as before.
     pub prefix_cache_blocks: usize,
+    /// DRAM budget of the tiered KV store, in suspended block sets (one
+    /// set = one block across all layers — the spill/page unit). When a
+    /// finished request carries a `session_id`, its KV stays suspended
+    /// under this budget; blocks beyond it demote LRU-session-first to
+    /// an append-only spill file and page back on resume. `0` (default)
+    /// disables the tier entirely — no session registry, no spill file,
+    /// and the serving plane behaves byte-for-byte as before.
+    pub tier_dram_blocks: usize,
+    /// Suspended sessions kept at once (LRU-evicted beyond this).
+    /// Only meaningful with `tier_dram_blocks > 0`.
+    pub tier_sessions: usize,
+    /// Idle milliseconds after which a suspended session expires.
+    /// Only meaningful with `tier_dram_blocks > 0`.
+    pub tier_session_ttl_ms: u64,
+    /// Spill file path for the cold tier. Empty (default) = a
+    /// per-process file under the OS temp directory, deleted on drop.
+    pub tier_spill_path: String,
     /// Deterministic fault-injection spec armed when the EnginePool
     /// starts (see `util::faults` for the grammar, e.g.
     /// `replica.panic=once@2,handoff.send=err@nth:3`). Empty (default)
@@ -108,6 +125,10 @@ impl Default for ScoutConfig {
             threads_per_group: 1,
             prefill_chunk: crate::coordinator::DEFAULT_PREFILL_CHUNK,
             prefix_cache_blocks: 0,
+            tier_dram_blocks: 0,
+            tier_sessions: 64,
+            tier_session_ttl_ms: 600_000,
+            tier_spill_path: String::new(),
             faults: String::new(),
         }
     }
@@ -146,6 +167,19 @@ impl ScoutConfig {
         if let Some(v) = j.get("prefix_cache_blocks") {
             c.prefix_cache_blocks = v.as_usize().unwrap_or(c.prefix_cache_blocks);
         }
+        if let Some(v) = j.get("tier_dram_blocks") {
+            c.tier_dram_blocks = v.as_usize().unwrap_or(c.tier_dram_blocks);
+        }
+        if let Some(v) = j.get("tier_sessions") {
+            c.tier_sessions = v.as_usize().unwrap_or(c.tier_sessions);
+        }
+        if let Some(v) = j.get("tier_session_ttl_ms") {
+            c.tier_session_ttl_ms = v.as_usize().map(|n| n as u64).unwrap_or(c.tier_session_ttl_ms);
+        }
+        if let Some(v) = j.get("tier_spill_path") {
+            c.tier_spill_path =
+                v.as_str().map(str::to_string).unwrap_or_else(|| c.tier_spill_path.clone());
+        }
         if let Some(v) = j.get("faults") {
             c.faults = v.as_str().map(str::to_string).unwrap_or_else(|| c.faults.clone());
         }
@@ -173,6 +207,10 @@ impl ScoutConfig {
             ("threads_per_group", Json::num(self.threads_per_group as f64)),
             ("prefill_chunk", Json::num(self.prefill_chunk as f64)),
             ("prefix_cache_blocks", Json::num(self.prefix_cache_blocks as f64)),
+            ("tier_dram_blocks", Json::num(self.tier_dram_blocks as f64)),
+            ("tier_sessions", Json::num(self.tier_sessions as f64)),
+            ("tier_session_ttl_ms", Json::num(self.tier_session_ttl_ms as f64)),
+            ("tier_spill_path", Json::str(self.tier_spill_path.clone())),
             ("faults", Json::str(self.faults.clone())),
         ])
     }
@@ -227,6 +265,32 @@ mod tests {
         assert_eq!(c.prefix_cache_blocks, 256);
         let back = ScoutConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.prefix_cache_blocks, 256);
+    }
+
+    #[test]
+    fn tier_knobs_default_off_and_roundtrip() {
+        let d = ScoutConfig::default();
+        assert_eq!(d.tier_dram_blocks, 0, "tiering is opt-in");
+        assert_eq!(d.tier_sessions, 64);
+        assert_eq!(d.tier_session_ttl_ms, 600_000);
+        assert!(d.tier_spill_path.is_empty(), "default: per-process temp file");
+        let c = ScoutConfig::from_json(
+            &Json::parse(
+                "{\"tier_dram_blocks\":128,\"tier_sessions\":8,\
+                 \"tier_session_ttl_ms\":1000,\"tier_spill_path\":\"/tmp/x.spill\"}",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.tier_dram_blocks, 128);
+        assert_eq!(c.tier_sessions, 8);
+        assert_eq!(c.tier_session_ttl_ms, 1000);
+        assert_eq!(c.tier_spill_path, "/tmp/x.spill");
+        let back = ScoutConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.tier_dram_blocks, 128);
+        assert_eq!(back.tier_sessions, 8);
+        assert_eq!(back.tier_session_ttl_ms, 1000);
+        assert_eq!(back.tier_spill_path, "/tmp/x.spill");
     }
 
     #[test]

@@ -17,6 +17,16 @@ impl RunConfig {
             anyhow::ensure!(interval >= 1, "recall interval >= 1");
         }
         anyhow::ensure!(self.scout.prefill_chunk >= 1, "prefill_chunk >= 1");
+        if self.scout.tier_dram_blocks > 0 {
+            anyhow::ensure!(
+                self.scout.tier_sessions >= 1,
+                "tier_sessions >= 1 when the KV tier is enabled"
+            );
+            anyhow::ensure!(
+                self.scout.tier_session_ttl_ms >= 1,
+                "tier_session_ttl_ms >= 1 when the KV tier is enabled"
+            );
+        }
         anyhow::ensure!(self.server.max_batch >= 1, "max_batch >= 1");
         anyhow::ensure!(self.server.replicas >= 1, "replicas >= 1");
         anyhow::ensure!(self.server.queue_depth >= 1, "queue_depth >= 1");
@@ -107,6 +117,28 @@ mod tests {
         c.scout.faults = "not-a-rule".into();
         let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("scout.faults"), "{err}");
+    }
+
+    #[test]
+    fn enabled_tier_needs_sane_session_knobs() {
+        // disabled tier: the session knobs are dormant, anything goes
+        let mut c = RunConfig::for_preset("x");
+        c.scout.tier_sessions = 0;
+        c.scout.tier_session_ttl_ms = 0;
+        c.validate().unwrap();
+        // enabled tier: zero sessions or a zero TTL is a config bug
+        let mut c = RunConfig::for_preset("x");
+        c.scout.tier_dram_blocks = 16;
+        c.scout.tier_sessions = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::for_preset("x");
+        c.scout.tier_dram_blocks = 16;
+        c.scout.tier_session_ttl_ms = 0;
+        assert!(c.validate().is_err());
+        // enabled with the defaults for the rest validates
+        let mut c = RunConfig::for_preset("x");
+        c.scout.tier_dram_blocks = 16;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -3,7 +3,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::kvcache::{KvSeqExport, ResidentSet, ShardedKvCache};
+use crate::kvcache::{KvBlock, KvSeqExport, ResidentSet, ShardedKvCache, SuspendMeta};
 use crate::model::ModelSpec;
 
 use super::request::{RequestOutput, RequestSpec};
@@ -124,6 +124,78 @@ impl SeqState {
             max_new_tokens: h.max_new_tokens,
             t_start: std::time::Instant::now(),
         })
+    }
+
+    /// Rebuild a live sequence from a tier resume: `blocks[b]` holds all
+    /// layers of block `b` (the shape [`SessionTier::resume`] returns),
+    /// covering `rows` restored cache rows — including a partial tail on
+    /// an exact-match resume. For an exact match `meta` carries the
+    /// suspended scheduler state so decode continues byte-identically;
+    /// a partial (prefill) resume starts with fresh scheduler state and
+    /// the remaining rows are prefilled by the caller.
+    ///
+    /// Like [`Self::from_handoff`], every block is geometry-checked
+    /// before the store adopts it — a damaged spill record surfaces as a
+    /// structured error here, never a panic inside `import_shared_block`.
+    ///
+    /// [`SessionTier::resume`]: crate::kvcache::SessionTier::resume
+    pub fn from_resume(
+        spec: &ModelSpec,
+        req: &RequestSpec,
+        budget_blocks: usize,
+        blocks: &[Vec<Arc<KvBlock>>],
+        rows: usize,
+        meta: Option<SuspendMeta>,
+    ) -> crate::Result<Self> {
+        let bs = spec.block_size;
+        let w = spec.n_kv_heads * spec.head_dim;
+        anyhow::ensure!(rows >= 1, "tier resume: no rows to restore");
+        anyhow::ensure!(
+            rows <= spec.max_seq,
+            "tier resume: {rows} rows exceed max_seq {}",
+            spec.max_seq
+        );
+        let used = rows.div_ceil(bs);
+        anyhow::ensure!(
+            blocks.len() == used,
+            "tier resume: {} block sets for {rows} rows, expected {used}",
+            blocks.len()
+        );
+        for (b, layers) in blocks.iter().enumerate() {
+            anyhow::ensure!(
+                layers.len() == spec.n_layers,
+                "tier resume: block {b} has {} layers, expected {}",
+                layers.len(),
+                spec.n_layers
+            );
+            for (l, blk) in layers.iter().enumerate() {
+                blk.check_geometry(bs, w)
+                    .map_err(|e| anyhow::anyhow!("tier resume: block {b} layer {l}: {e:#}"))?;
+            }
+        }
+        let mut seq = Self::new(spec, req, budget_blocks);
+        for (b, layers) in blocks.iter().enumerate() {
+            seq.cache.import_shared_block(b, layers);
+        }
+        // Publishes the restored length; full-block digests are copied
+        // from the sealed per-block values (the blocks are shared with
+        // the caller's vec right now, so the rebuild never recomputes).
+        seq.cache.finish_prefill(rows);
+        if let Some(meta) = meta {
+            anyhow::ensure!(
+                meta.resident.len() == spec.n_layers
+                    && meta.selected.len() == spec.n_layers
+                    && meta.scores.len() == spec.n_layers
+                    && meta.recall_in.len() == spec.n_layers,
+                "tier resume: suspended scheduler state has the wrong layer count"
+            );
+            seq.resident = meta.resident;
+            seq.selected = meta.selected;
+            seq.scores = meta.scores;
+            seq.recall_in = meta.recall_in;
+            seq.last_tok = meta.last_tok;
+        }
+        Ok(seq)
     }
 }
 

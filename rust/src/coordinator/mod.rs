@@ -62,6 +62,34 @@ pub trait DecodeScheduler {
     /// Advance the prefill by at most one chunk; `true` once complete.
     fn prefill_step(&mut self, st: &mut PrefillState) -> crate::Result<bool>;
 
+    /// Start a resumable prefill over a tier-restored KV prefix: the
+    /// first `rows` cache rows already hold KV (restored from a
+    /// suspended session) and the prefill continues from there,
+    /// embedding `row_inputs[t]` at row `t`. Default: unsupported —
+    /// only schedulers that opt in via
+    /// [`supports_resumed_prefill`](Self::supports_resumed_prefill)
+    /// can continue a partial prefix. Exact-match decode resumes
+    /// bypass the prefill plane and work with every scheduler.
+    fn begin_resumed_prefill(
+        &self,
+        req: &RequestSpec,
+        budget_blocks: usize,
+        rows: usize,
+        row_inputs: Vec<u32>,
+        blocks: &[Vec<std::sync::Arc<crate::kvcache::KvBlock>>],
+    ) -> crate::Result<PrefillState> {
+        let _ = (req, budget_blocks, rows, row_inputs, blocks);
+        anyhow::bail!("{} does not support resumed prefill", self.name())
+    }
+
+    /// Whether [`begin_resumed_prefill`](Self::begin_resumed_prefill)
+    /// is implemented. The serve plane gates partial session resumes on
+    /// this (and on a tile-flexible backend); exact resumes need no
+    /// scheduler support.
+    fn supports_resumed_prefill(&self) -> bool {
+        false
+    }
+
     /// Attach a cross-request prefix pool to this scheduler's admission
     /// path: later `begin_prefill`s probe it before computing each
     /// block-aligned chunk and publish the blocks they compute. Default

@@ -28,7 +28,7 @@ use std::sync::Arc;
 
 use crate::engines::gpu::BatchPartial;
 use crate::engines::{GpuEngine, NativeEngine};
-use crate::kvcache::{chain_hash, PrefixPool, CHAIN_SEED};
+use crate::kvcache::{chain_hash, KvBlock, PrefixPool, CHAIN_SEED};
 use crate::model::ModelSpec;
 use crate::sparse::{score_blocks_slabs, select_topk};
 use crate::tensor::Tensor;
@@ -107,12 +107,68 @@ impl PrefillState {
         })
     }
 
+    /// Start a prefill that *resumes* a suspended tier session: `rows`
+    /// cache rows are already restored into the sequence's store from
+    /// `blocks` (the [`SessionTier::resume`] shape), and `row_inputs[t]`
+    /// is the token to embed at each remaining row `t` — the wire prompt
+    /// after a divergence rewind, or its one-token-shifted form when the
+    /// prompt extends past decode rows (see `kvcache::tier`). The prefix
+    /// pool stays detached by construction: shifted row inputs are not
+    /// the token prefix, so chain hashes over them would publish
+    /// poisoned pool entries ([`Self::attach_pool`] also refuses).
+    ///
+    /// [`SessionTier::resume`]: crate::kvcache::SessionTier::resume
+    pub fn begin_resumed(
+        spec: &ModelSpec,
+        req: &RequestSpec,
+        budget_blocks: usize,
+        chunk_tokens: usize,
+        rows: usize,
+        row_inputs: Vec<u32>,
+        blocks: &[Vec<Arc<KvBlock>>],
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt (request {})", req.id);
+        anyhow::ensure!(
+            row_inputs.len() == req.prompt.len(),
+            "tier resume: {} row inputs for a {}-token prompt (request {})",
+            row_inputs.len(),
+            req.prompt.len(),
+            req.id
+        );
+        let total = req.prompt.len().min(spec.max_seq - 1);
+        anyhow::ensure!(
+            rows < total,
+            "tier resume: {rows} restored rows leave nothing to prefill \
+             (total {total}, request {})",
+            req.id
+        );
+        let seq = SeqState::from_resume(spec, req, budget_blocks, blocks, rows, None)?;
+        Ok(Self {
+            seq,
+            prompt: row_inputs,
+            total,
+            done: rows,
+            chunk_tokens: chunk_tokens.max(1),
+            h_last: Vec::new(),
+            scratch: Arena::new(),
+            pool: None,
+            chain: CHAIN_SEED,
+            hashed_upto: rows,
+            probe_missed: true,
+        })
+    }
+
     /// Attach a cross-request prefix pool: subsequent `advance` calls
     /// probe it before computing each block-aligned chunk (hit →
     /// import, skip the compute) and publish every block they do
-    /// compute. Must be called before the first `advance`.
+    /// compute. Must be called before the first `advance`; on a resumed
+    /// prefill (`done > 0` from restored rows) this is a refused no-op —
+    /// resumed row inputs are not the token prefix, so hashing them
+    /// would poison the pool.
     pub fn attach_pool(&mut self, pool: Arc<PrefixPool>) {
-        debug_assert_eq!(self.done, 0, "attach_pool after prefill started");
+        if self.done > 0 {
+            return;
+        }
         self.pool = Some(pool);
     }
 
@@ -151,7 +207,16 @@ impl PrefillState {
             // artifact (the seed's admission path, unchanged). The
             // prefix pool is a chunked-path feature — the fused artifact
             // computes the whole prompt in one call, so there is no
-            // per-block seam to import at.
+            // per-block seam to import at. A *resumed* prefill can never
+            // take this path (the fused artifact would recompute every
+            // row from the shifted row inputs, clobbering restored KV):
+            // the tier gates partial resumes on `tile_flexible`, so this
+            // is a safety net, not a reachable path.
+            anyhow::ensure!(
+                self.done == 0,
+                "resumed prefill requires a tile-flexible backend (request {})",
+                self.seq.id
+            );
             return self.advance_fused(gpu);
         }
         self.import_cached_prefix();

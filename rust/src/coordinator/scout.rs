@@ -356,6 +356,31 @@ impl DecodeScheduler for ScoutScheduler {
         self.prefix_pool = Some(pool);
     }
 
+    fn begin_resumed_prefill(
+        &self,
+        req: &super::request::RequestSpec,
+        budget_blocks: usize,
+        rows: usize,
+        row_inputs: Vec<u32>,
+        blocks: &[Vec<Arc<crate::kvcache::KvBlock>>],
+    ) -> crate::Result<super::PrefillState> {
+        // No prefix-pool attach on purpose: chain hashes over shifted
+        // row inputs would poison the pool (see `PrefillState::attach_pool`).
+        super::PrefillState::begin_resumed(
+            &self.gpu.spec,
+            req,
+            budget_blocks,
+            self.cfg.prefill_chunk,
+            rows,
+            row_inputs,
+            blocks,
+        )
+    }
+
+    fn supports_resumed_prefill(&self) -> bool {
+        true
+    }
+
     fn prefill_step(&mut self, st: &mut super::PrefillState) -> crate::Result<bool> {
         st.advance(&self.gpu)
     }

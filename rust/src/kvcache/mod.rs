@@ -9,18 +9,24 @@
 //! the system the coordinator and the timing plane care about — while
 //! [`SeqKvCache`] provides the storage, digest maintenance, and the
 //! gather operation that materializes resident blocks for the GPU engine.
+//!
+//! Below the DRAM pool sits a cold tier ([`tier`]): suspended sessions'
+//! blocks spill to an append-only file under a DRAM budget and page
+//! back in on resume (see [`SessionTier`] / [`SpillFile`]).
 
 mod digest;
 mod prefix;
 mod resident;
 mod seq;
 mod store;
+mod tier;
 
 pub use digest::DigestStore;
 pub use prefix::{chain_hash, first_chunk_key, PrefixPool, PrefixPoolStats, CHAIN_SEED};
 pub use resident::ResidentSet;
 pub use seq::{LayerSlabs, SeqKvCache};
 pub use store::{KvBlock, KvSeqExport, LayerView, ShardedKvCache};
+pub use tier::{Resume, SessionTier, SpillFile, SuspendMeta, TierConfig, TierStats};
 
 /// Index of a KV block within one sequence's cache (position-major:
 /// block `b` covers tokens `[b*bs, (b+1)*bs)`).

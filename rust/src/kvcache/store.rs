@@ -90,6 +90,29 @@ impl KvBlock {
     pub fn digest(&self) -> (&[f32], &[f32]) {
         (&self.kmin, &self.kmax)
     }
+
+    /// Structural check of one block against the store geometry: K/V
+    /// slabs must be `bs*w` floats and the sealed digest `w` floats.
+    /// Shared by every path that adopts foreign blocks — replica
+    /// handoff ([`KvSeqExport::validate`]), spill-file page-in, and
+    /// session resume — so damaged payloads surface as structured
+    /// errors, never as a panic inside a shard lock.
+    pub(crate) fn check_geometry(&self, bs: usize, w: usize) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.k.len() == bs * w && self.v.len() == bs * w,
+            "K/V is {}x{} floats, expected {}",
+            self.k.len(),
+            self.v.len(),
+            bs * w
+        );
+        anyhow::ensure!(
+            self.kmin.len() == w && self.kmax.len() == w,
+            "digest is {}x{} floats, expected {w}",
+            self.kmin.len(),
+            self.kmax.len()
+        );
+        Ok(())
+    }
 }
 
 /// One shard's storage: the blocks and dense digest slabs of the layers
@@ -513,7 +536,7 @@ impl KvSeqExport {
     /// dense digest-slab shapes must all agree before the blocks are
     /// re-sharded into a live store. Wire- or replica-boundary damage
     /// surfaces here as a structured error, not a panic under a lock.
-    fn validate(&self) -> crate::Result<()> {
+    pub(crate) fn validate(&self) -> crate::Result<()> {
         let spec = &self.spec;
         let (nb, bs) = (spec.n_blocks(), spec.block_size);
         let w = spec.n_kv_heads * spec.head_dim;
@@ -537,19 +560,8 @@ impl KvSeqExport {
                 lx.blocks.len()
             );
             for (b, blk) in lx.blocks.iter().enumerate() {
-                anyhow::ensure!(
-                    blk.k.len() == bs * w && blk.v.len() == bs * w,
-                    "KV import: layer {layer} block {b} K/V is {}x{} floats, expected {}",
-                    blk.k.len(),
-                    blk.v.len(),
-                    bs * w
-                );
-                anyhow::ensure!(
-                    blk.kmin.len() == w && blk.kmax.len() == w,
-                    "KV import: layer {layer} block {b} digest is {}x{} floats, expected {w}",
-                    blk.kmin.len(),
-                    blk.kmax.len()
-                );
+                blk.check_geometry(bs, w)
+                    .map_err(|e| anyhow::anyhow!("KV import: layer {layer} block {b}: {e:#}"))?;
             }
             anyhow::ensure!(
                 lx.kmin.shape() == [nb, w] && lx.kmax.shape() == [nb, w],
@@ -559,6 +571,24 @@ impl KvSeqExport {
             );
         }
         Ok(())
+    }
+
+    /// Regroup the export from per-layer block vectors into per-block
+    /// layer sets — `sets[b][l]` is block `b` of layer `l`, the shape
+    /// [`ShardedKvCache::import_shared_block`] re-admits and the spill
+    /// record unit of the cold tier. Pure `Arc` moves, no slab copies.
+    /// The caller is responsible for [`Self::validate`] first.
+    pub(crate) fn into_block_sets(self) -> (ModelSpec, usize, Vec<Vec<Arc<KvBlock>>>) {
+        let KvSeqExport { spec, len, layers, .. } = self;
+        let nb = spec.n_blocks();
+        let mut sets: Vec<Vec<Arc<KvBlock>>> =
+            (0..nb).map(|_| Vec::with_capacity(spec.n_layers)).collect();
+        for lx in layers {
+            for (b, blk) in lx.blocks.into_iter().enumerate() {
+                sets[b].push(blk);
+            }
+        }
+        (spec, len, sets)
     }
 
     /// Bytes a real cross-device handoff would move: the valid K/V rows

@@ -1,0 +1,1302 @@
+//! Tiered KV store: a cold tier below the sharded block store, plus the
+//! session registry that drives it.
+//!
+//! The DRAM pool holds exactly the sequences that are *decoding*; this
+//! module adds a layer underneath for sequences that are merely *known*
+//! — finished requests whose client will likely return (multi-turn
+//! conversations). A [`SessionTier`] keeps each suspended session's KV
+//! blocks resident up to a configurable block budget
+//! (`scout.tier_dram_blocks`) and demotes the least-recently-used
+//! sessions' blocks to an append-only [`SpillFile`] beyond it; a
+//! follow-up request with the same `session_id` pages the blocks back
+//! through `import_shared_block` instead of re-prefilling. With the
+//! budget at 0 (the default) no tier exists and the serving plane
+//! behaves byte-for-byte as before.
+//!
+//! **Spill unit.** One record = one *block set*: the `Arc<KvBlock>` of
+//! every layer for a single block index — exactly the shape
+//! [`ShardedKvCache::import_shared_block`] re-admits, and the same unit
+//! the prefix pool shares. Records are page-aligned (4 KiB), carry a
+//! fixed header (magic, version, geometry, payload length) and an
+//! FNV-1a checksum over the payload, and are validated structurally on
+//! the way back in — a truncated or corrupt record surfaces as a
+//! structured error, never a panic (the same [`KvBlock::check_geometry`]
+//! contract the handoff importer uses). Freed records go on a free list
+//! and are reused by later spills; when dead bytes exceed half the file
+//! the live records are rewritten to a fresh file (compaction).
+//!
+//! **Resume semantics.** Decode rows are not token-pure: the engine
+//! embeds the *previous* token at each new position (the KV of the
+//! newest generated token is never in the cache), so a resumed session
+//! must restore the actual suspended rows rather than re-derive them
+//! from tokens. Three cases, decided against the stored token history
+//! (`prompt ++ generated` at suspend):
+//!
+//! - **Exact** (`prompt == stored`): every block (including the partial
+//!   tail) is restored and the request goes straight to decode with the
+//!   suspended scheduler state ([`SuspendMeta`]) — byte-identical to
+//!   one continuous session.
+//! - **Extension** (`prompt` strictly extends `stored`): all rows are
+//!   restored and the suffix is prefilled with a one-token-shifted
+//!   input stream (`row_inputs[t] = prompt[t-1]`), reproducing what a
+//!   continuous session would have computed had the extra tokens been
+//!   force-decoded. The prefix pool stays detached — shifted rows must
+//!   never be published under token-chain hashes.
+//! - **Divergence**: only *full* blocks inside the token-pure prompt
+//!   region (`pure_rows`) that still match the new prompt are restored
+//!   (rewind); the rest is re-prefilled unshifted. Restored rows are
+//!   byte-identical to what the fresh prefill would recompute, so
+//!   generation matches a cold run exactly. Below one full block the
+//!   session is dropped and the request prefills from scratch.
+//!
+//! **Locking.** `SessionTier` never holds its registry lock across file
+//! I/O: demotions are planned under the lock, executed against the
+//! spill file with no guard in scope, and committed under a fresh lock
+//! (a session resumed in between simply frees the orphaned record).
+//! Failure to spill shreds the *session*, not the request — an honest
+//! shed of cached state, counted in `shed`. Fault points `tier.spill`,
+//! `tier.enospc` (both in [`SpillFile::spill`]) and `tier.page_in`
+//! ([`SpillFile::page_in`]) make those paths chaos-testable.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::Histogram;
+use crate::model::ModelSpec;
+
+use super::resident::ResidentSet;
+use super::store::{KvBlock, KvSeqExport};
+
+/// Identifier of one live spill-file record.
+pub type SpillId = u64;
+
+/// Record header: magic ("SKVT"), version, geometry, payload length,
+/// payload checksum. 40 bytes, followed by the payload, padded to the
+/// 4 KiB page grid.
+const MAGIC: u32 = u32::from_le_bytes(*b"SKVT");
+const VERSION: u16 = 1;
+const HEADER_BYTES: usize = 40;
+const PAGE: u64 = 4096;
+/// Compact when dead bytes exceed this fraction of the file…
+const COMPACT_DEAD_RATIO: f64 = 0.5;
+/// …and at least this many records are dead (tiny files never churn).
+const COMPACT_MIN_DEAD: usize = 4;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_f32s(bytes: &[u8], n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(&bytes[i * 4..i * 4 + 4]);
+            f32::from_le_bytes(b)
+        })
+        .collect()
+}
+
+fn io_err(what: &str, path: &Path, e: std::io::Error) -> anyhow::Error {
+    anyhow::anyhow!("spill file {}: {what}: {e}", path.display())
+}
+
+struct SpillInner {
+    file: File,
+    /// Live records: spill id -> byte offset.
+    slots: HashMap<SpillId, u64>,
+    /// Offsets of dead records, reusable by the next spill.
+    free: Vec<u64>,
+    /// Append frontier in bytes.
+    end: u64,
+    next_id: u64,
+}
+
+/// Append-only spill file of fixed-geometry block records.
+///
+/// Geometry (`n_layers`, block size, token width) is fixed at creation:
+/// every record has the same size, so the free list is a plain offset
+/// pool and compaction is a sequential rewrite. All methods take
+/// `&self` (the file handle and slot table live behind one internal
+/// mutex), so call sites never have a guard of their own in scope
+/// across the blocking I/O — the audit's lock-across-blocking rule
+/// counts `.spill(`/`.page_in(` as blocking calls.
+///
+/// Durability is out of scope: the file is a cache, deleted on drop; a
+/// crash loses suspended sessions, never correctness.
+pub struct SpillFile {
+    path: PathBuf,
+    n_layers: usize,
+    bs: usize,
+    w: usize,
+    record_size: u64,
+    payload_len: usize,
+    inner: Mutex<SpillInner>,
+    compactions: AtomicU64,
+}
+
+impl SpillFile {
+    /// Create (truncate) the spill file for one model geometry.
+    pub fn create(path: PathBuf, spec: &ModelSpec) -> crate::Result<Self> {
+        let (n_layers, bs) = (spec.n_layers, spec.block_size);
+        let w = spec.n_kv_heads * spec.head_dim;
+        anyhow::ensure!(n_layers >= 1 && bs >= 1 && w >= 1, "spill file: degenerate geometry");
+        let payload_len = n_layers * (2 * bs * w + 2 * w) * 4;
+        let record_size = (HEADER_BYTES + payload_len) as u64;
+        let record_size = record_size.div_ceil(PAGE) * PAGE;
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| io_err("create", &path, e))?;
+        Ok(Self {
+            path,
+            n_layers,
+            bs,
+            w,
+            record_size,
+            payload_len,
+            inner: Mutex::new(SpillInner {
+                file,
+                slots: HashMap::new(),
+                free: Vec::new(),
+                end: 0,
+                next_id: 0,
+            }),
+            compactions: AtomicU64::new(0),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Bytes one record occupies on disk (page-aligned).
+    pub fn record_bytes(&self) -> u64 {
+        self.record_size
+    }
+
+    pub fn live_records(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).slots.len()
+    }
+
+    /// Current file extent in bytes (live + dead records).
+    pub fn file_bytes(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).end
+    }
+
+    pub fn compactions(&self) -> u64 {
+        // ordering: monotone statistics counter.
+        self.compactions.load(Ordering::Relaxed)
+    }
+
+    /// Write one block set (all layers of one block) as a record.
+    /// Blocking file I/O — never call with a lock guard in scope.
+    pub fn spill(&self, layers: &[Arc<KvBlock>]) -> crate::Result<SpillId> {
+        crate::util::faults::fail_point("tier.spill", None)?;
+        if crate::util::faults::should_fire("tier.enospc", None) {
+            anyhow::bail!("tier.enospc: no space left on spill device (injected)");
+        }
+        anyhow::ensure!(
+            layers.len() == self.n_layers,
+            "spill: block set has {} layers, expected {}",
+            layers.len(),
+            self.n_layers
+        );
+        for (l, blk) in layers.iter().enumerate() {
+            blk.check_geometry(self.bs, self.w)
+                .map_err(|e| anyhow::anyhow!("spill: layer {l}: {e:#}"))?;
+        }
+        let mut buf = Vec::with_capacity(HEADER_BYTES + self.payload_len);
+        buf.resize(HEADER_BYTES, 0);
+        for blk in layers {
+            let (kmin, kmax) = blk.digest();
+            put_f32s(&mut buf, blk.k());
+            put_f32s(&mut buf, blk.v());
+            put_f32s(&mut buf, kmin);
+            put_f32s(&mut buf, kmax);
+        }
+        debug_assert_eq!(buf.len(), HEADER_BYTES + self.payload_len);
+        let checksum = fnv1a(&buf[HEADER_BYTES..]);
+        let header = &mut buf[..HEADER_BYTES];
+        header[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+        header[4..6].copy_from_slice(&VERSION.to_le_bytes());
+        header[6..8].copy_from_slice(&0u16.to_le_bytes()); // flags
+        header[8..12].copy_from_slice(&(self.n_layers as u32).to_le_bytes());
+        header[12..16].copy_from_slice(&(self.bs as u32).to_le_bytes());
+        header[16..20].copy_from_slice(&(self.w as u32).to_le_bytes());
+        header[20..24].copy_from_slice(&0u32.to_le_bytes()); // pad
+        header[24..32].copy_from_slice(&(self.payload_len as u64).to_le_bytes());
+        header[32..40].copy_from_slice(&checksum.to_le_bytes());
+
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let off = match inner.free.pop() {
+            Some(off) => off,
+            None => {
+                let off = inner.end;
+                inner.end += self.record_size;
+                off
+            }
+        };
+        let write = inner
+            .file
+            .seek(SeekFrom::Start(off))
+            .and_then(|_| inner.file.write_all(&buf));
+        if let Err(e) = write {
+            // The slot holds garbage now; keep it reusable, not live.
+            inner.free.push(off);
+            return Err(io_err("write record", &self.path, e));
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.slots.insert(id, off);
+        Ok(id)
+    }
+
+    /// Read one record back as fresh `Arc<KvBlock>`s. Every structural
+    /// property (header, geometry, checksum) is validated before a
+    /// block is built — wire damage returns a structured error.
+    /// Blocking file I/O — never call with a lock guard in scope.
+    pub fn page_in(&self, id: SpillId) -> crate::Result<Vec<Arc<KvBlock>>> {
+        crate::util::faults::fail_point("tier.page_in", None)?;
+        let mut buf = vec![0u8; HEADER_BYTES + self.payload_len];
+        {
+            let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            let off = *inner
+                .slots
+                .get(&id)
+                .ok_or_else(|| anyhow::anyhow!("page-in: unknown spill record {id}"))?;
+            inner
+                .file
+                .seek(SeekFrom::Start(off))
+                .and_then(|_| inner.file.read_exact(&mut buf))
+                .map_err(|e| io_err("read record", &self.path, e))?;
+        }
+        let h = &buf[..HEADER_BYTES];
+        let u32_at = |i: usize| {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(&h[i..i + 4]);
+            u32::from_le_bytes(b)
+        };
+        let u64_at = |i: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&h[i..i + 8]);
+            u64::from_le_bytes(b)
+        };
+        anyhow::ensure!(
+            u32_at(0) == MAGIC,
+            "page-in: record {id}: bad magic {:#010x}",
+            u32_at(0)
+        );
+        let ver = u16::from_le_bytes([h[4], h[5]]);
+        anyhow::ensure!(ver == VERSION, "page-in: record {id}: version {ver}, expected {VERSION}");
+        anyhow::ensure!(
+            (u32_at(8) as usize, u32_at(12) as usize, u32_at(16) as usize)
+                == (self.n_layers, self.bs, self.w),
+            "page-in: record {id}: geometry {}x{}x{}, file is {}x{}x{}",
+            u32_at(8),
+            u32_at(12),
+            u32_at(16),
+            self.n_layers,
+            self.bs,
+            self.w
+        );
+        anyhow::ensure!(
+            u64_at(24) as usize == self.payload_len,
+            "page-in: record {id}: payload {} bytes, expected {}",
+            u64_at(24),
+            self.payload_len
+        );
+        let payload = &buf[HEADER_BYTES..];
+        anyhow::ensure!(
+            fnv1a(payload) == u64_at(32),
+            "page-in: record {id}: checksum mismatch (corrupt spill record)"
+        );
+        let (bs, w) = (self.bs, self.w);
+        let slab = bs * w * 4;
+        let layer_bytes = 2 * slab + 2 * w * 4;
+        let blocks = (0..self.n_layers)
+            .map(|l| {
+                let p = &payload[l * layer_bytes..(l + 1) * layer_bytes];
+                let blk = KvBlock {
+                    k: get_f32s(&p[..slab], bs * w),
+                    v: get_f32s(&p[slab..2 * slab], bs * w),
+                    kmin: get_f32s(&p[2 * slab..2 * slab + w * 4], w),
+                    kmax: get_f32s(&p[2 * slab + w * 4..], w),
+                };
+                // Shared with the handoff importer: the block must be
+                // structurally sound before a live store adopts it.
+                blk.check_geometry(bs, w)
+                    .map_err(|e| anyhow::anyhow!("page-in: record {id} layer {l}: {e:#}"))?;
+                Ok(Arc::new(blk))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(blocks)
+    }
+
+    /// Mark a record dead: its slot becomes reusable, and when dead
+    /// bytes exceed [`COMPACT_DEAD_RATIO`] of the file the live records
+    /// are compacted into a fresh file. Unknown ids are a no-op (a
+    /// demotion that raced a resume frees an id that was never
+    /// committed).
+    pub fn free(&self, id: SpillId) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(off) = inner.slots.remove(&id) else { return };
+        inner.free.push(off);
+        let dead = inner.free.len();
+        let dead_bytes = dead as u64 * self.record_size;
+        if dead >= COMPACT_MIN_DEAD && (dead_bytes as f64) > COMPACT_DEAD_RATIO * inner.end as f64 {
+            // Compaction failure is non-fatal: the file keeps working
+            // with its dead bytes; the next free retries.
+            if Self::compact(&mut inner, &self.path, self.record_size).is_ok() {
+                // ordering: monotone statistics counter.
+                self.compactions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Rewrite live records sequentially into `<path>.compact`, swap it
+    /// over the old file, and rebuild the slot table. Runs under the
+    /// internal mutex (the caller is `free`).
+    fn compact(inner: &mut SpillInner, path: &Path, record_size: u64) -> crate::Result<()> {
+        let tmp = path.with_extension("spill.compact");
+        let mut out = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&tmp)
+            .map_err(|e| io_err("create compact file", &tmp, e))?;
+        let mut live: Vec<(SpillId, u64)> = inner.slots.iter().map(|(&id, &off)| (id, off)).collect();
+        live.sort_by_key(|&(_, off)| off);
+        let mut buf = vec![0u8; record_size as usize];
+        let mut moved: Vec<(SpillId, u64)> = Vec::with_capacity(live.len());
+        for (i, (id, off)) in live.into_iter().enumerate() {
+            let new_off = i as u64 * record_size;
+            inner
+                .file
+                .seek(SeekFrom::Start(off))
+                .and_then(|_| inner.file.read_exact(&mut buf))
+                .and_then(|_| out.seek(SeekFrom::Start(new_off)))
+                .and_then(|_| out.write_all(&buf))
+                .map_err(|e| io_err("compact copy", path, e))?;
+            moved.push((id, new_off));
+        }
+        std::fs::rename(&tmp, path).map_err(|e| io_err("compact rename", path, e))?;
+        // Only now mutate the table: a failure above leaves the old
+        // file and offsets fully intact.
+        inner.end = moved.len() as u64 * record_size;
+        inner.slots = moved.into_iter().collect();
+        inner.free.clear();
+        inner.file = out;
+        Ok(())
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Tier knobs, mirrored from `scout.tier_*` (see `config::ScoutConfig`).
+#[derive(Debug, Clone)]
+pub struct TierConfig {
+    /// Suspended block sets kept in DRAM across all sessions; beyond
+    /// this, LRU sessions' blocks demote to the spill file.
+    pub dram_blocks: usize,
+    /// Suspended sessions kept at all; beyond this the LRU session is
+    /// dropped entirely.
+    pub max_sessions: usize,
+    /// Idle time after which a suspended session expires.
+    pub ttl: Duration,
+    /// Spill file path; `None` = a per-process file under the OS temp
+    /// directory, deleted on drop.
+    pub spill_path: Option<PathBuf>,
+}
+
+/// Scheduler state carried across suspend/resume so an exact-match
+/// resume continues byte-identically to an uninterrupted session.
+pub struct SuspendMeta {
+    pub resident: Vec<ResidentSet>,
+    pub selected: Vec<Vec<usize>>,
+    pub scores: Vec<Vec<f32>>,
+    pub recall_in: Vec<usize>,
+    pub last_tok: u32,
+}
+
+/// How a follow-up request continues a suspended session. `blocks[b]`
+/// holds all layers of block `b` — the `import_shared_block` shape.
+pub enum Resume {
+    /// The prompt equals the stored history: restore everything
+    /// (including the partial tail block) and decode immediately.
+    /// `pure_rows` is the stored token-pure row count, carried forward
+    /// so a later re-suspend keeps the divergence-rewind bound honest.
+    Decode {
+        blocks: Vec<Vec<Arc<KvBlock>>>,
+        rows: usize,
+        pure_rows: usize,
+        meta: SuspendMeta,
+    },
+    /// Restore `rows` rows and prefill the rest. `row_inputs[t]` is the
+    /// token to embed at row `t` for `t >= rows` (shifted by one in the
+    /// extension case, the plain prompt after a divergence rewind).
+    /// `pure_rows` covers the *restored* prefix only; rows the caller
+    /// prefills verbatim from the prompt extend it, shifted rows don't.
+    Prefill {
+        blocks: Vec<Vec<Arc<KvBlock>>>,
+        rows: usize,
+        pure_rows: usize,
+        row_inputs: Vec<u32>,
+    },
+}
+
+enum Slot {
+    Hot(Vec<Arc<KvBlock>>),
+    Cold(SpillId),
+}
+
+struct Session {
+    /// Token history at suspend: prompt ++ generated.
+    tokens: Vec<u32>,
+    /// Cache rows at suspend (== tokens.len(); enforced on suspend).
+    rows: usize,
+    /// Rows `< pure_rows` hold the KV of the same-index prompt token
+    /// (prefill rows); rows beyond are decode rows, shifted by one.
+    pure_rows: usize,
+    slots: Vec<Slot>,
+    meta: SuspendMeta,
+    last_used: Instant,
+    /// LRU stamp (registry-wide monotone tick).
+    tick: u64,
+}
+
+struct TierState {
+    sessions: HashMap<String, Session>,
+    /// Hot (DRAM-resident) block sets across all sessions.
+    hot_blocks: usize,
+    tick: u64,
+}
+
+/// Counter snapshot for the `{"stats": true}` `tier` section.
+#[derive(Clone)]
+pub struct TierStats {
+    pub sessions: usize,
+    pub hot_blocks: usize,
+    pub dram_budget_blocks: usize,
+    pub hot_bytes: u64,
+    pub cold_bytes: u64,
+    pub spill_file_bytes: u64,
+    pub suspended: u64,
+    pub resumed: u64,
+    pub spilled: u64,
+    pub paged_in: u64,
+    pub shed: u64,
+    pub evicted: u64,
+    pub misses: u64,
+    pub compactions: u64,
+    pub page_in_us: Histogram,
+}
+
+/// The session registry + DRAM budget + spill file: one per pool
+/// (sessions are pool-global so a resume can land on any replica).
+pub struct SessionTier {
+    spec: ModelSpec,
+    cfg: TierConfig,
+    file: SpillFile,
+    state: Mutex<TierState>,
+    suspended: AtomicU64,
+    resumed: AtomicU64,
+    spilled: AtomicU64,
+    paged_in: AtomicU64,
+    shed: AtomicU64,
+    evicted: AtomicU64,
+    misses: AtomicU64,
+    page_in_us: Mutex<Histogram>,
+}
+
+/// Distinguishes temp-file names when several pools live in one process
+/// (tests); the pid alone is not enough.
+static FILE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn common_prefix_len(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+impl SessionTier {
+    pub fn new(spec: &ModelSpec, cfg: TierConfig) -> crate::Result<Self> {
+        anyhow::ensure!(cfg.dram_blocks >= 1, "tier: dram_blocks must be >= 1 when enabled");
+        anyhow::ensure!(cfg.max_sessions >= 1, "tier: max_sessions must be >= 1");
+        let path = match &cfg.spill_path {
+            Some(p) => p.clone(),
+            None => {
+                // ordering: unique-id counter for temp-file naming.
+                let n = FILE_SEQ.fetch_add(1, Ordering::Relaxed);
+                std::env::temp_dir()
+                    .join(format!("scout-tier-{}-{}.spill", std::process::id(), n))
+            }
+        };
+        Ok(Self {
+            spec: spec.clone(),
+            file: SpillFile::create(path, spec)?,
+            cfg,
+            state: Mutex::new(TierState { sessions: HashMap::new(), hot_blocks: 0, tick: 0 }),
+            suspended: AtomicU64::new(0),
+            resumed: AtomicU64::new(0),
+            spilled: AtomicU64::new(0),
+            paged_in: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            page_in_us: Mutex::new(Histogram::new()),
+        })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Bytes one block set occupies in DRAM (K + V + sealed digests,
+    /// all layers).
+    fn block_set_bytes(&self) -> u64 {
+        let w = self.spec.n_kv_heads * self.spec.head_dim;
+        (self.spec.n_layers * (2 * self.spec.block_size * w + 2 * w) * 4) as u64
+    }
+
+    /// Register a finished request's KV state under `session_id`.
+    /// `tokens` is the full history (prompt ++ generated), `pure_rows`
+    /// the prompt-row count (see module docs). Enforces the DRAM block
+    /// budget by demoting LRU sessions' blocks to the spill file, the
+    /// session-count cap, and the idle TTL. A spill failure drops the
+    /// victim *session* (honest shed) and never fails the suspend.
+    pub fn suspend(
+        &self,
+        session_id: &str,
+        tokens: Vec<u32>,
+        pure_rows: usize,
+        export: KvSeqExport,
+        meta: SuspendMeta,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(!session_id.is_empty(), "tier suspend: empty session id");
+        export.validate()?;
+        let rows = export.len();
+        anyhow::ensure!(rows > 0, "tier suspend: empty cache");
+        // Row/token alignment is the whole basis of resume matching; a
+        // truncated prompt (rows != tokens) cannot be resumed honestly.
+        anyhow::ensure!(
+            tokens.len() == rows,
+            "tier suspend: {} history tokens for {} cache rows (truncated prompt?)",
+            tokens.len(),
+            rows
+        );
+        anyhow::ensure!(
+            pure_rows >= 1 && pure_rows <= rows,
+            "tier suspend: pure_rows {pure_rows} outside [1, {rows}]"
+        );
+        let n_layers = self.spec.n_layers;
+        anyhow::ensure!(
+            meta.resident.len() == n_layers
+                && meta.selected.len() == n_layers
+                && meta.scores.len() == n_layers
+                && meta.recall_in.len() == n_layers,
+            "tier suspend: scheduler meta layer count mismatch"
+        );
+        anyhow::ensure!(
+            export.spec().n_layers == n_layers
+                && export.spec().block_size == self.spec.block_size
+                && export.spec().n_kv_heads * export.spec().head_dim
+                    == self.spec.n_kv_heads * self.spec.head_dim,
+            "tier suspend: export geometry does not match the tier's model"
+        );
+        let bs = self.spec.block_size;
+        let used = rows.div_ceil(bs);
+        let (_, _, mut sets) = export.into_block_sets();
+        sets.truncate(used);
+
+        let mut freed: Vec<SpillId> = Vec::new();
+        let mut plan: Vec<(String, usize, Vec<Arc<KvBlock>>)> = Vec::new();
+        {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.tick += 1;
+            let tick = st.tick;
+            self.sweep_expired_locked(&mut st, &mut freed);
+            if let Some(old) = st.sessions.remove(session_id) {
+                Self::drop_session_locked(&mut st, old, &mut freed);
+            }
+            while st.sessions.len() >= self.cfg.max_sessions {
+                let Some(lru) = st.sessions.iter().min_by_key(|(_, s)| s.tick).map(|(k, _)| k.clone())
+                else {
+                    break;
+                };
+                if let Some(old) = st.sessions.remove(&lru) {
+                    Self::drop_session_locked(&mut st, old, &mut freed);
+                }
+                // ordering: monotone statistics counter.
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+            st.hot_blocks += sets.len();
+            st.sessions.insert(
+                session_id.to_string(),
+                Session {
+                    tokens,
+                    rows,
+                    pure_rows,
+                    slots: sets.into_iter().map(Slot::Hot).collect(),
+                    meta,
+                    last_used: Instant::now(),
+                    tick,
+                },
+            );
+            // Plan demotions under the lock; execute them against the
+            // file with no guard in scope (see module docs).
+            if st.hot_blocks > self.cfg.dram_blocks {
+                let mut order: Vec<(u64, String)> =
+                    st.sessions.iter().map(|(k, s)| (s.tick, k.clone())).collect();
+                order.sort();
+                let mut excess = st.hot_blocks - self.cfg.dram_blocks;
+                'plan: for (_, sid) in order {
+                    let sess = &st.sessions[&sid];
+                    for (i, slot) in sess.slots.iter().enumerate() {
+                        if excess == 0 {
+                            break 'plan;
+                        }
+                        if let Slot::Hot(layers) = slot {
+                            plan.push((sid.clone(), i, layers.clone()));
+                            excess -= 1;
+                        }
+                    }
+                }
+            }
+        }
+        for id in freed.drain(..) {
+            self.file.free(id);
+        }
+        let mut dead_sids: Vec<String> = Vec::new();
+        for (sid, idx, layers) in plan {
+            if dead_sids.contains(&sid) {
+                continue;
+            }
+            match self.file.spill(&layers) {
+                Ok(spill_id) => {
+                    let mut stale = true;
+                    {
+                        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+                        if let Some(sess) = st.sessions.get_mut(&sid) {
+                            if let Some(slot) = sess.slots.get_mut(idx) {
+                                if matches!(slot, Slot::Hot(_)) {
+                                    *slot = Slot::Cold(spill_id);
+                                    st.hot_blocks -= 1;
+                                    stale = false;
+                                }
+                            }
+                        }
+                    }
+                    if stale {
+                        // The session was resumed/evicted while we wrote.
+                        self.file.free(spill_id);
+                    } else {
+                        // ordering: monotone statistics counter.
+                        self.spilled.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Err(_) => {
+                    // Honest shed: drop the victim session's cached
+                    // state entirely rather than blow the DRAM budget.
+                    let mut freed2: Vec<SpillId> = Vec::new();
+                    {
+                        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+                        if let Some(sess) = st.sessions.remove(&sid) {
+                            Self::drop_session_locked(&mut st, sess, &mut freed2);
+                        }
+                    }
+                    for id in freed2 {
+                        self.file.free(id);
+                    }
+                    // ordering: monotone statistics counter.
+                    self.shed.fetch_add(1, Ordering::Relaxed);
+                    dead_sids.push(sid);
+                }
+            }
+        }
+        // ordering: monotone statistics counter.
+        self.suspended.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Look up `session_id` for a follow-up request with `prompt`,
+    /// paging cold blocks back in. `Ok(None)` = no usable session
+    /// (never registered, expired, shed, or diverged below one block) —
+    /// the caller prefills from scratch. `allow_prefill = false`
+    /// restricts resume to the exact-match decode case (shape-locked
+    /// backends cannot run a partial prefill). The session entry is
+    /// consumed either way; a page-in failure is returned as a
+    /// structured error for the caller to fail the request with.
+    pub fn resume(
+        &self,
+        session_id: &str,
+        prompt: &[u32],
+        allow_prefill: bool,
+    ) -> crate::Result<Option<Resume>> {
+        let mut freed: Vec<SpillId> = Vec::new();
+        let sess = {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.tick += 1;
+            self.sweep_expired_locked(&mut st, &mut freed);
+            match st.sessions.remove(session_id) {
+                Some(s) => {
+                    let hot =
+                        s.slots.iter().filter(|sl| matches!(sl, Slot::Hot(_))).count();
+                    st.hot_blocks -= hot;
+                    Some(s)
+                }
+                None => None,
+            }
+        };
+        for id in freed.drain(..) {
+            self.file.free(id);
+        }
+        let Some(sess) = sess else {
+            // ordering: monotone statistics counter.
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Ok(None);
+        };
+
+        let bs = self.spec.block_size;
+        let n = sess.tokens.len();
+        let matched = common_prefix_len(&sess.tokens, prompt);
+        // (take, rows, decode?) per the three cases in the module docs.
+        let exact = matched == n && prompt.len() == n;
+        let extends = matched == n && prompt.len() > n;
+        let (take, rows) = if exact || extends {
+            (sess.slots.len(), sess.rows)
+        } else {
+            let cap = prompt.len().saturating_sub(1) / bs * bs;
+            let c = (matched.min(sess.pure_rows) / bs * bs).min(cap);
+            (c / bs, c)
+        };
+        let usable = take > 0 && (exact || allow_prefill);
+        if !usable {
+            for slot in sess.slots {
+                if let Slot::Cold(id) = slot {
+                    self.file.free(id);
+                }
+            }
+            // ordering: monotone statistics counter.
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Ok(None);
+        }
+
+        let mut blocks: Vec<Vec<Arc<KvBlock>>> = Vec::with_capacity(take);
+        let mut slots = sess.slots.into_iter();
+        for _ in 0..take {
+            // slots.len() >= take by construction (take <= used blocks).
+            let Some(slot) = slots.next() else { break };
+            match slot {
+                Slot::Hot(layers) => blocks.push(layers),
+                Slot::Cold(id) => {
+                    let t0 = Instant::now();
+                    match self.file.page_in(id) {
+                        Ok(layers) => {
+                            self.file.free(id);
+                            self.page_in_us
+                                .lock()
+                                .unwrap_or_else(|e| e.into_inner())
+                                .record(t0.elapsed().as_micros() as f64);
+                            // ordering: monotone statistics counter.
+                            self.paged_in.fetch_add(1, Ordering::Relaxed);
+                            blocks.push(layers);
+                        }
+                        Err(e) => {
+                            self.file.free(id);
+                            for rest in slots {
+                                if let Slot::Cold(id2) = rest {
+                                    self.file.free(id2);
+                                }
+                            }
+                            return Err(anyhow::anyhow!(
+                                "tier page-in: session {session_id:?}: {e:#}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        for rest in slots {
+            if let Slot::Cold(id) = rest {
+                self.file.free(id);
+            }
+        }
+        // ordering: monotone statistics counter.
+        self.resumed.fetch_add(1, Ordering::Relaxed);
+        if exact {
+            return Ok(Some(Resume::Decode {
+                blocks,
+                rows,
+                pure_rows: sess.pure_rows,
+                meta: sess.meta,
+            }));
+        }
+        let mut row_inputs = prompt.to_vec();
+        if extends {
+            // Shift the suffix right by one: row t embeds prompt[t-1],
+            // exactly what force-decoding the extra tokens would do.
+            for t in (n..row_inputs.len()).rev() {
+                row_inputs[t] = row_inputs[t - 1];
+            }
+        }
+        // A divergence rewind keeps only token-pure rows, so the whole
+        // restored prefix is pure; an extension keeps the stored bound.
+        let pure_rows = if extends { sess.pure_rows } else { rows };
+        Ok(Some(Resume::Prefill { blocks, rows, pure_rows, row_inputs }))
+    }
+
+    /// Suspended-session count (tests / introspection).
+    pub fn sessions(&self) -> usize {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).sessions.len()
+    }
+
+    pub fn stats(&self) -> TierStats {
+        let (sessions, hot_blocks) = {
+            let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            (st.sessions.len(), st.hot_blocks)
+        };
+        // ordering: statistics snapshot of independent Relaxed counters.
+        TierStats {
+            sessions,
+            hot_blocks,
+            dram_budget_blocks: self.cfg.dram_blocks,
+            hot_bytes: hot_blocks as u64 * self.block_set_bytes(),
+            cold_bytes: self.file.live_records() as u64 * self.file.record_bytes(),
+            spill_file_bytes: self.file.file_bytes(),
+            suspended: self.suspended.load(Ordering::Relaxed),
+            resumed: self.resumed.load(Ordering::Relaxed),
+            spilled: self.spilled.load(Ordering::Relaxed),
+            paged_in: self.paged_in.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            compactions: self.file.compactions(),
+            page_in_us: self.page_in_us.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+        }
+    }
+
+    fn sweep_expired_locked(&self, st: &mut TierState, freed: &mut Vec<SpillId>) {
+        if self.cfg.ttl.is_zero() {
+            return;
+        }
+        let expired: Vec<String> = st
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.last_used.elapsed() >= self.cfg.ttl)
+            .map(|(k, _)| k.clone())
+            .collect();
+        for sid in expired {
+            if let Some(sess) = st.sessions.remove(&sid) {
+                Self::drop_session_locked(st, sess, freed);
+            }
+            // ordering: monotone statistics counter.
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn drop_session_locked(st: &mut TierState, sess: Session, freed: &mut Vec<SpillId>) {
+        for slot in sess.slots {
+            match slot {
+                Slot::Hot(_) => st.hot_blocks -= 1,
+                Slot::Cold(id) => freed.push(id),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ShardedKvCache;
+    use super::*;
+    use crate::model::spec::PROXY_MODELS;
+
+    fn tiny_spec() -> ModelSpec {
+        let mut s = PROXY_MODELS[0].1();
+        s.n_layers = 3;
+        s.max_seq = 64;
+        s.block_size = 8;
+        s.n_kv_heads = 2;
+        s.head_dim = 4;
+        s
+    }
+
+    fn filled_cache(spec: &ModelSpec, n: usize) -> ShardedKvCache {
+        let store = ShardedKvCache::with_shards(spec, 2);
+        let w = spec.n_kv_heads * spec.head_dim;
+        for t in 0..n {
+            for l in 0..spec.n_layers {
+                let k: Vec<f32> = (0..w).map(|i| (t * 100 + l * 10 + i) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                store.append_layer(l, &k, &v);
+            }
+            store.advance();
+        }
+        store
+    }
+
+    fn block_set(spec: &ModelSpec, n: usize, block: usize) -> Vec<Arc<KvBlock>> {
+        let store = filled_cache(spec, n);
+        store.share_block(block)
+    }
+
+    fn meta_for(spec: &ModelSpec) -> SuspendMeta {
+        SuspendMeta {
+            resident: (0..spec.n_layers).map(|_| ResidentSet::new(spec.n_blocks(), 2)).collect(),
+            selected: vec![vec![0]; spec.n_layers],
+            scores: vec![vec![0.5; spec.n_blocks()]; spec.n_layers],
+            recall_in: vec![7; spec.n_layers],
+            last_tok: 3,
+        }
+    }
+
+    fn tier_with(spec: &ModelSpec, dram_blocks: usize, max_sessions: usize) -> SessionTier {
+        SessionTier::new(
+            spec,
+            TierConfig {
+                dram_blocks,
+                max_sessions,
+                ttl: Duration::from_secs(600),
+                spill_path: None,
+            },
+        )
+        .unwrap()
+    }
+
+    fn suspend_session(tier: &SessionTier, spec: &ModelSpec, sid: &str, rows: usize) {
+        let cache = filled_cache(spec, rows);
+        let export = ShardedKvCache::export_seq(Arc::new(cache));
+        let tokens: Vec<u32> = (0..rows as u32).collect();
+        tier.suspend(sid, tokens, rows, export, meta_for(spec)).unwrap();
+    }
+
+    fn assert_sets_eq(a: &[Vec<Arc<KvBlock>>], b: &[Vec<Arc<KvBlock>>]) {
+        assert_eq!(a.len(), b.len(), "block count");
+        for (bi, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.len(), y.len(), "layer count at block {bi}");
+            for (l, (p, q)) in x.iter().zip(y).enumerate() {
+                assert_eq!(p.k(), q.k(), "k block {bi} layer {l}");
+                assert_eq!(p.v(), q.v(), "v block {bi} layer {l}");
+                assert_eq!(p.digest(), q.digest(), "digest block {bi} layer {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn spill_page_in_roundtrip_is_bitwise() {
+        let spec = tiny_spec();
+        let file = SpillFile::create(
+            std::env::temp_dir().join(format!("scout-tier-test-{}-rt.spill", std::process::id())),
+            &spec,
+        )
+        .unwrap();
+        let set = block_set(&spec, 16, 1);
+        let id = file.spill(&set).unwrap();
+        let back = file.page_in(id).unwrap();
+        assert_sets_eq(std::slice::from_ref(&set), std::slice::from_ref(&back));
+        assert_eq!(file.live_records(), 1);
+        assert_eq!(file.file_bytes(), file.record_bytes());
+    }
+
+    #[test]
+    fn free_list_reuses_slots_without_growing_the_file() {
+        let spec = tiny_spec();
+        let file = SpillFile::create(
+            std::env::temp_dir().join(format!("scout-tier-test-{}-fl.spill", std::process::id())),
+            &spec,
+        )
+        .unwrap();
+        let a = file.spill(&block_set(&spec, 16, 0)).unwrap();
+        let _b = file.spill(&block_set(&spec, 16, 1)).unwrap();
+        let size = file.file_bytes();
+        file.free(a);
+        let set_c = block_set(&spec, 24, 2);
+        let c = file.spill(&set_c).unwrap();
+        assert_eq!(file.file_bytes(), size, "freed slot must be reused, not appended");
+        assert_sets_eq(
+            std::slice::from_ref(&set_c),
+            std::slice::from_ref(&file.page_in(c).unwrap()),
+        );
+        // freeing an unknown / already-freed id is a no-op
+        file.free(a);
+        file.free(9999);
+        assert_eq!(file.live_records(), 2);
+    }
+
+    #[test]
+    fn compaction_shrinks_the_file_and_preserves_survivors() {
+        let spec = tiny_spec();
+        let file = SpillFile::create(
+            std::env::temp_dir().join(format!("scout-tier-test-{}-gc.spill", std::process::id())),
+            &spec,
+        )
+        .unwrap();
+        let survivor_set = block_set(&spec, 16, 1);
+        let survivor = file.spill(&survivor_set).unwrap();
+        let doomed: Vec<SpillId> =
+            (0..6).map(|_| file.spill(&block_set(&spec, 16, 0)).unwrap()).collect();
+        let before = file.file_bytes();
+        for id in doomed {
+            file.free(id);
+        }
+        assert!(file.compactions() >= 1, "dead-ratio threshold must trigger compaction");
+        assert!(file.file_bytes() < before, "compaction must shrink the file");
+        assert_eq!(file.live_records(), 1);
+        assert_sets_eq(
+            std::slice::from_ref(&survivor_set),
+            std::slice::from_ref(&file.page_in(survivor).unwrap()),
+        );
+    }
+
+    #[test]
+    fn corrupt_and_malformed_records_are_structured_errors() {
+        let spec = tiny_spec();
+        let file = SpillFile::create(
+            std::env::temp_dir().join(format!("scout-tier-test-{}-bad.spill", std::process::id())),
+            &spec,
+        )
+        .unwrap();
+        // unknown id
+        let err = file.page_in(42).unwrap_err().to_string();
+        assert!(err.contains("unknown spill record"), "{err}");
+        // flip a payload byte on disk -> checksum mismatch
+        let id = file.spill(&block_set(&spec, 16, 0)).unwrap();
+        {
+            let mut f = OpenOptions::new().read(true).write(true).open(file.path()).unwrap();
+            f.seek(SeekFrom::Start(HEADER_BYTES as u64 + 5)).unwrap();
+            let mut b = [0u8; 1];
+            f.read_exact(&mut b).unwrap();
+            f.seek(SeekFrom::Start(HEADER_BYTES as u64 + 5)).unwrap();
+            f.write_all(&[b[0] ^ 0xff]).unwrap();
+        }
+        let err = file.page_in(id).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // stomp the header -> magic error
+        {
+            let mut f = OpenOptions::new().write(true).open(file.path()).unwrap();
+            f.seek(SeekFrom::Start(0)).unwrap();
+            f.write_all(&[0u8; 8]).unwrap();
+        }
+        let err = file.page_in(id).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        // truncate the file -> structured read error, no panic
+        let id2 = file.spill(&block_set(&spec, 16, 1)).unwrap();
+        {
+            let f = OpenOptions::new().write(true).open(file.path()).unwrap();
+            f.set_len(file.record_bytes() + 17).unwrap();
+        }
+        let err = file.page_in(id2).unwrap_err().to_string();
+        assert!(err.contains("read record"), "{err}");
+        // wrong layer count on the way out
+        let short = block_set(&spec, 16, 0)[..spec.n_layers - 1].to_vec();
+        let err = file.spill(&short).unwrap_err().to_string();
+        assert!(err.contains("layers"), "{err}");
+    }
+
+    #[test]
+    fn suspend_resume_exact_match_restores_blocks_and_meta() {
+        let spec = tiny_spec();
+        let tier = tier_with(&spec, 64, 4);
+        let rows = 20; // 2 full blocks + partial tail
+        let cache = filled_cache(&spec, rows);
+        let reference: Vec<Vec<Arc<KvBlock>>> =
+            (0..3).map(|b| cache.share_block(b)).collect();
+        let export = ShardedKvCache::export_seq(Arc::new(cache));
+        let tokens: Vec<u32> = (0..rows as u32).collect();
+        tier.suspend("s1", tokens.clone(), rows, export, meta_for(&spec)).unwrap();
+        assert_eq!(tier.sessions(), 1);
+        match tier.resume("s1", &tokens, true).unwrap() {
+            Some(Resume::Decode { blocks, rows: r, pure_rows, meta }) => {
+                assert_eq!(r, rows);
+                assert_eq!(pure_rows, rows, "stored purity bound carries through");
+                assert_eq!(blocks.len(), 3, "2 full + 1 partial tail block");
+                // share_block reseals the tail digest over zero rows, so
+                // compare payloads only for the tail, everything for
+                // full blocks.
+                assert_sets_eq(&reference[..2], &blocks[..2]);
+                assert_eq!(reference[2][0].k(), blocks[2][0].k(), "tail K payload");
+                assert_eq!(meta.recall_in, vec![7; spec.n_layers]);
+                assert_eq!(meta.last_tok, 3);
+            }
+            _ => panic!("expected an exact-match decode resume"),
+        }
+        assert_eq!(tier.sessions(), 0, "resume consumes the session");
+        assert!(tier.resume("s1", &tokens, true).unwrap().is_none(), "second resume misses");
+    }
+
+    #[test]
+    fn dram_budget_demotes_lru_blocks_and_pages_back_bitwise() {
+        let spec = tiny_spec();
+        let tier = tier_with(&spec, 2, 4); // room for 2 hot block sets
+        let rows = 16; // 2 full blocks per session
+        let cache = filled_cache(&spec, rows);
+        let reference: Vec<Vec<Arc<KvBlock>>> =
+            (0..2).map(|b| cache.share_block(b)).collect();
+        let export = ShardedKvCache::export_seq(Arc::new(cache));
+        let tokens: Vec<u32> = (0..rows as u32).collect();
+        tier.suspend("s1", tokens.clone(), rows, export, meta_for(&spec)).unwrap();
+        assert_eq!(tier.stats().spilled, 0, "within budget: nothing spills");
+        // A second session pushes 2 more sets in; the LRU (s1) demotes.
+        suspend_session(&tier, &spec, "s2", rows);
+        let st = tier.stats();
+        assert_eq!(st.spilled, 2, "both of s1's blocks must demote");
+        assert!(st.hot_blocks <= 2, "budget enforced, got {}", st.hot_blocks);
+        assert!(st.cold_bytes > 0);
+        match tier.resume("s1", &tokens, true).unwrap() {
+            Some(Resume::Decode { blocks, .. }) => {
+                assert_sets_eq(&reference, &blocks);
+            }
+            _ => panic!("expected a decode resume after demotion"),
+        }
+        let st = tier.stats();
+        assert_eq!(st.paged_in, 2);
+        assert_eq!(st.page_in_us.count(), 2, "page-in latency recorded");
+    }
+
+    #[test]
+    fn extension_resume_shifts_the_input_stream() {
+        let spec = tiny_spec();
+        let tier = tier_with(&spec, 64, 4);
+        let rows = 16;
+        suspend_session(&tier, &spec, "s1", rows);
+        let mut prompt: Vec<u32> = (0..rows as u32).collect();
+        prompt.extend([100, 101, 102]);
+        match tier.resume("s1", &prompt, true).unwrap() {
+            Some(Resume::Prefill { blocks, rows: r, pure_rows, row_inputs }) => {
+                assert_eq!(r, rows);
+                assert_eq!(pure_rows, rows, "extension keeps the stored purity bound");
+                assert_eq!(blocks.len(), 2);
+                assert_eq!(&row_inputs[..rows], &prompt[..rows]);
+                // rows 16,17,18 embed prompt[15], prompt[16], prompt[17]
+                assert_eq!(&row_inputs[rows..], &[15, 100, 101]);
+            }
+            _ => panic!("expected an extension prefill resume"),
+        }
+    }
+
+    #[test]
+    fn divergence_rewinds_to_full_pure_blocks_or_misses() {
+        let spec = tiny_spec();
+        let tier = tier_with(&spec, 64, 4);
+        let rows = 20;
+        let pure = 18; // rows 18,19 are decode rows
+        {
+            let cache = filled_cache(&spec, rows);
+            let export = ShardedKvCache::export_seq(Arc::new(cache));
+            let tokens: Vec<u32> = (0..rows as u32).collect();
+            tier.suspend("s1", tokens, pure, export, meta_for(&spec)).unwrap();
+        }
+        // Diverges at token 19 (inside the decode region): the rewind is
+        // clamped to the pure region (18) then block-aligned down to 16.
+        let mut prompt: Vec<u32> = (0..rows as u32).collect();
+        prompt[19] = 999;
+        match tier.resume("s1", &prompt, true).unwrap() {
+            Some(Resume::Prefill { blocks, rows: r, pure_rows, row_inputs }) => {
+                assert_eq!(r, 16, "full pure blocks only");
+                assert_eq!(pure_rows, 16, "the whole rewound prefix is token-pure");
+                assert_eq!(blocks.len(), 2);
+                assert_eq!(row_inputs, prompt, "divergence resumes unshifted");
+            }
+            _ => panic!("expected a rewind prefill resume"),
+        }
+        // Divergence in block 0 -> nothing restorable -> miss.
+        suspend_session(&tier, &spec, "s2", rows);
+        let mut early: Vec<u32> = (0..rows as u32).collect();
+        early[2] = 999;
+        assert!(tier.resume("s2", &early, true).unwrap().is_none());
+        assert_eq!(tier.sessions(), 0, "a divergence miss still consumes the session");
+    }
+
+    #[test]
+    fn prefill_resume_respects_allow_prefill_gate() {
+        let spec = tiny_spec();
+        let tier = tier_with(&spec, 64, 4);
+        suspend_session(&tier, &spec, "s1", 16);
+        let mut prompt: Vec<u32> = (0..16).collect();
+        prompt.push(100);
+        assert!(
+            tier.resume("s1", &prompt, false).unwrap().is_none(),
+            "shape-locked backends must not get a partial prefill"
+        );
+        // Exact matches still resume without the gate.
+        suspend_session(&tier, &spec, "s2", 16);
+        let exact: Vec<u32> = (0..16).collect();
+        assert!(matches!(tier.resume("s2", &exact, false).unwrap(), Some(Resume::Decode { .. })));
+    }
+
+    #[test]
+    fn session_capacity_and_ttl_evict_lru() {
+        let spec = tiny_spec();
+        let tier = tier_with(&spec, 64, 2);
+        suspend_session(&tier, &spec, "a", 8);
+        suspend_session(&tier, &spec, "b", 8);
+        suspend_session(&tier, &spec, "c", 8); // evicts "a"
+        assert_eq!(tier.sessions(), 2);
+        assert!(tier.resume("a", &(0..8).collect::<Vec<u32>>(), true).unwrap().is_none());
+        assert_eq!(tier.stats().evicted, 1);
+        // TTL: a zero-ish ttl expires everything on the next sweep.
+        let ttl_tier = SessionTier::new(
+            &spec,
+            TierConfig {
+                dram_blocks: 64,
+                max_sessions: 4,
+                ttl: Duration::from_nanos(1),
+                spill_path: None,
+            },
+        )
+        .unwrap();
+        suspend_session(&ttl_tier, &spec, "x", 8);
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(ttl_tier.resume("x", &(0..8).collect::<Vec<u32>>(), true).unwrap().is_none());
+        assert_eq!(ttl_tier.stats().evicted, 1);
+    }
+
+    #[test]
+    fn truncated_histories_are_refused() {
+        let spec = tiny_spec();
+        let tier = tier_with(&spec, 64, 4);
+        let cache = filled_cache(&spec, 16);
+        let export = ShardedKvCache::export_seq(Arc::new(cache));
+        // 10 tokens for 16 rows: row/token alignment is broken.
+        let err =
+            tier.suspend("s1", (0..10).collect(), 10, export, meta_for(&spec)).unwrap_err();
+        assert!(err.to_string().contains("cache rows"), "{err}");
+        assert_eq!(tier.sessions(), 0);
+    }
+
+    #[test]
+    fn stats_track_bytes_per_tier() {
+        let spec = tiny_spec();
+        let tier = tier_with(&spec, 1, 4);
+        suspend_session(&tier, &spec, "s1", 16); // 2 sets, budget 1 -> 1 spills
+        let st = tier.stats();
+        assert_eq!(st.sessions, 1);
+        assert_eq!(st.suspended, 1);
+        assert_eq!(st.hot_blocks, 1);
+        assert_eq!(st.spilled, 1);
+        assert!(st.hot_bytes > 0);
+        assert_eq!(st.cold_bytes, tier.file.record_bytes());
+        assert_eq!(st.dram_budget_blocks, 1);
+    }
+}

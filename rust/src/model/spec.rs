@@ -129,6 +129,9 @@ pub fn builtin_preset(name: &str) -> Option<ModelSpec> {
         "eval-4k" => Some(mk(8, 256, 8, 2, 32, 1024, 4096, 4096, 32, 32, 4)),
         // Accuracy evaluation at 4k context, budget 2048 tokens (kb=64).
         "eval-4k-b2048" => Some(mk(8, 256, 8, 2, 32, 1024, 4096, 4096, 32, 64, 4)),
+        // Long-context session-tier bench: 8k/32k histories on the
+        // test-tiny core (resume-vs-reprefill TTFT, not model quality).
+        "bench-32k" => Some(mk(2, 128, 4, 2, 32, 256, 256, 33024, 32, 32, 2)),
         _ => None,
     }
 }
@@ -177,7 +180,7 @@ mod tests {
 
     #[test]
     fn builtin_presets_validate() {
-        for name in ["test-tiny", "serve-20m", "eval-4k", "eval-4k-b2048"] {
+        for name in ["test-tiny", "serve-20m", "eval-4k", "eval-4k-b2048", "bench-32k"] {
             let spec = builtin_preset(name).unwrap();
             assert_eq!(spec.name, name);
             spec.validate().unwrap();

@@ -267,7 +267,8 @@ impl Manifest {
         let spec = crate::model::spec::builtin_preset(name).ok_or_else(|| {
             anyhow::anyhow!(
                 "unknown preset {name:?}: no artifacts on disk and not a built-in \
-                 preset (built-ins: test-tiny, serve-20m, eval-4k, eval-4k-b2048)"
+                 preset (built-ins: test-tiny, serve-20m, eval-4k, eval-4k-b2048, \
+                 bench-32k)"
             )
         })?;
         Self::synthesize(&spec)

@@ -16,7 +16,15 @@
 //!   plus exactly one terminal event (`Done` / `Rejected` / `Cancelled` /
 //!   `Failed` / `ReplicaLost` / `DeadlineExceeded`).
 //! - [`telemetry`] — per-replica gauges + latency histograms aggregated
-//!   into the `{"stats": true}` control response.
+//!   into the `{"stats": true}` control response (plus the pool-global
+//!   session-tier section when `scout.tier_dram_blocks > 0`).
+//!
+//! Sessions: a [`Submission::session_id`] keeps the finished request's
+//! KV resident in the pool-global [`crate::kvcache::SessionTier`]
+//! (DRAM, spilling to NVMe under pressure); a same-key follow-up
+//! resumes from the stored prefix instead of re-prefilling it. The
+//! tier is created lazily by the first replica to load its stack and
+//! survives engine panics.
 //!
 //! The TCP JSON-lines front-end in [`crate::server`] is a thin shell over
 //! this module; tests, benches, and examples drive [`EnginePool`]

@@ -64,6 +64,7 @@
 //! relaxed atomic load each.
 
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
@@ -76,7 +77,9 @@ use std::time::{Duration, Instant};
 use crate::config::RunConfig;
 use crate::coordinator::{DecodeScheduler, PrefillState, RequestSpec, SeqHandoff, SeqState};
 use crate::harness::Stack;
-use crate::kvcache::{first_chunk_key, PrefixPool};
+use crate::kvcache::{
+    first_chunk_key, PrefixPool, Resume, SessionTier, SuspendMeta, TierConfig,
+};
 use crate::model::ModelSpec;
 use crate::util::{clock, Json};
 
@@ -94,6 +97,15 @@ pub struct Submission {
     pub stream: bool,
     /// Session-affinity routing key.
     pub session: Option<String>,
+    /// Durable session key for the tiered KV store: when set (and
+    /// `scout.tier_dram_blocks > 0`), this request's finished KV stays
+    /// resident as a *suspended session* — DRAM first, spilled to the
+    /// tier's file under memory pressure — and a later submission with
+    /// the same key resumes from the stored prefix instead of
+    /// re-prefilling it. With the tier disabled the key is ignored and
+    /// serving is byte-identical to a keyless submission. Also used as
+    /// the affinity routing key when `session` is unset.
+    pub session_id: Option<String>,
     /// Arrival stamp on the [`clock`] timeline; 0 = stamp at submit.
     pub arrival_us: u64,
     /// Request deadline, ms after arrival; 0 = none. Checked at
@@ -110,6 +122,7 @@ impl Submission {
             max_new_tokens,
             stream: false,
             session: None,
+            session_id: None,
             arrival_us: 0,
             timeout_ms: 0,
         }
@@ -122,6 +135,11 @@ impl Submission {
 
     pub fn with_session(mut self, key: impl Into<String>) -> Self {
         self.session = Some(key.into());
+        self
+    }
+
+    pub fn with_session_id(mut self, key: impl Into<String>) -> Self {
+        self.session_id = Some(key.into());
         self
     }
 
@@ -144,6 +162,8 @@ struct ServeJob {
     events: EventSender,
     cost: usize,
     session: Option<String>,
+    /// Tiered-KV session key (see [`Submission::session_id`]).
+    session_id: Option<String>,
     cancel: Arc<AtomicBool>,
     /// Absolute deadline on the [`clock`] timeline, us; 0 = none.
     deadline_us: u64,
@@ -161,7 +181,33 @@ struct HandoffMsg {
     queue_us: u64,
     /// Absolute deadline on the [`clock`] timeline, us; 0 = none.
     deadline_us: u64,
+    /// Tier suspend state travels with the request so the decode
+    /// replica can suspend the finished sequence (see [`Track`]).
+    session_id: Option<String>,
+    session_prompt: Vec<u32>,
+    pure_rows: usize,
     sent: Instant,
+}
+
+/// Shared slot for the pool-global [`SessionTier`]: the tier needs the
+/// model spec, which is only known after a replica loads its stack, so
+/// the first replica to come up creates it (under the slot's lock — no
+/// two replicas can race a spill file into existence) and everyone
+/// else, plus `{"stats":true}`, reads the same instance.
+type TierSlot = Arc<Mutex<Option<Arc<SessionTier>>>>;
+
+/// Tier knobs from the run config ([`SessionTier`] construction input).
+fn tier_config(cfg: &RunConfig) -> TierConfig {
+    TierConfig {
+        dram_blocks: cfg.scout.tier_dram_blocks,
+        max_sessions: cfg.scout.tier_sessions,
+        ttl: Duration::from_millis(cfg.scout.tier_session_ttl_ms),
+        spill_path: if cfg.scout.tier_spill_path.is_empty() {
+            None
+        } else {
+            Some(PathBuf::from(&cfg.scout.tier_spill_path))
+        },
+    }
 }
 
 /// Multi-replica serving plane. See the module docs for the ownership
@@ -179,6 +225,8 @@ pub struct EnginePool {
     joins: Mutex<Vec<JoinHandle<()>>>,
     draining: AtomicBool,
     next_id: AtomicU64,
+    /// `Some` iff `scout.tier_dram_blocks > 0`; see [`TierSlot`].
+    tier: Option<TierSlot>,
     started: Instant,
     /// Stops the stall-watchdog monitor thread (set by `begin_drain`).
     watchdog_stop: Arc<AtomicBool>,
@@ -209,6 +257,14 @@ impl EnginePool {
         let tel: Vec<Arc<ReplicaTelemetry>> =
             (0..n).map(|_| Arc::new(ReplicaTelemetry::default())).collect();
         let router = Arc::new(Router::new(cfg.server.policy, tel.clone(), roles.clone()));
+        // Pool-global session tier (one spill file, shared by every
+        // replica): enabled by the DRAM-budget knob, created lazily by
+        // the first replica to load.
+        let tier: Option<TierSlot> = if cfg.scout.tier_dram_blocks > 0 {
+            Some(Arc::new(Mutex::new(None)))
+        } else {
+            None
+        };
 
         // All channels exist before any thread spawns, so every replica
         // can hold senders to every handoff receiver.
@@ -237,6 +293,7 @@ impl EnginePool {
                 tel: tel[i].clone(),
                 pool_tel: pool_tel.clone(),
                 handoff_txs: handoff_txs.clone(),
+                tier: tier.clone(),
             };
             let join = std::thread::Builder::new()
                 .name(format!("scout-replica-{i}"))
@@ -332,6 +389,7 @@ impl EnginePool {
             joins: Mutex::new(joins),
             draining: AtomicBool::new(false),
             next_id: AtomicU64::new(0),
+            tier,
             started: Instant::now(),
             watchdog_stop,
             watchdog_join: Mutex::new(watchdog_join),
@@ -350,6 +408,14 @@ impl EnginePool {
     /// Effective role of each replica (all `mixed` unless configured).
     pub fn roles(&self) -> &[ReplicaRole] {
         &self.roles
+    }
+
+    /// The pool-global session tier, once enabled *and* created (the
+    /// first replica to load builds it). Tests / introspection.
+    pub fn session_tier(&self) -> Option<Arc<SessionTier>> {
+        self.tier
+            .as_ref()
+            .and_then(|slot| slot.lock().unwrap_or_else(|e| e.into_inner()).clone())
     }
 
     pub fn is_draining(&self) -> bool {
@@ -436,7 +502,11 @@ impl EnginePool {
         } else {
             None
         };
-        let Some(replica) = self.router.pick_prefill_with_hint(sub.session.as_deref(), hint) else {
+        // Affinity: the explicit routing key wins; a tier session key
+        // doubles as one so follow-ups land where the hint (and any
+        // replica-local warm state) lives.
+        let affinity = sub.session.as_deref().or(sub.session_id.as_deref());
+        let Some(replica) = self.router.pick_prefill_with_hint(affinity, hint) else {
             // ordering: undo of the Relaxed reservation above.
             self.pool_tel.inflight_tokens.fetch_sub(cost, Ordering::Relaxed);
             // No placeable replica right now (all failed or role-less) —
@@ -466,6 +536,7 @@ impl EnginePool {
             events: tx.clone(),
             cost,
             session: sub.session,
+            session_id: if self.tier.is_some() { sub.session_id } else { None },
             cancel: cancel.clone(),
             deadline_us,
         };
@@ -517,12 +588,18 @@ impl EnginePool {
 
     /// `{"stats": true}` body: pool + per-replica telemetry.
     pub fn stats(&self) -> Json {
+        let tier_stats = self
+            .tier
+            .as_ref()
+            .and_then(|slot| slot.lock().unwrap_or_else(|e| e.into_inner()).clone())
+            .map(|t| t.stats());
         pool_stats_json(
             &self.pool_tel,
             &self.tel,
             &self.roles,
             self.started.elapsed().as_secs_f64(),
             self.is_draining(),
+            tier_stats.as_ref(),
         )
     }
 
@@ -579,6 +656,9 @@ impl EnginePool {
         }
         if sub.max_new_tokens == 0 {
             return Err("max_new_tokens must be >= 1".to_string());
+        }
+        if sub.session_id.as_deref() == Some("") {
+            return Err("session_id must be non-empty when present".to_string());
         }
         let s = &self.spec;
         // Bound each term before summing: wire values are untrusted and
@@ -661,6 +741,17 @@ struct Track {
     cancel: Arc<AtomicBool>,
     /// Session key, for stage-2 (decode) placement affinity.
     session: Option<String>,
+    /// Tiered-KV session key: when set, the finished sequence is
+    /// *suspended* into the pool's [`SessionTier`] instead of dropped.
+    session_id: Option<String>,
+    /// The request's prompt, retained only for session requests — the
+    /// suspend needs the full token history (prompt ++ generated).
+    session_prompt: Vec<u32>,
+    /// Rows `< pure_rows` of this sequence's cache hold the KV of the
+    /// same-index prompt token (the divergence-rewind bound at the next
+    /// suspend). `prompt.len()` for fresh prefills; a tier resume
+    /// carries the stored bound forward.
+    pure_rows: usize,
     /// Lifecycle stage — the supervisor's recovery map after a panic.
     stage: TrackStage,
     /// The original request, kept until decode starts so the supervisor
@@ -684,6 +775,13 @@ impl Track {
             ttft_us: 0,
             cancel: job.cancel.clone(),
             session: job.session.clone(),
+            session_id: job.session_id.clone(),
+            session_prompt: if job.session_id.is_some() {
+                job.spec.prompt.clone()
+            } else {
+                Vec::new()
+            },
+            pure_rows: job.spec.prompt.len(),
             stage: TrackStage::Queued,
             respec: Some(job.spec.clone()),
             deadline_us: job.deadline_us,
@@ -714,6 +812,9 @@ struct ReplicaCtx {
     /// channel are exactly the prefill-role replicas', making the
     /// drain-time disconnect cascade acyclic by construction.
     handoff_txs: Vec<Sender<HandoffMsg>>,
+    /// Pool-global session-tier slot (see [`TierSlot`]); `None` when
+    /// the tier is disabled.
+    tier: Option<TierSlot>,
 }
 
 /// How long an otherwise-idle replica in a disaggregated pool waits on
@@ -762,7 +863,8 @@ fn replica_loop(
     rx_handoff: Receiver<HandoffMsg>,
     ready: Sender<Result<ModelSpec, String>>,
 ) {
-    let ReplicaCtx { cfg, index, role, router, tel, pool_tel, handoff_txs } = ctx;
+    let ReplicaCtx { cfg, index, role, router, tel, pool_tel, handoff_txs, tier: tier_slot } =
+        ctx;
     let release = |cost: usize| {
         // ordering: Relaxed undo of the admission side's Relaxed
         // reservation — both sides are RMWs on the same atomic, so they
@@ -779,6 +881,33 @@ fn replica_loop(
             // pool notices and drops the senders.
             refuse_until_drained(&rx_job, &rx_handoff, &release);
             return;
+        }
+    };
+    // Resolve (or create — first loaded replica wins, under the slot's
+    // lock) the pool-global session tier. A tier that cannot come up
+    // (spill file creation failed) is a load failure: serving with
+    // sessions silently disabled would break the resume contract.
+    let tier: Option<Arc<SessionTier>> = match &tier_slot {
+        None => None,
+        Some(slot) => {
+            let mut g = slot.lock().unwrap_or_else(|e| e.into_inner());
+            match &*g {
+                Some(t) => Some(t.clone()),
+                None => match SessionTier::new(&stack.gpu.spec, tier_config(&cfg)) {
+                    Ok(t) => {
+                        let t = Arc::new(t);
+                        *g = Some(t.clone());
+                        Some(t)
+                    }
+                    Err(e) => {
+                        drop(g);
+                        let _ = ready.send(Err(format!("session tier: {e:#}")));
+                        drop(handoff_txs);
+                        refuse_until_drained(&rx_job, &rx_handoff, &release);
+                        return;
+                    }
+                },
+            }
         }
     };
     let _ = ready.send(Ok(stack.gpu.spec.clone()));
@@ -828,6 +957,7 @@ fn replica_loop(
                 &pool_tel,
                 stack,
                 prefix_pool.as_ref(),
+                tier.as_ref(),
                 &rx_job,
                 &rx_handoff,
                 &mut sh,
@@ -899,6 +1029,7 @@ fn run_engine(
     pool_tel: &PoolTelemetry,
     stack: Stack,
     prefix_pool: Option<&Arc<PrefixPool>>,
+    tier: Option<&Arc<SessionTier>>,
     rx_job: &Receiver<ServeJob>,
     rx_handoff: &Receiver<HandoffMsg>,
     sh: &mut Shared,
@@ -914,6 +1045,11 @@ fn run_engine(
     let mut batch = stack.batch();
     let max_live = cfg.server.max_batch;
     let disagg = router.disaggregated();
+    // Partial (extension/divergence) session resumes run a prefill that
+    // starts mid-prompt — only possible on a tile-flexible backend with
+    // a scheduler that implements resumed prefill. Exact-match decode
+    // resumes are never gated.
+    let allow_partial_resume = stack.gpu.tile_flexible() && sched.supports_resumed_prefill();
 
     let mut active: Option<PrefillState> = None;
     let mut ready_q: VecDeque<SeqState> = VecDeque::new();
@@ -1117,62 +1253,23 @@ fn run_engine(
         // one chunk, then route the finished sequence.
         if active.is_none() {
             if let Some(job) = sh.wait_q.pop_front() {
-                let id = job.spec.id;
-                // Gauges move queued -> prefilling *before* the
-                // allocation call, in lockstep with the stage: a panic
-                // inside begin_prefill leaves a Prefilling-stage track
-                // whose gauge footprint recovery can trust.
-                tel.queued.fetch_sub(1, Ordering::Relaxed);
-                tel.queued_tokens.fetch_sub(job.cost, Ordering::Relaxed);
-                tel.prefilling.fetch_add(1, Ordering::Relaxed);
-                tel.prefill_tokens.fetch_add(job.cost, Ordering::Relaxed);
-                if let Some(t) = sh.tracks.get_mut(&id) {
-                    t.stage = TrackStage::Prefilling;
-                }
-                // `kv.alloc` fault: models block-pool exhaustion at
-                // admission, exercising the load-shed path below.
-                let alloc_fault = crate::util::faults::should_fire("kv.alloc", Some(index));
-                if alloc_fault {
-                    tel.faults_injected.fetch_add(1, Ordering::Relaxed);
-                }
-                let admitted = if alloc_fault {
-                    Err(anyhow::anyhow!("fault injected: kv.alloc (block allocation failed)"))
-                } else {
-                    sched.begin_prefill(&job.spec, batch.budget_blocks)
-                };
-                match admitted {
-                    Ok(st) => active = Some(st),
-                    Err(e) => {
-                        tel.prefilling.fetch_sub(1, Ordering::Relaxed);
-                        tel.prefill_tokens.fetch_sub(job.cost, Ordering::Relaxed);
-                        let msg = format!("{e:#}");
-                        let lower = msg.to_lowercase();
-                        if lower.contains("alloc")
-                            || lower.contains("capacity")
-                            || lower.contains("budget")
-                        {
-                            // Memory pressure, not a broken request —
-                            // degrade gracefully instead of failing hard.
-                            shed_load(
-                                tel,
-                                pool_tel,
-                                &mut sh.tracks,
-                                id,
-                                &msg,
-                                prefix_pool,
-                                release,
-                            );
-                        } else {
-                            fail_request(
-                                tel,
-                                &mut sh.tracks,
-                                id,
-                                &format!("admit: {msg}"),
-                                release,
-                            );
-                        }
-                    }
-                }
+                active = start_admission(
+                    job,
+                    sched.as_ref(),
+                    tier,
+                    allow_partial_resume,
+                    &batch.spec,
+                    batch.budget_blocks,
+                    role,
+                    router,
+                    index,
+                    tel,
+                    pool_tel,
+                    prefix_pool,
+                    sh,
+                    &mut ready_q,
+                    release,
+                );
             }
         }
         if let Some(st) = active.as_mut() {
@@ -1205,43 +1302,7 @@ fn run_engine(
                                     .unwrap_or_else(|e| e.into_inner())
                                     .record(t.queue_us as f64);
                             }
-                            // Stage-2 placement: a prefill-role replica
-                            // hands the sequence to a decode-capable
-                            // one; any replica that can decode keeps
-                            // its own admissions (all-mixed pools never
-                            // hand off — pre-disaggregation behavior).
-                            if role.can_decode() {
-                                tel.live_seqs.fetch_add(1, Ordering::Relaxed);
-                                tel.live_tokens.fetch_add(cost, Ordering::Relaxed);
-                                if let Some(t) = sh.tracks.get_mut(&id) {
-                                    // Decode begins: replay is no longer
-                                    // sound, drop the retained spec.
-                                    t.stage = TrackStage::Decoding;
-                                    t.respec = None;
-                                }
-                                ready_q.push_back(seq);
-                            } else {
-                                let session =
-                                    sh.tracks.get(&id).and_then(|t| t.session.as_deref());
-                                match router.pick_decode(session) {
-                                    Some(dest) => dispatch_handoff(
-                                        seq,
-                                        dest,
-                                        index,
-                                        tel,
-                                        &mut sh.tracks,
-                                        sh.handoff_txs.as_deref(),
-                                        release,
-                                    ),
-                                    None => fail_request(
-                                        tel,
-                                        &mut sh.tracks,
-                                        id,
-                                        "no decode-capable replica for handoff",
-                                        release,
-                                    ),
-                                }
-                            }
+                            place_ready(seq, role, router, index, tel, sh, &mut ready_q, release);
                         }
                         Err(e) => {
                             fail_request(
@@ -1342,6 +1403,13 @@ fn run_engine(
         }
         tel.tokens_out.fetch_add(step_tokens, Ordering::Relaxed);
 
+        // --- Suspend-then-reap. Naturally finished sequences whose
+        // track carries a tier session key are extracted first — reap
+        // would drop their KV — suspended into the tier, and answered
+        // exactly like reaped ones. Everything else reaps as before.
+        if let Some(tier) = tier {
+            suspend_finished(tier, &mut batch, tel, sh, release);
+        }
         // --- Reap finished sequences and answer their clients, filling
         // the serve-plane timing fields from this replica's tracking.
         batch.reap();
@@ -1355,6 +1423,265 @@ fn run_engine(
                 out.ttft_us = t.ttft_us;
                 let _ = t.events.send(StreamEvent::Done(out));
             }
+        }
+    }
+}
+
+/// Start one popped admission: move its gauges queued → prefilling,
+/// probe the session tier for a stored prefix, then either begin a
+/// (possibly resumed) prefill, or — on an exact-match resume — rebuild
+/// the sequence outright and place it straight into the decode plane.
+/// Returns the prefill to advance, if the admission started one.
+///
+/// Gauges move *before* any allocation call, in lockstep with the
+/// stage: a panic inside `begin_prefill`/`from_resume` leaves a
+/// Prefilling-stage track whose footprint recovery can trust.
+#[allow(clippy::too_many_arguments)]
+fn start_admission(
+    job: ServeJob,
+    sched: &dyn DecodeScheduler,
+    tier: Option<&Arc<SessionTier>>,
+    allow_partial_resume: bool,
+    spec: &ModelSpec,
+    budget_blocks: usize,
+    role: ReplicaRole,
+    router: &Router,
+    index: usize,
+    tel: &ReplicaTelemetry,
+    pool_tel: &PoolTelemetry,
+    prefix_pool: Option<&Arc<PrefixPool>>,
+    sh: &mut Shared,
+    ready_q: &mut VecDeque<SeqState>,
+    release: &impl Fn(usize),
+) -> Option<PrefillState> {
+    let id = job.spec.id;
+    // ordering: every gauge/counter in this function is Relaxed
+    // telemetry — stage movement is ordered by the `sh.tracks` borrow
+    // (under the Shared mutex), and readers only aggregate stats.
+    tel.queued.fetch_sub(1, Ordering::Relaxed);
+    tel.queued_tokens.fetch_sub(job.cost, Ordering::Relaxed);
+    tel.prefilling.fetch_add(1, Ordering::Relaxed);
+    tel.prefill_tokens.fetch_add(job.cost, Ordering::Relaxed);
+    if let Some(t) = sh.tracks.get_mut(&id) {
+        t.stage = TrackStage::Prefilling;
+    }
+    // --- Session tier: a follow-up on a suspended session resumes from
+    // the stored prefix instead of re-prefilling it. The entry is
+    // consumed either way; a crash-replay of this admission re-probes,
+    // misses, and prefills from scratch — slower but byte-honest.
+    let resume = match (tier, job.session_id.as_deref()) {
+        (Some(tier), Some(sid)) => {
+            match tier.resume(sid, &job.spec.prompt, allow_partial_resume) {
+                Ok(r) => r,
+                Err(e) => {
+                    // Page-in failed: the stored KV is unusable
+                    // (damaged or unreadable spill record). Fail
+                    // structured rather than silently re-prefilling —
+                    // masking spill-device damage helps no one.
+                    tel.prefilling.fetch_sub(1, Ordering::Relaxed);
+                    tel.prefill_tokens.fetch_sub(job.cost, Ordering::Relaxed);
+                    fail_request(tel, &mut sh.tracks, id, &format!("{e:#}"), release);
+                    return None;
+                }
+            }
+        }
+        _ => None,
+    };
+    match resume {
+        Some(Resume::Decode { blocks, rows, pure_rows, meta }) => {
+            // Exact match: no prefill at all — rebuild and decode.
+            tel.prefilling.fetch_sub(1, Ordering::Relaxed);
+            tel.prefill_tokens.fetch_sub(job.cost, Ordering::Relaxed);
+            match SeqState::from_resume(spec, &job.spec, budget_blocks, &blocks, rows, Some(meta))
+            {
+                Ok(seq) => {
+                    tel.admitted.fetch_add(1, Ordering::Relaxed);
+                    if let Some(t) = sh.tracks.get_mut(&id) {
+                        t.pure_rows = pure_rows;
+                        t.stage = TrackStage::Handoff;
+                        t.queue_us = clock::now_us().saturating_sub(t.arrival_us);
+                        tel.queue_wait_us
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .record(t.queue_us as f64);
+                    }
+                    place_ready(seq, role, router, index, tel, sh, ready_q, release);
+                }
+                Err(e) => {
+                    fail_request(tel, &mut sh.tracks, id, &format!("resume: {e:#}"), release)
+                }
+            }
+            None
+        }
+        Some(Resume::Prefill { blocks, rows, pure_rows, row_inputs }) => {
+            // Rows past the restored prefix are token-pure only when
+            // they embed the prompt verbatim (divergence rewind); an
+            // extension's shifted suffix keeps the stored bound.
+            let pure = if row_inputs[rows..] == job.spec.prompt[rows..] {
+                row_inputs.len()
+            } else {
+                pure_rows
+            };
+            if let Some(t) = sh.tracks.get_mut(&id) {
+                t.pure_rows = pure;
+            }
+            match sched.begin_resumed_prefill(&job.spec, budget_blocks, rows, row_inputs, &blocks)
+            {
+                Ok(st) => Some(st),
+                Err(e) => {
+                    tel.prefilling.fetch_sub(1, Ordering::Relaxed);
+                    tel.prefill_tokens.fetch_sub(job.cost, Ordering::Relaxed);
+                    fail_request(tel, &mut sh.tracks, id, &format!("resume: {e:#}"), release);
+                    None
+                }
+            }
+        }
+        None => {
+            // `kv.alloc` fault: models block-pool exhaustion at
+            // admission, exercising the load-shed path below.
+            let alloc_fault = crate::util::faults::should_fire("kv.alloc", Some(index));
+            if alloc_fault {
+                tel.faults_injected.fetch_add(1, Ordering::Relaxed);
+            }
+            let admitted = if alloc_fault {
+                Err(anyhow::anyhow!("fault injected: kv.alloc (block allocation failed)"))
+            } else {
+                sched.begin_prefill(&job.spec, budget_blocks)
+            };
+            match admitted {
+                Ok(st) => Some(st),
+                Err(e) => {
+                    tel.prefilling.fetch_sub(1, Ordering::Relaxed);
+                    tel.prefill_tokens.fetch_sub(job.cost, Ordering::Relaxed);
+                    let msg = format!("{e:#}");
+                    let lower = msg.to_lowercase();
+                    if lower.contains("alloc")
+                        || lower.contains("capacity")
+                        || lower.contains("budget")
+                    {
+                        // Memory pressure, not a broken request —
+                        // degrade gracefully instead of failing hard.
+                        shed_load(tel, pool_tel, &mut sh.tracks, id, &msg, prefix_pool, release);
+                    } else {
+                        fail_request(tel, &mut sh.tracks, id, &format!("admit: {msg}"), release);
+                    }
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// Stage-2 placement for a decode-ready sequence: a prefill-role
+/// replica hands it to a decode-capable one; any replica that can
+/// decode keeps its own admissions (all-mixed pools never hand off —
+/// pre-disaggregation behavior).
+#[allow(clippy::too_many_arguments)]
+fn place_ready(
+    seq: SeqState,
+    role: ReplicaRole,
+    router: &Router,
+    index: usize,
+    tel: &ReplicaTelemetry,
+    sh: &mut Shared,
+    ready_q: &mut VecDeque<SeqState>,
+    release: &impl Fn(usize),
+) {
+    let id = seq.id;
+    let cost = sh.tracks.get(&id).map(|t| t.cost).unwrap_or(0);
+    if role.can_decode() {
+        // ordering: live gauges are Relaxed telemetry; the stage flip
+        // is ordered by the `sh.tracks` borrow under the Shared mutex.
+        tel.live_seqs.fetch_add(1, Ordering::Relaxed);
+        tel.live_tokens.fetch_add(cost, Ordering::Relaxed);
+        if let Some(t) = sh.tracks.get_mut(&id) {
+            // Decode begins: replay is no longer sound, drop the
+            // retained spec.
+            t.stage = TrackStage::Decoding;
+            t.respec = None;
+        }
+        ready_q.push_back(seq);
+    } else {
+        let dest = {
+            let session = sh.tracks.get(&id).and_then(|t| t.session.as_deref());
+            router.pick_decode(session)
+        };
+        match dest {
+            Some(dest) => dispatch_handoff(
+                seq,
+                dest,
+                index,
+                tel,
+                &mut sh.tracks,
+                sh.handoff_txs.as_deref(),
+                release,
+            ),
+            None => fail_request(
+                tel,
+                &mut sh.tracks,
+                id,
+                "no decode-capable replica for handoff",
+                release,
+            ),
+        }
+    }
+}
+
+/// Serve-plane suspend sweep, run before [`Batch::reap`] would drop the
+/// KV: every *naturally finished* sequence whose track carries a tier
+/// session key is extracted, answered exactly like a reaped one, and
+/// its cache + scheduler state handed to the tier (token history =
+/// prompt ++ generated, one cache row per token by the decode-step
+/// append discipline). Cancelled or expired requests never get here —
+/// the eviction sweep already dropped them, and only an honest Done
+/// leaves a history worth resuming.
+///
+/// A suspend refusal is absorbed: the client already has its tokens;
+/// the session is simply not resumable (the tier's own shed/evict
+/// counters carry the observability).
+fn suspend_finished(
+    tier: &SessionTier,
+    batch: &mut Batch,
+    tel: &ReplicaTelemetry,
+    sh: &mut Shared,
+    release: &impl Fn(usize),
+) {
+    let mut i = 0;
+    while i < batch.seqs.len() {
+        if !batch.seqs[i].done() {
+            i += 1;
+            continue;
+        }
+        let id = batch.seqs[i].id;
+        let Some((sid, prompt, pure_rows)) = sh.tracks.get(&id).and_then(|t| {
+            t.session_id.clone().map(|s| (s, t.session_prompt.clone(), t.pure_rows))
+        }) else {
+            i += 1; // no session key: Batch::reap answers it
+            continue;
+        };
+        let seq = batch.seqs.swap_remove(i);
+        let mut out = seq.finish();
+        let h = seq.into_handoff();
+        let mut tokens = prompt;
+        tokens.extend_from_slice(&h.generated);
+        let meta = SuspendMeta {
+            resident: h.resident,
+            selected: h.selected,
+            scores: h.scores,
+            recall_in: h.recall_in,
+            last_tok: h.last_tok,
+        };
+        let _ = tier.suspend(&sid, tokens, pure_rows, h.export, meta);
+        // ordering: monotonic stats + live gauges, Relaxed like the
+        // identical settlement in `Batch::reap`'s caller.
+        tel.finished.fetch_add(1, Ordering::Relaxed);
+        tel.live_seqs.fetch_sub(1, Ordering::Relaxed);
+        if let Some(t) = sh.tracks.remove(&id) {
+            tel.live_tokens.fetch_sub(t.cost, Ordering::Relaxed);
+            release(t.cost);
+            out.queue_us = t.queue_us;
+            out.ttft_us = t.ttft_us;
+            let _ = t.events.send(StreamEvent::Done(out));
         }
     }
 }
@@ -1410,6 +1737,10 @@ fn recover_shared(tel: &ReplicaTelemetry, sh: &mut Shared, release: &impl Fn(usi
                     events: t.events.clone(),
                     cost: t.cost,
                     session: t.session.clone(),
+                    // The replay re-probes the tier; if the original
+                    // admission already consumed the session, it misses
+                    // and prefills from scratch — slower, still honest.
+                    session_id: t.session_id.clone(),
                     cancel: t.cancel.clone(),
                     deadline_us: t.deadline_us,
                 };
@@ -1538,6 +1869,9 @@ fn dispatch_handoff(
         arrival_us: track.arrival_us,
         queue_us: track.queue_us,
         deadline_us: track.deadline_us,
+        session_id: track.session_id.clone(),
+        session_prompt: track.session_prompt.clone(),
+        pure_rows: track.pure_rows,
         sent: Instant::now(),
     };
     // `handoff.send` fault: the destination is treated as dead without
@@ -1629,6 +1963,9 @@ fn import_handoff(
             ttft_us: 0,
             cancel: msg.cancel,
             session: None,
+            session_id: msg.session_id,
+            session_prompt: msg.session_prompt,
+            pure_rows: msg.pure_rows,
             stage: TrackStage::Decoding,
             respec: None,
             deadline_us: msg.deadline_us,

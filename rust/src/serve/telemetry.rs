@@ -9,7 +9,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::kvcache::{PrefixPool, PrefixPoolStats};
+use crate::kvcache::{PrefixPool, PrefixPoolStats, TierStats};
 use crate::metrics::Histogram;
 use crate::util::Json;
 
@@ -208,6 +208,28 @@ pub fn prefix_stats_json(s: &PrefixPoolStats) -> Json {
     ])
 }
 
+/// Session-tier counters as a stats sub-object (pool-global: one
+/// [`crate::kvcache::SessionTier`] serves every replica).
+pub fn tier_stats_json(s: &TierStats) -> Json {
+    Json::obj(vec![
+        ("sessions", Json::num(s.sessions as f64)),
+        ("hot_blocks", Json::num(s.hot_blocks as f64)),
+        ("dram_budget_blocks", Json::num(s.dram_budget_blocks as f64)),
+        ("hot_bytes", Json::num(s.hot_bytes as f64)),
+        ("cold_bytes", Json::num(s.cold_bytes as f64)),
+        ("spill_file_bytes", Json::num(s.spill_file_bytes as f64)),
+        ("suspended", Json::num(s.suspended as f64)),
+        ("resumed", Json::num(s.resumed as f64)),
+        ("spilled", Json::num(s.spilled as f64)),
+        ("paged_in", Json::num(s.paged_in as f64)),
+        ("shed", Json::num(s.shed as f64)),
+        ("evicted", Json::num(s.evicted as f64)),
+        ("misses", Json::num(s.misses as f64)),
+        ("compactions", Json::num(s.compactions as f64)),
+        ("page_in_us", hist_json(&s.page_in_us)),
+    ])
+}
+
 /// Pool-level admission counters.
 #[derive(Default)]
 pub struct PoolTelemetry {
@@ -261,6 +283,7 @@ pub fn pool_stats_json(
     roles: &[ReplicaRole],
     uptime_s: f64,
     draining: bool,
+    tier: Option<&TierStats>,
 ) -> Json {
     // ordering: whole-pool statistics snapshot — all atomic loads below
     // are Relaxed reads of independent gauges/counters; the report is
@@ -344,6 +367,14 @@ pub fn pool_stats_json(
                 None => Json::Null,
             },
         ),
+        // Null (not zeros) when the tier is disabled, matching "prefix".
+        (
+            "tier",
+            match tier {
+                Some(s) => tier_stats_json(s),
+                None => Json::Null,
+            },
+        ),
         ("ttft_us", hist_json(&ttft)),
         ("queue_wait_us", hist_json(&queue_wait)),
         ("replicas", Json::Arr(rows)),
@@ -393,7 +424,7 @@ mod tests {
         a.ttft_us.lock().unwrap().record(1000.0);
         b.ttft_us.lock().unwrap().record(3000.0);
         let roles = [ReplicaRole::Prefill, ReplicaRole::Decode];
-        let j = pool_stats_json(&pool, &[a, b], &roles, 1.0, false);
+        let j = pool_stats_json(&pool, &[a, b], &roles, 1.0, false, None);
         assert_eq!(j.req_usize("rejected").unwrap(), 2);
         assert_eq!(j.req_usize("queue_depth").unwrap(), 1);
         assert_eq!(j.req_usize("tokens_out").unwrap(), 100);
@@ -443,6 +474,7 @@ mod tests {
             &[ReplicaRole::Mixed],
             1.0,
             false,
+            None,
         );
         assert_eq!(agg.req_usize("restarts").unwrap(), 3);
         assert_eq!(agg.req_usize("deadline_exceeded").unwrap(), 2);
@@ -474,8 +506,55 @@ mod tests {
             &[ReplicaRole::Mixed, ReplicaRole::Mixed],
             1.0,
             false,
+            None,
         );
         let p = agg.get("prefix").unwrap();
         assert_eq!(p.req_usize("hits").unwrap(), 1, "aggregated across replicas");
+    }
+
+    #[test]
+    fn tier_counters_surface_in_stats() {
+        let mut s = TierStats {
+            sessions: 2,
+            hot_blocks: 5,
+            dram_budget_blocks: 8,
+            hot_bytes: 4096,
+            cold_bytes: 2048,
+            spill_file_bytes: 8192,
+            suspended: 3,
+            resumed: 1,
+            spilled: 2,
+            paged_in: 2,
+            shed: 0,
+            evicted: 1,
+            misses: 1,
+            compactions: 1,
+            page_in_us: crate::metrics::Histogram::new(),
+        };
+        s.page_in_us.record(250.0);
+        let j = pool_stats_json(
+            &PoolTelemetry::default(),
+            &[Arc::new(ReplicaTelemetry::default())],
+            &[ReplicaRole::Mixed],
+            1.0,
+            false,
+            Some(&s),
+        );
+        let t = j.get("tier").unwrap();
+        assert_eq!(t.req_usize("sessions").unwrap(), 2);
+        assert_eq!(t.req_usize("suspended").unwrap(), 3);
+        assert_eq!(t.req_usize("spilled").unwrap(), 2);
+        assert_eq!(t.req_usize("spill_file_bytes").unwrap(), 8192);
+        assert_eq!(t.get("page_in_us").unwrap().req_usize("count").unwrap(), 1);
+        // disabled tier -> null, not zeros (byte-identical default plane)
+        let off = pool_stats_json(
+            &PoolTelemetry::default(),
+            &[Arc::new(ReplicaTelemetry::default())],
+            &[ReplicaRole::Mixed],
+            1.0,
+            false,
+            None,
+        );
+        assert!(matches!(off.get("tier"), Some(Json::Null)));
     }
 }

@@ -2,11 +2,22 @@
 //!
 //! Data plane (one JSON object per line):
 //!   -> {"prompt": [..], "max_new_tokens": 16, "stream": true, "session": "u1",
-//!       "timeout_ms": 500}
+//!       "session_id": "conv-42", "timeout_ms": 500}
 //!   <- {"id": 0, "token": 17, "step": 1}            (streaming only, per step)
 //!   <- {"id": 0, "generated": [..], "steps": 16, "decode_wall_us": ..,
 //!       "queue_us": .., "ttft_us": ..}              (terminal)
 //!   <- {"id": 0, "error": "...", "code": "overloaded", "retry_after_ms": 40}
+//!
+//! `session_id` (optional) is the durable key into the tiered KV store:
+//! when the server runs with `scout.tier_dram_blocks > 0`, a finished
+//! request's KV is kept as a *suspended session* under this key (DRAM
+//! first, spilled to NVMe under pressure) and a later request with the
+//! same `session_id` whose prompt extends the stored history resumes
+//! from the stored prefix instead of re-prefilling it — same tokens,
+//! lower TTFT. Distinct from `session`, which is only a routing-affinity
+//! hint; `session_id` doubles as the affinity key when `session` is
+//! unset. With the tier disabled (the default) the field is accepted
+//! and ignored, byte-for-byte.
 //!
 //! `timeout_ms` (optional, default 0 = none) is a per-request deadline
 //! measured from arrival; an expired request gets a terminal line with
@@ -34,6 +45,9 @@ pub struct IncomingRequest {
     pub max_new_tokens: usize,
     pub stream: bool,
     pub session: Option<String>,
+    /// Durable tiered-KV session key (see the module docs); `None` = a
+    /// one-shot request whose KV is dropped at completion.
+    pub session_id: Option<String>,
     /// Monotonic arrival stamp ([`clock::now_us`]) taken at parse time —
     /// the wire boundary — so queueing delay and TTFT are measurable.
     pub arrival_us: u64,
@@ -80,12 +94,15 @@ impl IncomingRequest {
         let max_new_tokens = j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
         let stream = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
         let session = j.get("session").and_then(|v| v.as_str()).map(|s| s.to_string());
+        let session_id =
+            j.get("session_id").and_then(|v| v.as_str()).map(|s| s.to_string());
         let timeout_ms = j.get("timeout_ms").and_then(|v| v.as_u64()).unwrap_or(0);
         Ok(Self {
             prompt,
             max_new_tokens,
             stream,
             session,
+            session_id,
             arrival_us: clock::now_us(),
             timeout_ms,
         })
@@ -111,6 +128,7 @@ impl IncomingRequest {
             max_new_tokens: self.max_new_tokens,
             stream: self.stream,
             session: self.session,
+            session_id: self.session_id,
             arrival_us: self.arrival_us,
             timeout_ms: self.timeout_ms,
         }
@@ -235,6 +253,18 @@ mod tests {
         assert!(sub.stream);
         assert_eq!(sub.session.as_deref(), Some("u-7"));
         assert!(sub.arrival_us > 0);
+    }
+
+    #[test]
+    fn parses_session_id_and_threads_it_to_submission() {
+        let r = parse_req("{\"prompt\":[1],\"session_id\":\"conv-42\"}").unwrap();
+        assert_eq!(r.session_id.as_deref(), Some("conv-42"));
+        assert!(r.session.is_none(), "session_id does not set the affinity key");
+        let sub = r.into_submission();
+        assert_eq!(sub.session_id.as_deref(), Some("conv-42"));
+        // absent -> one-shot request
+        let r = parse_req("{\"prompt\":[1]}").unwrap();
+        assert!(r.session_id.is_none());
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //!
 //! A *fault point* is a named site compiled into production code (the
 //! replica loop, handoff send/recv, KV import/export, prefix
-//! probe/publish, KV allocation). Each site asks [`should_fire`] /
+//! probe/publish, KV allocation, and the session tier's `tier.spill` /
+//! `tier.page_in` / `tier.enospc` points on the spill-write, page-in,
+//! and out-of-space paths). Each site asks [`should_fire`] /
 //! [`fail_point`] whether an armed rule matches it; with nothing armed
 //! the check is a single `Relaxed` atomic load and a branch — no lock,
 //! no allocation — so the disarmed binary behaves byte-identically to

@@ -12,7 +12,11 @@
 //! - requests replayed after a crash produce **byte-identical** output
 //!   to an unfaulted reference run (prefill replay is deterministic),
 //! - `replica_lost` is retryable and `deadline_exceeded` /
-//!   `overloaded` load-shed terminals carry honest hints.
+//!   `overloaded` load-shed terminals carry honest hints,
+//! - session-tier storage faults stay contained: a full spill device
+//!   sheds cached *sessions* (never failing a client request), and a
+//!   page-in failure fails the one resuming request with a structured
+//!   error while the pool keeps serving.
 //!
 //! The registry is global, so the suite serializes through a gate
 //! mutex and disarms via RAII even on assertion panics. CI runs this
@@ -246,6 +250,7 @@ fn deadline_exceeded_terminal_under_stall_and_at_admission() {
         max_new_tokens: 4,
         stream: false,
         session: None,
+        session_id: None,
         arrival_us: clock::now_us().saturating_sub(10_000_000),
         timeout_ms: 1,
     };
@@ -355,5 +360,97 @@ fn kv_alloc_fault_sheds_load_with_honest_backoff() {
         stats.get("rejected_by").unwrap().req_usize("overloaded").unwrap() >= 1,
         "the shed must count as an overloaded rejection"
     );
+    pool.shutdown().expect("shutdown");
+}
+
+/// ENOSPC on the spill device sheds cached *sessions*, never client
+/// requests: with the DRAM budget forcing demotions and every spill
+/// write failing, the suspending request still completes `Done`, the
+/// tier counts an honest `shed`, nothing reaches the file, and the
+/// follow-up that lost its session misses and re-prefills cleanly.
+#[test]
+fn tier_enospc_sheds_sessions_not_requests() {
+    let _g = gate();
+    let _d = armed("tier.enospc=err@always");
+    let mut cfg = base_cfg(1);
+    cfg.scout.tier_dram_blocks = 3; // one session's working set
+    let pool = EnginePool::start(cfg).expect("pool start");
+
+    let pa = prompt(32, 1);
+    let first = expect_done(wait_terminal(
+        &pool.submit(Submission::new(pa.clone(), 6).with_session_id("a")),
+    ));
+
+    // Suspending a second session demands demoting "a"'s blocks; the
+    // injected ENOSPC must shed "a" silently, not fail "b".
+    let hb = pool.submit(Submission::new(prompt(32, 2), 6).with_session_id("b"));
+    expect_done(wait_terminal(&hb));
+    assert_single_terminal(&hb);
+    let tier = pool.stats().get("tier").expect("tier stats").clone();
+    assert!(tier.req_usize("shed").unwrap() >= 1, "failed spill must count as a shed");
+    assert_eq!(tier.req_usize("spilled").unwrap(), 0, "no record may reach a full device");
+    assert_eq!(tier.req_usize("spill_file_bytes").unwrap(), 0);
+
+    // The shed session is simply gone: the same-key follow-up misses
+    // and re-prefills its full history to a clean Done.
+    let mut hist = pa;
+    hist.extend_from_slice(&first);
+    let follow = pool.submit(Submission::new(hist, 4).with_session_id("a"));
+    expect_done(wait_terminal(&follow));
+    let stats = settle(&pool, "enospc settlement", |s| {
+        s.req_usize("inflight_tokens").unwrap() == 0
+    });
+    let tier = stats.get("tier").unwrap();
+    assert_eq!(tier.req_usize("resumed").unwrap(), 0, "shed sessions cannot resume");
+    assert!(tier.req_usize("misses").unwrap() >= 3, "every probe was an honest miss");
+    pool.shutdown().expect("shutdown");
+}
+
+/// A page-in failure while resuming a spilled session fails exactly
+/// that request with a structured error naming the tier — never a
+/// panic, never a silent fresh prefill that would mask storage damage.
+/// The reservation is released, the session is consumed, and the
+/// retry (rule spent) prefills fresh to a clean Done.
+#[test]
+fn tier_page_in_fault_fails_the_resume_structurally() {
+    let _g = gate();
+    let _d = armed("tier.page_in=err@1");
+    let mut cfg = base_cfg(1);
+    cfg.scout.tier_dram_blocks = 3;
+    let pool = EnginePool::start(cfg).expect("pool start");
+
+    // Establish "a", then demote it to the spill file by suspending "b"
+    // (spill writes are healthy here — only page-in is armed).
+    let pa = prompt(32, 1);
+    let first = expect_done(wait_terminal(
+        &pool.submit(Submission::new(pa.clone(), 6).with_session_id("a")),
+    ));
+    expect_done(wait_terminal(
+        &pool.submit(Submission::new(prompt(32, 2), 6).with_session_id("b")),
+    ));
+    assert!(
+        pool.stats().get("tier").unwrap().req_usize("spilled").unwrap() >= 3,
+        "\"a\" must be cold before the resume"
+    );
+
+    let mut hist = pa;
+    hist.extend_from_slice(&first);
+    let h = pool.submit(Submission::new(hist.clone(), 6).with_session_id("a"));
+    match wait_terminal(&h) {
+        StreamEvent::Failed { id, error } => {
+            assert_eq!(id, h.id);
+            assert!(error.contains("tier page-in"), "{error}");
+        }
+        other => panic!("expected structured Failed, got {other:?}"),
+    }
+    assert_single_terminal(&h);
+
+    // The rule is spent and the session was consumed by the failed
+    // probe: the retry misses, prefills fresh, and completes.
+    let retry = pool.submit(Submission::new(hist, 6).with_session_id("a"));
+    expect_done(wait_terminal(&retry));
+    settle(&pool, "page-in fault settlement", |s| {
+        s.req_usize("inflight_tokens").unwrap() == 0
+    });
     pool.shutdown().expect("shutdown");
 }

@@ -18,6 +18,11 @@
 //! 3. **Drain under concurrent submitters**: begin_drain racing a
 //!    burst of submissions never strands a client (every handle gets a
 //!    terminal event) and never wedges the join.
+//! 4. **Session-tier churn**: concurrent multi-turn sessions against a
+//!    DRAM budget too small for even two of them force suspends, LRU
+//!    demotions, spill writes, page-ins, and session evictions to race;
+//!    every turn must still reach exactly one terminal, every probe is
+//!    answered exactly once, and the pool must drain to zero inflight.
 //!
 //! Every blocking wait is bounded so a regression fails the suite
 //! instead of hanging it.
@@ -315,4 +320,103 @@ fn drain_racing_submitters_strands_no_client() {
     must_finish_within("drain racing submitters", WAIT, move || {
         p3.shutdown().expect("clean join");
     });
+}
+
+/// Session-tier eviction under pressure with concurrent readers: four
+/// threads each run a three-turn conversation under their own session
+/// key against a tier whose DRAM budget (3 block-sets) holds exactly
+/// one session's working set and whose session cap (3) is below the
+/// thread count. Suspends, LRU demotions to the spill file, demand
+/// page-ins, and session evictions therefore race continuously.
+///
+/// Outputs of later turns legitimately depend on whether the session
+/// survived eviction (exact resume restores the suspended scheduler
+/// state; a miss re-prefills the history and recomputes it), so the
+/// contract pinned here is liveness and accounting, not full byte
+/// parity: every turn reaches a `Done` terminal with the right token
+/// count, first turns (always fresh prefills) are byte-identical to
+/// quiet keyless runs, every probe is answered exactly once
+/// (`resumed + misses == probes`), the forced demotions and evictions
+/// actually happened, and the drained pool holds zero inflight budget.
+#[test]
+fn tier_churn_under_concurrent_sessions_answers_everyone() {
+    const THREADS: u32 = 4;
+    const TURNS: usize = 3;
+    let mut cfg = pool_cfg();
+    cfg.server.replicas = 2;
+    cfg.scout.tier_dram_blocks = 3; // one session's working set
+    cfg.scout.tier_sessions = 3; // < THREADS: evictions race resumes
+    let pool = std::sync::Arc::new(EnginePool::start(cfg).expect("pool start"));
+
+    // Quiet keyless references for the first turns: fresh prefills are
+    // deterministic per-sequence regardless of batch composition, so
+    // these bytes must survive the churn untouched.
+    let refs: Vec<Vec<u32>> = (0..THREADS)
+        .map(|t| {
+            pool.submit(Submission::new(prompt(32, 200 + t), 4))
+                .wait()
+                .expect("reference run")
+                .generated
+        })
+        .collect();
+
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let pool = pool.clone();
+            let turn1 = refs[t as usize].clone();
+            std::thread::spawn(move || {
+                let sid = format!("churn-{t}");
+                let mut hist = prompt(32, 200 + t);
+                for turn in 0..TURNS {
+                    let out = pool
+                        .submit(Submission::new(hist.clone(), 4).with_session_id(sid.clone()))
+                        .wait()
+                        .unwrap_or_else(|e| {
+                            panic!("session {sid} turn {turn} must complete: {e:?}")
+                        });
+                    assert_eq!(out.generated.len(), 4, "session {sid} turn {turn}");
+                    if turn == 0 {
+                        assert_eq!(
+                            out.generated, turn1,
+                            "session {sid}: fresh first turn diverged under churn"
+                        );
+                    }
+                    hist.extend_from_slice(&out.generated);
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("session thread panicked");
+    }
+
+    let stats = pool.stats();
+    let tier = stats.get("tier").expect("tier section in stats").clone();
+    let probes = (THREADS as usize) * TURNS;
+    let suspended = tier.req_usize("suspended").unwrap();
+    let resumed = tier.req_usize("resumed").unwrap();
+    let misses = tier.req_usize("misses").unwrap();
+    // Every keyed finish suspends; every keyed admission probes, and a
+    // probe is answered exactly once — resume or honest miss, never
+    // both, never silently neither.
+    assert!(suspended >= probes, "{suspended} suspends for {probes} keyed finishes");
+    assert_eq!(
+        resumed + misses,
+        probes,
+        "probe conservation violated: resumed={resumed} misses={misses}"
+    );
+    assert!(misses >= THREADS as usize, "first turns probe unknown keys");
+    // Four final sessions against a cap of 3 guarantee an LRU eviction,
+    // and two co-resident sessions (6 block-sets against a budget of 3)
+    // guarantee demotions to the spill file.
+    assert!(tier.req_usize("evicted").unwrap() >= 1, "session cap must evict");
+    assert!(tier.req_usize("spilled").unwrap() >= 3, "DRAM budget must demote");
+
+    let p2 = pool.clone();
+    must_finish_within("tier churn shutdown", WAIT, move || {
+        p2.shutdown().expect("clean join");
+    });
+    let inflight =
+        pool.stats().req_usize("inflight_tokens").expect("inflight_tokens in stats");
+    assert_eq!(inflight, 0, "tier churn leaked budget");
 }

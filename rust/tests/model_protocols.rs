@@ -33,6 +33,15 @@
 //!    replay through the respawned engine with their reservation kept;
 //!    the two seeded recovery bugs (answering a replayed request, and
 //!    releasing a replayed request's reservation) are both caught.
+//! 6. **Session-tier demotion vs. resume vs. cancel** (kvcache::tier):
+//!    the plan-under-lock / spill-without-lock / commit-under-fresh-lock
+//!    demotion protocol racing a resume that consumes the session (and a
+//!    client cancel) must, on every schedule, answer the resuming
+//!    request exactly once, never deallocate a block set the resumer
+//!    still holds, and never leak the orphaned spill record; the two
+//!    seeded bugs — a commit that skips the staleness check and frees
+//!    held blocks, and one that forgets to free the orphaned record —
+//!    are both caught.
 //!
 //! [`sched`]: scoutattention::util::sched
 
@@ -738,4 +747,221 @@ fn missing_sender_drop_is_reported_as_deadlock() {
     })]);
     let v = ex.explore(handoff_initial()).expect_err("must deadlock");
     assert!(v.message.contains("deadlock"), "{v}");
+}
+
+// ---------------------------------------------------------------------
+// Protocol 6: session-tier demotion vs. resume vs. cancel
+// (kvcache::tier).
+// ---------------------------------------------------------------------
+
+/// Where a suspended session's block set lives in the tier.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TierBlocks {
+    /// Resident in DRAM, held by the tier.
+    Hot,
+    /// Demotion committed: the DRAM hold was swapped for a spill record.
+    Cold,
+}
+
+/// Abstraction of `SessionTier`'s demotion discipline (plan under the
+/// registry lock, write the spill record with no guard in scope, commit
+/// under a fresh lock) racing a resume that consumes the session entry,
+/// while the client concurrently cancels. `seq_refs` models the block
+/// `Arc` clones a resuming sequence takes out of the registry; the real
+/// tier's commit re-checks under the fresh lock that the victim session
+/// is still present and otherwise only frees the now-orphaned record —
+/// never the blocks themselves, which the resumer may hold.
+#[derive(Clone)]
+struct TierRaceState {
+    /// Session entry present in the registry (consumed by the probe).
+    session: bool,
+    blocks: TierBlocks,
+    /// Demotion planned and its record written to the spill file.
+    spill_written: bool,
+    /// The spill record occupies a live slot in the file.
+    record_live: bool,
+    /// Block-set holds owned by the resuming sequence.
+    seq_refs: usize,
+    /// Client raised the shared cancel flag (the resume's terminal is
+    /// then `Cancelled` instead of `Done` — same accounting).
+    cancel: bool,
+    /// The resume probe ran (hit or honest miss).
+    probed: bool,
+    /// Terminal events emitted to the client (must end at exactly 1).
+    terminals: usize,
+    /// Budget releases (must end at exactly 1).
+    releases: usize,
+    /// A block set was deallocated while the resumer still held it.
+    freed_held: bool,
+    /// The probe paged in from a record that was already freed.
+    stale_page_in: bool,
+}
+
+fn tier_initial() -> TierRaceState {
+    TierRaceState {
+        session: true,
+        blocks: TierBlocks::Hot,
+        spill_written: false,
+        record_live: false,
+        seq_refs: 0,
+        cancel: false,
+        probed: false,
+        terminals: 0,
+        releases: 0,
+        freed_held: false,
+        stale_page_in: false,
+    }
+}
+
+/// Demotion plan + spill write: the victim is chosen under the registry
+/// lock (so a session already consumed is never planned), the record
+/// write happens with no guard in scope.
+fn tier_plan_and_spill(s: &mut TierRaceState) {
+    if s.session && s.blocks == TierBlocks::Hot && !s.spill_written {
+        s.spill_written = true;
+        s.record_live = true;
+    }
+}
+
+/// Resume probe under the registry lock: consumes the session entry and
+/// takes the blocks — hot Arcs are cloned, cold records paged in (which
+/// frees the record's slot).
+fn tier_probe(s: &mut TierRaceState) {
+    if s.session {
+        s.session = false;
+        match s.blocks {
+            TierBlocks::Hot => s.seq_refs = 1,
+            TierBlocks::Cold => {
+                if s.record_live {
+                    s.record_live = false;
+                    s.seq_refs = 1;
+                } else {
+                    s.stale_page_in = true;
+                }
+            }
+        }
+    }
+    s.probed = true;
+}
+
+/// The resuming request's terminal: `Cancelled` or `Done` depending on
+/// the flag, but exactly one event and one release either way; the
+/// sequence's block holds drop with it.
+fn tier_finish(s: &mut TierRaceState) {
+    if s.probed {
+        s.terminals += 1;
+        s.releases += 1;
+        s.seq_refs = 0;
+    }
+}
+
+fn tier_invariants(ex: &mut Explorer<TierRaceState>) {
+    ex.invariant(|s| {
+        if s.freed_held {
+            return Err("freed a block set the resuming sequence still holds".into());
+        }
+        if s.stale_page_in {
+            return Err("paged in from a spill record that was already freed".into());
+        }
+        if s.terminals > 1 {
+            return Err("client answered twice".into());
+        }
+        if s.releases > 1 {
+            return Err("budget reservation released twice".into());
+        }
+        Ok(())
+    });
+    ex.final_check(|s| {
+        if !s.probed || s.terminals != 1 || s.releases != 1 {
+            return Err(format!(
+                "resume ended with terminals {} releases {}",
+                s.terminals, s.releases
+            ));
+        }
+        if s.record_live {
+            return Err("orphaned spill record leaked".into());
+        }
+        Ok(())
+    });
+}
+
+/// The real protocol: the commit re-checks under a fresh lock whether
+/// the victim session is still registered — swapping its hot blocks for
+/// the record if so, and otherwise freeing only the orphaned record
+/// (the resumer that consumed the session owns the blocks now). On
+/// every interleaving with a cancelling client, the resume gets exactly
+/// one terminal, no held block set is freed, and no record leaks.
+#[test]
+fn tier_demotion_racing_resume_and_cancel_holds_under_all_schedules() {
+    let mut ex: Explorer<TierRaceState> = Explorer::new();
+    // Client thread: raise the shared cancel flag (at any point).
+    ex.thread(vec![run(|s: &mut TierRaceState| s.cancel = true)]);
+    // Demotion thread (DRAM-budget sweep): plan + write, then commit.
+    ex.thread(vec![
+        run(tier_plan_and_spill),
+        run(|s: &mut TierRaceState| {
+            if s.spill_written && s.record_live {
+                if s.session {
+                    s.blocks = TierBlocks::Cold; // swap hold for record
+                } else {
+                    s.record_live = false; // orphan: resume won the race
+                }
+            }
+        }),
+    ]);
+    // Resume thread: probe (consume + take blocks), then terminal.
+    ex.thread(vec![run(tier_probe), run(tier_finish)]);
+    tier_invariants(&mut ex);
+    let stats = ex.explore(tier_initial()).expect("demotion protocol holds");
+    // 1-, 2- and 2-step threads: 5!/(1!·2!·2!) = 30 interleavings.
+    assert_eq!(stats.schedules, 30);
+}
+
+/// Seeded bug: the commit skips the staleness re-check and demotes
+/// unconditionally — deallocating the DRAM block set even on the
+/// schedule where the resume consumed the session (and cloned its hot
+/// Arcs) between the plan and the commit. Caught as a free of held
+/// blocks.
+#[test]
+fn tier_commit_without_staleness_check_frees_held_blocks() {
+    let mut ex: Explorer<TierRaceState> = Explorer::new();
+    ex.thread(vec![run(|s: &mut TierRaceState| s.cancel = true)]);
+    ex.thread(vec![
+        run(tier_plan_and_spill),
+        run(|s: &mut TierRaceState| {
+            if s.spill_written && s.record_live {
+                // BUG: no staleness check — drop the DRAM copy outright.
+                if s.seq_refs > 0 {
+                    s.freed_held = true;
+                }
+                s.blocks = TierBlocks::Cold;
+            }
+        }),
+    ]);
+    ex.thread(vec![run(tier_probe), run(tier_finish)]);
+    tier_invariants(&mut ex);
+    let v = ex.explore(tier_initial()).expect_err("unguarded commit must be caught");
+    assert!(v.message.contains("still holds"), "{v}");
+}
+
+/// Seeded bug: the commit notices the session is gone but forgets to
+/// free the now-orphaned spill record — a slow leak of spill-file slots
+/// under demotion/resume races. Caught by the final leak check.
+#[test]
+fn tier_commit_leaking_the_orphaned_record_is_caught() {
+    let mut ex: Explorer<TierRaceState> = Explorer::new();
+    ex.thread(vec![run(|s: &mut TierRaceState| s.cancel = true)]);
+    ex.thread(vec![
+        run(tier_plan_and_spill),
+        run(|s: &mut TierRaceState| {
+            if s.spill_written && s.record_live && s.session {
+                s.blocks = TierBlocks::Cold;
+            }
+            // BUG: the !session arm (free the orphan) is missing.
+        }),
+    ]);
+    ex.thread(vec![run(tier_probe), run(tier_finish)]);
+    tier_invariants(&mut ex);
+    let v = ex.explore(tier_initial()).expect_err("record leak must be caught");
+    assert!(v.message.contains("leaked"), "{v}");
 }

@@ -1,0 +1,254 @@
+//! Tiered KV store integration suite: session suspend/resume through
+//! the serving plane.
+//!
+//! Pins the tier's end-to-end contracts:
+//!
+//! 1. **Exact resume is byte-identical to a continuous session**: a
+//!    request suspended under a `session_id` and resumed by a follow-up
+//!    whose prompt equals the stored history (prompt ++ generated)
+//!    produces exactly the tokens the uninterrupted run would have —
+//!    the suspended scheduler state (resident sets, selections, recall
+//!    countdowns, last token) is restored, not recomputed.
+//! 2. **Divergence rewinds to a fresh prefill**: a follow-up sharing
+//!    only a prefix reuses the token-pure blocks and re-embeds the new
+//!    prompt verbatim — byte-identical to prefilling it from scratch.
+//! 3. **The default is byte-for-byte off**: with `tier_dram_blocks = 0`
+//!    a `session_id` is accepted and ignored, and `{"stats":true}`
+//!    reports `tier: null`.
+//! 4. **Spill → page-in roundtrips**: sessions demoted to the spill
+//!    file under DRAM pressure page back in bitwise (same tokens as
+//!    the continuous run) and the stats counters record the traffic.
+
+mod common;
+
+use scoutattention::config::RunConfig;
+use scoutattention::serve::{EnginePool, Submission};
+use scoutattention::util::Json;
+
+/// Deterministic prompt in test-tiny vocab (256), avoiding pad token 0.
+fn prompt(len: usize, salt: u32) -> Vec<u32> {
+    (0..len as u32).map(|i| 1 + (i * 29 + salt * 11) % 255).collect()
+}
+
+/// One-replica pool config with the session tier enabled.
+fn tier_cfg(dram_blocks: usize) -> RunConfig {
+    let mut cfg = RunConfig::for_preset(common::PRESET);
+    cfg.server.replicas = 1;
+    cfg.scout.tier_dram_blocks = dram_blocks;
+    cfg
+}
+
+fn tier_stats(pool: &EnginePool) -> Json {
+    pool.stats().get("tier").expect("tier section in stats").clone()
+}
+
+#[test]
+fn exact_resume_is_byte_identical_to_continuous_session() {
+    let pool = EnginePool::start(tier_cfg(64)).expect("pool start");
+    let p = prompt(32, 1);
+
+    // Continuous reference on the same pool: one uninterrupted request
+    // (no session key) generating the full 16 tokens.
+    let cont = pool.submit(Submission::new(p.clone(), 16)).wait().unwrap().generated;
+    assert_eq!(cont.len(), 16);
+
+    // Turn 1: first half of the session, suspended at completion.
+    let first = pool
+        .submit(Submission::new(p.clone(), 8).with_session_id("conv"))
+        .wait()
+        .unwrap()
+        .generated;
+    assert_eq!(first, cont[..8], "turn 1 must match the continuous prefix");
+    assert!(
+        pool.session_tier().expect("tier enabled").sessions() >= 1,
+        "finished session must be suspended, not dropped"
+    );
+
+    // Turn 2: prompt == stored history -> exact-match decode resume.
+    // The generated tokens must be the continuous run's second half.
+    let mut hist = p.clone();
+    hist.extend_from_slice(&first);
+    let second = pool
+        .submit(Submission::new(hist, 8).with_session_id("conv"))
+        .wait()
+        .unwrap()
+        .generated;
+    assert_eq!(second, cont[8..], "resumed decode diverged from the continuous session");
+
+    let t = tier_stats(&pool);
+    assert!(t.req_usize("suspended").unwrap() >= 2, "both turns suspend");
+    assert_eq!(t.req_usize("resumed").unwrap(), 1, "turn 2 resumed");
+    // Turn 1 probed an unknown session key: an honest miss, not an error.
+    assert!(t.req_usize("misses").unwrap() >= 1);
+    pool.shutdown().expect("shutdown");
+}
+
+#[test]
+fn divergent_followup_matches_fresh_prefill_bytes() {
+    let pool = EnginePool::start(tier_cfg(64)).expect("pool start");
+
+    // Establish a session over a 48-token prompt (3 full blocks).
+    let p1 = prompt(48, 3);
+    let _ = pool
+        .submit(Submission::new(p1.clone(), 6).with_session_id("edit"))
+        .wait()
+        .unwrap();
+
+    // Follow-up shares the first 32 tokens then diverges (the client
+    // edited its prompt): the tier rewinds to the shared block-aligned
+    // token-pure prefix and the rest re-prefills with the new tokens.
+    let mut p2 = p1[..32].to_vec();
+    p2.extend(prompt(16, 99)); // different tail, same total length
+    assert_ne!(p1, p2);
+    let resumed = pool
+        .submit(Submission::new(p2.clone(), 6).with_session_id("edit"))
+        .wait()
+        .unwrap()
+        .generated;
+
+    // Reference: the same prompt prefilled from scratch (no session).
+    let fresh = pool.submit(Submission::new(p2, 6)).wait().unwrap().generated;
+    assert_eq!(resumed, fresh, "divergence rewind must be invisible in the output");
+    assert!(tier_stats(&pool).req_usize("resumed").unwrap() >= 1, "the rewind is a resume");
+    pool.shutdown().expect("shutdown");
+}
+
+#[test]
+fn extension_followup_resumes_and_is_deterministic() {
+    // Two independent pools run the identical two-turn conversation with
+    // extra user tokens appended in turn 2 (a forced-decode extension
+    // resume); the byte streams must match across pools, and the tier
+    // must actually resume rather than re-prefill.
+    let run = || {
+        let pool = EnginePool::start(tier_cfg(64)).expect("pool start");
+        let p = prompt(32, 5);
+        let first = pool
+            .submit(Submission::new(p.clone(), 6).with_session_id("chat"))
+            .wait()
+            .unwrap()
+            .generated;
+        let mut turn2 = p;
+        turn2.extend_from_slice(&first);
+        turn2.extend(prompt(8, 77)); // the user's next message
+        let second = pool
+            .submit(Submission::new(turn2, 6).with_session_id("chat"))
+            .wait()
+            .unwrap()
+            .generated;
+        let t = tier_stats(&pool);
+        assert_eq!(t.req_usize("resumed").unwrap(), 1, "turn 2 must resume the session");
+        pool.shutdown().expect("shutdown");
+        (first, second)
+    };
+    let (a1, a2) = run();
+    let (b1, b2) = run();
+    assert_eq!(a1, b1);
+    assert_eq!(a2, b2, "extension resume must be deterministic");
+    assert_eq!(a2.len(), 6);
+}
+
+#[test]
+fn disabled_tier_ignores_session_id_byte_for_byte() {
+    // Default config: tier_dram_blocks = 0. The session key must change
+    // nothing — not the bytes, not the stats shape.
+    let mut cfg = RunConfig::for_preset(common::PRESET);
+    cfg.server.replicas = 1;
+    assert_eq!(cfg.scout.tier_dram_blocks, 0, "tier must default off");
+    let pool = EnginePool::start(cfg).expect("pool start");
+    let p = prompt(24, 2);
+
+    let keyless = pool.submit(Submission::new(p.clone(), 6)).wait().unwrap().generated;
+    let keyed = pool
+        .submit(Submission::new(p.clone(), 6).with_session_id("ignored"))
+        .wait()
+        .unwrap()
+        .generated;
+    assert_eq!(keyed, keyless, "session_id must be inert when the tier is off");
+    assert!(pool.session_tier().is_none());
+
+    // A same-key follow-up finds nothing to resume and prefills fresh —
+    // same bytes as a keyless run of the full history.
+    let mut hist = p;
+    hist.extend_from_slice(&keyed);
+    let follow = pool
+        .submit(Submission::new(hist.clone(), 4).with_session_id("ignored"))
+        .wait()
+        .unwrap()
+        .generated;
+    let fresh = pool.submit(Submission::new(hist, 4)).wait().unwrap().generated;
+    assert_eq!(follow, fresh);
+
+    assert!(
+        matches!(pool.stats().get("tier"), Some(Json::Null)),
+        "disabled tier reports null, not zeros"
+    );
+    pool.shutdown().expect("shutdown");
+}
+
+#[test]
+fn spilled_session_pages_back_in_bitwise() {
+    // DRAM budget of 3 block-sets: one 32-token + 6-step session needs 3
+    // (38 rows / 16), so suspending a second session forces the first
+    // one's blocks out to the spill file. Resuming it then pages every
+    // block back in — and the generated bytes must still equal the
+    // continuous run's.
+    let pool = EnginePool::start(tier_cfg(3)).expect("pool start");
+    let pa = prompt(32, 11);
+    let pb = prompt(32, 22);
+
+    let cont = pool.submit(Submission::new(pa.clone(), 12)).wait().unwrap().generated;
+
+    let first = pool
+        .submit(Submission::new(pa.clone(), 6).with_session_id("a"))
+        .wait()
+        .unwrap()
+        .generated;
+    assert_eq!(first, cont[..6]);
+    let _ = pool
+        .submit(Submission::new(pb, 6).with_session_id("b"))
+        .wait()
+        .unwrap();
+    let t = tier_stats(&pool);
+    assert!(t.req_usize("spilled").unwrap() >= 3, "suspending b must demote a's blocks");
+    assert!(t.req_usize("spill_file_bytes").unwrap() > 0);
+
+    let mut hist = pa;
+    hist.extend_from_slice(&first);
+    let second = pool
+        .submit(Submission::new(hist, 6).with_session_id("a"))
+        .wait()
+        .unwrap()
+        .generated;
+    assert_eq!(second, cont[6..], "paged-in KV diverged from the continuous session");
+
+    let t = tier_stats(&pool);
+    assert!(t.req_usize("paged_in").unwrap() >= 3, "a's cold blocks paged back in");
+    assert!(
+        t.get("page_in_us").unwrap().req_usize("count").unwrap() >= 3,
+        "page-in latency recorded"
+    );
+    pool.shutdown().expect("shutdown");
+}
+
+#[test]
+fn session_count_cap_evicts_lru_and_empty_key_is_rejected() {
+    let mut cfg = tier_cfg(64);
+    cfg.scout.tier_sessions = 2;
+    let pool = EnginePool::start(cfg).expect("pool start");
+
+    for (i, sid) in ["s0", "s1", "s2"].iter().enumerate() {
+        let _ = pool
+            .submit(Submission::new(prompt(16, i as u32), 4).with_session_id(*sid))
+            .wait()
+            .unwrap();
+    }
+    let t = tier_stats(&pool);
+    assert_eq!(t.req_usize("sessions").unwrap(), 2, "cap holds");
+    assert!(t.req_usize("evicted").unwrap() >= 1, "LRU session evicted at the cap");
+
+    // Wire validation: an empty session key is a client error, answered
+    // as a structured rejection before any placement.
+    let h = pool.submit(Submission::new(prompt(8, 9), 2).with_session_id(""));
+    assert!(h.wait().is_err(), "empty session_id must be rejected");
+    pool.shutdown().expect("shutdown");
+}

@@ -17,7 +17,7 @@ import sys
 ORDERING_VARIANTS = {"Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"}
 BLOCKING_CALLS = [
     ".send(", ".try_send(", ".execute(", "export_seq(", "import_seq(",
-    ".probe(", ".publish(",
+    ".probe(", ".publish(", ".spill(", ".page_in(",
 ]
 GUARD_CALLS = [".lock()", ".read()", ".write()", ".layer("]
 POISON_IDIOMS = (".lock()", ".read()", ".write()", ".into_inner()")
@@ -481,6 +481,12 @@ FIXTURES = [
      "pub fn f(store: &crate::kvcache::ShardedKvCache, pool: &crate::kvcache::PrefixPool) {\n    let view = store.layer(0);\n    pool.publish(7, Vec::new());\n}\n", ["lock-across"]),
     ("scoped_guard_before_pool_probe_passes", "rust/src/kvcache/x.rs",
      "pub fn f(store: &crate::kvcache::ShardedKvCache, pool: &crate::kvcache::PrefixPool) {\n    {\n        let view = store.layer(0);\n        let _ = view;\n    }\n    pool.probe(7);\n}\n", []),
+    ("registry_guard_across_spill_fails", "rust/src/kvcache/x.rs",
+     "pub fn f(m: &std::sync::Mutex<u32>, file: &crate::kvcache::SpillFile) {\n    let g = m.lock().unwrap();\n    let _ = file.spill(&[]);\n    let _ = g;\n}\n", ["lock-across"]),
+    ("guard_dropped_before_page_in_passes", "rust/src/kvcache/x.rs",
+     "pub fn f(m: &std::sync::Mutex<u64>, file: &crate::kvcache::SpillFile) {\n    let g = m.lock().unwrap();\n    let id = *g;\n    drop(g);\n    let _ = file.page_in(id);\n}\n", []),
+    ("annotated_guard_across_page_in_passes", "rust/src/kvcache/x.rs",
+     "pub fn f(m: &std::sync::Mutex<u64>, file: &crate::kvcache::SpillFile) {\n    let g = m.lock().unwrap();\n    // audit: allow(lock_across): single-threaded recovery path\n    let _ = file.page_in(*g);\n}\n", []),
     ("scrutinee_temporary_not_tracked", "rust/src/coordinator/x.rs",
      "pub fn f(rx: &std::sync::Mutex<std::sync::mpsc::Receiver<u32>>, tx: &std::sync::mpsc::Sender<u32>) {\n    let job = match rx.lock().unwrap().recv() { Ok(j) => j, Err(_) => return };\n    tx.send(job).ok();\n}\n", []),
     ("lock_across_outside_guarded_dirs_ignored", "rust/src/runtime/x.rs",

@@ -14,10 +14,14 @@
 //! 3. **lock-across** — in `coordinator/`, `kvcache/`, and `serve/`, no
 //!    *named* lock/view guard (`let g = ….lock()/.read()/.write()/
 //!    .layer(…)`) is live across a blocking boundary: channel `.send(` /
-//!    `.try_send(`, `Backend::execute`, `export_seq`/`import_seq`, or
+//!    `.try_send(`, `Backend::execute`, `export_seq`/`import_seq`,
 //!    the prefix-pool's `.probe(`/`.publish(` (both take the pool mutex;
 //!    entering them with a shard guard held inverts the lock order
-//!    against the publish path, which takes shard locks to seal blocks).
+//!    against the publish path, which takes shard locks to seal blocks),
+//!    or the session tier's spill-file `.spill(`/`.page_in(` (blocking
+//!    file I/O — the tier plans demotions under its registry lock and
+//!    executes them guard-free; holding any lock across them stalls
+//!    every replica behind disk latency).
 //!    Guards die at `drop(g)`, at rebinding, or when their brace block
 //!    closes. Escape hatch: `// audit: allow(lock_across): reason`.
 //! 4. **unwrap-hot** — no `.unwrap()` / `.expect(` in non-test hot-path
@@ -57,8 +61,17 @@ impl std::fmt::Display for Violation {
 }
 
 const ORDERING_VARIANTS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
-const BLOCKING_CALLS: [&str; 7] =
-    [".send(", ".try_send(", ".execute(", "export_seq(", "import_seq(", ".probe(", ".publish("];
+const BLOCKING_CALLS: [&str; 9] = [
+    ".send(",
+    ".try_send(",
+    ".execute(",
+    "export_seq(",
+    "import_seq(",
+    ".probe(",
+    ".publish(",
+    ".spill(",
+    ".page_in(",
+];
 const GUARD_CALLS: [&str; 4] = [".lock()", ".read()", ".write()", ".layer("];
 const POISON_IDIOMS: [&str; 4] = [".lock()", ".read()", ".write()", ".into_inner()"];
 

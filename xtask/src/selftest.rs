@@ -110,6 +110,24 @@ const FIXTURES: &[Fixture] = &[
         expect: &[],
     },
     Fixture {
+        name: "registry_guard_across_spill_fails",
+        path: "rust/src/kvcache/x.rs",
+        source: "pub fn f(m: &std::sync::Mutex<u32>, file: &crate::kvcache::SpillFile) {\n    let g = m.lock().unwrap();\n    let _ = file.spill(&[]);\n    let _ = g;\n}\n",
+        expect: &["lock-across"],
+    },
+    Fixture {
+        name: "guard_dropped_before_page_in_passes",
+        path: "rust/src/kvcache/x.rs",
+        source: "pub fn f(m: &std::sync::Mutex<u64>, file: &crate::kvcache::SpillFile) {\n    let g = m.lock().unwrap();\n    let id = *g;\n    drop(g);\n    let _ = file.page_in(id);\n}\n",
+        expect: &[],
+    },
+    Fixture {
+        name: "annotated_guard_across_page_in_passes",
+        path: "rust/src/kvcache/x.rs",
+        source: "pub fn f(m: &std::sync::Mutex<u64>, file: &crate::kvcache::SpillFile) {\n    let g = m.lock().unwrap();\n    // audit: allow(lock_across): single-threaded recovery path\n    let _ = file.page_in(*g);\n}\n",
+        expect: &[],
+    },
+    Fixture {
         name: "scrutinee_temporary_not_tracked",
         path: "rust/src/coordinator/x.rs",
         source: "pub fn f(rx: &std::sync::Mutex<std::sync::mpsc::Receiver<u32>>, tx: &std::sync::mpsc::Sender<u32>) {\n    let job = match rx.lock().unwrap().recv() { Ok(j) => j, Err(_) => return };\n    tx.send(job).ok();\n}\n",
