@@ -10,7 +10,7 @@
 PRESETS ?= test-tiny
 ARTIFACTS_DIR := artifacts
 
-.PHONY: all build test chaos bench bench-smoke bench-baseline bench-serve bench-prefill bench-prefix bench-tier audit clippy fmt artifacts clean
+.PHONY: all build test chaos bench bench-smoke bench-baseline bench-serve bench-prefill bench-prefix bench-tier bench-headwise audit clippy fmt artifacts clean
 
 all: build
 
@@ -73,6 +73,14 @@ bench-prefix: build
 # re-prefill TTFT at every history length.
 bench-tier: build
 	cargo bench --bench tier_resume
+
+# Head-wise offload granularity: steady-state staged-recall bytes/step
+# and decode tok/s at head_groups in {1, 4, n_kv_heads} (test-tiny),
+# written to BENCH_headwise.json. Full runs assert strictly lower recall
+# bytes/step at head_groups = n_kv_heads vs 1 with token agreement
+# within 2.4% of the per-layer arm.
+bench-headwise: build
+	cargo bench --bench headwise_offload
 
 # Concurrency-invariant lint: SAFETY comments on every unsafe, ordering
 # justifications on every explicit Ordering, no lock guards held across

@@ -110,6 +110,7 @@ impl DecodeScheduler for FullKvScheduler {
                 pin_sink: true,
                 pin_recent: 1,
                 recall_countdowns: vec![usize::MAX; self.gpu.spec.n_layers],
+                head_groups: 1,
             },
         )
     }

@@ -52,6 +52,7 @@ impl HgcaScheduler {
             self.window_blocks,
             vec![usize::MAX; spec.n_layers],
             self.prefill_chunk,
+            1,
         )
     }
 
@@ -158,6 +159,7 @@ impl DecodeScheduler for HgcaScheduler {
                 pin_sink: true,
                 pin_recent: self.window_blocks,
                 recall_countdowns: vec![usize::MAX; self.gpu.spec.n_layers],
+                head_groups: 1,
             },
         )
     }

@@ -51,6 +51,7 @@ impl InfinigenScheduler {
             self.pin_recent,
             vec![usize::MAX; spec.n_layers], // no periodic recall
             self.prefill_chunk,
+            1,
         )
     }
 
@@ -83,7 +84,7 @@ impl InfinigenScheduler {
             stats.layers[layer].gpu_blocks += sel.blocks.len();
             stats.layers[layer].selected_blocks += sel.blocks.len();
             seq.resident[layer].refresh(&sel.blocks);
-            seq.selected[layer] = sel.blocks;
+            seq.selected[layer] = vec![sel.blocks];
             seq.scores_mut(layer).clone_from(&scores);
         }
     }
@@ -114,7 +115,7 @@ impl InfinigenScheduler {
             }
             let (q, k_new, v_new) = self.gpu.pre_attn(&x, i, &pos)?;
             let (ks, vs, ms) =
-                gather::gather_block_lists(&self.gpu, seqs, i, |_, seq| seq.selected[i].clone());
+                gather::gather_block_lists(&self.gpu, seqs, i, |_, seq| seq.selected[i].concat());
             let p_gpu = self.gpu.sparse_attn(&q, &ks, &vs, &ms)?;
             let (kt, vt, mt) = gather::gather_tail(&self.gpu, seqs, i, &k_new, &v_new);
             let p_tail = self.gpu.tail_attn(&q, &kt, &vt, &mt)?;
@@ -158,6 +159,7 @@ impl DecodeScheduler for InfinigenScheduler {
                 pin_sink: self.pin_sink,
                 pin_recent: self.pin_recent,
                 recall_countdowns: vec![usize::MAX; self.gpu.spec.n_layers],
+                head_groups: 1,
             },
         )
     }

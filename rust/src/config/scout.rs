@@ -103,6 +103,20 @@ pub struct ScoutConfig {
     /// Spill file path for the cold tier. Empty (default) = a
     /// per-process file under the OS temp directory, deleted on drop.
     pub tier_spill_path: String,
+    /// Head-group granularity of the offload machinery (HeadInfer-style).
+    /// The KV heads are split into this many contiguous groups; digest
+    /// scoring, the resident budget, top-k selection, staged recall, and
+    /// the CPU partials all run per group, with a heavy-hitter classifier
+    /// pinning attention-dense groups fully resident and donating their
+    /// budget to sparse groups. Must divide the model's KV head count.
+    /// `1` (default) collapses to the per-layer machinery byte-for-byte.
+    pub head_groups: usize,
+    /// Heavy-hitter threshold: a head group whose running top-k digest
+    /// attention-mass estimate (EMA) falls below this fraction is
+    /// classified *dense* (attention spread over many blocks — the
+    /// sparse budget would miss too much) and pinned fully resident.
+    /// Only meaningful with `head_groups > 1`.
+    pub head_dense_mass: f64,
     /// Deterministic fault-injection spec armed when the EnginePool
     /// starts (see `util::faults` for the grammar, e.g.
     /// `replica.panic=once@2,handoff.send=err@nth:3`). Empty (default)
@@ -129,6 +143,8 @@ impl Default for ScoutConfig {
             tier_sessions: 64,
             tier_session_ttl_ms: 600_000,
             tier_spill_path: String::new(),
+            head_groups: 1,
+            head_dense_mass: 0.5,
             faults: String::new(),
         }
     }
@@ -180,6 +196,12 @@ impl ScoutConfig {
             c.tier_spill_path =
                 v.as_str().map(str::to_string).unwrap_or_else(|| c.tier_spill_path.clone());
         }
+        if let Some(v) = j.get("head_groups") {
+            c.head_groups = v.as_usize().unwrap_or(c.head_groups).max(1);
+        }
+        if let Some(v) = j.get("head_dense_mass") {
+            c.head_dense_mass = v.as_f64().unwrap_or(c.head_dense_mass);
+        }
         if let Some(v) = j.get("faults") {
             c.faults = v.as_str().map(str::to_string).unwrap_or_else(|| c.faults.clone());
         }
@@ -211,6 +233,8 @@ impl ScoutConfig {
             ("tier_sessions", Json::num(self.tier_sessions as f64)),
             ("tier_session_ttl_ms", Json::num(self.tier_session_ttl_ms as f64)),
             ("tier_spill_path", Json::str(self.tier_spill_path.clone())),
+            ("head_groups", Json::num(self.head_groups as f64)),
+            ("head_dense_mass", Json::num(self.head_dense_mass)),
             ("faults", Json::str(self.faults.clone())),
         ])
     }
@@ -291,6 +315,25 @@ mod tests {
         assert_eq!(back.tier_sessions, 8);
         assert_eq!(back.tier_session_ttl_ms, 1000);
         assert_eq!(back.tier_spill_path, "/tmp/x.spill");
+    }
+
+    #[test]
+    fn head_groups_default_one_and_roundtrip() {
+        let d = ScoutConfig::default();
+        assert_eq!(d.head_groups, 1, "head-wise offload is opt-in");
+        assert!((d.head_dense_mass - 0.5).abs() < 1e-12);
+        let c = ScoutConfig::from_json(
+            &Json::parse("{\"head_groups\":4,\"head_dense_mass\":0.6}").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.head_groups, 4);
+        assert!((c.head_dense_mass - 0.6).abs() < 1e-12);
+        let back = ScoutConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.head_groups, 4);
+        assert!((back.head_dense_mass - 0.6).abs() < 1e-12);
+        // 0 is clamped to 1 rather than dividing by zero downstream.
+        let z = ScoutConfig::from_json(&Json::parse("{\"head_groups\":0}").unwrap()).unwrap();
+        assert_eq!(z.head_groups, 1);
     }
 
     #[test]

@@ -44,12 +44,13 @@ pub fn prefill_request(
     pin_recent: usize,
     recall_countdowns: Vec<usize>,
     chunk_tokens: usize,
+    head_groups: usize,
 ) -> crate::Result<()> {
     let mut st = PrefillState::begin(&gpu.spec, req, batch.budget_blocks, chunk_tokens)?;
     while !st.advance(gpu)? {}
     let seq = st.finish(
         native,
-        PrefillParams { pin_sink, pin_recent, recall_countdowns },
+        PrefillParams { pin_sink, pin_recent, recall_countdowns, head_groups },
     )?;
     batch.activate(seq)
 }

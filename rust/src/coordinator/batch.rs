@@ -20,9 +20,12 @@ pub struct SeqState {
     /// GPU resident set per layer (established after prefill, refreshed
     /// by periodic recall only).
     pub resident: Vec<ResidentSet>,
-    /// Selected top-k per layer for the CURRENT step (filled one layer
-    /// ahead by the scout pipeline; consumed by GPU attention).
-    pub selected: Vec<Vec<usize>>,
+    /// Selected top-k per layer and head group for the CURRENT step
+    /// (filled one layer ahead by the scout pipeline; consumed by GPU
+    /// attention). `selected[layer][g]` is group `g`'s block list; at
+    /// `head_groups = 1` the inner vec has exactly one entry and the
+    /// contents are identical to the old per-layer list.
+    pub selected: Vec<Vec<Vec<usize>>>,
     /// Latest digest scores per layer (for recall re-ranking; refreshed
     /// at every selection).
     scores: Vec<Vec<f32>>,
@@ -42,7 +45,7 @@ impl SeqState {
             id: req.id,
             cache: Arc::new(ShardedKvCache::new(spec)),
             resident: (0..spec.n_layers).map(|_| ResidentSet::new(nb, budget_blocks)).collect(),
-            selected: vec![Vec::new(); spec.n_layers],
+            selected: vec![vec![Vec::new()]; spec.n_layers],
             scores: vec![Vec::new(); spec.n_layers],
             recall_in: vec![usize::MAX; spec.n_layers],
             last_tok: *req.prompt.last().unwrap_or(&0),
@@ -69,6 +72,33 @@ impl SeqState {
 
     pub fn scores_mut(&mut self, layer: usize) -> &mut Vec<f32> {
         &mut self.scores[layer]
+    }
+
+    /// Re-shape the per-layer scheduler state to `n_groups` head groups.
+    /// Fresh sequences are built single-group ([`Self::new`]); a grouped
+    /// scheduler calls this once at prefill finish, before the first
+    /// selection. The per-group resident budget is the existing
+    /// single-group budget, so the total byte budget scales as
+    /// `n_groups * budget` group-block units = the same block-bytes as
+    /// today (a group-block holds `1/n_groups` of a block's rows).
+    /// No-op when the shapes already match — resuming a suspended
+    /// grouped sequence must not wipe its restored state.
+    pub fn regroup(&mut self, n_groups: usize) {
+        let g = n_groups.max(1);
+        if self.resident.first().map_or(true, |r| r.n_groups() == g) {
+            return;
+        }
+        let nb = self.cache.spec().n_blocks();
+        let budget = self.resident[0].capacity_group(0);
+        for r in &mut self.resident {
+            *r = ResidentSet::new_grouped(nb, g, budget);
+        }
+        for sel in &mut self.selected {
+            *sel = vec![Vec::new(); g];
+        }
+        for sc in &mut self.scores {
+            sc.clear();
+        }
     }
 
     pub fn finish(&self) -> RequestOutput {
@@ -189,6 +219,14 @@ impl SeqState {
                     && meta.recall_in.len() == spec.n_layers,
                 "tier resume: suspended scheduler state has the wrong layer count"
             );
+            for (l, r) in meta.resident.iter().enumerate() {
+                anyhow::ensure!(
+                    meta.selected[l].len() == r.n_groups(),
+                    "tier resume: layer {l} has {} selection groups for {} resident groups",
+                    meta.selected[l].len(),
+                    r.n_groups()
+                );
+            }
             seq.resident = meta.resident;
             seq.selected = meta.selected;
             seq.scores = meta.scores;
@@ -205,7 +243,7 @@ pub struct SeqHandoff {
     pub id: u64,
     pub export: KvSeqExport,
     pub resident: Vec<ResidentSet>,
-    pub selected: Vec<Vec<usize>>,
+    pub selected: Vec<Vec<Vec<usize>>>,
     pub scores: Vec<Vec<f32>>,
     pub recall_in: Vec<usize>,
     pub last_tok: u32,
@@ -334,6 +372,24 @@ mod tests {
         let err = b.activate(SeqState::new(&b.spec.clone(), &r1, 4)).unwrap_err();
         assert!(err.to_string().contains("batch full"), "{err}");
         assert_eq!(b.live(), 1);
+    }
+
+    #[test]
+    fn regroup_reshapes_state_and_scales_budget_units() {
+        let spec = spec();
+        let r = RequestSpec::new(7, vec![1, 2], 4);
+        let mut s = SeqState::new(&spec, &r, 3);
+        let units: usize = s.resident.iter().map(|r| r.capacity()).sum();
+        s.regroup(4);
+        assert!(s.resident.iter().all(|r| r.n_groups() == 4));
+        assert!(s.selected.iter().all(|sel| sel.len() == 4));
+        // 4 groups x the old per-group budget, now in quarter-block
+        // units — the same block-bytes as before.
+        assert_eq!(s.resident.iter().map(|r| r.capacity()).sum::<usize>(), 4 * units);
+        // A second call with matching shape is a no-op, not a wipe.
+        s.selected[0][2] = vec![1];
+        s.regroup(4);
+        assert_eq!(s.selected[0][2], vec![1]);
     }
 
     #[test]

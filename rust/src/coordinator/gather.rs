@@ -58,14 +58,17 @@ pub fn gather_block_lists_into(
 }
 
 /// [`gather_block_lists_into`] specialized to each sequence's own
-/// `selected[layer]` list, read in place — the Scout hot path, with no
-/// per-sequence `Vec` clone (the closure-based variant exists for
-/// schedulers whose block lists live outside `SeqState`, e.g. HGCA's
-/// windows).
+/// `selected[layer][group]` list, read in place — the Scout hot path,
+/// with no per-sequence `Vec` clone (the closure-based variant exists
+/// for schedulers whose block lists live outside `SeqState`, e.g. HGCA's
+/// windows). The operand row count is derived from the buffer (the
+/// variable-tile decode path sizes it to the live chunk, not
+/// `spec.batch`); rows past `seqs.len()` stay fully masked.
 pub fn gather_selected_into(
     gpu: &GpuEngine,
     seqs: &[SeqState],
     layer: usize,
+    group: usize,
     k: &mut Tensor,
     v: &mut Tensor,
     m: &mut Tensor,
@@ -74,8 +77,9 @@ pub fn gather_selected_into(
     let (kb, bs) = (spec.k_blocks, spec.block_size);
     let w = spec.n_kv_heads * spec.head_dim;
     let blk_w = bs * w;
-    debug_assert_eq!(k.len(), spec.batch * kb * blk_w);
-    debug_assert_eq!(m.len(), spec.batch * kb * bs);
+    debug_assert_eq!(k.len() % (kb * blk_w), 0);
+    debug_assert_eq!(m.len() / (kb * bs), k.len() / (kb * blk_w));
+    debug_assert!(seqs.len() <= k.len() / (kb * blk_w));
     m.data_mut().fill(0.0);
     {
         let rows: Vec<_> = k
@@ -87,7 +91,7 @@ pub fn gather_selected_into(
             .map(|(((kr, vr), mr), seq)| (kr, vr, mr, seq))
             .collect();
         par::par_for_each(rows, par::default_threads(), |_, (kr, vr, mr, seq)| {
-            let blocks = &seq.selected[layer];
+            let blocks = &seq.selected[layer][group];
             seq.cache.layer(layer).gather_blocks(blocks, kb, kr, vr, mr);
         });
     }
@@ -125,8 +129,9 @@ pub fn gather_tail_into(
     let spec = &gpu.spec;
     let bs = spec.block_size;
     let w = spec.n_kv_heads * spec.head_dim;
-    debug_assert_eq!(k.len(), spec.batch * bs * w);
-    debug_assert_eq!(m.len(), spec.batch * bs);
+    debug_assert_eq!(k.len() % (bs * w), 0);
+    debug_assert_eq!(m.len() / bs, k.len() / (bs * w));
+    debug_assert!(seqs.len() <= k.len() / (bs * w));
     m.data_mut().fill(0.0);
     {
         let rows: Vec<_> = k

@@ -30,7 +30,7 @@ use crate::engines::gpu::BatchPartial;
 use crate::engines::{GpuEngine, NativeEngine};
 use crate::kvcache::{chain_hash, KvBlock, PrefixPool, CHAIN_SEED};
 use crate::model::ModelSpec;
-use crate::sparse::{score_blocks_slabs, select_topk};
+use crate::sparse::{score_blocks_slabs, score_blocks_slabs_grouped, select_topk};
 use crate::tensor::Tensor;
 use crate::util::arena::Arena;
 use crate::util::{par, simd};
@@ -48,6 +48,9 @@ pub struct PrefillParams {
     pub pin_sink: bool,
     pub pin_recent: usize,
     pub recall_countdowns: Vec<usize>,
+    /// Head groups for offload decisions (`scout.head_groups`; 1 =
+    /// whole-layer granularity, the only value other schedulers use).
+    pub head_groups: usize,
 }
 
 /// A resumable, chunk-at-a-time prefill of one admitted request.
@@ -385,25 +388,40 @@ impl PrefillState {
         let n = self.total;
         self.seq.cache.finish_prefill(n);
         self.seq.recall_in = params.recall_countdowns;
+        self.seq.regroup(params.head_groups);
 
         let spec = self.seq.cache.spec().clone();
         let full = self.seq.cache.full_blocks();
         let nb = spec.n_blocks();
         let (hq, hkv, d) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
+        let g = self.seq.resident.first().map_or(1, |r| r.n_groups());
+        let pin_set = pins(params.pin_sink, params.pin_recent, full);
         for layer in 0..spec.n_layers {
             let q = native.qpred(&self.h_last, layer, (n as i64) - 1);
-            let scores = {
-                let view = self.seq.cache.layer(layer);
-                let (lo, hi) = view.digests();
-                score_blocks_slabs(&q, lo, hi, nb, full, hq, hkv, d)
-            };
-            let ranked = select_topk(
-                &scores,
-                self.seq.resident[layer].capacity(),
-                &pins(params.pin_sink, params.pin_recent, full),
-            );
-            self.seq.resident[layer].refresh(&ranked.blocks);
-            self.seq.scores_mut(layer).clone_from(&scores);
+            if g == 1 {
+                let scores = {
+                    let view = self.seq.cache.layer(layer);
+                    let (lo, hi) = view.digests();
+                    score_blocks_slabs(&q, lo, hi, nb, full, hq, hkv, d)
+                };
+                let ranked = select_topk(&scores, self.seq.resident[layer].capacity(), &pin_set);
+                self.seq.resident[layer].refresh(&ranked.blocks);
+                self.seq.scores_mut(layer).clone_from(&scores);
+            } else {
+                // Each group seeds its own resident set from its own
+                // query-slice digest scores (flat group-major, `g * nb`).
+                let scores = {
+                    let view = self.seq.cache.layer(layer);
+                    let (lo, hi) = view.digests();
+                    score_blocks_slabs_grouped(&q, lo, hi, nb, full, hq, hkv, d, g)
+                };
+                for grp in 0..g {
+                    let cap = self.seq.resident[layer].capacity_group(grp);
+                    let ranked = select_topk(&scores[grp * nb..(grp + 1) * nb], cap, &pin_set);
+                    self.seq.resident[layer].refresh_group(grp, &ranked.blocks);
+                }
+                self.seq.scores_mut(layer).clone_from(&scores);
+            }
         }
         Ok(self.seq)
     }

@@ -29,14 +29,33 @@
 //!
 //! The scheduler runs the *numerics plane*; every scheduling decision is
 //! recorded in [`StepStats`] for the timing plane to price.
+//!
+//! **Head groups** (`scout.head_groups > 1`, HeadInfer-style): every
+//! stage above runs per contiguous KV-head group — each group scores
+//! blocks against its own query slice, keeps its own resident set and
+//! staged recall, and spawns its own span-sliced CPU jobs. The GPU
+//! numerics plane computes each group's block list through the
+//! full-width `sparse_attn` kernel and keeps only that group's head
+//! slice of the result (per-head (acc, m, l) independence makes the
+//! assembly exact); the timing plane prices the true per-group cost via
+//! [`StepStats::head_groups`]. A heavy-hitter classifier (running
+//! digest-mass EMA per group) pins attention-dense groups fully
+//! resident at recall ticks and donates their budget to sparse groups.
+//!
+//! **Variable-tile decode**: on a tile-flexible backend the decode step
+//! runs at the live-chunk row count instead of padding to the manifest
+//! batch tile — same row-wise kernels, no pad-row work. Shape-locked
+//! backends keep the padded fused path.
 
 use std::sync::Arc;
 
 use crate::config::ScoutConfig;
 use crate::engines::gpu::BatchPartial;
-use crate::engines::{GpuEngine, NativeEngine};
+use crate::engines::{GpuEngine, HeadSpan, NativeEngine};
 use crate::kvcache::PrefixPool;
-use crate::sparse::{score_blocks_slabs, select_topk, TopkSelection};
+use crate::sparse::{
+    score_blocks_slabs, score_blocks_slabs_grouped, select_topk, topk_mass, TopkSelection,
+};
 use crate::tensor::Tensor;
 use crate::util::par;
 
@@ -64,6 +83,14 @@ pub struct ScoutScheduler {
     tail_m: Tensor,
     cpu_bp: BatchPartial,
     results: Vec<JobResult>,
+    /// Row count the reusable operand buffers are currently sized for.
+    /// Stays at `spec.batch` on shape-locked backends; the variable-tile
+    /// decode path resizes only when the live-chunk row count changes.
+    buf_rows: usize,
+    /// Test/bench knob: force the padded fused-tile decode path even on
+    /// a tile-flexible backend. Pins variable-tile decode byte-identity
+    /// against the pre-change padded execution.
+    pub force_padded_decode: bool,
     /// Cross-request prefix cache for the admission path. Auto-created
     /// from `cfg.prefix_cache_blocks` (offline harness runs); the serve
     /// plane replaces it via `attach_prefix_pool` so telemetry and the
@@ -108,8 +135,43 @@ impl ScoutScheduler {
             tail_m: Tensor::zeros(&[tile, 1, bs]),
             cpu_bp: BatchPartial::empty(tile, hq, dd),
             results: Vec::new(),
+            buf_rows: tile,
+            force_padded_decode: false,
             prefix_pool,
         }
+    }
+
+    /// Effective head-group count: `cfg.head_groups` when it divides the
+    /// KV head count evenly, else 1 (whole-layer granularity — the safe
+    /// fallback keeps non-divisor configs byte-identical to the default
+    /// instead of silently mis-slicing heads).
+    pub fn head_groups(&self) -> usize {
+        let g = self.cfg.head_groups.max(1);
+        if g > 1 && self.gpu.spec.n_kv_heads % g == 0 {
+            g
+        } else {
+            1
+        }
+    }
+
+    /// Resize the reusable gather/merge buffers to `rows` operand rows.
+    /// No-op (and therefore zero-alloc) while the row count is stable —
+    /// i.e. always, on shape-locked backends and full-tile chunks.
+    fn ensure_rows(&mut self, rows: usize) {
+        if self.buf_rows == rows {
+            return;
+        }
+        let spec = &self.gpu.spec;
+        let (kb, bs, hkv, dd, hq) =
+            (spec.k_blocks, spec.block_size, spec.n_kv_heads, spec.head_dim, spec.n_q_heads);
+        self.gather_k = Tensor::zeros(&[rows, kb, bs, hkv, dd]);
+        self.gather_v = Tensor::zeros(&[rows, kb, bs, hkv, dd]);
+        self.gather_m = Tensor::zeros(&[rows, kb, bs]);
+        self.tail_k = Tensor::zeros(&[rows, 1, bs, hkv, dd]);
+        self.tail_v = Tensor::zeros(&[rows, 1, bs, hkv, dd]);
+        self.tail_m = Tensor::zeros(&[rows, 1, bs]);
+        self.cpu_bp = BatchPartial::empty(rows, hq, dd);
+        self.buf_rows = rows;
     }
 
     /// The worker-group plane (tests / benches introspection).
@@ -151,6 +213,10 @@ impl ScoutScheduler {
         layer: usize,
         stats: &mut StepStats,
     ) {
+        let g = self.head_groups();
+        if g > 1 {
+            return self.select_and_spawn_grouped(seqs, q, layer, stats, g);
+        }
         let spec = &self.gpu.spec;
         let (hq, hkv, d) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
         let (kb, nb) = (spec.k_blocks, spec.n_blocks());
@@ -186,7 +252,7 @@ impl ScoutScheduler {
             stats.layers[layer].gpu_blocks += gpu_blocks.len();
             stats.layers[layer].cpu_blocks += cpu_blocks.len();
             stats.layers[layer].selected_blocks += sel.blocks.len();
-            seq.selected[layer] = gpu_blocks;
+            seq.selected[layer][0] = gpu_blocks;
             seq.scores_mut(layer).clone_from(&sel.scores);
             if !cpu_blocks.is_empty() {
                 let qrow = q.rows(s, 1)[..hq * d].to_vec();
@@ -195,29 +261,127 @@ impl ScoutScheduler {
         }
     }
 
+    /// `select_and_spawn` at head-group granularity: every group scores
+    /// blocks against its own query head slice, keeps its own top-k /
+    /// resident partition / staged-recall commit, and spawns a span-
+    /// sliced CPU job (the worker attends only that group's KV rows with
+    /// only that group's query heads). Block counts recorded in
+    /// [`StepStats`] are *group-block units* — one group's rows of a
+    /// block, `block_bytes / head_groups` — which the timing plane
+    /// converts via [`StepStats::head_groups`].
+    fn select_and_spawn_grouped(
+        &mut self,
+        seqs: &mut [SeqState],
+        q: &Tensor,
+        layer: usize,
+        stats: &mut StepStats,
+        g: usize,
+    ) {
+        let spec = &self.gpu.spec;
+        let (hq, hkv, d) = (spec.n_q_heads, spec.n_kv_heads, spec.head_dim);
+        let (kb, nb) = (spec.k_blocks, spec.n_blocks());
+        let (pin_sink, pin_recent) = (self.cfg.pin_sink, self.cfg.pin_recent);
+
+        // Parallel phase: grouped digest scoring (`[g * nb]`, group-major)
+        // + per-group top-k, fanned out across sequences.
+        type GroupSel = (Vec<f32>, Vec<TopkSelection>);
+        let mut sels: Vec<Option<GroupSel>> = (0..seqs.len()).map(|_| None).collect();
+        {
+            let items: Vec<(&mut Option<GroupSel>, &SeqState)> =
+                sels.iter_mut().zip(seqs.iter()).collect();
+            par::par_for_each(items, self.par_threads, |s, (slot, seq)| {
+                let full = seq.cache.full_blocks();
+                let qrow = &q.rows(s, 1)[..hq * d];
+                let scores = {
+                    let view = seq.cache.layer(layer);
+                    let (lo, hi) = view.digests();
+                    score_blocks_slabs_grouped(qrow, lo, hi, nb, full, hq, hkv, d, g)
+                };
+                let pins = super::admission::pins(pin_sink, pin_recent, full);
+                let per_group = (0..g)
+                    .map(|grp| select_topk(&scores[grp * nb..(grp + 1) * nb], kb, &pins))
+                    .collect();
+                *slot = Some((scores, per_group));
+            });
+        }
+
+        // Sequential epilogue, per sequence per group: commit staged
+        // recall, feed the heavy-hitter classifier with this step's
+        // measured digest mass, partition vs the group's resident set,
+        // and spawn the group's span-sliced CPU job.
+        for (s, (seq, sel)) in seqs.iter_mut().zip(sels).enumerate() {
+            // audit: allow(expect): the fan-out above writes every slot
+            // exactly once (one closure per sequence, indexes disjoint).
+            let (scores, per_group) = sel.expect("selection computed for every sequence");
+            debug_assert_eq!(seq.resident[layer].n_groups(), g);
+            let fetched = seq.resident[layer].commit_staged_all();
+            stats.layers[layer].recall_blocks += fetched;
+            for (grp, sel_g) in per_group.iter().enumerate() {
+                let mass = topk_mass(&scores[grp * nb..(grp + 1) * nb], &sel_g.blocks);
+                seq.resident[layer].note_mass(grp, mass);
+                if seq.resident[layer].pinned_dense(grp) {
+                    stats.pinned_groups += 1;
+                } else {
+                    stats.offloaded_groups += 1;
+                }
+                let (gpu_blocks, cpu_blocks) =
+                    seq.resident[layer].partition_group(grp, &sel_g.blocks);
+                stats.layers[layer].gpu_blocks += gpu_blocks.len();
+                stats.layers[layer].cpu_blocks += cpu_blocks.len();
+                stats.layers[layer].selected_blocks += sel_g.blocks.len();
+                seq.selected[layer][grp] = gpu_blocks;
+                if !cpu_blocks.is_empty() {
+                    let span = HeadSpan::group(grp, g, hq, hkv);
+                    let qs = q.rows(s, 1)[span.qh0 * d..(span.qh0 + span.hq) * d].to_vec();
+                    self.pool.spawn_span((s, layer), qs, seq.cache.clone(), cpu_blocks, Some(span));
+                }
+            }
+            seq.scores_mut(layer).clone_from(&scores);
+        }
+    }
+
     /// One decode step over a chunk of at most `spec.batch` sequences.
-    fn step_chunk(&mut self, seqs: &mut [SeqState], stats: &mut StepStats) -> crate::Result<()> {
+    /// `budget_blocks` is the per-group resident budget configured at
+    /// admission (the recall-tick rebalance re-splits the *total* pool
+    /// `head_groups * budget_blocks` between dense and sparse groups).
+    fn step_chunk(
+        &mut self,
+        seqs: &mut [SeqState],
+        stats: &mut StepStats,
+        budget_blocks: usize,
+    ) -> crate::Result<()> {
         let spec = self.gpu.spec.clone();
         let (b_tile, l_layers) = (spec.batch, spec.n_layers);
         let n = seqs.len();
         assert!(n <= b_tile && n > 0);
+        let g = self.head_groups();
+
+        // Variable-tile decode: a tile-flexible backend runs the step at
+        // the live-chunk row count — the kernels are row-wise, so each
+        // live row's numerics are bit-identical to the padded run and the
+        // pad rows simply never exist. Shape-locked backends (and the
+        // byte-identity pin) keep the fused padded path (`tile: None`).
+        let flex = self.gpu.tile_flexible() && !self.force_padded_decode;
+        let rows = if flex { n } else { b_tile };
+        let tile = (rows != b_tile).then_some(rows);
+        self.ensure_rows(rows);
 
         // Embedded inputs + positions (padded rows: tok 0, pos 0).
-        let toks: Vec<u32> = (0..b_tile)
+        let toks: Vec<u32> = (0..rows)
             .map(|s| if s < n { seqs[s].last_tok } else { 0 })
             .collect();
         let mut x = self.gpu.embed_tokens(&toks);
         // zero pad rows so their activations stay benign
-        for s in n..b_tile {
+        for s in n..rows {
             x.rows_mut(s, 1).fill(0.0);
         }
-        let pos: Vec<i32> = (0..b_tile).map(|s| if s < n { seqs[s].pos() } else { 0 }).collect();
+        let pos: Vec<i32> = (0..rows).map(|s| if s < n { seqs[s].pos() } else { 0 }).collect();
 
         // Layer-0 CPU work: x is layer 0's input, so qpred(x, 0) IS the
         // real query — the step's pipeline starts with exact selection.
         let pipelined = self.pipelined();
         if pipelined {
-            let q0 = self.gpu.qpred(&x, 0, &pos)?;
+            let q0 = self.gpu.qpred_at(&x, 0, &pos, tile)?;
             self.select_and_spawn(seqs, &q0, 0, stats);
         }
 
@@ -229,12 +393,12 @@ impl ScoutScheduler {
             // from the *predicted* query (residual-stream similarity,
             // Table 1).
             if pipelined && i + 1 < l_layers {
-                let qp = self.gpu.qpred(&x, i + 1, &pos)?;
+                let qp = self.gpu.qpred_at(&x, i + 1, &pos, tile)?;
                 self.select_and_spawn(seqs, &qp, i + 1, stats);
             }
 
             // line 9: real QKV for this layer.
-            let (q, k_new, v_new) = self.gpu.pre_attn(&x, i, &pos)?;
+            let (q, k_new, v_new) = self.gpu.pre_attn_at(&x, i, &pos, tile)?;
 
             if !pipelined {
                 // Ablation arms: -PC (no layer-ahead) and/or real-query
@@ -242,7 +406,7 @@ impl ScoutScheduler {
                 // exists *now* — selection/spawn happens at the same
                 // layer and is collected immediately below (no overlap;
                 // the timing plane prices the stall).
-                let q2 = q.clone().reshape(&[b_tile, spec.n_q_heads * spec.head_dim]);
+                let q2 = q.clone().reshape(&[rows, spec.n_q_heads * spec.head_dim]);
                 self.select_and_spawn(seqs, &q2, i, stats);
             }
 
@@ -250,16 +414,48 @@ impl ScoutScheduler {
             // Operand tensors are scheduler-owned and reused, and the
             // selected lists are read in place: steady-state gathers
             // allocate no operand buffers and no block-list clones.
-            super::gather::gather_selected_into(
-                &self.gpu,
-                seqs,
-                i,
-                &mut self.gather_k,
-                &mut self.gather_v,
-                &mut self.gather_m,
-            );
-            let p_gpu =
-                self.gpu.sparse_attn(&q, &self.gather_k, &self.gather_v, &self.gather_m)?;
+            //
+            // At head_groups > 1 each group's committed block list runs
+            // through the full-width kernel separately and only that
+            // group's head slice of the result is kept — per-head
+            // (acc, m, l) triples are independent, so the assembled
+            // partial is exactly the per-group-sparse attention.
+            let p_gpu = if g == 1 {
+                super::gather::gather_selected_into(
+                    &self.gpu,
+                    seqs,
+                    i,
+                    0,
+                    &mut self.gather_k,
+                    &mut self.gather_v,
+                    &mut self.gather_m,
+                );
+                self.gpu.sparse_attn_at(&q, &self.gather_k, &self.gather_v, &self.gather_m, tile)?
+            } else {
+                let mut assembled =
+                    BatchPartial::empty(rows, spec.n_q_heads, spec.head_dim);
+                for grp in 0..g {
+                    super::gather::gather_selected_into(
+                        &self.gpu,
+                        seqs,
+                        i,
+                        grp,
+                        &mut self.gather_k,
+                        &mut self.gather_v,
+                        &mut self.gather_m,
+                    );
+                    let p = self.gpu.sparse_attn_at(
+                        &q,
+                        &self.gather_k,
+                        &self.gather_v,
+                        &self.gather_m,
+                        tile,
+                    )?;
+                    let span = HeadSpan::group(grp, g, spec.n_q_heads, spec.n_kv_heads);
+                    assembled.copy_span_from(&p, span.qh0, span.hq);
+                }
+                assembled
+            };
             super::gather::gather_tail_into(
                 &self.gpu,
                 seqs,
@@ -270,24 +466,30 @@ impl ScoutScheduler {
                 &mut self.tail_v,
                 &mut self.tail_m,
             );
-            let p_tail = self.gpu.tail_attn(&q, &self.tail_k, &self.tail_v, &self.tail_m)?;
-            let mut merged = self.gpu.merge(&p_gpu, &p_tail)?;
+            let p_tail =
+                self.gpu.tail_attn_at(&q, &self.tail_k, &self.tail_v, &self.tail_m, tile)?;
+            let mut merged = self.gpu.merge_at(&p_gpu, &p_tail, tile)?;
 
             // lines 11-12: fold in the CPU partials pre-computed one
             // layer ahead (or just now in the -PC arm), collected from
             // each slot's own worker group into the reused buffer; the
             // CPU-side batch partial is reset in place, never
-            // reallocated.
+            // reallocated. Span-tagged results (head-group jobs) land in
+            // their group's head slice; untouched head slices stay at the
+            // merge identity.
             self.pool.collect_layer_into(i, &mut self.results);
             if !self.results.is_empty() {
                 self.cpu_bp.reset();
                 for r in &self.results {
-                    self.cpu_bp.set_row(r.key.0, &r.partial);
+                    match r.span {
+                        None => self.cpu_bp.set_row(r.key.0, &r.partial),
+                        Some(sp) => self.cpu_bp.set_row_span(r.key.0, &r.partial, sp.qh0),
+                    }
                 }
-                merged = self.gpu.merge(&merged, &self.cpu_bp)?;
+                merged = self.gpu.merge_at(&merged, &self.cpu_bp, tile)?;
             }
 
-            x = self.gpu.post_attn(&x, &merged, i)?;
+            x = self.gpu.post_attn_at(&x, &merged, i, tile)?;
             k_news.push(k_new);
             v_news.push(v_new);
 
@@ -296,6 +498,12 @@ impl ScoutScheduler {
             // commit at this layer of the NEXT decode step, so the fetch
             // gets a whole step as its PCIe window; the timing plane
             // prices the staged bytes against that window.
+            //
+            // At head_groups > 1 the tick first re-splits the total
+            // resident pool via the heavy-hitter classifier (dense groups
+            // pin fully resident, donating budget to sparse groups), then
+            // re-ranks and stages each group within its new capacity.
+            let nb = spec.n_blocks();
             for seq in seqs.iter_mut() {
                 if self.recall.tick(&mut seq.recall_in, i) {
                     let full = seq.cache.full_blocks();
@@ -303,16 +511,35 @@ impl ScoutScheduler {
                     if scores.is_empty() {
                         continue;
                     }
-                    let cap = seq.resident[i].capacity();
-                    let ranked = select_topk(&scores, cap, &self.pins(full));
-                    let staged = seq.resident[i].stage(&ranked.blocks);
-                    stats.layers[i].recall_staged_blocks += staged;
+                    let pins = self.pins(full);
+                    if g == 1 {
+                        let cap = seq.resident[i].capacity();
+                        let ranked = select_topk(&scores, cap, &pins);
+                        let staged = seq.resident[i].stage(&ranked.blocks);
+                        stats.layers[i].recall_staged_blocks += staged;
+                    } else {
+                        if scores.len() != g * nb {
+                            continue; // grouped scores not seeded yet
+                        }
+                        seq.resident[i].rebalance(
+                            g * budget_blocks,
+                            self.cfg.head_dense_mass as f32,
+                            pins.len() + 1,
+                        );
+                        for grp in 0..g {
+                            let cap = seq.resident[i].capacity_group(grp);
+                            let ranked =
+                                select_topk(&scores[grp * nb..(grp + 1) * nb], cap, &pins);
+                            let staged = seq.resident[i].stage_group(grp, &ranked.blocks);
+                            stats.layers[i].recall_staged_blocks += staged;
+                        }
+                    }
                 }
             }
         }
 
         // Sample + append.
-        let logits = self.gpu.lm_head(&x)?;
+        let logits = self.gpu.lm_head_at(&x, tile)?;
         let w = spec.n_kv_heads * spec.head_dim;
         super::gather::sample_and_append(&mut seqs[..n], &logits, &k_news, &v_news, w);
         Ok(())
@@ -334,6 +561,7 @@ impl ScoutScheduler {
             self.cfg.pin_recent,
             self.recall.init_countdowns(),
             self.cfg.prefill_chunk,
+            self.head_groups(),
         )
     }
 }
@@ -392,6 +620,7 @@ impl DecodeScheduler for ScoutScheduler {
                 pin_sink: self.cfg.pin_sink,
                 pin_recent: self.cfg.pin_recent,
                 recall_countdowns: self.recall.init_countdowns(),
+                head_groups: self.head_groups(),
             },
         )
     }
@@ -400,12 +629,14 @@ impl DecodeScheduler for ScoutScheduler {
         let t0 = std::time::Instant::now();
         let spec = self.gpu.spec.clone();
         let mut stats = StepStats::new(spec.n_layers, batch.live(), self.pipelined());
+        stats.head_groups = self.head_groups();
         let tile = spec.batch;
         let total = batch.seqs.len();
+        let budget = batch.budget_blocks;
         let mut start = 0;
         while start < total {
             let end = (start + tile).min(total);
-            self.step_chunk(&mut batch.seqs[start..end], &mut stats)?;
+            self.step_chunk(&mut batch.seqs[start..end], &mut stats, budget)?;
             start = end;
         }
         stats.wall_us = t0.elapsed().as_micros() as u64;

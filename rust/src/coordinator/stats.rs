@@ -56,6 +56,19 @@ pub struct StepStats {
     /// (`ServingRun::peak_queue_depth` consumes it; the serve plane
     /// reports queue depth through its own telemetry gauges instead).
     pub queue_depth: usize,
+    /// Head-group granularity the block counts above were recorded at:
+    /// per-layer block units when 1, *group-block* units (one group's
+    /// rows of a block, `block_bytes / head_groups`) when > 1. The
+    /// timing plane divides per-block byte/FLOP costs accordingly.
+    /// `Default` yields 0 — consumers must treat 0 as 1 (`.max(1)`).
+    pub head_groups: usize,
+    /// (sequence, layer, group) selection observations this step where
+    /// the heavy-hitter classifier held the group pinned fully
+    /// GPU-resident (0 at `head_groups == 1`).
+    pub pinned_groups: usize,
+    /// (sequence, layer, group) selection observations of offloadable
+    /// (non-pinned) groups (0 at `head_groups == 1`).
+    pub offloaded_groups: usize,
 }
 
 impl StepStats {
@@ -67,6 +80,9 @@ impl StepStats {
             wall_us: 0,
             admitted: 0,
             queue_depth: 0,
+            head_groups: 1,
+            pinned_groups: 0,
+            offloaded_groups: 0,
         }
     }
 

@@ -17,7 +17,7 @@
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 
-use crate::engines::{NativeEngine, Partial};
+use crate::engines::{HeadSpan, NativeEngine, Partial};
 use crate::kvcache::ShardedKvCache;
 
 /// Key identifying a pre-computation job: (sequence slot, layer).
@@ -25,10 +25,15 @@ pub type JobKey = (usize, usize);
 
 struct Job {
     key: JobKey,
-    /// Predicted (or real, if `predicted_query=false`) query `[Hq*D]`.
+    /// Predicted (or real, if `predicted_query=false`) query — `[Hq*D]`
+    /// for full-width jobs, `[span.hq*D]` for head-group jobs.
     q: Vec<f32>,
     cache: Arc<ShardedKvCache>,
     blocks: Vec<usize>,
+    /// `None` = full head width (the per-layer path); `Some` = one head
+    /// group's span (the `scout.head_groups > 1` path) — the worker then
+    /// reads only that span's kv rows and returns a span-local partial.
+    span: Option<HeadSpan>,
 }
 
 /// Completed job.
@@ -36,6 +41,10 @@ pub struct JobResult {
     pub key: JobKey,
     pub partial: Partial,
     pub blocks: usize,
+    /// The head span of `partial` (`None` = full width). Several
+    /// span-tagged results can land per (slot, layer) — one per
+    /// offloaded head group.
+    pub span: Option<HeadSpan>,
 }
 
 /// One slot's thread group: private job/result channels + bookkeeping.
@@ -72,12 +81,16 @@ impl WorkerGroup {
                     };
                     // lock only the job layer's shard for the read
                     let view = job.cache.layer(job.key.1);
-                    let partial = engine.attend_blocks(&job.q, &view, &job.blocks);
+                    let partial = match job.span {
+                        None => engine.attend_blocks(&job.q, &view, &job.blocks),
+                        Some(sp) => engine.attend_blocks_span(&job.q, &view, &job.blocks, sp),
+                    };
                     drop(view);
                     let _ = tx_done.send(JobResult {
                         key: job.key,
                         partial,
                         blocks: job.blocks.len(),
+                        span: job.span,
                     });
                 }
             }));
@@ -186,6 +199,21 @@ impl WorkerGroups {
         cache: Arc<ShardedKvCache>,
         blocks: Vec<usize>,
     ) {
+        self.spawn_span(key, q, cache, blocks, None)
+    }
+
+    /// [`spawn`](Self::spawn) for one head group: `q` is the span-local
+    /// query slice and the worker computes only `span`'s kv rows. The
+    /// scheduler issues one such job per *offloaded* group, so pinned
+    /// (fully resident) groups cost the CPU nothing.
+    pub fn spawn_span(
+        &mut self,
+        key: JobKey,
+        q: Vec<f32>,
+        cache: Arc<ShardedKvCache>,
+        blocks: Vec<usize>,
+        span: Option<HeadSpan>,
+    ) {
         if blocks.is_empty() {
             return; // merge identity — nothing to do
         }
@@ -195,7 +223,7 @@ impl WorkerGroups {
         // audit: allow(expect): send fails only if every worker in the
         // group is gone (panicked); propagating is the designed failure
         // mode — see collect().
-        group.tx.send(Job { key, q, cache, blocks }).expect("cpu worker group hung up");
+        group.tx.send(Job { key, q, cache, blocks, span }).expect("cpu worker group hung up");
     }
 
     /// Jobs spawned but not yet collected, across all groups.
@@ -359,6 +387,37 @@ mod tests {
         results.sort_by_key(|r| r.key.0);
         let slots: Vec<usize> = results.iter().map(|r| r.key.0).collect();
         assert_eq!(slots, vec![0, 1, 2]);
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn span_jobs_return_span_local_partials() {
+        let spec = tiny_spec();
+        let engine = Arc::new(NativeEngine::from_seed(&spec, 13));
+        let cache = filled_cache(&spec, 32, 3);
+        let dd = spec.head_dim;
+        let q: Vec<f32> =
+            (0..spec.n_q_heads * dd).map(|i| (i as f32 * 0.23).sin()).collect();
+        let mut pool = WorkerGroups::new(engine.clone(), 1, 1);
+        // Two head-group jobs for the same (slot, layer) — one per
+        // offloaded group, with different block lists.
+        let spans: Vec<HeadSpan> =
+            (0..2).map(|g| HeadSpan::group(g, 2, spec.n_q_heads, spec.n_kv_heads)).collect();
+        let lists = [vec![0usize, 2], vec![1usize]];
+        for (sp, blocks) in spans.iter().zip(&lists) {
+            let qs = q[sp.qh0 * dd..(sp.qh0 + sp.hq) * dd].to_vec();
+            pool.spawn_span((0, 1), qs, cache.clone(), blocks.clone(), Some(*sp));
+        }
+        let mut results = pool.collect_layer(1);
+        assert_eq!(results.len(), 2);
+        results.sort_by_key(|r| r.span.unwrap().qh0);
+        for (r, (sp, blocks)) in results.iter().zip(spans.iter().zip(&lists)) {
+            assert_eq!(r.span, Some(*sp));
+            assert_eq!(r.partial.hq, sp.hq);
+            let qs = &q[sp.qh0 * dd..(sp.qh0 + sp.hq) * dd];
+            let inline = engine.attend_blocks_span(qs, &cache.layer(1), blocks, *sp);
+            assert_eq!(r.partial.finalize(), inline.finalize());
+        }
         assert_eq!(pool.outstanding(), 0);
     }
 

@@ -49,6 +49,35 @@ impl BatchPartial {
         self.m.rows_mut(row, 1)[..p.hq].copy_from_slice(&p.m);
         self.l.rows_mut(row, 1)[..p.hq].copy_from_slice(&p.l);
     }
+
+    /// Overwrite one sequence's query heads `[qh0, qh0 + p.hq)` from a
+    /// head-span partial (`p` holds `p.hq` heads' worth of state). The
+    /// other heads of the row are untouched — per head the (acc, m, l)
+    /// triple is independent, so span-wise assembly is exact.
+    pub fn set_row_span(&mut self, row: usize, p: &crate::engines::Partial, qh0: usize) {
+        let d = p.d;
+        self.acc.rows_mut(row, 1)[qh0 * d..(qh0 + p.hq) * d].copy_from_slice(&p.acc);
+        self.m.rows_mut(row, 1)[qh0..qh0 + p.hq].copy_from_slice(&p.m);
+        self.l.rows_mut(row, 1)[qh0..qh0 + p.hq].copy_from_slice(&p.l);
+    }
+
+    /// Copy query heads `[qh0, qh0 + n_heads)` of every row from `src`
+    /// (same `[B, Hq, D]` layout). The head-wise GPU path computes each
+    /// group's block list through the full-width kernel and keeps only
+    /// that group's head slice of the result.
+    pub fn copy_span_from(&mut self, src: &BatchPartial, qh0: usize, n_heads: usize) {
+        let (b, hq, d) = (self.acc.shape()[0], self.acc.shape()[1], self.acc.shape()[2]);
+        debug_assert_eq!(src.acc.shape(), self.acc.shape());
+        debug_assert!(qh0 + n_heads <= hq);
+        for row in 0..b {
+            let (a0, a1) = (qh0 * d, (qh0 + n_heads) * d);
+            self.acc.rows_mut(row, 1)[a0..a1].copy_from_slice(&src.acc.rows(row, 1)[a0..a1]);
+            self.m.rows_mut(row, 1)[qh0..qh0 + n_heads]
+                .copy_from_slice(&src.m.rows(row, 1)[qh0..qh0 + n_heads]);
+            self.l.rows_mut(row, 1)[qh0..qh0 + n_heads]
+                .copy_from_slice(&src.l.rows(row, 1)[qh0..qh0 + n_heads]);
+        }
+    }
 }
 
 /// Operand shapes of the per-layer weight slices (the granular entries'
@@ -225,18 +254,31 @@ impl GpuEngine {
 
     /// Predicted query for layer `layer_next` from the current input.
     pub fn qpred(&self, x: &Tensor, layer_next: usize, pos: &[i32]) -> crate::Result<Tensor> {
+        self.qpred_at(x, layer_next, pos, None)
+    }
+
+    /// [`Self::qpred`] at a variable row tile (`x` is `[T, d]`) — the
+    /// variable-tile decode path. Requires a tile-flexible backend.
+    pub fn qpred_at(
+        &self,
+        x: &Tensor,
+        layer_next: usize,
+        pos: &[i32],
+        tile: Option<usize>,
+    ) -> crate::Result<Tensor> {
         let s = &self.shapes;
         let w = &self.weights;
         let pos_shape = [pos.len()];
-        let mut outs = self.rt.execute(
-            "qpred",
-            &[
-                Operand::t(x),
-                Operand::weights(self.reg.ln1[layer_next], &s.ln, w.layer_ln1(layer_next)),
-                Operand::weights(self.reg.wq[layer_next], &s.wq, w.layer_wq(layer_next)),
-                Operand::I32 { shape: &pos_shape, data: pos },
-            ],
-        )?;
+        let ops = [
+            Operand::t(x),
+            Operand::weights(self.reg.ln1[layer_next], &s.ln, w.layer_ln1(layer_next)),
+            Operand::weights(self.reg.wq[layer_next], &s.wq, w.layer_wq(layer_next)),
+            Operand::I32 { shape: &pos_shape, data: pos },
+        ];
+        let mut outs = match tile {
+            Some(t) => self.rt.execute_tile("qpred", &ops, t)?,
+            None => self.rt.execute("qpred", &ops)?,
+        };
         Ok(outs.pop().unwrap())
     }
 
@@ -248,10 +290,24 @@ impl GpuEngine {
         v_sel: &Tensor,
         mask: &Tensor,
     ) -> crate::Result<BatchPartial> {
-        let outs = self.rt.execute(
-            "sparse_attn",
-            &[Operand::t(q), Operand::t(k_sel), Operand::t(v_sel), Operand::t(mask)],
-        )?;
+        self.sparse_attn_at(q, k_sel, v_sel, mask, None)
+    }
+
+    /// [`Self::sparse_attn`] at a variable row tile (variable-tile
+    /// decode; every operand and output is row-wise in the batch axis).
+    pub fn sparse_attn_at(
+        &self,
+        q: &Tensor,
+        k_sel: &Tensor,
+        v_sel: &Tensor,
+        mask: &Tensor,
+        tile: Option<usize>,
+    ) -> crate::Result<BatchPartial> {
+        let ops = [Operand::t(q), Operand::t(k_sel), Operand::t(v_sel), Operand::t(mask)];
+        let outs = match tile {
+            Some(t) => self.rt.execute_tile("sparse_attn", &ops, t)?,
+            None => self.rt.execute("sparse_attn", &ops)?,
+        };
         Self::partial_from(outs)
     }
 
@@ -263,26 +319,50 @@ impl GpuEngine {
         v_tail: &Tensor,
         mask: &Tensor,
     ) -> crate::Result<BatchPartial> {
-        let outs = self.rt.execute(
-            "tail_attn",
-            &[Operand::t(q), Operand::t(k_tail), Operand::t(v_tail), Operand::t(mask)],
-        )?;
+        self.tail_attn_at(q, k_tail, v_tail, mask, None)
+    }
+
+    /// [`Self::tail_attn`] at a variable row tile (variable-tile decode).
+    pub fn tail_attn_at(
+        &self,
+        q: &Tensor,
+        k_tail: &Tensor,
+        v_tail: &Tensor,
+        mask: &Tensor,
+        tile: Option<usize>,
+    ) -> crate::Result<BatchPartial> {
+        let ops = [Operand::t(q), Operand::t(k_tail), Operand::t(v_tail), Operand::t(mask)];
+        let outs = match tile {
+            Some(t) => self.rt.execute_tile("tail_attn", &ops, t)?,
+            None => self.rt.execute("tail_attn", &ops)?,
+        };
         Self::partial_from(outs)
     }
 
     /// LSE merge of two batched partials (L1 merge kernel).
     pub fn merge(&self, a: &BatchPartial, b: &BatchPartial) -> crate::Result<BatchPartial> {
-        let outs = self.rt.execute(
-            "merge",
-            &[
-                Operand::t(&a.acc),
-                Operand::t(&a.m),
-                Operand::t(&a.l),
-                Operand::t(&b.acc),
-                Operand::t(&b.m),
-                Operand::t(&b.l),
-            ],
-        )?;
+        self.merge_at(a, b, None)
+    }
+
+    /// [`Self::merge`] at a variable row tile (variable-tile decode).
+    pub fn merge_at(
+        &self,
+        a: &BatchPartial,
+        b: &BatchPartial,
+        tile: Option<usize>,
+    ) -> crate::Result<BatchPartial> {
+        let ops = [
+            Operand::t(&a.acc),
+            Operand::t(&a.m),
+            Operand::t(&a.l),
+            Operand::t(&b.acc),
+            Operand::t(&b.m),
+            Operand::t(&b.l),
+        ];
+        let outs = match tile {
+            Some(t) => self.rt.execute_tile("merge", &ops, t)?,
+            None => self.rt.execute("merge", &ops)?,
+        };
         Self::partial_from(outs)
     }
 
@@ -333,15 +413,22 @@ impl GpuEngine {
 
     /// Final norm + tied LM head: logits `[B, V]`.
     pub fn lm_head(&self, x: &Tensor) -> crate::Result<Tensor> {
+        self.lm_head_at(x, None)
+    }
+
+    /// [`Self::lm_head`] at a variable row tile (variable-tile decode;
+    /// chunked prefill already rides this through `execute_tile`).
+    pub fn lm_head_at(&self, x: &Tensor, tile: Option<usize>) -> crate::Result<Tensor> {
         let w = &self.weights;
-        let mut outs = self.rt.execute(
-            "lm_head",
-            &[
-                Operand::t(x),
-                Operand::weights(self.reg.stacked[8], w.ln_f.shape(), w.ln_f.data()),
-                Operand::weights(self.reg.stacked[9], w.embed.shape(), w.embed.data()),
-            ],
-        )?;
+        let ops = [
+            Operand::t(x),
+            Operand::weights(self.reg.stacked[8], w.ln_f.shape(), w.ln_f.data()),
+            Operand::weights(self.reg.stacked[9], w.embed.shape(), w.embed.data()),
+        ];
+        let mut outs = match tile {
+            Some(t) => self.rt.execute_tile("lm_head", &ops, t)?,
+            None => self.rt.execute("lm_head", &ops)?,
+        };
         Ok(outs.pop().unwrap())
     }
 

@@ -19,4 +19,4 @@ pub mod partial;
 
 pub use gpu::GpuEngine;
 pub use native::NativeEngine;
-pub use partial::Partial;
+pub use partial::{HeadSpan, Partial};

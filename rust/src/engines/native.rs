@@ -158,6 +158,54 @@ impl NativeEngine {
         p
     }
 
+    /// Head-span accumulate: only `span`'s query heads, against its kv
+    /// heads inside the full-width slab rows. `q_span` and `p` are
+    /// span-local (`span.hq` heads).
+    fn accum_slab_span(
+        &self,
+        q_span: &[f32],
+        k_slab: &[f32],
+        v_slab: &[f32],
+        tokens: usize,
+        span: crate::engines::HeadSpan,
+        p: &mut Partial,
+    ) {
+        let (row_heads, dd) = (self.spec.n_kv_heads, self.spec.head_dim);
+        let scale = self.spec.scale();
+        let mut sbuf = [0.0f32; SCORES_STACK];
+        let mut heap = Vec::new();
+        let scores: &mut [f32] = if tokens <= SCORES_STACK {
+            &mut sbuf
+        } else {
+            heap.resize(tokens, 0.0);
+            &mut heap
+        };
+        simd::softmax_accum_span(
+            q_span, k_slab, v_slab, None, tokens, span.hq, span.kvh0, span.hkv, row_heads, dd,
+            scale, &mut p.acc, &mut p.m, &mut p.l, scores,
+        );
+    }
+
+    /// [`Self::attend_blocks`] for one head group: the CPU worker reads
+    /// only `span`'s kv-head rows of each block slab and produces a
+    /// span-local partial (`span.hq` heads). With the full span this is
+    /// bit-identical to `attend_blocks` — the kernels share their float
+    /// sequencing and differ only in row indexing.
+    pub fn attend_blocks_span(
+        &self,
+        q_span: &[f32],
+        slabs: &impl BlockSlabs,
+        blocks: &[usize],
+        span: crate::engines::HeadSpan,
+    ) -> Partial {
+        let bs = self.spec.block_size;
+        let mut p = Partial::empty(span.hq, self.spec.head_dim);
+        for &b in blocks {
+            self.accum_slab_span(q_span, slabs.block_k(b), slabs.block_v(b), bs, span, &mut p);
+        }
+        p
+    }
+
     /// Tail partial: the still-filling block plus the current token's own
     /// k/v (which is not yet in the cache).
     pub fn attend_tail(
@@ -348,6 +396,39 @@ mod tests {
         let p_union = e.attend_slab(&q, &kall, &vall, 24);
         for (a, b) in p_blocks.finalize().iter().zip(p_union.finalize()) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn attend_blocks_span_is_the_full_head_slice() {
+        let (spec, e) = tiny();
+        let mut cache = SeqKvCache::new(&spec);
+        let w = spec.n_kv_heads * spec.head_dim;
+        for t in 0..16 {
+            for l in 0..spec.n_layers {
+                let k: Vec<f32> = (0..w).map(|i| ((t * 17 + l * 5 + i) as f32).sin()).collect();
+                let v: Vec<f32> = (0..w).map(|i| ((t * 7 + l * 11 + i) as f32).cos()).collect();
+                cache.append_layer(l, &k, &v);
+            }
+            cache.advance();
+        }
+        let dd = spec.head_dim;
+        let q: Vec<f32> =
+            (0..spec.n_q_heads * dd).map(|i| (i as f32 * 0.17).sin()).collect();
+        let full = e.attend_blocks(&q, &cache.layer_slabs(0), &[0, 1]);
+        let n_groups = spec.n_kv_heads; // one group per kv head
+        for g in 0..n_groups {
+            let span =
+                crate::engines::HeadSpan::group(g, n_groups, spec.n_q_heads, spec.n_kv_heads);
+            let qs = &q[span.qh0 * dd..(span.qh0 + span.hq) * dd];
+            let p = e.attend_blocks_span(qs, &cache.layer_slabs(0), &[0, 1], span);
+            for (a, b) in p.acc.iter().zip(&full.acc[span.qh0 * dd..(span.qh0 + span.hq) * dd])
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "group {g} acc");
+            }
+            for (a, b) in p.l.iter().zip(&full.l[span.qh0..span.qh0 + span.hq]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "group {g} l");
+            }
         }
     }
 

@@ -17,6 +17,37 @@ pub struct Partial {
 
 pub const NEG_INF: f32 = -1e30;
 
+/// A contiguous head range of the attention state: query heads
+/// `[qh0, qh0 + hq)` mapping onto kv heads `[kvh0, kvh0 + hkv)` of the
+/// full-width KV rows. This is the unit the head-wise offload machinery
+/// (`scout.head_groups`) slices partials, gathers, and CPU jobs by; per
+/// head the (acc, m, l) state is independent, so assembling a batch
+/// partial from disjoint spans is exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeadSpan {
+    pub qh0: usize,
+    pub hq: usize,
+    pub kvh0: usize,
+    pub hkv: usize,
+}
+
+impl HeadSpan {
+    /// The whole head width (the single-group / legacy view).
+    pub fn full(hq: usize, hkv: usize) -> Self {
+        Self { qh0: 0, hq, kvh0: 0, hkv }
+    }
+
+    /// Group `g` of `n_groups` contiguous KV-head groups. `n_groups`
+    /// must divide `hkv` (and therefore `hq`, since GQA keeps
+    /// `hq % hkv == 0`).
+    pub fn group(g: usize, n_groups: usize, hq: usize, hkv: usize) -> Self {
+        debug_assert!(n_groups >= 1 && g < n_groups);
+        debug_assert!(hkv % n_groups == 0 && hq % n_groups == 0);
+        let (hq_g, hkv_g) = (hq / n_groups, hkv / n_groups);
+        Self { qh0: g * hq_g, hq: hq_g, kvh0: g * hkv_g, hkv: hkv_g }
+    }
+}
+
 impl Partial {
     pub fn empty(hq: usize, d: usize) -> Self {
         Self { hq, d, acc: vec![0.0; hq * d], m: vec![NEG_INF; hq], l: vec![0.0; hq] }

@@ -15,6 +15,16 @@
 //! decode step as its transfer window (§3.4), and the numerics plane can
 //! never consume a block the timing plane would still count as in
 //! flight.
+//!
+//! **Head groups** (HeadInfer-style, `scout.head_groups`): the set can
+//! hold several independent per-head-group residencies, each with its
+//! own capacity, staged buffer, and a running attention-mass estimate
+//! (the heavy-hitter classifier input). The block unit then becomes a
+//! *group-block* — the rows of one KV block belonging to one head
+//! group, `1/n_groups` of a full block's bytes. The single-group
+//! constructor and the un-suffixed methods are the legacy per-layer
+//! view: they address group 0 and, for sets built with
+//! [`ResidentSet::new`], behave exactly as before.
 
 use super::BlockId;
 
@@ -28,39 +38,32 @@ struct StagedSet {
     fetch: Vec<BlockId>,
 }
 
-/// Budget-bounded set of GPU-resident complete blocks for one
-/// (sequence, layer).
+/// One head group's residency: flags, staged buffer, classifier state.
 #[derive(Debug, Clone)]
-pub struct ResidentSet {
+struct GroupState {
     capacity: usize,
     resident: Vec<bool>,
     count: usize,
     staged: Option<StagedSet>,
+    /// Running estimate (EMA) of the attention-mass fraction the group's
+    /// top-capacity digest selection captures. High = sparse head group
+    /// (top-k suffices); low = dense (mass spread over many blocks).
+    mass_ema: f32,
+    /// Classifier verdict from the last [`ResidentSet::rebalance`]:
+    /// dense groups are pinned fully resident.
+    pinned_dense: bool,
 }
 
-impl ResidentSet {
-    pub fn new(n_blocks: usize, capacity: usize) -> Self {
-        Self { capacity, resident: vec![false; n_blocks], count: 0, staged: None }
-    }
-
-    pub fn capacity(&self) -> usize {
-        self.capacity
-    }
-
-    pub fn len(&self) -> usize {
-        self.count
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.count == 0
-    }
-
-    pub fn contains(&self, b: BlockId) -> bool {
-        self.resident.get(b).copied().unwrap_or(false)
-    }
-
-    pub fn iter(&self) -> impl Iterator<Item = BlockId> + '_ {
-        self.resident.iter().enumerate().filter(|(_, &r)| r).map(|(i, _)| i)
+impl GroupState {
+    fn new(n_blocks: usize, capacity: usize) -> Self {
+        Self {
+            capacity,
+            resident: vec![false; n_blocks],
+            count: 0,
+            staged: None,
+            mass_ema: 1.0,
+            pinned_dense: false,
+        }
     }
 
     /// Build the (resident flags, count, fetch list) of a ranked refresh
@@ -79,6 +82,78 @@ impl ResidentSet {
         }
         StagedSet { resident: next, count, fetch }
     }
+}
+
+/// Budget-bounded set of GPU-resident complete blocks for one
+/// (sequence, layer), optionally split into independent head groups.
+#[derive(Debug, Clone)]
+pub struct ResidentSet {
+    n_blocks: usize,
+    groups: Vec<GroupState>,
+}
+
+impl ResidentSet {
+    /// Single-group set — the per-layer granularity the paper describes.
+    pub fn new(n_blocks: usize, capacity: usize) -> Self {
+        Self::new_grouped(n_blocks, 1, capacity)
+    }
+
+    /// `n_groups` independent per-head-group residencies, each starting
+    /// with `capacity_per_group` group-blocks of budget.
+    pub fn new_grouped(n_blocks: usize, n_groups: usize, capacity_per_group: usize) -> Self {
+        debug_assert!(n_groups >= 1);
+        Self {
+            n_blocks,
+            groups: (0..n_groups).map(|_| GroupState::new(n_blocks, capacity_per_group)).collect(),
+        }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Total budget across groups (== the single group's capacity for
+    /// legacy sets).
+    pub fn capacity(&self) -> usize {
+        self.groups.iter().map(|g| g.capacity).sum()
+    }
+
+    pub fn capacity_group(&self, g: usize) -> usize {
+        self.groups[g].capacity
+    }
+
+    /// Resident group-blocks across groups.
+    pub fn len(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    pub fn len_group(&self, g: usize) -> usize {
+        self.groups[g].count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.contains_group(0, b)
+    }
+
+    pub fn contains_group(&self, g: usize, b: BlockId) -> bool {
+        self.groups[g].resident.get(b).copied().unwrap_or(false)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.iter_group(0)
+    }
+
+    pub fn iter_group(&self, g: usize) -> impl Iterator<Item = BlockId> + '_ {
+        self.groups[g].resident.iter().enumerate().filter(|(_, &r)| r).map(|(i, _)| i)
+    }
 
     /// Replace the resident set *immediately* with (up to capacity)
     /// blocks, highest priority first. Returns the blocks that were
@@ -90,11 +165,16 @@ impl ResidentSet {
     /// [`stage`]: ResidentSet::stage
     /// [`commit_staged`]: ResidentSet::commit_staged
     pub fn refresh(&mut self, ranked: &[BlockId]) -> Vec<BlockId> {
-        let plan = self.plan(ranked);
+        self.refresh_group(0, ranked)
+    }
+
+    pub fn refresh_group(&mut self, g: usize, ranked: &[BlockId]) -> Vec<BlockId> {
+        let gs = &mut self.groups[g];
+        let plan = gs.plan(ranked);
         let added = plan.fetch.clone();
-        self.resident = plan.resident;
-        self.count = plan.count;
-        self.staged = None;
+        gs.resident = plan.resident;
+        gs.count = plan.count;
+        gs.staged = None;
         added
     }
 
@@ -107,25 +187,42 @@ impl ResidentSet {
     ///
     /// [`commit_staged`]: ResidentSet::commit_staged
     pub fn stage(&mut self, ranked: &[BlockId]) -> usize {
-        let plan = self.plan(ranked);
+        self.stage_group(0, ranked)
+    }
+
+    pub fn stage_group(&mut self, g: usize, ranked: &[BlockId]) -> usize {
+        let gs = &mut self.groups[g];
+        let plan = gs.plan(ranked);
         let fetch = plan.fetch.len();
-        self.staged = Some(plan);
+        gs.staged = Some(plan);
         fetch
     }
 
     /// Whether a staged refresh is waiting for its commit boundary.
     pub fn has_staged(&self) -> bool {
-        self.staged.is_some()
+        self.groups.iter().any(|g| g.staged.is_some())
+    }
+
+    pub fn has_staged_group(&self, g: usize) -> bool {
+        self.groups[g].staged.is_some()
     }
 
     /// The pending fetch list (empty when nothing is staged).
     pub fn staged_fetch(&self) -> &[BlockId] {
-        self.staged.as_ref().map(|s| s.fetch.as_slice()).unwrap_or(&[])
+        self.staged_fetch_group(0)
+    }
+
+    pub fn staged_fetch_group(&self, g: usize) -> &[BlockId] {
+        self.groups[g].staged.as_ref().map(|s| s.fetch.as_slice()).unwrap_or(&[])
     }
 
     /// The full staged block set, if any (tests / instrumentation).
     pub fn staged_blocks(&self) -> Option<Vec<BlockId>> {
-        self.staged.as_ref().map(|s| {
+        self.staged_blocks_group(0)
+    }
+
+    pub fn staged_blocks_group(&self, g: usize) -> Option<Vec<BlockId>> {
+        self.groups[g].staged.as_ref().map(|s| {
             s.resident.iter().enumerate().filter(|(_, &r)| r).map(|(i, _)| i).collect()
         })
     }
@@ -135,31 +232,97 @@ impl ResidentSet {
     /// land). Returns the number of blocks that just became resident,
     /// i.e. the recall I/O that arrived; 0 when nothing was staged.
     pub fn commit_staged(&mut self) -> usize {
-        match self.staged.take() {
+        self.commit_staged_group(0)
+    }
+
+    pub fn commit_staged_group(&mut self, g: usize) -> usize {
+        let gs = &mut self.groups[g];
+        match gs.staged.take() {
             Some(s) => {
                 let fetched = s.fetch.len();
-                self.resident = s.resident;
-                self.count = s.count;
+                gs.resident = s.resident;
+                gs.count = s.count;
                 fetched
             }
             None => 0,
         }
     }
 
+    /// Commit every group's staged set; returns total fetched
+    /// group-blocks. Each group's commit is independent — a group with
+    /// nothing staged is untouched.
+    pub fn commit_staged_all(&mut self) -> usize {
+        (0..self.groups.len()).map(|g| self.commit_staged_group(g)).sum()
+    }
+
     /// Split a selected top-k set into (gpu_resident, cpu_side) — the
     /// partition at the heart of §3.2's collaborative attention. Only
     /// the *visible* set counts; staged blocks are still in flight.
     pub fn partition(&self, selected: &[BlockId]) -> (Vec<BlockId>, Vec<BlockId>) {
+        self.partition_group(0, selected)
+    }
+
+    pub fn partition_group(&self, g: usize, selected: &[BlockId]) -> (Vec<BlockId>, Vec<BlockId>) {
         let mut gpu = Vec::with_capacity(selected.len());
         let mut cpu = Vec::new();
         for &b in selected {
-            if self.contains(b) {
+            if self.contains_group(g, b) {
                 gpu.push(b);
             } else {
                 cpu.push(b);
             }
         }
         (gpu, cpu)
+    }
+
+    // ------------------------------------------- heavy-hitter classifier --
+
+    /// Feed one step's measured top-k attention-mass fraction for group
+    /// `g` into the running estimate (EMA, 0.9/0.1). `mass` near 1 means
+    /// the digest top-k captured nearly all softmax mass (sparse head
+    /// group); near 0 means the mass is spread (dense group).
+    pub fn note_mass(&mut self, g: usize, mass: f32) {
+        let e = &mut self.groups[g].mass_ema;
+        *e = 0.9 * *e + 0.1 * mass.clamp(0.0, 1.0);
+    }
+
+    pub fn mass(&self, g: usize) -> f32 {
+        self.groups[g].mass_ema
+    }
+
+    /// Whether the last [`rebalance`](ResidentSet::rebalance) classified
+    /// group `g` dense and pinned it fully resident.
+    pub fn pinned_dense(&self, g: usize) -> bool {
+        self.groups[g].pinned_dense
+    }
+
+    /// Dense (pinned) groups after the last rebalance.
+    pub fn pinned_group_count(&self) -> usize {
+        self.groups.iter().filter(|g| g.pinned_dense).count()
+    }
+
+    /// Re-split the resident budget across groups from the classifier
+    /// state. Groups whose mass EMA fell below `dense_thr` are *dense*:
+    /// the sparse budget would miss too much of their attention mass, so
+    /// they are pinned fully resident (capacity = n_blocks) and their
+    /// budget share is donated to the sparse groups, which split
+    /// `total_units` group-blocks evenly (floored at `min_cap`, capped
+    /// at n_blocks). Single-group sets never rebalance — the legacy
+    /// budget is config-owned.
+    pub fn rebalance(&mut self, total_units: usize, dense_thr: f32, min_cap: usize) {
+        let n = self.groups.len();
+        if n <= 1 {
+            return;
+        }
+        let nb = self.n_blocks;
+        let pinned = self.groups.iter().filter(|g| g.mass_ema < dense_thr).count();
+        let sparse_n = n - pinned;
+        let per_sparse =
+            if sparse_n == 0 { nb } else { (total_units / sparse_n).max(min_cap).min(nb) };
+        for gs in &mut self.groups {
+            gs.pinned_dense = gs.mass_ema < dense_thr;
+            gs.capacity = if gs.pinned_dense { nb } else { per_sparse };
+        }
     }
 }
 
@@ -246,5 +409,61 @@ mod tests {
         assert!(!r.has_staged());
         assert_eq!(r.commit_staged(), 0);
         assert_eq!(r.iter().collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn groups_are_independent() {
+        let mut r = ResidentSet::new_grouped(8, 2, 2);
+        r.refresh_group(0, &[0, 1]);
+        r.refresh_group(1, &[4, 5]);
+        assert!(r.contains_group(0, 0) && !r.contains_group(0, 4));
+        assert!(r.contains_group(1, 4) && !r.contains_group(1, 0));
+        assert_eq!(r.len(), 4);
+        // staging group 1 leaves group 0's visible + staged state alone
+        r.stage_group(1, &[6, 7]);
+        assert!(!r.has_staged_group(0));
+        assert_eq!(r.staged_fetch_group(1), &[6, 7]);
+        assert_eq!(r.commit_staged_all(), 2);
+        assert_eq!(r.iter_group(1).collect::<Vec<_>>(), vec![6, 7]);
+        assert_eq!(r.iter_group(0).collect::<Vec<_>>(), vec![0, 1]);
+        let (gpu, cpu) = r.partition_group(1, &[0, 6]);
+        assert_eq!(gpu, vec![6]);
+        assert_eq!(cpu, vec![0]);
+    }
+
+    #[test]
+    fn classifier_pins_dense_groups_and_donates_budget() {
+        let mut r = ResidentSet::new_grouped(16, 4, 3);
+        // EMA starts optimistic (1.0): nothing pinned, uniform budget.
+        r.rebalance(12, 0.5, 1);
+        assert_eq!(r.pinned_group_count(), 0);
+        for g in 0..4 {
+            assert_eq!(r.capacity_group(g), 3);
+        }
+        // Group 2's top-k keeps missing most of the mass -> dense.
+        for _ in 0..60 {
+            r.note_mass(2, 0.0);
+            for g in [0, 1, 3] {
+                r.note_mass(g, 0.95);
+            }
+        }
+        r.rebalance(12, 0.5, 1);
+        assert_eq!(r.pinned_group_count(), 1);
+        assert!(r.pinned_dense(2));
+        assert_eq!(r.capacity_group(2), 16, "dense group fully resident");
+        // the 3 sparse groups split the full 12-unit budget: 4 each
+        for g in [0, 1, 3] {
+            assert!(!r.pinned_dense(g));
+            assert_eq!(r.capacity_group(g), 4, "donated budget reaches sparse groups");
+        }
+    }
+
+    #[test]
+    fn rebalance_is_a_noop_for_single_group() {
+        let mut r = ResidentSet::new(8, 2);
+        r.note_mass(0, 0.0);
+        r.rebalance(99, 0.9, 1);
+        assert_eq!(r.capacity(), 2, "legacy budget is config-owned");
+        assert_eq!(r.pinned_group_count(), 0);
     }
 }

@@ -436,7 +436,9 @@ pub struct TierConfig {
 /// resume continues byte-identically to an uninterrupted session.
 pub struct SuspendMeta {
     pub resident: Vec<ResidentSet>,
-    pub selected: Vec<Vec<usize>>,
+    /// Per layer, per head group (`selected[layer][g]`; a single-group
+    /// scheduler stores one inner vec per layer).
+    pub selected: Vec<Vec<Vec<usize>>>,
     pub scores: Vec<Vec<f32>>,
     pub recall_in: Vec<usize>,
     pub last_tok: u32,
@@ -964,7 +966,7 @@ mod tests {
     fn meta_for(spec: &ModelSpec) -> SuspendMeta {
         SuspendMeta {
             resident: (0..spec.n_layers).map(|_| ResidentSet::new(spec.n_blocks(), 2)).collect(),
-            selected: vec![vec![0]; spec.n_layers],
+            selected: vec![vec![vec![0]]; spec.n_layers],
             scores: vec![vec![0.5; spec.n_blocks()]; spec.n_layers],
             recall_in: vec![7; spec.n_layers],
             last_tok: 3,

@@ -169,7 +169,16 @@ impl Runtime {
     ) -> crate::Result<Vec<Tensor>> {
         anyhow::ensure!(tile >= 1, "{name}: tile must be >= 1");
         anyhow::ensure!(
-            matches!(name, "layer_pre_attn" | "layer_post_attn" | "qpred" | "lm_head"),
+            matches!(
+                name,
+                "layer_pre_attn"
+                    | "layer_post_attn"
+                    | "qpred"
+                    | "lm_head"
+                    | "sparse_attn"
+                    | "tail_attn"
+                    | "merge"
+            ),
             "{name} is not a row-wise entry; variable tiles are not supported"
         );
         anyhow::ensure!(
@@ -376,9 +385,17 @@ mod tests {
         assert!(rt
             .execute_tile("lm_head", &[Operand::t(&x), Operand::t(&ln_f), Operand::t(&emb)], 4)
             .is_err());
-        // non-row-wise entries are refused outright
-        assert!(rt.execute_tile("decode_full", &[], 2).is_err());
-        assert!(rt.execute_tile("sparse_attn", &[], 2).is_err());
+        // non-row-wise entries are refused outright (decode_full's cache
+        // operand leads with [L, B, ...], not a row axis)
+        let err = rt.execute_tile("decode_full", &[], 2).unwrap_err();
+        assert!(err.to_string().contains("not a row-wise entry"), "{err}");
+        // the decode attention entries are row-wise and ride variable
+        // tiles (variable-tile decode); bad operands still fail loudly,
+        // but past the allowlist
+        for name in ["sparse_attn", "tail_attn", "merge"] {
+            let err = rt.execute_tile(name, &[], 2).unwrap_err();
+            assert!(!err.to_string().contains("not a row-wise entry"), "{name}: {err}");
+        }
     }
 
     #[test]

@@ -1355,7 +1355,25 @@ fn run_engine(
         // --- One decode step over the whole continuous batch.
         let t0 = Instant::now();
         match sched.step(&mut batch) {
-            Ok(_stats) => {}
+            Ok(stats) => {
+                // Head-wise offload telemetry (`headwise` stats section;
+                // all-zero and hidden at whole-layer granularity).
+                let g = stats.head_groups.max(1);
+                // ordering: lifetime stats counters, read by snapshots only.
+                tel.hw_head_groups.store(g, Ordering::Relaxed);
+                if g > 1 {
+                    tel.hw_pinned_groups.fetch_add(stats.pinned_groups as u64, Ordering::Relaxed);
+                    tel.hw_offloaded_groups
+                        .fetch_add(stats.offloaded_groups as u64, Ordering::Relaxed);
+                    let spec = &stack.gpu.spec;
+                    let group_block_bytes =
+                        (2 * spec.block_size * spec.n_kv_heads * spec.head_dim * 4 / g) as u64;
+                    tel.hw_recall_bytes.fetch_add(
+                        stats.recall_staged_blocks() as u64 * group_block_bytes,
+                        Ordering::Relaxed,
+                    );
+                }
+            }
             Err(e) => {
                 // A step error poisons every live sequence: terminate
                 // them all; the replica itself stays up.

@@ -86,6 +86,20 @@ pub struct ReplicaTelemetry {
     /// disabled). Cold path: set once at startup, read by stats
     /// snapshots and the router's locality hint.
     pub prefix_pool: Mutex<Option<Arc<PrefixPool>>>,
+    /// Head-wise offload gauge: effective `scout.head_groups` of the
+    /// replica's scheduler (1 = whole-layer granularity; the `headwise`
+    /// stats section is `null` then, keeping the default plane
+    /// byte-identical).
+    pub hw_head_groups: AtomicUsize,
+    /// Lifetime: (sequence, layer, group) observations where the
+    /// heavy-hitter classifier held the group pinned fully GPU-resident.
+    pub hw_pinned_groups: AtomicU64,
+    /// Lifetime: (sequence, layer, group) observations of offloadable
+    /// (non-pinned) groups.
+    pub hw_offloaded_groups: AtomicU64,
+    /// Lifetime: asynchronous recall traffic staged by decode steps, in
+    /// bytes (group-block units times the per-group block size).
+    pub hw_recall_bytes: AtomicU64,
 }
 
 impl ReplicaTelemetry {
@@ -191,6 +205,29 @@ impl ReplicaTelemetry {
                 match self.prefix_stats() {
                     Some(s) => prefix_stats_json(&s),
                     None => Json::Null,
+                },
+            ),
+            (
+                "headwise",
+                // ordering: statistics snapshot of independent Relaxed
+                // counters, like every gauge above.
+                match self.hw_head_groups.load(Ordering::Relaxed) {
+                    0 | 1 => Json::Null,
+                    g => Json::obj(vec![
+                        ("head_groups", Json::num(g as f64)),
+                        (
+                            "pinned_groups",
+                            Json::num(self.hw_pinned_groups.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "offloaded_groups",
+                            Json::num(self.hw_offloaded_groups.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "recall_bytes",
+                            Json::num(self.hw_recall_bytes.load(Ordering::Relaxed) as f64),
+                        ),
+                    ]),
                 },
             ),
         ])

@@ -75,19 +75,24 @@ pub fn price_step(
     let bd = &mut out.breakdown;
     let mut prev_layer_us = m.step_other_us.max(1.0); // window for layer 0
     let mut recall_bytes_total = 0.0;
+    // Head-group granularity: block counts in the record are group-block
+    // units (one group's rows of a block), so every per-block byte cost
+    // scales by 1/head_groups. Whole-block terms (dense tokens, digest
+    // scans, tail windows) are unaffected. `Default` records carry 0.
+    let unit = block_bytes / stats.head_groups.max(1) as f64;
     for l in &stats.layers {
         // GPU attention bytes this layer: sparse blocks + tail + dense +
         // the digest scan for top-k selection (one kmin/kmax pair — one
         // token's worth of KV — per block, per §2.2).
-        let gpu_bytes = l.gpu_blocks as f64 * block_bytes
+        let gpu_bytes = l.gpu_blocks as f64 * unit
             + l.dense_tokens as f64 * block_bytes / block_size as f64
             + l.digest_blocks as f64 * block_bytes / block_size as f64
             + stats.live_seqs as f64 * block_bytes; // tail window
         let t_attn = m.gpu_attn_us(gpu_bytes);
         let t_other = m.layer_other_us;
-        let cpu_bytes = l.cpu_blocks as f64 * block_bytes;
+        let cpu_bytes = l.cpu_blocks as f64 * unit;
         let t_cpu = if cpu_bytes > 0.0 { m.cpu_attn_us(cpu_bytes, 1.0) } else { 0.0 };
-        let io_bytes = l.sync_transfer_blocks as f64 * block_bytes;
+        let io_bytes = l.sync_transfer_blocks as f64 * unit;
         let t_io = if l.sync_transfer_blocks > 0 {
             l.sync_transfer_blocks as f64 * m.pcie_msg_overhead_us + io_bytes / m.pcie_line_bw
         } else {
@@ -97,7 +102,7 @@ pub fn price_step(
         // bytes whose PCIe transfer was issued this step (the commit one
         // step later is bookkeeping; the wire time is paid here, against
         // the full-step window below).
-        recall_bytes_total += l.recall_staged_blocks as f64 * block_bytes;
+        recall_bytes_total += l.recall_staged_blocks as f64 * unit;
 
         let stall = match method {
             Method::FullKv => 0.0,
@@ -125,8 +130,9 @@ pub fn price_step(
     // (staged at step t, committed at the same layer of step t+1); only
     // the overflow stalls. Other methods have no recall term.
     if recall_bytes_total > 0.0 {
+        // one fetch message per staged unit (group-block at G > 1)
         let t_recall =
-            recall_bytes_total / block_bytes * m.pcie_msg_overhead_us + recall_bytes_total / m.pcie_line_bw;
+            recall_bytes_total / unit * m.pcie_msg_overhead_us + recall_bytes_total / m.pcie_line_bw;
         let overflow = (t_recall - out.step_us).max(0.0);
         bd.add(Phase::Idle, overflow);
         out.step_us += overflow;

@@ -10,4 +10,7 @@ pub mod locality;
 pub mod topk;
 
 pub use locality::{CpuRatioSeries, LocalityTracker};
-pub use topk::{score_blocks_native, score_blocks_slabs, select_topk, TopkSelection};
+pub use topk::{
+    score_blocks_native, score_blocks_slabs, score_blocks_slabs_grouped, select_topk, topk_mass,
+    TopkSelection,
+};

@@ -67,6 +67,51 @@ pub fn score_blocks_slabs(
     scores
 }
 
+/// Per-head-group Quest scores: `n_groups` contiguous KV-head groups,
+/// each scored against its own query-head slice. Returns a flat
+/// group-major `[n_groups * n_blocks]` vector (`out[g*nb + b]` = score
+/// of block `b` under group `g`). Group `g` covers kv heads
+/// `[g*hkv/n_groups, (g+1)*hkv/n_groups)` and the query heads mapping
+/// onto them. With `n_groups = 1` the per-block accumulation order is
+/// exactly [`score_blocks_slabs`]'s (bit-identical scores).
+#[allow(clippy::too_many_arguments)]
+pub fn score_blocks_slabs_grouped(
+    q: &[f32],
+    kmin: &[f32],
+    kmax: &[f32],
+    n_blocks: usize,
+    n_full_blocks: usize,
+    hq: usize,
+    hkv: usize,
+    d: usize,
+    n_groups: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(q.len(), hq * d);
+    debug_assert!(n_groups >= 1 && hkv % n_groups == 0);
+    let g = hq / hkv;
+    let w = hkv * d;
+    debug_assert!(kmin.len() >= n_blocks * w && kmax.len() >= n_blocks * w);
+    let hq_g = hq / n_groups;
+    let mut scores = vec![f32::NEG_INFINITY; n_groups * n_blocks];
+    for b in 0..n_full_blocks {
+        let lo = &kmin[b * w..(b + 1) * w];
+        let hi = &kmax[b * w..(b + 1) * w];
+        for grp in 0..n_groups {
+            let mut s = 0.0f32;
+            for h in grp * hq_g..(grp + 1) * hq_g {
+                let kvh = h / g;
+                s += crate::util::simd::digest_score(
+                    &q[h * d..(h + 1) * d],
+                    &lo[kvh * d..(kvh + 1) * d],
+                    &hi[kvh * d..(kvh + 1) * d],
+                );
+            }
+            scores[grp * n_blocks + b] = s;
+        }
+    }
+    scores
+}
+
 /// Select up to `k` blocks by score, always including `pinned` (sink /
 /// recent blocks) first. Only blocks with finite scores (i.e. complete
 /// blocks) are eligible.
@@ -88,6 +133,43 @@ pub fn select_topk(scores: &[f32], k: usize, pinned: &[BlockId]) -> TopkSelectio
         blocks.push(b);
     }
     TopkSelection { blocks, scores: scores.to_vec() }
+}
+
+/// Fraction of the digest-softmax mass captured by `selected`, over the
+/// finite (complete-block) scores. This is the heavy-hitter signal for
+/// the per-head-group classifier: near 1.0 the group's attention is
+/// concentrated in its top-k (sparse-friendly, safe to offload); low
+/// values mean mass is spread across many blocks (attention-dense — the
+/// resident budget rebalancer pins such groups fully on the GPU).
+/// Returns 1.0 when there are no finite scores or nothing is selected
+/// against an empty distribution.
+pub fn topk_mass(scores: &[f32], selected: &[BlockId]) -> f32 {
+    let mut m = f32::NEG_INFINITY;
+    for &s in scores {
+        if s.is_finite() && s > m {
+            m = s;
+        }
+    }
+    if !m.is_finite() {
+        return 1.0;
+    }
+    let mut z = 0.0f32;
+    for &s in scores {
+        if s.is_finite() {
+            z += (s - m).exp();
+        }
+    }
+    let mut top = 0.0f32;
+    for &b in selected {
+        if b < scores.len() && scores[b].is_finite() {
+            top += (scores[b] - m).exp();
+        }
+    }
+    if z <= 0.0 {
+        1.0
+    } else {
+        (top / z).clamp(0.0, 1.0)
+    }
 }
 
 #[cfg(test)]
@@ -120,5 +202,41 @@ mod tests {
         let scores = [1.0, 2.0];
         let sel = select_topk(&scores, 10, &[]);
         assert_eq!(sel.blocks.len(), 2);
+    }
+
+    #[test]
+    fn topk_mass_tracks_concentration() {
+        // one dominant block: selecting it captures almost all mass
+        let peaked = [10.0, 0.0, 0.0, 0.0, f32::NEG_INFINITY];
+        assert!(topk_mass(&peaked, &[0]) > 0.99);
+        // uniform: top-1 of 4 finite blocks captures 1/4
+        let flat = [1.0, 1.0, 1.0, 1.0];
+        let m = topk_mass(&flat, &[2]);
+        assert!((m - 0.25).abs() < 1e-6);
+        // degenerate distributions fall back to 1.0 (treated as dense-
+        // safe: fully-resident pinning is never *wrong*, just costly)
+        assert_eq!(topk_mass(&[f32::NEG_INFINITY; 3], &[]), 1.0);
+        // selecting everything is all the mass
+        assert!((topk_mass(&flat, &[0, 1, 2, 3]) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grouped_scores_sum_to_flat_and_match_at_one_group() {
+        // 2 kv heads, 4 query heads (GQA factor 2), 2 channels, 3 blocks
+        // (last incomplete).
+        let (hq, hkv, d, nb, full) = (4usize, 2usize, 2usize, 3usize, 2usize);
+        let q: Vec<f32> = (0..hq * d).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        let kmin: Vec<f32> = (0..nb * hkv * d).map(|i| -(i as f32) * 0.1).collect();
+        let kmax: Vec<f32> = (0..nb * hkv * d).map(|i| (i as f32) * 0.2).collect();
+        let flat = score_blocks_slabs(&q, &kmin, &kmax, nb, full, hq, hkv, d);
+        let g1 = score_blocks_slabs_grouped(&q, &kmin, &kmax, nb, full, hq, hkv, d, 1);
+        assert_eq!(flat, g1, "one group must be bit-identical to the flat path");
+        let g2 = score_blocks_slabs_grouped(&q, &kmin, &kmax, nb, full, hq, hkv, d, 2);
+        assert_eq!(g2.len(), 2 * nb);
+        for b in 0..full {
+            let sum = g2[b] + g2[nb + b];
+            assert!((sum - flat[b]).abs() < 1e-4, "group scores must sum to flat");
+        }
+        assert!(g2[full].is_infinite() && g2[nb + full].is_infinite());
     }
 }

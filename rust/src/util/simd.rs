@@ -260,13 +260,64 @@ pub fn softmax_accum_with(
         return;
     }
     match level {
-        Level::Portable => {
-            softmax_accum_portable(q, k_slab, v_slab, mask, tokens, hq, hkv, dd, scale, acc, m, l)
-        }
+        Level::Portable => softmax_accum_portable(
+            q, k_slab, v_slab, mask, tokens, hq, hkv, 0, hkv * dd, dd, scale, acc, m, l,
+        ),
         Level::Avx2 => {
             debug_assert!(scores.len() >= tokens, "scores scratch too small");
             softmax_accum_tiled(
-                level, q, k_slab, v_slab, mask, tokens, hq, hkv, dd, scale, acc, m, l, scores,
+                level, q, k_slab, v_slab, mask, tokens, hq, hkv, 0, hkv * dd, dd, scale, acc, m,
+                l, scores,
+            )
+        }
+    }
+}
+
+/// Head-span variant of [`softmax_accum`]: accumulate only query heads
+/// `[qh0.., qh0+hq)`'s worth of state against kv heads
+/// `[kvh0, kvh0 + hkv)` of full-width KV rows (`row_heads` kv heads per
+/// token, so a row stride of `row_heads * dd`). `q`/`acc` are the
+/// span-local slices (`[hq * dd]`); `m`/`l` are `[hq]`. With
+/// `kvh0 = 0, hkv = row_heads` this is exactly [`softmax_accum`] —
+/// the kernels differ only in indexing, never in float sequencing.
+#[allow(clippy::too_many_arguments)]
+pub fn softmax_accum_span(
+    q: &[f32],
+    k_slab: &[f32],
+    v_slab: &[f32],
+    mask: Option<&[f32]>,
+    tokens: usize,
+    hq: usize,
+    kvh0: usize,
+    hkv: usize,
+    row_heads: usize,
+    dd: usize,
+    scale: f32,
+    acc: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+    scores: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), hq * dd);
+    debug_assert!(kvh0 + hkv <= row_heads);
+    let w = row_heads * dd;
+    debug_assert!(k_slab.len() >= tokens * w);
+    debug_assert!(v_slab.len() >= tokens * w);
+    debug_assert_eq!(acc.len(), hq * dd);
+    debug_assert_eq!(m.len(), hq);
+    debug_assert_eq!(l.len(), hq);
+    if tokens == 0 || hq == 0 {
+        return;
+    }
+    match level() {
+        Level::Portable => softmax_accum_portable(
+            q, k_slab, v_slab, mask, tokens, hq, hkv, kvh0, w, dd, scale, acc, m, l,
+        ),
+        lv @ Level::Avx2 => {
+            debug_assert!(scores.len() >= tokens, "scores scratch too small");
+            softmax_accum_tiled(
+                lv, q, k_slab, v_slab, mask, tokens, hq, hkv, kvh0, w, dd, scale, acc, m, l,
+                scores,
             )
         }
     }
@@ -309,6 +360,8 @@ pub fn softmax_accum(
 }
 
 /// The seed's per-token online-softmax update, verbatim sequencing.
+/// `kvh0`/`w` place the span inside full-width KV rows (`0`/`hkv*dd`
+/// for the legacy full-width call — same indices, bit-identical).
 #[allow(clippy::too_many_arguments)]
 fn softmax_accum_portable(
     q: &[f32],
@@ -318,6 +371,8 @@ fn softmax_accum_portable(
     tokens: usize,
     hq: usize,
     hkv: usize,
+    kvh0: usize,
+    w: usize,
     dd: usize,
     scale: f32,
     acc: &mut [f32],
@@ -325,7 +380,6 @@ fn softmax_accum_portable(
     l: &mut [f32],
 ) {
     let g = hq / hkv;
-    let w = hkv * dd;
     for t in 0..tokens {
         if let Some(ms) = mask {
             if ms[t] <= 0.0 {
@@ -335,7 +389,7 @@ fn softmax_accum_portable(
         let krow = &k_slab[t * w..(t + 1) * w];
         let vrow = &v_slab[t * w..(t + 1) * w];
         for h in 0..hq {
-            let kvh = h / g;
+            let kvh = kvh0 + h / g;
             let s = dot_portable(&q[h * dd..(h + 1) * dd], &krow[kvh * dd..(kvh + 1) * dd])
                 * scale;
             let m_new = m[h].max(s);
@@ -363,6 +417,8 @@ fn softmax_accum_tiled(
     tokens: usize,
     hq: usize,
     hkv: usize,
+    kvh0: usize,
+    w: usize,
     dd: usize,
     scale: f32,
     acc: &mut [f32],
@@ -371,9 +427,8 @@ fn softmax_accum_tiled(
     scores: &mut [f32],
 ) {
     let g = hq / hkv;
-    let w = hkv * dd;
     for h in 0..hq {
-        let kvh = h / g;
+        let kvh = kvh0 + h / g;
         let qh = &q[h * dd..(h + 1) * dd];
         let mut m_blk = NEG_INF;
         for t in 0..tokens {
@@ -812,6 +867,8 @@ mod tests {
                     tokens,
                     hq,
                     hkv,
+                    0,
+                    w,
                     dd,
                     0.25,
                     &mut acc,
@@ -840,6 +897,57 @@ mod tests {
                     for (a, b) in mv.iter().zip(&mp) {
                         assert!(close(*a, *b, 1e-5), "avx2 m: {a} vs {b}");
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn span_softmax_is_the_full_kernel_head_slice() {
+        // Accumulating one kv-head group's span against full-width rows
+        // must reproduce the full-width kernel's slice of that group,
+        // bit for bit — the span kernel differs only in indexing.
+        let (hq, hkv, dd) = (4usize, 2usize, 8usize);
+        let w = hkv * dd;
+        let n_groups = 2usize;
+        let (hq_g, hkv_g) = (hq / n_groups, hkv / n_groups);
+        let mut rng = Rng64::new(11);
+        for &tokens in &[1usize, 4, 9] {
+            let q = rand_vec(&mut rng, hq * dd);
+            let k = rand_vec(&mut rng, tokens * w);
+            let v = rand_vec(&mut rng, tokens * w);
+            let (af, mf, lf) = run_softmax(level(), &q, &k, &v, None, tokens, hq, hkv, dd);
+            for grp in 0..n_groups {
+                let (qh0, kvh0) = (grp * hq_g, grp * hkv_g);
+                let mut acc = vec![0.0f32; hq_g * dd];
+                let mut m = vec![NEG_INF; hq_g];
+                let mut l = vec![0.0f32; hq_g];
+                let mut scratch = vec![0.0f32; tokens];
+                softmax_accum_span(
+                    &q[qh0 * dd..(qh0 + hq_g) * dd],
+                    &k,
+                    &v,
+                    None,
+                    tokens,
+                    hq_g,
+                    kvh0,
+                    hkv_g,
+                    hkv,
+                    dd,
+                    0.25,
+                    &mut acc,
+                    &mut m,
+                    &mut l,
+                    &mut scratch,
+                );
+                for (a, b) in acc.iter().zip(&af[qh0 * dd..(qh0 + hq_g) * dd]) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "span acc grp={grp}");
+                }
+                for (a, b) in m.iter().zip(&mf[qh0..qh0 + hq_g]) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "span m grp={grp}");
+                }
+                for (a, b) in l.iter().zip(&lf[qh0..qh0 + hq_g]) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "span l grp={grp}");
                 }
             }
         }

@@ -196,6 +196,7 @@ fn concurrent_shared_prefix_imports_match_cold_runs_and_release_blocks() {
             pin_sink: true,
             pin_recent: 1,
             recall_countdowns: vec![usize::MAX; n_layers],
+            head_groups: 1,
         }
     }
 

@@ -1,0 +1,263 @@
+//! Head-wise offload granularity (`scout.head_groups`) — integration
+//! pins.
+//!
+//! Three byte-identity contracts and two behavior contracts:
+//!
+//! 1. **Variable-tile decode == padded decode.** The decode loop now
+//!    routes partial batches through row-wise tiles instead of padding
+//!    to the artifact batch size. `force_padded_decode` replays the
+//!    pre-change padded execution; both paths must emit identical
+//!    tokens (the kernels are row-wise, so per-row numerics cannot
+//!    depend on the tile height).
+//! 2. **`head_groups = 1` is the pre-change scheduler.** A non-divisor
+//!    group count must clamp to the effective single-group path and
+//!    reproduce its token stream byte-for-byte.
+//! 3. **Handoff export/import preserves per-group resident state.** A
+//!    mid-decode `into_handoff` -> `from_handoff` roundtrip must keep
+//!    every group's visible set, capacity, and classifier verdict, and
+//!    the continued decode must match an uninterrupted run exactly —
+//!    at one group and at `head_groups = n_kv_heads`.
+//!
+//! Behavior: grouped runs report per-group stats and keep per-group
+//! selection shapes (`selected[layer].len() == head_groups`).
+
+mod common;
+
+use scoutattention::coordinator::{
+    Batch, DecodeScheduler, RecallController, RequestSpec, ScoutScheduler, SeqState,
+};
+use scoutattention::harness::{self, ServingRun, Stack};
+
+fn prompt(len: usize, salt: u32) -> Vec<u32> {
+    (0..len as u32).map(|i| 1 + (i * 13 + salt * 5) % 255).collect()
+}
+
+/// Mixed-length requests: 2 admit immediately (max_batch = 2), the
+/// third queues; staggered finishes leave a 1-row partial tile phase at
+/// the end — the case variable-tile decode exists for.
+fn requests(bs: usize) -> Vec<RequestSpec> {
+    vec![
+        RequestSpec::new(0, prompt(3 * bs + 5, 1), 10),
+        RequestSpec::new(1, prompt(2 * bs + 1, 2), 16),
+        RequestSpec::new(2, prompt(4 * bs, 3), 4),
+    ]
+}
+
+fn scout(stack: &Stack, head_groups: usize, force_padded: bool) -> ScoutScheduler {
+    let mut cfg = stack.cfg.scout.clone();
+    cfg.head_groups = head_groups;
+    // Chunked prefill on admission so the identity runs cover it too.
+    cfg.prefill_chunk = stack.gpu.spec.block_size;
+    let recall = RecallController::new(&cfg, stack.gpu.spec.n_layers, None);
+    let mut s = ScoutScheduler::new(stack.gpu.clone(), stack.native.clone(), cfg, recall);
+    s.force_padded_decode = force_padded;
+    s
+}
+
+fn run_scout(stack: &Stack, head_groups: usize, force_padded: bool) -> ServingRun {
+    let mut sched = scout(stack, head_groups, force_padded);
+    let mut batch = stack.batch();
+    harness::run_serving(&mut sched, &mut batch, requests(stack.gpu.spec.block_size), 10_000)
+        .expect("serving run")
+}
+
+fn tokens(run: &ServingRun) -> Vec<(u64, Vec<u32>)> {
+    run.outputs.iter().map(|o| (o.id, o.generated.clone())).collect()
+}
+
+#[test]
+fn variable_tile_decode_matches_forced_padded_path() {
+    let stack = common::stack();
+    let flex = run_scout(&stack, 1, false);
+    let padded = run_scout(&stack, 1, true);
+    for run in [&flex, &padded] {
+        assert_eq!(run.outputs.len(), 3, "all requests finish");
+        for o in &run.outputs {
+            assert!(!o.generated.is_empty(), "request {} generated nothing", o.id);
+        }
+    }
+    assert_eq!(
+        tokens(&flex),
+        tokens(&padded),
+        "variable-tile decode must be byte-identical to the padded pre-change path"
+    );
+}
+
+#[test]
+fn non_divisor_head_groups_clamps_to_single_group_byte_identically() {
+    let stack = common::stack();
+    let hkv = stack.gpu.spec.n_kv_heads;
+    let bad = hkv + 1; // never divides n_kv_heads
+    assert!(hkv % bad != 0);
+    let base = run_scout(&stack, 1, false);
+    let clamped = run_scout(&stack, bad, false);
+    assert_eq!(
+        tokens(&base),
+        tokens(&clamped),
+        "a non-divisor head_groups must fall back to the single-group path"
+    );
+    assert!(
+        clamped.stats.iter().all(|s| s.head_groups == 1),
+        "clamped run must report effective head_groups = 1"
+    );
+    assert!(
+        clamped.stats.iter().all(|s| s.pinned_groups == 0 && s.offloaded_groups == 0),
+        "single-group path never runs the heavy-hitter classifier"
+    );
+}
+
+#[test]
+fn grouped_run_finishes_and_reports_group_stats() {
+    let stack = common::stack();
+    let g = stack.gpu.spec.n_kv_heads;
+    assert!(g > 1, "test-tiny must have multiple KV heads for this suite");
+    let run = run_scout(&stack, g, false);
+    assert_eq!(run.outputs.len(), 3, "grouped run must finish all requests");
+    for (req, o) in requests(stack.gpu.spec.block_size).iter().zip(&run.outputs) {
+        assert_eq!(o.generated.len(), req.max_new_tokens, "request {} truncated", o.id);
+    }
+    assert!(
+        run.stats.iter().all(|s| s.head_groups == g),
+        "every step must report the effective group count"
+    );
+    let observed: usize = run.stats.iter().map(|s| s.pinned_groups + s.offloaded_groups).sum();
+    assert!(observed > 0, "grouped selection must classify groups");
+}
+
+/// Snapshot of one sequence's grouped scheduler state (what a handoff
+/// must preserve bit-for-bit).
+#[allow(clippy::type_complexity)]
+fn resident_snapshot(seq: &SeqState) -> Vec<Vec<(Vec<usize>, usize, bool)>> {
+    seq.resident
+        .iter()
+        .map(|r| {
+            (0..r.n_groups())
+                .map(|grp| {
+                    (r.iter_group(grp).collect(), r.capacity_group(grp), r.pinned_dense(grp))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn drive(sched: &mut ScoutScheduler, batch: &mut Batch, steps: usize) {
+    for _ in 0..steps {
+        if batch.live() == 0 {
+            break;
+        }
+        sched.step(batch).expect("decode step");
+        batch.reap();
+    }
+}
+
+fn finished_tokens(batch: &mut Batch) -> Vec<(u64, Vec<u32>)> {
+    while let Some(s) = batch.seqs.pop() {
+        batch.finished.push(s.finish());
+    }
+    let mut out: Vec<(u64, Vec<u32>)> =
+        batch.finished.iter().map(|o| (o.id, o.generated.clone())).collect();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+fn handoff_roundtrip_preserves_state(head_groups: usize) {
+    let stack = common::stack();
+    let spec = stack.gpu.spec.clone();
+    let reqs = vec![
+        RequestSpec::new(0, prompt(3 * spec.block_size, 4), 12),
+        RequestSpec::new(1, prompt(2 * spec.block_size + 7, 5), 12),
+    ];
+
+    // Reference: uninterrupted decode to completion.
+    let mut sched_a = scout(&stack, head_groups, false);
+    let mut batch_a = stack.batch();
+    for r in &reqs {
+        sched_a.admit(&mut batch_a, r).expect("admit");
+    }
+    drive(&mut sched_a, &mut batch_a, 64);
+    let reference = finished_tokens(&mut batch_a);
+
+    // Roundtrip arm: decode 5 steps, migrate every sequence through the
+    // handoff bundle, continue to completion.
+    let mut sched_b = scout(&stack, head_groups, false);
+    let mut batch_b = stack.batch();
+    for r in &reqs {
+        sched_b.admit(&mut batch_b, r).expect("admit");
+    }
+    drive(&mut sched_b, &mut batch_b, 5);
+    assert_eq!(batch_b.live(), 2, "nothing finishes within 5 of 12 steps");
+
+    let g = sched_b.head_groups();
+    let migrated: Vec<SeqState> = batch_b
+        .seqs
+        .drain(..)
+        .map(|seq| {
+            let before = resident_snapshot(&seq);
+            let h = seq.into_handoff();
+            for (l, r) in h.resident.iter().enumerate() {
+                assert_eq!(r.n_groups(), g, "layer {l}: handoff must carry every group");
+                assert_eq!(h.selected[l].len(), g, "layer {l}: per-group selection shape");
+            }
+            let seq = SeqState::from_handoff(h).expect("import handoff");
+            assert_eq!(
+                resident_snapshot(&seq),
+                before,
+                "grouped resident state must survive export/import"
+            );
+            seq
+        })
+        .collect();
+    for seq in migrated {
+        batch_b.activate(seq).expect("re-activate");
+    }
+    drive(&mut sched_b, &mut batch_b, 64);
+
+    assert_eq!(
+        reference,
+        finished_tokens(&mut batch_b),
+        "decode after a handoff roundtrip must be byte-identical (head_groups = {head_groups})"
+    );
+}
+
+#[test]
+fn handoff_roundtrip_is_byte_identical_at_one_group() {
+    handoff_roundtrip_preserves_state(1);
+}
+
+#[test]
+fn handoff_roundtrip_is_byte_identical_per_head_group() {
+    let g = common::stack().gpu.spec.n_kv_heads;
+    handoff_roundtrip_preserves_state(g);
+}
+
+#[test]
+fn grouped_selection_keeps_per_group_shape() {
+    let stack = common::stack();
+    let spec = stack.gpu.spec.clone();
+    let g = spec.n_kv_heads;
+    let mut sched = scout(&stack, g, false);
+    let mut batch = stack.batch();
+    let req = RequestSpec::new(0, prompt(4 * spec.block_size, 9), 8);
+    sched.admit(&mut batch, &req).expect("admit");
+    drive(&mut sched, &mut batch, 4);
+    assert_eq!(batch.live(), 1);
+    let seq = &batch.seqs[0];
+    let nb = spec.n_blocks();
+    for (l, (sel, res)) in seq.selected.iter().zip(&seq.resident).enumerate() {
+        assert_eq!(sel.len(), g, "layer {l}: one selection list per group");
+        assert_eq!(res.n_groups(), g, "layer {l}: one residency per group");
+        assert!(
+            sel.iter().any(|s| !s.is_empty()),
+            "layer {l}: grouped selection must pick blocks"
+        );
+        for (grp, s) in sel.iter().enumerate() {
+            assert!(
+                s.iter().all(|&b| b < nb),
+                "layer {l} group {grp}: selected block out of range"
+            );
+        }
+        // Scores are stored group-major: g contiguous per-group rows.
+        assert_eq!(seq.scores(l).len() % g, 0, "layer {l}: scores not group-major");
+        assert!(!seq.scores(l).is_empty(), "layer {l}: grouped scoring ran");
+    }
+}

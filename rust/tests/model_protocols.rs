@@ -42,6 +42,12 @@
 //!    seeded bugs — a commit that skips the staleness check and frees
 //!    held blocks, and one that forgets to free the orphaned record —
 //!    are both caught.
+//! 7. **Per-head-group stage/commit isolation** (kvcache::resident,
+//!    `head_groups > 1`): driven against the real grouped `ResidentSet`
+//!    — a recall tick restaging one head group concurrently with
+//!    another group's stage/commit must never perturb the other group's
+//!    visible set, and each group's committed set is always one whole
+//!    plan of its *own* rankings, never a cross-group blend.
 //!
 //! [`sched`]: scoutattention::util::sched
 
@@ -964,4 +970,88 @@ fn tier_commit_leaking_the_orphaned_record_is_caught() {
     tier_invariants(&mut ex);
     let v = ex.explore(tier_initial()).expect_err("record leak must be caught");
     assert!(v.message.contains("leaked"), "{v}");
+}
+
+// ---------------------------------------------------------------------
+// Protocol 7: per-head-group stage/commit isolation (real type).
+// ---------------------------------------------------------------------
+
+#[derive(Clone)]
+struct GroupedRecallState {
+    rs: ResidentSet,
+    /// Fetch count reported by group 1's commit (None until it ran).
+    fetched_g1: Option<usize>,
+}
+
+/// Group 0's recall thread restages twice while group 1 stages and
+/// commits its own refresh. On every interleaving: group 0's visible
+/// set never moves (its commit is not in this schedule), and group 1's
+/// visible set is always one whole plan of group 1's own rankings —
+/// restaging one group never blends another group's committed set.
+#[test]
+fn restaging_one_group_never_blends_anothers_committed_set() {
+    let initial = {
+        let mut rs = ResidentSet::new_grouped(16, 2, 2);
+        rs.refresh_group(0, &[0, 1]);
+        rs.refresh_group(1, &[8, 9]);
+        GroupedRecallState { rs, fetched_g1: None }
+    };
+
+    let mut ex: Explorer<GroupedRecallState> = Explorer::new();
+    // Group 0's recall ticks: two re-rankings racing the other group.
+    ex.thread(vec![
+        run(|s: &mut GroupedRecallState| {
+            s.rs.stage_group(0, &[2, 3]);
+        }),
+        run(|s: &mut GroupedRecallState| {
+            s.rs.stage_group(0, &[0, 4]);
+        }),
+    ]);
+    // Group 1's recall tick + commit boundary.
+    ex.thread(vec![
+        run(|s: &mut GroupedRecallState| {
+            s.rs.stage_group(1, &[8, 10]);
+        }),
+        run(|s: &mut GroupedRecallState| {
+            s.fetched_g1 = Some(s.rs.commit_staged_group(1));
+        }),
+    ]);
+    ex.invariant(|s| {
+        let v0: Vec<usize> = s.rs.iter_group(0).collect();
+        let v1: Vec<usize> = s.rs.iter_group(1).collect();
+        // No commit for group 0 happens anywhere in this schedule, so
+        // its visible set must hold its initial plan throughout — even
+        // while group 1 commits.
+        if v0 != vec![0, 1] {
+            return Err(format!("group 0 visible set perturbed: {v0:?}"));
+        }
+        match v1.as_slice() {
+            [8, 9] | [8, 10] => Ok(()),
+            blend => Err(format!("group 1 shows a blended/foreign plan: {blend:?}")),
+        }
+    });
+    ex.final_check(|s| {
+        // Group 1's commit either saw its staged plan (stage ≤ commit)
+        // or was a no-op; fetch accounting must agree with the view.
+        let v1: Vec<usize> = s.rs.iter_group(1).collect();
+        match (s.fetched_g1.unwrap(), v1.as_slice()) {
+            (1, [8, 10]) | (0, [8, 9]) => {}
+            other => return Err(format!("torn group-1 commit: {other:?}")),
+        }
+        // Group 0 staged twice and never committed: its latest ranking
+        // must still be pending — group 1's commit must not consume it.
+        if !s.rs.has_staged_group(0) {
+            return Err("group 0's pending stage was consumed by group 1's commit".into());
+        }
+        if s.rs.staged_fetch_group(0) != [4] {
+            return Err(format!(
+                "group 0's pending fetch is not the latest ranking: {:?}",
+                s.rs.staged_fetch_group(0)
+            ));
+        }
+        Ok(())
+    });
+    let stats = ex.explore(initial).expect("all schedules hold");
+    // Two 2-step threads: C(4, 2) = 6 interleavings.
+    assert_eq!(stats.schedules, 6);
 }

@@ -81,6 +81,7 @@ fn chunked_prefill_is_bitwise_identical_to_fused() {
                     pin_sink: true,
                     pin_recent: 1,
                     recall_countdowns: vec![usize::MAX; spec.n_layers],
+                    head_groups: 1,
                 },
             )
             .unwrap();
@@ -146,6 +147,7 @@ fn prefix_cache_hit_is_bitwise_identical_to_cold_prefill() {
         pin_sink: true,
         pin_recent: 1,
         recall_countdowns: vec![usize::MAX; spec.n_layers],
+        head_groups: 1,
     };
 
     // Cold reference: no pool attached at all.
